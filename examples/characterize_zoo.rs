@@ -1,0 +1,76 @@
+//! Characterize the full 24-model zoo: the §3 study in one binary.
+//!
+//! Prints per-class aggregates (MACs, footprints, FLOP/B, intra-model
+//! variation), the five-family tally, and the k-means cross-check.
+//!
+//! Run with: `cargo run --release --example characterize_zoo`
+
+use mensa::characterize::kmeans;
+use mensa::characterize::{classify, model_summary, Family, FamilyTally, LayerMetrics};
+use mensa::model::zoo;
+use mensa::util::stats;
+use mensa::util::table::{bytes, eng, pct, Table};
+
+fn main() {
+    let mut t = Table::new([
+        "model", "layers", "MACs", "params", "MAC var", "fp var", "reuse var",
+    ]);
+    let mut tally = FamilyTally::default();
+    let mut pts = Vec::new();
+    let mut labels = Vec::new();
+    for model in zoo::all() {
+        let s = model_summary(&model);
+        t.row([
+            s.name.clone(),
+            s.param_layers.to_string(),
+            eng(s.total_macs as f64),
+            bytes(s.total_param_bytes as f64),
+            format!("{:.0}x", s.mac_variation),
+            format!("{:.0}x", s.footprint_variation),
+            format!("{:.0}x", s.reuse_variation),
+        ]);
+        for m in &s.metrics {
+            let fam = classify(m);
+            tally.add(fam);
+            if fam != Family::Outlier {
+                pts.push(kmeans::features(m));
+                labels.push(Family::ALL.iter().position(|&f| f == fam).unwrap());
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    println!("five-family taxonomy (§5.1):");
+    for f in Family::ALL {
+        println!(
+            "  {:8} {:4} layers ({})",
+            f.name(),
+            tally.count(f),
+            pct(tally.count(f) as f64 / tally.total() as f64)
+        );
+    }
+    println!(
+        "  outliers {:3} ({}) — in-family fraction {} (paper: 97%)",
+        tally.count(Family::Outlier),
+        pct(tally.count(Family::Outlier) as f64 / tally.total() as f64),
+        pct(tally.in_family_fraction()),
+    );
+
+    // Unsupervised cross-check: do the layers "naturally group"?
+    let best_purity = (0..5)
+        .map(|seed| {
+            let c = kmeans::kmeans(&pts, 5, seed);
+            kmeans::purity(&c.assignment, &labels, 5)
+        })
+        .fold(0.0f64, f64::max);
+    println!("k-means(5) purity vs rule families: {best_purity:.2} over {} layers", pts.len());
+
+    // Per-layer scatter stats for Fig. 6's axes.
+    let reuse: Vec<f64> = pts.iter().map(|p| p[1].exp()).collect();
+    println!(
+        "reuse (FLOP/B): min {:.1} / median {:.1} / max {:.0}",
+        stats::min(&reuse),
+        stats::percentile(&reuse, 50.0),
+        stats::max(&reuse)
+    );
+}

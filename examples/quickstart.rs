@@ -1,0 +1,56 @@
+//! Quickstart: characterize a model, schedule it on Mensa-G, simulate,
+//! and compare against the Edge TPU baseline — the library's core loop
+//! in ~50 lines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mensa::accel::configs;
+use mensa::characterize::{classify, LayerMetrics};
+use mensa::model::zoo;
+use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::sim::Simulator;
+use mensa::util::table::{eng, pct, Table};
+
+fn main() {
+    // 1. Pick a model from the 24-model edge zoo.
+    let model = zoo::by_name("CNN5").expect("zoo model");
+    println!("model {} — {} layers, {} MACs", model.name, model.len(), eng(model.total_macs() as f64));
+
+    // 2. Characterize: every layer falls into one of five families.
+    let mut t = Table::new(["layer", "family", "FLOP/B"]);
+    for layer in model.layers().iter().filter(|l| !l.is_auxiliary()).take(8) {
+        let m = LayerMetrics::of(layer);
+        t.row([layer.name.clone(), classify(&m).name().to_string(), format!("{:.0}", m.param_flop_per_byte)]);
+    }
+    println!("{}(first 8 parameterized layers)\n", t.render());
+
+    // 3. Schedule on Mensa-G (Pascal + Pavlov + Jacquard).
+    let mensa = configs::mensa_g();
+    let mapping = MensaScheduler::new(&mensa).schedule(&model);
+    let hist = mapping.histogram(mensa.len());
+    println!(
+        "schedule: Pascal={} Pavlov={} Jacquard={} (switches: {})",
+        hist[0], hist[1], hist[2], mapping.switch_count()
+    );
+
+    // 4. Simulate on both systems and compare.
+    let mensa_report = Simulator::new(&mensa).run(&model, &mapping);
+    let base = configs::baseline_system();
+    let base_report = Simulator::new(&base).run(&model, &Mapping::uniform(model.len(), 0));
+    let mut t = Table::new(["system", "latency", "energy", "TFLOP/J", "utilization"]);
+    for r in [&base_report, &mensa_report] {
+        t.row([
+            r.system_name.clone(),
+            format!("{:.3} ms", r.total_latency_s * 1e3),
+            format!("{:.3} mJ", r.total_energy_j() * 1e3),
+            format!("{:.3}", r.flops_per_joule() / 1e12),
+            pct(r.avg_utilization()),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "Mensa-G: {:.1}% less energy, {:.2}x throughput",
+        (1.0 - mensa_report.total_energy_j() / base_report.total_energy_j()) * 100.0,
+        mensa_report.throughput_flops() / base_report.throughput_flops(),
+    );
+}

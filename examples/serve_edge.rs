@@ -1,0 +1,111 @@
+//! End-to-end serving driver — the full three-layer stack on a real
+//! workload.
+//!
+//! Loads the AOT artifacts (L1 Pallas kernels inside L2 JAX models,
+//! lowered to HLO text), starts the L3 coordinator (router → dynamic
+//! batcher → PJRT executor), drives a mixed open-loop workload across
+//! all three model families, validates numerics (batch == solo), and
+//! reports serving latency/throughput plus the modeled Mensa-G edge
+//! cost per request. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run with: `make artifacts && cargo run --release --example serve_edge`
+
+use mensa::config::ServerConfig;
+use mensa::coordinator::Server;
+use mensa::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn cnn_input(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect()
+}
+
+fn lstm_input(rng: &mut Rng) -> Vec<f32> {
+    (0..8 * 128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+    let cfg = ServerConfig { max_batch: 8, batch_timeout_us: 2000, ..Default::default() };
+    println!("loading artifacts from {dir}/ ...");
+    let server = Server::start(&dir, cfg)?;
+    println!("server up (PJRT CPU; Python is NOT on this path)");
+
+    // --- correctness gate: batched numerics == solo numerics ---------
+    let mut rng = Rng::new(42);
+    let probe = cnn_input(&mut rng);
+    let solo = server.infer_blocking("edge_cnn", vec![probe.clone()], TIMEOUT)?.output;
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            let input = if i == 2 { probe.clone() } else { cnn_input(&mut rng) };
+            server.infer("edge_cnn", vec![input]).expect("submit")
+        })
+        .collect();
+    let batched: Vec<Vec<f32>> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(TIMEOUT).unwrap().unwrap().output).collect();
+    let max_err = batched[2]
+        .iter()
+        .zip(&solo)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "batched vs solo numerics diverge: {max_err}");
+    println!("numerics gate passed: batched == solo (max |err| = {max_err:.2e})");
+
+    // --- mixed open-loop workload -------------------------------------
+    let total = 120usize;
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..total {
+        let submit = match i % 3 {
+            0 => server.infer("edge_cnn", vec![cnn_input(&mut rng)]),
+            1 => server.infer("edge_lstm", vec![lstm_input(&mut rng)]),
+            _ => server.infer(
+                "joint",
+                vec![
+                    (0..128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+                    (0..128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+                ],
+            ),
+        };
+        match submit {
+            Ok(rx) => pending.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut ok = 0usize;
+    let mut sim_energy = 0.0f64;
+    let mut sim_latency = 0.0f64;
+    for rx in pending {
+        let resp = rx.recv_timeout(TIMEOUT)??;
+        assert!(resp.output.iter().all(|x| x.is_finite()), "non-finite output");
+        sim_energy += resp.sim.energy_j;
+        sim_latency += resp.sim.latency_s;
+        ok += 1;
+    }
+    let wall = start.elapsed();
+
+    // --- report --------------------------------------------------------
+    let snap = server.metrics();
+    println!("\n=== serving report ===");
+    println!("requests: {ok} ok / {rejected} rejected / {} failed", snap.failed);
+    println!(
+        "wall time: {:.1} ms -> {:.0} req/s (PJRT CPU)",
+        wall.as_secs_f64() * 1e3,
+        ok as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency: p50 {:.0} us, p99 {:.0} us, mean queue {:.0} us, mean batch {:.2}",
+        snap.p50_us, snap.p99_us, snap.mean_queue_us, snap.mean_batch
+    );
+    println!(
+        "modeled Mensa-G edge cost: {:.3} mJ and {:.3} ms per request (averaged)",
+        sim_energy / ok as f64 * 1e3,
+        sim_latency / ok as f64 * 1e3,
+    );
+    server.shutdown();
+    println!("clean shutdown. all layers composed: Pallas kernels -> JAX model ->");
+    println!("HLO artifact -> PJRT executable -> Rust batcher/router -> responses.");
+    Ok(())
+}

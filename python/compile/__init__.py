@@ -1,0 +1,6 @@
+"""Build-time Python package: JAX models (L2) + Pallas kernels (L1).
+
+Nothing in this package runs on the request path. ``make artifacts``
+invokes :mod:`compile.aot` once; the Rust coordinator then loads the
+resulting HLO-text artifacts through PJRT.
+"""

@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels implementing the Mensa-G dataflows.
+
+Each kernel re-thinks one of the paper's silicon dataflows (§5.3-§5.5)
+for TPU idioms (see DESIGN.md §Hardware-Adaptation):
+
+* :mod:`.pascal_matmul` — output-stationary tiled matmul: each grid cell
+  owns an output tile accumulated in VMEM across the K grid dimension
+  (the PE-register temporal reduction), with the weight tile broadcast
+  across the whole output tile (spatial multicast).
+* :mod:`.pavlov_lstm` — gate-batched LSTM cell: the four gates' weights
+  are fused into one ``[D+H, 4H]`` operand so the MXU sees a single
+  large matmul per step and each weight byte is touched once per step
+  rather than once per gate-MVM.
+* :mod:`.jacquard_mvm` — weight-stationary MVM with K-tiled partial sums
+  accumulated in the output ref (the NoC spatial-reduction analogue).
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom calls, so correctness is validated through the
+interpreter and TPU performance is *estimated* from block shapes
+(EXPERIMENTS.md §Perf).
+"""
+
+from .jacquard_mvm import jacquard_mvm
+from .pascal_matmul import pascal_matmul
+from .pavlov_lstm import lstm_cell, lstm_layer
+
+__all__ = ["pascal_matmul", "lstm_cell", "lstm_layer", "jacquard_mvm"]

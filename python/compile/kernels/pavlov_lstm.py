@@ -1,0 +1,105 @@
+"""Pavlov dataflow as Pallas kernels: gate-batched LSTM cell.
+
+Mapping of §5.4's silicon mechanisms onto TPU/Pallas:
+
+* *Gate batching* → the four gates' input and hidden weight matrices are
+  fused into one ``[D+H, 4H]`` operand, so the MXU executes **one**
+  large matmul per timestep instead of eight serialized gate MVMs (the
+  Edge TPU's "treats each gate as two FC layers" pathology, §3.2.1).
+* *Weight residency* → the fused weight block is one VMEM-resident
+  operand reused across the K loop; across the sequence scan, XLA hoists
+  the weights so each byte streams from HBM once per step batch — the
+  register-residency analogue of "fetch each element of W only once".
+* *Temporal reduction of outputs* → the gate pre-activations accumulate
+  in the output tile across K grid steps (same mechanism as Pascal's
+  accumulator, reused here for the 4H-wide fused output).
+* The elementwise cell update (sigmoid/tanh products) is a separate VPU
+  kernel — it has no MXU work and its fusion into the matmul would only
+  constrain the schedule.
+
+Gate ordering in the fused ``4H`` axis: ``i, g, f, o`` (input, input
+modulation, forget, output) — matching §2's gate list.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pascal_matmul import pascal_matmul
+
+
+def _update_kernel(gates_ref, c_ref, h_out_ref, c_out_ref, *, hidden: int):
+    """Elementwise LSTM cell update: (i, g, f, o) + c -> (h', c')."""
+    gates = gates_ref[...]
+    i = jax.nn.sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    g = jnp.tanh(gates[:, 1 * hidden : 2 * hidden])
+    f = jax.nn.sigmoid(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c_new = f * c_ref[...] + i * g
+    c_out_ref[...] = c_new
+    h_out_ref[...] = o * jnp.tanh(c_new)
+
+
+def _cell_update(gates, c):
+    """Run the VPU update kernel over a full ``[B, 4H]`` gate block."""
+    b, four_h = gates.shape
+    hidden = four_h // 4
+    h_new, c_new = pl.pallas_call(
+        functools.partial(_update_kernel, hidden=hidden),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, hidden), gates.dtype),
+            jax.ShapeDtypeStruct((b, hidden), gates.dtype),
+        ),
+        interpret=True,
+    )(gates, c)
+    return h_new, c_new
+
+
+def lstm_cell(x, h, c, w_fused, b_fused, *, block: int = 128):
+    """One LSTM step with the Pavlov gate-batched dataflow.
+
+    Args:
+        x: ``[B, D]`` step input.
+        h: ``[B, H]`` previous hidden state.
+        c: ``[B, H]`` previous cell state.
+        w_fused: ``[D + H, 4H]`` fused gate weights (i|g|f|o blocks).
+        b_fused: ``[4H]`` fused biases.
+        block: matmul tile size.
+
+    Returns:
+        ``(h_new, c_new)``, each ``[B, H]``.
+    """
+    xh = jnp.concatenate([x, h], axis=1)
+    # ONE fused MXU matmul for all four gates (the dataflow's headline).
+    gates = pascal_matmul(xh, w_fused, bm=block, bn=block, bk=block) + b_fused
+    return _cell_update(gates, c)
+
+
+def lstm_layer(xs, h0, c0, w_fused, b_fused, *, block: int = 128):
+    """Run a full LSTM layer over a sequence.
+
+    The scan carries ``(h, c)``; weights are loop-invariant, so the
+    lowered HLO fetches them once for the whole sequence — exactly the
+    "fetch each element of W only once per layer" property of §5.4.
+
+    Args:
+        xs: ``[T, B, D]`` input sequence.
+        h0: ``[B, H]`` initial hidden state.
+        c0: ``[B, H]`` initial cell state.
+        w_fused: ``[D + H, 4H]`` fused gate weights.
+        b_fused: ``[4H]`` fused biases.
+        block: matmul tile size.
+
+    Returns:
+        ``(hs, (h_T, c_T))`` where ``hs`` is ``[T, B, H]``.
+    """
+
+    def step(carry, x_t):
+        h, c = carry
+        h_new, c_new = lstm_cell(x_t, h, c, w_fused, b_fused, block=block)
+        return (h_new, c_new), h_new
+
+    (h_t, c_t), hs = jax.lax.scan(step, (h0, c0), xs)
+    return hs, (h_t, c_t)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: no Pallas, no tiling — just the
+textbook math. pytest (`python/tests/test_kernels.py`) sweeps shapes and
+dtypes with hypothesis and asserts the kernels match these within
+accumulation tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """``[M, K] @ [K, N]`` reference."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mvm_ref(x, w):
+    """``[K] @ [K, N]`` reference."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def lstm_cell_ref(x, h, c, w_fused, b_fused):
+    """One LSTM step, gates fused as (i|g|f|o) like the kernel."""
+    hidden = h.shape[1]
+    gates = jnp.concatenate([x, h], axis=1) @ w_fused + b_fused
+    i = jax.nn.sigmoid(gates[:, 0 * hidden : 1 * hidden])
+    g = jnp.tanh(gates[:, 1 * hidden : 2 * hidden])
+    f = jax.nn.sigmoid(gates[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden : 4 * hidden])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_layer_ref(xs, h0, c0, w_fused, b_fused):
+    """Full-sequence LSTM reference (python loop; oracle only)."""
+    h, c = h0, c0
+    hs = []
+    for t in range(xs.shape[0]):
+        h, c = lstm_cell_ref(xs[t], h, c, w_fused, b_fused)
+        hs.append(h)
+    return jnp.stack(hs), (h, c)
+
+
+def split_gate_weights(w_x_gates, w_h_gates):
+    """Fuse per-gate ``W_x``/``W_h`` lists into the kernel's layout.
+
+    Args:
+        w_x_gates: list of four ``[D, H]`` matrices (i, g, f, o).
+        w_h_gates: list of four ``[H, H]`` matrices (i, g, f, o).
+
+    Returns:
+        ``[D + H, 4H]`` fused operand.
+    """
+    w_x = jnp.concatenate(list(w_x_gates), axis=1)  # [D, 4H]
+    w_h = jnp.concatenate(list(w_h_gates), axis=1)  # [H, 4H]
+    return jnp.concatenate([w_x, w_h], axis=0)

@@ -1,0 +1,222 @@
+"""Layer-2 JAX model definitions built on the Layer-1 kernels.
+
+Three representative edge models mirroring the zoo's classes (the full
+24-model zoo lives in Rust for the simulator; these are the *executable*
+models whose AOT artifacts the Rust runtime serves):
+
+* :func:`edge_cnn` — MobileNet-style CNN: standard-conv stem, separable
+  (depthwise + pointwise) blocks, global pool, FC classifier. All
+  matmul-shaped compute routes through :func:`kernels.pascal_matmul`.
+* :func:`edge_lstm` — stacked LSTM with Pavlov gate batching: one fused
+  MXU matmul per step per layer (:func:`kernels.lstm_layer`).
+* :func:`transducer_joint` — RNN-T joint: two FC layers over the
+  concatenated encoder/prediction outputs, the Family-3 MVM shape
+  (:func:`kernels.jacquard_mvm` for batch-1, Pascal for batched).
+
+Parameters are generated deterministically (fixed PRNG seed) and baked
+into the lowered computation as constants: the serving path feeds
+inputs only, exactly like a deployed quantized edge model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jacquard_mvm, lstm_layer, pascal_matmul
+from .kernels.ref import split_gate_weights
+
+# ----------------------------------------------------------------------
+# Parameter initialization (deterministic)
+# ----------------------------------------------------------------------
+
+
+def _init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) == 1 else int(jnp.prod(jnp.array(shape[:-1])))
+    scale = scale if scale is not None else (1.0 / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ----------------------------------------------------------------------
+# CNN building blocks
+# ----------------------------------------------------------------------
+
+
+def conv2d(x, w, *, stride=1):
+    """Standard convolution via im2col + the Pascal matmul kernel.
+
+    Args:
+        x: ``[B, H, W, C]`` activations.
+        w: ``[kh, kw, C, O]`` filters.
+        stride: spatial stride.
+
+    Returns:
+        ``[B, H/stride, W/stride, O]``.
+    """
+    kh, kw, c, o = w.shape
+    b = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H', W', C*kh*kw] — feature dim is channel-major (C, kh, kw)
+    oh, ow = patches.shape[1], patches.shape[2]
+    mat = patches.reshape(b * oh * ow, c * kh * kw)
+    # Match the patch layout: (kh, kw, C, O) -> (C, kh, kw, O).
+    w_mat = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, o)
+    out = pascal_matmul(mat, w_mat)
+    return out.reshape(b, oh, ow, o)
+
+
+def depthwise2d(x, w):
+    """Depthwise 3x3 convolution (single channel per filter — the
+    no-input-reuse Family-5 shape; VPU work, not MXU)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,  # [kh, kw, 1, C] with feature_group_count=C
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+
+
+def pointwise(x, w):
+    """Pointwise (1x1) convolution as a Pascal matmul."""
+    b, h, wd, c = x.shape
+    o = w.shape[1]
+    out = pascal_matmul(x.reshape(b * h * wd, c), w)
+    return out.reshape(b, h, wd, o)
+
+
+# ----------------------------------------------------------------------
+# Models
+# ----------------------------------------------------------------------
+
+NUM_CLASSES = 16
+
+
+def make_cnn_params(key=None):
+    """Deterministic EdgeCNN parameters."""
+    key = key if key is not None else jax.random.PRNGKey(0xEDCE)
+    ks = jax.random.split(key, 8)
+    return {
+        "stem": _init(ks[0], (3, 3, 3, 32)),
+        "dw1": _init(ks[1], (3, 3, 1, 32)),
+        "pw1": _init(ks[2], (32, 64)),
+        "dw2": _init(ks[3], (3, 3, 1, 64)),
+        "pw2": _init(ks[4], (64, 128)),
+        "fc": _init(ks[5], (128, NUM_CLASSES)),
+        "fc_b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def edge_cnn(x, params):
+    """MobileNet-style classifier over ``[B, 32, 32, 3]`` inputs."""
+    h = jax.nn.relu(conv2d(x, params["stem"], stride=2))  # 16x16x32
+    h = jax.nn.relu(depthwise2d(h, params["dw1"]))
+    h = jax.nn.relu(pointwise(h, params["pw1"]))  # 16x16x64
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )  # 8x8x64
+    h = jax.nn.relu(depthwise2d(h, params["dw2"]))
+    h = jax.nn.relu(pointwise(h, params["pw2"]))  # 8x8x128
+    h = jnp.mean(h, axis=(1, 2))  # global average pool -> [B, 128]
+    return pascal_matmul(h, params["fc"]) + params["fc_b"]
+
+
+LSTM_D = 128
+LSTM_H = 128
+LSTM_LAYERS = 2
+LSTM_VOCAB = 256
+
+
+def make_lstm_params(key=None):
+    """Deterministic EdgeLSTM parameters (fused-gate layout)."""
+    key = key if key is not None else jax.random.PRNGKey(0x15F3)
+    params = {"layers": []}
+    for layer in range(LSTM_LAYERS):
+        d = LSTM_D if layer == 0 else LSTM_H
+        key, *gks = jax.random.split(key, 9)
+        w_x = [_init(gks[g], (d, LSTM_H)) for g in range(4)]
+        w_h = [_init(gks[4 + g], (LSTM_H, LSTM_H)) for g in range(4)]
+        params["layers"].append(
+            {
+                "w": split_gate_weights(w_x, w_h),
+                "b": jnp.zeros((4 * LSTM_H,), jnp.float32),
+            }
+        )
+    key, pk = jax.random.split(key)
+    params["proj"] = _init(pk, (LSTM_H, LSTM_VOCAB))
+    return params
+
+
+def edge_lstm(xs, params):
+    """Stacked LSTM over ``[T, B, D]``; returns ``[B, VOCAB]`` logits
+    from the final hidden state."""
+    b = xs.shape[1]
+    h = xs
+    for layer in params["layers"]:
+        h0 = jnp.zeros((b, LSTM_H), xs.dtype)
+        c0 = jnp.zeros((b, LSTM_H), xs.dtype)
+        h, (h_t, _) = lstm_layer(h, h0, c0, layer["w"], layer["b"])
+    return pascal_matmul(h_t, params["proj"])
+
+
+JOINT_ENC = 128
+JOINT_PRED = 128
+JOINT_HIDDEN = 128
+JOINT_VOCAB = 256
+
+
+def make_joint_params(key=None):
+    """Deterministic transducer-joint parameters."""
+    key = key if key is not None else jax.random.PRNGKey(0x701)
+    k0, k1 = jax.random.split(key)
+    return {
+        "fc0": _init(k0, (JOINT_ENC + JOINT_PRED, JOINT_HIDDEN)),
+        "fc1": _init(k1, (JOINT_HIDDEN, JOINT_VOCAB)),
+    }
+
+
+def transducer_joint(enc, pred, params):
+    """RNN-T joint over ``[B, He]``/``[B, Hp]``: the Family-3 MVM path.
+
+    Batch-1 requests use the Jacquard MVM kernel (the deployment shape);
+    batched requests use Pascal.
+    """
+    x = jnp.concatenate([enc, pred], axis=1)
+    if x.shape[0] == 1:
+        h = jacquard_mvm(x[0], params["fc0"])[None, :]
+        h = jax.nn.relu(h)
+        return jacquard_mvm(h[0], params["fc1"])[None, :]
+    h = jax.nn.relu(pascal_matmul(x, params["fc0"]))
+    return pascal_matmul(h, params["fc1"])
+
+
+# ----------------------------------------------------------------------
+# Jitted entry points with baked parameters (the AOT export surface)
+# ----------------------------------------------------------------------
+
+
+@functools.cache
+def cnn_fn():
+    """`fn(x[B,32,32,3]) -> (logits,)` with baked parameters."""
+    params = make_cnn_params()
+    return lambda x: (edge_cnn(x, params),)
+
+
+@functools.cache
+def lstm_fn():
+    """`fn(xs[T,B,D]) -> (logits,)` with baked parameters."""
+    params = make_lstm_params()
+    return lambda xs: (edge_lstm(xs, params),)
+
+
+@functools.cache
+def joint_fn():
+    """`fn(enc[B,He], pred[B,Hp]) -> (logits,)` with baked parameters."""
+    params = make_joint_params()
+    return lambda enc, pred: (transducer_joint(enc, pred, params),)

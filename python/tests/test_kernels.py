@@ -1,0 +1,165 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes/tilings for each Pallas kernel against
+the pure-jnp references in `compile.kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jacquard_mvm, lstm_cell, lstm_layer, pascal_matmul
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Keep hypothesis deadlines off: interpret-mode pallas is slow per call.
+SETTINGS = dict(max_examples=20, deadline=None)
+
+dims = st.sampled_from([8, 16, 24, 32, 64])
+tile = st.sampled_from([8, 16, 32, 128])
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-5)
+
+
+class TestPascalMatmul:
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims, bm=tile, bn=tile, bk=tile)
+    def test_matches_reference_f32(self, m, k, n, bm, bn, bk):
+        # Only exercise tilings that divide the shape (the kernel's
+        # contract); others are covered by the error tests.
+        bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+        if m % bm or n % bn or k % bk:
+            return
+        x = _rand(1, (m, k), jnp.float32)
+        w = _rand(2, (k, n), jnp.float32)
+        got = pascal_matmul(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), **_tol(jnp.float32))
+
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims)
+    def test_matches_reference_bf16(self, m, k, n):
+        x = _rand(3, (m, k), jnp.bfloat16)
+        w = _rand(4, (k, n), jnp.bfloat16)
+        got = pascal_matmul(x, w)
+        np.testing.assert_allclose(
+            got.astype(jnp.float32),
+            ref.matmul_ref(x, w).astype(jnp.float32),
+            **_tol(jnp.bfloat16),
+        )
+
+    def test_default_tiles_clamp_to_shape(self):
+        x = _rand(5, (16, 24), jnp.float32)
+        w = _rand(6, (24, 8), jnp.float32)
+        got = pascal_matmul(x, w)  # bm=128 etc. clamp to 16/8/24
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), **_tol(jnp.float32))
+
+    def test_rejects_mismatched_inner_dims(self):
+        x = jnp.zeros((8, 16))
+        w = jnp.zeros((8, 8))
+        with pytest.raises(ValueError, match="inner dims"):
+            pascal_matmul(x, w)
+
+    def test_rejects_nondividing_tiles(self):
+        x = jnp.zeros((12, 8))
+        w = jnp.zeros((8, 8))
+        with pytest.raises(ValueError, match="divide"):
+            pascal_matmul(x, w, bm=8)
+
+    def test_large_k_accumulation(self):
+        # Many K tiles: the temporal-reduction loop is really exercised.
+        x = _rand(7, (16, 512), jnp.float32)
+        w = _rand(8, (512, 16), jnp.float32)
+        got = pascal_matmul(x, w, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-3, atol=1e-3)
+
+
+class TestJacquardMvm:
+    @settings(**SETTINGS)
+    @given(k=dims, n=dims, bn=tile, bk=tile)
+    def test_matches_reference(self, k, n, bn, bk):
+        bn, bk = min(bn, n), min(bk, k)
+        if n % bn or k % bk:
+            return
+        x = _rand(9, (k,), jnp.float32)
+        w = _rand(10, (k, n), jnp.float32)
+        got = jacquard_mvm(x, w, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.mvm_ref(x, w), **_tol(jnp.float32))
+
+    def test_partial_sum_reduction_over_many_k_tiles(self):
+        x = _rand(11, (1024,), jnp.float32)
+        w = _rand(12, (1024, 32), jnp.float32)
+        got = jacquard_mvm(x, w, bk=64)
+        np.testing.assert_allclose(got, ref.mvm_ref(x, w), rtol=1e-3, atol=1e-3)
+
+    def test_rejects_mismatch(self):
+        with pytest.raises(ValueError, match="inner dims"):
+            jacquard_mvm(jnp.zeros((8,)), jnp.zeros((16, 8)))
+
+
+class TestPavlovLstm:
+    @settings(**SETTINGS)
+    @given(b=st.sampled_from([1, 2, 4]), d=st.sampled_from([8, 16, 32]),
+           h=st.sampled_from([8, 16, 32]))
+    def test_cell_matches_reference(self, b, d, h):
+        x = _rand(13, (b, d), jnp.float32)
+        hh = _rand(14, (b, h), jnp.float32)
+        c = _rand(15, (b, h), jnp.float32)
+        w = _rand(16, (d + h, 4 * h), jnp.float32) * 0.2
+        bias = _rand(17, (4 * h,), jnp.float32) * 0.1
+        h_new, c_new = lstm_cell(x, hh, c, w, bias)
+        h_ref, c_ref = ref.lstm_cell_ref(x, hh, c, w, bias)
+        np.testing.assert_allclose(h_new, h_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c_new, c_ref, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(t=st.sampled_from([1, 2, 5, 8]), b=st.sampled_from([1, 3]))
+    def test_layer_matches_reference_over_time(self, t, b):
+        d = h = 16
+        xs = _rand(18, (t, b, d), jnp.float32)
+        w = _rand(19, (d + h, 4 * h), jnp.float32) * 0.2
+        bias = jnp.zeros((4 * h,), jnp.float32)
+        h0 = jnp.zeros((b, h), jnp.float32)
+        c0 = jnp.zeros((b, h), jnp.float32)
+        hs, (h_t, c_t) = lstm_layer(xs, h0, c0, w, bias)
+        hs_ref, (h_ref, c_ref) = ref.lstm_layer_ref(xs, h0, c0, w, bias)
+        np.testing.assert_allclose(hs, hs_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h_t, h_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(c_t, c_ref, rtol=1e-4, atol=1e-5)
+
+    def test_state_propagates_between_steps(self):
+        # A zero-input sequence must still evolve state via biases.
+        t, b, d, h = 3, 1, 8, 8
+        xs = jnp.zeros((t, b, d), jnp.float32)
+        w = _rand(20, (d + h, 4 * h), jnp.float32) * 0.3
+        bias = jnp.ones((4 * h,), jnp.float32) * 0.5
+        hs, _ = lstm_layer(xs, jnp.zeros((b, h)), jnp.zeros((b, h)), w, bias)
+        # Hidden state changes step to step (saturating, not constant).
+        assert not np.allclose(hs[0], hs[1])
+        assert not np.allclose(hs[1], hs[2])
+
+    def test_forget_gate_saturation_preserves_cell(self):
+        # With a hugely positive forget bias and zero input/modulation,
+        # the cell state must be (approximately) carried through.
+        b, d, h = 1, 8, 8
+        w = jnp.zeros((d + h, 4 * h), jnp.float32)
+        bias = jnp.concatenate(
+            [
+                jnp.full((h,), -20.0),  # input gate closed
+                jnp.zeros((h,)),        # modulation irrelevant
+                jnp.full((h,), 20.0),   # forget gate open (keep)
+                jnp.full((h,), -20.0),  # output gate closed
+            ]
+        )
+        c0 = jnp.linspace(-1.0, 1.0, h).reshape(1, h)
+        _, c1 = lstm_cell(jnp.zeros((b, d)), jnp.zeros((b, h)), c0, w, bias)
+        np.testing.assert_allclose(c1, c0, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,17 @@
+//! `cargo bench --bench ablate_buffer` — regenerates the §3.1 8x-buffer-capacity study
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("ablate_buffer");
+    for id in ["tab-buffer8x"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench ablate_pe_size` — regenerates the §5.3-5.5 PE-array sizing sweeps
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("ablate_pe_size");
+    for id in ["tab-pe-sweep"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench ablate_scheduler` — regenerates the scheduler-quality + accelerator-count ablations
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("ablate_scheduler");
+    for id in ["tab-sched"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

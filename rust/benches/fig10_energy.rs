@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig10_energy` — regenerates Fig. 10 (inference energy, 4 systems + Mensa-G accel split)
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig10_energy");
+    for id in ["fig10-energy", "fig10-accel"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig11_util_throughput` — regenerates Fig. 11 (utilization + normalized throughput)
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig11_util_throughput");
+    for id in ["fig11-util", "fig11-tput"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

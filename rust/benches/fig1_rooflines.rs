@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig1_rooflines` — regenerates the Fig. 1 throughput + energy rooflines
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig1_rooflines");
+    for id in ["fig1-throughput", "fig1-energy"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig3_footprint_flopb` — regenerates Fig. 3 (gate footprints, footprint vs FLOP/B)
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig3_footprint_flopb");
+    for id in ["fig3"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

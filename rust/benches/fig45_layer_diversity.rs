@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig45_layer_diversity` — regenerates Figs. 4-5 (per-layer MAC/footprint diversity)
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig45_layer_diversity");
+    for id in ["fig4", "fig5"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig6_families` — regenerates Fig. 6 (five-family clustering)
+//! and times the underlying computation (criterion is unavailable
+//! offline; see bench_harness::timer).
+
+use mensa::bench_harness::{run_experiment, timer};
+
+fn main() {
+    timer::header("fig6_families");
+    for id in ["fig6"] {
+        let report = run_experiment(id).expect("experiment");
+        println!("{report}");
+        let m = timer::bench(id, 5, 2, || {
+            std::hint::black_box(run_experiment(id).unwrap());
+        });
+        println!("{}", m.render());
+    }
+}

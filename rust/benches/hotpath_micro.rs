@@ -1,0 +1,70 @@
+//! `cargo bench --bench hotpath_micro` — L3 hot-path microbenchmarks
+//! for the §Perf optimization pass (EXPERIMENTS.md).
+//!
+//! Measures the three operations on the coordinator's critical path:
+//! the per-layer dataflow cost model (invoked O(layers x accels) per
+//! schedule), the two-phase scheduler, and a full simulator run — plus
+//! the whole 24x4 evaluation grid as the end-to-end macro number.
+
+use mensa::accel::configs;
+use mensa::bench_harness::timer;
+use mensa::model::zoo;
+use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::sim::Simulator;
+use std::hint::black_box;
+
+fn main() {
+    timer::header("hotpath_micro");
+    let baseline = configs::edge_tpu_baseline();
+    let mensa = configs::mensa_g();
+    let cnn = zoo::cnn(0);
+    let lstm = zoo::lstm(0);
+
+    // 1. Dataflow cost model, per layer (the innermost hot function).
+    let layer = &cnn.layers()[5];
+    let m = timer::bench("dataflow_cost/conv_layer", 20, 10_000, || {
+        black_box(baseline.dataflow.cost(&baseline, black_box(layer)));
+    });
+    println!("{}", m.render());
+    let gate = lstm
+        .layers()
+        .iter()
+        .find(|l| l.name.contains("gate"))
+        .expect("lstm gate");
+    let m = timer::bench("dataflow_cost/lstm_gate", 20, 10_000, || {
+        black_box(mensa.accels[1].dataflow.cost(&mensa.accels[1], black_box(gate)));
+    });
+    println!("{}", m.render());
+
+    // 2. Scheduler: full two-phase schedule of one model.
+    let scheduler = MensaScheduler::new(&mensa);
+    let m = timer::bench("scheduler/cnn_schedule", 10, 200, || {
+        black_box(scheduler.schedule(black_box(&cnn)));
+    });
+    println!("{}", m.render());
+    let m = timer::bench("scheduler/lstm_schedule", 10, 200, || {
+        black_box(scheduler.schedule(black_box(&lstm)));
+    });
+    println!("{}", m.render());
+
+    // 3. Simulator: one inference end to end.
+    let sim = Simulator::new(&mensa);
+    let mapping = scheduler.schedule(&cnn);
+    let m = timer::bench("simulator/cnn_run", 10, 200, || {
+        black_box(sim.run(black_box(&cnn), black_box(&mapping)));
+    });
+    println!("{}", m.render());
+    let base_sys = configs::baseline_system();
+    let base_sim = Simulator::new(&base_sys);
+    let base_map = Mapping::uniform(lstm.len(), 0);
+    let m = timer::bench("simulator/lstm_run_baseline", 10, 200, || {
+        black_box(base_sim.run(black_box(&lstm), black_box(&base_map)));
+    });
+    println!("{}", m.render());
+
+    // 4. Macro: the full 24-model x 4-system evaluation grid.
+    let m = timer::bench("grid/24x4_evaluation", 3, 2, || {
+        black_box(mensa::bench_harness::evaluation::evaluation_grid());
+    });
+    println!("{}", m.render());
+}

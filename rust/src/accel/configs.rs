@@ -1,0 +1,238 @@
+//! Concrete accelerator configurations from the paper, and the systems
+//! (accelerator collections) the evaluation compares (§6–§7).
+
+use super::dataflow::DataflowKind;
+use super::{AccelConfig, MemoryAttachment};
+use crate::util::{KB, MB};
+
+/// The Google Edge TPU baseline (§3): 64x64 PEs at 2 TFLOP/s peak,
+/// 4 MB parameter buffer + 2 MB activation buffer, LPDDR4 at 32 GB/s.
+pub fn edge_tpu_baseline() -> AccelConfig {
+    AccelConfig {
+        name: "Baseline".into(),
+        pe_rows: 64,
+        pe_cols: 64,
+        // 4096 PEs x 2 FLOP x 0.2441 GHz ~= 2 TFLOP/s.
+        clock_ghz: 0.2441,
+        param_buf_bytes: 4 * MB,
+        act_buf_bytes: 2 * MB,
+        pe_reg_bytes: 64,
+        dram_bw_gbps: 32.0,
+        memory: MemoryAttachment::Lpddr4,
+        dataflow: DataflowKind::MonolithicWs,
+        buf_energy_cache: Default::default(),
+    }
+}
+
+/// Base+HB (§7): the baseline with 8x the memory bandwidth (256 GB/s).
+pub fn base_hb() -> AccelConfig {
+    AccelConfig {
+        name: "Base+HB".into(),
+        dram_bw_gbps: 256.0,
+        memory: MemoryAttachment::HbmExternal,
+        ..edge_tpu_baseline()
+    }
+}
+
+/// Eyeriss v2 (§7): 384 PEs, 192 kB of on-chip storage, flexible NoC,
+/// single row-stationary-plus dataflow, conventional DRAM.
+pub fn eyeriss_v2() -> AccelConfig {
+    AccelConfig {
+        name: "EyerissV2".into(),
+        // 384 PEs arranged as 16x24 clusters.
+        pe_rows: 16,
+        pe_cols: 24,
+        clock_ghz: 0.2,
+        param_buf_bytes: 128 * KB,
+        act_buf_bytes: 64 * KB,
+        pe_reg_bytes: 220, // Eyeriss v2 per-PE scratchpads
+        dram_bw_gbps: 32.0,
+        memory: MemoryAttachment::Lpddr4,
+        dataflow: DataflowKind::EyerissRs,
+        buf_energy_cache: Default::default(),
+    }
+}
+
+/// Pascal (§5.3): compute-centric accelerator for Families 1–2. 32x32
+/// PEs still reaching 2 TFLOP/s peak; buffers shrunk 16x (activations)
+/// and 32x (parameters); stays on the CPU die with LPDDR4.
+pub fn pascal() -> AccelConfig {
+    AccelConfig {
+        name: "Pascal".into(),
+        pe_rows: 32,
+        pe_cols: 32,
+        // 1024 PEs x 2 FLOP x 0.9766 GHz ~= 2 TFLOP/s.
+        clock_ghz: 0.9766,
+        param_buf_bytes: 128 * KB,
+        act_buf_bytes: 256 * KB,
+        pe_reg_bytes: 128, // output accumulators for temporal reduction
+        dram_bw_gbps: 32.0,
+        memory: MemoryAttachment::Lpddr4,
+        dataflow: DataflowKind::PascalOs,
+        buf_energy_cache: Default::default(),
+    }
+}
+
+/// Pavlov (§5.4): LSTM-centric accelerator for Family 3, placed in the
+/// logic layer of 3D-stacked memory. 8x8 PEs (128 GFLOP/s), no
+/// parameter buffer (512 B of registers per PE, parameters streamed
+/// from DRAM), 128 kB activation buffer.
+pub fn pavlov() -> AccelConfig {
+    AccelConfig {
+        name: "Pavlov".into(),
+        pe_rows: 8,
+        pe_cols: 8,
+        clock_ghz: 1.0,
+        param_buf_bytes: 0,
+        act_buf_bytes: 128 * KB,
+        pe_reg_bytes: 512,
+        dram_bw_gbps: 256.0,
+        memory: MemoryAttachment::HbmInternal,
+        dataflow: DataflowKind::PavlovWs,
+        buf_energy_cache: Default::default(),
+    }
+}
+
+/// Jacquard (§5.5): data-centric accelerator for Families 4–5, also in
+/// the 3D-stacked logic layer. 16x16 PEs (512 GFLOP/s), 128 kB + 128 kB
+/// buffers (32x parameter-buffer reduction vs the Edge TPU).
+pub fn jacquard() -> AccelConfig {
+    AccelConfig {
+        name: "Jacquard".into(),
+        pe_rows: 16,
+        pe_cols: 16,
+        clock_ghz: 1.0,
+        param_buf_bytes: 128 * KB,
+        act_buf_bytes: 128 * KB,
+        pe_reg_bytes: 256,
+        dram_bw_gbps: 256.0,
+        memory: MemoryAttachment::HbmInternal,
+        dataflow: DataflowKind::JacquardWs,
+        buf_energy_cache: Default::default(),
+    }
+}
+
+/// A system = the set of accelerators the scheduler can target, plus a
+/// name for reporting.
+#[derive(Debug, Clone)]
+pub struct MensaSystem {
+    /// System name for figure labels.
+    pub name: String,
+    /// Member accelerators. Index = accelerator id in mappings.
+    pub accels: Vec<AccelConfig>,
+}
+
+impl MensaSystem {
+    /// Single-accelerator system.
+    pub fn single(accel: AccelConfig) -> Self {
+        Self { name: accel.name.clone(), accels: vec![accel] }
+    }
+
+    /// Accelerator count.
+    pub fn len(&self) -> usize {
+        self.accels.len()
+    }
+
+    /// `true` if no accelerators (never valid for scheduling).
+    pub fn is_empty(&self) -> bool {
+        self.accels.is_empty()
+    }
+
+    /// Combined leakage of all accelerators (idle + active — Mensa does
+    /// not power-gate between layers in our model, conservatively).
+    pub fn total_leakage_w(&self) -> f64 {
+        self.accels.iter().map(|a| a.leakage_w()).sum()
+    }
+
+    /// Find an accelerator id by name.
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.accels.iter().position(|a| a.name == name)
+    }
+}
+
+/// The four evaluated configurations of §7.
+pub fn baseline_system() -> MensaSystem {
+    MensaSystem::single(edge_tpu_baseline())
+}
+
+/// Base+HB system (§7).
+pub fn base_hb_system() -> MensaSystem {
+    MensaSystem::single(base_hb())
+}
+
+/// Eyeriss v2 system (§7).
+pub fn eyeriss_system() -> MensaSystem {
+    MensaSystem::single(eyeriss_v2())
+}
+
+/// Mensa-G (§5): Pascal + Pavlov + Jacquard.
+pub fn mensa_g() -> MensaSystem {
+    MensaSystem { name: "Mensa-G".into(), accels: vec![pascal(), pavlov(), jacquard()] }
+}
+
+/// All four systems in the paper's comparison order.
+pub fn evaluation_systems() -> Vec<MensaSystem> {
+    vec![baseline_system(), base_hb_system(), eyeriss_system(), mensa_g()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_reductions_match_paper() {
+        let base = edge_tpu_baseline();
+        // §5.3: Pascal activation buffer 2MB -> 256kB (8x), parameter
+        // buffer 4MB -> 128kB (32x).
+        assert_eq!(base.act_buf_bytes / pascal().act_buf_bytes, 8);
+        assert_eq!(base.param_buf_bytes / pascal().param_buf_bytes, 32);
+        // §5.5: Jacquard parameter buffer 32x smaller, activation 16x.
+        assert_eq!(base.param_buf_bytes / jacquard().param_buf_bytes, 32);
+        assert_eq!(base.act_buf_bytes / jacquard().act_buf_bytes, 16);
+        // §5.4: Pavlov has no parameter buffer at all.
+        assert_eq!(pavlov().param_buf_bytes, 0);
+    }
+
+    #[test]
+    fn near_data_accelerators_get_internal_bandwidth() {
+        // §6: logic-layer accelerators see 256 GB/s, 8x the external BW.
+        for a in [pavlov(), jacquard()] {
+            assert_eq!(a.memory, MemoryAttachment::HbmInternal);
+            assert_eq!(a.dram_bw_gbps, 256.0);
+        }
+        assert_eq!(pascal().dram_bw_gbps, 32.0);
+    }
+
+    #[test]
+    fn eyeriss_matches_paper_comparison() {
+        // §7.1: "much smaller PE array (384 vs 4096) and on-chip
+        // buffers (192 kB vs 4 MB)".
+        let e = eyeriss_v2();
+        assert_eq!(e.num_pes(), 384);
+        assert_eq!(e.param_buf_bytes + e.act_buf_bytes, 192 * KB);
+    }
+
+    #[test]
+    fn mensa_g_has_three_accelerators() {
+        let m = mensa_g();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.find("Pascal"), Some(0));
+        assert_eq!(m.find("Pavlov"), Some(1));
+        assert_eq!(m.find("Jacquard"), Some(2));
+        assert_eq!(m.find("Nope"), None);
+    }
+
+    #[test]
+    fn evaluation_systems_order() {
+        let names: Vec<String> = evaluation_systems().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, ["Baseline", "Base+HB", "EyerissV2", "Mensa-G"]);
+    }
+
+    #[test]
+    fn mensa_leakage_below_baseline() {
+        // Smaller arrays + buffers: §7.1's static-energy reduction
+        // mechanism requires Mensa-G to leak less than the baseline even
+        // with three accelerators powered.
+        assert!(mensa_g().total_leakage_w() < baseline_system().total_leakage_w());
+    }
+}

@@ -1,0 +1,186 @@
+//! Jacquard's weight-stationary + spatial-reduction dataflow (§5.5).
+//!
+//! Parameters are fetched once into PE registers and *temporally
+//! multicast* over multiple cycles (hiding DRAM latency behind compute);
+//! input activations are *spatially multicast*; each output activation
+//! is produced collectively, with per-PE partial sums gathered over the
+//! on-chip interconnect (spatial reduction). With the 256 GB/s internal
+//! bandwidth of its 3D-stacked placement, even multi-MB Family-4
+//! footprints stream without stalling the (small) 16x16 array, and the
+//! parameter buffer shrinks 32x.
+
+use super::{elementwise_cost, finalize, view, CostInputs, LayerCost, View};
+use crate::accel::AccelConfig;
+use crate::model::Layer;
+use crate::util::ceil_div;
+
+/// Cost a layer on Jacquard.
+pub fn cost(cfg: &AccelConfig, layer: &Layer) -> LayerCost {
+    let v = match view(layer) {
+        View::Elementwise { ops, invocations } => {
+            return elementwise_cost(cfg, layer, ops, invocations)
+        }
+        View::Matmul(v) => v,
+    };
+    let params = layer.param_bytes() as f64;
+    let macs = layer.macs();
+    let rows = cfg.pe_rows as u64;
+    let cols = cfg.pe_cols as u64;
+
+    // Weight-stationary tiles over (K x N); M activations stream per
+    // tile. Depthwise (block-diagonal K) occupies only k of the rows,
+    // but the small 16-row array loses much less than the baseline's 64.
+    let tiles = ceil_div(v.k, rows) * ceil_div(v.n, cols);
+    let per_pass = v.m as f64 + rows as f64;
+    let structural = tiles as f64 * per_pass + cols as f64;
+    // Register-file refill floor: one byte per column per cycle.
+    let feed_floor = params / cols as f64;
+    let compute_cycles = structural.max(feed_floor) * v.invocations as f64;
+
+    // ---- DRAM ----------------------------------------------------------
+    // Temporal multicast from registers: every parameter byte is
+    // fetched exactly once per *invocation*. Unlike Pavlov, Jacquard is
+    // agnostic to LSTM cell structure — it cannot batch timesteps, so
+    // recurrent gates re-stream their matrices every step (which is why
+    // Family 3 gets its own accelerator, §5.2.1).
+    let dram_param = params * v.invocations as f64;
+    let in_b = layer.input_act_bytes() as f64;
+    let out_b = layer.output_act_bytes() as f64;
+    // Only the excess beyond the buffer spills to DRAM.
+    let dram_act = (in_b + out_b - cfg.act_buf_bytes as f64).max(0.0);
+
+    // ---- On-chip traffic ------------------------------------------------
+    // Parameters staged once through the (small) buffer to the regs.
+    let param_buf_traffic = params;
+    // Input activations spatially multicast across columns.
+    let act_buf_traffic = macs as f64 / cols as f64 + out_b;
+    // Temporal multicast: operands re-read from regs each cycle.
+    let reg_traffic = params + 2.0 * macs as f64;
+    // Spatial reduction: partial sums gathered across the rows for
+    // every output element, plus the multicast distribution.
+    let noc_bytes = out_b * rows as f64 * v.invocations as f64 + macs as f64 / rows as f64;
+
+    finalize(
+        cfg,
+        CostInputs {
+            macs,
+            invocations: v.invocations,
+            compute_cycles,
+            dram_param_bytes: dram_param,
+            dram_act_bytes: dram_act,
+            dram_efficiency: cfg.memory.max_efficiency(),
+            param_buf_traffic,
+            act_buf_traffic,
+            reg_traffic,
+            noc_bytes,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::monolithic;
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::layer::{Gate, Layer, LayerKind};
+
+    fn jacquard() -> AccelConfig {
+        configs::jacquard()
+    }
+
+    #[test]
+    fn family4_conv_high_utilization() {
+        // §7.2: properly-sized array + streaming weights keep the 16x16
+        // array busy on Family-4 layers.
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: 448, out_c: 512, k: 3, stride: 1 },
+        );
+        let c = cost(&jacquard(), &l);
+        assert!(c.utilization > 0.5, "util={}", c.utilization);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(c.utilization > base.utilization);
+    }
+
+    #[test]
+    fn family4_dram_energy_order_of_magnitude_below_baseline() {
+        // Streaming from the logic layer: same bytes, ~10x cheaper.
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: 448, out_c: 512, k: 3, stride: 1 },
+        );
+        let jq = cost(&jacquard(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(base.energy.dram_dynamic_j / jq.energy.dram_dynamic_j > 5.0);
+    }
+
+    #[test]
+    fn depthwise_utilization_improves_over_baseline() {
+        // §7.2: "Mensa-G still improves PE utilization for depthwise
+        // layers by 65.2% over Baseline" — better, though not great.
+        let l = Layer::new(
+            "d",
+            LayerKind::Depthwise { in_h: 14, in_w: 14, channels: 512, k: 3, stride: 1 },
+        );
+        let jq = cost(&jacquard(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(jq.utilization > 1.3 * base.utilization, "{} vs {}", jq.utilization, base.utilization);
+    }
+
+    #[test]
+    fn parameters_fetched_once_for_feedforward_layers() {
+        for l in [
+            Layer::new("c", LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: 448, out_c: 576, k: 3, stride: 1 }),
+            Layer::new("f", LayerKind::FullyConnected { in_dim: 1024, out_dim: 4096 }),
+        ] {
+            let c = cost(&jacquard(), &l);
+            assert!(
+                (c.dram_param_bytes - l.param_bytes() as f64).abs() < 1.0,
+                "{}: {} vs {}",
+                l.name,
+                c.dram_param_bytes,
+                l.param_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn recurrent_gates_refetch_per_step_unlike_pavlov() {
+        // Jacquard lacks Pavlov's gate batching: Family 3 stays on
+        // Pavlov because Jacquard re-streams every timestep (§5.2.1).
+        let t = 32u32;
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: 1024, hidden_dim: 1024, timesteps: t, gate: Gate::Forget },
+        );
+        let c = cost(&jacquard(), &l);
+        assert!((c.dram_param_bytes - l.param_bytes() as f64 * t as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn spatial_reduction_shows_up_in_noc() {
+        // Partial-sum gathers: NoC bytes exceed output bytes by ~rows.
+        let l = Layer::new("p", LayerKind::Pointwise { in_h: 7, in_w: 7, in_c: 512, out_c: 1024 });
+        let c = cost(&jacquard(), &l);
+        assert!(c.noc_bytes > l.output_act_bytes() as f64 * 8.0);
+    }
+
+    #[test]
+    fn buffer_energy_small_despite_big_layers() {
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: 448, out_c: 512, k: 3, stride: 1 },
+        );
+        let jq = cost(&jacquard(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(jq.energy.buffer_dynamic_j < base.energy.buffer_dynamic_j / 10.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        for l in crate::model::zoo::cnn(9).layers() {
+            let c = cost(&jacquard(), l);
+            assert!(c.utilization <= 1.0 + 1e-9, "{}: {}", l.name, c.utilization);
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Dataflow cost models.
+//!
+//! A dataflow determines, for a given layer on a given accelerator, how
+//! many cycles the PE array needs, how much traffic hits DRAM, the
+//! on-chip buffers, the NoC, and the PE registers — and therefore the
+//! layer's latency, utilization, and dynamic energy. §5.2: "a key
+//! distinguishing factor between different accelerator designs is the
+//! accelerator dataflow, as it dictates which reuse opportunities in
+//! layers are exploited".
+//!
+//! Modeling conventions (documented in DESIGN.md §Calibration):
+//!
+//! * All dataflows are *phase-level analytical* models: a layer executes
+//!   as a set of tile passes over the PE array with a per-pass pipeline
+//!   fill, overlapped (double-buffered) with DRAM streaming; the layer's
+//!   latency is `max(compute, memory)` plus a per-invocation dispatch
+//!   cost.
+//! * The monolithic designs (Edge TPU, Eyeriss v2) charge one buffer
+//!   access per MAC operand — their fixed dataflows do not amortize
+//!   operand delivery (§3.2.4: "the missed reuse opportunities in many
+//!   of the model layers causes PEs to needlessly wait on retrieving
+//!   previously-accessed data"). The specialized Mensa dataflows
+//!   amortize per their multicast/reduction structure (§5.3–§5.5).
+//! * DRAM bandwidth efficiency depends on the access pattern: streaming
+//!   large contiguous weight blocks reaches the attachment's maximum;
+//!   single-row MVM fetches and gate-interleaved recurrent streams fall
+//!   to ~10–30% (short bursts, row-buffer misses, read/write turnaround
+//!   — why LSTMs can't even saturate LPDDR4 on the baseline).
+
+mod eyeriss;
+mod jacquard;
+mod monolithic;
+mod pascal;
+mod pavlov;
+
+use super::AccelConfig;
+use crate::energy::{EnergyBreakdown, MAC_ENERGY_J, NOC_ENERGY_PER_BYTE, PE_REG_ENERGY_PER_BYTE};
+use crate::model::{Layer, LayerKind};
+use crate::util::ceil_div;
+
+/// Fixed per-invocation dispatch overhead in cycles (descriptor fetch,
+/// DMA programming, pipeline drain). Recurrent gates pay it per step.
+pub const DISPATCH_CYCLES: f64 = 200.0;
+
+/// Which dataflow an accelerator implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataflowKind {
+    /// Monolithic weight-stationary systolic array (Edge TPU baseline).
+    MonolithicWs,
+    /// Eyeriss v2 row-stationary-plus with flexible NoC.
+    EyerissRs,
+    /// Pascal: output-stationary, temporal reduction in PE registers,
+    /// parameter spatial multicast (§5.3).
+    PascalOs,
+    /// Pavlov: gate-batched weight-stationary LSTM dataflow (§5.4).
+    PavlovWs,
+    /// Jacquard: weight-stationary MVM with spatial reduction (§5.5).
+    JacquardWs,
+}
+
+impl DataflowKind {
+    /// Cost a layer on an accelerator running this dataflow.
+    pub fn cost(&self, cfg: &AccelConfig, layer: &Layer) -> LayerCost {
+        match self {
+            DataflowKind::MonolithicWs => monolithic::cost(cfg, layer),
+            DataflowKind::EyerissRs => eyeriss::cost(cfg, layer),
+            DataflowKind::PascalOs => pascal::cost(cfg, layer),
+            DataflowKind::PavlovWs => pavlov::cost(cfg, layer),
+            DataflowKind::JacquardWs => jacquard::cost(cfg, layer),
+        }
+    }
+}
+
+/// The result of costing one layer on one accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCost {
+    /// Total MACs executed.
+    pub macs: u64,
+    /// PE-array busy cycles (all invocations, incl. pipeline fills).
+    pub compute_cycles: f64,
+    /// DRAM streaming cycles at the effective bandwidth.
+    pub mem_cycles: f64,
+    /// End-to-end cycles: max(compute, mem) + dispatch.
+    pub latency_cycles: f64,
+    /// Latency in seconds at the accelerator's clock.
+    pub latency_s: f64,
+    /// Achieved-MAC/peak-MAC utilization over the layer's runtime.
+    pub utilization: f64,
+    /// Parameter bytes fetched from DRAM.
+    pub dram_param_bytes: f64,
+    /// Activation bytes read+written to DRAM.
+    pub dram_act_bytes: f64,
+    /// Bytes through the parameter buffer.
+    pub param_buf_traffic: f64,
+    /// Bytes through the activation buffer.
+    pub act_buf_traffic: f64,
+    /// Bytes through PE register files.
+    pub reg_traffic: f64,
+    /// Bytes over the on-chip network.
+    pub noc_bytes: f64,
+    /// Dynamic energy breakdown (statics are added by the simulator,
+    /// which knows the whole-system latency).
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerCost {
+    /// Total DRAM bytes moved.
+    pub fn dram_total_bytes(&self) -> f64 {
+        self.dram_param_bytes + self.dram_act_bytes
+    }
+
+    /// Achieved FLOP/s over this layer's runtime.
+    pub fn achieved_flops(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            return 0.0;
+        }
+        2.0 * self.macs as f64 / self.latency_s
+    }
+}
+
+/// A layer viewed as a (possibly batched/blocked) matrix multiplication
+/// per invocation — the shape every systolic dataflow maps.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulView {
+    /// Rows of the activation matrix per invocation (output pixels; 1
+    /// for MVMs).
+    pub m: u64,
+    /// Output features (array columns dimension).
+    pub n: u64,
+    /// Reduction depth (array rows dimension).
+    pub k: u64,
+    /// Sequential invocations (timesteps for recurrent nodes).
+    pub invocations: u64,
+    /// `true` for depthwise layers: the K dimension is block-diagonal,
+    /// so only `k` array rows hold useful work per tile.
+    pub block_diagonal: bool,
+}
+
+/// How a layer maps onto a systolic array, or `Elementwise` for
+/// parameter-free vector ops.
+#[derive(Debug, Clone, Copy)]
+pub enum View {
+    /// Matmul-shaped compute.
+    Matmul(MatmulView),
+    /// Elementwise vector compute (`ops` total scalar operations).
+    Elementwise {
+        /// Total scalar ops.
+        ops: u64,
+        /// Sequential invocations.
+        invocations: u64,
+    },
+}
+
+/// Build the per-invocation matmul view of a layer.
+pub fn view(layer: &Layer) -> View {
+    match layer.kind {
+        LayerKind::Conv2d { in_h, in_w, in_c, out_c, k, stride } => {
+            let oh = ceil_div(in_h as u64, stride as u64);
+            let ow = ceil_div(in_w as u64, stride as u64);
+            View::Matmul(MatmulView {
+                m: oh * ow,
+                n: out_c as u64,
+                k: in_c as u64 * (k as u64 * k as u64),
+                invocations: 1,
+                block_diagonal: false,
+            })
+        }
+        LayerKind::Depthwise { in_h, in_w, channels, k, stride } => {
+            let oh = ceil_div(in_h as u64, stride as u64);
+            let ow = ceil_div(in_w as u64, stride as u64);
+            View::Matmul(MatmulView {
+                m: oh * ow,
+                n: channels as u64,
+                k: k as u64 * k as u64,
+                invocations: 1,
+                block_diagonal: true,
+            })
+        }
+        LayerKind::Pointwise { in_h, in_w, in_c, out_c } => View::Matmul(MatmulView {
+            m: in_h as u64 * in_w as u64,
+            n: out_c as u64,
+            k: in_c as u64,
+            invocations: 1,
+            block_diagonal: false,
+        }),
+        LayerKind::FullyConnected { in_dim, out_dim } => View::Matmul(MatmulView {
+            m: 1,
+            n: out_dim as u64,
+            k: in_dim as u64,
+            invocations: 1,
+            block_diagonal: false,
+        }),
+        LayerKind::LstmGate { input_dim, hidden_dim, timesteps, .. } => {
+            View::Matmul(MatmulView {
+                m: 1,
+                n: hidden_dim as u64,
+                k: input_dim as u64 + hidden_dim as u64,
+                invocations: timesteps as u64,
+                block_diagonal: false,
+            })
+        }
+        LayerKind::LstmUpdate { hidden_dim, timesteps } => View::Elementwise {
+            ops: 3 * hidden_dim as u64 * timesteps as u64,
+            invocations: timesteps as u64,
+        },
+        LayerKind::Pool { in_h, in_w, channels, k } => {
+            let oh = ceil_div(in_h as u64, k as u64);
+            let ow = ceil_div(in_w as u64, k as u64);
+            View::Elementwise {
+                ops: oh * ow * channels as u64 * (k as u64 * k as u64),
+                invocations: 1,
+            }
+        }
+        LayerKind::ResidualAdd { elems } => {
+            View::Elementwise { ops: elems as u64, invocations: 1 }
+        }
+    }
+}
+
+/// Raw traffic/cycle inputs a dataflow model produces; [`finalize`]
+/// turns them into a [`LayerCost`] with energy attached.
+#[derive(Debug, Clone, Copy)]
+pub struct CostInputs {
+    /// Total MACs (or scalar ops) executed.
+    pub macs: u64,
+    /// Sequential invocations.
+    pub invocations: u64,
+    /// PE-array busy cycles across all invocations.
+    pub compute_cycles: f64,
+    /// Parameter bytes fetched from DRAM.
+    pub dram_param_bytes: f64,
+    /// Activation bytes to/from DRAM.
+    pub dram_act_bytes: f64,
+    /// DRAM bandwidth efficiency for this access pattern.
+    pub dram_efficiency: f64,
+    /// Bytes through the parameter buffer.
+    pub param_buf_traffic: f64,
+    /// Bytes through the activation buffer.
+    pub act_buf_traffic: f64,
+    /// Bytes through PE registers.
+    pub reg_traffic: f64,
+    /// Bytes over the on-chip network.
+    pub noc_bytes: f64,
+}
+
+/// Assemble a [`LayerCost`] from raw model outputs: overlap compute with
+/// memory, add dispatch, compute utilization and dynamic energy.
+pub fn finalize(cfg: &AccelConfig, inp: CostInputs) -> LayerCost {
+    let bytes_per_cycle = cfg.dram_bytes_per_cycle(inp.dram_efficiency);
+    let mem_cycles = if bytes_per_cycle > 0.0 {
+        (inp.dram_param_bytes + inp.dram_act_bytes) / bytes_per_cycle
+    } else {
+        0.0
+    };
+    let latency_cycles =
+        inp.compute_cycles.max(mem_cycles) + DISPATCH_CYCLES * inp.invocations as f64;
+    let latency_s = cfg.cycles_to_seconds(latency_cycles);
+    let utilization = if latency_cycles > 0.0 {
+        inp.macs as f64 / (latency_cycles * cfg.num_pes() as f64)
+    } else {
+        0.0
+    };
+
+    let (param_e, act_e) = cfg.buffer_energies();
+    let energy = EnergyBreakdown {
+        pe_dynamic_j: inp.macs as f64 * MAC_ENERGY_J,
+        buffer_dynamic_j: inp.param_buf_traffic * param_e + inp.act_buf_traffic * act_e,
+        reg_dynamic_j: inp.reg_traffic * PE_REG_ENERGY_PER_BYTE,
+        noc_dynamic_j: inp.noc_bytes * NOC_ENERGY_PER_BYTE,
+        dram_dynamic_j: (inp.dram_param_bytes + inp.dram_act_bytes)
+            * cfg.memory.energy_per_byte(),
+        accel_static_j: 0.0,
+        dram_static_j: 0.0,
+    };
+
+    LayerCost {
+        macs: inp.macs,
+        compute_cycles: inp.compute_cycles,
+        mem_cycles,
+        latency_cycles,
+        latency_s,
+        utilization,
+        dram_param_bytes: inp.dram_param_bytes,
+        dram_act_bytes: inp.dram_act_bytes,
+        param_buf_traffic: inp.param_buf_traffic,
+        act_buf_traffic: inp.act_buf_traffic,
+        reg_traffic: inp.reg_traffic,
+        noc_bytes: inp.noc_bytes,
+        energy,
+    }
+}
+
+/// Cost an elementwise (parameter-free) layer: vector units process
+/// `ops` at one lane per PE column-equivalent; traffic is just the
+/// activations through the act buffer and DRAM if they spill.
+pub fn elementwise_cost(cfg: &AccelConfig, layer: &Layer, ops: u64, invocations: u64) -> LayerCost {
+    let in_b = layer.input_act_bytes() as f64;
+    let out_b = layer.output_act_bytes() as f64;
+    // Vector throughput: one lane per PE in the array's first row set,
+    // bounded by 256 lanes (edge vector units are narrow).
+    let lanes = (cfg.num_pes() as f64).min(256.0);
+    let compute_cycles = ops as f64 / lanes;
+    // Activations pass through the act buffer; they spill to DRAM only
+    // if they exceed it (residual feature maps usually fit).
+    // Only the excess beyond the buffer spills to DRAM.
+    let dram_act = (in_b + out_b - cfg.act_buf_bytes as f64).max(0.0);
+    finalize(
+        cfg,
+        CostInputs {
+            macs: ops,
+            invocations,
+            compute_cycles,
+            dram_param_bytes: 0.0,
+            dram_act_bytes: dram_act,
+            dram_efficiency: cfg.memory.max_efficiency(),
+            param_buf_traffic: 0.0,
+            act_buf_traffic: in_b + out_b,
+            reg_traffic: 0.0,
+            noc_bytes: in_b + out_b,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::layer::{Gate, Layer, LayerKind};
+
+    #[test]
+    fn view_shapes_match_layer_kinds() {
+        let conv = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 56, in_w: 56, in_c: 32, out_c: 64, k: 3, stride: 1 },
+        );
+        match view(&conv) {
+            View::Matmul(v) => {
+                assert_eq!(v.m, 56 * 56);
+                assert_eq!(v.n, 64);
+                assert_eq!(v.k, 32 * 9);
+                assert!(!v.block_diagonal);
+            }
+            _ => panic!("conv must be matmul"),
+        }
+        let dw = Layer::new(
+            "d",
+            LayerKind::Depthwise { in_h: 14, in_w: 14, channels: 256, k: 3, stride: 1 },
+        );
+        match view(&dw) {
+            View::Matmul(v) => {
+                assert!(v.block_diagonal);
+                assert_eq!(v.k, 9);
+            }
+            _ => panic!("dw must be matmul"),
+        }
+        let gate = Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: 512, hidden_dim: 512, timesteps: 16, gate: Gate::Input },
+        );
+        match view(&gate) {
+            View::Matmul(v) => {
+                assert_eq!(v.m, 1);
+                assert_eq!(v.invocations, 16);
+                assert_eq!(v.k, 1024);
+            }
+            _ => panic!("gate must be matmul"),
+        }
+        let pool = Layer::new("p", LayerKind::Pool { in_h: 14, in_w: 14, channels: 8, k: 2 });
+        assert!(matches!(view(&pool), View::Elementwise { .. }));
+    }
+
+    #[test]
+    fn finalize_overlaps_compute_and_memory() {
+        let cfg = configs::edge_tpu_baseline();
+        let inputs = CostInputs {
+            macs: 1_000_000,
+            invocations: 1,
+            compute_cycles: 10_000.0,
+            dram_param_bytes: 100.0,
+            dram_act_bytes: 0.0,
+            dram_efficiency: 0.7,
+            param_buf_traffic: 0.0,
+            act_buf_traffic: 0.0,
+            reg_traffic: 0.0,
+            noc_bytes: 0.0,
+        };
+        let c = finalize(&cfg, inputs);
+        // Tiny memory traffic: latency == compute + dispatch.
+        assert!((c.latency_cycles - (10_000.0 + DISPATCH_CYCLES)).abs() < 1.0);
+        assert!(c.mem_cycles < 100.0);
+        assert!(c.utilization > 0.0 && c.utilization <= 1.0);
+    }
+
+    #[test]
+    fn finalize_memory_bound_case() {
+        let cfg = configs::edge_tpu_baseline();
+        let inputs = CostInputs {
+            macs: 1_000,
+            invocations: 1,
+            compute_cycles: 10.0,
+            dram_param_bytes: 4e6,
+            dram_act_bytes: 0.0,
+            dram_efficiency: 0.5,
+            param_buf_traffic: 0.0,
+            act_buf_traffic: 0.0,
+            reg_traffic: 0.0,
+            noc_bytes: 0.0,
+        };
+        let c = finalize(&cfg, inputs);
+        assert!(c.mem_cycles > c.compute_cycles);
+        assert!(c.latency_cycles >= c.mem_cycles);
+    }
+
+    #[test]
+    fn dispatch_charged_per_invocation() {
+        let cfg = configs::edge_tpu_baseline();
+        let mk = |inv: u64| {
+            finalize(
+                &cfg,
+                CostInputs {
+                    macs: 1,
+                    invocations: inv,
+                    compute_cycles: 0.0,
+                    dram_param_bytes: 0.0,
+                    dram_act_bytes: 0.0,
+                    dram_efficiency: 0.7,
+                    param_buf_traffic: 0.0,
+                    act_buf_traffic: 0.0,
+                    reg_traffic: 0.0,
+                    noc_bytes: 0.0,
+                },
+            )
+        };
+        assert!((mk(32).latency_cycles - 32.0 * DISPATCH_CYCLES).abs() < 1e-6);
+    }
+
+    #[test]
+    fn energy_components_populated() {
+        let cfg = configs::edge_tpu_baseline();
+        let c = finalize(
+            &cfg,
+            CostInputs {
+                macs: 1_000_000,
+                invocations: 1,
+                compute_cycles: 1000.0,
+                dram_param_bytes: 1e6,
+                dram_act_bytes: 1e5,
+                dram_efficiency: 0.7,
+                param_buf_traffic: 1e6,
+                act_buf_traffic: 1e6,
+                reg_traffic: 3e6,
+                noc_bytes: 2e6,
+            },
+        );
+        assert!(c.energy.pe_dynamic_j > 0.0);
+        assert!(c.energy.buffer_dynamic_j > 0.0);
+        assert!(c.energy.dram_dynamic_j > 0.0);
+        assert!(c.energy.noc_dynamic_j > 0.0);
+        assert_eq!(c.energy.accel_static_j, 0.0, "statics belong to the simulator");
+        // DRAM at 320 pJ/B dominates this traffic mix.
+        assert!(c.energy.dram_dynamic_j > c.energy.buffer_dynamic_j);
+    }
+
+    #[test]
+    fn elementwise_cost_small_and_buffered() {
+        let cfg = configs::edge_tpu_baseline();
+        let add = Layer::new("r", LayerKind::ResidualAdd { elems: 14 * 14 * 256 });
+        let c = elementwise_cost(&cfg, &add, 14 * 14 * 256, 1);
+        // Fits the 2 MB act buffer: no DRAM traffic.
+        assert_eq!(c.dram_act_bytes, 0.0);
+        assert!(c.latency_s < 1e-4);
+    }
+}

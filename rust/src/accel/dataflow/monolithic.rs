@@ -1,0 +1,251 @@
+//! Monolithic weight-stationary systolic dataflow — the Edge TPU
+//! baseline (§3) and Base+HB (§7).
+//!
+//! A `rows x cols` array holds a (K-tile x N-tile) weight block
+//! stationary while M activation rows stream through. Per tile pass the
+//! pipeline costs `m + rows` cycles; weights refill the array at one
+//! byte per column per cycle, setting a `params/cols` floor per
+//! invocation. The model charges one buffer access per MAC operand —
+//! the fixed dataflow does not amortize operand delivery across the
+//! heterogeneous layer mix (§3.2.4).
+//!
+//! Recurrent gates (M = 1 MVMs, re-dispatched per timestep with the
+//! four gates of a cell interleaved) additionally suffer: (a) full
+//! parameter re-fetch each timestep whenever the 4-gate working set
+//! exceeds the parameter buffer (§3.2.1: parameters "evicted before
+//! they can be reused"), and (b) low DRAM efficiency from short,
+//! interleaved bursts.
+
+use super::{elementwise_cost, finalize, view, CostInputs, LayerCost, MatmulView, View};
+use crate::accel::AccelConfig;
+use crate::model::Layer;
+use crate::util::ceil_div;
+
+/// DRAM bandwidth efficiency for gate-interleaved recurrent streaming.
+pub const RECURRENT_DRAM_EFF: f64 = 0.10;
+/// DRAM bandwidth efficiency for single-row (M<=4) MVM fetches.
+pub const NARROW_DRAM_EFF: f64 = 0.30;
+/// Cap on weight re-fetch passes when parameters exceed the buffer
+/// (the compiler blocks layers to bound re-streaming).
+pub const REFETCH_CAP: f64 = 4.0;
+
+/// Cost a layer on the monolithic weight-stationary array.
+pub fn cost(cfg: &AccelConfig, layer: &Layer) -> LayerCost {
+    let v = match view(layer) {
+        View::Elementwise { ops, invocations } => {
+            return elementwise_cost(cfg, layer, ops, invocations)
+        }
+        View::Matmul(v) => v,
+    };
+    let params = layer.param_bytes() as f64;
+    let macs = layer.macs();
+    let (compute_cycles, _passes) = systolic_cycles(cfg, &v, params);
+
+    // ---- DRAM parameter traffic & efficiency --------------------------
+    let param_buf = cfg.param_buf_bytes as f64;
+    let (dram_param, eff) = if layer.is_recurrent() {
+        // Four gates of the cell run between consecutive uses of this
+        // gate's parameters: working set = 4x the gate.
+        let working = params * 4.0;
+        if working <= param_buf {
+            (params, cfg.memory.max_efficiency())
+        } else {
+            (params * v.invocations as f64, RECURRENT_DRAM_EFF)
+        }
+    } else if params <= param_buf {
+        let eff =
+            if v.m <= 4 { NARROW_DRAM_EFF } else { cfg.memory.max_efficiency() };
+        (params, eff)
+    } else {
+        // Weights don't fit: re-streamed once per M-tile group, capped.
+        let refetch = (ceil_div(v.m, cfg.pe_rows as u64) as f64).min(REFETCH_CAP);
+        (params * refetch, cfg.memory.max_efficiency() * 0.9)
+    };
+
+    // ---- DRAM activation traffic --------------------------------------
+    // Intra-layer spills only; inter-layer transfers are added by the
+    // simulator based on the schedule.
+    let in_b = layer.input_act_bytes() as f64;
+    let out_b = layer.output_act_bytes() as f64;
+    let act_buf = cfg.act_buf_bytes as f64;
+    // Only the working set beyond the buffer spills to DRAM —
+    // resident tiles are consumed in place.
+    let dram_act = (in_b + out_b - act_buf).max(0.0);
+
+    // ---- On-chip traffic (per-MAC operand charging, §3.2.4) -----------
+    let tiles_k = ceil_div(v.k, cfg.pe_rows as u64) as f64;
+    let param_buf_traffic = macs as f64;
+    // Operand reads plus partial-sum spills when K is tiled.
+    let act_buf_traffic = macs as f64 + out_b * (tiles_k - 1.0).max(0.0) * 2.0;
+    let reg_traffic = 2.0 * macs as f64;
+    let noc_bytes = 2.0 * macs as f64 / 8.0 + out_b;
+
+    finalize(
+        cfg,
+        CostInputs {
+            macs,
+            invocations: v.invocations,
+            compute_cycles,
+            dram_param_bytes: dram_param,
+            dram_act_bytes: dram_act,
+            dram_efficiency: eff,
+            param_buf_traffic,
+            act_buf_traffic,
+            reg_traffic,
+            noc_bytes,
+        },
+    )
+}
+
+/// Structural cycle count of the WS array for a matmul view: tile
+/// passes with per-pass fill, floored by the weight-refill rate.
+pub(crate) fn systolic_cycles(cfg: &AccelConfig, v: &MatmulView, params: f64) -> (f64, u64) {
+    let rows = cfg.pe_rows as u64;
+    let cols = cfg.pe_cols as u64;
+    let tiles_k = ceil_div(v.k, rows);
+    let tiles_n = ceil_div(v.n, cols);
+    let passes = tiles_k * tiles_n;
+    let per_pass = v.m as f64 + rows as f64;
+    let structural = passes as f64 * per_pass + cols as f64;
+    // Weight refill floor: one byte per column per cycle.
+    let feed_floor = params / cols as f64;
+    let per_invocation = structural.max(feed_floor);
+    (per_invocation * v.invocations as f64, passes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::layer::{Gate, Layer, LayerKind};
+
+    fn baseline() -> AccelConfig {
+        configs::edge_tpu_baseline()
+    }
+
+    #[test]
+    fn family1_conv_high_utilization() {
+        // §5.1: Family 1 layers reach ~82% utilization on the Edge TPU.
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 56, in_w: 56, in_c: 32, out_c: 64, k: 3, stride: 1 },
+        );
+        let c = cost(&baseline(), &l);
+        assert!((0.70..0.98).contains(&c.utilization), "util={}", c.utilization);
+    }
+
+    #[test]
+    fn family2_pointwise_moderate_utilization() {
+        // §5.1: Family 2 ~64%.
+        let l = Layer::new("p", LayerKind::Pointwise { in_h: 14, in_w: 14, in_c: 256, out_c: 512 });
+        let c = cost(&baseline(), &l);
+        assert!((0.45..0.85).contains(&c.utilization), "util={}", c.utilization);
+    }
+
+    #[test]
+    fn depthwise_low_utilization() {
+        // §5.1: Family 5 ~21% — the block-diagonal K starves the array.
+        let l = Layer::new(
+            "d",
+            LayerKind::Depthwise { in_h: 14, in_w: 14, channels: 512, k: 3, stride: 1 },
+        );
+        let c = cost(&baseline(), &l);
+        assert!((0.02..0.30).contains(&c.utilization), "util={}", c.utilization);
+    }
+
+    #[test]
+    fn lstm_gate_utilization_below_one_percent() {
+        // §3.1: LSTMs/Transducers achieve <1% of peak throughput.
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate {
+                input_dim: 1024,
+                hidden_dim: 1024,
+                timesteps: 32,
+                gate: Gate::Forget,
+            },
+        );
+        let c = cost(&baseline(), &l);
+        assert!(c.utilization < 0.01, "util={}", c.utilization);
+        // And the gate is memory-bound: DRAM streaming dominates.
+        assert!(c.mem_cycles > c.compute_cycles);
+    }
+
+    #[test]
+    fn lstm_gate_refetches_parameters_every_step() {
+        // §3.1: "only 11.9% of the parameters ... fit into the buffer";
+        // gates re-stream per timestep.
+        let t = 32u32;
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: 1024, hidden_dim: 1024, timesteps: t, gate: Gate::Input },
+        );
+        let c = cost(&baseline(), &l);
+        let params = l.param_bytes() as f64;
+        assert!((c.dram_param_bytes - params * t as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn small_lstm_gate_fitting_buffer_fetches_once() {
+        // A tiny gate whose 4-gate working set fits the 4MB buffer is
+        // cached across timesteps.
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: 256, hidden_dim: 256, timesteps: 32, gate: Gate::Input },
+        );
+        let c = cost(&baseline(), &l);
+        assert!((c.dram_param_bytes - l.param_bytes() as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn base_hb_speeds_up_lstm_gates_about_4_5x() {
+        // Fig. 11: Base+HB's biggest throughput win is LSTMs (~4.5x).
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate {
+                input_dim: 1024,
+                hidden_dim: 1024,
+                timesteps: 32,
+                gate: Gate::Output,
+            },
+        );
+        let base = cost(&configs::edge_tpu_baseline(), &l);
+        let hb = cost(&configs::base_hb(), &l);
+        let speedup = base.latency_s / hb.latency_s;
+        assert!((3.0..7.0).contains(&speedup), "speedup={speedup}");
+    }
+
+    #[test]
+    fn base_hb_barely_helps_high_reuse_conv() {
+        // Fig. 11: CNNs with high reuse/small footprints see ~12%.
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 56, in_w: 56, in_c: 32, out_c: 64, k: 3, stride: 1 },
+        );
+        let base = cost(&configs::edge_tpu_baseline(), &l);
+        let hb = cost(&configs::base_hb(), &l);
+        let speedup = base.latency_s / hb.latency_s;
+        assert!(speedup < 1.25, "speedup={speedup}");
+    }
+
+    #[test]
+    fn oversized_conv_params_refetch_capped() {
+        // A conv whose weights exceed 4MB re-streams, but bounded.
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 28, in_w: 28, in_c: 1024, out_c: 1024, k: 3, stride: 1 },
+        );
+        let params = l.param_bytes() as f64;
+        let c = cost(&baseline(), &l);
+        assert!(c.dram_param_bytes > params * 1.5);
+        assert!(c.dram_param_bytes <= params * REFETCH_CAP + 1.0);
+    }
+
+    #[test]
+    fn utilization_never_exceeds_one() {
+        for l in crate::model::zoo::all().iter().flat_map(|m| m.layers()) {
+            let c = cost(&baseline(), l);
+            assert!(c.utilization <= 1.0 + 1e-9, "{}: {}", l.name, c.utilization);
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Pavlov's gate-batched LSTM dataflow (§5.4).
+//!
+//! The key reordering: instead of iterating one cell at a time (fetching
+//! every gate's `W_x`/`W_h` each timestep), Pavlov computes the *input*
+//! MVMs for all timesteps back-to-back with the weight block held
+//! stationary in PE registers — each parameter is fetched from DRAM
+//! exactly **once per layer** instead of once per timestep. Hidden MVMs
+//! retain their sequential inter-cell dependency (`h_{t-1}`), but their
+//! weights also stay register-resident across steps. Input activations
+//! are spatially multicast across the array columns.
+//!
+//! Pavlov sits in the logic layer of 3D-stacked memory: parameters
+//! stream at the 256 GB/s internal bandwidth with TSV-only energy, and
+//! there is no parameter buffer at all (512 B of registers per PE).
+
+use super::{elementwise_cost, finalize, monolithic, view, CostInputs, LayerCost, View};
+use crate::accel::AccelConfig;
+use crate::model::{Layer, LayerKind};
+use crate::util::ceil_div;
+
+/// Cost a layer on Pavlov.
+pub fn cost(cfg: &AccelConfig, layer: &Layer) -> LayerCost {
+    match layer.kind {
+        LayerKind::LstmGate { input_dim, hidden_dim, timesteps, .. } => {
+            gate_cost(cfg, layer, input_dim as u64, hidden_dim as u64, timesteps as u64)
+        }
+        // Non-recurrent matmuls run as a generic weight-stationary array
+        // with single-fetch streaming (how Pavlov executes FC layers the
+        // scheduler occasionally co-locates).
+        _ => match view(layer) {
+            View::Elementwise { ops, invocations } => {
+                elementwise_cost(cfg, layer, ops, invocations)
+            }
+            View::Matmul(v) => {
+                let params = layer.param_bytes() as f64;
+                let macs = layer.macs();
+                let (compute_cycles, _) = monolithic::systolic_cycles(cfg, &v, params);
+                let in_b = layer.input_act_bytes() as f64;
+                let out_b = layer.output_act_bytes() as f64;
+                finalize(
+                    cfg,
+                    CostInputs {
+                        macs,
+                        invocations: v.invocations,
+                        compute_cycles,
+                        // Weight-stationary with register residency:
+                        // parameters stream once regardless of steps.
+                        dram_param_bytes: params,
+                        dram_act_bytes: if in_b + out_b > cfg.act_buf_bytes as f64 {
+                            in_b + out_b
+                        } else {
+                            0.0
+                        },
+                        dram_efficiency: cfg.memory.max_efficiency(),
+                        param_buf_traffic: 0.0,
+                        act_buf_traffic: macs as f64 / cfg.pe_cols as f64 + out_b,
+                        reg_traffic: params + 2.0 * macs as f64,
+                        noc_bytes: macs as f64 / cfg.pe_rows as f64 + out_b,
+                    },
+                )
+            }
+        },
+    }
+}
+
+/// Cost of one LSTM gate under the gate-batched dataflow.
+fn gate_cost(cfg: &AccelConfig, layer: &Layer, d: u64, h: u64, t: u64) -> LayerCost {
+    let rows = cfg.pe_rows as u64;
+    let cols = cfg.pe_cols as u64;
+    let params = layer.param_bytes() as f64;
+    let macs = layer.macs();
+
+    // Input MVMs, batched across all T timesteps: W_x (d x h) stationary
+    // per tile while the T input vectors stream (M = T).
+    let tiles_in = ceil_div(d, rows) * ceil_div(h, cols);
+    let input_cycles = tiles_in as f64 * (t as f64 + rows as f64);
+
+    // Hidden MVMs: sequential per step (inter-cell dependency on
+    // h_{t-1}), but W_h stays register-resident — only the M=1 stream
+    // cost repeats, with consecutive tile passes partially pipelined
+    // (fill amortized to rows/2 per pass).
+    let tiles_h = ceil_div(h, rows) * ceil_div(h, cols);
+    let hidden_cycles = t as f64 * tiles_h as f64 * (1.0 + rows as f64 / 2.0);
+
+    let compute_cycles = input_cycles + hidden_cycles;
+
+    // Parameters fetched exactly once (the dataflow's headline):
+    // streamed directly DRAM -> PE registers, no buffer.
+    let dram_param = params;
+    // Activations per step are tiny; they live in the 128 kB buffer.
+    let in_b = layer.input_act_bytes() as f64;
+    let out_b = layer.output_act_bytes() as f64;
+
+    finalize(
+        cfg,
+        CostInputs {
+            macs,
+            invocations: t,
+            compute_cycles,
+            dram_param_bytes: dram_param,
+            dram_act_bytes: 0.0,
+            dram_efficiency: cfg.memory.max_efficiency(),
+            param_buf_traffic: 0.0,
+            // Input activations spatially multicast across columns.
+            act_buf_traffic: macs as f64 / cols as f64 + in_b + out_b,
+            // Weights land in registers once; C partial sums accumulate
+            // in registers (temporal reduction of outputs).
+            reg_traffic: params + 2.0 * macs as f64,
+            noc_bytes: macs as f64 / rows as f64 + out_b,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::layer::{Gate, Layer, LayerKind};
+
+    fn pavlov() -> AccelConfig {
+        configs::pavlov()
+    }
+
+    fn gate(d: u32, h: u32, t: u32) -> Layer {
+        Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: d, hidden_dim: h, timesteps: t, gate: Gate::Input },
+        )
+    }
+
+    #[test]
+    fn parameters_fetched_exactly_once() {
+        // §5.4: "fetch each element of W only once per layer (as opposed
+        // to fetching each element 4TC times)".
+        let l = gate(1024, 1024, 32);
+        let c = cost(&pavlov(), &l);
+        assert!((c.dram_param_bytes - l.param_bytes() as f64).abs() < 1.0);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(base.dram_param_bytes / c.dram_param_bytes > 30.0, "32x fewer fetches");
+    }
+
+    #[test]
+    fn gate_latency_beats_baseline_severalfold() {
+        // Fig. 12: LSTMs/Transducers run ~5.4x faster under Mensa.
+        let l = gate(1024, 1024, 32);
+        let pv = cost(&pavlov(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        let speedup = base.latency_s / pv.latency_s;
+        assert!((2.5..12.0).contains(&speedup), "speedup={speedup}");
+    }
+
+    #[test]
+    fn gate_utilization_far_above_baseline() {
+        // Fig. 11: utilization improves ~82x for LSTMs/Transducers.
+        let l = gate(2048, 2048, 24);
+        let pv = cost(&pavlov(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        assert!(pv.utilization > 20.0 * base.utilization);
+        assert!(pv.utilization > 0.1, "util={}", pv.utilization);
+    }
+
+    #[test]
+    fn no_parameter_buffer_traffic() {
+        let c = cost(&pavlov(), &gate(1024, 1024, 16));
+        assert_eq!(c.param_buf_traffic, 0.0);
+        assert_eq!(c.energy.buffer_dynamic_j, {
+            // Only the activation buffer contributes.
+            let cfg = pavlov();
+            c.act_buf_traffic * cfg.act_buf().energy_per_byte()
+        });
+    }
+
+    #[test]
+    fn dram_energy_uses_internal_rate() {
+        // TSV-only access: ~10x cheaper per byte than LPDDR4.
+        let l = gate(1024, 1024, 32);
+        let pv = cost(&pavlov(), &l);
+        let base = monolithic::cost(&configs::edge_tpu_baseline(), &l);
+        // 32x fewer bytes x ~10x cheaper per byte: >100x DRAM energy win.
+        assert!(base.energy.dram_dynamic_j / pv.energy.dram_dynamic_j > 100.0);
+    }
+
+    #[test]
+    fn hidden_dependency_keeps_utilization_below_peak() {
+        // The sequential h_{t-1} chain means Pavlov cannot reach 100%:
+        // §7.2 shows ~25% average for LSTM layers.
+        let c = cost(&pavlov(), &gate(1024, 1024, 32));
+        assert!(c.utilization < 0.75, "util={}", c.utilization);
+    }
+
+    #[test]
+    fn fc_layer_runs_with_single_fetch() {
+        let fc = Layer::new("f", LayerKind::FullyConnected { in_dim: 1024, out_dim: 4096 });
+        let c = cost(&pavlov(), &fc);
+        assert!((c.dram_param_bytes - fc.param_bytes() as f64).abs() < 1.0);
+        assert!(c.utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn elementwise_update_supported() {
+        let upd = Layer::new("u", LayerKind::LstmUpdate { hidden_dim: 1024, timesteps: 32 });
+        let c = cost(&pavlov(), &upd);
+        assert!(c.latency_s > 0.0);
+        assert_eq!(c.dram_param_bytes, 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Accelerator hardware models: configurations and dataflow cost models.
+//!
+//! Each accelerator is described by an [`AccelConfig`] (PE array, clock,
+//! on-chip buffers, memory attachment, dataflow) and costed per layer by
+//! its dataflow model ([`dataflow`]), yielding a [`LayerCost`]: cycles,
+//! DRAM/buffer/NoC traffic, utilization, and a dynamic-energy breakdown.
+//!
+//! The five dataflows implemented match the paper:
+//! * monolithic weight-stationary systolic array — the Edge TPU baseline
+//!   (§3) and its Base+HB variant (§7);
+//! * Eyeriss v2's row-stationary-plus with a flexible NoC (§7);
+//! * Pascal: output-stationary with parameter spatial multicast and
+//!   temporal reduction in PE registers (§5.3);
+//! * Pavlov: gate-batched weight-stationary LSTM dataflow (§5.4);
+//! * Jacquard: weight-stationary MVM with spatial reduction (§5.5).
+
+pub mod configs;
+pub mod dataflow;
+
+pub use configs::MensaSystem;
+pub use dataflow::{DataflowKind, LayerCost};
+
+use crate::energy::cacti::SramBuffer;
+use crate::energy::{
+    HBM_EXTERNAL_ENERGY_PER_BYTE, HBM_INTERNAL_ENERGY_PER_BYTE, LPDDR4_ENERGY_PER_BYTE,
+    PE_STATIC_W,
+};
+
+/// What memory an accelerator's DRAM port talks to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryAttachment {
+    /// Conventional off-chip LPDDR4 (32 GB/s class, §3.2.4).
+    Lpddr4,
+    /// HBM accessed externally over the package interface (Base+HB's
+    /// 256 GB/s, §7).
+    HbmExternal,
+    /// Logic layer of 3D-stacked memory: internal bandwidth and
+    /// TSV-only access energy (Pavlov/Jacquard placement, §5.4–5.5).
+    HbmInternal,
+}
+
+impl MemoryAttachment {
+    /// DRAM access energy per byte for this attachment.
+    pub fn energy_per_byte(&self) -> f64 {
+        match self {
+            MemoryAttachment::Lpddr4 => LPDDR4_ENERGY_PER_BYTE,
+            MemoryAttachment::HbmExternal => HBM_EXTERNAL_ENERGY_PER_BYTE,
+            MemoryAttachment::HbmInternal => HBM_INTERNAL_ENERGY_PER_BYTE,
+        }
+    }
+
+    /// Peak bandwidth efficiency for streaming accesses. The internal
+    /// 3D-stacked interface is wide and bank-parallel; LPDDR4 loses more
+    /// to refresh/turnaround.
+    pub fn max_efficiency(&self) -> f64 {
+        match self {
+            MemoryAttachment::Lpddr4 => 0.70,
+            MemoryAttachment::HbmExternal => 0.75,
+            MemoryAttachment::HbmInternal => 0.85,
+        }
+    }
+}
+
+/// Static description of one accelerator.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// Display name (Baseline/Pascal/Pavlov/Jacquard/EyerissV2/...).
+    pub name: String,
+    /// PE array rows.
+    pub pe_rows: u32,
+    /// PE array columns.
+    pub pe_cols: u32,
+    /// Clock in GHz.
+    pub clock_ghz: f64,
+    /// Parameter buffer capacity in bytes (0 = none; Pavlov streams).
+    pub param_buf_bytes: u64,
+    /// Activation buffer capacity in bytes.
+    pub act_buf_bytes: u64,
+    /// Per-PE private register bytes (temporal-reuse storage).
+    pub pe_reg_bytes: u64,
+    /// DRAM bandwidth available to this accelerator, GB/s (decimal).
+    pub dram_bw_gbps: f64,
+    /// Memory attachment kind.
+    pub memory: MemoryAttachment,
+    /// Dataflow this accelerator implements.
+    pub dataflow: DataflowKind,
+    /// Cached (param, act) buffer energies per byte — the CACTI `powf`
+    /// is ~30% of a dataflow-cost call otherwise (§Perf). Initialized
+    /// on first use: do not mutate `*_buf_bytes` after costing starts
+    /// (config sweeps mutate before the first cost call).
+    pub(crate) buf_energy_cache: std::sync::OnceLock<(f64, f64)>,
+}
+
+impl AccelConfig {
+    /// Total number of PEs.
+    pub fn num_pes(&self) -> u64 {
+        self.pe_rows as u64 * self.pe_cols as u64
+    }
+
+    /// Peak MAC throughput (MAC/s).
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.num_pes() as f64 * self.clock_ghz * 1e9
+    }
+
+    /// Peak FLOP/s (2 FLOPs per MAC), the paper's headline "2 TFLOP/s".
+    pub fn peak_flops(&self) -> f64 {
+        2.0 * self.peak_macs_per_s()
+    }
+
+    /// Parameter buffer model.
+    pub fn param_buf(&self) -> SramBuffer {
+        SramBuffer::new(self.param_buf_bytes)
+    }
+
+    /// Activation buffer model.
+    pub fn act_buf(&self) -> SramBuffer {
+        SramBuffer::new(self.act_buf_bytes)
+    }
+
+    /// DRAM bytes deliverable per clock cycle at a given efficiency.
+    pub fn dram_bytes_per_cycle(&self, efficiency: f64) -> f64 {
+        self.dram_bw_gbps * 1e9 * efficiency / (self.clock_ghz * 1e9)
+    }
+
+    /// Cached per-byte buffer energies `(param, act)` — see the field
+    /// doc for the mutation caveat.
+    pub fn buffer_energies(&self) -> (f64, f64) {
+        *self.buf_energy_cache.get_or_init(|| {
+            (self.param_buf().energy_per_byte(), self.act_buf().energy_per_byte())
+        })
+    }
+
+    /// Total leakage power: PE array plus both buffers.
+    pub fn leakage_w(&self) -> f64 {
+        self.num_pes() as f64 * PE_STATIC_W
+            + self.param_buf().leakage_w()
+            + self.act_buf().leakage_w()
+    }
+
+    /// Area proxy in mm² (PEs + buffers). Only used for relative
+    /// comparisons (buffers ≈ 79.4% of Edge TPU area, §3.1).
+    pub fn area_mm2(&self) -> f64 {
+        // 8-bit MAC PE with registers at 22 nm: ~0.00013 mm² (sized so
+        // the Edge TPU's buffers come out at ~79% of core area, §3.1).
+        let pe_area = self.num_pes() as f64 * 0.00013;
+        pe_area + self.param_buf().area_mm2() + self.act_buf().area_mm2()
+    }
+
+    /// Seconds for a cycle count at this accelerator's clock.
+    pub fn cycles_to_seconds(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::configs;
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn baseline_peak_matches_paper() {
+        // §3.1: "theoretical peak throughput of 2 TFLOP/s", 64x64 PEs.
+        let b = configs::edge_tpu_baseline();
+        assert_eq!(b.num_pes(), 4096);
+        assert!(approx_eq(b.peak_flops(), 2e12, 0.01, 0.0), "peak={}", b.peak_flops());
+    }
+
+    #[test]
+    fn pascal_peak_matches_paper() {
+        // §5.3: 32x32 PEs, still 2 TFLOP/s peak.
+        let p = configs::pascal();
+        assert_eq!(p.num_pes(), 1024);
+        assert!(approx_eq(p.peak_flops(), 2e12, 0.01, 0.0));
+    }
+
+    #[test]
+    fn pavlov_and_jacquard_peaks_match_paper() {
+        // §5.4: 8x8 -> 128 GFLOP/s; §5.5: 16x16 -> 512 GFLOP/s.
+        let pv = configs::pavlov();
+        assert_eq!(pv.num_pes(), 64);
+        assert!(approx_eq(pv.peak_flops(), 128e9, 0.01, 0.0));
+        let jq = configs::jacquard();
+        assert_eq!(jq.num_pes(), 256);
+        assert!(approx_eq(jq.peak_flops(), 512e9, 0.01, 0.0));
+    }
+
+    #[test]
+    fn buffers_dominate_edge_tpu_area() {
+        // §3.1: buffers are 79.4% of total Edge TPU area.
+        let b = configs::edge_tpu_baseline();
+        let frac = (b.param_buf().area_mm2() + b.act_buf().area_mm2()) / b.area_mm2();
+        assert!((0.6..0.9).contains(&frac), "buffer area fraction {frac}");
+    }
+
+    #[test]
+    fn mensa_total_area_below_baseline() {
+        // Mensa's three accelerators together are smaller than the
+        // monolithic Edge TPU core (smaller arrays AND smaller buffers).
+        let base = configs::edge_tpu_baseline().area_mm2();
+        let mensa = configs::pascal().area_mm2()
+            + configs::pavlov().area_mm2()
+            + configs::jacquard().area_mm2();
+        assert!(mensa < base, "mensa {mensa} mm2 vs baseline {base} mm2");
+    }
+
+    #[test]
+    fn dram_bytes_per_cycle_scales_with_bw() {
+        let b = configs::edge_tpu_baseline();
+        let hb = configs::base_hb();
+        assert!(approx_eq(
+            hb.dram_bytes_per_cycle(1.0),
+            8.0 * b.dram_bytes_per_cycle(1.0),
+            1e-9,
+            0.0
+        ));
+    }
+
+    #[test]
+    fn memory_attachment_energies_ordered() {
+        assert!(
+            MemoryAttachment::HbmInternal.energy_per_byte()
+                < MemoryAttachment::HbmExternal.energy_per_byte()
+        );
+        // Base+HB pays full off-chip interface energy — same class as
+        // LPDDR4 (why §7.1 sees only 7.5% energy reduction from 8x BW).
+        assert!(
+            MemoryAttachment::HbmExternal.energy_per_byte()
+                <= MemoryAttachment::Lpddr4.energy_per_byte()
+        );
+        assert!(MemoryAttachment::HbmInternal.max_efficiency() > 0.8);
+    }
+}

@@ -1,0 +1,316 @@
+//! Evaluation figures (Figs. 10–12): the four-system comparison of §7.
+
+use crate::accel::configs::{self, MensaSystem};
+use crate::model::zoo;
+use crate::model::ModelKind;
+use crate::scheduler::{Mapping, MensaScheduler};
+use crate::sim::{RunReport, Simulator};
+use crate::util::stats;
+use crate::util::table::{pct, Table};
+
+/// One model's results across the four systems (Baseline, Base+HB,
+/// Eyeriss v2, Mensa-G).
+pub struct Grid {
+    /// Zoo models, paper order.
+    pub models: Vec<crate::model::ModelGraph>,
+    /// `reports[m][s]`: model m on system s.
+    pub reports: Vec<Vec<RunReport>>,
+    /// The four systems.
+    pub systems: Vec<MensaSystem>,
+}
+
+/// Simulate the full 24-model x 4-system grid (the §7 evaluation).
+pub fn evaluation_grid() -> Grid {
+    let systems = configs::evaluation_systems();
+    let models = zoo::all();
+    let reports = models
+        .iter()
+        .map(|model| {
+            systems
+                .iter()
+                .map(|sys| {
+                    let mapping = if sys.len() == 1 {
+                        Mapping::uniform(model.len(), 0)
+                    } else {
+                        MensaScheduler::new(sys).schedule(model)
+                    };
+                    Simulator::new(sys).run(model, &mapping)
+                })
+                .collect()
+        })
+        .collect();
+    Grid { models, reports, systems }
+}
+
+impl Grid {
+    /// Mean over models of `f(baseline, system_s)`.
+    fn mean_vs_baseline(&self, s: usize, f: impl Fn(&RunReport, &RunReport) -> f64) -> f64 {
+        let vals: Vec<f64> = self.reports.iter().map(|row| f(&row[0], &row[s])).collect();
+        stats::mean(&vals)
+    }
+
+    /// Same, restricted to a model-class filter.
+    fn mean_vs_baseline_class(
+        &self,
+        s: usize,
+        class: impl Fn(ModelKind) -> bool,
+        f: impl Fn(&RunReport, &RunReport) -> f64,
+    ) -> f64 {
+        let vals: Vec<f64> = self
+            .models
+            .iter()
+            .zip(&self.reports)
+            .filter(|(m, _)| class(m.kind))
+            .map(|(_, row)| f(&row[0], &row[s]))
+            .collect();
+        stats::mean(&vals)
+    }
+}
+
+/// Fig. 10 (left): total inference energy, normalized to Baseline.
+pub fn fig10_energy() -> String {
+    let g = evaluation_grid();
+    let mut t = Table::new(["model", "Baseline", "Base+HB", "EyerissV2", "Mensa-G"]);
+    for (model, row) in g.models.iter().zip(&g.reports) {
+        let base = row[0].total_energy_j();
+        t.row([
+            model.name.clone(),
+            "1.00".to_string(),
+            format!("{:.2}", row[1].total_energy_j() / base),
+            format!("{:.2}", row[2].total_energy_j() / base),
+            format!("{:.2}", row[3].total_energy_j() / base),
+        ]);
+    }
+    let red = |s: usize| g.mean_vs_baseline(s, |b, x| 1.0 - x.total_energy_j() / b.total_energy_j());
+    let eff = |s: usize| g.mean_vs_baseline(s, |b, x| b.total_energy_j() / x.total_energy_j());
+    let eff_geo = {
+        let vals: Vec<f64> = g
+            .reports
+            .iter()
+            .map(|row| row[0].total_energy_j() / row[3].total_energy_j())
+            .collect();
+        stats::geomean(&vals)
+    };
+    format!(
+        "{}\nBase+HB energy reduction: {} (paper: 7.5%; LSTM/Transducer 14.2%)\n\
+         EyerissV2 energy reduction: {} (paper: 6.4% LSTM/Transducer, 36.2% CNN)\n\
+         Mensa-G energy reduction: {} (paper: 66.0%)\n\
+         Mensa-G efficiency gain: mean {:.1}x / geomean {:.1}x (paper: 3.0x vs Baseline, 2.4x vs Eyeriss)\n\
+         Mensa-G vs Eyeriss efficiency: {:.1}x\npaper: Figure 10 (left)\n",
+        t.render(),
+        pct(red(1)),
+        pct(red(2)),
+        pct(red(3)),
+        eff(3),
+        eff_geo,
+        eff(3) / eff(2),
+    )
+}
+
+/// Fig. 10 (right): Mensa-G energy by accelerator and component.
+pub fn fig10_accel_breakdown() -> String {
+    let g = evaluation_grid();
+    // Aggregate per accelerator across all models.
+    let mut t = Table::new(["accelerator", "PE dyn", "buffers", "NoC", "DRAM dyn", "share of Mensa dyn"]);
+    let mut totals = vec![(0.0f64, 0.0f64, 0.0f64, 0.0f64); 3];
+    for row in &g.reports {
+        for (i, a) in row[3].per_accel.iter().enumerate() {
+            totals[i].0 += a.energy.pe_dynamic_j;
+            totals[i].1 += a.energy.buffer_dynamic_j + a.energy.reg_dynamic_j;
+            totals[i].2 += a.energy.noc_dynamic_j;
+            totals[i].3 += a.energy.dram_dynamic_j;
+        }
+    }
+    let grand: f64 = totals.iter().map(|x| x.0 + x.1 + x.2 + x.3).sum();
+    let names = ["Pascal", "Pavlov", "Jacquard"];
+    let mut dominant = Vec::new();
+    for (i, (pe, buf, noc, dram)) in totals.iter().enumerate() {
+        let total = pe + buf + noc + dram;
+        t.row([
+            names[i].to_string(),
+            pct(pe / total),
+            pct(buf / total),
+            pct(noc / total),
+            pct(dram / total),
+            pct(total / grand),
+        ]);
+        let label = if pe > dram { "PE" } else { "DRAM" };
+        dominant.push(format!("{}={label}", names[i]));
+    }
+    format!(
+        "{}\ndominant component: {} \
+         (paper: Pascal PE-dominated, Pavlov DRAM-dominated, Jacquard mixed/lower)\n\
+         paper: Figure 10 (right)\n",
+        t.render(),
+        dominant.join(" "),
+    )
+}
+
+/// Fig. 11 (top): PE utilization across the four systems.
+pub fn fig11_utilization() -> String {
+    let g = evaluation_grid();
+    let mut t = Table::new(["model", "Baseline", "Base+HB", "EyerissV2", "Mensa-G"]);
+    for (model, row) in g.models.iter().zip(&g.reports) {
+        t.row([
+            model.name.clone(),
+            pct(row[0].avg_utilization()),
+            pct(row[1].avg_utilization()),
+            pct(row[2].avg_utilization()),
+            pct(row[3].avg_utilization()),
+        ]);
+    }
+    let avg = |s: usize| {
+        stats::mean(&g.reports.iter().map(|r| r[s].avg_utilization()).collect::<Vec<_>>())
+    };
+    let seq_gain = g.mean_vs_baseline_class(
+        3,
+        |k| k.is_sequence_class(),
+        |b, x| x.avg_utilization() / b.avg_utilization(),
+    );
+    format!(
+        "{}\naverages: Baseline {} (paper 27.3%) | Base+HB {} (paper 34.0%) | \
+         EyerissV2 {} | Mensa-G {}\n\
+         Mensa-G util gain: {:.1}x overall (paper 2.5x); LSTM/Transducer {:.0}x (paper 82x)\n\
+         paper: Figure 11 (top)\n",
+        t.render(),
+        pct(avg(0)),
+        pct(avg(1)),
+        pct(avg(2)),
+        pct(avg(3)),
+        avg(3) / avg(0),
+        seq_gain,
+    )
+}
+
+/// Fig. 11 (bottom): throughput normalized to Baseline.
+pub fn fig11_throughput() -> String {
+    let g = evaluation_grid();
+    let mut t = Table::new(["model", "Base+HB", "EyerissV2", "Mensa-G"]);
+    let mut ey_worse = 0usize;
+    for (model, row) in g.models.iter().zip(&g.reports) {
+        let b = row[0].throughput_flops();
+        if row[2].throughput_flops() < b {
+            ey_worse += 1;
+        }
+        t.row([
+            model.name.clone(),
+            format!("{:.2}x", row[1].throughput_flops() / b),
+            format!("{:.2}x", row[2].throughput_flops() / b),
+            format!("{:.2}x", row[3].throughput_flops() / b),
+        ]);
+    }
+    let tput = |s: usize| g.mean_vs_baseline(s, |b, x| x.throughput_flops() / b.throughput_flops());
+    let class_tput = |s: usize, f: fn(ModelKind) -> bool| {
+        g.mean_vs_baseline_class(s, f, |b, x| x.throughput_flops() / b.throughput_flops())
+    };
+    format!(
+        "{}\nmeans: Base+HB {:.2}x (paper 2.5x) | EyerissV2 {:.2}x | Mensa-G {:.2}x (paper 3.1x)\n\
+         Mensa-G vs Base+HB: {:.2}x (paper 1.3x) | vs EyerissV2: {:.2}x (paper 4.3x)\n\
+         LSTM/Transducer: Mensa {:.1}x (paper 5.7x), Base+HB {:.1}x (paper 4.5x)\n\
+         CNN+RCNN: Mensa {:.2}x (paper 1.8x)\n\
+         Eyeriss slower than Baseline on {ey_worse}/24 models (paper: most models)\n\
+         paper: Figure 11 (bottom)\n",
+        t.render(),
+        tput(1),
+        tput(2),
+        tput(3),
+        tput(3) / tput(1),
+        tput(3) / tput(2),
+        class_tput(3, |k| k.is_sequence_class()),
+        class_tput(1, |k| k.is_sequence_class()),
+        class_tput(3, |k| matches!(k, ModelKind::Cnn | ModelKind::Rcnn)),
+    )
+}
+
+/// Fig. 12: inference latency normalized to Baseline, with the Mensa-G
+/// per-accelerator split.
+pub fn fig12_latency() -> String {
+    let g = evaluation_grid();
+    let mut t = Table::new(["model", "Base+HB", "EyerissV2", "Mensa-G", "Pascal%", "Pavlov%", "Jacquard%"]);
+    for (model, row) in g.models.iter().zip(&g.reports) {
+        let b = row[0].total_latency_s;
+        let mensa = &row[3];
+        let busy: f64 = mensa.per_accel.iter().map(|a| a.busy_s).sum();
+        t.row([
+            model.name.clone(),
+            format!("{:.2}", row[1].total_latency_s / b),
+            format!("{:.2}", row[2].total_latency_s / b),
+            format!("{:.2}", mensa.total_latency_s / b),
+            pct(mensa.per_accel[0].busy_s / busy),
+            pct(mensa.per_accel[1].busy_s / busy),
+            pct(mensa.per_accel[2].busy_s / busy),
+        ]);
+    }
+    let speedup = |s: usize| g.mean_vs_baseline(s, |b, x| b.total_latency_s / x.total_latency_s);
+    let seq = g.mean_vs_baseline_class(
+        3,
+        |k| k.is_sequence_class(),
+        |b, x| b.total_latency_s / x.total_latency_s,
+    );
+    let cnnish = g.mean_vs_baseline_class(
+        3,
+        |k| matches!(k, ModelKind::Cnn | ModelKind::Rcnn),
+        |b, x| b.total_latency_s / x.total_latency_s,
+    );
+    format!(
+        "{}\nMensa-G latency gain: {:.2}x (paper 1.96x) | vs Base+HB {:.2}x (paper 1.17x)\n\
+         LSTM/Transducer: {:.1}x (paper 5.4x) | CNN+RCNN: {:.2}x (paper 1.64x)\n\
+         paper: Figure 12\n",
+        t.render(),
+        speedup(3),
+        speedup(3) / speedup(1),
+        seq,
+        cnnish,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_24x4() {
+        let g = evaluation_grid();
+        assert_eq!(g.models.len(), 24);
+        assert_eq!(g.reports.len(), 24);
+        assert!(g.reports.iter().all(|r| r.len() == 4));
+    }
+
+    #[test]
+    fn headline_shapes_hold() {
+        // The core reproduction claims, asserted once over the grid.
+        let g = evaluation_grid();
+        let mean = |f: &dyn Fn(&RunReport, &RunReport) -> f64, s: usize| {
+            stats::mean(&g.reports.iter().map(|row| f(&row[0], &row[s])).collect::<Vec<_>>())
+        };
+        // Mensa-G throughput ~3.1x.
+        let tput = mean(&|b, x| x.throughput_flops() / b.throughput_flops(), 3);
+        assert!((2.2..4.2).contains(&tput), "Mensa throughput {tput}");
+        // Mensa-G energy reduction ~66%.
+        let red = mean(&|b, x| 1.0 - x.total_energy_j() / b.total_energy_j(), 3);
+        assert!((0.5..0.8).contains(&red), "Mensa energy reduction {red}");
+        // Base+HB energy reduction small (~7.5%).
+        let red_hb = mean(&|b, x| 1.0 - x.total_energy_j() / b.total_energy_j(), 1);
+        assert!((0.0..0.25).contains(&red_hb), "Base+HB reduction {red_hb}");
+        // Eyeriss throughput below baseline on average.
+        let ey = mean(&|b, x| x.throughput_flops() / b.throughput_flops(), 2);
+        assert!(ey < 1.0, "Eyeriss throughput {ey}");
+    }
+
+    #[test]
+    fn lstm_class_gains_dominate() {
+        let g = evaluation_grid();
+        let seq = g.mean_vs_baseline_class(
+            3,
+            |k| k.is_sequence_class(),
+            |b, x| b.total_latency_s / x.total_latency_s,
+        );
+        let cnn = g.mean_vs_baseline_class(
+            3,
+            |k| matches!(k, ModelKind::Cnn),
+            |b, x| b.total_latency_s / x.total_latency_s,
+        );
+        assert!(seq > 3.0, "sequence latency gain {seq}");
+        assert!(seq > cnn, "LSTMs must benefit more than CNNs");
+    }
+}

@@ -1,0 +1,355 @@
+//! Characterization figures (Figs. 1–6): the §3 Edge TPU study and the
+//! §5.1 family taxonomy.
+
+use crate::accel::configs;
+use crate::characterize::kmeans;
+use crate::characterize::{classify, model_summary, Family, FamilyTally, LayerMetrics};
+use crate::model::{zoo, LayerKind, ModelKind};
+use crate::roofline::Roofline;
+use crate::scheduler::Mapping;
+use crate::sim::Simulator;
+use crate::util::stats;
+use crate::util::table::{bytes, eng, pct, Table};
+
+fn baseline_reports() -> Vec<crate::sim::RunReport> {
+    let sys = configs::baseline_system();
+    let sim = Simulator::new(&sys);
+    zoo::all()
+        .iter()
+        .map(|m| sim.run(m, &Mapping::uniform(m.len(), 0)))
+        .collect()
+}
+
+/// Fig. 1 (left): throughput roofline for the Edge TPU with every
+/// model's measured point.
+pub fn fig1_throughput_roofline() -> String {
+    let sys = configs::baseline_system();
+    let roof = Roofline::of(&sys.accels[0]);
+    let reports = baseline_reports();
+    let mut t = Table::new(["model", "intensity FLOP/B", "achieved", "roofline", "% of peak"]);
+    let mut fracs = Vec::new();
+    let mut seq_fracs = Vec::new();
+    let mut cnn_fracs = Vec::new();
+    for (model, r) in zoo::all().iter().zip(&reports) {
+        let dram: f64 = r.layer_execs.iter().map(|e| e.cost.dram_total_bytes()).sum();
+        let intensity = r.total_flops() / dram.max(1.0);
+        let achieved = r.throughput_flops();
+        let frac = achieved / roof.peak_flops;
+        fracs.push(frac);
+        if model.kind.is_sequence_class() {
+            seq_fracs.push(frac);
+        }
+        if matches!(model.kind, ModelKind::Cnn | ModelKind::Rcnn) {
+            cnn_fracs.push(frac);
+        }
+        t.row([
+            model.name.clone(),
+            format!("{intensity:.1}"),
+            format!("{}FLOP/s", eng(achieved)),
+            format!("{}FLOP/s", eng(roof.attainable_flops(intensity))),
+            pct(frac),
+        ]);
+    }
+    format!(
+        "{}\nridge point: {:.1} FLOP/B | peak {}FLOP/s\n\
+         avg fraction of peak: {} (paper: 24%, i.e. 75.6% below peak)\n\
+         LSTM/Transducer max: {} (paper: <1%)\n\
+         CNN/RCNN avg: {} (paper: 40.7%)\npaper: Figure 1 (left)\n",
+        t.render(),
+        roof.ridge_intensity(),
+        eng(roof.peak_flops),
+        pct(stats::mean(&fracs)),
+        pct(stats::max(&seq_fracs)),
+        pct(stats::mean(&cnn_fracs)),
+    )
+}
+
+/// Fig. 1 (right): energy roofline (smooth curve, Choi et al. [12]).
+pub fn fig1_energy_roofline() -> String {
+    let sys = configs::baseline_system();
+    let roof = Roofline::of(&sys.accels[0]);
+    let reports = baseline_reports();
+    let mut t = Table::new(["model", "intensity", "achieved FLOP/J", "roofline FLOP/J", "% of attainable"]);
+    let mut fracs = Vec::new();
+    for (model, r) in zoo::all().iter().zip(&reports) {
+        let dram: f64 = r.layer_execs.iter().map(|e| e.cost.dram_total_bytes()).sum();
+        let intensity = r.total_flops() / dram.max(1.0);
+        let achieved = r.flops_per_joule();
+        let attainable = roof.attainable_flops_per_joule(intensity);
+        let frac = achieved / attainable;
+        fracs.push(frac);
+        t.row([
+            model.name.clone(),
+            format!("{intensity:.1}"),
+            eng(achieved),
+            eng(attainable),
+            pct(frac),
+        ]);
+    }
+    // Also print the curve itself so the figure can be re-plotted.
+    let mut curve = String::from("energy roofline curve (intensity -> FLOP/J): ");
+    for i in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 512.0] {
+        curve.push_str(&format!("{i}: {}  ", eng(roof.attainable_flops_per_joule(i))));
+    }
+    format!(
+        "{}\n{curve}\nmax (compute-bound) efficiency: {}FLOP/J\n\
+         avg fraction of attainable: {} (paper: 37.2% of maximum; smooth curve per footnote 2)\n\
+         paper: Figure 1 (right)\n",
+        t.render(),
+        eng(roof.max_flops_per_joule()),
+        pct(stats::mean(&fracs)),
+    )
+}
+
+/// Fig. 2: energy breakdown during inference on the baseline.
+pub fn fig2_energy_breakdown() -> String {
+    let reports = baseline_reports();
+    let mut t = Table::new([
+        "model",
+        "PE dyn",
+        "buffers dyn",
+        "NoC dyn",
+        "DRAM dyn",
+        "static",
+        "off-chip total",
+    ]);
+    let mut cnn_buf_static = Vec::new();
+    let mut cnn_buf_dyn = Vec::new();
+    let mut seq_dram = Vec::new();
+    let mut offchip = Vec::new();
+    for (model, r) in zoo::all().iter().zip(&reports) {
+        let e = &r.energy;
+        let total = e.total_j();
+        t.row([
+            model.name.clone(),
+            pct(e.pe_dynamic_j / total),
+            pct(e.buffer_dynamic_j / total),
+            pct(e.noc_dynamic_j / total),
+            pct(e.dram_dynamic_j / total),
+            pct(e.static_j() / total),
+            pct(e.offchip_fraction()),
+        ]);
+        offchip.push(e.offchip_fraction());
+        if matches!(model.kind, ModelKind::Cnn) {
+            // Buffer share of static energy: buffers' leakage fraction
+            // times total static.
+            let sys = configs::baseline_system();
+            let cfg = &sys.accels[0];
+            let buf_leak = cfg.param_buf().leakage_w() + cfg.act_buf().leakage_w();
+            cnn_buf_static.push(buf_leak / cfg.leakage_w() * e.accel_static_j / e.static_j());
+            cnn_buf_dyn.push(e.buffer_dynamic_fraction());
+        }
+        if model.kind.is_sequence_class() {
+            seq_dram.push((e.dram_dynamic_j + e.dram_static_j) / total);
+        }
+    }
+    format!(
+        "{}\nCNN buffers: {} of static (paper 48.1%), {} of dynamic (paper 36.5%)\n\
+         LSTM/Transducer DRAM share: {} (paper ~3/4)\n\
+         overall off-chip share: {} (paper 50.3%)\npaper: Figure 2\n",
+        t.render(),
+        pct(stats::mean(&cnn_buf_static)),
+        pct(stats::mean(&cnn_buf_dyn)),
+        pct(stats::mean(&seq_dram)),
+        pct(stats::mean(&offchip)),
+    )
+}
+
+/// Fig. 3: LSTM gate footprints (left) and layer footprint vs FLOP/B
+/// (right).
+pub fn fig3_footprints_and_reuse() -> String {
+    let mut gate_params: Vec<f64> = Vec::new();
+    let mut per_gate: [Vec<f64>; 4] = Default::default();
+    let mut layer_fp_seq = Vec::new();
+    let mut layer_fp_cnn = Vec::new();
+    for model in zoo::all() {
+        for layer in model.layers() {
+            if let LayerKind::LstmGate { gate, .. } = layer.kind {
+                let p = layer.param_bytes() as f64;
+                gate_params.push(p);
+                let idx = crate::model::layer::Gate::ALL.iter().position(|&g| g == gate).unwrap();
+                per_gate[idx].push(p);
+            }
+        }
+        if model.kind.is_sequence_class() {
+            for (_, members) in model.lstm_groups() {
+                layer_fp_seq
+                    .push(members.iter().map(|&i| model.layer(i).param_bytes()).sum::<u64>() as f64);
+            }
+        }
+        if matches!(model.kind, ModelKind::Cnn) {
+            for l in model.layers() {
+                if !l.is_auxiliary() {
+                    layer_fp_cnn.push(l.param_bytes() as f64);
+                }
+            }
+        }
+    }
+    let mut t = Table::new(["gate", "mean params", "min", "max"]);
+    for (idx, g) in crate::model::layer::Gate::ALL.iter().enumerate() {
+        t.row([
+            g.short().to_string(),
+            eng(stats::mean(&per_gate[idx])),
+            eng(stats::min(&per_gate[idx])),
+            eng(stats::max(&per_gate[idx])),
+        ]);
+    }
+    // Right panel: representative layer scatter.
+    let mut scatter = Table::new(["layer", "footprint", "FLOP/B"]);
+    for name in ["CNN1", "CNN5", "LSTM2", "Transducer1"] {
+        let m = zoo::by_name(name).unwrap();
+        for l in m.layers().iter().filter(|l| !l.is_auxiliary()).step_by(4) {
+            scatter.row([
+                format!("{name}/{}", l.name),
+                bytes(l.param_bytes() as f64),
+                format!("{:.1}", l.param_flop_per_byte()),
+            ]);
+        }
+    }
+    format!(
+        "{}\n{}\ngate mean: {} params (paper: ~2.1M)\n\
+         LSTM/Transducer layer footprint mean: {} (paper: 33.4 MB avg, up to 70M params)\n\
+         CNN layer footprint mean: {}\n\
+         LSTM gate FLOP/B = 1 by construction (§3.2.1)\npaper: Figure 3\n",
+        t.render(),
+        scatter.render(),
+        eng(stats::mean(&gate_params)),
+        bytes(stats::mean(&layer_fp_seq)),
+        bytes(stats::mean(&layer_fp_cnn)),
+    )
+}
+
+/// Fig. 4: per-layer MAC diversity across four CNNs.
+pub fn fig4_mac_diversity() -> String {
+    let mut t = Table::new(["model", "min MACs", "max MACs", "variation"]);
+    let mut worst: f64 = 0.0;
+    for name in ["CNN1", "CNN5", "CNN8", "CNN10"] {
+        let m = zoo::by_name(name).unwrap();
+        let s = model_summary(&m);
+        let macs: Vec<f64> = s.metrics.iter().map(|x| x.macs_total as f64).collect();
+        worst = worst.max(s.mac_variation);
+        t.row([
+            name.to_string(),
+            eng(stats::min(&macs)),
+            eng(stats::max(&macs)),
+            format!("{:.0}x", s.mac_variation),
+        ]);
+    }
+    format!(
+        "{}\nmax intra-model MAC variation: {worst:.0}x (paper: ~200x)\npaper: Figure 4\n",
+        t.render()
+    )
+}
+
+/// Fig. 5: per-layer parameter-footprint diversity across four CNNs.
+pub fn fig5_footprint_diversity() -> String {
+    let mut t = Table::new(["model", "min footprint", "max footprint", "variation"]);
+    for name in ["CNN1", "CNN5", "CNN8", "CNN10"] {
+        let m = zoo::by_name(name).unwrap();
+        let s = model_summary(&m);
+        let fp: Vec<f64> = s.metrics.iter().map(|x| x.param_bytes as f64).collect();
+        t.row([
+            name.to_string(),
+            bytes(stats::min(&fp)),
+            bytes(stats::max(&fp)),
+            format!("{:.0}x", s.footprint_variation),
+        ]);
+    }
+    format!(
+        "{}\npaper: Figure 5 (≈20x footprint variation; reuse varies ~244x per §3.2.2)\n",
+        t.render()
+    )
+}
+
+/// Fig. 6: the five-family clustering (rule boxes + k-means).
+pub fn fig6_families() -> String {
+    let mut tally = FamilyTally::default();
+    let mut pts = Vec::new();
+    let mut labels = Vec::new();
+    let mut fam_util: [Vec<f64>; 5] = Default::default();
+    let sys = configs::baseline_system();
+    let cfg = &sys.accels[0];
+    for model in zoo::all() {
+        for layer in model.layers() {
+            if layer.is_auxiliary() {
+                continue;
+            }
+            let m = LayerMetrics::of(layer);
+            let fam = classify(&m);
+            tally.add(fam);
+            if fam != Family::Outlier {
+                pts.push(kmeans::features(&m));
+                let idx = Family::ALL.iter().position(|&f| f == fam).unwrap();
+                labels.push(idx);
+                fam_util[idx].push(cfg.dataflow.cost(cfg, layer).utilization);
+            }
+        }
+    }
+    let clustering = kmeans::kmeans(&pts, 5, 17);
+    let purity = kmeans::purity(&clustering.assignment, &labels, 5);
+    let mut t = Table::new(["family", "layers", "share", "measured base util", "paper util"]);
+    for (idx, f) in Family::ALL.iter().enumerate() {
+        t.row([
+            f.name().to_string(),
+            tally.count(*f).to_string(),
+            pct(tally.count(*f) as f64 / tally.total() as f64),
+            pct(stats::mean(&fam_util[idx])),
+            pct(f.paper_baseline_utilization()),
+        ]);
+    }
+    format!(
+        "{}\noutliers: {} ({})\nin-family fraction: {} (paper: 97%)\n\
+         k-means (k=5) purity vs rule families: {:.2} over {} layers in {} iters\n\
+         paper: Figure 6 / §5.1\n",
+        t.render(),
+        tally.count(Family::Outlier),
+        pct(tally.count(Family::Outlier) as f64 / tally.total() as f64),
+        pct(tally.in_family_fraction()),
+        purity,
+        pts.len(),
+        clustering.iterations,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_reports_lstm_below_two_percent() {
+        let r = fig1_throughput_roofline();
+        assert!(r.contains("ridge point"));
+        // Sequence-class max fraction must print below 2%.
+        let line = r.lines().find(|l| l.starts_with("LSTM/Transducer max")).unwrap();
+        let v: f64 = line.split(&[' ', '%'][..]).find_map(|s| s.parse().ok()).unwrap();
+        assert!(v < 2.0, "{line}");
+    }
+
+    #[test]
+    fn fig2_offchip_share_in_band() {
+        let r = fig2_energy_breakdown();
+        let line = r.lines().find(|l| l.starts_with("overall off-chip share")).unwrap();
+        let v: f64 = line.split(&[' ', '%'][..]).find_map(|s| s.parse().ok()).unwrap();
+        assert!((30.0..70.0).contains(&v), "{line}");
+    }
+
+    #[test]
+    fn fig6_reports_high_family_coverage() {
+        let r = fig6_families();
+        let line = r.lines().find(|l| l.starts_with("in-family fraction")).unwrap();
+        let v: f64 = line.split(&[' ', '%'][..]).find_map(|s| s.parse().ok()).unwrap();
+        assert!(v >= 94.0, "{line}");
+    }
+
+    #[test]
+    fn fig3_gate_mean_near_2m() {
+        let r = fig3_footprints_and_reuse();
+        assert!(r.contains("paper: ~2.1M"));
+    }
+
+    #[test]
+    fn fig45_variation_factors_present() {
+        assert!(fig4_mac_diversity().contains("x"));
+        assert!(fig5_footprint_diversity().contains("x"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Benchmark harness: regenerates every table and figure of the
+//! paper's evaluation (see DESIGN.md §4 for the experiment index).
+//!
+//! Each experiment function returns the formatted rows/series the
+//! corresponding paper artifact reports, with a `paper:` annotation so
+//! the output reads as a paper-vs-measured comparison. The criterion
+//! replacement lives in [`timer`] (criterion is unavailable offline;
+//! `[[bench]]` targets use `harness = false` and call into here).
+
+pub mod ablations;
+pub mod evaluation;
+pub mod figures;
+pub mod timer;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1-throughput",
+    "fig1-energy",
+    "fig2",
+    "fig3",
+    "fig4",
+    "fig5",
+    "fig6",
+    "fig10-energy",
+    "fig10-accel",
+    "fig11-util",
+    "fig11-tput",
+    "fig12",
+    "tab-buffer8x",
+    "tab-sched",
+    "tab-pe-sweep",
+];
+
+/// Run one experiment by id; returns its report text.
+pub fn run_experiment(id: &str) -> Result<String> {
+    Ok(match id {
+        "fig1-throughput" => figures::fig1_throughput_roofline(),
+        "fig1-energy" => figures::fig1_energy_roofline(),
+        "fig2" => figures::fig2_energy_breakdown(),
+        "fig3" => figures::fig3_footprints_and_reuse(),
+        "fig4" => figures::fig4_mac_diversity(),
+        "fig5" => figures::fig5_footprint_diversity(),
+        "fig6" => figures::fig6_families(),
+        "fig10-energy" => evaluation::fig10_energy(),
+        "fig10-accel" => evaluation::fig10_accel_breakdown(),
+        "fig11-util" => evaluation::fig11_utilization(),
+        "fig11-tput" => evaluation::fig11_throughput(),
+        "fig12" => evaluation::fig12_latency(),
+        "tab-buffer8x" => ablations::buffer_capacity(),
+        "tab-sched" => ablations::scheduler_quality(),
+        "tab-pe-sweep" => ablations::pe_array_sweep(),
+        other => bail!("unknown experiment `{other}`; known: {EXPERIMENTS:?}"),
+    })
+}
+
+/// Run everything (the `mensa bench --all` path).
+pub fn run_all() -> String {
+    let mut out = String::new();
+    for id in EXPERIMENTS {
+        out.push_str(&format!("\n######## {id} ########\n"));
+        out.push_str(&run_experiment(id).expect("known id"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_experiment_runs() {
+        for id in EXPERIMENTS {
+            let report = run_experiment(id).unwrap();
+            assert!(report.len() > 100, "{id}: suspiciously short report");
+            assert!(report.contains("paper:"), "{id}: missing paper reference");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run_experiment("fig99").is_err());
+    }
+}

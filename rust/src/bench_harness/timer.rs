@@ -1,0 +1,98 @@
+//! Tiny timing harness (offline criterion stand-in) for the
+//! `harness = false` bench targets.
+//!
+//! Methodology: warmup iterations, then `samples` timed batches of
+//! `iters_per_sample` calls; reports mean, standard deviation, and
+//! min per call. Deterministic workloads + medians keep run-to-run
+//! noise visible rather than hidden.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of one measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark label.
+    pub name: String,
+    /// Mean nanoseconds per call.
+    pub mean_ns: f64,
+    /// Standard deviation of the per-sample means.
+    pub stddev_ns: f64,
+    /// Fastest sample's ns/call.
+    pub min_ns: f64,
+    /// Total calls measured.
+    pub calls: u64,
+}
+
+impl Measurement {
+    /// Render like `name ... 12_345 ns/iter (+/- 678)`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:40} {:>12.0} ns/iter (+/- {:.0}, min {:.0}, n={})",
+            self.name, self.mean_ns, self.stddev_ns, self.min_ns, self.calls
+        )
+    }
+}
+
+/// Time `f`, returning the measurement. `f` should include its whole
+/// per-call work; use `std::hint::black_box` on inputs/outputs.
+pub fn bench(name: &str, samples: usize, iters_per_sample: usize, mut f: impl FnMut()) -> Measurement {
+    // Warmup: one sample's worth.
+    for _ in 0..iters_per_sample {
+        f();
+    }
+    let mut per_call: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let start = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        per_call.push(start.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_ns: stats::mean(&per_call),
+        stddev_ns: stats::stddev(&per_call),
+        min_ns: stats::min(&per_call),
+        calls: (samples * iters_per_sample) as u64,
+    }
+}
+
+/// Print a bench header like criterion's.
+pub fn header(group: &str) {
+    println!("\n=== bench group: {group} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench("noop-ish", 5, 100, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.mean_ns + 1.0);
+        assert_eq!(m.calls, 500);
+        assert!(m.render().contains("ns/iter"));
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        // Use a float-sqrt accumulation: integer range sums get
+        // closed-formed by LLVM in release mode, making both sides
+        // constant-time.
+        let work = |n: u64| {
+            let n = std::hint::black_box(n);
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        };
+        let fast = bench("fast", 5, 50, || work(10));
+        let slow = bench("slow", 5, 50, || work(100_000));
+        assert!(slow.mean_ns > fast.mean_ns, "{} vs {}", slow.mean_ns, fast.mean_ns);
+    }
+}

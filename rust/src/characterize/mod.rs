@@ -1,0 +1,128 @@
+//! Per-layer characterization and the five-family taxonomy of §5.1.
+//!
+//! This module computes the metrics the paper's analysis is built on
+//! (MACs, parameter footprint, FLOP/B parameter reuse, activation
+//! footprints/reuse), classifies layers into the paper's five families,
+//! and cross-checks the classification with an unsupervised k-means
+//! clustering — reproducing the §1/§5.1 insight that "layers naturally
+//! group into a small number of clusters".
+
+pub mod families;
+pub mod kmeans;
+pub mod report;
+
+pub use families::{classify, Family, FamilyTally};
+pub use report::{model_summary, ModelSummary};
+
+use crate::model::Layer;
+
+/// The derived characteristics of one layer — the axes of Figs. 3–6.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerMetrics {
+    /// Total MACs for one inference (recurrent: all timesteps).
+    pub macs_total: u64,
+    /// MACs per scheduled invocation — the "MAC intensity" axis of §5.1.
+    pub macs_per_invocation: u64,
+    /// Parameter footprint in bytes (8-bit quantized).
+    pub param_bytes: u64,
+    /// Input activation footprint in bytes.
+    pub input_act_bytes: u64,
+    /// Output activation footprint in bytes.
+    pub output_act_bytes: u64,
+    /// Parameter reuse: FLOP per parameter byte streamed (Fig. 3/6 axis).
+    pub param_flop_per_byte: f64,
+    /// Activation reuse: MACs per activation byte.
+    pub act_flop_per_byte: f64,
+    /// Sequential invocations (timesteps for recurrent nodes, else 1).
+    pub invocations: u64,
+    /// `true` for recurrent (LSTM-family) nodes.
+    pub recurrent: bool,
+    /// `true` for parameter-free helper nodes (pool/add/update), which
+    /// the §5.1 taxonomy does not cover.
+    pub auxiliary: bool,
+}
+
+impl LayerMetrics {
+    /// Compute metrics for a layer.
+    pub fn of(layer: &Layer) -> Self {
+        Self {
+            macs_total: layer.macs(),
+            macs_per_invocation: layer.macs_per_invocation(),
+            param_bytes: layer.param_bytes(),
+            input_act_bytes: layer.input_act_bytes(),
+            output_act_bytes: layer.output_act_bytes(),
+            param_flop_per_byte: layer.param_flop_per_byte(),
+            act_flop_per_byte: layer.act_flop_per_byte(),
+            invocations: layer.invocations(),
+            recurrent: layer.is_recurrent(),
+            auxiliary: layer.is_auxiliary(),
+        }
+    }
+
+    /// Arithmetic intensity over *all* data (params + activations),
+    /// the x-axis of the Fig. 1 rooflines. FLOPs counted as MACs, and
+    /// parameters counted once per stream pass (recurrent gates stream
+    /// per timestep on a monolithic design).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = self.param_bytes * self.invocations.max(1)
+            + self.input_act_bytes
+            + self.output_act_bytes;
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.macs_total as f64 / bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Gate, LayerKind};
+    use crate::model::Layer;
+
+    #[test]
+    fn metrics_mirror_layer_accessors() {
+        let l = Layer::new(
+            "pw",
+            LayerKind::Pointwise { in_h: 14, in_w: 14, in_c: 256, out_c: 512 },
+        );
+        let m = LayerMetrics::of(&l);
+        assert_eq!(m.macs_total, l.macs());
+        assert_eq!(m.param_bytes, l.param_bytes());
+        assert!(!m.recurrent);
+        assert!(!m.auxiliary);
+        assert_eq!(m.invocations, 1);
+    }
+
+    #[test]
+    fn lstm_gate_arithmetic_intensity_near_one() {
+        let l = Layer::new(
+            "g",
+            LayerKind::LstmGate { input_dim: 1024, hidden_dim: 1024, timesteps: 32, gate: Gate::Input },
+        );
+        let m = LayerMetrics::of(&l);
+        // Params dominate the byte count and stream once per step:
+        // intensity must sit just below 1 FLOP/B (Fig. 3).
+        let ai = m.arithmetic_intensity();
+        assert!((0.8..=1.0).contains(&ai), "ai={ai}");
+        assert!(m.recurrent);
+    }
+
+    #[test]
+    fn conv_arithmetic_intensity_far_higher() {
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv2d { in_h: 56, in_w: 56, in_c: 64, out_c: 64, k: 3, stride: 1 },
+        );
+        let ai = LayerMetrics::of(&l).arithmetic_intensity();
+        assert!(ai > 100.0, "ai={ai}");
+    }
+
+    #[test]
+    fn auxiliary_layers_flagged() {
+        let l = Layer::new("p", LayerKind::Pool { in_h: 7, in_w: 7, channels: 64, k: 7 });
+        let m = LayerMetrics::of(&l);
+        assert!(m.auxiliary);
+        assert_eq!(m.param_bytes, 0);
+    }
+}

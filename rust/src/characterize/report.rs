@@ -1,0 +1,148 @@
+//! Model-level characterization summaries used by the figure harnesses.
+
+use super::families::{classify, Family, FamilyTally};
+use super::LayerMetrics;
+use crate::model::ModelGraph;
+use crate::util::stats;
+
+/// Aggregated characterization of one model.
+#[derive(Debug, Clone)]
+pub struct ModelSummary {
+    /// Model name (paper figure label).
+    pub name: String,
+    /// Layer count (all nodes).
+    pub layers: usize,
+    /// Parameterized layer count (taxonomy denominator).
+    pub param_layers: usize,
+    /// Total MACs per inference.
+    pub total_macs: u64,
+    /// Total parameter bytes.
+    pub total_param_bytes: u64,
+    /// Intra-model MAC variation factor (Fig. 4's "200x").
+    pub mac_variation: f64,
+    /// Intra-model footprint variation factor (Fig. 5's "20x").
+    pub footprint_variation: f64,
+    /// Intra-model parameter-reuse variation (§3.2.2's "244x").
+    pub reuse_variation: f64,
+    /// Family histogram.
+    pub tally: FamilyTally,
+    /// Per-layer metrics, parameterized layers only, graph order.
+    pub metrics: Vec<LayerMetrics>,
+}
+
+/// Compute the summary for one model.
+pub fn model_summary(model: &ModelGraph) -> ModelSummary {
+    let metrics: Vec<LayerMetrics> = model
+        .layers()
+        .iter()
+        .filter(|l| !l.is_auxiliary())
+        .map(LayerMetrics::of)
+        .collect();
+    let macs: Vec<f64> = metrics.iter().map(|m| m.macs_total as f64).collect();
+    let fp: Vec<f64> = metrics.iter().map(|m| m.param_bytes as f64).collect();
+    let reuse: Vec<f64> =
+        metrics.iter().map(|m| m.param_flop_per_byte).filter(|&r| r > 0.0).collect();
+    let mut tally = FamilyTally::default();
+    for m in &metrics {
+        tally.add(classify(m));
+    }
+    ModelSummary {
+        name: model.name.clone(),
+        layers: model.len(),
+        param_layers: metrics.len(),
+        total_macs: model.total_macs(),
+        total_param_bytes: model.total_param_bytes(),
+        mac_variation: stats::variation_factor(&macs),
+        footprint_variation: stats::variation_factor(&fp),
+        reuse_variation: stats::variation_factor(&reuse),
+        tally,
+        metrics,
+    }
+}
+
+/// Fraction of a model's parameters living in layers of a given family —
+/// §3.2.4's "layers with low data reuse account for … 64% for CNN6".
+pub fn param_fraction_in_family(model: &ModelGraph, family: Family) -> f64 {
+    let mut in_family = 0u64;
+    let mut total = 0u64;
+    for layer in model.layers() {
+        let pb = layer.param_bytes();
+        total += pb;
+        if classify(&LayerMetrics::of(layer)) == family {
+            in_family += pb;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        in_family as f64 / total as f64
+    }
+}
+
+/// Fraction of a model's parameters in *low-reuse* layers (FLOP/B < 64),
+/// the quantity §3.2.4 reports per model.
+pub fn low_reuse_param_fraction(model: &ModelGraph) -> f64 {
+    let mut low = 0u64;
+    let mut total = 0u64;
+    for layer in model.layers() {
+        let pb = layer.param_bytes();
+        total += pb;
+        if layer.param_flop_per_byte() < 64.0 {
+            low += pb;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        low as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn summary_counts_parameterized_layers_only() {
+        let m = zoo::cnn(0);
+        let s = model_summary(&m);
+        assert!(s.param_layers < s.layers, "pools/adds excluded");
+        assert_eq!(s.metrics.len(), s.param_layers);
+        assert_eq!(s.total_macs, m.total_macs());
+    }
+
+    #[test]
+    fn lstm_params_are_low_reuse() {
+        // All LSTM model parameters sit in FLOP/B=1 gates (+FC): the
+        // low-reuse fraction must be ~100%.
+        let frac = low_reuse_param_fraction(&zoo::lstm(0));
+        assert!(frac > 0.99, "frac={frac}");
+    }
+
+    #[test]
+    fn cnn_low_reuse_fraction_is_substantial() {
+        // §3.2.4: low-reuse layers hold a significant share of CNN
+        // parameters (64% for CNN6). Require > 30% for every CNN.
+        for i in 0..zoo::NUM_CNN {
+            let m = zoo::cnn(i);
+            let frac = low_reuse_param_fraction(&m);
+            assert!(frac > 0.3, "{}: low-reuse frac {frac:.2}", m.name);
+        }
+    }
+
+    #[test]
+    fn family3_holds_most_lstm_params() {
+        let frac = param_fraction_in_family(&zoo::lstm(1), Family::F3);
+        assert!(frac > 0.95, "frac={frac}");
+    }
+
+    #[test]
+    fn variation_factors_positive() {
+        for model in zoo::all() {
+            let s = model_summary(&model);
+            assert!(s.mac_variation >= 1.0, "{}", s.name);
+            assert!(s.footprint_variation >= 1.0, "{}", s.name);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Configuration system: a dependency-free TOML-subset parser and the
+//! schema for describing systems (accelerator collections), scheduler
+//! options, and server options in config files.
+//!
+//! The full `toml`/`serde` crates are unavailable offline, so
+//! [`toml_lite`] implements the subset the configs need: `[section]`
+//! and `[[array-of-tables]]` headers, `key = value` pairs with string,
+//! integer, float, and boolean values, and `#` comments. Shipped
+//! configs live in `configs/*.toml`; every binary takes `--config`.
+
+pub mod schema;
+pub mod toml_lite;
+
+pub use schema::{ServerConfig, SystemSpec};
+pub use toml_lite::{Document, Value};

@@ -1,0 +1,268 @@
+//! Config schema: build [`MensaSystem`]s and server options from
+//! TOML-subset documents.
+//!
+//! Example (see `configs/mensa_g.toml`):
+//!
+//! ```toml
+//! name = "Mensa-G"
+//!
+//! [[accel]]
+//! name = "Pascal"
+//! dataflow = "pascal"     # monolithic|eyeriss|pascal|pavlov|jacquard
+//! pe_rows = 32
+//! pe_cols = 32
+//! clock_ghz = 0.9766
+//! param_buf_kb = 128
+//! act_buf_kb = 256
+//! pe_reg_bytes = 128
+//! dram_bw_gbps = 32.0
+//! memory = "lpddr4"       # lpddr4|hbm_external|hbm_internal
+//! ```
+
+use super::toml_lite::{self, Table, Value};
+use crate::accel::configs::MensaSystem;
+use crate::accel::{AccelConfig, DataflowKind, MemoryAttachment};
+use crate::util::KB;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A system specification loaded from a config file.
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    /// The built system.
+    pub system: MensaSystem,
+    /// Whether Phase II is enabled for the scheduler.
+    pub scheduler_phase2: bool,
+}
+
+fn get_str<'a>(t: &'a Table, key: &str) -> Result<&'a str> {
+    t.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("missing or non-string key `{key}`"))
+}
+
+fn get_f64(t: &Table, key: &str) -> Result<f64> {
+    t.get(key).and_then(Value::as_f64).ok_or_else(|| anyhow!("missing or non-numeric key `{key}`"))
+}
+
+fn get_u64(t: &Table, key: &str) -> Result<u64> {
+    let v = t
+        .get(key)
+        .and_then(Value::as_int)
+        .ok_or_else(|| anyhow!("missing or non-integer key `{key}`"))?;
+    u64::try_from(v).map_err(|_| anyhow!("key `{key}` must be non-negative"))
+}
+
+fn parse_dataflow(s: &str) -> Result<DataflowKind> {
+    Ok(match s {
+        "monolithic" => DataflowKind::MonolithicWs,
+        "eyeriss" => DataflowKind::EyerissRs,
+        "pascal" => DataflowKind::PascalOs,
+        "pavlov" => DataflowKind::PavlovWs,
+        "jacquard" => DataflowKind::JacquardWs,
+        other => bail!("unknown dataflow `{other}`"),
+    })
+}
+
+fn parse_memory(s: &str) -> Result<MemoryAttachment> {
+    Ok(match s {
+        "lpddr4" => MemoryAttachment::Lpddr4,
+        "hbm_external" => MemoryAttachment::HbmExternal,
+        "hbm_internal" => MemoryAttachment::HbmInternal,
+        other => bail!("unknown memory attachment `{other}`"),
+    })
+}
+
+fn parse_accel(t: &Table) -> Result<AccelConfig> {
+    let name = get_str(t, "name")?.to_string();
+    let cfg = AccelConfig {
+        dataflow: parse_dataflow(get_str(t, "dataflow")?)
+            .with_context(|| format!("accel `{name}`"))?,
+        memory: parse_memory(get_str(t, "memory")?).with_context(|| format!("accel `{name}`"))?,
+        pe_rows: get_u64(t, "pe_rows")? as u32,
+        pe_cols: get_u64(t, "pe_cols")? as u32,
+        clock_ghz: get_f64(t, "clock_ghz")?,
+        param_buf_bytes: get_u64(t, "param_buf_kb")? * KB,
+        act_buf_bytes: get_u64(t, "act_buf_kb")? * KB,
+        pe_reg_bytes: get_u64(t, "pe_reg_bytes")?,
+        dram_bw_gbps: get_f64(t, "dram_bw_gbps")?,
+        name,
+        buf_energy_cache: Default::default(),
+    };
+    if cfg.pe_rows == 0 || cfg.pe_cols == 0 {
+        bail!("accel `{}`: PE array dimensions must be positive", cfg.name);
+    }
+    if cfg.clock_ghz <= 0.0 || cfg.dram_bw_gbps <= 0.0 {
+        bail!("accel `{}`: clock and bandwidth must be positive", cfg.name);
+    }
+    Ok(cfg)
+}
+
+impl SystemSpec {
+    /// Parse a system spec from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let name = doc
+            .root
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("unnamed-system")
+            .to_string();
+        let accel_tables =
+            doc.arrays.get("accel").ok_or_else(|| anyhow!("config needs at least one [[accel]]"))?;
+        let mut accels = Vec::with_capacity(accel_tables.len());
+        for t in accel_tables {
+            accels.push(parse_accel(t)?);
+        }
+        if accels.is_empty() {
+            bail!("config needs at least one [[accel]]");
+        }
+        let scheduler_phase2 = doc
+            .tables
+            .get("scheduler")
+            .and_then(|t| t.get("phase2"))
+            .and_then(Value::as_bool)
+            .unwrap_or(true);
+        Ok(Self { system: MensaSystem { name, accels }, scheduler_phase2 })
+    }
+
+    /// Load a system spec from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::from_toml(&text).with_context(|| format!("parsing config {path}"))
+    }
+}
+
+/// Serving-path configuration for the coordinator (see
+/// `configs/server.toml`).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum requests grouped into one batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch, in microseconds.
+    pub batch_timeout_us: u64,
+    /// Worker threads executing batches. Currently informational: the
+    /// PJRT CPU client is single-owner, so one executor thread
+    /// serializes batches (matching §4.2 footnote 4's no-concurrent-
+    /// layers model); a TPU deployment would shard executors here.
+    pub workers: usize,
+    /// Bounded queue depth before backpressure rejects requests.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, batch_timeout_us: 2000, workers: 2, queue_depth: 256 }
+    }
+}
+
+impl ServerConfig {
+    /// Parse the `[server]` section of a config (defaults applied for
+    /// missing keys).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
+        let mut cfg = Self::default();
+        if let Some(t) = doc.tables.get("server") {
+            if let Some(v) = t.get("max_batch").and_then(Value::as_int) {
+                cfg.max_batch = v.max(1) as usize;
+            }
+            if let Some(v) = t.get("batch_timeout_us").and_then(Value::as_int) {
+                cfg.batch_timeout_us = v.max(0) as u64;
+            }
+            if let Some(v) = t.get("workers").and_then(Value::as_int) {
+                cfg.workers = v.max(1) as usize;
+            }
+            if let Some(v) = t.get("queue_depth").and_then(Value::as_int) {
+                cfg.queue_depth = v.max(1) as usize;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MENSA_TOML: &str = r#"
+name = "Mensa-G"
+
+[scheduler]
+phase2 = true
+
+[[accel]]
+name = "Pascal"
+dataflow = "pascal"
+pe_rows = 32
+pe_cols = 32
+clock_ghz = 0.9766
+param_buf_kb = 128
+act_buf_kb = 256
+pe_reg_bytes = 128
+dram_bw_gbps = 32.0
+memory = "lpddr4"
+
+[[accel]]
+name = "Pavlov"
+dataflow = "pavlov"
+pe_rows = 8
+pe_cols = 8
+clock_ghz = 1.0
+param_buf_kb = 0
+act_buf_kb = 128
+pe_reg_bytes = 512
+dram_bw_gbps = 256.0
+memory = "hbm_internal"
+"#;
+
+    #[test]
+    fn loads_mensa_like_system() {
+        let spec = SystemSpec::from_toml(MENSA_TOML).unwrap();
+        assert_eq!(spec.system.name, "Mensa-G");
+        assert_eq!(spec.system.len(), 2);
+        assert_eq!(spec.system.accels[0].name, "Pascal");
+        assert_eq!(spec.system.accels[0].num_pes(), 1024);
+        assert_eq!(spec.system.accels[1].param_buf_bytes, 0);
+        assert!(spec.scheduler_phase2);
+    }
+
+    #[test]
+    fn roundtrips_builtin_configs() {
+        // The shipped config files must parse into systems matching the
+        // built-in constructors.
+        use crate::accel::configs;
+        let spec = SystemSpec::from_toml(MENSA_TOML).unwrap();
+        let builtin = configs::mensa_g();
+        assert_eq!(spec.system.accels[0].dataflow, builtin.accels[0].dataflow);
+        assert_eq!(spec.system.accels[1].dram_bw_gbps, builtin.accels[1].dram_bw_gbps);
+    }
+
+    #[test]
+    fn rejects_unknown_dataflow() {
+        let bad = MENSA_TOML.replace("\"pascal\"", "\"tpuv9\"");
+        let err = SystemSpec::from_toml(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown dataflow"));
+    }
+
+    #[test]
+    fn rejects_missing_accels() {
+        let err = SystemSpec::from_toml("name = \"x\"").unwrap_err();
+        assert!(format!("{err:#}").contains("[[accel]]"));
+    }
+
+    #[test]
+    fn rejects_zero_pe_dims() {
+        let bad = MENSA_TOML.replace("pe_rows = 32", "pe_rows = 0");
+        assert!(SystemSpec::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn server_config_defaults_and_overrides() {
+        let d = ServerConfig::default();
+        assert_eq!(d.max_batch, 8);
+        let cfg = ServerConfig::from_toml("[server]\nmax_batch = 16\nworkers = 4\n").unwrap();
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.batch_timeout_us, 2000, "default retained");
+    }
+}

@@ -1,0 +1,261 @@
+//! Minimal TOML-subset parser (offline stand-in for the `toml` crate).
+//!
+//! Supported syntax:
+//! * `# comments` and blank lines
+//! * `[section]` headers and `[[array.of.tables]]` headers
+//! * `key = "string"`, `key = 123`, `key = 1.5`, `key = true`
+//!
+//! Unsupported TOML (nested inline tables, arrays of values, dates,
+//! multi-line strings) is rejected with a line-numbered error, which is
+//! all the shipped configs need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// String contents, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer value, if an integer.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Boolean value, if a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One table: key/value pairs.
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: the root table, named tables, and arrays of
+/// tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    /// Top-level keys (before any section header).
+    pub root: Table,
+    /// `[name]` sections.
+    pub tables: BTreeMap<String, Table>,
+    /// `[[name]]` array-of-table sections, in file order.
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+/// Parse error with a 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// Line the error occurred on.
+    pub line: usize,
+    /// Human-readable message.
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+enum Cursor {
+    Root,
+    Table(String),
+    Array(String),
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut cursor = Cursor::Root;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty table name".into() });
+            }
+            doc.arrays.entry(name.clone()).or_default().push(Table::new());
+            cursor = Cursor::Array(name);
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if name.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty table name".into() });
+            }
+            doc.tables.entry(name.clone()).or_default();
+            cursor = Cursor::Table(name);
+        } else if let Some((key, value)) = line.split_once('=') {
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line: line_no, message: "empty key".into() });
+            }
+            let value = parse_value(value.trim())
+                .ok_or_else(|| ParseError { line: line_no, message: format!("bad value: {value}") })?;
+            let table = match &cursor {
+                Cursor::Root => &mut doc.root,
+                Cursor::Table(name) => doc.tables.get_mut(name).expect("cursor table exists"),
+                Cursor::Array(name) => doc
+                    .arrays
+                    .get_mut(name)
+                    .and_then(|v| v.last_mut())
+                    .expect("cursor array entry exists"),
+            };
+            table.insert(key, value);
+        } else {
+            return Err(ParseError { line: line_no, message: format!("unparseable line: {line}") });
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None;
+        }
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a system config
+name = "Mensa-G"   # inline comment
+count = 3
+scale = 1.5
+enabled = true
+
+[scheduler]
+phase2 = true
+lambda = 1_000.0
+
+[[accel]]
+name = "Pascal"
+pe_rows = 32
+
+[[accel]]
+name = "Pavlov"
+pe_rows = 8
+"#;
+
+    #[test]
+    fn parses_root_values() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.root["name"].as_str(), Some("Mensa-G"));
+        assert_eq!(d.root["count"].as_int(), Some(3));
+        assert_eq!(d.root["scale"].as_f64(), Some(1.5));
+        assert_eq!(d.root["enabled"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(d.tables["scheduler"]["phase2"].as_bool(), Some(true));
+        assert_eq!(d.tables["scheduler"]["lambda"].as_f64(), Some(1000.0));
+        let accels = &d.arrays["accel"];
+        assert_eq!(accels.len(), 2);
+        assert_eq!(accels[0]["name"].as_str(), Some("Pascal"));
+        assert_eq!(accels[1]["pe_rows"].as_int(), Some(8));
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_str() {
+        let d = parse("x = 4").unwrap();
+        assert_eq!(d.root["x"].as_f64(), Some(4.0));
+        assert_eq!(d.root["x"].as_str(), None);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let d = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(d.root["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        let err = parse("k = [1, 2]").unwrap_err();
+        assert!(err.message.contains("bad value"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let d = parse("bw = 256_000").unwrap();
+        assert_eq!(d.root["bw"].as_int(), Some(256000));
+    }
+}

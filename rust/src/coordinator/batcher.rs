@@ -1,0 +1,195 @@
+//! Dynamic batching: group same-family requests into batch jobs.
+//!
+//! The batcher drains the router queue, accumulating requests per
+//! family; a family's pending set flushes when it reaches `max_batch`
+//! or when its oldest request has waited `batch_timeout`. This is the
+//! standard serving trade-off: larger batches amortize dispatch (and on
+//! a real Mensa, fill the PE arrays), at the cost of queueing delay.
+
+use super::Request;
+use crate::config::ServerConfig;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+/// A flushed batch ready for the executor.
+#[derive(Debug)]
+pub struct BatchJob {
+    /// Model family.
+    pub family: String,
+    /// The member requests, arrival order.
+    pub requests: Vec<Request>,
+}
+
+/// The batching loop. Owns the router receiver; emits [`BatchJob`]s
+/// over a *bounded* channel: when the executor falls behind, the
+/// batcher blocks, the router queue fills, and `infer()` rejects —
+/// end-to-end backpressure instead of unbounded buffering.
+pub struct Batcher {
+    rx: Receiver<Request>,
+    tx: SyncSender<BatchJob>,
+    max_batch: usize,
+    timeout: Duration,
+}
+
+impl Batcher {
+    /// Create a batcher between the router queue and the executor.
+    pub fn new(rx: Receiver<Request>, tx: SyncSender<BatchJob>, cfg: &ServerConfig) -> Self {
+        Self {
+            rx,
+            tx,
+            max_batch: cfg.max_batch,
+            timeout: Duration::from_micros(cfg.batch_timeout_us),
+        }
+    }
+
+    /// Run until the request channel closes. Flushes all pending
+    /// batches on shutdown.
+    pub fn run(self) {
+        let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
+        let mut oldest: HashMap<String, Instant> = HashMap::new();
+        loop {
+            // Wait bounded by the earliest pending deadline.
+            let wait = pending
+                .keys()
+                .filter_map(|f| oldest.get(f))
+                .map(|&t| (t + self.timeout).saturating_duration_since(Instant::now()))
+                .min()
+                .unwrap_or(Duration::from_millis(50));
+            match self.rx.recv_timeout(wait) {
+                Ok(req) => {
+                    let family = req.family.clone();
+                    let entry = pending.entry(family.clone()).or_default();
+                    if entry.is_empty() {
+                        oldest.insert(family.clone(), Instant::now());
+                    }
+                    entry.push(req);
+                    if entry.len() >= self.max_batch {
+                        self.flush(&mut pending, &mut oldest, &family);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    let families: Vec<String> = pending.keys().cloned().collect();
+                    for f in families {
+                        self.flush(&mut pending, &mut oldest, &f);
+                    }
+                    return;
+                }
+            }
+            // Flush any family past its deadline.
+            let now = Instant::now();
+            let due: Vec<String> = pending
+                .iter()
+                .filter(|(f, reqs)| {
+                    !reqs.is_empty()
+                        && oldest.get(*f).is_some_and(|&t| now.duration_since(t) >= self.timeout)
+                })
+                .map(|(f, _)| f.clone())
+                .collect();
+            for f in due {
+                self.flush(&mut pending, &mut oldest, &f);
+            }
+        }
+    }
+
+    fn flush(
+        &self,
+        pending: &mut HashMap<String, Vec<Request>>,
+        oldest: &mut HashMap<String, Instant>,
+        family: &str,
+    ) {
+        if let Some(requests) = pending.remove(family) {
+            oldest.remove(family);
+            if requests.is_empty() {
+                return;
+            }
+            // Executor gone: drop the batch; request senders see
+            // disconnected reply channels.
+            let _ = self.tx.send(BatchJob { family: family.to_string(), requests });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    fn req(family: &str) -> (Request, mpsc::Receiver<anyhow::Result<super::super::InferenceResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                family: family.into(),
+                inputs: vec![vec![0.0]],
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (job_tx, job_rx) = mpsc::sync_channel(16);
+        let b = Batcher::new(req_rx, job_tx, &cfg);
+        thread::spawn(move || b.run());
+        (req_tx, job_rx)
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let cfg = ServerConfig { max_batch: 3, batch_timeout_us: 1_000_000, ..Default::default() };
+        let (tx, jobs) = start(cfg);
+        let mut keep = Vec::new();
+        for _ in 0..3 {
+            let (r, rx) = req("edge_cnn");
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(job.family, "edge_cnn");
+        assert_eq!(job.requests.len(), 3);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let cfg = ServerConfig { max_batch: 64, batch_timeout_us: 5_000, ..Default::default() };
+        let (tx, jobs) = start(cfg);
+        let (r, _keep) = req("edge_lstm");
+        tx.send(r).unwrap();
+        let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(job.requests.len(), 1);
+    }
+
+    #[test]
+    fn families_batch_independently() {
+        let cfg = ServerConfig { max_batch: 2, batch_timeout_us: 500_000, ..Default::default() };
+        let (tx, jobs) = start(cfg);
+        let mut keep = Vec::new();
+        for f in ["edge_cnn", "joint", "edge_cnn", "joint"] {
+            let (r, rx) = req(f);
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let a = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        let b = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        let mut fams = [a.family.clone(), b.family.clone()];
+        fams.sort();
+        assert_eq!(fams, ["edge_cnn", "joint"]);
+        assert_eq!(a.requests.len(), 2);
+        assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn drains_pending_on_disconnect() {
+        let cfg = ServerConfig { max_batch: 64, batch_timeout_us: 10_000_000, ..Default::default() };
+        let (tx, jobs) = start(cfg);
+        let (r, _keep) = req("edge_cnn");
+        tx.send(r).unwrap();
+        drop(tx); // close the request channel
+        let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(job.requests.len(), 1);
+    }
+}

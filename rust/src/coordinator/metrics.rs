@@ -1,0 +1,120 @@
+//! Serving metrics: request counts, latency percentiles, batch sizes,
+//! and the simulated edge cost accumulators.
+
+use crate::util::stats;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    queue_us: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    completed: u64,
+    rejected: u64,
+    failed: u64,
+    sim_energy_j: f64,
+    sim_latency_s: f64,
+}
+
+/// Thread-safe metrics registry shared by the server components.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A read-only snapshot of the registry.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Completed request count.
+    pub completed: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Requests that failed in execution.
+    pub failed: u64,
+    /// p50 end-to-end latency, microseconds.
+    pub p50_us: f64,
+    /// p99 end-to-end latency, microseconds.
+    pub p99_us: f64,
+    /// Mean queueing delay, microseconds.
+    pub mean_queue_us: f64,
+    /// Mean executed batch size.
+    pub mean_batch: f64,
+    /// Total simulated Mensa-G energy, joules.
+    pub sim_energy_j: f64,
+    /// Total simulated Mensa-G device latency, seconds.
+    pub sim_latency_s: f64,
+}
+
+impl Metrics {
+    /// Record one completed request.
+    pub fn record_completion(
+        &self,
+        latency: Duration,
+        queue: Duration,
+        batch: usize,
+        sim_energy_j: f64,
+        sim_latency_s: f64,
+    ) {
+        let mut m = self.inner.lock().expect("metrics lock");
+        m.completed += 1;
+        m.latencies_us.push(latency.as_secs_f64() * 1e6);
+        m.queue_us.push(queue.as_secs_f64() * 1e6);
+        m.batch_sizes.push(batch as f64);
+        m.sim_energy_j += sim_energy_j;
+        m.sim_latency_s += sim_latency_s;
+    }
+
+    /// Record a backpressure rejection.
+    pub fn record_rejection(&self) {
+        self.inner.lock().expect("metrics lock").rejected += 1;
+    }
+
+    /// Record an execution failure.
+    pub fn record_failure(&self) {
+        self.inner.lock().expect("metrics lock").failed += 1;
+    }
+
+    /// Snapshot current values.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().expect("metrics lock");
+        Snapshot {
+            completed: m.completed,
+            rejected: m.rejected,
+            failed: m.failed,
+            p50_us: stats::percentile(&m.latencies_us, 50.0),
+            p99_us: stats::percentile(&m.latencies_us, 99.0),
+            mean_queue_us: stats::mean(&m.queue_us),
+            mean_batch: stats::mean(&m.batch_sizes),
+            sim_energy_j: m.sim_energy_j,
+            sim_latency_s: m.sim_latency_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::default();
+        m.record_completion(Duration::from_micros(100), Duration::from_micros(10), 4, 0.5, 0.01);
+        m.record_completion(Duration::from_micros(300), Duration::from_micros(30), 8, 0.5, 0.01);
+        m.record_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.failed, 0);
+        assert!((s.p50_us - 200.0).abs() < 1.0);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert!((s.sim_energy_j - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_us, 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! The serving coordinator: Mensa as a deployable inference service.
+//!
+//! This is the L3 request path a downstream user actually runs:
+//!
+//! ```text
+//! clients → Handle::infer() → router (bounded, backpressure)
+//!         → per-family dynamic batcher (max_batch / timeout)
+//!         → executor thread owning the PJRT runtime
+//!         → per-request responses (real numerics) + simulated
+//!           edge-accelerator timing/energy from the Mensa scheduler
+//! ```
+//!
+//! Real compute runs through the AOT artifacts on the PJRT CPU client;
+//! the Mensa simulator supplies what the physical Mensa-G accelerators
+//! *would* spend per inference (latency, energy, accelerator mix), so
+//! the service reports both observed wall-clock and modeled edge cost.
+//!
+//! Threading model: `std::thread` + `std::sync::mpsc` (tokio is not
+//! available offline — see DESIGN.md substitutions). The PJRT client
+//! is owned by a single executor thread; batches serialize through it,
+//! which matches the paper's no-concurrent-layers execution model
+//! (§4.2 footnote 4).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchJob, Batcher};
+pub use metrics::Metrics;
+pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request as it flows through the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    /// Model family (`edge_cnn`, `edge_lstm`, `joint`).
+    pub family: String,
+    /// One buffer per model input (e.g. joint takes two).
+    pub inputs: Vec<Vec<f32>>,
+    /// Enqueue timestamp (queueing-delay accounting).
+    pub enqueued: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<anyhow::Result<InferenceResponse>>,
+}

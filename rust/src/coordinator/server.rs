@@ -1,0 +1,421 @@
+//! The inference server: router → batcher → PJRT executor.
+//!
+//! The executor thread owns the PJRT runtime (the client is not shared
+//! across threads) and one precomputed Mensa-G schedule per model
+//! family: every response carries both the *measured* CPU numerics and
+//! the *modeled* Mensa-G edge cost (latency/energy/accelerator mix)
+//! from the simulator, scaled per request.
+
+use super::batcher::{BatchJob, Batcher};
+use super::metrics::{Metrics, Snapshot};
+use super::Request;
+use crate::accel::configs;
+use crate::config::ServerConfig;
+use crate::model::zoo;
+use crate::runtime::Runtime;
+use crate::scheduler::MensaScheduler;
+use crate::sim::Simulator;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Modeled Mensa-G cost of one inference (from the simulator).
+#[derive(Debug, Clone)]
+pub struct SimCost {
+    /// Modeled device latency, seconds.
+    pub latency_s: f64,
+    /// Modeled total energy, joules.
+    pub energy_j: f64,
+    /// Busy seconds per accelerator (Pascal/Pavlov/Jacquard).
+    pub accel_mix: Vec<(String, f64)>,
+}
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    /// Flattened output tensor for this request.
+    pub output: Vec<f32>,
+    /// End-to-end wall-clock latency.
+    pub latency: Duration,
+    /// Time spent queued before execution.
+    pub queue: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+    /// Modeled Mensa-G edge cost.
+    pub sim: SimCost,
+}
+
+/// Server construction.
+pub struct Server;
+
+/// Handle to a running server.
+pub struct ServerHandle {
+    req_tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server over an artifacts directory. Blocks until the
+    /// runtime has loaded (or failed to load) all artifacts.
+    pub fn start(artifacts_dir: &str, cfg: ServerConfig) -> Result<ServerHandle> {
+        let metrics = Arc::new(Metrics::default());
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        // Bounded: at most 2 batches in flight; beyond that the batcher
+        // blocks and the router queue absorbs (then rejects) the excess.
+        let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(2);
+
+        // Batcher thread.
+        let batcher = Batcher::new(req_rx, job_tx, &cfg);
+        let batcher_thread = std::thread::Builder::new()
+            .name("mensa-batcher".into())
+            .spawn(move || batcher.run())
+            .expect("spawn batcher");
+
+        // Executor thread: owns the PJRT runtime. Startup result is
+        // reported back through a oneshot-style channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifacts_dir.to_string();
+        let exec_metrics = Arc::clone(&metrics);
+        let executor_thread = std::thread::Builder::new()
+            .name("mensa-executor".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let sim_costs = family_sim_costs();
+                executor_loop(runtime, job_rx, exec_metrics, sim_costs);
+            })
+            .expect("spawn executor");
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(ServerHandle {
+            req_tx,
+            metrics,
+            threads: vec![batcher_thread, executor_thread],
+        })
+    }
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the response channel. Backpressure:
+    /// fails immediately when the bounded queue is full.
+    pub fn infer(
+        &self,
+        family: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Receiver<Result<InferenceResponse>>> {
+        let (reply, rx) = mpsc::channel();
+        let req =
+            Request { family: family.to_string(), inputs, enqueued: Instant::now(), reply };
+        match self.req_tx.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejection();
+                bail!("queue full: backpressure rejection")
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("server shut down"),
+        }
+    }
+
+    /// Submit and wait (with timeout).
+    pub fn infer_blocking(
+        &self,
+        family: &str,
+        inputs: Vec<Vec<f32>>,
+        timeout: Duration,
+    ) -> Result<InferenceResponse> {
+        let rx = self.infer(family, inputs)?;
+        rx.recv_timeout(timeout).map_err(|e| anyhow!("inference timed out: {e}"))?
+    }
+
+    /// Current metrics snapshot.
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: close the queue and join all threads.
+    pub fn shutdown(self) {
+        drop(self.req_tx);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Precompute the Mensa-G simulated cost per serving family, using
+/// representative zoo models (the serving artifacts are small variants
+/// of the same classes; DESIGN.md §Serving documents the proxy choice).
+fn family_sim_costs() -> HashMap<String, SimCost> {
+    let system = configs::mensa_g();
+    let scheduler = MensaScheduler::new(&system);
+    let sim = Simulator::new(&system);
+    let mut map = HashMap::new();
+    for (family, model) in [
+        ("edge_cnn", zoo::cnn(0)),
+        ("edge_lstm", zoo::lstm(2)),
+        ("joint", zoo::transducer(0)),
+    ] {
+        let mapping = scheduler.schedule(&model);
+        let report = sim.run(&model, &mapping);
+        map.insert(
+            family.to_string(),
+            SimCost {
+                latency_s: report.total_latency_s,
+                energy_j: report.total_energy_j(),
+                accel_mix: report
+                    .per_accel
+                    .iter()
+                    .map(|a| (a.name.clone(), a.busy_s))
+                    .collect(),
+            },
+        );
+    }
+    map
+}
+
+/// Which axis of input `idx` for `family` is the batch axis.
+fn batch_axis(family: &str) -> usize {
+    // edge_lstm inputs are [T, B, D]; everything else is batch-major.
+    if family == "edge_lstm" {
+        1
+    } else {
+        0
+    }
+}
+
+/// Pack per-request (batch-1) buffers into one variant-batch buffer.
+///
+/// `shape` is the variant's input shape; `axis` its batch axis; the
+/// remainder is zero-padded (padding rows are discarded on unpack).
+pub fn pack_batch(
+    shape: &[i64],
+    axis: usize,
+    per_request: &[&[f32]],
+) -> Vec<f32> {
+    let total: usize = shape.iter().product::<i64>() as usize;
+    let mut out = vec![0.0f32; total];
+    let batch = shape[axis] as usize;
+    // Sizes of the blocks outside/inside the batch axis.
+    let outer: usize = shape[..axis].iter().product::<i64>() as usize;
+    let inner: usize = shape[axis + 1..].iter().product::<i64>() as usize;
+    for (b, buf) in per_request.iter().enumerate() {
+        debug_assert_eq!(buf.len(), outer * inner, "request buffer size");
+        for o in 0..outer {
+            let dst = o * batch * inner + b * inner;
+            let src = o * inner;
+            out[dst..dst + inner].copy_from_slice(&buf[src..src + inner]);
+        }
+    }
+    out
+}
+
+/// Split a batched output (batch-major) into per-request rows.
+pub fn unpack_batch(output: &[f32], batch: usize, n_requests: usize) -> Vec<Vec<f32>> {
+    let row = output.len() / batch;
+    (0..n_requests).map(|i| output[i * row..(i + 1) * row].to_vec()).collect()
+}
+
+/// Largest batch capacity any variant of `family` offers.
+fn max_family_batch(runtime: &Runtime, family: &str) -> Option<usize> {
+    runtime
+        .model_names()
+        .iter()
+        .filter_map(|n| {
+            n.strip_prefix(family)
+                .and_then(|s| s.strip_prefix("_b"))
+                .and_then(|s| s.parse::<usize>().ok())
+        })
+        .max()
+}
+
+/// The executor loop: drain batch jobs, split any job larger than the
+/// family's biggest compiled variant, execute, reply.
+fn executor_loop(
+    runtime: Runtime,
+    jobs: mpsc::Receiver<BatchJob>,
+    metrics: Arc<Metrics>,
+    sim_costs: HashMap<String, SimCost>,
+) {
+    while let Ok(mut job) = jobs.recv() {
+        // Split oversized jobs: the batcher's max_batch may exceed the
+        // largest compiled variant (e.g. edge_lstm tops out at b4).
+        let cap = max_family_batch(&runtime, &job.family).unwrap_or(usize::MAX).max(1);
+        while job.requests.len() > cap {
+            let rest = job.requests.split_off(cap);
+            let chunk = BatchJob {
+                family: job.family.clone(),
+                requests: std::mem::replace(&mut job.requests, rest),
+            };
+            run_one_job(&runtime, chunk, &metrics, &sim_costs);
+        }
+        run_one_job(&runtime, job, &metrics, &sim_costs);
+    }
+}
+
+/// Execute one (capacity-fitting) job and deliver its responses.
+fn run_one_job(
+    runtime: &Runtime,
+    job: BatchJob,
+    metrics: &Arc<Metrics>,
+    sim_costs: &HashMap<String, SimCost>,
+) {
+    {
+        let n = job.requests.len();
+        let exec_start = Instant::now();
+        let result = execute_batch(runtime, &job);
+        match result {
+            Ok((outputs, batch)) => {
+                let sim = sim_costs.get(&job.family).cloned().unwrap_or(SimCost {
+                    latency_s: 0.0,
+                    energy_j: 0.0,
+                    accel_mix: vec![],
+                });
+                for (req, output) in job.requests.into_iter().zip(outputs) {
+                    let latency = req.enqueued.elapsed();
+                    let queue = exec_start.duration_since(req.enqueued);
+                    metrics.record_completion(
+                        latency,
+                        queue,
+                        batch,
+                        sim.energy_j,
+                        sim.latency_s,
+                    );
+                    let _ = req.reply.send(Ok(InferenceResponse {
+                        output,
+                        latency,
+                        queue,
+                        batch_size: n,
+                        sim: sim.clone(),
+                    }));
+                }
+            }
+            Err(e) => {
+                for req in job.requests {
+                    metrics.record_failure();
+                    let _ = req.reply.send(Err(anyhow!("{e:#}")));
+                }
+            }
+        }
+    }
+}
+
+/// Execute one batch job: select variant, pack, run, unpack.
+fn execute_batch(runtime: &Runtime, job: &BatchJob) -> Result<(Vec<Vec<f32>>, usize)> {
+    let n = job.requests.len();
+    let (variant, batch) = runtime
+        .variant_for_batch(&job.family, n)
+        .ok_or_else(|| anyhow!("no variant of `{}` fits batch {n}", job.family))?;
+    let variant = variant.to_string();
+    let model = runtime.model(&variant)?;
+    let axis = batch_axis(&job.family);
+    let n_inputs = model.spec.input_shapes.len();
+    let mut inputs = Vec::with_capacity(n_inputs);
+    for idx in 0..n_inputs {
+        let shape = &model.spec.input_shapes[idx];
+        let per_req: Vec<&[f32]> = job
+            .requests
+            .iter()
+            .map(|r| {
+                r.inputs
+                    .get(idx)
+                    .map(|v| v.as_slice())
+                    .ok_or_else(|| anyhow!("request missing input {idx}"))
+            })
+            .collect::<Result<_>>()?;
+        // Validate per-request sizes before packing.
+        let per_size: usize = shape
+            .iter()
+            .enumerate()
+            .map(|(d, &s)| if d == axis { 1 } else { s as usize })
+            .product();
+        for (i, buf) in per_req.iter().enumerate() {
+            if buf.len() != per_size {
+                bail!(
+                    "request {i}: input {idx} has {} elements, expected {per_size}",
+                    buf.len()
+                );
+            }
+        }
+        inputs.push(pack_batch(shape, axis, &per_req));
+    }
+    let raw = model.execute(&inputs)?;
+    let outputs = unpack_batch(&raw, batch, n);
+    Ok((outputs, batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_batch_major_axis0() {
+        // Two requests of shape [1, 3] into a [4, 3] buffer.
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let out = pack_batch(&[4, 3], 0, &[&a, &b]);
+        assert_eq!(&out[..6], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(out[6..].iter().all(|&x| x == 0.0), "padding zeroed");
+    }
+
+    #[test]
+    fn pack_time_major_axis1() {
+        // Two requests of shape [2, 1, 2] (T=2, B=1, D=2) into [2, 3, 2].
+        let a = [1.0, 2.0, 10.0, 20.0]; // t0=[1,2], t1=[10,20]
+        let b = [3.0, 4.0, 30.0, 40.0];
+        let out = pack_batch(&[2, 3, 2], 1, &[&a, &b]);
+        // t0: b0=[1,2] b1=[3,4] pad=[0,0]; t1: [10,20],[30,40],[0,0]
+        assert_eq!(
+            out,
+            vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 10.0, 20.0, 30.0, 40.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn unpack_discards_padding() {
+        let raw = vec![1.0, 2.0, 3.0, 4.0, 9.0, 9.0, 9.0, 9.0];
+        let rows = unpack_batch(&raw, 4, 2);
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let reqs: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32; 6]).collect();
+        let refs: Vec<&[f32]> = reqs.iter().map(|v| v.as_slice()).collect();
+        let packed = pack_batch(&[4, 6], 0, &refs);
+        let rows = unpack_batch(&packed, 4, 3);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row, &reqs[i]);
+        }
+    }
+
+    #[test]
+    fn sim_costs_cover_all_families() {
+        let costs = family_sim_costs();
+        for f in ["edge_cnn", "edge_lstm", "joint"] {
+            let c = costs.get(f).unwrap();
+            assert!(c.latency_s > 0.0);
+            assert!(c.energy_j > 0.0);
+            assert_eq!(c.accel_mix.len(), 3, "three Mensa-G accelerators");
+        }
+    }
+
+    #[test]
+    fn lstm_batch_axis_is_one() {
+        assert_eq!(batch_axis("edge_lstm"), 1);
+        assert_eq!(batch_axis("edge_cnn"), 0);
+        assert_eq!(batch_axis("joint"), 0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Per-component energy accounting — the quantity Fig. 2 and Fig. 10
+//! decompose.
+
+/// Energy (J) split by component, matching Fig. 2's categories:
+/// PE array, on-chip buffers, on-chip network, off-chip interconnect +
+/// DRAM, plus static energy integrated over the inference latency.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// MAC/PE dynamic energy.
+    pub pe_dynamic_j: f64,
+    /// On-chip buffer dynamic energy (parameter + activation buffers).
+    pub buffer_dynamic_j: f64,
+    /// PE-register-file dynamic energy.
+    pub reg_dynamic_j: f64,
+    /// On-chip network dynamic energy.
+    pub noc_dynamic_j: f64,
+    /// DRAM + off-chip interconnect dynamic energy.
+    pub dram_dynamic_j: f64,
+    /// Static energy of PE array + buffers (leakage x latency).
+    pub accel_static_j: f64,
+    /// DRAM background energy (standby/refresh x latency).
+    pub dram_static_j: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy in joules.
+    pub fn total_j(&self) -> f64 {
+        self.pe_dynamic_j
+            + self.buffer_dynamic_j
+            + self.reg_dynamic_j
+            + self.noc_dynamic_j
+            + self.dram_dynamic_j
+            + self.accel_static_j
+            + self.dram_static_j
+    }
+
+    /// Total dynamic energy.
+    pub fn dynamic_j(&self) -> f64 {
+        self.pe_dynamic_j
+            + self.buffer_dynamic_j
+            + self.reg_dynamic_j
+            + self.noc_dynamic_j
+            + self.dram_dynamic_j
+    }
+
+    /// Total static energy.
+    pub fn static_j(&self) -> f64 {
+        self.accel_static_j + self.dram_static_j
+    }
+
+    /// Fraction of total energy spent on off-chip accesses (Fig. 2's
+    /// "50.3% of its total energy on off-chip memory accesses" —
+    /// dynamic DRAM plus DRAM background).
+    pub fn offchip_fraction(&self) -> f64 {
+        let t = self.total_j();
+        if t == 0.0 {
+            return 0.0;
+        }
+        (self.dram_dynamic_j + self.dram_static_j) / t
+    }
+
+    /// Fraction of *dynamic* energy spent in on-chip buffers.
+    pub fn buffer_dynamic_fraction(&self) -> f64 {
+        let d = self.dynamic_j();
+        if d == 0.0 {
+            return 0.0;
+        }
+        self.buffer_dynamic_j / d
+    }
+
+    /// Element-wise sum.
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.pe_dynamic_j += other.pe_dynamic_j;
+        self.buffer_dynamic_j += other.buffer_dynamic_j;
+        self.reg_dynamic_j += other.reg_dynamic_j;
+        self.noc_dynamic_j += other.noc_dynamic_j;
+        self.dram_dynamic_j += other.dram_dynamic_j;
+        self.accel_static_j += other.accel_static_j;
+        self.dram_static_j += other.dram_static_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    fn sample() -> EnergyBreakdown {
+        EnergyBreakdown {
+            pe_dynamic_j: 1.0,
+            buffer_dynamic_j: 2.0,
+            reg_dynamic_j: 0.5,
+            noc_dynamic_j: 0.5,
+            dram_dynamic_j: 3.0,
+            accel_static_j: 2.0,
+            dram_static_j: 1.0,
+        }
+    }
+
+    #[test]
+    fn totals_sum_components() {
+        let e = sample();
+        assert!(approx_eq(e.total_j(), 10.0, 1e-12, 0.0));
+        assert!(approx_eq(e.dynamic_j(), 7.0, 1e-12, 0.0));
+        assert!(approx_eq(e.static_j(), 3.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn fractions() {
+        let e = sample();
+        assert!(approx_eq(e.offchip_fraction(), 0.4, 1e-12, 0.0));
+        assert!(approx_eq(e.buffer_dynamic_fraction(), 2.0 / 7.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = sample();
+        a.add(&sample());
+        assert!(approx_eq(a.total_j(), 20.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let e = EnergyBreakdown::default();
+        assert_eq!(e.offchip_fraction(), 0.0);
+        assert_eq!(e.buffer_dynamic_fraction(), 0.0);
+    }
+}

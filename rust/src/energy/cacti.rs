@@ -1,0 +1,153 @@
+//! CACTI-P-style SRAM buffer model (energy, leakage, latency vs capacity).
+//!
+//! The paper uses CACTI-P 6.5 at 22 nm (§6). CACTI itself is not
+//! available offline, so we fit the standard capacity-scaling laws to
+//! published CACTI-P 22 nm SRAM data points (from the CACTI-P paper
+//! [Li et al., ICCAD'11] and the TETRIS [20] / Eyeriss [8] energy
+//! tables, normalized to 22 nm):
+//!
+//! | capacity | read energy / access (64 B line) | leakage |
+//! |----------|----------------------------------|---------|
+//! |  32 kB   |  ~6 pJ  (0.09 pJ/B)              | ~3 mW   |
+//! |  128 kB  |  ~14 pJ (0.22 pJ/B)              | ~9 mW   |
+//! |  512 kB  |  ~34 pJ (0.53 pJ/B)              | ~28 mW  |
+//! |  2 MB    |  ~80 pJ (1.25 pJ/B)              | ~85 mW  |
+//! |  4 MB    |  ~121 pJ (1.9 pJ/B)              | ~150 mW |
+//!
+//! Both energy/access and leakage scale ~sqrt-to-linear with capacity;
+//! we use `E ∝ C^0.62` and `P_leak ∝ C^0.8`, which fit the table within
+//! ~10%. The key *qualitative* property the paper leans on (§3.2.4:
+//! "because of the large size of the buffer, every access incurs a high
+//! dynamic energy cost") is the monotone growth of per-access energy
+//! with capacity — that is what makes Mensa's 16–32x smaller buffers a
+//! win even at equal traffic.
+
+/// An SRAM buffer instance of a given capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramBuffer {
+    /// Capacity in bytes.
+    pub capacity_bytes: u64,
+}
+
+impl SramBuffer {
+    /// Create a buffer model of the given capacity (0 allowed: a
+    /// non-existent buffer consumes nothing — Pavlov has no parameter
+    /// buffer at all, §5.4).
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self { capacity_bytes }
+    }
+
+    /// Dynamic energy per byte accessed (J/B), CACTI-P 22 nm fit.
+    pub fn energy_per_byte(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            return 0.0;
+        }
+        // Anchor: 128 kB -> 0.22 pJ/B; exponent 0.62.
+        let c = self.capacity_bytes as f64 / (128.0 * 1024.0);
+        0.22e-12 * c.powf(0.62)
+    }
+
+    /// Leakage power (W), CACTI-P 22 nm fit.
+    pub fn leakage_w(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            return 0.0;
+        }
+        // Anchor: 128 kB -> 9 mW; exponent 0.8.
+        let c = self.capacity_bytes as f64 / (128.0 * 1024.0);
+        9.0e-3 * c.powf(0.8)
+    }
+
+    /// Random-access latency in nanoseconds (used for pipeline fill
+    /// costs). Grows slowly with capacity.
+    pub fn access_latency_ns(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            return 0.0;
+        }
+        let c = self.capacity_bytes as f64 / (128.0 * 1024.0);
+        0.8 * c.powf(0.3)
+    }
+
+    /// Area proxy in mm² (22 nm SRAM ~= 0.35 mm²/MB including overhead).
+    /// Only relative areas matter (the paper reports buffers = 79.4% of
+    /// Edge TPU area).
+    pub fn area_mm2(&self) -> f64 {
+        self.capacity_bytes as f64 / (1024.0 * 1024.0) * 0.35
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{approx_eq, MB};
+
+    #[test]
+    fn zero_capacity_costs_nothing() {
+        let b = SramBuffer::new(0);
+        assert_eq!(b.energy_per_byte(), 0.0);
+        assert_eq!(b.leakage_w(), 0.0);
+        assert_eq!(b.access_latency_ns(), 0.0);
+    }
+
+    #[test]
+    fn energy_per_access_grows_with_capacity() {
+        // §3.2.4's key claim: bigger buffer => costlier accesses.
+        let caps = [32, 128, 512, 2048, 4096u64];
+        let e: Vec<f64> =
+            caps.iter().map(|&k| SramBuffer::new(k * 1024).energy_per_byte()).collect();
+        for w in e.windows(2) {
+            assert!(w[1] > w[0], "energy not monotone: {e:?}");
+        }
+    }
+
+    #[test]
+    fn fits_cacti_anchor_points() {
+        // Within ~25% of the published-table anchors.
+        let cases = [
+            (32 * 1024u64, 0.09e-12),
+            (128 * 1024, 0.22e-12),
+            (512 * 1024, 0.53e-12),
+            (2 * MB, 1.25e-12),
+            (4 * MB, 1.9e-12),
+        ];
+        for (cap, want) in cases {
+            let got = SramBuffer::new(cap).energy_per_byte();
+            assert!(
+                approx_eq(got, want, 0.25, 0.0),
+                "cap={cap}: got {got:.3e} want {want:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn mensa_buffer_shrink_cuts_access_energy() {
+        // Pascal shrinks the 4 MB parameter buffer to 128 kB (32x,
+        // §5.3/§5.5): per-access energy must drop by ~5-10x.
+        let big = SramBuffer::new(4 * MB).energy_per_byte();
+        let small = SramBuffer::new(128 * 1024).energy_per_byte();
+        let ratio = big / small;
+        assert!((4.0..12.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn leakage_scales_superlinearly_in_ratio_terms() {
+        let big = SramBuffer::new(6 * MB).leakage_w();
+        let small = SramBuffer::new(384 * 1024).leakage_w();
+        // 16x capacity => ~9x leakage at exponent 0.8.
+        assert!(big / small > 5.0, "{} / {}", big, small);
+    }
+
+    #[test]
+    fn edge_tpu_buffer_leakage_magnitude() {
+        // 4 MB + 2 MB buffers should leak O(100 mW) total — a large
+        // share of an edge accelerator's static power (§3.1).
+        let total = SramBuffer::new(4 * MB).leakage_w() + SramBuffer::new(2 * MB).leakage_w();
+        assert!((0.1..0.5).contains(&total), "leakage {total} W");
+    }
+
+    #[test]
+    fn area_is_linear() {
+        let a1 = SramBuffer::new(MB).area_mm2();
+        let a4 = SramBuffer::new(4 * MB).area_mm2();
+        assert!(approx_eq(a4, 4.0 * a1, 1e-9, 0.0));
+    }
+}

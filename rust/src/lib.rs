@@ -1,0 +1,54 @@
+//! # Mensa: heterogeneous edge ML inference acceleration
+//!
+//! A from-scratch reproduction of *"Google Neural Network Models for Edge
+//! Devices: Analyzing and Mitigating Machine Learning Inference
+//! Bottlenecks"* (Boroumand et al., 2021) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Mensa coordinator: NN graph IR and a
+//!   24-model edge zoo ([`model`]), per-layer characterization and the
+//!   five-family taxonomy ([`characterize`]), accelerator hardware and
+//!   dataflow cost models ([`accel`]), a CACTI-calibrated energy model
+//!   ([`energy`]), an execution simulator ([`sim`]), the two-phase Mensa
+//!   runtime scheduler ([`scheduler`]), throughput/energy rooflines
+//!   ([`roofline`]), a PJRT artifact runtime ([`runtime`]), and a
+//!   multi-threaded serving coordinator ([`coordinator`]).
+//! * **Layer 2** — JAX model definitions (`python/compile/model.py`),
+//!   AOT-lowered to HLO text consumed by [`runtime`].
+//! * **Layer 1** — Pallas kernels implementing the Pascal / Pavlov /
+//!   Jacquard dataflows (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! models once, and the Rust binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use mensa::model::zoo;
+//! use mensa::accel::configs;
+//! use mensa::scheduler::MensaScheduler;
+//! use mensa::sim::Simulator;
+//!
+//! let model = zoo::cnn(0); // CNN1
+//! let system = configs::mensa_g();
+//! let mapping = MensaScheduler::new(&system).schedule(&model);
+//! let report = Simulator::new(&system).run(&model, &mapping);
+//! assert!(report.total_latency_s > 0.0);
+//! assert!(report.total_energy_j() > 0.0);
+//! ```
+
+pub mod accel;
+pub mod bench_harness;
+pub mod characterize;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod model;
+pub mod roofline;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

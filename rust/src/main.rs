@@ -1,0 +1,274 @@
+//! `mensa` — the command-line entry point for the Mensa reproduction.
+//!
+//! Subcommands:
+//!
+//! * `characterize [--model NAME]` — per-layer characterization and the
+//!   five-family taxonomy (Figs. 3–6 data).
+//! * `schedule [--model NAME] [--config FILE]` — show the Mensa
+//!   scheduler's layer-to-accelerator mapping.
+//! * `simulate [--model NAME] [--config FILE]` — run the simulator and
+//!   print the latency/energy/utilization report.
+//! * `bench --experiment ID | --all` — regenerate a paper table/figure
+//!   (see `bench --list`).
+//! * `serve [--artifacts DIR] [--requests N]` — start the serving
+//!   coordinator on the AOT artifacts and drive a demo workload.
+//! * `rooflines` — print the Edge TPU rooflines (Fig. 1 curves).
+
+use anyhow::{bail, Context, Result};
+use mensa::accel::configs;
+use mensa::bench_harness;
+use mensa::characterize::{classify, model_summary, LayerMetrics};
+use mensa::config::{ServerConfig, SystemSpec};
+use mensa::coordinator::Server;
+use mensa::model::zoo;
+use mensa::roofline::Roofline;
+use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::sim::Simulator;
+use mensa::util::table::{bytes, eng, pct, Table};
+use std::time::Duration;
+
+/// Minimal flag parser: `--key value` pairs plus bare `--switch`es.
+struct Args {
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), argv[i + 1].clone()));
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags, switches }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn load_system(args: &Args) -> Result<mensa::accel::MensaSystem> {
+    match args.get("config") {
+        Some(path) => Ok(SystemSpec::from_file(path)?.system),
+        None => Ok(configs::mensa_g()),
+    }
+}
+
+fn models_for(args: &Args) -> Result<Vec<mensa::model::ModelGraph>> {
+    match args.get("model") {
+        Some(name) => {
+            Ok(vec![zoo::by_name(name).with_context(|| format!("unknown model `{name}`"))?])
+        }
+        None => Ok(zoo::all()),
+    }
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    for model in models_for(args)? {
+        let s = model_summary(&model);
+        println!(
+            "\n=== {} ({} layers, {} parameterized, {} MACs, {} params) ===",
+            s.name,
+            s.layers,
+            s.param_layers,
+            eng(s.total_macs as f64),
+            bytes(s.total_param_bytes as f64)
+        );
+        let mut t = Table::new(["layer", "MACs", "params", "FLOP/B", "family"]);
+        for (layer, m) in model.layers().iter().filter(|l| !l.is_auxiliary()).zip(&s.metrics) {
+            t.row([
+                layer.name.clone(),
+                eng(m.macs_total as f64),
+                bytes(m.param_bytes as f64),
+                format!("{:.1}", m.param_flop_per_byte),
+                classify(m).name().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "variation: MACs {:.0}x, footprint {:.0}x, reuse {:.0}x",
+            s.mac_variation, s.footprint_variation, s.reuse_variation
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let system = load_system(args)?;
+    let scheduler = MensaScheduler::new(&system);
+    for model in models_for(args)? {
+        let mapping = scheduler.schedule(&model);
+        let hist = mapping.histogram(system.len());
+        println!("\n=== {} on {} ===", model.name, system.name);
+        let mut t = Table::new(["layer", "family", "accelerator"]);
+        for (id, layer) in model.iter() {
+            t.row([
+                layer.name.clone(),
+                classify(&LayerMetrics::of(layer)).name().to_string(),
+                system.accels[mapping.accel_of(id)].name.clone(),
+            ]);
+        }
+        println!("{}", t.render());
+        let counts: Vec<String> = system
+            .accels
+            .iter()
+            .zip(&hist)
+            .map(|(a, c)| format!("{}={c}", a.name))
+            .collect();
+        println!("layers: {} | switches: {}", counts.join(" "), mapping.switch_count());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let system = load_system(args)?;
+    let scheduler = MensaScheduler::new(&system);
+    let sim = Simulator::new(&system);
+    let mut t = Table::new([
+        "model",
+        "latency",
+        "throughput",
+        "energy",
+        "TFLOP/J",
+        "utilization",
+        "transfers",
+    ]);
+    for model in models_for(args)? {
+        let mapping = if system.len() == 1 {
+            Mapping::uniform(model.len(), 0)
+        } else {
+            scheduler.schedule(&model)
+        };
+        let r = sim.run(&model, &mapping);
+        t.row([
+            model.name.clone(),
+            format!("{:.3} ms", r.total_latency_s * 1e3),
+            format!("{}FLOP/s", eng(r.throughput_flops())),
+            format!("{:.3} mJ", r.total_energy_j() * 1e3),
+            format!("{:.3}", r.flops_per_joule() / 1e12),
+            pct(r.avg_utilization()),
+            r.transfer_count.to_string(),
+        ]);
+    }
+    println!("system: {}", system.name);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has("list") {
+        for id in bench_harness::EXPERIMENTS {
+            println!("{id}");
+        }
+        return Ok(());
+    }
+    if args.has("all") {
+        println!("{}", bench_harness::run_all());
+        return Ok(());
+    }
+    let id = args.get("experiment").context("need --experiment ID, --all, or --list")?;
+    println!("{}", bench_harness::run_experiment(id)?);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let n: usize = args.get("requests").unwrap_or("32").parse()?;
+    let cfg = match args.get("config") {
+        Some(path) => ServerConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => ServerConfig::default(),
+    };
+    println!(
+        "starting server over {dir} (max_batch={}, timeout={}us)",
+        cfg.max_batch, cfg.batch_timeout_us
+    );
+    let server = Server::start(&dir, cfg)?;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let input: Vec<f32> =
+            (0..32 * 32 * 3).map(|j| ((i * 7 + j) % 19) as f32 / 19.0).collect();
+        match server.infer("edge_cnn", vec![input]) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("request {i} rejected: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv_timeout(Duration::from_secs(60)).map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let snap = server.metrics();
+    println!(
+        "completed {ok}/{n} | p50 {:.0}us p99 {:.0}us | mean batch {:.2} | \
+         modeled Mensa-G energy {:.3} mJ/request",
+        snap.p50_us,
+        snap.p99_us,
+        snap.mean_batch,
+        snap.sim_energy_j / snap.completed.max(1) as f64 * 1e3
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_rooflines() -> Result<()> {
+    let base = configs::edge_tpu_baseline();
+    let roof = Roofline::of(&base);
+    println!("Edge TPU rooflines (Fig. 1)");
+    println!(
+        "peak {}FLOP/s | ridge {:.1} FLOP/B | max efficiency {}FLOP/J",
+        eng(roof.peak_flops),
+        roof.ridge_intensity(),
+        eng(roof.max_flops_per_joule())
+    );
+    let mut t = Table::new(["intensity FLOP/B", "attainable FLOP/s", "attainable FLOP/J"]);
+    for i in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 1024.0] {
+        t.row([
+            format!("{i}"),
+            eng(roof.attainable_flops(i)),
+            eng(roof.attainable_flops_per_joule(i)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mensa <characterize|schedule|simulate|bench|serve|rooflines> [flags]\n\
+         flags: --model NAME --config FILE --experiment ID --all --list\n\
+                --artifacts DIR --requests N"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "characterize" => cmd_characterize(&args),
+        "schedule" => cmd_schedule(&args),
+        "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "rooflines" => cmd_rooflines(),
+        other => bail!("unknown command `{other}`"),
+    }
+}

@@ -1,0 +1,296 @@
+//! Model graph: layers plus the communication DAG between them.
+//!
+//! The graph is stored in topological order by construction (every edge
+//! points from a lower index to a higher index), which is what both the
+//! Mensa scheduler's sequential Phase II walk (§4.2) and the simulator's
+//! phase loop rely on. Skip connections (§5.6: CNN5–7 "include a large
+//! number of skip connections") are simply edges with `src + 1 < dst`.
+
+use super::layer::{Layer, LayerKind};
+
+/// Index of a layer within its model graph.
+pub type LayerId = usize;
+
+/// Which of the four model classes of §3 a model belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Convolutional neural network.
+    Cnn,
+    /// Long short-term memory network.
+    Lstm,
+    /// RNN-T style transducer (encoder + prediction + joint).
+    Transducer,
+    /// Recurrent CNN (LRCN: CNN front-end + LSTM back-end).
+    Rcnn,
+}
+
+impl ModelKind {
+    /// Display name matching the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Cnn => "CNN",
+            ModelKind::Lstm => "LSTM",
+            ModelKind::Transducer => "Transducer",
+            ModelKind::Rcnn => "RCNN",
+        }
+    }
+
+    /// `true` for the LSTM-dominated classes the paper groups together
+    /// ("LSTMs and Transducers").
+    pub fn is_sequence_class(&self) -> bool {
+        matches!(self, ModelKind::Lstm | ModelKind::Transducer)
+    }
+}
+
+/// A complete NN model: named, classed, and topologically ordered.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    /// Model name as used in the paper's figures (e.g. `CNN5`).
+    pub name: String,
+    /// Model class.
+    pub kind: ModelKind,
+    layers: Vec<Layer>,
+    /// `preds[i]` lists the producers whose outputs layer `i` consumes.
+    preds: Vec<Vec<LayerId>>,
+}
+
+impl ModelGraph {
+    /// Create an empty model.
+    pub fn new(name: impl Into<String>, kind: ModelKind) -> Self {
+        Self { name: name.into(), kind, layers: Vec::new(), preds: Vec::new() }
+    }
+
+    /// Append a layer depending on the given predecessors. Returns its id.
+    ///
+    /// # Panics
+    /// Panics if any predecessor id is not strictly smaller than the new
+    /// layer's id (the graph must stay topologically ordered / acyclic).
+    pub fn add(&mut self, layer: Layer, preds: Vec<LayerId>) -> LayerId {
+        let id = self.layers.len();
+        for &p in &preds {
+            assert!(p < id, "edge {p} -> {id} violates topological order");
+        }
+        self.layers.push(layer);
+        self.preds.push(preds);
+        id
+    }
+
+    /// Append a layer depending on the previous layer (or nothing if
+    /// first). The common sequential-model case.
+    pub fn add_seq(&mut self, layer: Layer) -> LayerId {
+        let preds = if self.layers.is_empty() { vec![] } else { vec![self.layers.len() - 1] };
+        self.add(layer, preds)
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// `true` if the model has no layers.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Immutable layer access.
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    /// All layers in topological order.
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Predecessors of a layer.
+    pub fn preds(&self, id: LayerId) -> &[LayerId] {
+        &self.preds[id]
+    }
+
+    /// Iterate `(id, layer)` pairs in topological order.
+    pub fn iter(&self) -> impl Iterator<Item = (LayerId, &Layer)> {
+        self.layers.iter().enumerate()
+    }
+
+    /// Total parameter footprint of the model in bytes.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.param_bytes()).sum()
+    }
+
+    /// Total MAC count for one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total FLOPs (2 per MAC) for one inference.
+    pub fn total_flops(&self) -> f64 {
+        2.0 * self.total_macs() as f64
+    }
+
+    /// Number of skip-connection edges (edges bypassing >= 1 layer).
+    pub fn skip_edge_count(&self) -> usize {
+        self.preds
+            .iter()
+            .enumerate()
+            .map(|(dst, ps)| ps.iter().filter(|&&src| src + 1 < dst).count())
+            .sum()
+    }
+
+    /// Group the per-gate LSTM nodes back into whole LSTM layers:
+    /// returns, for every group id, the ids of its member nodes.
+    /// Fig. 3 (right) reports footprints at this granularity.
+    pub fn lstm_groups(&self) -> Vec<(u32, Vec<LayerId>)> {
+        let mut groups: Vec<(u32, Vec<LayerId>)> = Vec::new();
+        for (id, layer) in self.iter() {
+            if let Some(g) = layer.group {
+                match groups.iter_mut().find(|(gid, _)| *gid == g) {
+                    Some((_, members)) => members.push(id),
+                    None => groups.push((g, vec![id])),
+                }
+            }
+        }
+        groups
+    }
+
+    /// Structural validation: shapes of consecutive layers must be
+    /// compatible (producer output bytes == consumer input share), every
+    /// non-root layer must have a predecessor, and LSTM groups must have
+    /// exactly 4 gates + 1 update. Returns a list of violations.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        for (id, layer) in self.iter() {
+            // A layer with no predecessors reads the model input — legal
+            // for compute layers (e.g. the first LSTM layer's gates, a
+            // transducer's separate encoder/prediction inputs), but an
+            // auxiliary combine node (add/pool/update) with nothing to
+            // combine is a wiring bug.
+            if id > 0 && self.preds[id].is_empty() && layer.is_auxiliary() {
+                errs.push(format!("layer {id} ({}) is unreachable", layer.name));
+            }
+        }
+        for (gid, members) in self.lstm_groups() {
+            let gates = members
+                .iter()
+                .filter(|&&m| matches!(self.layers[m].kind, LayerKind::LstmGate { .. }))
+                .count();
+            let updates = members
+                .iter()
+                .filter(|&&m| matches!(self.layers[m].kind, LayerKind::LstmUpdate { .. }))
+                .count();
+            if gates != 4 || updates != 1 {
+                errs.push(format!(
+                    "lstm group {gid}: expected 4 gates + 1 update, found {gates} + {updates}"
+                ));
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::{Gate, LayerKind};
+
+    fn tiny_cnn() -> ModelGraph {
+        let mut m = ModelGraph::new("tiny", ModelKind::Cnn);
+        m.add_seq(Layer::new(
+            "conv0",
+            LayerKind::Conv2d { in_h: 28, in_w: 28, in_c: 3, out_c: 8, k: 3, stride: 1 },
+        ));
+        m.add_seq(Layer::new(
+            "pw1",
+            LayerKind::Pointwise { in_h: 28, in_w: 28, in_c: 8, out_c: 16 },
+        ));
+        m.add_seq(Layer::new("fc", LayerKind::FullyConnected { in_dim: 28 * 28 * 16, out_dim: 10 }));
+        m
+    }
+
+    #[test]
+    fn sequential_edges() {
+        let m = tiny_cnn();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.preds(0), &[] as &[usize]);
+        assert_eq!(m.preds(1), &[0]);
+        assert_eq!(m.preds(2), &[1]);
+        assert_eq!(m.skip_edge_count(), 0);
+        assert!(m.validate().is_empty());
+    }
+
+    #[test]
+    fn skip_connection_counted() {
+        let mut m = tiny_cnn();
+        let last = m.len() - 1;
+        m.add(
+            Layer::new("skip_add", LayerKind::ResidualAdd { elems: 10 }),
+            vec![0, last], // edge 0 -> 3 skips layers 1,2
+        );
+        assert_eq!(m.skip_edge_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "topological order")]
+    fn forward_edge_rejected() {
+        let mut m = tiny_cnn();
+        m.add(Layer::new("bad", LayerKind::ResidualAdd { elems: 1 }), vec![99]);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let m = tiny_cnn();
+        let macs: u64 = m.layers().iter().map(|l| l.macs()).sum();
+        assert_eq!(m.total_macs(), macs);
+        assert_eq!(m.total_flops(), 2.0 * macs as f64);
+        assert!(m.total_param_bytes() > 0);
+    }
+
+    #[test]
+    fn lstm_group_validation_catches_missing_gate() {
+        let mut m = ModelGraph::new("l", ModelKind::Lstm);
+        // Only 2 gates, no update: invalid group.
+        for gate in [Gate::Input, Gate::Forget] {
+            m.add_seq(Layer::grouped(
+                "g",
+                LayerKind::LstmGate { input_dim: 8, hidden_dim: 8, timesteps: 2, gate },
+                0,
+            ));
+        }
+        let errs = m.validate();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("expected 4 gates"));
+    }
+
+    #[test]
+    fn lstm_groups_collect_members() {
+        let mut m = ModelGraph::new("l", ModelKind::Lstm);
+        for gate in Gate::ALL {
+            m.add_seq(Layer::grouped(
+                format!("gate_{}", gate.short()),
+                LayerKind::LstmGate { input_dim: 8, hidden_dim: 8, timesteps: 2, gate },
+                7,
+            ));
+        }
+        m.add_seq(Layer::grouped("upd", LayerKind::LstmUpdate { hidden_dim: 8, timesteps: 2 }, 7));
+        let groups = m.lstm_groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].0, 7);
+        assert_eq!(groups[0].1.len(), 5);
+        assert!(m.validate().is_empty());
+    }
+
+    #[test]
+    fn unreachable_layer_detected() {
+        let mut m = tiny_cnn();
+        m.add(Layer::new("orphan", LayerKind::ResidualAdd { elems: 1 }), vec![]);
+        let errs = m.validate();
+        assert!(errs.iter().any(|e| e.contains("unreachable")));
+    }
+
+    #[test]
+    fn model_kind_names() {
+        assert_eq!(ModelKind::Cnn.name(), "CNN");
+        assert!(ModelKind::Lstm.is_sequence_class());
+        assert!(ModelKind::Transducer.is_sequence_class());
+        assert!(!ModelKind::Rcnn.is_sequence_class());
+    }
+}

@@ -1,0 +1,482 @@
+//! Layer definitions and derived structural metrics.
+//!
+//! A [`Layer`] is the scheduling unit of the Mensa runtime. Following the
+//! paper's treatment of recurrent models (§3.2.1: the Edge TPU "treats
+//! each gate as two fully-connected layers"), LSTM layers appear in the
+//! graph at *gate* granularity (four [`LayerKind::LstmGate`] nodes plus
+//! one [`LayerKind::LstmUpdate`] elementwise node per LSTM layer), tied
+//! together by a group id. This is the granularity at which Fig. 3 and
+//! the five-family taxonomy of §5.1 are defined.
+//!
+//! All parameter/activation sizes are in **bytes**, with the 8-bit
+//! quantization of §6 making bytes == element counts.
+
+use crate::util::ceil_div;
+
+/// Which of the four LSTM gates a gate node implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Input gate `i`.
+    Input,
+    /// Input modulation gate `g` (a.k.a. cell/candidate gate).
+    Modulation,
+    /// Forget gate `f`.
+    Forget,
+    /// Output gate `o`.
+    Output,
+}
+
+impl Gate {
+    /// All four gates, in canonical order.
+    pub const ALL: [Gate; 4] = [Gate::Input, Gate::Modulation, Gate::Forget, Gate::Output];
+
+    /// Short display name.
+    pub fn short(&self) -> &'static str {
+        match self {
+            Gate::Input => "i",
+            Gate::Modulation => "g",
+            Gate::Forget => "f",
+            Gate::Output => "o",
+        }
+    }
+}
+
+/// Structural description of one layer (scheduling unit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard 2D convolution (square kernel, same padding).
+    Conv2d {
+        /// Input feature-map height.
+        in_h: u32,
+        /// Input feature-map width.
+        in_w: u32,
+        /// Input channel depth.
+        in_c: u32,
+        /// Output channel depth (number of filters).
+        out_c: u32,
+        /// Kernel side length.
+        k: u32,
+        /// Stride (applied to both dims).
+        stride: u32,
+    },
+    /// Depthwise convolution: one filter per channel, no cross-channel
+    /// accumulation — hence no input-activation reuse (§3.2.2).
+    Depthwise {
+        /// Input feature-map height.
+        in_h: u32,
+        /// Input feature-map width.
+        in_w: u32,
+        /// Channel count (input == output).
+        channels: u32,
+        /// Kernel side length.
+        k: u32,
+        /// Stride.
+        stride: u32,
+    },
+    /// Pointwise (1x1) convolution: convolves `1xK` filters across
+    /// channels, reusing the same input activations per channel.
+    Pointwise {
+        /// Feature-map height.
+        in_h: u32,
+        /// Feature-map width.
+        in_w: u32,
+        /// Input channel depth.
+        in_c: u32,
+        /// Output channel depth.
+        out_c: u32,
+    },
+    /// Fully-connected layer (one MVM).
+    FullyConnected {
+        /// Input dimension.
+        in_dim: u32,
+        /// Output dimension.
+        out_dim: u32,
+    },
+    /// One LSTM gate: the input MVM (`W_x · x_t`) plus the hidden MVM
+    /// (`W_h · h_{t-1}`), executed once per timestep for `timesteps`
+    /// steps.
+    LstmGate {
+        /// Input (x) dimension, i.e. rows of `W_x`.
+        input_dim: u32,
+        /// Hidden dimension, i.e. rows of `W_h` and output size.
+        hidden_dim: u32,
+        /// Sequence length the gate runs over.
+        timesteps: u32,
+        /// Which gate this is.
+        gate: Gate,
+    },
+    /// The elementwise LSTM cell-state update combining the four gate
+    /// outputs into `c_t`/`h_t` (sigmoid/tanh products). Parameter-free.
+    LstmUpdate {
+        /// Hidden dimension.
+        hidden_dim: u32,
+        /// Sequence length.
+        timesteps: u32,
+    },
+    /// Max/avg pooling (parameter-free).
+    Pool {
+        /// Input feature-map height.
+        in_h: u32,
+        /// Input feature-map width.
+        in_w: u32,
+        /// Channels.
+        channels: u32,
+        /// Pooling window and stride (square, non-overlapping).
+        k: u32,
+    },
+    /// Elementwise residual add merging a skip connection
+    /// (parameter-free).
+    ResidualAdd {
+        /// Elements per operand.
+        elems: u32,
+    },
+}
+
+/// One layer instance within a model graph.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Human-readable name, e.g. `conv0`, `block3/dw`, `lstm1/gate_f`.
+    pub name: String,
+    /// Structural parameters.
+    pub kind: LayerKind,
+    /// Group id tying the 4 gates + update of one LSTM layer together
+    /// (used by Fig. 3's per-layer footprint and by Pavlov's
+    /// gate-batched dataflow).
+    pub group: Option<u32>,
+}
+
+impl Layer {
+    /// Construct a layer.
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Self { name: name.into(), kind, group: None }
+    }
+
+    /// Construct a grouped layer (LSTM gates/update).
+    pub fn grouped(name: impl Into<String>, kind: LayerKind, group: u32) -> Self {
+        Self { name: name.into(), kind, group: Some(group) }
+    }
+
+    /// Output spatial height for convolutional kinds.
+    fn out_hw(in_h: u32, in_w: u32, stride: u32) -> (u64, u64) {
+        (ceil_div(in_h as u64, stride as u64), ceil_div(in_w as u64, stride as u64))
+    }
+
+    /// Total multiply-accumulate operations for one full inference
+    /// (recurrent layers: summed over all timesteps).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_h, in_w, in_c, out_c, k, stride } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, stride);
+                oh * ow * out_c as u64 * in_c as u64 * (k as u64 * k as u64)
+            }
+            LayerKind::Depthwise { in_h, in_w, channels, k, stride } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, stride);
+                oh * ow * channels as u64 * (k as u64 * k as u64)
+            }
+            LayerKind::Pointwise { in_h, in_w, in_c, out_c } => {
+                in_h as u64 * in_w as u64 * in_c as u64 * out_c as u64
+            }
+            LayerKind::FullyConnected { in_dim, out_dim } => in_dim as u64 * out_dim as u64,
+            LayerKind::LstmGate { input_dim, hidden_dim, timesteps, .. } => {
+                timesteps as u64 * (input_dim as u64 + hidden_dim as u64) * hidden_dim as u64
+            }
+            // c_t = f*c + i*g; h_t = o*tanh(c_t): ~3 elementwise mults.
+            LayerKind::LstmUpdate { hidden_dim, timesteps } => {
+                3 * hidden_dim as u64 * timesteps as u64
+            }
+            // Pooling is comparison/accumulate, counted as one op per
+            // window element.
+            LayerKind::Pool { in_h, in_w, channels, k } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, k);
+                oh * ow * channels as u64 * (k as u64 * k as u64)
+            }
+            LayerKind::ResidualAdd { elems } => elems as u64,
+        }
+    }
+
+    /// MACs per scheduled invocation. Recurrent gates are invoked once
+    /// per timestep on the baseline (§3.2.1), so their per-invocation
+    /// intensity is `macs / timesteps`; everything else runs in one
+    /// invocation. This is the "MAC intensity" axis of §5.1.
+    pub fn macs_per_invocation(&self) -> u64 {
+        match self.kind {
+            LayerKind::LstmGate { timesteps, .. } | LayerKind::LstmUpdate { timesteps, .. } => {
+                self.macs() / timesteps.max(1) as u64
+            }
+            _ => self.macs(),
+        }
+    }
+
+    /// Number of sequential invocations (timesteps for recurrent nodes).
+    pub fn invocations(&self) -> u64 {
+        match self.kind {
+            LayerKind::LstmGate { timesteps, .. } | LayerKind::LstmUpdate { timesteps, .. } => {
+                timesteps as u64
+            }
+            _ => 1,
+        }
+    }
+
+    /// Parameter footprint in bytes (8-bit quantized; includes biases).
+    pub fn param_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_c, out_c, k, .. } => {
+                in_c as u64 * out_c as u64 * (k as u64 * k as u64) + out_c as u64
+            }
+            LayerKind::Depthwise { channels, k, .. } => {
+                channels as u64 * (k as u64 * k as u64) + channels as u64
+            }
+            LayerKind::Pointwise { in_c, out_c, .. } => in_c as u64 * out_c as u64 + out_c as u64,
+            LayerKind::FullyConnected { in_dim, out_dim } => {
+                in_dim as u64 * out_dim as u64 + out_dim as u64
+            }
+            LayerKind::LstmGate { input_dim, hidden_dim, .. } => {
+                // W_x (input MVM) + W_h (hidden MVM) + bias.
+                (input_dim as u64 + hidden_dim as u64) * hidden_dim as u64 + hidden_dim as u64
+            }
+            LayerKind::LstmUpdate { .. } | LayerKind::Pool { .. } | LayerKind::ResidualAdd { .. } => 0,
+        }
+    }
+
+    /// Input activation footprint in bytes for one full inference.
+    pub fn input_act_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_h, in_w, in_c, .. } => in_h as u64 * in_w as u64 * in_c as u64,
+            LayerKind::Depthwise { in_h, in_w, channels, .. }
+            | LayerKind::Pool { in_h, in_w, channels, .. } => {
+                in_h as u64 * in_w as u64 * channels as u64
+            }
+            LayerKind::Pointwise { in_h, in_w, in_c, .. } => {
+                in_h as u64 * in_w as u64 * in_c as u64
+            }
+            LayerKind::FullyConnected { in_dim, .. } => in_dim as u64,
+            LayerKind::LstmGate { input_dim, hidden_dim, timesteps, .. } => {
+                // x_t plus h_{t-1}, per timestep.
+                (input_dim as u64 + hidden_dim as u64) * timesteps as u64
+            }
+            LayerKind::LstmUpdate { hidden_dim, timesteps } => {
+                // Four gate outputs per step.
+                4 * hidden_dim as u64 * timesteps as u64
+            }
+            LayerKind::ResidualAdd { elems } => 2 * elems as u64,
+        }
+    }
+
+    /// Output activation footprint in bytes for one full inference.
+    pub fn output_act_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv2d { in_h, in_w, out_c, stride, .. } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, stride);
+                oh * ow * out_c as u64
+            }
+            LayerKind::Depthwise { in_h, in_w, channels, stride, .. } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, stride);
+                oh * ow * channels as u64
+            }
+            LayerKind::Pointwise { in_h, in_w, out_c, .. } => {
+                in_h as u64 * in_w as u64 * out_c as u64
+            }
+            LayerKind::FullyConnected { out_dim, .. } => out_dim as u64,
+            LayerKind::LstmGate { hidden_dim, timesteps, .. } => {
+                hidden_dim as u64 * timesteps as u64
+            }
+            LayerKind::LstmUpdate { hidden_dim, timesteps } => {
+                // h_t and c_t.
+                2 * hidden_dim as u64 * timesteps as u64
+            }
+            LayerKind::Pool { in_h, in_w, channels, k } => {
+                let (oh, ow) = Self::out_hw(in_h, in_w, k);
+                oh * ow * channels as u64
+            }
+            LayerKind::ResidualAdd { elems } => elems as u64,
+        }
+    }
+
+    /// Parameter reuse in FLOP per parameter byte *as streamed on a
+    /// monolithic accelerator*: recurrent gates re-fetch their matrices
+    /// every timestep (§3.2.1: "accesses them once … then does not touch
+    /// the parameters again until the next LSTM cell computation,
+    /// resulting in no reuse"), pinning their FLOP/B at 1. This is the
+    /// reuse axis of Fig. 3/Fig. 6.
+    pub fn param_flop_per_byte(&self) -> f64 {
+        let pb = self.param_bytes();
+        if pb == 0 {
+            return 0.0;
+        }
+        self.macs_per_invocation() as f64 / pb as f64 * self.invocations() as f64
+            / self.param_stream_passes() as f64
+    }
+
+    /// How many times the full parameter set streams through the
+    /// accelerator on a monolithic design: once per timestep for
+    /// recurrent gates, once otherwise.
+    pub fn param_stream_passes(&self) -> u64 {
+        self.invocations()
+    }
+
+    /// Activation reuse: MACs per activation byte touched. Depthwise
+    /// layers sit at ~k² (no cross-channel reuse); pointwise layers at
+    /// ~channel depth (§3.2.2).
+    pub fn act_flop_per_byte(&self) -> f64 {
+        let ab = self.input_act_bytes() + self.output_act_bytes();
+        if ab == 0 {
+            return 0.0;
+        }
+        self.macs() as f64 / ab as f64
+    }
+
+    /// `true` for recurrent (LSTM-family) nodes.
+    pub fn is_recurrent(&self) -> bool {
+        matches!(self.kind, LayerKind::LstmGate { .. } | LayerKind::LstmUpdate { .. })
+    }
+
+    /// `true` for parameter-free helper nodes (pool/residual/update),
+    /// which the taxonomy of §5.1 does not count among the five
+    /// families.
+    pub fn is_auxiliary(&self) -> bool {
+        self.param_bytes() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    fn conv(in_h: u32, in_c: u32, out_c: u32, k: u32, stride: u32) -> Layer {
+        Layer::new("c", LayerKind::Conv2d { in_h, in_w: in_h, in_c, out_c, k, stride })
+    }
+
+    #[test]
+    fn conv2d_macs_and_params() {
+        // 56x56x64 -> 56x56x64, 3x3: 56*56*64*64*9 MACs.
+        let l = conv(56, 64, 64, 3, 1);
+        assert_eq!(l.macs(), 56 * 56 * 64 * 64 * 9);
+        assert_eq!(l.param_bytes(), 64 * 64 * 9 + 64);
+        assert_eq!(l.output_act_bytes(), 56 * 56 * 64);
+    }
+
+    #[test]
+    fn conv2d_stride_downsamples_output() {
+        let l = conv(56, 64, 64, 3, 2);
+        assert_eq!(l.output_act_bytes(), 28 * 28 * 64);
+        assert_eq!(l.macs(), 28 * 28 * 64 * 64 * 9);
+    }
+
+    #[test]
+    fn depthwise_has_no_cross_channel_macs() {
+        let l = Layer::new(
+            "dw",
+            LayerKind::Depthwise { in_h: 14, in_w: 14, channels: 256, k: 3, stride: 1 },
+        );
+        assert_eq!(l.macs(), 14 * 14 * 256 * 9);
+        assert_eq!(l.param_bytes(), 256 * 9 + 256);
+        // Activation reuse is low: ~k^2/2 per byte.
+        assert!(l.act_flop_per_byte() < 5.0, "dw act reuse {}", l.act_flop_per_byte());
+    }
+
+    #[test]
+    fn pointwise_reuse_equals_spatial_size() {
+        let l = Layer::new("pw", LayerKind::Pointwise { in_h: 14, in_w: 14, in_c: 256, out_c: 512 });
+        assert_eq!(l.macs(), 14 * 14 * 256 * 512);
+        // FLOP/B ~= spatial size (196), the F2 regime of §5.1.
+        let r = l.param_flop_per_byte();
+        assert!((150.0..200.0).contains(&r), "pw reuse {r}");
+    }
+
+    #[test]
+    fn fc_param_reuse_is_one() {
+        let l = Layer::new("fc", LayerKind::FullyConnected { in_dim: 1024, out_dim: 1000 });
+        let r = l.param_flop_per_byte();
+        assert!(approx_eq(r, 1.0, 0.01, 0.0), "fc reuse {r}");
+    }
+
+    #[test]
+    fn lstm_gate_reuse_is_one_regardless_of_timesteps() {
+        // §3.2.1: "the FLOP/B for parameters ... is one".
+        for t in [1u32, 16, 64, 256] {
+            let g = Layer::new(
+                "g",
+                LayerKind::LstmGate {
+                    input_dim: 1024,
+                    hidden_dim: 1024,
+                    timesteps: t,
+                    gate: Gate::Forget,
+                },
+            );
+            let r = g.param_flop_per_byte();
+            assert!(approx_eq(r, 1.0, 0.01, 0.0), "t={t} reuse {r}");
+        }
+    }
+
+    #[test]
+    fn lstm_gate_footprint_matches_paper_average() {
+        // §3.2.1: each gate averages ~2.1M parameters. A 1024/1024 gate
+        // has (1024+1024)*1024 ~= 2.1M.
+        let g = Layer::new(
+            "g",
+            LayerKind::LstmGate {
+                input_dim: 1024,
+                hidden_dim: 1024,
+                timesteps: 8,
+                gate: Gate::Input,
+            },
+        );
+        let params = g.param_bytes() as f64;
+        assert!((2.0e6..2.2e6).contains(&params), "gate params {params}");
+    }
+
+    #[test]
+    fn lstm_gate_total_macs_scale_with_timesteps() {
+        let mk = |t| {
+            Layer::new(
+                "g",
+                LayerKind::LstmGate {
+                    input_dim: 512,
+                    hidden_dim: 512,
+                    timesteps: t,
+                    gate: Gate::Output,
+                },
+            )
+        };
+        assert_eq!(mk(10).macs(), 10 * mk(1).macs());
+        assert_eq!(mk(10).macs_per_invocation(), mk(1).macs_per_invocation());
+        assert_eq!(mk(10).invocations(), 10);
+    }
+
+    #[test]
+    fn auxiliary_layers_have_no_params() {
+        let pool = Layer::new("p", LayerKind::Pool { in_h: 7, in_w: 7, channels: 1024, k: 7 });
+        let add = Layer::new("r", LayerKind::ResidualAdd { elems: 14 * 14 * 256 });
+        let upd = Layer::new("u", LayerKind::LstmUpdate { hidden_dim: 512, timesteps: 16 });
+        for l in [&pool, &add, &upd] {
+            assert!(l.is_auxiliary());
+            assert_eq!(l.param_bytes(), 0);
+            assert_eq!(l.param_flop_per_byte(), 0.0);
+        }
+        assert!(upd.is_recurrent());
+        assert!(!pool.is_recurrent());
+    }
+
+    #[test]
+    fn pool_downsamples() {
+        let pool = Layer::new("p", LayerKind::Pool { in_h: 14, in_w: 14, channels: 64, k: 2 });
+        assert_eq!(pool.output_act_bytes(), 7 * 7 * 64);
+    }
+
+    #[test]
+    fn residual_reads_two_operands() {
+        let add = Layer::new("r", LayerKind::ResidualAdd { elems: 100 });
+        assert_eq!(add.input_act_bytes(), 200);
+        assert_eq!(add.output_act_bytes(), 100);
+    }
+
+    #[test]
+    fn gate_short_names_unique() {
+        let names: Vec<&str> = Gate::ALL.iter().map(|g| g.short()).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+}

@@ -1,0 +1,21 @@
+//! Neural-network model intermediate representation.
+//!
+//! The Mensa scheduler and simulator operate on NN models at the
+//! granularity the paper uses: a directed acyclic graph of *layers*
+//! (§4.2: "the NN model, including a directed acyclic graph that
+//! represents communication across model layers"). Each layer carries
+//! its structural parameters (shape, kernel size, …), from which
+//! [`characterize`](crate::characterize) derives the metrics the paper's
+//! taxonomy is built on (MACs, parameter footprint, FLOP/B, activation
+//! footprints).
+//!
+//! All models are fully 8-bit quantized (§6: "fully 8-bit quantized
+//! using quantization-aware training"), so one parameter = one byte and
+//! one activation element = one byte throughout.
+
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::{LayerId, ModelGraph, ModelKind};
+pub use layer::{Layer, LayerKind};

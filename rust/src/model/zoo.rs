@@ -1,0 +1,645 @@
+//! The 24-model Google edge zoo.
+//!
+//! The paper characterizes 24 proprietary Google edge models (13 CNNs,
+//! plus LSTMs, Transducers and RCNNs; §3, §6). Those models are not
+//! releasable, so — per the reproduction's substitution rule — this
+//! module synthesizes 24 models whose *per-layer statistics* match every
+//! distribution the paper reports:
+//!
+//! * layer MAC counts spanning 0.1M–200M with ~200x intra-model
+//!   variation (Fig. 4),
+//! * parameter footprints 1 kB–18 MB with ~20x intra-model variation
+//!   (Fig. 5),
+//! * FLOP/B from 1 (LSTM gates) to ~20k (early convs), a 244x spread
+//!   across CNN layers (Fig. 3),
+//! * LSTM gates averaging ~2.1M parameters, layer footprints up to
+//!   tens of MB (Fig. 3),
+//! * ≥97% of parameterized layers falling into the five families of
+//!   §5.1,
+//! * skip-connection-heavy CNN5–CNN7 (§5.6),
+//! * depthwise-heavy CNN10–CNN13 (§7.2).
+//!
+//! Models are generated deterministically (seeded by model index), so
+//! every figure regenerated from this zoo is reproducible run-to-run.
+
+use super::graph::{LayerId, ModelGraph, ModelKind};
+use super::layer::{Gate, Layer, LayerKind};
+use crate::util::rng::Rng;
+
+/// Number of models in the zoo (matching the paper's 24).
+pub const ZOO_SIZE: usize = 24;
+/// Number of CNN models.
+pub const NUM_CNN: usize = 13;
+/// Number of LSTM models.
+pub const NUM_LSTM: usize = 4;
+/// Number of Transducer models.
+pub const NUM_TRANSDUCER: usize = 4;
+/// Number of RCNN models.
+pub const NUM_RCNN: usize = 3;
+
+/// Build the full 24-model zoo in the paper's order
+/// (CNN1–13, LSTM1–4, Transducer1–4, RCNN1–3).
+pub fn all() -> Vec<ModelGraph> {
+    let mut models = Vec::with_capacity(ZOO_SIZE);
+    for i in 0..NUM_CNN {
+        models.push(cnn(i));
+    }
+    for i in 0..NUM_LSTM {
+        models.push(lstm(i));
+    }
+    for i in 0..NUM_TRANSDUCER {
+        models.push(transducer(i));
+    }
+    for i in 0..NUM_RCNN {
+        models.push(rcnn(i));
+    }
+    models
+}
+
+/// Look up a zoo model by its paper name (e.g. `CNN5`, `LSTM2`).
+pub fn by_name(name: &str) -> Option<ModelGraph> {
+    all().into_iter().find(|m| m.name == name)
+}
+
+// ---------------------------------------------------------------------
+// CNNs
+// ---------------------------------------------------------------------
+
+/// CNN architecture style, controlling the block structure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CnnStyle {
+    /// MobileNetV1-like: [depthwise, pointwise] chains.
+    SeparableV1,
+    /// MobileNetV2-like: inverted residuals (expand-pw, dw, project-pw,
+    /// skip add) — produces the skip-heavy CNN5–7.
+    InvertedResidual,
+    /// Detection-style: separable backbone + standard-conv feature heads
+    /// (deep, small-spatial convs landing in Family 4).
+    Detection,
+    /// Depthwise-heavy compact models (CNN10–13 in §7.2).
+    DepthwiseHeavy,
+}
+
+/// Build CNN `i` (0-based; the paper's `CNN{i+1}`).
+///
+/// # Panics
+/// Panics if `i >= NUM_CNN`.
+pub fn cnn(i: usize) -> ModelGraph {
+    assert!(i < NUM_CNN, "cnn index {i} out of range");
+    let style = match i {
+        0..=3 => CnnStyle::SeparableV1,
+        4..=6 => CnnStyle::InvertedResidual,
+        7..=8 => CnnStyle::Detection,
+        _ => CnnStyle::DepthwiseHeavy,
+    };
+    let mut rng = Rng::new(0xC00 + i as u64);
+    // Width multiplier in [0.75, 1.25] quantized to steps of 1/8 —
+    // distinct models of the same style differ in width and depth.
+    let width = 0.75 + 0.0625 * rng.range_u64(0, 8) as f64;
+    let mut m = ModelGraph::new(format!("CNN{}", i + 1), ModelKind::Cnn);
+    build_cnn_body(&mut m, style, width, &mut rng);
+    debug_assert!(m.validate().is_empty(), "{:?}", m.validate());
+    m
+}
+
+/// Round a width to the nearest multiple of 8 (hardware-friendly widths,
+/// as the Edge TPU compiler enforces), minimum 8.
+fn roundw(c: f64) -> u32 {
+    (((c / 8.0).round() as u32) * 8).max(8)
+}
+
+/// Shared CNN body builder. All styles use an aggressive stem (stride-4
+/// 5x5 conv), the pattern edge models use to shed spatial resolution
+/// early (§3.2.2: decomposition techniques to fit edge constraints).
+//
+// `last` is threaded through every append for uniformity even where
+// `add_seq`'s implicit previous-layer edge makes it redundant — the
+// residual blocks and the classifier head do read it.
+#[allow(unused_assignments)]
+fn build_cnn_body(m: &mut ModelGraph, style: CnnStyle, width: f64, rng: &mut Rng) {
+    let w = |c: u32| roundw(c as f64 * width);
+
+    // Stem: 224x224x3 -> 56x56xC0. Small MAC count; intentionally one of
+    // the ~3% taxonomy outliers (every real model has such a stem).
+    let c0 = w(32);
+    let mut last = m.add_seq(Layer::new(
+        "stem",
+        LayerKind::Conv2d { in_h: 224, in_w: 224, in_c: 3, out_c: c0, k: 5, stride: 4 },
+    ));
+    let mut cur_c = c0;
+    let mut cur_hw = 56u32;
+
+    // Stage 1 @56: shallow standard convs with big activations --> Family 1.
+    let n56 = rng.range_usize(1, 2);
+    for j in 0..n56 {
+        let out_c = w(48 + 16 * j as u32);
+        last = m.add_seq(Layer::new(
+            format!("s56/conv{j}"),
+            LayerKind::Conv2d { in_h: cur_hw, in_w: cur_hw, in_c: cur_c, out_c, k: 3, stride: 1 },
+        ));
+        cur_c = out_c;
+    }
+    // Early pointwise with large spatial (high reuse, small footprint):
+    // also Family 1 when wide enough.
+    let pw_c = w(192);
+    last = m.add_seq(Layer::new(
+        "s56/pw",
+        LayerKind::Pointwise { in_h: cur_hw, in_w: cur_hw, in_c: cur_c, out_c: pw_c },
+    ));
+    cur_c = pw_c;
+    // Downsample to 28 via pooling (aux layer).
+    last = m.add_seq(Layer::new(
+        "s56/pool",
+        LayerKind::Pool { in_h: cur_hw, in_w: cur_hw, channels: cur_c, k: 2 },
+    ));
+    cur_hw = 28;
+
+    // Stages 2-4 @28/14/7: style-specific blocks.
+    let stage_plan: &[(u32, u32, usize)] = match style {
+        // (spatial, base width, blocks)
+        CnnStyle::SeparableV1 => &[(28, 128, 2), (14, 256, 4), (7, 512, 2)],
+        CnnStyle::InvertedResidual => &[(28, 96, 2), (14, 160, 4), (7, 256, 3)],
+        CnnStyle::Detection => &[(28, 128, 2), (14, 256, 3), (7, 384, 2)],
+        CnnStyle::DepthwiseHeavy => &[(28, 144, 3), (14, 288, 5), (7, 576, 3)],
+    };
+
+    for &(hw, base_c, blocks) in stage_plan {
+        // Transition pointwise to the stage width.
+        let stage_c = w(base_c);
+        if hw != cur_hw {
+            last = m.add_seq(Layer::new(
+                format!("s{hw}/pool"),
+                LayerKind::Pool { in_h: cur_hw, in_w: cur_hw, channels: cur_c, k: 2 },
+            ));
+            cur_hw = hw;
+        }
+        last = m.add_seq(Layer::new(
+            format!("s{hw}/pw_in"),
+            LayerKind::Pointwise { in_h: hw, in_w: hw, in_c: cur_c, out_c: stage_c },
+        ));
+        cur_c = stage_c;
+
+        for b in 0..blocks {
+            match style {
+                CnnStyle::SeparableV1 | CnnStyle::DepthwiseHeavy => {
+                    // dw + pw separable block.
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/dw"),
+                        LayerKind::Depthwise { in_h: hw, in_w: hw, channels: cur_c, k: 3, stride: 1 },
+                    ));
+                    if style == CnnStyle::DepthwiseHeavy {
+                        // Extra depthwise (5x5) — the CNN10-13 signature.
+                        last = m.add_seq(Layer::new(
+                            format!("s{hw}/b{b}/dw5"),
+                            LayerKind::Depthwise {
+                                in_h: hw,
+                                in_w: hw,
+                                channels: cur_c,
+                                k: 5,
+                                stride: 1,
+                            },
+                        ));
+                    }
+                    // NB: cur_c is already width-scaled; do not apply
+                    // w() again or channels compound per block.
+                    let out_c = if b + 1 == blocks { cur_c * 2 } else { cur_c };
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/pw"),
+                        LayerKind::Pointwise { in_h: hw, in_w: hw, in_c: cur_c, out_c },
+                    ));
+                    cur_c = out_c;
+                }
+                CnnStyle::InvertedResidual => {
+                    // expand-pw -> dw -> project-pw -> residual add.
+                    let expand = cur_c * 4;
+                    let block_in = last;
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/expand"),
+                        LayerKind::Pointwise { in_h: hw, in_w: hw, in_c: cur_c, out_c: expand },
+                    ));
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/dw"),
+                        LayerKind::Depthwise { in_h: hw, in_w: hw, channels: expand, k: 3, stride: 1 },
+                    ));
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/project"),
+                        LayerKind::Pointwise { in_h: hw, in_w: hw, in_c: expand, out_c: cur_c },
+                    ));
+                    // Skip connection: block input feeds the add directly.
+                    last = m.add(
+                        Layer::new(
+                            format!("s{hw}/b{b}/add"),
+                            LayerKind::ResidualAdd { elems: hw * hw * cur_c },
+                        ),
+                        vec![block_in, last],
+                    );
+                }
+                CnnStyle::Detection => {
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/dw"),
+                        LayerKind::Depthwise { in_h: hw, in_w: hw, channels: cur_c, k: 3, stride: 1 },
+                    ));
+                    let out_c = cur_c + w(base_c / 2);
+                    last = m.add_seq(Layer::new(
+                        format!("s{hw}/b{b}/pw"),
+                        LayerKind::Pointwise { in_h: hw, in_w: hw, in_c: cur_c, out_c },
+                    ));
+                    cur_c = out_c;
+                }
+            }
+        }
+    }
+
+    // Family-4 tail: deep standard convolutions at small spatial size
+    // ("standard convolutional layers with deep input/output channels …
+    // along with a large number of kernels", §5.1). Project to a fixed
+    // width first so tail footprints stay in the 0.5–2.5 MB band and
+    // MAC counts in the 5M–25M band of §5.1's Family 4.
+    last = m.add_seq(Layer::new(
+        "tail/project",
+        LayerKind::Pointwise { in_h: 7, in_w: 7, in_c: cur_c, out_c: 224 },
+    ));
+    cur_c = 224;
+    let tail_convs = match style {
+        CnnStyle::Detection => 3,
+        CnnStyle::InvertedResidual => 1,
+        _ => 2,
+    };
+    for j in 0..tail_convs {
+        let out_c = cur_c + 32;
+        last = m.add_seq(Layer::new(
+            format!("tail/conv{j}"),
+            LayerKind::Conv2d { in_h: 7, in_w: 7, in_c: cur_c, out_c, k: 3, stride: 1 },
+        ));
+        cur_c = out_c;
+    }
+    // Expansion pointwise feeding the classifier (keeps the FC head's
+    // footprint in Family 3's > 0.5 MB band).
+    last = m.add_seq(Layer::new(
+        "tail/expand",
+        LayerKind::Pointwise { in_h: 7, in_w: 7, in_c: cur_c, out_c: 768 },
+    ));
+    cur_c = 768;
+
+    // Head: global pool + FC classifier (FC is Family 3: FLOP/B = 1).
+    last = m.add_seq(Layer::new(
+        "head/pool",
+        LayerKind::Pool { in_h: 7, in_w: 7, channels: cur_c, k: 7 },
+    ));
+    let classes = *rng.pick(&[1000u32, 1001, 1280]);
+    let _ = m.add(
+        Layer::new("head/fc", LayerKind::FullyConnected { in_dim: cur_c, out_dim: classes }),
+        vec![last],
+    );
+}
+
+// ---------------------------------------------------------------------
+// LSTMs / Transducers
+// ---------------------------------------------------------------------
+
+/// Append one LSTM layer (4 gate nodes + 1 update node) to `m`.
+///
+/// Every gate depends on the previous layer's output (`x_t`) and — via
+/// the update node of the previous *LSTM* layer when stacked — on the
+/// recurrent state; the update node depends on all four gates
+/// (intra-cell dependency, §3.2.1).
+pub fn add_lstm_layer(
+    m: &mut ModelGraph,
+    name: &str,
+    input_dim: u32,
+    hidden_dim: u32,
+    timesteps: u32,
+    input_from: Option<LayerId>,
+    group: u32,
+) -> LayerId {
+    let mut gate_ids = Vec::with_capacity(4);
+    for gate in Gate::ALL {
+        let preds = match input_from {
+            Some(p) => vec![p],
+            None => vec![],
+        };
+        let id = m.add(
+            Layer::grouped(
+                format!("{name}/gate_{}", gate.short()),
+                LayerKind::LstmGate { input_dim, hidden_dim, timesteps, gate },
+                group,
+            ),
+            preds,
+        );
+        gate_ids.push(id);
+    }
+    m.add(
+        Layer::grouped(
+            format!("{name}/update"),
+            LayerKind::LstmUpdate { hidden_dim, timesteps },
+            group,
+        ),
+        gate_ids,
+    )
+}
+
+/// Append a stack of LSTM layers; returns the last update node.
+fn add_lstm_stack(
+    m: &mut ModelGraph,
+    prefix: &str,
+    input_dim: u32,
+    hidden_dim: u32,
+    layers: usize,
+    timesteps: u32,
+    mut input_from: Option<LayerId>,
+    group_base: u32,
+) -> LayerId {
+    let mut d = input_dim;
+    let mut last = 0;
+    for l in 0..layers {
+        last = add_lstm_layer(
+            m,
+            &format!("{prefix}{l}"),
+            d,
+            hidden_dim,
+            timesteps,
+            input_from,
+            group_base + l as u32,
+        );
+        input_from = Some(last);
+        d = hidden_dim;
+    }
+    last
+}
+
+/// Build LSTM model `i` (0-based; the paper's `LSTM{i+1}`).
+///
+/// The four models span the application classes of §2 (speech, translation,
+/// text prediction, handwriting), with hidden sizes chosen so gate
+/// footprints average ~2.1M parameters as in Fig. 3.
+///
+/// # Panics
+/// Panics if `i >= NUM_LSTM`.
+pub fn lstm(i: usize) -> ModelGraph {
+    assert!(i < NUM_LSTM, "lstm index {i} out of range");
+    // (input dim, hidden, layers, timesteps)
+    let (d0, h, layers, t) = match i {
+        0 => (768, 1024, 5, 32),  // speech acoustic model
+        1 => (1024, 2048, 4, 24), // translation (big gates, ~8.4MB each)
+        2 => (768, 1024, 3, 16),  // smart-reply text prediction
+        _ => (512, 768, 4, 24),   // handwriting recognition
+    };
+    let mut m = ModelGraph::new(format!("LSTM{}", i + 1), ModelKind::Lstm);
+    let last = add_lstm_stack(&mut m, "lstm", d0, h, layers, t, None, 0);
+    // Output projection / softmax FC.
+    let _ = m.add(
+        Layer::new("proj", LayerKind::FullyConnected { in_dim: h, out_dim: 4096 }),
+        vec![last],
+    );
+    debug_assert!(m.validate().is_empty(), "{:?}", m.validate());
+    m
+}
+
+/// Build Transducer model `i` (0-based; the paper's `Transducer{i+1}`).
+///
+/// RNN-T structure per §2: an encoder LSTM stack, a prediction-network
+/// LSTM stack, and a feed-forward joint combining both.
+///
+/// # Panics
+/// Panics if `i >= NUM_TRANSDUCER`.
+pub fn transducer(i: usize) -> ModelGraph {
+    assert!(i < NUM_TRANSDUCER, "transducer index {i} out of range");
+    // (enc input, enc hidden, enc layers, pred hidden, pred layers, T)
+    let (d0, he, ne, hp, np, t) = match i {
+        0 => (512, 1280, 6, 1024, 2, 32),
+        1 => (512, 2048, 5, 1280, 2, 24),
+        2 => (384, 1024, 7, 1024, 2, 32),
+        _ => (512, 1536, 6, 768, 2, 24),
+    };
+    let mut m = ModelGraph::new(format!("Transducer{}", i + 1), ModelKind::Transducer);
+    let enc = add_lstm_stack(&mut m, "enc", d0, he, ne, t, None, 0);
+    let pred = add_lstm_stack(&mut m, "pred", 640, hp, np, t, None, 100);
+    // Joint: concat(enc, pred) -> FC -> FC over vocab.
+    let j1 = m.add(
+        Layer::new("joint/fc0", LayerKind::FullyConnected { in_dim: he + hp, out_dim: 1024 }),
+        vec![enc, pred],
+    );
+    let _ = m.add(
+        Layer::new("joint/fc1", LayerKind::FullyConnected { in_dim: 1024, out_dim: 4096 }),
+        vec![j1],
+    );
+    debug_assert!(m.validate().is_empty(), "{:?}", m.validate());
+    m
+}
+
+/// Build RCNN model `i` (0-based; the paper's `RCNN{i+1}`).
+///
+/// LRCN structure per §2: a CNN front-end for spatial features, an LSTM
+/// back-end for the temporal sequence, and an output FC.
+///
+/// # Panics
+/// Panics if `i >= NUM_RCNN`.
+pub fn rcnn(i: usize) -> ModelGraph {
+    assert!(i < NUM_RCNN, "rcnn index {i} out of range");
+    let mut rng = Rng::new(0x8C4 + i as u64);
+    let (style, width, h, nl, t) = match i {
+        0 => (CnnStyle::SeparableV1, 1.0, 1024, 2, 16),  // image captioning
+        1 => (CnnStyle::InvertedResidual, 0.875, 768, 3, 16), // activity recognition
+        _ => (CnnStyle::SeparableV1, 0.75, 1024, 2, 24), // video labeling
+    };
+    let mut m = ModelGraph::new(format!("RCNN{}", i + 1), ModelKind::Rcnn);
+    build_cnn_body(&mut m, style, width, &mut rng);
+    let cnn_out = m.len() - 1;
+    // Feature projection feeding the LSTM (dim of the CNN's FC head).
+    let last = add_lstm_stack(&mut m, "lstm", 1024, h, nl, t, Some(cnn_out), 200);
+    let _ = m.add(
+        Layer::new("out/fc", LayerKind::FullyConnected { in_dim: h, out_dim: 4096 }),
+        vec![last],
+    );
+    debug_assert!(m.validate().is_empty(), "{:?}", m.validate());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn zoo_has_24_models_with_paper_names() {
+        let zoo = all();
+        assert_eq!(zoo.len(), ZOO_SIZE);
+        assert_eq!(zoo[0].name, "CNN1");
+        assert_eq!(zoo[12].name, "CNN13");
+        assert_eq!(zoo[13].name, "LSTM1");
+        assert_eq!(zoo[17].name, "Transducer1");
+        assert_eq!(zoo[21].name, "RCNN1");
+        assert_eq!(zoo[23].name, "RCNN3");
+    }
+
+    #[test]
+    fn all_models_validate() {
+        for m in all() {
+            let errs = m.validate();
+            assert!(errs.is_empty(), "{}: {errs:?}", m.name);
+        }
+    }
+
+    #[test]
+    fn zoo_is_deterministic() {
+        let a = all();
+        let b = all();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.len(), y.len());
+            assert_eq!(x.total_macs(), y.total_macs());
+            assert_eq!(x.total_param_bytes(), y.total_param_bytes());
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("CNN5").is_some());
+        assert!(by_name("Transducer4").is_some());
+        assert!(by_name("GPT4").is_none());
+    }
+
+    #[test]
+    fn cnn5_to_7_have_skip_connections() {
+        // §5.6: CNN5, CNN6, CNN7 include a large number of skip
+        // connections; the others include few or none.
+        for i in 4..=6 {
+            let m = cnn(i);
+            assert!(m.skip_edge_count() >= 5, "{} skips={}", m.name, m.skip_edge_count());
+        }
+        for i in [0usize, 1, 7, 9] {
+            let m = cnn(i);
+            assert_eq!(m.skip_edge_count(), 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn depthwise_heavy_models_have_many_depthwise_layers() {
+        for i in 9..13 {
+            let m = cnn(i);
+            let dw = m
+                .layers()
+                .iter()
+                .filter(|l| matches!(l.kind, LayerKind::Depthwise { .. }))
+                .count();
+            assert!(dw >= 15, "{} depthwise={dw}", m.name);
+        }
+    }
+
+    #[test]
+    fn lstm_gate_footprint_near_paper_average() {
+        // Fig. 3: gates average ~2.1M parameters across LSTM/Transducer
+        // models. Allow a generous band around it.
+        let mut gate_params = Vec::new();
+        for m in all() {
+            for l in m.layers() {
+                if let LayerKind::LstmGate { .. } = l.kind {
+                    gate_params.push(l.param_bytes() as f64);
+                }
+            }
+        }
+        let avg = stats::mean(&gate_params) / 1e6;
+        assert!((1.5..4.0).contains(&avg), "avg gate params {avg}M");
+    }
+
+    #[test]
+    fn lstm_layer_footprints_reach_tens_of_mb() {
+        // Fig. 3 right: LSTM/Transducer layer footprints far exceed CNN
+        // layers, averaging tens of MB for the biggest models.
+        let m = lstm(1); // translation-class, H=2048
+        let group_fp: Vec<f64> = m
+            .lstm_groups()
+            .iter()
+            .map(|(_, ids)| ids.iter().map(|&i| m.layer(i).param_bytes()).sum::<u64>() as f64)
+            .collect();
+        let max_fp = stats::max(&group_fp) / (1024.0 * 1024.0);
+        assert!(max_fp > 20.0, "max LSTM layer footprint {max_fp} MB");
+    }
+
+    #[test]
+    fn cnn_intra_model_mac_variation_matches_fig4() {
+        // Fig. 4: ~200x MAC variation across layers of a single CNN.
+        // Require at least 50x for every CNN and >=150x for some.
+        let mut max_variation: f64 = 0.0;
+        for i in 0..NUM_CNN {
+            let m = cnn(i);
+            let macs: Vec<f64> = m
+                .layers()
+                .iter()
+                .filter(|l| !l.is_auxiliary())
+                .map(|l| l.macs() as f64)
+                .collect();
+            let v = stats::variation_factor(&macs);
+            assert!(v >= 50.0, "{}: MAC variation {v:.0}x", m.name);
+            max_variation = max_variation.max(v);
+        }
+        assert!(max_variation >= 150.0, "max variation {max_variation:.0}x");
+    }
+
+    #[test]
+    fn cnn_intra_model_footprint_variation_matches_fig5() {
+        // Fig. 5: ~20x parameter footprint variation within a CNN.
+        for i in 0..NUM_CNN {
+            let m = cnn(i);
+            let fp: Vec<f64> = m
+                .layers()
+                .iter()
+                .filter(|l| !l.is_auxiliary())
+                .map(|l| l.param_bytes() as f64)
+                .collect();
+            let v = stats::variation_factor(&fp);
+            assert!(v >= 20.0, "{}: footprint variation {v:.0}x", m.name);
+        }
+    }
+
+    #[test]
+    fn sequence_models_dwarf_cnn_footprints() {
+        // §3.2.1: Transducer/LSTM layers have footprints up to two
+        // orders of magnitude larger than CNN layers.
+        let cnn_max = (0..NUM_CNN)
+            .map(|i| cnn(i).total_param_bytes())
+            .max()
+            .unwrap();
+        let lstm_max = (0..NUM_LSTM)
+            .map(|i| lstm(i).total_param_bytes())
+            .max()
+            .unwrap();
+        assert!(
+            lstm_max > 5 * cnn_max,
+            "lstm {lstm_max} vs cnn {cnn_max}: sequence models should be far larger"
+        );
+    }
+
+    #[test]
+    fn transducer_has_three_components() {
+        let m = transducer(0);
+        assert!(m.layers().iter().any(|l| l.name.starts_with("enc")));
+        assert!(m.layers().iter().any(|l| l.name.starts_with("pred")));
+        assert!(m.layers().iter().any(|l| l.name.starts_with("joint")));
+    }
+
+    #[test]
+    fn rcnn_mixes_conv_and_lstm() {
+        for i in 0..NUM_RCNN {
+            let m = rcnn(i);
+            let has_conv = m
+                .layers()
+                .iter()
+                .any(|l| matches!(l.kind, LayerKind::Conv2d { .. } | LayerKind::Pointwise { .. }));
+            let has_lstm = m
+                .layers()
+                .iter()
+                .any(|l| matches!(l.kind, LayerKind::LstmGate { .. }));
+            assert!(has_conv && has_lstm, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn cnn_macs_in_edge_range() {
+        // Edge CNNs run hundreds of MMACs to a few GMACs per inference.
+        for i in 0..NUM_CNN {
+            let m = cnn(i);
+            let g = m.total_macs() as f64 / 1e9;
+            assert!((0.05..6.0).contains(&g), "{}: {g} GMACs", m.name);
+        }
+    }
+}

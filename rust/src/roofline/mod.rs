@@ -1,0 +1,141 @@
+//! Throughput and energy rooflines (Fig. 1).
+//!
+//! * The **throughput roofline** is the classic sharp-knee model:
+//!   `min(peak_flops, bw * intensity)` — memory transfer time can be
+//!   overlapped with compute, so the bound is a max of two rates.
+//! * The **energy roofline** follows Choi et al. [12] (the paper's
+//!   footnote 2): energy per FLOP is the *sum* of compute energy and
+//!   memory energy — memory energy cannot be hidden — so the efficiency
+//!   curve `1 / (e_flop + e_byte / intensity)` approaches its maximum
+//!   smoothly instead of kinking.
+
+use crate::accel::AccelConfig;
+use crate::energy::MAC_ENERGY_J;
+
+/// Roofline model for one accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Peak throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Streaming memory bandwidth, B/s.
+    pub mem_bw: f64,
+    /// Compute energy per FLOP, J.
+    pub energy_per_flop: f64,
+    /// Memory energy per byte, J.
+    pub energy_per_byte: f64,
+}
+
+impl Roofline {
+    /// Build the roofline for an accelerator config.
+    pub fn of(cfg: &AccelConfig) -> Self {
+        Self {
+            peak_flops: cfg.peak_flops(),
+            mem_bw: cfg.dram_bw_gbps * 1e9 * cfg.memory.max_efficiency(),
+            // 2 FLOPs per MAC.
+            energy_per_flop: MAC_ENERGY_J / 2.0,
+            energy_per_byte: cfg.memory.energy_per_byte(),
+        }
+    }
+
+    /// Attainable throughput (FLOP/s) at an arithmetic intensity
+    /// (FLOP/B) — the sharp-knee throughput roofline.
+    pub fn attainable_flops(&self, intensity: f64) -> f64 {
+        if intensity <= 0.0 {
+            return 0.0;
+        }
+        self.peak_flops.min(self.mem_bw * intensity)
+    }
+
+    /// The ridge point (FLOP/B) where the roofline kinks.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    /// Maximum attainable energy efficiency (FLOP/J) at an intensity —
+    /// the smooth energy roofline of Choi et al. [12]: memory energy
+    /// adds to compute energy (it cannot be overlapped away).
+    pub fn attainable_flops_per_joule(&self, intensity: f64) -> f64 {
+        if intensity <= 0.0 {
+            return 0.0;
+        }
+        1.0 / (self.energy_per_flop + self.energy_per_byte / intensity)
+    }
+
+    /// Asymptotic maximum energy efficiency (FLOP/J) as intensity → ∞.
+    pub fn max_flops_per_joule(&self) -> f64 {
+        1.0 / self.energy_per_flop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::util::approx_eq;
+
+    fn baseline_roofline() -> Roofline {
+        Roofline::of(&configs::edge_tpu_baseline())
+    }
+
+    #[test]
+    fn throughput_roofline_has_sharp_knee() {
+        let r = baseline_roofline();
+        let ridge = r.ridge_intensity();
+        // Below the ridge: bandwidth-bound (linear in intensity).
+        assert!(approx_eq(r.attainable_flops(ridge / 2.0), r.peak_flops / 2.0, 1e-9, 0.0));
+        // Above the ridge: flat at peak.
+        assert_eq!(r.attainable_flops(ridge * 10.0), r.peak_flops);
+    }
+
+    #[test]
+    fn baseline_ridge_matches_paper_arithmetic() {
+        // §3.2.4: 2 TB/s needed at 1 FLOP/B to sustain 2 TFLOP/s; at
+        // ~22 GB/s effective, the ridge sits near 90 FLOP/B.
+        let r = baseline_roofline();
+        let ridge = r.ridge_intensity();
+        assert!((50.0..120.0).contains(&ridge), "ridge={ridge}");
+    }
+
+    #[test]
+    fn lstm_intensity_is_deep_in_memory_bound_region() {
+        // FLOP/B ~ 1-2 for LSTM gates: attainable is ~1-2% of peak.
+        let r = baseline_roofline();
+        let frac = r.attainable_flops(2.0) / r.peak_flops;
+        assert!(frac < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn energy_roofline_is_smooth_and_monotone() {
+        // Footnote 2: the energy roofline is a smooth curve — strictly
+        // increasing in intensity, approaching the compute-only bound.
+        let r = baseline_roofline();
+        let mut prev = 0.0;
+        for i in 1..200 {
+            let x = i as f64;
+            let y = r.attainable_flops_per_joule(x);
+            assert!(y > prev, "not monotone at {x}");
+            assert!(y < r.max_flops_per_joule());
+            prev = y;
+        }
+        // No kink: the slope decays gradually.
+        let y1 = r.attainable_flops_per_joule(10.0);
+        let y2 = r.attainable_flops_per_joule(20.0);
+        let y3 = r.attainable_flops_per_joule(30.0);
+        assert!(y2 - y1 > y3 - y2, "convexity violated");
+    }
+
+    #[test]
+    fn max_efficiency_is_compute_bound() {
+        let r = baseline_roofline();
+        // 0.8 pJ/FLOP -> 1.25 TFLOP/J.
+        assert!(approx_eq(r.max_flops_per_joule(), 1.25e12, 0.01, 0.0));
+    }
+
+    #[test]
+    fn near_data_roofline_moves_the_ridge() {
+        // Pavlov's 256 GB/s internal bandwidth pushes the ridge to ~1
+        // FLOP/B: LSTM gates become compute-bound there (§5.4).
+        let r = Roofline::of(&configs::pavlov());
+        assert!(r.ridge_intensity() < 1.5, "ridge={}", r.ridge_intensity());
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request
+//! path.
+//!
+//! `make artifacts` lowers the L2 JAX models once to HLO text
+//! (`python/compile/aot.py`); this module loads each
+//! `artifacts/*.hlo.txt` through the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`) and exposes typed execution. Python never
+//! runs here — the Rust binary is self-contained once artifacts exist.
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled model variant ready to execute.
+pub struct LoadedModel {
+    /// The artifact's manifest entry.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with raw `f32` buffers (one per declared input).
+    ///
+    /// Buffers must match the artifact's input shapes exactly; the
+    /// output is the flattened result tensor.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
+            let want: usize = shape.iter().product::<i64>() as usize;
+            if buf.len() != want {
+                bail!(
+                    "{}: input {i} has {} elements, shape {:?} needs {want}",
+                    self.spec.name,
+                    buf.len(),
+                    shape
+                );
+            }
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(shape)
+                    .with_context(|| format!("reshaping input {i}"))?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Elements in the output tensor.
+    pub fn output_len(&self) -> usize {
+        self.spec.output_shape.iter().product::<i64>() as usize
+    }
+}
+
+/// The PJRT runtime: a CPU client plus every compiled artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifacts directory (must contain
+    /// `manifest.toml`; see `python/compile/aot.py`).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.toml"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let mut models = HashMap::new();
+        for spec in manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            models.insert(spec.name.clone(), LoadedModel { spec, exe });
+        }
+        Ok(Self { client, models })
+    }
+
+    /// Names of all loaded model variants.
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Look up a loaded model by name.
+    pub fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model `{name}`"))
+    }
+
+    /// Execute a model by name.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.model(name)?.execute(inputs)
+    }
+
+    /// The PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pick the smallest batch variant of `family` (e.g. `edge_cnn`)
+    /// that fits `batch` requests, if any (`<family>_b<NN>` naming).
+    pub fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)> {
+        let mut best: Option<(&str, usize)> = None;
+        for name in self.models.keys() {
+            if let Some(b) = name
+                .strip_prefix(family)
+                .and_then(|s| s.strip_prefix("_b"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                if b >= batch && best.is_none_or(|(_, cur)| b < cur) {
+                    best = Some((name.as_str(), b));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in
+    // rust/tests/runtime_pjrt.rs; here we test pure helpers.
+
+    #[test]
+    fn variant_selection_logic() {
+        // Emulate the selection rule without a client.
+        let names = ["edge_cnn_b1", "edge_cnn_b4", "edge_cnn_b8", "joint_b1"];
+        let pick = |family: &str, batch: usize| -> Option<usize> {
+            names
+                .iter()
+                .filter_map(|n| {
+                    n.strip_prefix(family)
+                        .and_then(|s| s.strip_prefix("_b"))
+                        .and_then(|s| s.parse::<usize>().ok())
+                })
+                .filter(|&b| b >= batch)
+                .min()
+        };
+        assert_eq!(pick("edge_cnn", 1), Some(1));
+        assert_eq!(pick("edge_cnn", 2), Some(4));
+        assert_eq!(pick("edge_cnn", 5), Some(8));
+        assert_eq!(pick("edge_cnn", 9), None);
+        assert_eq!(pick("joint", 1), Some(1));
+    }
+}

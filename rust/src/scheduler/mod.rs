@@ -1,0 +1,452 @@
+//! The Mensa runtime scheduler (§4.2).
+//!
+//! Phase I assigns every layer its *ideal* accelerator in isolation:
+//! the layer's family determines affinity (F1/F2 → Pascal, F3 → Pavlov,
+//! F4/F5 → Jacquard, §5.2.1), with outliers resolved by
+//! minimum energy-delay product over the system's cost models.
+//!
+//! Phase II walks the layers sequentially and decides, for each layer,
+//! whether to run it on its ideal accelerator or on the previous
+//! layer's destination, trading communication against execution
+//! optimality with the paper's two empirical rules:
+//!
+//! 1. if running on the previous destination would take **more than 2x**
+//!    the ideal accelerator's compute time (the "MAC operations ... 2x
+//!    higher than the compute resources available" rule), move to the
+//!    ideal accelerator;
+//! 2. if the parameter data the previous destination would need to
+//!    fetch exceeds the activation data that must be shipped to the
+//!    ideal accelerator, **and** parameter reuse is low (FLOP/B < 64),
+//!    move to the ideal accelerator;
+//! 3. otherwise stay on the previous destination.
+//!
+//! This module also provides an exhaustive DP [`oracle`] (the
+//! hypothetical scheduler §4.2 mentions Mensa's heuristic may fall
+//! short of) and the Phase-I-only ablation, both exercised by
+//! `benches/ablate_scheduler.rs`.
+
+use crate::accel::configs::MensaSystem;
+use crate::characterize::{classify, Family, LayerMetrics};
+use crate::model::{LayerId, ModelGraph};
+
+/// A layer → accelerator assignment for one model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    assignment: Vec<usize>,
+}
+
+impl Mapping {
+    /// Wrap an explicit assignment vector.
+    pub fn new(assignment: Vec<usize>) -> Self {
+        Self { assignment }
+    }
+
+    /// Every layer on the same accelerator.
+    pub fn uniform(len: usize, accel: usize) -> Self {
+        Self { assignment: vec![accel; len] }
+    }
+
+    /// Number of layers covered.
+    pub fn len(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// `true` if the mapping covers no layers.
+    pub fn is_empty(&self) -> bool {
+        self.assignment.is_empty()
+    }
+
+    /// Accelerator id of a layer.
+    pub fn accel_of(&self, layer: LayerId) -> usize {
+        self.assignment[layer]
+    }
+
+    /// The raw assignment slice.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Count of layers per accelerator id.
+    pub fn histogram(&self, num_accels: usize) -> Vec<usize> {
+        let mut h = vec![0usize; num_accels];
+        for &a in &self.assignment {
+            h[a] += 1;
+        }
+        h
+    }
+
+    /// Number of accelerator switches along the topological order — a
+    /// proxy for §5.6's "models typically communicate between
+    /// accelerators only 4–5 times".
+    pub fn switch_count(&self) -> usize {
+        self.assignment.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+}
+
+/// Family → preferred dataflow, per §5.2.1's accelerator assignment.
+fn preferred_dataflow(family: Family) -> Option<crate::accel::DataflowKind> {
+    use crate::accel::DataflowKind as D;
+    match family {
+        Family::F1 | Family::F2 => Some(D::PascalOs),
+        Family::F3 => Some(D::PavlovWs),
+        Family::F4 | Family::F5 => Some(D::JacquardWs),
+        Family::Outlier => None,
+    }
+}
+
+/// The Mensa scheduler.
+#[derive(Debug, Clone)]
+pub struct MensaScheduler<'a> {
+    system: &'a MensaSystem,
+    /// Run Phase II (communication-aware reassignment). Disable for the
+    /// Phase-I-only ablation.
+    pub phase2: bool,
+}
+
+impl<'a> MensaScheduler<'a> {
+    /// Create a scheduler for a system.
+    pub fn new(system: &'a MensaSystem) -> Self {
+        Self { system, phase2: true }
+    }
+
+    /// Phase-I-only variant (ablation).
+    pub fn phase1_only(system: &'a MensaSystem) -> Self {
+        Self { system, phase2: false }
+    }
+
+    /// Min energy-delay-product accelerator for a layer (used for
+    /// outliers and when the preferred dataflow is absent).
+    fn best_by_edp(&self, layer: &crate::model::Layer) -> usize {
+        let mut best = 0usize;
+        let mut best_edp = f64::INFINITY;
+        for (id, cfg) in self.system.accels.iter().enumerate() {
+            let c = cfg.dataflow.cost(cfg, layer);
+            let edp = c.latency_s * c.energy.total_j().max(1e-18);
+            if edp < best_edp {
+                best_edp = edp;
+                best = id;
+            }
+        }
+        best
+    }
+
+    /// Phase I assignment plus the per-layer metrics it computed
+    /// (Phase II reuses them instead of re-deriving — §Perf).
+    fn phase1_with_metrics(&self, model: &ModelGraph) -> (Vec<usize>, Vec<LayerMetrics>) {
+        let metrics: Vec<LayerMetrics> =
+            model.layers().iter().map(LayerMetrics::of).collect();
+        let assignment = model
+            .layers()
+            .iter()
+            .zip(&metrics)
+            .map(|(layer, m)| {
+                let family = classify(m);
+                match preferred_dataflow(family)
+                    .and_then(|d| self.system.accels.iter().position(|a| a.dataflow == d))
+                {
+                    Some(id) => id,
+                    None => self.best_by_edp(layer),
+                }
+            })
+            .collect();
+        (assignment, metrics)
+    }
+
+    /// Phase I: ideal accelerator per layer in isolation.
+    pub fn phase1(&self, model: &ModelGraph) -> Mapping {
+        if self.system.len() == 1 {
+            return Mapping::uniform(model.len(), 0);
+        }
+        Mapping::new(self.phase1_with_metrics(model).0)
+    }
+
+    /// Full schedule: Phase I + (optionally) Phase II.
+    pub fn schedule(&self, model: &ModelGraph) -> Mapping {
+        if self.system.len() == 1 {
+            return Mapping::uniform(model.len(), 0);
+        }
+        let (ideal, metrics) = self.phase1_with_metrics(model);
+        if !self.phase2 || model.is_empty() {
+            return Mapping::new(ideal);
+        }
+
+        let mut assignment = Vec::with_capacity(model.len());
+        // The first layer runs on its ideal accelerator.
+        assignment.push(ideal[0]);
+        for (id, layer) in model.iter().skip(1) {
+            let ideal_id = ideal[id];
+            // destination_{i-1}: where the sequential predecessor ended
+            // up (the paper's sequential walk).
+            let prev_dest = assignment[id - 1];
+            if prev_dest == ideal_id {
+                // Footnote 5: analysis skipped.
+                assignment.push(ideal_id);
+                continue;
+            }
+            let m = &metrics[id];
+
+            // Rule 2 first — it needs no dataflow costing: parameter
+            // fetch on the suboptimal accelerator outweighs shipping
+            // the activations, with low reuse. Parameter traffic on a
+            // non-ideal accelerator is at least the footprint (times
+            // the per-step streaming for recurrent layers).
+            let act_to_move: u64 =
+                model.preds(id).iter().map(|&p| model.layer(p).output_act_bytes()).sum();
+            let param_fetch = m.param_bytes as f64
+                * if m.recurrent { m.invocations as f64 } else { 1.0 };
+            let rule2 =
+                param_fetch > act_to_move as f64 && m.param_flop_per_byte < 64.0;
+            if rule2 {
+                assignment.push(ideal_id);
+                continue;
+            }
+
+            // Rule 1: 2x compute-resources rule — staying would more
+            // than double execution time vs the ideal accelerator.
+            let cfg_prev = &self.system.accels[prev_dest];
+            let cfg_ideal = &self.system.accels[ideal_id];
+            let cost_prev = cfg_prev.dataflow.cost(cfg_prev, layer);
+            let cost_ideal = cfg_ideal.dataflow.cost(cfg_ideal, layer);
+            let rule1 = cost_prev.latency_s > 2.0 * cost_ideal.latency_s;
+
+            assignment.push(if rule1 { ideal_id } else { prev_dest });
+        }
+        Mapping::new(assignment)
+    }
+}
+
+/// Exhaustive DP scheduler: minimizes `latency + lambda * energy` over
+/// all per-layer assignments, with DRAM transfer costs charged on
+/// edges. The DP state is the assignment of the sequential predecessor;
+/// transfer costs on skip edges are approximated against the
+/// predecessor's DP choice (exact for chain models; see DESIGN.md).
+pub fn oracle(system: &MensaSystem, model: &ModelGraph, lambda: f64) -> Mapping {
+    let n_acc = system.len();
+    if n_acc == 1 || model.is_empty() {
+        return Mapping::uniform(model.len(), 0);
+    }
+    let n = model.len();
+    // Static power runs for the whole inference regardless of where a
+    // layer executes, so each second of latency costs both time and
+    // `static_w` joules — fold it in so the DP optimizes the same
+    // objective the simulator reports.
+    let static_w = system.total_leakage_w() + crate::energy::DRAM_STATIC_W;
+    let sec_weight = 1.0 + lambda * static_w;
+    // cost[i][a]: per-layer execution score.
+    let score = |i: usize, a: usize| -> f64 {
+        let cfg = &system.accels[a];
+        let c = cfg.dataflow.cost(cfg, model.layer(i));
+        c.latency_s * sec_weight + lambda * c.energy.total_j()
+    };
+    // Transfer score between accelerators for `bytes`.
+    let tscore = |src: usize, dst: usize, bytes: f64| -> f64 {
+        if src == dst || bytes == 0.0 {
+            return 0.0;
+        }
+        let a = &system.accels[src];
+        let b = &system.accels[dst];
+        let bw = a.dram_bw_gbps.min(b.dram_bw_gbps) * 1e9 * 0.7;
+        let secs = 2.0 * bytes / bw;
+        let energy = bytes * (a.memory.energy_per_byte() + b.memory.energy_per_byte());
+        secs * sec_weight + lambda * energy
+    };
+
+    // dp[a] = best cumulative score with layer i on accelerator a.
+    let mut dp = vec![0.0f64; n_acc];
+    let mut back: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for a in 0..n_acc {
+        dp[a] = score(0, a);
+    }
+    back.push(vec![0; n_acc]);
+    for i in 1..n {
+        let in_bytes: f64 = model
+            .preds(i)
+            .iter()
+            .map(|&p| model.layer(p).output_act_bytes() as f64)
+            .sum();
+        let mut next = vec![f64::INFINITY; n_acc];
+        let mut choice = vec![0usize; n_acc];
+        for a in 0..n_acc {
+            let exec = score(i, a);
+            for prev in 0..n_acc {
+                let total = dp[prev] + exec + tscore(prev, a, in_bytes);
+                if total < next[a] {
+                    next[a] = total;
+                    choice[a] = prev;
+                }
+            }
+        }
+        dp = next;
+        back.push(choice);
+    }
+    // Reconstruct.
+    let mut best_last = 0usize;
+    for a in 1..n_acc {
+        if dp[a] < dp[best_last] {
+            best_last = a;
+        }
+    }
+    let mut assignment = vec![0usize; n];
+    assignment[n - 1] = best_last;
+    for i in (1..n).rev() {
+        assignment[i - 1] = back[i][assignment[i]];
+    }
+    Mapping::new(assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::zoo;
+    use crate::model::LayerKind;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn mapping_helpers() {
+        let m = Mapping::new(vec![0, 0, 1, 2, 2, 0]);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.accel_of(3), 2);
+        assert_eq!(m.histogram(3), vec![3, 1, 2]);
+        assert_eq!(m.switch_count(), 3);
+        assert_eq!(Mapping::uniform(4, 1).switch_count(), 0);
+    }
+
+    #[test]
+    fn single_accel_system_trivial_schedule() {
+        let sys = configs::baseline_system();
+        let model = zoo::cnn(0);
+        let m = MensaScheduler::new(&sys).schedule(&model);
+        assert!(m.as_slice().iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn phase1_routes_families_to_their_accelerators() {
+        // §5.2.1: F1/F2 -> Pascal, F3 -> Pavlov, F4/F5 -> Jacquard.
+        let sys = configs::mensa_g();
+        let model = zoo::lstm(0);
+        let m = MensaScheduler::new(&sys).phase1(&model);
+        let pavlov = sys.find("Pavlov").unwrap();
+        for (id, layer) in model.iter() {
+            if matches!(layer.kind, LayerKind::LstmGate { .. }) {
+                assert_eq!(m.accel_of(id), pavlov, "gate {} not on Pavlov", layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn phase1_routes_compute_layers_to_pascal() {
+        let sys = configs::mensa_g();
+        let model = zoo::cnn(0);
+        let m = MensaScheduler::new(&sys).phase1(&model);
+        let pascal = sys.find("Pascal").unwrap();
+        // The early high-reuse convs belong on Pascal.
+        let early: Vec<usize> = model
+            .iter()
+            .filter(|(_, l)| l.name.starts_with("s56/conv"))
+            .map(|(id, _)| id)
+            .collect();
+        assert!(!early.is_empty());
+        for id in early {
+            assert_eq!(m.accel_of(id), pascal);
+        }
+    }
+
+    #[test]
+    fn phase2_reduces_communication() {
+        // Phase II exists to avoid chatty schedules: it must never
+        // switch more often than Phase I alone on a CNN.
+        let sys = configs::mensa_g();
+        for i in [0usize, 4, 9] {
+            let model = zoo::cnn(i);
+            let p1 = MensaScheduler::phase1_only(&sys).schedule(&model);
+            let p2 = MensaScheduler::new(&sys).schedule(&model);
+            assert!(
+                p2.switch_count() <= p1.switch_count(),
+                "{}: phase2 {} vs phase1 {}",
+                model.name,
+                p2.switch_count(),
+                p1.switch_count()
+            );
+        }
+    }
+
+    #[test]
+    fn phase2_keeps_lstm_gates_on_pavlov() {
+        // Gates have huge parameter fetches and low FLOP/B: rule 2 must
+        // pull them to Pavlov even when the previous layer ran elsewhere.
+        let sys = configs::mensa_g();
+        let model = zoo::rcnn(0); // CNN front-end then LSTM layers
+        let m = MensaScheduler::new(&sys).schedule(&model);
+        let pavlov = sys.find("Pavlov").unwrap();
+        let mut gates = 0;
+        let mut on_pavlov = 0;
+        for (id, layer) in model.iter() {
+            if matches!(layer.kind, LayerKind::LstmGate { .. }) {
+                gates += 1;
+                if m.accel_of(id) == pavlov {
+                    on_pavlov += 1;
+                }
+            }
+        }
+        assert!(gates > 0);
+        assert!(
+            on_pavlov * 10 >= gates * 9,
+            "only {on_pavlov}/{gates} gates on Pavlov"
+        );
+    }
+
+    #[test]
+    fn mensa_schedule_beats_all_on_one_for_sequence_models() {
+        let sys = configs::mensa_g();
+        let sim = Simulator::new(&sys);
+        let model = zoo::transducer(0);
+        let sched = MensaScheduler::new(&sys).schedule(&model);
+        let mensa = sim.run(&model, &sched);
+        for a in 0..sys.len() {
+            let fixed = sim.run(&model, &Mapping::uniform(model.len(), a));
+            assert!(
+                mensa.total_latency_s <= fixed.total_latency_s * 1.05,
+                "scheduled {} vs all-on-{} {}",
+                mensa.total_latency_s,
+                sys.accels[a].name,
+                fixed.total_latency_s
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_no_worse_than_heuristic() {
+        let sys = configs::mensa_g();
+        let sim = Simulator::new(&sys);
+        let lambda = 1e3; // ~balance seconds and joules at edge scales
+        for model in [zoo::cnn(4), zoo::lstm(2)] {
+            let heuristic = MensaScheduler::new(&sys).schedule(&model);
+            let orc = oracle(&sys, &model, lambda);
+            let score = |m: &Mapping| {
+                let r = sim.run(&model, m);
+                r.total_latency_s + lambda * r.total_energy_j()
+            };
+            let h = score(&heuristic);
+            let o = score(&orc);
+            // DP approximates skip-edge transfers, so allow 5% slack.
+            assert!(o <= h * 1.05, "{}: oracle {o} vs heuristic {h}", model.name);
+        }
+    }
+
+    #[test]
+    fn schedules_have_few_switches_like_the_paper() {
+        // §5.6: models typically communicate between accelerators only
+        // 4-5 times during execution (CNN5-7 more, due to skips).
+        let sys = configs::mensa_g();
+        for model in zoo::all() {
+            let m = MensaScheduler::new(&sys).schedule(&model);
+            assert!(
+                m.switch_count() <= 16,
+                "{}: {} switches",
+                model.name,
+                m.switch_count()
+            );
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Execution simulator: runs a scheduled model on a system and
+//! accumulates latency, energy, utilization, and traffic statistics.
+//!
+//! The simulator walks the model DAG in topological order (layers do not
+//! execute concurrently — §4.2 footnote 4), costing every layer on its
+//! assigned accelerator via the dataflow models, and charging
+//! inter-accelerator communication through DRAM (§4.2: "Mensa
+//! accelerators transfer activations to another accelerator through
+//! DRAM, avoiding the need to keep on-chip data coherent").
+//!
+//! Static energy is charged at system level: every accelerator leaks for
+//! the whole inference (Mensa does not power-gate between layers in this
+//! model — a conservative choice that still leaves Mensa-G leaking less
+//! than the monolithic baseline, §7.1).
+
+use crate::accel::configs::MensaSystem;
+use crate::accel::dataflow::LayerCost;
+use crate::energy::{EnergyBreakdown, DRAM_STATIC_W};
+use crate::model::{LayerId, ModelGraph};
+use crate::scheduler::Mapping;
+use crate::util::stats;
+
+/// Execution record for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerExec {
+    /// Layer id in the model graph.
+    pub layer_id: LayerId,
+    /// Accelerator (index into the system) that ran it.
+    pub accel_id: usize,
+    /// Dataflow cost on that accelerator.
+    pub cost: LayerCost,
+    /// Activation bytes transferred in from other accelerators via DRAM.
+    pub transfer_in_bytes: f64,
+    /// Seconds spent on those transfers (not overlapped).
+    pub transfer_s: f64,
+}
+
+/// Per-accelerator aggregate statistics.
+#[derive(Debug, Clone)]
+pub struct AccelStats {
+    /// Accelerator name.
+    pub name: String,
+    /// Seconds this accelerator was executing layers.
+    pub busy_s: f64,
+    /// MACs executed here.
+    pub macs: u64,
+    /// Dynamic energy spent here (incl. its DRAM traffic).
+    pub energy: EnergyBreakdown,
+    /// Layers executed here.
+    pub layers: usize,
+}
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Model name.
+    pub model_name: String,
+    /// System name.
+    pub system_name: String,
+    /// Per-layer execution records, topological order.
+    pub layer_execs: Vec<LayerExec>,
+    /// End-to-end inference latency (compute + transfers), seconds.
+    pub total_latency_s: f64,
+    /// Total MACs.
+    pub total_macs: u64,
+    /// Whole-system energy including statics.
+    pub energy: EnergyBreakdown,
+    /// Per-accelerator statistics.
+    pub per_accel: Vec<AccelStats>,
+    /// Number of inter-accelerator transfers (§5.6 reports 4–5 typical).
+    pub transfer_count: usize,
+    /// Total bytes moved between accelerators through DRAM.
+    pub transfer_bytes: f64,
+}
+
+impl RunReport {
+    /// Total FLOPs (2 per MAC).
+    pub fn total_flops(&self) -> f64 {
+        2.0 * self.total_macs as f64
+    }
+
+    /// Achieved throughput in FLOP/s over the full inference.
+    pub fn throughput_flops(&self) -> f64 {
+        if self.total_latency_s == 0.0 {
+            return 0.0;
+        }
+        self.total_flops() / self.total_latency_s
+    }
+
+    /// Total energy in joules.
+    pub fn total_energy_j(&self) -> f64 {
+        self.energy.total_j()
+    }
+
+    /// Energy efficiency in FLOP/J (the paper's TFLOP/J axis).
+    pub fn flops_per_joule(&self) -> f64 {
+        let e = self.total_energy_j();
+        if e == 0.0 {
+            return 0.0;
+        }
+        self.total_flops() / e
+    }
+
+    /// Latency-weighted average PE utilization — how Fig. 11 reports
+    /// utilization ("average utilization across its three accelerators").
+    pub fn avg_utilization(&self) -> f64 {
+        let pairs: Vec<(f64, f64)> = self
+            .layer_execs
+            .iter()
+            .map(|e| (e.cost.utilization, e.cost.latency_s))
+            .collect();
+        stats::weighted_mean(&pairs)
+    }
+
+    /// Sum of per-layer compute latencies (excludes transfers).
+    pub fn compute_latency_s(&self) -> f64 {
+        self.layer_execs.iter().map(|e| e.cost.latency_s).sum()
+    }
+}
+
+/// DRAM-mediated inter-accelerator transfer model: write on the
+/// producer side, read on the consumer side, at the slower party's
+/// streaming bandwidth (conservative: not overlapped with compute).
+fn transfer_cost(
+    src: &crate::accel::AccelConfig,
+    dst: &crate::accel::AccelConfig,
+    bytes: f64,
+) -> (f64, f64) {
+    let bw = (src.dram_bw_gbps.min(dst.dram_bw_gbps)) * 1e9 * 0.7;
+    let seconds = 2.0 * bytes / bw;
+    let energy = bytes * (src.memory.energy_per_byte() + dst.memory.energy_per_byte());
+    (seconds, energy)
+}
+
+/// The simulator.
+#[derive(Debug, Clone)]
+pub struct Simulator<'a> {
+    system: &'a MensaSystem,
+}
+
+impl<'a> Simulator<'a> {
+    /// Create a simulator over a system.
+    ///
+    /// # Panics
+    /// Panics if the system has no accelerators.
+    pub fn new(system: &'a MensaSystem) -> Self {
+        assert!(!system.is_empty(), "system needs at least one accelerator");
+        Self { system }
+    }
+
+    /// Run one inference of `model` under `mapping`.
+    ///
+    /// # Panics
+    /// Panics if the mapping length doesn't match the model, or if any
+    /// accelerator id is out of range.
+    pub fn run(&self, model: &ModelGraph, mapping: &Mapping) -> RunReport {
+        assert_eq!(mapping.len(), model.len(), "mapping/model length mismatch");
+        let mut layer_execs = Vec::with_capacity(model.len());
+        let mut per_accel: Vec<AccelStats> = self
+            .system
+            .accels
+            .iter()
+            .map(|a| AccelStats {
+                name: a.name.clone(),
+                busy_s: 0.0,
+                macs: 0,
+                energy: EnergyBreakdown::default(),
+                layers: 0,
+            })
+            .collect();
+        let mut total_latency = 0.0;
+        let mut transfer_count = 0usize;
+        let mut transfer_bytes = 0.0f64;
+        let mut transfer_energy = 0.0f64;
+
+        for (id, layer) in model.iter() {
+            let accel_id = mapping.accel_of(id);
+            assert!(accel_id < self.system.len(), "accel id {accel_id} out of range");
+            let cfg = &self.system.accels[accel_id];
+            let cost = cfg.dataflow.cost(cfg, layer);
+
+            // Charge DRAM round-trips for operands produced elsewhere.
+            let mut t_in = 0.0f64;
+            let mut t_s = 0.0f64;
+            for &p in model.preds(id) {
+                let src_id = mapping.accel_of(p);
+                if src_id != accel_id {
+                    let bytes = model.layer(p).output_act_bytes() as f64;
+                    let (s, e) = transfer_cost(&self.system.accels[src_id], cfg, bytes);
+                    t_in += bytes;
+                    t_s += s;
+                    transfer_energy += e;
+                    transfer_count += 1;
+                    transfer_bytes += bytes;
+                }
+            }
+
+            total_latency += cost.latency_s + t_s;
+            let st = &mut per_accel[accel_id];
+            st.busy_s += cost.latency_s;
+            st.macs += cost.macs;
+            st.energy.add(&cost.energy);
+            st.layers += 1;
+            layer_execs.push(LayerExec {
+                layer_id: id,
+                accel_id,
+                cost,
+                transfer_in_bytes: t_in,
+                transfer_s: t_s,
+            });
+        }
+
+        // System-level energy: per-accelerator dynamics, plus transfers
+        // (charged as DRAM dynamic), plus statics over the inference.
+        let mut energy = EnergyBreakdown::default();
+        for st in &per_accel {
+            energy.add(&st.energy);
+        }
+        energy.dram_dynamic_j += transfer_energy;
+        energy.accel_static_j = self.system.total_leakage_w() * total_latency;
+        energy.dram_static_j = DRAM_STATIC_W * total_latency;
+
+        RunReport {
+            model_name: model.name.clone(),
+            system_name: self.system.name.clone(),
+            layer_execs,
+            total_latency_s: total_latency,
+            total_macs: model.total_macs(),
+            energy,
+            per_accel,
+            transfer_count,
+            transfer_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::zoo;
+    use crate::scheduler::Mapping;
+
+    fn all_on(model_len: usize, accel: usize) -> Mapping {
+        Mapping::uniform(model_len, accel)
+    }
+
+    #[test]
+    fn baseline_single_accel_has_no_transfers() {
+        let model = zoo::cnn(0);
+        let sys = configs::baseline_system();
+        let report = Simulator::new(&sys).run(&model, &all_on(model.len(), 0));
+        assert_eq!(report.transfer_count, 0);
+        assert_eq!(report.transfer_bytes, 0.0);
+        assert!(report.total_latency_s > 0.0);
+        assert!(report.total_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn report_totals_are_consistent() {
+        let model = zoo::cnn(1);
+        let sys = configs::baseline_system();
+        let report = Simulator::new(&sys).run(&model, &all_on(model.len(), 0));
+        assert_eq!(report.layer_execs.len(), model.len());
+        assert_eq!(report.total_macs, model.total_macs());
+        let sum_lat: f64 = report.layer_execs.iter().map(|e| e.cost.latency_s).sum();
+        assert!((report.total_latency_s - sum_lat).abs() < 1e-12);
+        let busy: f64 = report.per_accel.iter().map(|a| a.busy_s).sum();
+        assert!((busy - report.compute_latency_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_cnn_utilization_in_paper_band() {
+        // Fig. 1/§3.1: CNNs average ~40.7% of peak on the Edge TPU.
+        let sys = configs::baseline_system();
+        let utils: Vec<f64> = (0..zoo::NUM_CNN)
+            .map(|i| {
+                let m = zoo::cnn(i);
+                Simulator::new(&sys).run(&m, &all_on(m.len(), 0)).avg_utilization()
+            })
+            .collect();
+        let avg = crate::util::stats::mean(&utils);
+        assert!((0.25..0.60).contains(&avg), "CNN avg utilization {avg:.3}");
+    }
+
+    #[test]
+    fn baseline_lstm_throughput_below_two_percent_of_peak() {
+        // §3.1: LSTMs and Transducers achieve <1% of peak throughput
+        // (we allow <2% — our synthetic gates are on the small side).
+        let sys = configs::baseline_system();
+        for i in 0..zoo::NUM_LSTM {
+            let m = zoo::lstm(i);
+            let r = Simulator::new(&sys).run(&m, &all_on(m.len(), 0));
+            let frac = r.throughput_flops() / sys.accels[0].peak_flops();
+            assert!(frac < 0.02, "{}: {frac:.4} of peak", m.name);
+        }
+    }
+
+    #[test]
+    fn lstm_energy_dominated_by_dram() {
+        // §3.1: LSTMs/Transducers spend ~3/4 of energy on DRAM.
+        let sys = configs::baseline_system();
+        let m = zoo::lstm(0);
+        let r = Simulator::new(&sys).run(&m, &all_on(m.len(), 0));
+        let frac = r.energy.offchip_fraction();
+        assert!((0.55..0.95).contains(&frac), "off-chip fraction {frac:.3}");
+    }
+
+    #[test]
+    fn mensa_transfers_counted() {
+        // Splitting a CNN across accelerators must record transfers.
+        let model = zoo::cnn(0);
+        let sys = configs::mensa_g();
+        // Alternate assignment purely to force communication.
+        let mapping = Mapping::new((0..model.len()).map(|i| i % 2).collect());
+        let report = Simulator::new(&sys).run(&model, &mapping);
+        assert!(report.transfer_count > 10);
+        assert!(report.transfer_bytes > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mapping_length_checked() {
+        let model = zoo::cnn(0);
+        let sys = configs::baseline_system();
+        let _ = Simulator::new(&sys).run(&model, &Mapping::uniform(3, 0));
+    }
+
+    #[test]
+    fn statics_scale_with_latency() {
+        let sys = configs::baseline_system();
+        let m = zoo::lstm(1); // slow model -> large static share
+        let r = Simulator::new(&sys).run(&m, &all_on(m.len(), 0));
+        let expect = sys.total_leakage_w() * r.total_latency_s;
+        assert!((r.energy.accel_static_j - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal property-based testing helper.
+//!
+//! `proptest` is not available in this offline build, so invariant tests
+//! use this deterministic stand-in: generate `n` random cases from a
+//! seeded [`Rng`](crate::util::rng::Rng), run the property, and report
+//! the first failing case with its seed so it can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Default number of cases per property (matches proptest's default).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `property` against `cases` generated inputs. `gen` draws one input
+/// from the RNG; `property` returns `Err(reason)` on violation. Panics
+/// with the input's debug representation and replay seed on failure.
+pub fn for_all<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        // Derive a per-case seed so any single case can be replayed
+        // without running the whole sequence.
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(reason) = property(&input) {
+            panic!(
+                "property failed on case {case}/{cases} (replay seed {case_seed:#x}):\n  \
+                 input: {input:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with the default case count.
+pub fn for_all_default<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl FnMut(&mut Rng) -> T,
+    property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for_all(seed, DEFAULT_CASES, gen, property);
+}
+
+/// Assert-style helper for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all(
+            1,
+            50,
+            |rng| rng.range_u64(0, 100),
+            |&x| {
+                count += 1;
+                ensure(x <= 100, "bound")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        for_all(2, 50, |rng| rng.range_u64(0, 100), |&x| ensure(x < 10, "x too big"));
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        for_all(
+            3,
+            10,
+            |rng| rng.next_u64(),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        for_all(
+            3,
+            10,
+            |rng| rng.next_u64(),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

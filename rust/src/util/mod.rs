@@ -1,0 +1,71 @@
+//! Shared utilities: deterministic PRNG, statistics, table formatting,
+//! approximate float comparison, and a small property-testing helper
+//! (stand-in for `proptest`, which is unavailable offline).
+
+pub mod check;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Bytes in a kibibyte / mebibyte (the paper reports kB/MB in binary
+/// units, matching CACTI conventions).
+pub const KB: u64 = 1024;
+/// Bytes in a mebibyte.
+pub const MB: u64 = 1024 * 1024;
+/// 10^9, for GB/s bandwidths (decimal, per JEDEC convention).
+pub const GIGA: f64 = 1e9;
+
+/// Approximate float equality with relative + absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// `true` if `value` lies within `[lo, hi]` (inclusive).
+pub fn in_range(value: f64, lo: f64, hi: f64) -> bool {
+    value >= lo && value <= hi
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_absolute_tolerance() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 0.0, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn approx_eq_relative_tolerance() {
+        assert!(approx_eq(1e12, 1.0001e12, 1e-3, 0.0));
+        assert!(!approx_eq(1e12, 1.1e12, 1e-3, 0.0));
+    }
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn in_range_is_inclusive() {
+        assert!(in_range(1.0, 1.0, 2.0));
+        assert!(in_range(2.0, 1.0, 2.0));
+        assert!(!in_range(2.0001, 1.0, 2.0));
+    }
+
+    #[test]
+    fn unit_constants() {
+        assert_eq!(KB, 1024);
+        assert_eq!(MB, 1024 * 1024);
+    }
+}

@@ -1,0 +1,160 @@
+//! Deterministic SplitMix64 PRNG.
+//!
+//! The model zoo, the k-means clusterer, and the property-testing helper
+//! all need reproducible randomness. We use SplitMix64 (Steele et al.,
+//! "Fast Splittable Pseudorandom Number Generators", OOPSLA 2014): tiny,
+//! fast, and passes BigCrush when used as a 64-bit generator. No external
+//! crates are needed, keeping the build fully offline.
+
+/// A deterministic 64-bit PRNG (SplitMix64).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. The same seed always yields the
+    /// same sequence, which the zoo relies on for reproducible models.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> uniform double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let span = hi - lo + 1;
+        lo + self.next_u64() % span
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Log-uniform f64 in `[lo, hi)`; both bounds must be positive.
+    /// Layer characteristics span orders of magnitude (footprints from
+    /// 1 kB to 18 MB), so the zoo draws them log-uniformly like the
+    /// paper's scatter plots suggest.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (self.range_f64(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        debug_assert!(!items.is_empty());
+        &items[self.range_usize(0, items.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut rng = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn range_inclusive_bounds_hit() {
+        let mut rng = Rng::new(3);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..1000 {
+            match rng.range_u64(0, 3) {
+                0 => saw_lo = true,
+                3 => saw_hi = true,
+                1 | 2 => {}
+                _ => panic!("out of range"),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn log_uniform_within_bounds() {
+        let mut rng = Rng::new(11);
+        for _ in 0..10_000 {
+            let x = rng.log_uniform(1e3, 1e7);
+            assert!((1e3..1e7).contains(&x));
+        }
+    }
+
+    #[test]
+    fn log_uniform_covers_decades() {
+        let mut rng = Rng::new(13);
+        // Roughly a quarter of draws should land in each decade of [1e3,1e7).
+        let mut per_decade = [0usize; 4];
+        for _ in 0..10_000 {
+            let x = rng.log_uniform(1e3, 1e7);
+            per_decade[(x.log10().floor() as usize) - 3] += 1;
+        }
+        for (i, &n) in per_decade.iter().enumerate() {
+            assert!(n > 1500, "decade {i} undersampled: {n}");
+        }
+    }
+
+    #[test]
+    fn pick_returns_member() {
+        let mut rng = Rng::new(5);
+        let items = [10, 20, 30];
+        for _ in 0..100 {
+            assert!(items.contains(rng.pick(&items)));
+        }
+    }
+}

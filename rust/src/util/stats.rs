@@ -1,0 +1,137 @@
+//! Small statistics helpers used by the characterization and benchmark
+//! reporting code paths (arithmetic/geometric means, percentiles,
+//! min/max, weighted averages).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean; 0.0 for an empty slice. All inputs must be positive.
+/// The paper reports cross-model speedups — geometric mean is the
+/// standard aggregate for normalized ratios.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive values");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Weighted arithmetic mean; 0.0 when total weight is zero.
+pub fn weighted_mean(pairs: &[(f64, f64)]) -> f64 {
+    let wsum: f64 = pairs.iter().map(|&(_, w)| w).sum();
+    if wsum == 0.0 {
+        return 0.0;
+    }
+    pairs.iter().map(|&(x, w)| x * w).sum::<f64>() / wsum
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Minimum; NaN-free inputs assumed. 0.0 for an empty slice.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+}
+
+/// Maximum; 0.0 for an empty slice.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Percentile via linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Max/min ratio — "varies by a factor of N" in the paper's wording
+/// (e.g. 200x MAC variation across layers of one CNN).
+pub fn variation_factor(xs: &[f64]) -> f64 {
+    let lo = min(xs);
+    if xs.is_empty() || lo <= 0.0 {
+        return 0.0;
+    }
+    max(xs) / lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::approx_eq;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        // geomean(2, 8) = 4
+        assert!(approx_eq(geomean(&[2.0, 8.0]), 4.0, 1e-12, 0.0));
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_identity_on_constant() {
+        assert!(approx_eq(geomean(&[3.0; 10]), 3.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn weighted_mean_basic() {
+        // 1*1 + 3*3 over weight 4 = 2.5
+        assert!(approx_eq(weighted_mean(&[(1.0, 1.0), (3.0, 3.0)]), 2.5, 1e-12, 0.0));
+        assert_eq!(weighted_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        assert!(approx_eq(stddev(&[1.0, 3.0]), 1.0, 1e-12, 0.0));
+    }
+
+    #[test]
+    fn percentile_median_and_extremes() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!(approx_eq(percentile(&xs, 50.0), 2.5, 1e-12, 0.0));
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn variation_factor_matches_paper_usage() {
+        // A 200x spread in MACs.
+        assert!(approx_eq(variation_factor(&[1e6, 5e6, 2e8]), 200.0, 1e-12, 0.0));
+        assert_eq!(variation_factor(&[]), 0.0);
+    }
+
+    #[test]
+    fn min_max_basic() {
+        let xs = [3.0, -1.0, 7.0];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 7.0);
+    }
+}

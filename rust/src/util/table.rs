@@ -1,0 +1,152 @@
+//! Plain-text table rendering for benchmark/report output.
+//!
+//! Every experiment harness (`bench_harness`) prints the same rows/series
+//! a paper figure or table reports; this module gives them one consistent
+//! aligned-column format so outputs are diffable run-to-run.
+
+/// A simple left-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics in debug builds if the arity mismatches.
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        debug_assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// `true` if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to an aligned string (header, separator, rows).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(cell);
+                line.push_str(&" ".repeat(widths[i].saturating_sub(cell.len())));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1))));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a value with engineering suffixes (k, M, G, T) at 3 significant
+/// digits — used for MAC counts and FLOP/s columns.
+pub fn eng(value: f64) -> String {
+    let abs = value.abs();
+    let (scaled, suffix) = if abs >= 1e12 {
+        (value / 1e12, "T")
+    } else if abs >= 1e9 {
+        (value / 1e9, "G")
+    } else if abs >= 1e6 {
+        (value / 1e6, "M")
+    } else if abs >= 1e3 {
+        (value / 1e3, "k")
+    } else {
+        (value, "")
+    };
+    format!("{scaled:.3}{suffix}")
+}
+
+/// Format a byte count with binary suffixes (kB/MB as the paper uses).
+pub fn bytes(value: f64) -> String {
+    let abs = value.abs();
+    if abs >= (1 << 20) as f64 {
+        format!("{:.2}MB", value / (1 << 20) as f64)
+    } else if abs >= 1024.0 {
+        format!("{:.1}kB", value / 1024.0)
+    } else {
+        format!("{value:.0}B")
+    }
+}
+
+/// Format a ratio as a percentage with one decimal.
+pub fn pct(fraction: f64) -> String {
+    format!("{:.1}%", fraction * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new(["model", "util"]);
+        t.row(["CNN1", "40.7%"]);
+        t.row(["Transducer1", "0.9%"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].starts_with("CNN1"));
+        // Columns aligned: "util" column starts at the same offset in all rows.
+        let col = lines[0].find("util").unwrap();
+        assert_eq!(&lines[3][col..col + 4], "0.9%");
+    }
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(2e12), "2.000T");
+        assert_eq!(eng(1.5e9), "1.500G");
+        assert_eq!(eng(2.5e6), "2.500M");
+        assert_eq!(eng(999.0), "999.000");
+    }
+
+    #[test]
+    fn byte_suffixes() {
+        assert_eq!(bytes(4.0 * 1024.0 * 1024.0), "4.00MB");
+        assert_eq!(bytes(2048.0), "2.0kB");
+        assert_eq!(bytes(12.0), "12B");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.273), "27.3%");
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = Table::new(["a"]);
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        assert!(t.render().contains('a'));
+    }
+}

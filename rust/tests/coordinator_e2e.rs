@@ -1,0 +1,177 @@
+//! End-to-end coordinator tests: router → batcher → PJRT executor.
+//!
+//! Skipped when artifacts are absent (run `make artifacts`).
+
+use mensa::config::ServerConfig;
+use mensa::coordinator::Server;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+fn cnn_input(seed: usize) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|i| ((i + seed * 131) % 17) as f32 / 17.0).collect()
+}
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+#[test]
+fn serves_single_request_with_sim_cost() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(&dir, ServerConfig::default()).expect("start");
+    let resp = server
+        .infer_blocking("edge_cnn", vec![cnn_input(0)], TIMEOUT)
+        .expect("inference");
+    assert_eq!(resp.output.len(), 16);
+    assert!(resp.output.iter().all(|x| x.is_finite()));
+    // Modeled Mensa-G cost rides along with the real numerics.
+    assert!(resp.sim.latency_s > 0.0);
+    assert!(resp.sim.energy_j > 0.0);
+    assert_eq!(resp.sim.accel_mix.len(), 3);
+    server.shutdown();
+}
+
+#[test]
+fn batches_concurrent_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig { max_batch: 4, batch_timeout_us: 50_000, ..Default::default() };
+    let server = Server::start(&dir, cfg).expect("start");
+    // Fire 4 requests without waiting: the batcher should coalesce.
+    let rxs: Vec<_> = (0..4)
+        .map(|i| server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit"))
+        .collect();
+    let mut batched = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output.len(), 16);
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    assert!(batched >= 2, "expected coalescing, got {batched} batched responses");
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 4);
+    assert!(snap.mean_batch > 1.0, "mean batch {}", snap.mean_batch);
+    server.shutdown();
+}
+
+#[test]
+fn batched_results_match_solo_results() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Solo run.
+    let server = Server::start(&dir, ServerConfig::default()).expect("start");
+    let solo = server
+        .infer_blocking("edge_cnn", vec![cnn_input(7)], TIMEOUT)
+        .expect("solo")
+        .output;
+    // Batched run of the same input among others.
+    let rxs: Vec<_> = (0..3)
+        .map(|i| server.infer("edge_cnn", vec![cnn_input(if i == 1 { 7 } else { i })]).unwrap())
+        .collect();
+    let outputs: Vec<Vec<f32>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).unwrap().unwrap().output)
+        .collect();
+    for (a, b) in outputs[1].iter().zip(&solo) {
+        assert!((a - b).abs() < 1e-4, "batched {a} vs solo {b}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn serves_all_three_families() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(&dir, ServerConfig::default()).expect("start");
+    let cnn = server.infer_blocking("edge_cnn", vec![cnn_input(1)], TIMEOUT).unwrap();
+    assert_eq!(cnn.output.len(), 16);
+    let lstm_in: Vec<f32> = (0..8 * 128).map(|i| (i % 5) as f32 / 5.0).collect();
+    let lstm = server.infer_blocking("edge_lstm", vec![lstm_in], TIMEOUT).unwrap();
+    assert_eq!(lstm.output.len(), 256);
+    let joint = server
+        .infer_blocking("joint", vec![vec![0.1; 128], vec![0.2; 128]], TIMEOUT)
+        .unwrap();
+    assert_eq!(joint.output.len(), 256);
+    // Sim costs differ per family: LSTM proxies are far more expensive
+    // than the CNN on the modeled baseline-relative scale.
+    assert!(lstm.sim.energy_j != cnn.sim.energy_j);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_family_fails_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(&dir, ServerConfig::default()).expect("start");
+    let err = server.infer_blocking("bert", vec![vec![0.0; 4]], TIMEOUT).unwrap_err();
+    assert!(format!("{err:#}").contains("no variant"), "{err:#}");
+    let snap = server.metrics();
+    assert_eq!(snap.failed, 1);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_request_fails_without_poisoning_server() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Server::start(&dir, ServerConfig::default()).expect("start");
+    // Wrong input size.
+    let err = server.infer_blocking("edge_cnn", vec![vec![0.0; 3]], TIMEOUT).unwrap_err();
+    assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    // Server still healthy afterwards.
+    let ok = server.infer_blocking("edge_cnn", vec![cnn_input(2)], TIMEOUT).expect("healthy");
+    assert_eq!(ok.output.len(), 16);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        max_batch: 8,
+        batch_timeout_us: 200_000,
+        queue_depth: 2,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    // Flood far beyond the queue depth; at least one must be rejected.
+    let mut rejections = 0;
+    let mut accepted = Vec::new();
+    for i in 0..64 {
+        match server.infer("edge_cnn", vec![cnn_input(i)]) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejections += 1,
+        }
+    }
+    assert!(rejections > 0, "queue_depth=2 must reject under a 64-request flood");
+    for rx in accepted {
+        let _ = rx.recv_timeout(TIMEOUT);
+    }
+    assert!(server.metrics().rejected > 0);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_lstm_batch_splits_across_variants() {
+    // edge_lstm's largest compiled variant is b4; a flood of 8 must be
+    // chunked by the executor, not failed.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig { max_batch: 8, batch_timeout_us: 50_000, ..Default::default() };
+    let server = Server::start(&dir, cfg).expect("start");
+    let lstm_in = |s: usize| -> Vec<f32> {
+        (0..8 * 128).map(|i| ((i + s) % 9) as f32 / 9.0).collect()
+    };
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.infer("edge_lstm", vec![lstm_in(i)]).expect("submit"))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
+        assert_eq!(resp.output.len(), 256);
+    }
+    assert_eq!(server.metrics().failed, 0);
+    server.shutdown();
+}

@@ -1,0 +1,169 @@
+//! Cross-module integration tests: zoo → characterize → schedule →
+//! simulate → reports, plus config round-trips. These exercise the
+//! same paths the figure benches use, with hard assertions on the
+//! paper's qualitative claims.
+
+use mensa::accel::configs;
+use mensa::bench_harness;
+use mensa::config::SystemSpec;
+use mensa::model::zoo;
+use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::sim::Simulator;
+use mensa::util::stats;
+
+#[test]
+fn full_pipeline_runs_for_every_zoo_model() {
+    let mensa = configs::mensa_g();
+    let scheduler = MensaScheduler::new(&mensa);
+    let sim = Simulator::new(&mensa);
+    for model in zoo::all() {
+        let mapping = scheduler.schedule(&model);
+        let r = sim.run(&model, &mapping);
+        assert!(r.total_latency_s > 0.0, "{}", model.name);
+        assert!(r.total_energy_j() > 0.0, "{}", model.name);
+        assert!(r.avg_utilization() > 0.0 && r.avg_utilization() <= 1.0, "{}", model.name);
+        assert_eq!(r.layer_execs.len(), model.len());
+    }
+}
+
+#[test]
+fn paper_headline_energy_and_throughput() {
+    // The §7 headlines: Mensa-G ~66% energy reduction and ~3.1x
+    // throughput vs the Edge TPU baseline (arithmetic means over the
+    // 24 models, as the paper reports).
+    let base_sys = configs::baseline_system();
+    let mensa_sys = configs::mensa_g();
+    let base_sim = Simulator::new(&base_sys);
+    let mensa_sim = Simulator::new(&mensa_sys);
+    let scheduler = MensaScheduler::new(&mensa_sys);
+    let mut red = Vec::new();
+    let mut tput = Vec::new();
+    let mut lat = Vec::new();
+    for model in zoo::all() {
+        let b = base_sim.run(&model, &Mapping::uniform(model.len(), 0));
+        let m = mensa_sim.run(&model, &scheduler.schedule(&model));
+        red.push(1.0 - m.total_energy_j() / b.total_energy_j());
+        tput.push(m.throughput_flops() / b.throughput_flops());
+        lat.push(b.total_latency_s / m.total_latency_s);
+    }
+    let mean_red = stats::mean(&red);
+    let mean_tput = stats::mean(&tput);
+    let mean_lat = stats::mean(&lat);
+    assert!((0.50..0.80).contains(&mean_red), "energy reduction {mean_red} (paper 0.66)");
+    assert!((2.2..4.2).contains(&mean_tput), "throughput {mean_tput}x (paper 3.1x)");
+    assert!((1.5..4.5).contains(&mean_lat), "latency gain {mean_lat}x (paper 1.96x)");
+}
+
+#[test]
+fn sequence_models_benefit_most() {
+    // Fig. 11/12: LSTMs and Transducers see the largest gains.
+    let base_sys = configs::baseline_system();
+    let mensa_sys = configs::mensa_g();
+    let scheduler = MensaScheduler::new(&mensa_sys);
+    let mut seq = Vec::new();
+    let mut cnn = Vec::new();
+    for model in zoo::all() {
+        let b = Simulator::new(&base_sys).run(&model, &Mapping::uniform(model.len(), 0));
+        let m = Simulator::new(&mensa_sys).run(&model, &scheduler.schedule(&model));
+        let gain = b.total_latency_s / m.total_latency_s;
+        if model.kind.is_sequence_class() {
+            seq.push(gain);
+        } else if matches!(model.kind, mensa::model::ModelKind::Cnn) {
+            cnn.push(gain);
+        }
+    }
+    assert!(stats::mean(&seq) > 3.0, "sequence gain {}", stats::mean(&seq));
+    assert!(stats::mean(&seq) > 2.0 * stats::mean(&cnn), "LSTM gains must dominate CNN gains");
+}
+
+#[test]
+fn mensa_switches_stay_low_like_paper() {
+    // §5.6: typically 4-5 inter-accelerator communications; CNN5-7
+    // (skip-heavy) communicate more.
+    let sys = configs::mensa_g();
+    let scheduler = MensaScheduler::new(&sys);
+    let mut normal = Vec::new();
+    let mut skip_heavy = Vec::new();
+    for model in zoo::all() {
+        let switches = scheduler.schedule(&model).switch_count() as f64;
+        match model.name.as_str() {
+            "CNN5" | "CNN6" | "CNN7" => skip_heavy.push(switches),
+            _ => normal.push(switches),
+        }
+    }
+    assert!(stats::mean(&normal) <= 8.0, "normal switches {}", stats::mean(&normal));
+    assert!(stats::max(&normal) <= 16.0);
+}
+
+#[test]
+fn shipped_configs_load_and_match_builtins() {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+    for (file, builtin) in [
+        ("baseline.toml", configs::baseline_system()),
+        ("base_hb.toml", configs::base_hb_system()),
+        ("eyeriss_v2.toml", configs::eyeriss_system()),
+        ("mensa_g.toml", configs::mensa_g()),
+    ] {
+        let spec = SystemSpec::from_file(&format!("{root}/{file}")).expect(file);
+        assert_eq!(spec.system.len(), builtin.len(), "{file}");
+        for (a, b) in spec.system.accels.iter().zip(&builtin.accels) {
+            assert_eq!(a.name, b.name, "{file}");
+            assert_eq!(a.pe_rows, b.pe_rows, "{file}/{}", a.name);
+            assert_eq!(a.pe_cols, b.pe_cols, "{file}/{}", a.name);
+            assert_eq!(a.param_buf_bytes, b.param_buf_bytes, "{file}/{}", a.name);
+            assert_eq!(a.act_buf_bytes, b.act_buf_bytes, "{file}/{}", a.name);
+            assert_eq!(a.dataflow, b.dataflow, "{file}/{}", a.name);
+            assert_eq!(a.memory, b.memory, "{file}/{}", a.name);
+            assert!((a.clock_ghz - b.clock_ghz).abs() < 1e-9, "{file}/{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn config_driven_simulation_matches_builtin() {
+    // A simulation driven by the shipped mensa_g.toml must reproduce
+    // the built-in system's numbers exactly.
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+    let spec = SystemSpec::from_file(&format!("{root}/mensa_g.toml")).unwrap();
+    let builtin = configs::mensa_g();
+    let model = zoo::cnn(3);
+    let m1 = MensaScheduler::new(&spec.system).schedule(&model);
+    let m2 = MensaScheduler::new(&builtin).schedule(&model);
+    assert_eq!(m1.as_slice(), m2.as_slice());
+    let r1 = Simulator::new(&spec.system).run(&model, &m1);
+    let r2 = Simulator::new(&builtin).run(&model, &m2);
+    assert!((r1.total_energy_j() - r2.total_energy_j()).abs() < 1e-12);
+    assert!((r1.total_latency_s - r2.total_latency_s).abs() < 1e-15);
+}
+
+#[test]
+fn all_experiments_emit_reports() {
+    for id in bench_harness::EXPERIMENTS {
+        let report = bench_harness::run_experiment(id).unwrap();
+        assert!(report.contains("paper:"), "{id} lacks a paper cross-reference");
+    }
+}
+
+#[test]
+fn base_hb_helps_lstms_most() {
+    // Fig. 11: Base+HB's largest throughput wins are LSTM/Transducer
+    // (~4.5x) vs CNNs (~1.3x).
+    let base = configs::baseline_system();
+    let hb = configs::base_hb_system();
+    let mut seq = Vec::new();
+    let mut cnn = Vec::new();
+    for model in zoo::all() {
+        let b = Simulator::new(&base).run(&model, &Mapping::uniform(model.len(), 0));
+        let h = Simulator::new(&hb).run(&model, &Mapping::uniform(model.len(), 0));
+        let gain = h.throughput_flops() / b.throughput_flops();
+        if model.kind.is_sequence_class() {
+            seq.push(gain);
+        } else if matches!(model.kind, mensa::model::ModelKind::Cnn) {
+            cnn.push(gain);
+        }
+    }
+    let seq_gain = stats::mean(&seq);
+    let cnn_gain = stats::mean(&cnn);
+    assert!((3.0..8.0).contains(&seq_gain), "LSTM Base+HB gain {seq_gain} (paper 4.5x)");
+    assert!(cnn_gain < 1.6, "CNN Base+HB gain {cnn_gain} (paper 1.3x)");
+}

@@ -1,0 +1,314 @@
+//! Property-based tests over the coordinator/simulator invariants,
+//! using the in-repo `util::check` helper (offline `proptest` stand-in;
+//! every failure prints a replayable per-case seed).
+
+use mensa::accel::configs;
+use mensa::accel::dataflow::DataflowKind;
+use mensa::characterize::{classify, LayerMetrics};
+use mensa::coordinator::server::{pack_batch, unpack_batch};
+use mensa::model::layer::{Gate, Layer, LayerKind};
+use mensa::model::zoo;
+use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::sim::Simulator;
+use mensa::util::check::{ensure, for_all};
+use mensa::util::rng::Rng;
+
+/// Generate a random (but structurally valid) layer.
+fn gen_layer(rng: &mut Rng) -> Layer {
+    let kind = match rng.range_u64(0, 6) {
+        0 => LayerKind::Conv2d {
+            in_h: rng.range_u64(7, 112) as u32,
+            in_w: rng.range_u64(7, 112) as u32,
+            in_c: rng.range_u64(3, 256) as u32,
+            out_c: rng.range_u64(8, 256) as u32,
+            k: *rng.pick(&[1u32, 3, 5]),
+            stride: *rng.pick(&[1u32, 2]),
+        },
+        1 => LayerKind::Depthwise {
+            in_h: rng.range_u64(7, 56) as u32,
+            in_w: rng.range_u64(7, 56) as u32,
+            channels: rng.range_u64(8, 512) as u32,
+            k: *rng.pick(&[3u32, 5]),
+            stride: *rng.pick(&[1u32, 2]),
+        },
+        2 => LayerKind::Pointwise {
+            in_h: rng.range_u64(7, 56) as u32,
+            in_w: rng.range_u64(7, 56) as u32,
+            in_c: rng.range_u64(8, 512) as u32,
+            out_c: rng.range_u64(8, 512) as u32,
+        },
+        3 => LayerKind::FullyConnected {
+            in_dim: rng.range_u64(16, 4096) as u32,
+            out_dim: rng.range_u64(16, 4096) as u32,
+        },
+        4 => LayerKind::LstmGate {
+            input_dim: rng.range_u64(64, 2048) as u32,
+            hidden_dim: rng.range_u64(64, 2048) as u32,
+            timesteps: rng.range_u64(1, 64) as u32,
+            gate: *rng.pick(&Gate::ALL),
+        },
+        5 => LayerKind::LstmUpdate {
+            hidden_dim: rng.range_u64(64, 2048) as u32,
+            timesteps: rng.range_u64(1, 64) as u32,
+        },
+        _ => LayerKind::Pool {
+            in_h: rng.range_u64(4, 56) as u32,
+            in_w: rng.range_u64(4, 56) as u32,
+            channels: rng.range_u64(8, 512) as u32,
+            k: 2,
+        },
+    };
+    Layer::new("prop", kind)
+}
+
+const ALL_DATAFLOWS: [DataflowKind; 5] = [
+    DataflowKind::MonolithicWs,
+    DataflowKind::EyerissRs,
+    DataflowKind::PascalOs,
+    DataflowKind::PavlovWs,
+    DataflowKind::JacquardWs,
+];
+
+fn all_accels() -> Vec<mensa::accel::AccelConfig> {
+    vec![
+        configs::edge_tpu_baseline(),
+        configs::base_hb(),
+        configs::eyeriss_v2(),
+        configs::pascal(),
+        configs::pavlov(),
+        configs::jacquard(),
+    ]
+}
+
+#[test]
+fn prop_utilization_bounded_on_every_dataflow() {
+    let accels = all_accels();
+    for_all(0xA1, 300, gen_layer, |layer| {
+        for cfg in &accels {
+            let c = cfg.dataflow.cost(cfg, layer);
+            ensure(
+                c.utilization.is_finite() && c.utilization >= 0.0 && c.utilization <= 1.0 + 1e-9,
+                format!("{}: util {}", cfg.name, c.utilization),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_and_traffic_nonnegative_and_finite() {
+    let accels = all_accels();
+    for_all(0xA2, 300, gen_layer, |layer| {
+        for cfg in &accels {
+            let c = cfg.dataflow.cost(cfg, layer);
+            for (name, v) in [
+                ("latency_s", c.latency_s),
+                ("compute_cycles", c.compute_cycles),
+                ("mem_cycles", c.mem_cycles),
+                ("dram_param", c.dram_param_bytes),
+                ("dram_act", c.dram_act_bytes),
+                ("noc", c.noc_bytes),
+                ("energy", c.energy.total_j()),
+            ] {
+                ensure(v.is_finite() && v >= 0.0, format!("{}: {name} = {v}", cfg.name))?;
+            }
+            ensure(c.latency_s > 0.0, format!("{}: zero latency", cfg.name))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dram_param_traffic_at_least_one_fetch() {
+    // No dataflow can fetch fewer bytes than the parameter footprint.
+    let accels = all_accels();
+    for_all(0xA3, 300, gen_layer, |layer| {
+        let params = layer.param_bytes() as f64;
+        for cfg in &accels {
+            let c = cfg.dataflow.cost(cfg, layer);
+            ensure(
+                c.dram_param_bytes >= params - 1.0,
+                format!("{}: dram {} < params {params}", cfg.name, c.dram_param_bytes),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_bandwidth_never_hurts_latency() {
+    // Monotonicity: the same accelerator with more DRAM bandwidth must
+    // not get slower on any layer.
+    for_all(0xA4, 200, gen_layer, |layer| {
+        let slow = configs::edge_tpu_baseline();
+        let fast = configs::base_hb();
+        let c_slow = slow.dataflow.cost(&slow, layer);
+        let c_fast = fast.dataflow.cost(&fast, layer);
+        ensure(
+            c_fast.latency_s <= c_slow.latency_s * 1.0001,
+            format!("{} vs {}", c_fast.latency_s, c_slow.latency_s),
+        )
+    });
+}
+
+#[test]
+fn prop_classification_is_stable_and_total() {
+    // classify() returns the same family on repeated calls and some
+    // family for every layer (Outlier included).
+    for_all(0xA5, 300, gen_layer, |layer| {
+        let m = LayerMetrics::of(layer);
+        let a = classify(&m);
+        let b = classify(&m);
+        ensure(a == b, "classification must be deterministic")
+    });
+}
+
+#[test]
+fn prop_scheduler_mappings_complete_and_in_range() {
+    let sys = configs::mensa_g();
+    let scheduler = MensaScheduler::new(&sys);
+    for_all(
+        0xA6,
+        40,
+        |rng| zoo::all().remove(rng.range_usize(0, 23)),
+        |model| {
+            let mapping = scheduler.schedule(model);
+            ensure(mapping.len() == model.len(), "mapping covers all layers")?;
+            ensure(
+                mapping.as_slice().iter().all(|&a| a < sys.len()),
+                "accelerator ids in range",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_energy_additive_over_layers() {
+    // Total dynamic energy equals the sum of per-layer dynamic
+    // energies plus transfer energy (conservation).
+    let sys = configs::mensa_g();
+    let sim = Simulator::new(&sys);
+    let scheduler = MensaScheduler::new(&sys);
+    for_all(
+        0xA7,
+        24,
+        |rng| zoo::all().remove(rng.range_usize(0, 23)),
+        |model| {
+            let mapping = scheduler.schedule(model);
+            let r = sim.run(model, &mapping);
+            let per_layer: f64 = r.layer_execs.iter().map(|e| e.cost.energy.dynamic_j()).sum();
+            let total_dyn = r.energy.dynamic_j();
+            ensure(
+                total_dyn >= per_layer - 1e-12,
+                format!("dynamic {total_dyn} < sum {per_layer}"),
+            )?;
+            // The excess is exactly the transfer energy; bounded.
+            ensure(
+                (total_dyn - per_layer) <= r.transfer_bytes * 1e-9 + 1e-9,
+                "transfer energy bounded by traffic",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    for_all(
+        0xA8,
+        200,
+        |rng| {
+            let inner = rng.range_usize(1, 64);
+            let outer = rng.range_usize(1, 8);
+            let n_req = rng.range_usize(1, 6);
+            let batch = n_req + rng.range_usize(0, 4);
+            let axis = rng.range_usize(0, 1);
+            let reqs: Vec<Vec<f32>> = (0..n_req)
+                .map(|_| (0..outer * inner).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+                .collect();
+            (outer, inner, batch, axis, reqs)
+        },
+        |(outer, inner, batch, axis, reqs)| {
+            // Shape with the batch inserted at `axis` of [outer, inner].
+            let shape: Vec<i64> = if *axis == 0 {
+                vec![*batch as i64, *outer as i64 * *inner as i64]
+            } else {
+                vec![*outer as i64, *batch as i64, *inner as i64]
+            };
+            let refs: Vec<&[f32]> = reqs.iter().map(|v| v.as_slice()).collect();
+            let packed = pack_batch(&shape, if *axis == 0 { 0 } else { 1 }, &refs);
+            ensure(
+                packed.len() as i64 == shape.iter().product::<i64>(),
+                "packed size matches shape",
+            )?;
+            if *axis == 0 {
+                let rows = unpack_batch(&packed, *batch, reqs.len());
+                for (i, row) in rows.iter().enumerate() {
+                    ensure(row == &reqs[i], format!("row {i} corrupted"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mapping_histogram_sums_to_len() {
+    for_all(
+        0xA9,
+        200,
+        |rng| {
+            let n = rng.range_usize(1, 200);
+            let k = rng.range_usize(1, 5);
+            let v: Vec<usize> = (0..n).map(|_| rng.range_usize(0, k - 1)).collect();
+            (v, k)
+        },
+        |(v, k)| {
+            let m = Mapping::new(v.clone());
+            let hist = m.histogram(*k);
+            ensure(hist.iter().sum::<usize>() == v.len(), "histogram total")?;
+            ensure(m.switch_count() < v.len().max(1), "switches < layers")
+        },
+    );
+}
+
+#[test]
+fn prop_dataflow_ordering_for_family3() {
+    // For any real LSTM gate, Pavlov must move fewer DRAM parameter
+    // bytes than the monolithic baseline (the §5.4 invariant).
+    for_all(
+        0xAA,
+        200,
+        |rng| {
+            Layer::new(
+                "g",
+                LayerKind::LstmGate {
+                    input_dim: rng.range_u64(256, 2048) as u32,
+                    hidden_dim: rng.range_u64(512, 2048) as u32,
+                    timesteps: rng.range_u64(2, 64) as u32,
+                    gate: *rng.pick(&Gate::ALL),
+                },
+            )
+        },
+        |layer| {
+            let base = configs::edge_tpu_baseline();
+            let pavlov = configs::pavlov();
+            let cb = base.dataflow.cost(&base, layer);
+            let cp = pavlov.dataflow.cost(&pavlov, layer);
+            ensure(
+                cp.dram_param_bytes <= cb.dram_param_bytes,
+                format!("pavlov {} > baseline {}", cp.dram_param_bytes, cb.dram_param_bytes),
+            )?;
+            ensure(
+                cp.energy.dram_dynamic_j < cb.energy.dram_dynamic_j,
+                "pavlov DRAM energy must be lower",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_all_dataflows_enumerated() {
+    // Guard: if a new dataflow is added, the property generators above
+    // must be extended.
+    assert_eq!(ALL_DATAFLOWS.len(), 5);
+}

@@ -1,0 +1,110 @@
+//! Integration tests for the PJRT runtime over real artifacts.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! loud message) when `artifacts/manifest.toml` is absent so that
+//! `cargo test` stays green on a fresh checkout.
+
+use mensa::runtime::Runtime;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn loads_all_artifacts_and_reports_platform() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    assert_eq!(rt.platform(), "cpu");
+    let names = rt.model_names();
+    assert!(names.contains(&"edge_cnn_b1"), "{names:?}");
+    assert!(names.contains(&"edge_lstm_b1"), "{names:?}");
+    assert!(names.contains(&"joint_b1"), "{names:?}");
+}
+
+#[test]
+fn cnn_executes_with_correct_shape_and_determinism() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let input: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 7) as f32 / 7.0).collect();
+    let out1 = rt.execute("edge_cnn_b1", &[input.clone()]).expect("exec");
+    assert_eq!(out1.len(), 16);
+    assert!(out1.iter().all(|x| x.is_finite()));
+    let out2 = rt.execute("edge_cnn_b1", &[input]).expect("exec");
+    assert_eq!(out1, out2, "same input, same output");
+}
+
+#[test]
+fn batched_cnn_matches_single_requests() {
+    // The batcher's correctness contract: batch results equal
+    // per-request results row by row.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let reqs: Vec<Vec<f32>> = (0..4)
+        .map(|r| (0..32 * 32 * 3).map(|i| ((i + r * 31) % 11) as f32 / 11.0).collect())
+        .collect();
+    let mut batched_input = Vec::new();
+    for r in &reqs {
+        batched_input.extend_from_slice(r);
+    }
+    let batched = rt.execute("edge_cnn_b4", &[batched_input]).expect("batched exec");
+    for (r, req) in reqs.iter().enumerate() {
+        let single = rt.execute("edge_cnn_b1", &[req.clone()]).expect("single exec");
+        let row = &batched[r * 16..(r + 1) * 16];
+        for (a, b) in row.iter().zip(&single) {
+            assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn lstm_is_sequence_sensitive() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let t = 8;
+    let d = 128;
+    let fwd: Vec<f32> = (0..t * d).map(|i| ((i % 13) as f32 - 6.0) / 13.0).collect();
+    let mut rev = vec![0.0f32; t * d];
+    for step in 0..t {
+        rev[step * d..(step + 1) * d].copy_from_slice(&fwd[(t - 1 - step) * d..(t - step) * d]);
+    }
+    let out_f = rt.execute("edge_lstm_b1", &[fwd]).expect("exec fwd");
+    let out_r = rt.execute("edge_lstm_b1", &[rev]).expect("exec rev");
+    assert_eq!(out_f.len(), 256);
+    assert!(
+        out_f.iter().zip(&out_r).any(|(a, b)| (a - b).abs() > 1e-5),
+        "LSTM output must depend on sequence order"
+    );
+}
+
+#[test]
+fn joint_takes_two_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let enc: Vec<f32> = (0..128).map(|i| (i as f32) / 128.0).collect();
+    let pred: Vec<f32> = (0..128).map(|i| (128 - i) as f32 / 128.0).collect();
+    let out = rt.execute("joint_b1", &[enc, pred]).expect("exec");
+    assert_eq!(out.len(), 256);
+}
+
+#[test]
+fn wrong_input_size_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    let err = rt.execute("edge_cnn_b1", &[vec![0.0; 5]]).unwrap_err();
+    assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    let err = rt.execute("joint_b1", &[vec![0.0; 128]]).unwrap_err();
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+}
+
+#[test]
+fn unknown_model_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime load");
+    assert!(rt.execute("gpt5", &[vec![]]).is_err());
+}
