@@ -2,13 +2,15 @@
 //! workload.
 //!
 //! Loads the AOT artifacts (L1 Pallas kernels inside L2 JAX models,
-//! lowered to HLO text), starts the L3 coordinator (router → dynamic
-//! batcher → PJRT executor), drives a mixed open-loop workload across
-//! all three model families, validates numerics (batch == solo), and
-//! reports serving latency/throughput plus the modeled Mensa-G edge
-//! cost per request. Results are recorded in EXPERIMENTS.md §E2E.
+//! lowered to HLO text; the reference interpreter executes them in the
+//! default offline build), starts the L3 coordinator (router → dynamic
+//! batcher → executor pool with per-family routing), drives a mixed
+//! open-loop workload across all three model families, validates
+//! numerics (batch == solo), and reports serving latency/throughput
+//! plus the modeled Mensa-G edge cost per request (amortized over each
+//! executed batch). Results are recorded in EXPERIMENTS.md §E2E.
 //!
-//! Run with: `make artifacts && cargo run --release --example serve_edge`
+//! Run with: `cargo run --release --example serve_edge`
 
 use mensa::config::ServerConfig;
 use mensa::coordinator::Server;
@@ -26,11 +28,17 @@ fn lstm_input(rng: &mut Rng) -> Vec<f32> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
-    let cfg = ServerConfig { max_batch: 8, batch_timeout_us: 2000, ..Default::default() };
+    // Default to the crate's checked-in artifacts regardless of cwd;
+    // pass a directory argument to override.
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+    let cfg =
+        ServerConfig { max_batch: 8, batch_timeout_us: 2000, workers: 2, ..Default::default() };
+    let workers = cfg.workers;
     println!("loading artifacts from {dir}/ ...");
     let server = Server::start(&dir, cfg)?;
-    println!("server up (PJRT CPU; Python is NOT on this path)");
+    println!("server up: {workers} executor workers, per-family routing (Python is NOT on this path)");
 
     // --- correctness gate: batched numerics == solo numerics ---------
     let mut rng = Rng::new(42);
@@ -91,14 +99,22 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== serving report ===");
     println!("requests: {ok} ok / {rejected} rejected / {} failed", snap.failed);
     println!(
-        "wall time: {:.1} ms -> {:.0} req/s (PJRT CPU)",
+        "wall time: {:.1} ms -> {:.0} req/s ({} backend)",
         wall.as_secs_f64() * 1e3,
-        ok as f64 / wall.as_secs_f64()
+        ok as f64 / wall.as_secs_f64(),
+        if cfg!(feature = "pjrt") { "PJRT CPU" } else { "reference CPU" }
     );
     println!(
-        "latency: p50 {:.0} us, p99 {:.0} us, mean queue {:.0} us, mean batch {:.2}",
-        snap.p50_us, snap.p99_us, snap.mean_queue_us, snap.mean_batch
+        "latency: p50 {:.0} us, p99 {:.0} us, mean queue {:.0} us, mean batch {:.2} \
+         ({} jobs)",
+        snap.p50_us, snap.p99_us, snap.mean_queue_us, snap.mean_batch, snap.jobs
     );
+    let per_family: Vec<String> = snap
+        .completed_by_family
+        .iter()
+        .map(|(f, n)| format!("{f}={n}"))
+        .collect();
+    println!("per family: {}", per_family.join(" "));
     println!(
         "modeled Mensa-G edge cost: {:.3} mJ and {:.3} ms per request (averaged)",
         sim_energy / ok as f64 * 1e3,
@@ -106,6 +122,9 @@ fn main() -> anyhow::Result<()> {
     );
     server.shutdown();
     println!("clean shutdown. all layers composed: Pallas kernels -> JAX model ->");
-    println!("HLO artifact -> PJRT executable -> Rust batcher/router -> responses.");
+    println!(
+        "HLO artifact -> {} -> Rust batcher/executor pool -> responses.",
+        if cfg!(feature = "pjrt") { "PJRT executable" } else { "reference executor" }
+    );
     Ok(())
 }

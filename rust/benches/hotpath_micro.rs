@@ -9,7 +9,7 @@
 use mensa::accel::configs;
 use mensa::bench_harness::timer;
 use mensa::model::zoo;
-use mensa::scheduler::{Mapping, MensaScheduler};
+use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
 use mensa::sim::Simulator;
 use std::hint::black_box;
 
@@ -62,7 +62,29 @@ fn main() {
     });
     println!("{}", m.render());
 
-    // 4. Macro: the full 24-model x 4-system evaluation grid.
+    // 4. ScheduleCache: the serving path's family_sim_costs()
+    // equivalent — cold (schedule + simulate) vs a warm cache hit.
+    // Acceptance bar: the hit must be >= 10x faster than the cold
+    // path (it is typically orders of magnitude).
+    let cold = timer::bench("schedule_cache/cold_miss", 5, 5, || {
+        let cache = ScheduleCache::new();
+        black_box(cache.get_or_compute(black_box(&mensa), black_box(&cnn)));
+    });
+    println!("{}", cold.render());
+    let warm_cache = ScheduleCache::new();
+    warm_cache.get_or_compute(&mensa, &cnn);
+    let warm = timer::bench("schedule_cache/warm_hit", 20, 2_000, || {
+        black_box(warm_cache.get_or_compute(black_box(&mensa), black_box(&cnn)));
+    });
+    println!("{}", warm.render());
+    println!(
+        "schedule_cache speedup: {:.0}x (cold {:.0} ns -> hit {:.0} ns)",
+        cold.mean_ns / warm.mean_ns.max(1.0),
+        cold.mean_ns,
+        warm.mean_ns
+    );
+
+    // 5. Macro: the full 24-model x 4-system evaluation grid.
     let m = timer::bench("grid/24x4_evaluation", 3, 2, || {
         black_box(mensa::bench_harness::evaluation::evaluation_grid());
     });

@@ -141,10 +141,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch, in microseconds.
     pub batch_timeout_us: u64,
-    /// Worker threads executing batches. Currently informational: the
-    /// PJRT CPU client is single-owner, so one executor thread
-    /// serializes batches (matching §4.2 footnote 4's no-concurrent-
-    /// layers model); a TPU deployment would shard executors here.
+    /// Executor-pool size: worker threads executing batches, each
+    /// owning its own runtime instance. Batch jobs are routed by a
+    /// stable family hash (`coordinator::worker_for_family`), so one
+    /// family's batches stay ordered on one worker while different
+    /// families execute concurrently. Clamped to at least 1.
     pub workers: usize,
     /// Bounded queue depth before backpressure rejects requests.
     pub queue_depth: usize,

@@ -5,14 +5,19 @@
 //! or when its oldest request has waited `batch_timeout`. This is the
 //! standard serving trade-off: larger batches amortize dispatch (and on
 //! a real Mensa, fill the PE arrays), at the cost of queueing delay.
+//!
+//! Flushed jobs fan out over the executor pool's per-worker channels
+//! by [`worker_for_family`](super::worker_for_family): one family, one
+//! worker — different families batch *and* execute independently,
+//! same-family jobs stay FIFO.
 
-use super::Request;
+use super::{worker_for_family, Request};
 use crate::config::ServerConfig;
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
-/// A flushed batch ready for the executor.
+/// A flushed batch ready for an executor worker.
 #[derive(Debug)]
 pub struct BatchJob {
     /// Model family.
@@ -22,22 +27,29 @@ pub struct BatchJob {
 }
 
 /// The batching loop. Owns the router receiver; emits [`BatchJob`]s
-/// over a *bounded* channel: when the executor falls behind, the
-/// batcher blocks, the router queue fills, and `infer()` rejects —
-/// end-to-end backpressure instead of unbounded buffering.
+/// over *bounded* per-worker channels: when a worker falls behind, the
+/// batcher blocks on its channel, the router queue fills, and
+/// `infer()` rejects — end-to-end backpressure instead of unbounded
+/// buffering.
 pub struct Batcher {
     rx: Receiver<Request>,
-    tx: SyncSender<BatchJob>,
+    txs: Vec<SyncSender<BatchJob>>,
     max_batch: usize,
     timeout: Duration,
 }
 
 impl Batcher {
-    /// Create a batcher between the router queue and the executor.
-    pub fn new(rx: Receiver<Request>, tx: SyncSender<BatchJob>, cfg: &ServerConfig) -> Self {
+    /// Create a batcher between the router queue and the executor
+    /// pool's job channels (one per worker, indexed by
+    /// [`worker_for_family`](super::worker_for_family)).
+    ///
+    /// # Panics
+    /// Panics if `txs` is empty — a pool needs at least one worker.
+    pub fn new(rx: Receiver<Request>, txs: Vec<SyncSender<BatchJob>>, cfg: &ServerConfig) -> Self {
+        assert!(!txs.is_empty(), "executor pool needs at least one worker channel");
         Self {
             rx,
-            tx,
+            txs,
             max_batch: cfg.max_batch,
             timeout: Duration::from_micros(cfg.batch_timeout_us),
         }
@@ -104,9 +116,12 @@ impl Batcher {
             if requests.is_empty() {
                 return;
             }
-            // Executor gone: drop the batch; request senders see
+            // Stable routing: one family always lands on one worker,
+            // which is what keeps same-family responses ordered.
+            let worker = worker_for_family(family, self.txs.len());
+            // Worker gone: drop the batch; request senders see
             // disconnected reply channels.
-            let _ = self.tx.send(BatchJob { family: family.to_string(), requests });
+            let _ = self.txs[worker].send(BatchJob { family: family.to_string(), requests });
         }
     }
 }
@@ -133,9 +148,22 @@ mod tests {
     fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
         let (req_tx, req_rx) = mpsc::channel();
         let (job_tx, job_rx) = mpsc::sync_channel(16);
-        let b = Batcher::new(req_rx, job_tx, &cfg);
+        let b = Batcher::new(req_rx, vec![job_tx], &cfg);
         thread::spawn(move || b.run());
         (req_tx, job_rx)
+    }
+
+    /// Start a batcher over `workers` job channels.
+    fn start_pool(
+        cfg: ServerConfig,
+        workers: usize,
+    ) -> (mpsc::Sender<Request>, Vec<mpsc::Receiver<BatchJob>>) {
+        let (req_tx, req_rx) = mpsc::channel();
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..workers).map(|_| mpsc::sync_channel(16)).unzip();
+        let b = Batcher::new(req_rx, txs, &cfg);
+        thread::spawn(move || b.run());
+        (req_tx, rxs)
     }
 
     #[test]
@@ -180,6 +208,30 @@ mod tests {
         assert_eq!(fams, ["edge_cnn", "joint"]);
         assert_eq!(a.requests.len(), 2);
         assert_eq!(b.requests.len(), 2);
+    }
+
+    #[test]
+    fn jobs_route_to_the_family_worker() {
+        let cfg = ServerConfig { max_batch: 2, batch_timeout_us: 500_000, ..Default::default() };
+        let (tx, rxs) = start_pool(cfg, 2);
+        let mut keep = Vec::new();
+        for f in ["edge_cnn", "edge_lstm", "edge_cnn", "edge_lstm"] {
+            let (r, rx) = req(f);
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let cnn_worker = super::super::worker_for_family("edge_cnn", 2);
+        let lstm_worker = super::super::worker_for_family("edge_lstm", 2);
+        assert_ne!(cnn_worker, lstm_worker);
+        let cnn_job = rxs[cnn_worker].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(cnn_job.family, "edge_cnn");
+        assert_eq!(cnn_job.requests.len(), 2);
+        let lstm_job = rxs[lstm_worker].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(lstm_job.family, "edge_lstm");
+        assert_eq!(lstm_job.requests.len(), 2);
+        // No cross-talk: each worker channel saw exactly its family.
+        assert!(rxs[cnn_worker].try_recv().is_err());
+        assert!(rxs[lstm_worker].try_recv().is_err());
     }
 
     #[test]

@@ -1,7 +1,14 @@
 //! Serving metrics: request counts, latency percentiles, batch sizes,
-//! and the simulated edge cost accumulators.
+//! per-family completions, and the simulated edge cost accumulators.
+//!
+//! One registry is shared by the batcher and every executor-pool
+//! worker (a `Mutex` suffices: workers touch it once per *batch*, not
+//! per sample). Simulated energy/latency are accumulated from the
+//! per-request **amortized** shares, so a batch of N contributes one
+//! full-model cost in total, not N of them.
 
 use crate::util::stats;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -11,6 +18,8 @@ struct Inner {
     queue_us: Vec<f64>,
     batch_sizes: Vec<f64>,
     completed: u64,
+    completed_by_family: BTreeMap<String, u64>,
+    jobs: u64,
     rejected: u64,
     failed: u64,
     sim_energy_j: f64,
@@ -28,6 +37,10 @@ pub struct Metrics {
 pub struct Snapshot {
     /// Completed request count.
     pub completed: u64,
+    /// Completed requests per family, sorted by family name.
+    pub completed_by_family: Vec<(String, u64)>,
+    /// Executed batch jobs (after oversized-job splitting).
+    pub jobs: u64,
     /// Requests rejected by backpressure.
     pub rejected: u64,
     /// Requests that failed in execution.
@@ -40,9 +53,9 @@ pub struct Snapshot {
     pub mean_queue_us: f64,
     /// Mean executed batch size.
     pub mean_batch: f64,
-    /// Total simulated Mensa-G energy, joules.
+    /// Total simulated Mensa-G energy, joules (amortized shares).
     pub sim_energy_j: f64,
-    /// Total simulated Mensa-G device latency, seconds.
+    /// Total simulated Mensa-G device latency, seconds (amortized).
     pub sim_latency_s: f64,
 }
 
@@ -50,6 +63,7 @@ impl Metrics {
     /// Record one completed request.
     pub fn record_completion(
         &self,
+        family: &str,
         latency: Duration,
         queue: Duration,
         batch: usize,
@@ -58,11 +72,17 @@ impl Metrics {
     ) {
         let mut m = self.inner.lock().expect("metrics lock");
         m.completed += 1;
+        *m.completed_by_family.entry(family.to_string()).or_insert(0) += 1;
         m.latencies_us.push(latency.as_secs_f64() * 1e6);
         m.queue_us.push(queue.as_secs_f64() * 1e6);
         m.batch_sizes.push(batch as f64);
         m.sim_energy_j += sim_energy_j;
         m.sim_latency_s += sim_latency_s;
+    }
+
+    /// Record one executed batch job.
+    pub fn record_job(&self) {
+        self.inner.lock().expect("metrics lock").jobs += 1;
     }
 
     /// Record a backpressure rejection.
@@ -80,6 +100,12 @@ impl Metrics {
         let m = self.inner.lock().expect("metrics lock");
         Snapshot {
             completed: m.completed,
+            completed_by_family: m
+                .completed_by_family
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+            jobs: m.jobs,
             rejected: m.rejected,
             failed: m.failed,
             p50_us: stats::percentile(&m.latencies_us, 50.0),
@@ -99,22 +125,44 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::default();
-        m.record_completion(Duration::from_micros(100), Duration::from_micros(10), 4, 0.5, 0.01);
-        m.record_completion(Duration::from_micros(300), Duration::from_micros(30), 8, 0.5, 0.01);
+        m.record_completion(
+            "edge_cnn",
+            Duration::from_micros(100),
+            Duration::from_micros(10),
+            4,
+            0.5,
+            0.01,
+        );
+        m.record_completion(
+            "edge_lstm",
+            Duration::from_micros(300),
+            Duration::from_micros(30),
+            8,
+            0.5,
+            0.01,
+        );
+        m.record_job();
         m.record_rejection();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
+        assert_eq!(s.jobs, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.failed, 0);
         assert!((s.p50_us - 200.0).abs() < 1.0);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
         assert!((s.sim_energy_j - 1.0).abs() < 1e-12);
+        assert_eq!(
+            s.completed_by_family,
+            vec![("edge_cnn".to_string(), 1), ("edge_lstm".to_string(), 1)]
+        );
     }
 
     #[test]
     fn empty_snapshot_is_zeroed() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.completed, 0);
+        assert_eq!(s.jobs, 0);
         assert_eq!(s.p99_us, 0.0);
+        assert!(s.completed_by_family.is_empty());
     }
 }

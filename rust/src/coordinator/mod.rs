@@ -5,21 +5,50 @@
 //! ```text
 //! clients → Handle::infer() → router (bounded, backpressure)
 //!         → per-family dynamic batcher (max_batch / timeout)
-//!         → executor thread owning the PJRT runtime
+//!         → executor POOL: N workers, each owning its own runtime,
+//!           jobs routed by stable family hash
 //!         → per-request responses (real numerics) + simulated
 //!           edge-accelerator timing/energy from the Mensa scheduler
 //! ```
 //!
-//! Real compute runs through the AOT artifacts on the PJRT CPU client;
-//! the Mensa simulator supplies what the physical Mensa-G accelerators
-//! *would* spend per inference (latency, energy, accelerator mix), so
-//! the service reports both observed wall-clock and modeled edge cost.
+//! Real compute runs through the AOT artifacts (reference interpreter
+//! by default, PJRT CPU client under `--features pjrt`); the Mensa
+//! simulator supplies what the physical Mensa-G accelerators *would*
+//! spend per request (latency, energy, accelerator mix — amortized
+//! over the executed batch), so the service reports both observed
+//! wall-clock and modeled edge cost.
 //!
-//! Threading model: `std::thread` + `std::sync::mpsc` (tokio is not
-//! available offline — see DESIGN.md substitutions). The PJRT client
-//! is owned by a single executor thread; batches serialize through it,
-//! which matches the paper's no-concurrent-layers execution model
-//! (§4.2 footnote 4).
+//! # Threading model
+//!
+//! `std::thread` + `std::sync::mpsc` (tokio is not available offline —
+//! see DESIGN.md substitutions). `Server::start` spawns:
+//!
+//! * one **batcher** thread draining the bounded router queue and
+//!   flushing per-family [`BatchJob`]s;
+//! * `ServerConfig::workers` **executor** threads, each owning its own
+//!   [`Runtime`](crate::runtime::Runtime) instance (runtime clients are
+//!   single-owner) and its own bounded job channel.
+//!
+//! Jobs are routed with [`worker_for_family`] — a *stable* FNV-1a hash
+//! of the family name, so a family's jobs always land on the same
+//! worker. This mirrors the paper's Mensa design point in software:
+//! heterogeneous families stop serializing behind one another (the
+//! one-size-fits-all executor this module used to have) while each
+//! family still executes its batches strictly in submission order.
+//!
+//! # Ordering guarantee
+//!
+//! Per family, responses preserve request submission order: the
+//! batcher flushes a family's pending requests in arrival order, the
+//! per-worker job channel is FIFO, exactly one worker ever executes a
+//! given family, and oversized jobs are split into chunks executed
+//! front to back. *Across* families there is no ordering — that
+//! concurrency is the point of the pool.
+//!
+//! Modeled Mensa-G cost per family comes from
+//! [`ScheduleCache`](crate::scheduler::ScheduleCache), so starting a
+//! server (or several) schedules and simulates each proxy model once
+//! per process instead of once per worker.
 
 pub mod batcher;
 pub mod metrics;
@@ -29,8 +58,20 @@ pub use batcher::{BatchJob, Batcher};
 pub use metrics::Metrics;
 pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
 
+use crate::util::fnv1a_64;
 use std::sync::mpsc;
 use std::time::Instant;
+
+/// Which executor-pool worker serves `family`, out of `workers`.
+///
+/// Stable across processes and builds (FNV-1a, not `DefaultHasher`):
+/// restarting a server never re-shuffles family→worker affinity, and
+/// the three serving families spread across a 2-worker pool
+/// (`edge_cnn` → 0; `edge_lstm`, `joint` → 1).
+pub fn worker_for_family(family: &str, workers: usize) -> usize {
+    debug_assert!(workers > 0, "worker pool cannot be empty");
+    (fnv1a_64(family) % workers.max(1) as u64) as usize
+}
 
 /// One inference request as it flows through the coordinator.
 #[derive(Debug)]
@@ -43,4 +84,33 @@ pub struct Request {
     pub enqueued: Instant,
     /// Where the response goes.
     pub reply: mpsc::Sender<anyhow::Result<InferenceResponse>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_routing_is_stable_and_in_range() {
+        for workers in 1..=8 {
+            for family in ["edge_cnn", "edge_lstm", "joint", "anything"] {
+                let w = worker_for_family(family, workers);
+                assert!(w < workers);
+                assert_eq!(w, worker_for_family(family, workers), "deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn two_worker_pool_separates_cnn_and_lstm() {
+        // The mixed-load e2e test relies on these two families genuinely
+        // executing on different workers at the default pool size.
+        assert_ne!(worker_for_family("edge_cnn", 2), worker_for_family("edge_lstm", 2));
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_zero() {
+        assert_eq!(worker_for_family("edge_cnn", 1), 0);
+        assert_eq!(worker_for_family("joint", 1), 0);
+    }
 }

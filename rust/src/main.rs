@@ -188,7 +188,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    // Default to the checked-in artifacts next to this crate so the
+    // command works from any working directory; --artifacts overrides
+    // (e.g. for a deployed binary away from the source tree).
+    let default_dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let dir = args.get("artifacts").unwrap_or(default_dir).to_string();
     let n: usize = args.get("requests").unwrap_or("32").parse()?;
     let cfg = match args.get("config") {
         Some(path) => ServerConfig::from_toml(&std::fs::read_to_string(path)?)?,

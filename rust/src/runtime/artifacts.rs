@@ -3,10 +3,43 @@
 //! The manifest is written by `python/compile/aot.py` in the TOML
 //! subset `config::toml_lite` understands (JSON would need serde,
 //! which is unavailable offline).
+//!
+//! Each entry may carry explicit batch axes (`input<i>_batch_axis`,
+//! `output_batch_axis`): `edge_lstm` tensors are time-major `[T, B, D]`
+//! (batch on axis 1) while every other family is batch-major, and the
+//! server's pack/unpack must thread the right axis through both
+//! directions. Manifests without the keys fall back to
+//! [`default_batch_axis`] per family for inputs and to batch-major
+//! (axis 0) for outputs.
 
-use crate::config::toml_lite::{self, Value};
-use anyhow::{anyhow, Context, Result};
+use crate::config::toml_lite::{self, Table, Value};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
+
+/// The batch axis a family's *input* tensors use when the manifest
+/// does not say otherwise: `edge_lstm` is time-major `[T, B, D]`
+/// (axis 1), everything else is batch-major (axis 0). Outputs always
+/// default to axis 0 — the real lowered `edge_lstm` returns
+/// batch-major `[B, VOCAB]` logits.
+pub fn default_batch_axis(family: &str) -> usize {
+    if family == "edge_lstm" {
+        1
+    } else {
+        0
+    }
+}
+
+/// The `<family>` part of a `<family>_b<N>` variant name.
+fn family_of(name: &str) -> &str {
+    match name.rfind("_b") {
+        Some(idx) if !name[idx + 2..].is_empty()
+            && name[idx + 2..].chars().all(|c| c.is_ascii_digit()) =>
+        {
+            &name[..idx]
+        }
+        _ => name,
+    }
+}
 
 /// One artifact entry: a compiled model variant.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -19,6 +52,11 @@ pub struct ArtifactSpec {
     pub input_shapes: Vec<Vec<i64>>,
     /// Output tensor shape.
     pub output_shape: Vec<i64>,
+    /// Which axis of each input is the batch axis (same order as
+    /// `input_shapes`).
+    pub input_batch_axes: Vec<usize>,
+    /// Which axis of the output is the batch axis.
+    pub output_batch_axis: usize,
     /// Truncated sha256 of the HLO text (staleness detection).
     pub sha256: String,
 }
@@ -26,12 +64,7 @@ pub struct ArtifactSpec {
 impl ArtifactSpec {
     /// The `<family>` part of `<family>_b<N>` names.
     pub fn family(&self) -> &str {
-        match self.name.rfind("_b") {
-            Some(idx) if self.name[idx + 2..].chars().all(|c| c.is_ascii_digit()) => {
-                &self.name[..idx]
-            }
-            _ => &self.name,
-        }
+        family_of(&self.name)
     }
 
     /// The batch size encoded in the name (first dim for CNN/joint,
@@ -57,6 +90,22 @@ fn parse_shape(s: &str) -> Result<Vec<i64>> {
         .collect()
 }
 
+/// Read an optional batch-axis key, validating it against the tensor's
+/// rank; absent keys fall back to `default`.
+fn parse_batch_axis(t: &Table, key: &str, default: usize, shape: &[i64]) -> Result<usize> {
+    let axis = match t.get(key) {
+        None => default,
+        Some(v) => v
+            .as_int()
+            .and_then(|i| usize::try_from(i).ok())
+            .ok_or_else(|| anyhow!("key `{key}` must be a non-negative integer"))?,
+    };
+    if axis >= shape.len() {
+        bail!("`{key}` = {axis} out of range for rank-{} shape {shape:?}", shape.len());
+    }
+    Ok(axis)
+}
+
 impl Manifest {
     /// Parse manifest text.
     pub fn parse(text: &str) -> Result<Self> {
@@ -71,15 +120,32 @@ impl Manifest {
                 .get("num_inputs")
                 .and_then(Value::as_int)
                 .ok_or_else(|| anyhow!("missing num_inputs"))? as usize;
+            let name = get("name")?.to_string();
+            let default_axis = default_batch_axis(family_of(&name));
             let mut input_shapes = Vec::with_capacity(num_inputs);
+            let mut input_batch_axes = Vec::with_capacity(num_inputs);
             for i in 0..num_inputs {
-                input_shapes.push(parse_shape(get(&format!("input{i}_shape"))?)?);
+                let shape = parse_shape(get(&format!("input{i}_shape"))?)?;
+                input_batch_axes.push(
+                    parse_batch_axis(t, &format!("input{i}_batch_axis"), default_axis, &shape)
+                        .with_context(|| format!("artifact `{name}`"))?,
+                );
+                input_shapes.push(shape);
             }
+            let output_shape = parse_shape(get("output_shape")?)?;
+            // Outputs default to batch-major for *every* family: the
+            // real lowered edge_lstm returns [B, VOCAB] logits even
+            // though its inputs are time-major (aot.py writes both
+            // axes explicitly; the defaults only serve old manifests).
+            let output_batch_axis = parse_batch_axis(t, "output_batch_axis", 0, &output_shape)
+                .with_context(|| format!("artifact `{name}`"))?;
             artifacts.push(ArtifactSpec {
-                name: get("name")?.to_string(),
+                name,
                 file: get("file")?.to_string(),
                 input_shapes,
-                output_shape: parse_shape(get("output_shape")?)?,
+                output_shape,
+                input_batch_axes,
+                output_batch_axis,
                 sha256: get("sha256")?.to_string(),
             });
         }
@@ -132,8 +198,63 @@ sha256 = "ffff0000ffff0000"
         let cnn = m.find("edge_cnn_b4").unwrap();
         assert_eq!(cnn.input_shapes, vec![vec![4, 32, 32, 3]]);
         assert_eq!(cnn.output_shape, vec![4, 16]);
+        assert_eq!(cnn.input_batch_axes, vec![0], "batch-major default");
+        assert_eq!(cnn.output_batch_axis, 0);
         let joint = m.find("joint_b1").unwrap();
         assert_eq!(joint.input_shapes.len(), 2);
+        assert_eq!(joint.input_batch_axes, vec![0, 0]);
+    }
+
+    #[test]
+    fn batch_axes_explicit_and_lstm_default() {
+        let lstm = r#"
+[[artifact]]
+name = "edge_lstm_b4"
+file = "edge_lstm_b4.hlo.txt"
+num_inputs = 1
+input0_shape = "8x4x128"
+output_shape = "4x256"
+sha256 = "0000000000000000"
+
+[[artifact]]
+name = "edge_lstm_b2"
+file = "edge_lstm_b2.hlo.txt"
+num_inputs = 1
+input0_shape = "8x2x128"
+input0_batch_axis = 1
+output_shape = "8x2x32"
+output_batch_axis = 1
+sha256 = "0000000000000000"
+"#;
+        let m = Manifest::parse(lstm).unwrap();
+        // No keys: edge_lstm *inputs* default to time-major axis 1,
+        // but outputs default to batch-major (the real artifact
+        // returns [B, VOCAB] logits).
+        let b4 = m.find("edge_lstm_b4").unwrap();
+        assert_eq!(b4.input_batch_axes, vec![1]);
+        assert_eq!(b4.output_batch_axis, 0);
+        // Explicit keys override the defaults (a time-major output,
+        // as the reference-backend manifest declares).
+        let b2 = m.find("edge_lstm_b2").unwrap();
+        assert_eq!(b2.input_batch_axes, vec![1]);
+        assert_eq!(b2.output_batch_axis, 1);
+    }
+
+    #[test]
+    fn batch_axis_out_of_range_is_an_error() {
+        let bad = SAMPLE.replace(
+            "output_shape = \"4x16\"",
+            "output_shape = \"4x16\"\noutput_batch_axis = 2",
+        );
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn default_batch_axis_per_family() {
+        assert_eq!(default_batch_axis("edge_lstm"), 1);
+        assert_eq!(default_batch_axis("edge_cnn"), 0);
+        assert_eq!(default_batch_axis("joint"), 0);
     }
 
     #[test]

@@ -1,26 +1,48 @@
-//! PJRT runtime: load AOT artifacts and execute them on the request
-//! path.
+//! Artifact runtime: load AOT model artifacts and execute them on the
+//! request path.
 //!
 //! `make artifacts` lowers the L2 JAX models once to HLO text
-//! (`python/compile/aot.py`); this module loads each
-//! `artifacts/*.hlo.txt` through the `xla` crate
-//! (`HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::compile`) and exposes typed execution. Python never
-//! runs here — the Rust binary is self-contained once artifacts exist.
+//! (`python/compile/aot.py`) plus a `manifest.toml` describing every
+//! variant's shapes and batch axes. This module loads the manifest and
+//! executes each variant through one of two backends:
+//!
+//! * **reference** (default): the pure-Rust deterministic interpreter
+//!   in [`reference`] — no native dependencies, per-sample execution
+//!   along the manifest's batch axes, used by the offline build and CI;
+//! * **pjrt** (`--features pjrt`): the original XLA path — each
+//!   `artifacts/*.hlo.txt` goes through the `xla` crate
+//!   (`HloModuleProto::from_text_file` → `XlaComputation` →
+//!   `PjRtClient::compile`). The `xla` crate is not vendorable offline,
+//!   so this backend only builds once it is vendored next to `anyhow`
+//!   (see `rust/Cargo.toml`).
+//!
+//! Python never runs here — the Rust binary is self-contained once a
+//! manifest exists.
 
 pub mod artifacts;
+mod reference;
 
-pub use artifacts::{ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use artifacts::{default_batch_axis, ArtifactSpec, Manifest};
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
+/// Executable form of one artifact.
+enum Backend {
+    Reference(reference::RefModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtModel),
+}
+
 /// A compiled model variant ready to execute.
 pub struct LoadedModel {
     /// The artifact's manifest entry.
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    backend: Backend,
 }
 
 impl LoadedModel {
@@ -37,7 +59,6 @@ impl LoadedModel {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, (buf, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
             let want: usize = shape.iter().product::<i64>() as usize;
             if buf.len() != want {
@@ -48,18 +69,12 @@ impl LoadedModel {
                     shape
                 );
             }
-            literals.push(
-                xla::Literal::vec1(buf)
-                    .reshape(shape)
-                    .with_context(|| format!("reshaping input {i}"))?,
-            );
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        Ok(out.to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Reference(model) => Ok(model.execute(&self.spec, inputs)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(model) => model.execute(&self.spec, inputs),
+        }
     }
 
     /// Elements in the output tensor.
@@ -68,10 +83,11 @@ impl LoadedModel {
     }
 }
 
-/// The PJRT runtime: a CPU client plus every compiled artifact.
+/// The artifact runtime: every loaded model variant plus the backend's
+/// platform label.
 pub struct Runtime {
-    client: xla::PjRtClient,
     models: HashMap<String, LoadedModel>,
+    platform: String,
 }
 
 impl Runtime {
@@ -80,20 +96,29 @@ impl Runtime {
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref();
         let manifest = Manifest::load(dir.join("manifest.toml"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        #[cfg(feature = "pjrt")]
+        {
+            pjrt::load(dir, manifest)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Self::load_reference(manifest)
+        }
+    }
+
+    /// Build every manifest entry with the reference interpreter.
+    #[cfg_attr(feature = "pjrt", allow(dead_code))]
+    fn load_reference(manifest: Manifest) -> Result<Self> {
         let mut models = HashMap::new();
         for spec in manifest.artifacts {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e}", spec.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
-            models.insert(spec.name.clone(), LoadedModel { spec, exe });
+            let model = reference::RefModel::build(&spec)
+                .with_context(|| format!("building reference model `{}`", spec.name))?;
+            models.insert(
+                spec.name.clone(),
+                LoadedModel { spec, backend: Backend::Reference(model) },
+            );
         }
-        Ok(Self { client, models })
+        Ok(Self { models, platform: "cpu".into() })
     }
 
     /// Names of all loaded model variants.
@@ -113,9 +138,10 @@ impl Runtime {
         self.model(name)?.execute(inputs)
     }
 
-    /// The PJRT platform (diagnostics).
+    /// The execution platform (diagnostics): `cpu` for both the
+    /// reference interpreter and the PJRT CPU client.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 
     /// Pick the smallest batch variant of `family` (e.g. `edge_cnn`)
@@ -139,12 +165,12 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    // Runtime tests that need real artifacts live in
+    // Runtime tests over the real checked-in manifest live in
     // rust/tests/runtime_pjrt.rs; here we test pure helpers.
 
     #[test]
     fn variant_selection_logic() {
-        // Emulate the selection rule without a client.
+        // Emulate the selection rule without loading artifacts.
         let names = ["edge_cnn_b1", "edge_cnn_b4", "edge_cnn_b8", "joint_b1"];
         let pick = |family: &str, batch: usize| -> Option<usize> {
             names

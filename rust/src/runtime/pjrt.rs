@@ -1,0 +1,69 @@
+//! PJRT/XLA executor backend (feature `pjrt`).
+//!
+//! This is the original hardware-faithful execution path: each
+//! `artifacts/*.hlo.txt` is parsed and compiled through the external
+//! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`). The `xla` crate links native XLA libraries
+//! and cannot be vendored into the offline build image, so this module
+//! only compiles with `--features pjrt` after vendoring `xla` next to
+//! `anyhow` (see `rust/Cargo.toml`). The default build uses
+//! [`super::reference`] instead; both backends sit behind the same
+//! [`super::LoadedModel::execute`] validation.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use super::{Backend, LoadedModel, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// One compiled PJRT executable (the client is kept alive per model so
+/// `Runtime` needs no backend-specific fields).
+pub(super) struct PjrtModel {
+    _client: Arc<xla::PjRtClient>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtModel {
+    /// Execute pre-validated input buffers.
+    pub(super) fn execute(&self, spec: &ArtifactSpec, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(shape)
+                    .with_context(|| format!("reshaping input {i}"))?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Compile every manifest entry on a PJRT CPU client.
+pub(super) fn load(dir: &Path, manifest: Manifest) -> Result<Runtime> {
+    let client = Arc::new(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?);
+    let platform = client.platform_name();
+    let mut models = HashMap::new();
+    for spec in manifest.artifacts {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+        models.insert(
+            spec.name.clone(),
+            LoadedModel {
+                spec,
+                backend: Backend::Pjrt(PjrtModel { _client: Arc::clone(&client), exe }),
+            },
+        );
+    }
+    Ok(Runtime { models, platform })
+}

@@ -1,0 +1,313 @@
+//! Pure-Rust reference executor for AOT artifacts.
+//!
+//! The build image has no PJRT/XLA native libraries, so the default
+//! runtime backend executes each manifest entry with a small
+//! deterministic network instead of a compiled HLO module:
+//!
+//! * feed-forward families (`edge_cnn`, `joint`, anything unknown) run
+//!   one fused `tanh(Σᵢ Wᵢ·xᵢ)` layer per sample;
+//! * `edge_lstm` runs a time-major recurrent cell
+//!   `hₜ = tanh(Wx·xₜ + Wh·hₜ₋₁)` over the sequence and emits every
+//!   step's hidden state — genuinely order-sensitive, like the real
+//!   LSTM artifact.
+//!
+//! Weights are generated from an FNV-seeded [`Rng`] keyed by the
+//! *family* (not the variant), so `edge_cnn_b1` and `edge_cnn_b8`
+//! share parameters and a batched run reproduces per-request solo runs
+//! bit for bit — the coordinator's correctness contract. Every sample
+//! in a batch is computed independently along the spec's batch axes,
+//! which is exactly the semantics `pack_batch`/`unpack_batch` assume
+//! (including time-major `[T, B, D]` layouts).
+//!
+//! This is a *serving-path stand-in*, not a numerics reproduction: the
+//! real kernels live in `python/compile/` and execute under the
+//! `pjrt` feature once the `xla` crate is vendored.
+
+use super::artifacts::ArtifactSpec;
+use crate::util::rng::Rng;
+use crate::util::{fnv1a_64, tensor};
+use anyhow::{bail, Result};
+
+/// Per-sample network behind one artifact.
+enum RefNet {
+    /// `tanh(Σᵢ Wᵢ·xᵢ)`; one weight matrix per declared input, stored
+    /// row-major as `[in_size × out_size]`.
+    Dense { weights: Vec<Vec<f32>> },
+    /// Time-major recurrent cell over `t` steps of width `d`, hidden
+    /// size `h`; `wx` is `[d × h]`, `wh` is `[h × h]`.
+    Recurrent { wx: Vec<f32>, wh: Vec<f32>, t: usize, d: usize, h: usize },
+}
+
+/// A loaded reference model: the per-sample net plus the geometry
+/// needed to walk the batch axes.
+pub(crate) struct RefModel {
+    net: RefNet,
+    out_per_sample: usize,
+}
+
+/// Elements per sample: the shape's product with the batch axis
+/// excluded.
+fn per_sample_elems(shape: &[i64], axis: usize) -> usize {
+    shape
+        .iter()
+        .enumerate()
+        .map(|(d, &s)| if d == axis { 1 } else { s as usize })
+        .product()
+}
+
+/// Deterministic weight matrix for `(family, index)`, scaled to keep
+/// `tanh` out of saturation (`U(-√(3/fan_in), √(3/fan_in))`).
+fn gen_weights(family: &str, index: u64, fan_in: usize, fan_out: usize) -> Vec<f32> {
+    let seed = fnv1a_64(family) ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(index + 1);
+    let mut rng = Rng::new(seed);
+    let scale = (3.0 / fan_in.max(1) as f64).sqrt();
+    (0..fan_in * fan_out).map(|_| rng.range_f64(-scale, scale) as f32).collect()
+}
+
+/// Copy sample `b`'s elements out of a batched buffer (shared stride
+/// walk: `util::tensor` — the coordinator's pack/unpack uses the same
+/// arithmetic, which keeps batched == solo numerics bit-exact).
+fn extract_sample(buf: &[f32], shape: &[i64], axis: usize, b: usize) -> Vec<f32> {
+    let (outer, _, inner) = tensor::batch_strides(shape, axis);
+    let mut out = vec![0.0f32; outer * inner];
+    tensor::extract_sample_into(buf, shape, axis, b, &mut out);
+    out
+}
+
+impl RefModel {
+    /// Build the reference net for an artifact spec.
+    pub(crate) fn build(spec: &ArtifactSpec) -> Result<Self> {
+        if spec.input_shapes.is_empty() {
+            bail!("artifact has no inputs");
+        }
+        let out_batch = spec.output_shape[spec.output_batch_axis] as usize;
+        for (i, (shape, &axis)) in
+            spec.input_shapes.iter().zip(&spec.input_batch_axes).enumerate()
+        {
+            let b = shape[axis] as usize;
+            if b != out_batch {
+                bail!(
+                    "input {i} batch {b} (axis {axis} of {shape:?}) disagrees with \
+                     output batch {out_batch}"
+                );
+            }
+        }
+        let family = spec.family();
+        let out_per_sample = per_sample_elems(&spec.output_shape, spec.output_batch_axis);
+        let net = if family == "edge_lstm" {
+            let shape = &spec.input_shapes[0];
+            if shape.len() != 3 || spec.input_batch_axes[0] != 1 {
+                bail!("edge_lstm expects a time-major [T, B, D] input, got {shape:?}");
+            }
+            let t = shape[0] as usize;
+            let d = shape[2] as usize;
+            if t == 0 || out_per_sample % t != 0 {
+                bail!("edge_lstm output ({out_per_sample} per sample) not divisible by T={t}");
+            }
+            let h = out_per_sample / t;
+            RefNet::Recurrent {
+                wx: gen_weights(family, 0, d, h),
+                wh: gen_weights(family, 1, h, h),
+                t,
+                d,
+                h,
+            }
+        } else {
+            let weights = spec
+                .input_shapes
+                .iter()
+                .zip(&spec.input_batch_axes)
+                .enumerate()
+                .map(|(i, (shape, &axis))| {
+                    gen_weights(family, i as u64, per_sample_elems(shape, axis), out_per_sample)
+                })
+                .collect();
+            RefNet::Dense { weights }
+        };
+        Ok(Self { net, out_per_sample })
+    }
+
+    /// Execute the full variant batch. Inputs are already validated
+    /// against the spec by the caller (`LoadedModel::execute`).
+    pub(crate) fn execute(&self, spec: &ArtifactSpec, inputs: &[Vec<f32>]) -> Vec<f32> {
+        let out_total: usize = spec.output_shape.iter().product::<i64>() as usize;
+        let batch = spec.output_shape[spec.output_batch_axis] as usize;
+        let mut out = vec![0.0f32; out_total];
+        for b in 0..batch {
+            let samples: Vec<Vec<f32>> = inputs
+                .iter()
+                .enumerate()
+                .map(|(i, buf)| {
+                    extract_sample(buf, &spec.input_shapes[i], spec.input_batch_axes[i], b)
+                })
+                .collect();
+            let result = self.forward(&samples);
+            tensor::insert_sample_from(
+                &mut out,
+                &spec.output_shape,
+                spec.output_batch_axis,
+                b,
+                &result,
+            );
+        }
+        out
+    }
+
+    /// One sample through the net.
+    fn forward(&self, samples: &[Vec<f32>]) -> Vec<f32> {
+        match &self.net {
+            RefNet::Dense { weights } => {
+                let n = self.out_per_sample;
+                let mut acc = vec![0.0f32; n];
+                for (x, w) in samples.iter().zip(weights) {
+                    for (k, &xv) in x.iter().enumerate() {
+                        if xv != 0.0 {
+                            let row = &w[k * n..(k + 1) * n];
+                            for (a, &wv) in acc.iter_mut().zip(row) {
+                                *a += xv * wv;
+                            }
+                        }
+                    }
+                }
+                acc.iter().map(|a| a.tanh()).collect()
+            }
+            RefNet::Recurrent { wx, wh, t, d, h } => {
+                let (t, d, h) = (*t, *d, *h);
+                let x = &samples[0];
+                let mut hidden = vec![0.0f32; h];
+                let mut out = Vec::with_capacity(t * h);
+                let mut pre = vec![0.0f32; h];
+                for step in 0..t {
+                    pre.iter_mut().for_each(|p| *p = 0.0);
+                    for (k, &xv) in x[step * d..(step + 1) * d].iter().enumerate() {
+                        if xv != 0.0 {
+                            for (p, &wv) in pre.iter_mut().zip(&wx[k * h..(k + 1) * h]) {
+                                *p += xv * wv;
+                            }
+                        }
+                    }
+                    for (m, &hv) in hidden.iter().enumerate() {
+                        if hv != 0.0 {
+                            for (p, &wv) in pre.iter_mut().zip(&wh[m * h..(m + 1) * h]) {
+                                *p += hv * wv;
+                            }
+                        }
+                    }
+                    for (hid, &p) in hidden.iter_mut().zip(&pre) {
+                        *hid = p.tanh();
+                    }
+                    out.extend_from_slice(&hidden);
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(
+        name: &str,
+        inputs: Vec<(Vec<i64>, usize)>,
+        output: (Vec<i64>, usize),
+    ) -> ArtifactSpec {
+        ArtifactSpec {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            input_batch_axes: inputs.iter().map(|(_, a)| *a).collect(),
+            input_shapes: inputs.into_iter().map(|(s, _)| s).collect(),
+            output_shape: output.0,
+            output_batch_axis: output.1,
+            sha256: "0".repeat(16),
+        }
+    }
+
+    fn dense_spec(batch: i64) -> ArtifactSpec {
+        spec(
+            &format!("edge_cnn_b{batch}"),
+            vec![(vec![batch, 4, 2], 0)],
+            (vec![batch, 3], 0),
+        )
+    }
+
+    #[test]
+    fn deterministic_and_finite() {
+        let s = dense_spec(1);
+        let m = RefModel::build(&s).unwrap();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        let a = m.execute(&s, &[x.clone()]);
+        let b = m.execute(&s, &[x]);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        assert!(a.iter().any(|v| *v != 0.0), "non-trivial output");
+    }
+
+    #[test]
+    fn batched_rows_match_solo_runs_bitwise() {
+        let s1 = dense_spec(1);
+        let s4 = dense_spec(4);
+        let m1 = RefModel::build(&s1).unwrap();
+        let m4 = RefModel::build(&s4).unwrap();
+        let reqs: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..8).map(|i| ((i + r * 3) % 7) as f32 / 7.0).collect())
+            .collect();
+        let mut packed = Vec::new();
+        for r in &reqs {
+            packed.extend_from_slice(r);
+        }
+        let batched = m4.execute(&s4, &[packed]);
+        for (r, req) in reqs.iter().enumerate() {
+            let solo = m1.execute(&s1, &[req.clone()]);
+            assert_eq!(&batched[r * 3..(r + 1) * 3], solo.as_slice(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn recurrent_is_sequence_sensitive_and_time_major() {
+        // [T=4, B=2, D=3] -> [T=4, B=2, H=2].
+        let s = spec("edge_lstm_b2", vec![(vec![4, 2, 3], 1)], (vec![4, 2, 2], 1));
+        let m = RefModel::build(&s).unwrap();
+        // Sample 0: ramp; sample 1: the same ramp reversed in time.
+        let fwd: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) / 6.0).collect();
+        let mut rev = vec![0.0f32; 12];
+        for step in 0..4 {
+            rev[step * 3..(step + 1) * 3].copy_from_slice(&fwd[(3 - step) * 3..(4 - step) * 3]);
+        }
+        // Pack time-major: element (t, b, d) at t*2*3 + b*3 + d.
+        let mut packed = vec![0.0f32; 4 * 2 * 3];
+        for t in 0..4 {
+            packed[t * 6..t * 6 + 3].copy_from_slice(&fwd[t * 3..(t + 1) * 3]);
+            packed[t * 6 + 3..t * 6 + 6].copy_from_slice(&rev[t * 3..(t + 1) * 3]);
+        }
+        let out = m.execute(&s, &[packed]);
+        assert_eq!(out.len(), 16);
+        // Unpack sample outputs (time-major [T, B, H]).
+        let sample = |b: usize| -> Vec<f32> {
+            (0..4).flat_map(|t| out[t * 4 + b * 2..t * 4 + b * 2 + 2].to_vec()).collect()
+        };
+        let (s0, s1) = (sample(0), sample(1));
+        assert!(s0.iter().zip(&s1).any(|(a, b)| (a - b).abs() > 1e-5), "order-sensitive");
+        // Cross-check against a solo b1 run of the forward sequence.
+        let sb1 = spec("edge_lstm_b1", vec![(vec![4, 1, 3], 1)], (vec![4, 1, 2], 1));
+        let m1 = RefModel::build(&sb1).unwrap();
+        assert_eq!(m1.execute(&sb1, &[fwd]), s0, "batched == solo for the lstm");
+    }
+
+    #[test]
+    fn two_input_dense_uses_both_inputs() {
+        let s = spec("joint_b1", vec![(vec![1, 4], 0), (vec![1, 4], 0)], (vec![1, 5], 0));
+        let m = RefModel::build(&s).unwrap();
+        let a = m.execute(&s, &[vec![0.5; 4], vec![0.5; 4]]);
+        let b = m.execute(&s, &[vec![0.5; 4], vec![0.9; 4]]);
+        assert_ne!(a, b, "second input must matter");
+    }
+
+    #[test]
+    fn inconsistent_batch_is_rejected() {
+        let s = spec("joint_b2", vec![(vec![2, 4], 0), (vec![1, 4], 0)], (vec![2, 5], 0));
+        assert!(RefModel::build(&s).is_err());
+    }
+}

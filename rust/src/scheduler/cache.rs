@@ -1,0 +1,261 @@
+//! Schedule/cost caching for the serving hot path (§Perf).
+//!
+//! Two layers of reuse keep the request path off the scheduler's and
+//! simulator's cold paths:
+//!
+//! * [`CostTable`] — the per-`(layer, accelerator)` dataflow costs for
+//!   one `(model, system)` pair, computed **once** and shared by
+//!   Phase I, Phase II, the DP [`oracle`](super::oracle), and the
+//!   simulator. Before this table existed, `schedule` + `run` each
+//!   re-invoked `cfg.dataflow.cost(..)` for the same layers.
+//! * [`ScheduleCache`] — a `RwLock`-guarded memo of
+//!   `(system, model) → (Mapping, RunReport)`. The coordinator's
+//!   `family_sim_costs()` and any per-request re-simulation hit this
+//!   instead of re-running the two-phase scheduler and the simulator
+//!   from scratch; a hit is a read-lock plus an `Arc` clone.
+//!
+//! # Invalidation rules
+//!
+//! Entries are keyed by `(system.name, model.name)` — names, not
+//! structural hashes, because config sweeps construct systems once and
+//! the zoo's model names are unique. Consequently:
+//!
+//! * mutating an accelerator or model **in place** after it was cached
+//!   leaves a stale entry — call [`ScheduleCache::invalidate`] with the
+//!   system name (or [`ScheduleCache::clear`]) first;
+//! * two *different* systems sharing a name must not use the same
+//!   cache (give sweep variants distinct names, as
+//!   `bench_harness::ablations` does);
+//! * the process-wide [`ScheduleCache::global`] instance is shared by
+//!   every server in the process, which is exactly what makes a second
+//!   `Server::start` cheap.
+
+use crate::accel::configs::MensaSystem;
+use crate::accel::dataflow::LayerCost;
+use crate::model::{LayerId, ModelGraph};
+use crate::scheduler::{Mapping, MensaScheduler};
+use crate::sim::{RunReport, Simulator};
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Per-layer × per-accelerator dataflow costs for one (model, system)
+/// pair, computed once up front.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    per_layer: Vec<Vec<LayerCost>>,
+}
+
+impl CostTable {
+    /// Cost every layer of `model` on every accelerator of `system`.
+    pub fn build(system: &MensaSystem, model: &ModelGraph) -> Self {
+        let per_layer = model
+            .layers()
+            .iter()
+            .map(|layer| {
+                system.accels.iter().map(|cfg| cfg.dataflow.cost(cfg, layer)).collect()
+            })
+            .collect();
+        Self { per_layer }
+    }
+
+    /// The cost of `layer` on accelerator `accel`.
+    ///
+    /// # Panics
+    /// Panics if either index is out of range for the table.
+    pub fn cost(&self, layer: LayerId, accel: usize) -> &LayerCost {
+        &self.per_layer[layer][accel]
+    }
+
+    /// Number of layers covered.
+    pub fn num_layers(&self) -> usize {
+        self.per_layer.len()
+    }
+
+    /// `true` if the table covers no layers.
+    pub fn is_empty(&self) -> bool {
+        self.per_layer.is_empty()
+    }
+
+    /// Number of accelerators covered.
+    pub fn num_accels(&self) -> usize {
+        self.per_layer.first().map_or(0, Vec::len)
+    }
+}
+
+/// A cached scheduling outcome: the Mensa mapping plus the simulated
+/// run report for one (system, model) pair.
+#[derive(Debug)]
+pub struct ScheduledCost {
+    /// The two-phase Mensa schedule.
+    pub mapping: Mapping,
+    /// The simulator's report for that schedule.
+    pub report: RunReport,
+}
+
+/// Memoizes `(system, model) → Arc<ScheduledCost>` behind a `RwLock`.
+///
+/// Concurrent readers (the executor-pool workers) share hits without
+/// contention; a miss computes outside the lock and the first writer
+/// wins (losers adopt the existing entry), so results are stable even
+/// under racing cold lookups.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    entries: RwLock<HashMap<(String, String), Arc<ScheduledCost>>>,
+}
+
+impl ScheduleCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide shared cache.
+    pub fn global() -> &'static ScheduleCache {
+        static GLOBAL: OnceLock<ScheduleCache> = OnceLock::new();
+        GLOBAL.get_or_init(ScheduleCache::new)
+    }
+
+    /// Schedule + simulate `model` on `system`, memoized. A hit is a
+    /// read-lock and an `Arc` clone; a miss builds one [`CostTable`]
+    /// and shares it between the scheduler and the simulator.
+    pub fn get_or_compute(&self, system: &MensaSystem, model: &ModelGraph) -> Arc<ScheduledCost> {
+        let key = (system.name.clone(), model.name.clone());
+        if let Some(hit) = self.entries.read().expect("schedule cache lock").get(&key) {
+            return Arc::clone(hit);
+        }
+        // Miss: compute outside the lock (this is the slow path).
+        let table = CostTable::build(system, model);
+        let mapping = MensaScheduler::new(system).schedule_with_table(model, &table);
+        let report = Simulator::new(system).run_with_costs(model, &mapping, &table);
+        let fresh = Arc::new(ScheduledCost { mapping, report });
+        let mut entries = self.entries.write().expect("schedule cache lock");
+        Arc::clone(entries.entry(key).or_insert(fresh))
+    }
+
+    /// Drop every entry for a system (call after mutating it in place).
+    pub fn invalidate(&self, system_name: &str) {
+        self.entries
+            .write()
+            .expect("schedule cache lock")
+            .retain(|(sys, _), _| sys != system_name);
+    }
+
+    /// Drop all entries.
+    pub fn clear(&self) {
+        self.entries.write().expect("schedule cache lock").clear();
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.entries.read().expect("schedule cache lock").len()
+    }
+
+    /// `true` if nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::model::zoo;
+    use std::time::Instant;
+
+    #[test]
+    fn cost_table_matches_direct_dataflow_costs() {
+        let system = configs::mensa_g();
+        let model = zoo::cnn(0);
+        let table = CostTable::build(&system, &model);
+        assert_eq!(table.num_layers(), model.len());
+        assert_eq!(table.num_accels(), system.len());
+        assert!(!table.is_empty());
+        for (id, layer) in model.iter() {
+            for (a, cfg) in system.accels.iter().enumerate() {
+                let direct = cfg.dataflow.cost(cfg, layer);
+                let cached = table.cost(id, a);
+                assert_eq!(cached.latency_s, direct.latency_s, "layer {id} accel {a}");
+                assert_eq!(cached.macs, direct.macs);
+                assert_eq!(cached.energy.total_j(), direct.energy.total_j());
+            }
+        }
+    }
+
+    #[test]
+    fn cached_result_matches_uncached_pipeline() {
+        let system = configs::mensa_g();
+        let model = zoo::lstm(2);
+        let cache = ScheduleCache::new();
+        let cached = cache.get_or_compute(&system, &model);
+        let mapping = MensaScheduler::new(&system).schedule(&model);
+        let report = Simulator::new(&system).run(&model, &mapping);
+        assert_eq!(cached.mapping.as_slice(), mapping.as_slice());
+        assert_eq!(cached.report.total_latency_s, report.total_latency_s);
+        assert_eq!(cached.report.total_energy_j(), report.total_energy_j());
+    }
+
+    #[test]
+    fn second_lookup_shares_the_same_entry() {
+        let system = configs::mensa_g();
+        let model = zoo::cnn(1);
+        let cache = ScheduleCache::new();
+        let a = cache.get_or_compute(&system, &model);
+        let b = cache.get_or_compute(&system, &model);
+        assert!(Arc::ptr_eq(&a, &b), "hit must reuse the cached Arc");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_models_and_systems_get_distinct_entries() {
+        let mensa = configs::mensa_g();
+        let base = configs::baseline_system();
+        let cache = ScheduleCache::new();
+        cache.get_or_compute(&mensa, &zoo::cnn(0));
+        cache.get_or_compute(&mensa, &zoo::cnn(1));
+        cache.get_or_compute(&base, &zoo::cnn(0));
+        assert_eq!(cache.len(), 3);
+        cache.invalidate(&mensa.name);
+        assert_eq!(cache.len(), 1, "only the baseline entry survives");
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn cache_hit_is_at_least_10x_faster_than_cold_path() {
+        // The acceptance bar for the serving hot path: a warm
+        // `family_sim_costs()`-equivalent lookup must beat re-running
+        // the scheduler + simulator by ≥ 10x. The real ratio is orders
+        // of magnitude; 10x leaves headroom for noisy CI machines.
+        let system = configs::mensa_g();
+        let model = zoo::cnn(0);
+        let mut cold_ns = f64::INFINITY;
+        for _ in 0..3 {
+            let cache = ScheduleCache::new();
+            let t = Instant::now();
+            std::hint::black_box(cache.get_or_compute(&system, &model));
+            cold_ns = cold_ns.min(t.elapsed().as_nanos() as f64);
+        }
+        let cache = ScheduleCache::new();
+        cache.get_or_compute(&system, &model);
+        let iters = 200u32;
+        let t = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(cache.get_or_compute(&system, &model));
+        }
+        let warm_ns = t.elapsed().as_nanos() as f64 / f64::from(iters);
+        assert!(
+            warm_ns * 10.0 < cold_ns,
+            "warm hit {warm_ns:.0} ns/lookup vs cold {cold_ns:.0} ns — cache not ≥ 10x faster"
+        );
+    }
+
+    #[test]
+    fn global_cache_is_shared() {
+        let system = configs::mensa_g();
+        let model = zoo::transducer(0);
+        let a = ScheduleCache::global().get_or_compute(&system, &model);
+        let b = ScheduleCache::global().get_or_compute(&system, &model);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -24,6 +24,21 @@
 //! hypothetical scheduler §4.2 mentions Mensa's heuristic may fall
 //! short of) and the Phase-I-only ablation, both exercised by
 //! `benches/ablate_scheduler.rs`.
+//!
+//! # Cost reuse (§Perf)
+//!
+//! Every per-layer dataflow evaluation a schedule needs is hoisted into
+//! a [`CostTable`] built once per (model, system): Phase I's EDP
+//! fallback, Phase II's 2x rule, the DP [`oracle`], and the simulator
+//! (via [`Simulator::run_with_costs`](crate::sim::Simulator::run_with_costs))
+//! all read the same table instead of re-invoking
+//! `cfg.dataflow.cost(..)`. Whole (mapping, report) outcomes are
+//! additionally memoized by [`ScheduleCache`] — see [`cache`] for the
+//! invalidation rules.
+
+pub mod cache;
+
+pub use cache::{CostTable, ScheduleCache, ScheduledCost};
 
 use crate::accel::configs::MensaSystem;
 use crate::characterize::{classify, Family, LayerMetrics};
@@ -116,15 +131,15 @@ impl<'a> MensaScheduler<'a> {
 
     /// Min energy-delay-product accelerator for a layer (used for
     /// outliers and when the preferred dataflow is absent).
-    fn best_by_edp(&self, layer: &crate::model::Layer) -> usize {
+    fn best_by_edp(&self, table: &CostTable, id: LayerId) -> usize {
         let mut best = 0usize;
         let mut best_edp = f64::INFINITY;
-        for (id, cfg) in self.system.accels.iter().enumerate() {
-            let c = cfg.dataflow.cost(cfg, layer);
+        for a in 0..self.system.len() {
+            let c = table.cost(id, a);
             let edp = c.latency_s * c.energy.total_j().max(1e-18);
             if edp < best_edp {
                 best_edp = edp;
-                best = id;
+                best = a;
             }
         }
         best
@@ -132,20 +147,23 @@ impl<'a> MensaScheduler<'a> {
 
     /// Phase I assignment plus the per-layer metrics it computed
     /// (Phase II reuses them instead of re-deriving — §Perf).
-    fn phase1_with_metrics(&self, model: &ModelGraph) -> (Vec<usize>, Vec<LayerMetrics>) {
+    fn phase1_with_metrics(
+        &self,
+        model: &ModelGraph,
+        table: &CostTable,
+    ) -> (Vec<usize>, Vec<LayerMetrics>) {
         let metrics: Vec<LayerMetrics> =
             model.layers().iter().map(LayerMetrics::of).collect();
-        let assignment = model
-            .layers()
+        let assignment = metrics
             .iter()
-            .zip(&metrics)
-            .map(|(layer, m)| {
+            .enumerate()
+            .map(|(id, m)| {
                 let family = classify(m);
                 match preferred_dataflow(family)
                     .and_then(|d| self.system.accels.iter().position(|a| a.dataflow == d))
                 {
-                    Some(id) => id,
-                    None => self.best_by_edp(layer),
+                    Some(accel) => accel,
+                    None => self.best_by_edp(table, id),
                 }
             })
             .collect();
@@ -157,15 +175,36 @@ impl<'a> MensaScheduler<'a> {
         if self.system.len() == 1 {
             return Mapping::uniform(model.len(), 0);
         }
-        Mapping::new(self.phase1_with_metrics(model).0)
+        let table = CostTable::build(self.system, model);
+        Mapping::new(self.phase1_with_metrics(model, &table).0)
     }
 
-    /// Full schedule: Phase I + (optionally) Phase II.
+    /// Full schedule: Phase I + (optionally) Phase II. Builds a fresh
+    /// [`CostTable`]; callers that already have one (or also want to
+    /// simulate) should use [`schedule_with_table`](Self::schedule_with_table)
+    /// to share it.
     pub fn schedule(&self, model: &ModelGraph) -> Mapping {
         if self.system.len() == 1 {
             return Mapping::uniform(model.len(), 0);
         }
-        let (ideal, metrics) = self.phase1_with_metrics(model);
+        let table = CostTable::build(self.system, model);
+        self.schedule_with_table(model, &table)
+    }
+
+    /// Full schedule reusing a prebuilt per-layer cost table (the
+    /// serving path builds one table per (model, system) and shares it
+    /// with the simulator — see [`cache::ScheduleCache`]).
+    ///
+    /// # Panics
+    /// Panics if `table` does not cover `model`'s layers and this
+    /// system's accelerators.
+    pub fn schedule_with_table(&self, model: &ModelGraph, table: &CostTable) -> Mapping {
+        if self.system.len() == 1 || model.is_empty() {
+            return Mapping::uniform(model.len(), 0);
+        }
+        assert_eq!(table.num_layers(), model.len(), "cost table/model length mismatch");
+        assert_eq!(table.num_accels(), self.system.len(), "cost table/system width mismatch");
+        let (ideal, metrics) = self.phase1_with_metrics(model, table);
         if !self.phase2 || model.is_empty() {
             return Mapping::new(ideal);
         }
@@ -173,7 +212,7 @@ impl<'a> MensaScheduler<'a> {
         let mut assignment = Vec::with_capacity(model.len());
         // The first layer runs on its ideal accelerator.
         assignment.push(ideal[0]);
-        for (id, layer) in model.iter().skip(1) {
+        for id in 1..model.len() {
             let ideal_id = ideal[id];
             // destination_{i-1}: where the sequential predecessor ended
             // up (the paper's sequential walk).
@@ -203,10 +242,8 @@ impl<'a> MensaScheduler<'a> {
 
             // Rule 1: 2x compute-resources rule — staying would more
             // than double execution time vs the ideal accelerator.
-            let cfg_prev = &self.system.accels[prev_dest];
-            let cfg_ideal = &self.system.accels[ideal_id];
-            let cost_prev = cfg_prev.dataflow.cost(cfg_prev, layer);
-            let cost_ideal = cfg_ideal.dataflow.cost(cfg_ideal, layer);
+            let cost_prev = table.cost(id, prev_dest);
+            let cost_ideal = table.cost(id, ideal_id);
             let rule1 = cost_prev.latency_s > 2.0 * cost_ideal.latency_s;
 
             assignment.push(if rule1 { ideal_id } else { prev_dest });
@@ -232,10 +269,11 @@ pub fn oracle(system: &MensaSystem, model: &ModelGraph, lambda: f64) -> Mapping 
     // objective the simulator reports.
     let static_w = system.total_leakage_w() + crate::energy::DRAM_STATIC_W;
     let sec_weight = 1.0 + lambda * static_w;
-    // cost[i][a]: per-layer execution score.
+    // Per-(layer, accel) execution scores read from one shared table
+    // instead of re-running the dataflow models inside the DP.
+    let table = CostTable::build(system, model);
     let score = |i: usize, a: usize| -> f64 {
-        let cfg = &system.accels[a];
-        let c = cfg.dataflow.cost(cfg, model.layer(i));
+        let c = table.cost(i, a);
         c.latency_s * sec_weight + lambda * c.energy.total_j()
     };
     // Transfer score between accelerators for `bytes`.
@@ -310,6 +348,18 @@ mod tests {
         assert_eq!(m.histogram(3), vec![3, 1, 2]);
         assert_eq!(m.switch_count(), 3);
         assert_eq!(Mapping::uniform(4, 1).switch_count(), 0);
+    }
+
+    #[test]
+    fn schedule_with_table_matches_schedule() {
+        // The table-sharing fast path must be behavior-preserving.
+        let sys = configs::mensa_g();
+        for model in [zoo::cnn(2), zoo::lstm(1), zoo::transducer(0)] {
+            let table = CostTable::build(&sys, &model);
+            let fresh = MensaScheduler::new(&sys).schedule(&model);
+            let shared = MensaScheduler::new(&sys).schedule_with_table(&model, &table);
+            assert_eq!(fresh.as_slice(), shared.as_slice(), "{}", model.name);
+        }
     }
 
     #[test]

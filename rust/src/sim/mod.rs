@@ -17,7 +17,7 @@ use crate::accel::configs::MensaSystem;
 use crate::accel::dataflow::LayerCost;
 use crate::energy::{EnergyBreakdown, DRAM_STATIC_W};
 use crate::model::{LayerId, ModelGraph};
-use crate::scheduler::Mapping;
+use crate::scheduler::{CostTable, Mapping};
 use crate::util::stats;
 
 /// Execution record for one layer.
@@ -154,6 +154,39 @@ impl<'a> Simulator<'a> {
     /// Panics if the mapping length doesn't match the model, or if any
     /// accelerator id is out of range.
     pub fn run(&self, model: &ModelGraph, mapping: &Mapping) -> RunReport {
+        self.run_inner(model, mapping, |id, accel_id| {
+            let cfg = &self.system.accels[accel_id];
+            cfg.dataflow.cost(cfg, model.layer(id))
+        })
+    }
+
+    /// Run one inference reading per-layer costs from a prebuilt
+    /// [`CostTable`] instead of re-evaluating the dataflow models —
+    /// the serving path shares one table between the scheduler and
+    /// this simulator (see `scheduler::cache`).
+    ///
+    /// # Panics
+    /// Panics on mapping/model/table size mismatches.
+    pub fn run_with_costs(
+        &self,
+        model: &ModelGraph,
+        mapping: &Mapping,
+        table: &CostTable,
+    ) -> RunReport {
+        assert_eq!(table.num_layers(), model.len(), "cost table/model length mismatch");
+        assert!(
+            table.is_empty() || table.num_accels() == self.system.len(),
+            "cost table/system width mismatch"
+        );
+        self.run_inner(model, mapping, |id, accel_id| *table.cost(id, accel_id))
+    }
+
+    fn run_inner(
+        &self,
+        model: &ModelGraph,
+        mapping: &Mapping,
+        cost_of: impl Fn(LayerId, usize) -> LayerCost,
+    ) -> RunReport {
         assert_eq!(mapping.len(), model.len(), "mapping/model length mismatch");
         let mut layer_execs = Vec::with_capacity(model.len());
         let mut per_accel: Vec<AccelStats> = self
@@ -173,11 +206,11 @@ impl<'a> Simulator<'a> {
         let mut transfer_bytes = 0.0f64;
         let mut transfer_energy = 0.0f64;
 
-        for (id, layer) in model.iter() {
+        for id in 0..model.len() {
             let accel_id = mapping.accel_of(id);
             assert!(accel_id < self.system.len(), "accel id {accel_id} out of range");
             let cfg = &self.system.accels[accel_id];
-            let cost = cfg.dataflow.cost(cfg, layer);
+            let cost = cost_of(id, accel_id);
 
             // Charge DRAM round-trips for operands produced elsewhere.
             let mut t_in = 0.0f64;
@@ -304,6 +337,23 @@ mod tests {
         let r = Simulator::new(&sys).run(&m, &all_on(m.len(), 0));
         let frac = r.energy.offchip_fraction();
         assert!((0.55..0.95).contains(&frac), "off-chip fraction {frac:.3}");
+    }
+
+    #[test]
+    fn run_with_costs_matches_run() {
+        // The table-fed fast path must reproduce the recomputing path
+        // bit for bit (same f64 operations in the same order).
+        let sys = configs::mensa_g();
+        let sim = Simulator::new(&sys);
+        for model in [zoo::cnn(0), zoo::lstm(1)] {
+            let mapping = crate::scheduler::MensaScheduler::new(&sys).schedule(&model);
+            let table = CostTable::build(&sys, &model);
+            let a = sim.run(&model, &mapping);
+            let b = sim.run_with_costs(&model, &mapping, &table);
+            assert_eq!(a.total_latency_s, b.total_latency_s, "{}", model.name);
+            assert_eq!(a.total_energy_j(), b.total_energy_j(), "{}", model.name);
+            assert_eq!(a.transfer_count, b.transfer_count);
+        }
     }
 
     #[test]

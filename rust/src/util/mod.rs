@@ -6,6 +6,7 @@ pub mod check;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod tensor;
 
 /// Bytes in a kibibyte / mebibyte (the paper reports kB/MB in binary
 /// units, matching CACTI conventions).
@@ -30,6 +31,19 @@ pub fn in_range(value: f64, lo: f64, hi: f64) -> bool {
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0, "ceil_div by zero");
     a.div_ceil(b)
+}
+
+/// FNV-1a 64-bit hash. Used where a hash must be *stable across
+/// processes and builds* (executor-pool family routing, reference-
+/// backend weight seeding) — `std`'s `DefaultHasher` explicitly does
+/// not promise that.
+pub fn fnv1a_64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -67,5 +81,16 @@ mod tests {
     fn unit_constants() {
         assert_eq!(KB, 1024);
         assert_eq!(MB, 1024 * 1024);
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64("foobar"), 0x85944171f73967e8);
+        // Stability contract: these exact values route families to
+        // executor-pool workers; they must never change.
+        assert_ne!(fnv1a_64("edge_cnn") % 2, fnv1a_64("edge_lstm") % 2);
     }
 }

@@ -41,11 +41,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 /// Minimum; NaN-free inputs assumed. 0.0 for an empty slice.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
-/// Maximum; 0.0 for an empty slice.
+/// Maximum; NaN-free inputs assumed. 0.0 for an empty slice.
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
@@ -133,5 +139,21 @@ mod tests {
         let xs = [3.0, -1.0, 7.0];
         assert_eq!(min(&xs), -1.0);
         assert_eq!(max(&xs), 7.0);
+    }
+
+    #[test]
+    fn min_max_empty_match_documented_contract() {
+        // Regression: these used to leak the fold seeds
+        // (INFINITY/NEG_INFINITY) despite the docs promising 0.0.
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert!(min(&[]).is_finite());
+        assert!(max(&[]).is_finite());
+    }
+
+    #[test]
+    fn min_max_single_element() {
+        assert_eq!(min(&[4.5]), 4.5);
+        assert_eq!(max(&[4.5]), 4.5);
     }
 }

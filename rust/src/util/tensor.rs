@@ -1,0 +1,94 @@
+//! Batched-tensor layout helpers.
+//!
+//! One definition of the batch-axis stride walk, shared by the
+//! coordinator's `pack_batch`/`unpack_batch` and the reference
+//! runtime's per-sample execution. These two sides must agree
+//! bit-for-bit for the serving correctness gate (batched numerics ==
+//! solo numerics) to hold, so the arithmetic lives here exactly once.
+//!
+//! A shape `[d0, .., axis, .., dk]` splits around its batch axis into
+//! `(outer, batch, inner)` blocks: element `(o, b, i)` of the batched
+//! buffer lives at `o * batch * inner + b * inner + i`, and one
+//! sample's buffer is the `outer * inner` elements with `b` fixed —
+//! which for time-major `[T, B, D]` layouts (axis 1) is *not* a
+//! contiguous slab.
+
+/// `(outer, batch, inner)` block sizes of `shape` around `axis`.
+///
+/// # Panics
+/// Panics if `axis >= shape.len()`.
+pub fn batch_strides(shape: &[i64], axis: usize) -> (usize, usize, usize) {
+    let outer: usize = shape[..axis].iter().product::<i64>() as usize;
+    let batch = shape[axis] as usize;
+    let inner: usize = shape[axis + 1..].iter().product::<i64>() as usize;
+    (outer, batch, inner)
+}
+
+/// Copy sample `b` out of a batched buffer into `sample`
+/// (`outer * inner` elements).
+pub fn extract_sample_into(
+    buf: &[f32],
+    shape: &[i64],
+    axis: usize,
+    b: usize,
+    sample: &mut [f32],
+) {
+    let (outer, batch, inner) = batch_strides(shape, axis);
+    debug_assert!(b < batch, "sample index within batch");
+    debug_assert_eq!(sample.len(), outer * inner, "sample buffer size");
+    for o in 0..outer {
+        let src = o * batch * inner + b * inner;
+        sample[o * inner..(o + 1) * inner].copy_from_slice(&buf[src..src + inner]);
+    }
+}
+
+/// Write `sample` (`outer * inner` elements) into slot `b` of a
+/// batched buffer.
+pub fn insert_sample_from(
+    dst: &mut [f32],
+    shape: &[i64],
+    axis: usize,
+    b: usize,
+    sample: &[f32],
+) {
+    let (outer, batch, inner) = batch_strides(shape, axis);
+    debug_assert!(b < batch, "sample index within batch");
+    debug_assert_eq!(sample.len(), outer * inner, "sample buffer size");
+    for o in 0..outer {
+        let at = o * batch * inner + b * inner;
+        dst[at..at + inner].copy_from_slice(&sample[o * inner..(o + 1) * inner]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_batch_major_and_time_major() {
+        assert_eq!(batch_strides(&[4, 3], 0), (1, 4, 3));
+        assert_eq!(batch_strides(&[2, 3, 5], 1), (2, 3, 5));
+        assert_eq!(batch_strides(&[2, 3, 5], 2), (6, 5, 1));
+    }
+
+    #[test]
+    fn insert_extract_roundtrip_on_both_axes() {
+        for axis in [0usize, 1] {
+            let shape = [if axis == 0 { 3 } else { 2 }, if axis == 0 { 4 } else { 3 }, 2];
+            let (outer, batch, inner) = batch_strides(&shape, axis);
+            let per = outer * inner;
+            let mut packed = vec![0.0f32; outer * batch * inner];
+            let samples: Vec<Vec<f32>> = (0..batch)
+                .map(|b| (0..per).map(|i| (b * 100 + i) as f32).collect())
+                .collect();
+            for (b, s) in samples.iter().enumerate() {
+                insert_sample_from(&mut packed, &shape, axis, b, s);
+            }
+            for (b, s) in samples.iter().enumerate() {
+                let mut back = vec![0.0f32; per];
+                extract_sample_into(&packed, &shape, axis, b, &mut back);
+                assert_eq!(&back, s, "axis {axis} sample {b}");
+            }
+        }
+    }
+}

@@ -158,7 +158,9 @@ fn backpressure_rejects_when_queue_full() {
 #[test]
 fn oversized_lstm_batch_splits_across_variants() {
     // edge_lstm's largest compiled variant is b4; a flood of 8 must be
-    // chunked by the executor, not failed.
+    // chunked by the executor, not failed — every request replied to,
+    // with `batch_size` reflecting the executed chunk, not the
+    // original oversized job.
     let Some(dir) = artifacts_dir() else { return };
     let cfg = ServerConfig { max_batch: 8, batch_timeout_us: 50_000, ..Default::default() };
     let server = Server::start(&dir, cfg).expect("start");
@@ -171,7 +173,122 @@ fn oversized_lstm_batch_splits_across_variants() {
     for rx in rxs {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
         assert_eq!(resp.output.len(), 256);
+        assert!(
+            resp.batch_size <= 4,
+            "batch_size {} exceeds the largest compiled variant",
+            resp.batch_size
+        );
     }
-    assert_eq!(server.metrics().failed, 0);
+    let snap = server.metrics();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 8, "all chunked requests replied");
+    server.shutdown();
+}
+
+fn lstm_seq(seed: usize) -> Vec<f32> {
+    (0..8 * 128).map(|i| (((i * 7 + seed * 131) % 23) as f32 - 11.0) / 23.0).collect()
+}
+
+#[test]
+fn mixed_families_round_trip_on_worker_pool() {
+    // The executor-pool acceptance test: with workers >= 2, a mixed
+    // edge_cnn + edge_lstm load completes with per-family response
+    // ordering preserved. Ordering is verified through content: each
+    // response must equal its own request's solo output, so any
+    // cross-request mixup inside a batch (including the time-major
+    // LSTM interleaving bug), between chunks, or between workers would
+    // mismatch.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_timeout_us: 20_000,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+
+    // Solo baselines (sequential, batch of 1 each).
+    let solo_cnn: Vec<Vec<f32>> = (0..8)
+        .map(|i| server.infer_blocking("edge_cnn", vec![cnn_input(i)], TIMEOUT).unwrap().output)
+        .collect();
+    let solo_lstm: Vec<Vec<f32>> = (0..8)
+        .map(|i| server.infer_blocking("edge_lstm", vec![lstm_seq(i)], TIMEOUT).unwrap().output)
+        .collect();
+
+    // Interleaved flood across both families.
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        rxs.push(("edge_cnn", i, server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit")));
+        rxs.push((
+            "edge_lstm",
+            i,
+            server.infer("edge_lstm", vec![lstm_seq(i)]).expect("submit"),
+        ));
+    }
+    let mut batched = 0;
+    for (family, i, rx) in rxs {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        let solo = if family == "edge_cnn" { &solo_cnn[i] } else { &solo_lstm[i] };
+        assert_eq!(resp.output.len(), solo.len(), "{family} request {i}");
+        for (a, b) in resp.output.iter().zip(solo) {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "{family} request {i}: batched {a} vs solo {b} — response misrouted"
+            );
+        }
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+        assert!(resp.sim.energy_j > 0.0, "modeled cost rides along");
+    }
+    assert!(batched >= 8, "expected coalescing under the flood, got {batched}");
+
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 32, "16 solo + 16 flooded");
+    assert_eq!(snap.failed, 0);
+    let by_family: std::collections::HashMap<_, _> =
+        snap.completed_by_family.iter().cloned().collect();
+    assert_eq!(by_family.get("edge_cnn"), Some(&16));
+    assert_eq!(by_family.get("edge_lstm"), Some(&16));
+    server.shutdown();
+}
+
+#[test]
+fn batched_sim_cost_is_amortized_across_the_batch() {
+    // A solo request carries the full modeled family cost; a request
+    // riding in a batch of n carries 1/n of it (no double counting in
+    // the energy accounting).
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig { max_batch: 4, batch_timeout_us: 50_000, ..Default::default() };
+    let server = Server::start(&dir, cfg).expect("start");
+    let solo = server.infer_blocking("edge_cnn", vec![cnn_input(0)], TIMEOUT).expect("solo");
+    assert_eq!(solo.batch_size, 1);
+    assert!(solo.sim.energy_j > 0.0);
+
+    let rxs: Vec<_> = (0..4)
+        .map(|i| server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit"))
+        .collect();
+    let resps: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("recv").expect("ok"))
+        .collect();
+    let mut batched_checked = 0;
+    for resp in &resps {
+        let expected = solo.sim.energy_j / resp.batch_size as f64;
+        assert!(
+            (resp.sim.energy_j - expected).abs() < 1e-12 * solo.sim.energy_j.max(1.0),
+            "batch {}: energy {} != full {} / {}",
+            resp.batch_size,
+            resp.sim.energy_j,
+            solo.sim.energy_j,
+            resp.batch_size
+        );
+        let lat_expected = solo.sim.latency_s / resp.batch_size as f64;
+        assert!((resp.sim.latency_s - lat_expected).abs() < 1e-12);
+        if resp.batch_size > 1 {
+            batched_checked += 1;
+        }
+    }
+    assert!(batched_checked >= 2, "flood did not coalesce; amortization untested");
     server.shutdown();
 }

@@ -235,16 +235,17 @@ fn prop_pack_unpack_roundtrip() {
                 vec![*outer as i64, *batch as i64, *inner as i64]
             };
             let refs: Vec<&[f32]> = reqs.iter().map(|v| v.as_slice()).collect();
-            let packed = pack_batch(&shape, if *axis == 0 { 0 } else { 1 }, &refs);
+            let axis = if *axis == 0 { 0 } else { 1 };
+            let packed = pack_batch(&shape, axis, &refs);
             ensure(
                 packed.len() as i64 == shape.iter().product::<i64>(),
                 "packed size matches shape",
             )?;
-            if *axis == 0 {
-                let rows = unpack_batch(&packed, *batch, reqs.len());
-                for (i, row) in rows.iter().enumerate() {
-                    ensure(row == &reqs[i], format!("row {i} corrupted"))?;
-                }
+            // Unpacking mirrors packing on the same axis — including
+            // the time-major axis-1 layout edge_lstm uses.
+            let rows = unpack_batch(&packed, &shape, axis, reqs.len());
+            for (i, row) in rows.iter().enumerate() {
+                ensure(row == &reqs[i], format!("axis {axis}: row {i} corrupted"))?;
             }
             Ok(())
         },

@@ -1,0 +1,225 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim
+//! provides the subset of the `anyhow` API the workspace uses:
+//!
+//! * [`Error`] — an opaque error carrying a flattened message chain
+//!   (`context: context: root cause`). Unlike real `anyhow`, there is
+//!   no downcasting or backtrace capture; converting a source error
+//!   eagerly folds its `source()` chain into the message.
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`] / [`bail!`] — formatted construction / early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (any `std::error::Error` *or* an [`Error`]) and on `Option`.
+//!
+//! Formatting matches what the test-suite asserts on: both `{e}` and
+//! `{e:#}` render the full `outer: inner: root` chain, so substring
+//! checks written against real `anyhow`'s `{:#}` output keep passing.
+//!
+//! The coherence structure (the private [`ext::StdError`] helper trait
+//! with a blanket impl for `std::error::Error` types plus a concrete
+//! impl for [`Error`], which itself deliberately does **not** implement
+//! `std::error::Error`) mirrors real `anyhow`, which is what makes the
+//! blanket `From` conversion and the `Context` impls coexist on stable.
+
+use core::fmt::{self, Display};
+
+/// An opaque error: a flattened, `': '`-joined message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg(message: impl Display) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context layer (`context: current`).
+    fn wrap(self, context: impl Display) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both render the full chain (see module doc).
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that absence is what makes this blanket impl coherent (same trick as
+// real `anyhow`).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut msg = err.to_string();
+        let mut source = err.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return a formatted [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+mod ext {
+    use super::Error;
+    use core::fmt::Display;
+
+    /// Private helper: "anything that can become an [`Error`] while
+    /// absorbing a context layer".
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).wrap(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.wrap(context)
+        }
+    }
+}
+
+/// Attach context to errors, `anyhow`-style.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad {} of {}", "kind", 7);
+        assert_eq!(e.to_string(), "bad kind of 7");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+
+    #[test]
+    fn context_chains_render_in_both_formats() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest: missing thing");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing thing");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_error_and_option() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let e = base.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 2: root");
+        let none: Option<u8> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(f().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert!(f(0).unwrap_err().to_string().contains("positive"));
+    }
+}
