@@ -3,8 +3,9 @@
 //!
 //! Loads the AOT artifacts (L1 Pallas kernels inside L2 JAX models,
 //! lowered to HLO text; the reference interpreter executes them in the
-//! default offline build), starts the L3 coordinator (router → dynamic
-//! batcher → executor pool with per-family routing), drives a mixed
+//! default offline build), starts the L3 coordinator (sharded router →
+//! dynamic batcher shards → work-stealing executor pool sharing one
+//! `Arc<Runtime>`), drives a mixed
 //! open-loop workload across all three model families, validates
 //! numerics (batch == solo), and reports serving latency/throughput
 //! plus the modeled Mensa-G edge cost per request (amortized over each
@@ -34,11 +35,15 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
     let cfg =
-        ServerConfig { max_batch: 8, batch_timeout_us: 2000, workers: 2, ..Default::default() };
+        ServerConfig { max_batch: 8, batch_timeout_us: 2000, workers: 4, ..Default::default() };
     let workers = cfg.workers;
+    let shards = cfg.batcher_shards;
     println!("loading artifacts from {dir}/ ...");
     let server = Server::start(&dir, cfg)?;
-    println!("server up: {workers} executor workers, per-family routing (Python is NOT on this path)");
+    println!(
+        "server up: {workers} executor workers sharing one Arc<Runtime>, {shards} batcher \
+         shards, family-lease work stealing (Python is NOT on this path)"
+    );
 
     // --- correctness gate: batched numerics == solo numerics ---------
     let mut rng = Rng::new(42);

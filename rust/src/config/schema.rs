@@ -141,19 +141,46 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch, in microseconds.
     pub batch_timeout_us: u64,
-    /// Executor-pool size: worker threads executing batches, each
-    /// owning its own runtime instance. Batch jobs are routed by a
-    /// stable family hash (`coordinator::worker_for_family`), so one
-    /// family's batches stay ordered on one worker while different
-    /// families execute concurrently. Clamped to at least 1.
+    /// Executor-pool size: worker threads executing batches, all
+    /// sharing one `Arc<Runtime>`. Jobs sit in per-family FIFO queues;
+    /// an idle worker leases a whole family queue at a time
+    /// (work stealing), so one family's batches stay ordered while
+    /// cross-family load rebalances. Clamped to at least 1.
     pub workers: usize,
-    /// Bounded queue depth before backpressure rejects requests.
+    /// Bounded router-queue depth (per batcher shard) before
+    /// backpressure rejects requests.
     pub queue_depth: usize,
+    /// Work-stealing (default) vs the static family-hash routing of
+    /// PR 1, kept as the measured baseline (`benches/hotpath_micro`)
+    /// and as a debugging fallback.
+    pub work_stealing: bool,
+    /// Batcher accumulation shards; requests are distributed by the
+    /// stable family hash, so per-family order is preserved. One shard
+    /// is the pre-sharding behavior. Clamped to at least 1.
+    pub batcher_shards: usize,
+    /// Benchmark baseline only: execute with the pre-rewrite reference
+    /// kernels (untransposed zero-skip scan layout).
+    pub naive_kernels: bool,
+    /// Emulated per-job device busy time, microseconds (0 = off). A
+    /// hardware-in-the-loop stand-in: the executing worker holds the
+    /// family lease for this long per batch job, modeling the family's
+    /// edge accelerator being busy, so pool-balance effects are
+    /// measurable without physical Mensa hardware.
+    pub device_latency_us: u64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, batch_timeout_us: 2000, workers: 2, queue_depth: 256 }
+        Self {
+            max_batch: 8,
+            batch_timeout_us: 2000,
+            workers: 2,
+            queue_depth: 256,
+            work_stealing: true,
+            batcher_shards: 2,
+            naive_kernels: false,
+            device_latency_us: 0,
+        }
     }
 }
 
@@ -175,6 +202,18 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("queue_depth").and_then(Value::as_int) {
                 cfg.queue_depth = v.max(1) as usize;
+            }
+            if let Some(v) = t.get("work_stealing").and_then(Value::as_bool) {
+                cfg.work_stealing = v;
+            }
+            if let Some(v) = t.get("batcher_shards").and_then(Value::as_int) {
+                cfg.batcher_shards = v.max(1) as usize;
+            }
+            if let Some(v) = t.get("naive_kernels").and_then(Value::as_bool) {
+                cfg.naive_kernels = v;
+            }
+            if let Some(v) = t.get("device_latency_us").and_then(Value::as_int) {
+                cfg.device_latency_us = v.max(0) as u64;
             }
         }
         Ok(cfg)
@@ -261,9 +300,30 @@ memory = "hbm_internal"
     fn server_config_defaults_and_overrides() {
         let d = ServerConfig::default();
         assert_eq!(d.max_batch, 8);
+        assert!(d.work_stealing, "stealing pool is the default");
+        assert_eq!(d.batcher_shards, 2);
+        assert!(!d.naive_kernels);
+        assert_eq!(d.device_latency_us, 0);
         let cfg = ServerConfig::from_toml("[server]\nmax_batch = 16\nworkers = 4\n").unwrap();
         assert_eq!(cfg.max_batch, 16);
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.batch_timeout_us, 2000, "default retained");
+        assert!(cfg.work_stealing, "default retained");
+    }
+
+    #[test]
+    fn server_config_pool_keys_parse() {
+        let cfg = ServerConfig::from_toml(
+            "[server]\nwork_stealing = false\nbatcher_shards = 4\n\
+             naive_kernels = true\ndevice_latency_us = 500\n",
+        )
+        .unwrap();
+        assert!(!cfg.work_stealing);
+        assert_eq!(cfg.batcher_shards, 4);
+        assert!(cfg.naive_kernels);
+        assert_eq!(cfg.device_latency_us, 500);
+        // Clamping.
+        let cfg = ServerConfig::from_toml("[server]\nbatcher_shards = 0\n").unwrap();
+        assert_eq!(cfg.batcher_shards, 1);
     }
 }

@@ -1,20 +1,31 @@
 //! Dynamic batching: group same-family requests into batch jobs.
 //!
-//! The batcher drains the router queue, accumulating requests per
+//! The batcher drains its router queue, accumulating requests per
 //! family; a family's pending set flushes when it reaches `max_batch`
 //! or when its oldest request has waited `batch_timeout`. This is the
 //! standard serving trade-off: larger batches amortize dispatch (and on
 //! a real Mensa, fill the PE arrays), at the cost of queueing delay.
 //!
-//! Flushed jobs fan out over the executor pool's per-worker channels
-//! by [`worker_for_family`](super::worker_for_family): one family, one
-//! worker — different families batch *and* execute independently,
-//! same-family jobs stay FIFO.
+//! Flushed jobs go to the shared [`ExecutorPool`]: per-family FIFO
+//! queues with a family-lease discipline, so different families batch
+//! *and* execute independently while same-family jobs stay ordered.
+//! Each job carries a per-family **sequence number**; the executor
+//! reports it to [`Metrics`](super::Metrics), which turns the FIFO
+//! contract into a checkable invariant (`fifo_violations == 0`).
+//!
+//! At high request rates one accumulation loop becomes the next
+//! serialization point, so the server runs several batcher **shards**
+//! (`ServerConfig::batcher_shards`), each owning its own router queue;
+//! requests are sharded by the same stable family hash the static
+//! router used, so one family always lands on one shard and per-family
+//! arrival order is preserved end to end.
 
-use super::{worker_for_family, Request};
+use super::pool::ExecutorPool;
+use super::Request;
 use crate::config::ServerConfig;
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// A flushed batch ready for an executor worker.
@@ -22,70 +33,81 @@ use std::time::{Duration, Instant};
 pub struct BatchJob {
     /// Model family.
     pub family: String,
+    /// Per-family flush sequence number (0, 1, 2, …): the executor
+    /// pool must observe these non-decreasing per family, which is the
+    /// FIFO ordering invariant `Metrics` checks.
+    pub seq: u64,
     /// The member requests, arrival order.
     pub requests: Vec<Request>,
 }
 
-/// The batching loop. Owns the router receiver; emits [`BatchJob`]s
-/// over *bounded* per-worker channels: when a worker falls behind, the
-/// batcher blocks on its channel, the router queue fills, and
-/// `infer()` rejects — end-to-end backpressure instead of unbounded
-/// buffering.
+/// One family's accumulating batch.
+struct Pending {
+    /// When the oldest member arrived (flush-deadline anchor).
+    since: Instant,
+    requests: Vec<Request>,
+}
+
+/// One batching shard. Owns a router receiver; emits [`BatchJob`]s
+/// into the bounded per-family queues of the [`ExecutorPool`]: when a
+/// family falls behind, the shard blocks on its cap, the router queue
+/// fills, and `infer()` rejects — end-to-end backpressure instead of
+/// unbounded buffering.
 pub struct Batcher {
     rx: Receiver<Request>,
-    txs: Vec<SyncSender<BatchJob>>,
+    pool: Arc<ExecutorPool>,
     max_batch: usize,
     timeout: Duration,
 }
 
 impl Batcher {
-    /// Create a batcher between the router queue and the executor
-    /// pool's job channels (one per worker, indexed by
-    /// [`worker_for_family`](super::worker_for_family)).
-    ///
-    /// # Panics
-    /// Panics if `txs` is empty — a pool needs at least one worker.
-    pub fn new(rx: Receiver<Request>, txs: Vec<SyncSender<BatchJob>>, cfg: &ServerConfig) -> Self {
-        assert!(!txs.is_empty(), "executor pool needs at least one worker channel");
+    /// Create a batching shard between one router queue and the
+    /// executor pool.
+    pub fn new(rx: Receiver<Request>, pool: Arc<ExecutorPool>, cfg: &ServerConfig) -> Self {
         Self {
             rx,
-            txs,
-            max_batch: cfg.max_batch,
+            pool,
+            max_batch: cfg.max_batch.max(1),
             timeout: Duration::from_micros(cfg.batch_timeout_us),
         }
     }
 
     /// Run until the request channel closes. Flushes all pending
-    /// batches on shutdown.
+    /// batches, then signs this shard off the pool
+    /// ([`ExecutorPool::producer_done`]).
     pub fn run(self) {
-        let mut pending: HashMap<String, Vec<Request>> = HashMap::new();
-        let mut oldest: HashMap<String, Instant> = HashMap::new();
+        let mut pending: HashMap<String, Pending> = HashMap::new();
+        // Per-family flush counters; persist across flushes for the
+        // lifetime of the shard (a family never changes shards).
+        let mut seqs: HashMap<String, u64> = HashMap::new();
         loop {
             // Wait bounded by the earliest pending deadline.
             let wait = pending
-                .keys()
-                .filter_map(|f| oldest.get(f))
-                .map(|&t| (t + self.timeout).saturating_duration_since(Instant::now()))
+                .values()
+                .map(|p| (p.since + self.timeout).saturating_duration_since(Instant::now()))
                 .min()
                 .unwrap_or(Duration::from_millis(50));
             match self.rx.recv_timeout(wait) {
                 Ok(req) => {
-                    let family = req.family.clone();
-                    let entry = pending.entry(family.clone()).or_default();
-                    if entry.is_empty() {
-                        oldest.insert(family.clone(), Instant::now());
-                    }
-                    entry.push(req);
-                    if entry.len() >= self.max_batch {
-                        self.flush(&mut pending, &mut oldest, &family);
+                    // One key clone per request (down from the three
+                    // `family.clone()`s of the old loop); the flush
+                    // path reuses the map's own key allocation.
+                    let p = pending
+                        .entry(req.family.clone())
+                        .or_insert_with(|| Pending { since: Instant::now(), requests: Vec::new() });
+                    p.requests.push(req);
+                    if p.requests.len() >= self.max_batch {
+                        let family = p.requests[0].family.clone();
+                        self.flush(&mut pending, &mut seqs, &family);
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     let families: Vec<String> = pending.keys().cloned().collect();
                     for f in families {
-                        self.flush(&mut pending, &mut oldest, &f);
+                        self.flush(&mut pending, &mut seqs, &f);
                     }
+                    self.pool.producer_done();
                     return;
                 }
             }
@@ -93,35 +115,39 @@ impl Batcher {
             let now = Instant::now();
             let due: Vec<String> = pending
                 .iter()
-                .filter(|(f, reqs)| {
-                    !reqs.is_empty()
-                        && oldest.get(*f).is_some_and(|&t| now.duration_since(t) >= self.timeout)
-                })
+                .filter(|(_, p)| now.duration_since(p.since) >= self.timeout)
                 .map(|(f, _)| f.clone())
                 .collect();
             for f in due {
-                self.flush(&mut pending, &mut oldest, &f);
+                self.flush(&mut pending, &mut seqs, &f);
             }
         }
     }
 
     fn flush(
         &self,
-        pending: &mut HashMap<String, Vec<Request>>,
-        oldest: &mut HashMap<String, Instant>,
+        pending: &mut HashMap<String, Pending>,
+        seqs: &mut HashMap<String, u64>,
         family: &str,
     ) {
-        if let Some(requests) = pending.remove(family) {
-            oldest.remove(family);
-            if requests.is_empty() {
+        if let Some((key, p)) = pending.remove_entry(family) {
+            if p.requests.is_empty() {
                 return;
             }
-            // Stable routing: one family always lands on one worker,
-            // which is what keeps same-family responses ordered.
-            let worker = worker_for_family(family, self.txs.len());
-            // Worker gone: drop the batch; request senders see
-            // disconnected reply channels.
-            let _ = self.txs[worker].send(BatchJob { family: family.to_string(), requests });
+            let seq = match seqs.get_mut(family) {
+                Some(s) => {
+                    let v = *s;
+                    *s += 1;
+                    v
+                }
+                None => {
+                    seqs.insert(key.clone(), 1);
+                    0
+                }
+            };
+            // May block on the family's inflight cap — that is the
+            // backpressure path.
+            self.pool.push(BatchJob { family: key, seq, requests: p.requests });
         }
     }
 }
@@ -145,25 +171,24 @@ mod tests {
         )
     }
 
+    /// Start a batcher over a single-worker pool and a worker that
+    /// forwards every job to the returned channel.
     fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
         let (req_tx, req_rx) = mpsc::channel();
-        let (job_tx, job_rx) = mpsc::sync_channel(16);
-        let b = Batcher::new(req_rx, vec![job_tx], &cfg);
+        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg);
         thread::spawn(move || b.run());
+        let (job_tx, job_rx) = mpsc::channel();
+        thread::spawn(move || {
+            while let Some(family) = pool.take_family(0) {
+                while let Some(job) = pool.next_job(&family, 0) {
+                    if job_tx.send(job).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
         (req_tx, job_rx)
-    }
-
-    /// Start a batcher over `workers` job channels.
-    fn start_pool(
-        cfg: ServerConfig,
-        workers: usize,
-    ) -> (mpsc::Sender<Request>, Vec<mpsc::Receiver<BatchJob>>) {
-        let (req_tx, req_rx) = mpsc::channel();
-        let (txs, rxs): (Vec<_>, Vec<_>) =
-            (0..workers).map(|_| mpsc::sync_channel(16)).unzip();
-        let b = Batcher::new(req_rx, txs, &cfg);
-        thread::spawn(move || b.run());
-        (req_tx, rxs)
     }
 
     #[test]
@@ -178,6 +203,7 @@ mod tests {
         }
         let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(job.family, "edge_cnn");
+        assert_eq!(job.seq, 0);
         assert_eq!(job.requests.len(), 3);
     }
 
@@ -211,27 +237,27 @@ mod tests {
     }
 
     #[test]
-    fn jobs_route_to_the_family_worker() {
-        let cfg = ServerConfig { max_batch: 2, batch_timeout_us: 500_000, ..Default::default() };
-        let (tx, rxs) = start_pool(cfg, 2);
+    fn sequence_numbers_count_per_family_flushes() {
+        let cfg = ServerConfig { max_batch: 2, batch_timeout_us: 1_000_000, ..Default::default() };
+        let (tx, jobs) = start(cfg);
         let mut keep = Vec::new();
-        for f in ["edge_cnn", "edge_lstm", "edge_cnn", "edge_lstm"] {
+        for f in ["edge_cnn", "edge_cnn", "joint", "joint", "edge_cnn", "edge_cnn"] {
             let (r, rx) = req(f);
             keep.push(rx);
             tx.send(r).unwrap();
         }
-        let cnn_worker = super::super::worker_for_family("edge_cnn", 2);
-        let lstm_worker = super::super::worker_for_family("edge_lstm", 2);
-        assert_ne!(cnn_worker, lstm_worker);
-        let cnn_job = rxs[cnn_worker].recv_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(cnn_job.family, "edge_cnn");
-        assert_eq!(cnn_job.requests.len(), 2);
-        let lstm_job = rxs[lstm_worker].recv_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(lstm_job.family, "edge_lstm");
-        assert_eq!(lstm_job.requests.len(), 2);
-        // No cross-talk: each worker channel saw exactly its family.
-        assert!(rxs[cnn_worker].try_recv().is_err());
-        assert!(rxs[lstm_worker].try_recv().is_err());
+        let mut cnn_seqs = Vec::new();
+        let mut joint_seqs = Vec::new();
+        for _ in 0..3 {
+            let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+            if job.family == "edge_cnn" {
+                cnn_seqs.push(job.seq);
+            } else {
+                joint_seqs.push(job.seq);
+            }
+        }
+        assert_eq!(cnn_seqs, vec![0, 1], "per-family flush counter");
+        assert_eq!(joint_seqs, vec![0]);
     }
 
     #[test]

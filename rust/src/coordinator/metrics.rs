@@ -1,14 +1,27 @@
 //! Serving metrics: request counts, latency percentiles, batch sizes,
-//! per-family completions, and the simulated edge cost accumulators.
+//! per-family completions, the simulated edge cost accumulators, and
+//! the executor-pool balance/ordering observability.
 //!
-//! One registry is shared by the batcher and every executor-pool
+//! One registry is shared by the batcher shards and every executor-pool
 //! worker (a `Mutex` suffices: workers touch it once per *batch*, not
 //! per sample). Simulated energy/latency are accumulated from the
 //! per-request **amortized** shares, so a batch of N contributes one
 //! full-model cost in total, not N of them.
+//!
+//! Two fields exist specifically to make the work-stealing pool's
+//! contracts testable:
+//!
+//! * `workers_by_family` — which workers executed each family's jobs.
+//!   Under the stealing pool a hot family migrates (set size > 1);
+//!   under static routing it stays pinned (set size == 1).
+//! * `fifo_violations` — counts every job whose per-family sequence
+//!   number ran *backwards*. The batcher stamps jobs 0, 1, 2, … per
+//!   family; the family-lease discipline must keep them non-decreasing
+//!   (oversized-job chunks legitimately repeat a seq), so any nonzero
+//!   value is an ordering bug.
 
 use crate::util::stats;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -24,6 +37,9 @@ struct Inner {
     failed: u64,
     sim_energy_j: f64,
     sim_latency_s: f64,
+    workers_by_family: BTreeMap<String, BTreeSet<usize>>,
+    last_seq_by_family: BTreeMap<String, u64>,
+    fifo_violations: u64,
 }
 
 /// Thread-safe metrics registry shared by the server components.
@@ -39,7 +55,8 @@ pub struct Snapshot {
     pub completed: u64,
     /// Completed requests per family, sorted by family name.
     pub completed_by_family: Vec<(String, u64)>,
-    /// Executed batch jobs (after oversized-job splitting).
+    /// Successfully executed batch jobs (after oversized-job
+    /// splitting); failed batches count per request in `failed`.
     pub jobs: u64,
     /// Requests rejected by backpressure.
     pub rejected: u64,
@@ -57,6 +74,12 @@ pub struct Snapshot {
     pub sim_energy_j: f64,
     /// Total simulated Mensa-G device latency, seconds (amortized).
     pub sim_latency_s: f64,
+    /// Which executor workers ran each family's jobs, sorted by
+    /// family; the stealing pool's load-balance witness.
+    pub workers_by_family: Vec<(String, Vec<usize>)>,
+    /// Jobs observed with a per-family sequence number lower than an
+    /// already-executed one. Must be zero — FIFO ordering invariant.
+    pub fifo_violations: u64,
 }
 
 impl Metrics {
@@ -80,9 +103,27 @@ impl Metrics {
         m.sim_latency_s += sim_latency_s;
     }
 
-    /// Record one executed batch job.
-    pub fn record_job(&self) {
-        self.inner.lock().expect("metrics lock").jobs += 1;
+    /// Record one executed batch job (after oversized-job splitting):
+    /// which worker ran it and its per-family flush sequence number.
+    /// Chunks of one oversized job share a `seq`, so the FIFO check is
+    /// non-decreasing, not strictly increasing.
+    pub fn record_job(&self, family: &str, worker: usize, seq: u64) {
+        let mut guard = self.inner.lock().expect("metrics lock");
+        let m = &mut *guard;
+        m.jobs += 1;
+        m.workers_by_family.entry(family.to_string()).or_default().insert(worker);
+        match m.last_seq_by_family.get_mut(family) {
+            Some(last) => {
+                if seq < *last {
+                    m.fifo_violations += 1;
+                } else {
+                    *last = seq;
+                }
+            }
+            None => {
+                m.last_seq_by_family.insert(family.to_string(), seq);
+            }
+        }
     }
 
     /// Record a backpressure rejection.
@@ -114,6 +155,12 @@ impl Metrics {
             mean_batch: stats::mean(&m.batch_sizes),
             sim_energy_j: m.sim_energy_j,
             sim_latency_s: m.sim_latency_s,
+            workers_by_family: m
+                .workers_by_family
+                .iter()
+                .map(|(k, v)| (k.clone(), v.iter().copied().collect()))
+                .collect(),
+            fifo_violations: m.fifo_violations,
         }
     }
 }
@@ -141,7 +188,7 @@ mod tests {
             0.5,
             0.01,
         );
-        m.record_job();
+        m.record_job("edge_cnn", 0, 0);
         m.record_rejection();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
@@ -155,6 +202,42 @@ mod tests {
             s.completed_by_family,
             vec![("edge_cnn".to_string(), 1), ("edge_lstm".to_string(), 1)]
         );
+        assert_eq!(s.workers_by_family, vec![("edge_cnn".to_string(), vec![0])]);
+    }
+
+    #[test]
+    fn worker_sets_accumulate_per_family() {
+        let m = Metrics::default();
+        m.record_job("edge_cnn", 0, 0);
+        m.record_job("edge_cnn", 2, 1);
+        m.record_job("edge_cnn", 2, 2);
+        m.record_job("joint", 1, 0);
+        let s = m.snapshot();
+        assert_eq!(
+            s.workers_by_family,
+            vec![
+                ("edge_cnn".to_string(), vec![0, 2]),
+                ("joint".to_string(), vec![1])
+            ]
+        );
+        assert_eq!(s.jobs, 4);
+        assert_eq!(s.fifo_violations, 0);
+    }
+
+    #[test]
+    fn fifo_violations_detect_reordering() {
+        let m = Metrics::default();
+        m.record_job("edge_cnn", 0, 0);
+        m.record_job("edge_cnn", 1, 1);
+        // Chunks of one oversized job repeat a seq: not a violation.
+        m.record_job("edge_cnn", 1, 1);
+        assert_eq!(m.snapshot().fifo_violations, 0);
+        // Going backwards is.
+        m.record_job("edge_cnn", 0, 0);
+        assert_eq!(m.snapshot().fifo_violations, 1);
+        // Other families are tracked independently.
+        m.record_job("joint", 0, 0);
+        assert_eq!(m.snapshot().fifo_violations, 1);
     }
 
     #[test]
@@ -164,5 +247,7 @@ mod tests {
         assert_eq!(s.jobs, 0);
         assert_eq!(s.p99_us, 0.0);
         assert!(s.completed_by_family.is_empty());
+        assert!(s.workers_by_family.is_empty());
+        assert_eq!(s.fifo_violations, 0);
     }
 }

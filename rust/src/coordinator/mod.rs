@@ -3,10 +3,11 @@
 //! This is the L3 request path a downstream user actually runs:
 //!
 //! ```text
-//! clients → Handle::infer() → router (bounded, backpressure)
+//! clients → Handle::infer() → router shard (bounded, backpressure,
+//!           one queue per batcher shard, family-hash sharded)
 //!         → per-family dynamic batcher (max_batch / timeout)
-//!         → executor POOL: N workers, each owning its own runtime,
-//!           jobs routed by stable family hash
+//!         → executor POOL: N workers sharing ONE Arc<Runtime>,
+//!           per-family FIFO job queues, family-lease work stealing
 //!         → per-request responses (real numerics) + simulated
 //!           edge-accelerator timing/energy from the Mensa scheduler
 //! ```
@@ -20,57 +21,47 @@
 //!
 //! # Threading model
 //!
-//! `std::thread` + `std::sync::mpsc` (tokio is not available offline —
-//! see DESIGN.md substitutions). `Server::start` spawns:
+//! See [`server`] for the full picture. In brief: requests shard by
+//! [`worker_for_family`] onto `batcher_shards` accumulation threads
+//! (per-family order preserved — one family, one shard); flushed
+//! [`BatchJob`]s land in the shared [`ExecutorPool`]'s per-family FIFO
+//! queues; any idle worker leases a whole family queue and drains it
+//! serially. This replaces PR 1's static family-hash fan-out, which
+//! mirrored the paper's monolithic-accelerator failure mode in
+//! software: a hot family saturated its hashed worker while the rest
+//! idled. Leasing whole queues (never individual jobs) is what lets
+//! cross-family work rebalance *without* giving up per-family FIFO
+//! execution; `ServerConfig::work_stealing = false` restores the
+//! static baseline for benchmarking.
 //!
-//! * one **batcher** thread draining the bounded router queue and
-//!   flushing per-family [`BatchJob`]s;
-//! * `ServerConfig::workers` **executor** threads, each owning its own
-//!   [`Runtime`](crate::runtime::Runtime) instance (runtime clients are
-//!   single-owner) and its own bounded job channel.
-//!
-//! Jobs are routed with [`worker_for_family`] — a *stable* FNV-1a hash
-//! of the family name, so a family's jobs always land on the same
-//! worker. This mirrors the paper's Mensa design point in software:
-//! heterogeneous families stop serializing behind one another (the
-//! one-size-fits-all executor this module used to have) while each
-//! family still executes its batches strictly in submission order.
-//!
-//! # Ordering guarantee
-//!
-//! Per family, responses preserve request submission order: the
-//! batcher flushes a family's pending requests in arrival order, the
-//! per-worker job channel is FIFO, exactly one worker ever executes a
-//! given family, and oversized jobs are split into chunks executed
-//! front to back. *Across* families there is no ordering — that
-//! concurrency is the point of the pool.
-//!
-//! Modeled Mensa-G cost per family comes from
-//! [`ScheduleCache`](crate::scheduler::ScheduleCache), so starting a
-//! server (or several) schedules and simulates each proxy model once
-//! per process instead of once per worker.
+//! All workers execute against a single shared `Arc<Runtime>` (the
+//! manifest is parsed once per server) and keep per-worker scratch so
+//! the execute path is allocation-free at steady state.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod server;
 
 pub use batcher::{BatchJob, Batcher};
 pub use metrics::Metrics;
+pub use pool::ExecutorPool;
 pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
 
 use crate::util::fnv1a_64;
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// Which executor-pool worker serves `family`, out of `workers`.
+/// Stable shard index for `family` out of `n` (batcher shards, or the
+/// executor pinning of the static-routing baseline).
 ///
 /// Stable across processes and builds (FNV-1a, not `DefaultHasher`):
-/// restarting a server never re-shuffles family→worker affinity, and
-/// the three serving families spread across a 2-worker pool
+/// restarting a server never re-shuffles family→shard affinity, and
+/// the three serving families spread across a 2-way split
 /// (`edge_cnn` → 0; `edge_lstm`, `joint` → 1).
-pub fn worker_for_family(family: &str, workers: usize) -> usize {
-    debug_assert!(workers > 0, "worker pool cannot be empty");
-    (fnv1a_64(family) % workers.max(1) as u64) as usize
+pub fn worker_for_family(family: &str, n: usize) -> usize {
+    debug_assert!(n > 0, "shard/worker count cannot be zero");
+    (fnv1a_64(family) % n.max(1) as u64) as usize
 }
 
 /// One inference request as it flows through the coordinator.
@@ -92,24 +83,24 @@ mod tests {
 
     #[test]
     fn family_routing_is_stable_and_in_range() {
-        for workers in 1..=8 {
+        for n in 1..=8 {
             for family in ["edge_cnn", "edge_lstm", "joint", "anything"] {
-                let w = worker_for_family(family, workers);
-                assert!(w < workers);
-                assert_eq!(w, worker_for_family(family, workers), "deterministic");
+                let w = worker_for_family(family, n);
+                assert!(w < n);
+                assert_eq!(w, worker_for_family(family, n), "deterministic");
             }
         }
     }
 
     #[test]
-    fn two_worker_pool_separates_cnn_and_lstm() {
+    fn two_way_split_separates_cnn_and_lstm() {
         // The mixed-load e2e test relies on these two families genuinely
-        // executing on different workers at the default pool size.
+        // landing on different shards at the default shard count.
         assert_ne!(worker_for_family("edge_cnn", 2), worker_for_family("edge_lstm", 2));
     }
 
     #[test]
-    fn single_worker_degenerates_to_zero() {
+    fn single_shard_degenerates_to_zero() {
         assert_eq!(worker_for_family("edge_cnn", 1), 0);
         assert_eq!(worker_for_family("joint", 1), 0);
     }

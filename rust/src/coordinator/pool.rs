@@ -1,0 +1,404 @@
+//! Work-stealing executor pool: per-family FIFO job queues with a
+//! family-lease discipline.
+//!
+//! The paper's core serving lesson is that static assignment of
+//! heterogeneous work leaves capacity idle; PR 1's software pool
+//! reproduced exactly that with its fixed family-hash fan-out (one
+//! `SyncSender` per worker). This pool replaces it:
+//!
+//! * every family gets its own FIFO queue of flushed [`BatchJob`]s;
+//! * a worker takes a **lease** on a whole family — it drains that
+//!   family's queue serially and releases the lease only when the
+//!   queue is empty. Workers steal *family queues*, never individual
+//!   jobs, so same-family jobs still execute strictly in flush order
+//!   (the FIFO contract) while cross-family work rebalances onto
+//!   whichever worker is idle;
+//! * an idle worker waits on a condvar; when a family becomes ready it
+//!   is handed directly to the longest-idle worker (FIFO idle queue),
+//!   which rotates a hot family across the pool instead of re-pinning
+//!   it. Dispatch still uses `notify_all` (a targeted `notify_one`
+//!   could wake the wrong waiter and strand the handoff), so untargeted
+//!   workers pay one spurious lock round-trip per flush — acceptable at
+//!   serving pool sizes; per-worker parkers are the upgrade path if
+//!   worker counts grow;
+//! * `push` applies backpressure per family: at most
+//!   [`FAMILY_INFLIGHT_CAP`] jobs may sit queued per family before the
+//!   batcher blocks, mirroring PR 1's bounded per-worker channels so
+//!   the router queue (and ultimately `infer()`) still absorbs and
+//!   rejects overload.
+//!
+//! **Static mode** (`work_stealing = false` in `ServerConfig`) keeps
+//! the PR 1 discipline — a family is only ever offered to
+//! [`worker_for_family`]'s worker — and exists as the measured
+//! baseline for `benches/hotpath_micro.rs` and as a debugging fallback.
+//!
+//! Shutdown: each batcher shard calls [`ExecutorPool::producer_done`]
+//! after flushing its pending batches; when the last producer signs
+//! off the pool closes and workers exit once every queue is drained.
+
+use super::batcher::BatchJob;
+use super::worker_for_family;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+/// Flushed-but-unexecuted jobs a single family may accumulate before
+/// `push` blocks (the batcher-side backpressure bound, matching PR 1's
+/// bounded per-worker channels).
+pub const FAMILY_INFLIGHT_CAP: usize = 2;
+
+/// One family's pending work.
+struct FamilyQueue {
+    jobs: VecDeque<BatchJob>,
+    /// Worker currently holding this family's lease, if any.
+    leased_by: Option<usize>,
+    /// Whether the family is sitting in a ready queue (unleased, has
+    /// jobs, waiting for a worker).
+    ready_queued: bool,
+}
+
+struct PoolState {
+    queues: HashMap<String, FamilyQueue>,
+    /// Families with jobs and no lease. One shared queue in stealing
+    /// mode; one per worker in static mode.
+    ready: Vec<VecDeque<String>>,
+    /// Direct handoff slots: a family leased to an idle worker before
+    /// it wakes.
+    assigned: Vec<Option<String>>,
+    /// Workers waiting for work, longest-idle first.
+    idle: VecDeque<usize>,
+    /// Producers (batcher shards) still alive.
+    producers: usize,
+    closed: bool,
+}
+
+/// The shared executor-pool state. One instance per server, cloned
+/// behind an `Arc` into every worker and batcher shard.
+pub struct ExecutorPool {
+    state: Mutex<PoolState>,
+    /// Signalled when work is assigned/ready or the pool closes.
+    work: Condvar,
+    /// Signalled when a family queue frees a slot.
+    space: Condvar,
+    workers: usize,
+    stealing: bool,
+}
+
+impl ExecutorPool {
+    /// Create a pool for `workers` executor threads fed by `producers`
+    /// batcher shards. `stealing` selects work-stealing (default) vs
+    /// the static family-hash baseline.
+    pub fn new(workers: usize, stealing: bool, producers: usize) -> Self {
+        assert!(workers > 0, "executor pool needs at least one worker");
+        assert!(producers > 0, "executor pool needs at least one producer");
+        let ready_queues = if stealing { 1 } else { workers };
+        Self {
+            state: Mutex::new(PoolState {
+                queues: HashMap::new(),
+                ready: (0..ready_queues).map(|_| VecDeque::new()).collect(),
+                assigned: vec![None; workers],
+                idle: VecDeque::new(),
+                producers,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            workers,
+            stealing,
+        }
+    }
+
+    /// Whether this pool steals (true) or pins families (false).
+    pub fn is_stealing(&self) -> bool {
+        self.stealing
+    }
+
+    /// Enqueue a flushed job, blocking while the family is at its
+    /// inflight cap. Called by the batcher shards only.
+    pub fn push(&self, job: BatchJob) {
+        let mut st = self.state.lock().expect("pool lock");
+        loop {
+            let queued = st.queues.get(&job.family).map_or(0, |q| q.jobs.len());
+            if queued < FAMILY_INFLIGHT_CAP {
+                break;
+            }
+            st = self.space.wait(st).expect("pool lock");
+        }
+        debug_assert!(!st.closed, "push after close");
+        let family = job.family.clone();
+        let needs_dispatch = {
+            let q = st.queues.entry(family.clone()).or_insert_with(|| FamilyQueue {
+                jobs: VecDeque::new(),
+                leased_by: None,
+                ready_queued: false,
+            });
+            q.jobs.push_back(job);
+            q.leased_by.is_none() && !q.ready_queued
+        };
+        if !needs_dispatch {
+            // Leased (the holder will drain it) or already ready.
+            return;
+        }
+        // Hand the family to an idle worker if one may take it, else
+        // queue it ready.
+        let target = if self.stealing {
+            st.idle.pop_front()
+        } else {
+            let w = worker_for_family(&family, self.workers);
+            match st.idle.iter().position(|&x| x == w) {
+                Some(pos) => st.idle.remove(pos),
+                None => None,
+            }
+        };
+        match target {
+            Some(w) => {
+                st.queues.get_mut(&family).expect("just inserted").leased_by = Some(w);
+                st.assigned[w] = Some(family);
+            }
+            None => {
+                st.queues.get_mut(&family).expect("just inserted").ready_queued = true;
+                let rq = if self.stealing { 0 } else { worker_for_family(&family, self.workers) };
+                st.ready[rq].push_back(family);
+            }
+        }
+        self.work.notify_all();
+    }
+
+    /// Block until a family lease is available for worker `w` (or the
+    /// pool is closed and drained — then `None`, and the worker should
+    /// exit). The returned family is leased to `w`; drain it with
+    /// [`ExecutorPool::next_job`] until that returns `None`.
+    pub fn take_family(&self, w: usize) -> Option<String> {
+        debug_assert!(w < self.workers);
+        let mut st = self.state.lock().expect("pool lock");
+        loop {
+            if let Some(family) = st.assigned[w].take() {
+                st.idle.retain(|&x| x != w);
+                return Some(family);
+            }
+            let rq = if self.stealing { 0 } else { w };
+            if let Some(family) = st.ready[rq].pop_front() {
+                let q = st.queues.get_mut(&family).expect("ready family has a queue");
+                q.ready_queued = false;
+                q.leased_by = Some(w);
+                st.idle.retain(|&x| x != w);
+                return Some(family);
+            }
+            if st.closed {
+                return None;
+            }
+            if !st.idle.contains(&w) {
+                st.idle.push_back(w);
+            }
+            st = self.work.wait(st).expect("pool lock");
+        }
+    }
+
+    /// Pop the next job of a family leased to worker `w`, or release
+    /// the lease and return `None` when the queue is empty. The
+    /// release and any concurrent `push` serialize on the pool lock,
+    /// so a job can never be executed by two workers and same-family
+    /// jobs always run in push order.
+    pub fn next_job(&self, family: &str, w: usize) -> Option<BatchJob> {
+        let mut st = self.state.lock().expect("pool lock");
+        let q = st.queues.get_mut(family).expect("leased family has a queue");
+        debug_assert_eq!(q.leased_by, Some(w), "worker drains only its own lease");
+        match q.jobs.pop_front() {
+            Some(job) => {
+                self.space.notify_all();
+                Some(job)
+            }
+            None => {
+                st.queues.remove(family);
+                None
+            }
+        }
+    }
+
+    /// One producer (batcher shard) has flushed its last batch. When
+    /// the final producer signs off the pool closes: workers finish
+    /// the remaining queues and exit.
+    pub fn producer_done(&self) {
+        let mut st = self.state.lock().expect("pool lock");
+        debug_assert!(st.producers > 0, "producer_done called too often");
+        st.producers = st.producers.saturating_sub(1);
+        if st.producers == 0 {
+            st.closed = true;
+            self.work.notify_all();
+        }
+    }
+
+    /// Jobs currently queued (not yet popped by a worker), across all
+    /// families. Diagnostics/tests only.
+    pub fn queued_jobs(&self) -> usize {
+        let st = self.state.lock().expect("pool lock");
+        st.queues.values().map(|q| q.jobs.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::{Duration, Instant};
+
+    fn job(family: &str, seq: u64) -> BatchJob {
+        BatchJob { family: family.into(), seq, requests: Vec::new() }
+    }
+
+    /// Spawn a worker loop that forwards (worker, job) pairs to a
+    /// channel; exits when the pool closes.
+    fn spawn_worker(
+        pool: &Arc<ExecutorPool>,
+        w: usize,
+        tx: mpsc::Sender<(usize, BatchJob)>,
+    ) -> thread::JoinHandle<()> {
+        let pool = Arc::clone(pool);
+        thread::spawn(move || {
+            while let Some(family) = pool.take_family(w) {
+                while let Some(job) = pool.next_job(&family, w) {
+                    if tx.send((w, job)).is_err() {
+                        return;
+                    }
+                }
+            }
+        })
+    }
+
+    const RECV: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn same_family_jobs_arrive_in_push_order() {
+        let pool = Arc::new(ExecutorPool::new(3, true, 1));
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..3).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        for seq in 0..12 {
+            pool.push(job("fam", seq));
+        }
+        let mut seen = Vec::new();
+        for _ in 0..12 {
+            let (_, j) = rx.recv_timeout(RECV).expect("job");
+            seen.push(j.seq);
+        }
+        assert_eq!(seen, (0..12).collect::<Vec<_>>(), "FIFO per family");
+        pool.producer_done();
+        for t in workers {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn spaced_jobs_rotate_across_idle_workers() {
+        let pool = Arc::new(ExecutorPool::new(4, true, 1));
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..4).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        let mut seen = std::collections::BTreeSet::new();
+        for seq in 0..8 {
+            pool.push(job("hot", seq));
+            let (w, _) = rx.recv_timeout(RECV).expect("job");
+            seen.insert(w);
+            // Let the worker release the lease and re-idle before the
+            // next push, so the rotation (idle queue FIFO) is visible.
+            thread::sleep(Duration::from_millis(30));
+        }
+        assert!(
+            seen.len() > 1,
+            "a hot family must migrate across workers, saw only {seen:?}"
+        );
+        pool.producer_done();
+        for t in workers {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn static_mode_pins_families_to_their_hash_worker() {
+        let pool = Arc::new(ExecutorPool::new(2, false, 1));
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        for seq in 0..4 {
+            pool.push(job("edge_cnn", seq));
+            pool.push(job("edge_lstm", seq));
+            thread::sleep(Duration::from_millis(5));
+        }
+        let cnn_w = worker_for_family("edge_cnn", 2);
+        let lstm_w = worker_for_family("edge_lstm", 2);
+        assert_ne!(cnn_w, lstm_w);
+        for _ in 0..8 {
+            let (w, j) = rx.recv_timeout(RECV).expect("job");
+            let expect = if j.family == "edge_cnn" { cnn_w } else { lstm_w };
+            assert_eq!(w, expect, "static mode must pin {} to {expect}", j.family);
+        }
+        pool.producer_done();
+        for t in workers {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn close_drains_pending_queues() {
+        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        pool.push(job("a", 0));
+        pool.push(job("b", 0));
+        assert_eq!(pool.queued_jobs(), 2);
+        pool.producer_done();
+        let (tx, rx) = mpsc::channel();
+        let t = spawn_worker(&pool, 0, tx);
+        let mut fams: Vec<String> = (0..2)
+            .map(|_| rx.recv_timeout(RECV).expect("drained job").1.family)
+            .collect();
+        fams.sort();
+        assert_eq!(fams, ["a", "b"]);
+        t.join().unwrap();
+        assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
+    fn push_blocks_at_family_cap_until_a_worker_drains() {
+        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        for seq in 0..FAMILY_INFLIGHT_CAP as u64 {
+            pool.push(job("fam", seq));
+        }
+        // The next push must block until a worker pops a job.
+        let pool2 = Arc::clone(&pool);
+        let (done_tx, done_rx) = mpsc::channel();
+        let pusher = thread::spawn(move || {
+            let t0 = Instant::now();
+            pool2.push(job("fam", FAMILY_INFLIGHT_CAP as u64));
+            let _ = done_tx.send(t0.elapsed());
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "push must block at the cap"
+        );
+        let (tx, rx) = mpsc::channel();
+        let worker = spawn_worker(&pool, 0, tx);
+        for _ in 0..=FAMILY_INFLIGHT_CAP {
+            rx.recv_timeout(RECV).expect("job");
+        }
+        done_rx.recv_timeout(RECV).expect("push unblocked");
+        pusher.join().unwrap();
+        pool.producer_done();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn requests_type_compiles_in_jobs() {
+        // BatchJob carries real Requests on the serving path; the pool
+        // itself never inspects them.
+        let (reply, _rx) = mpsc::channel();
+        let req = Request {
+            family: "edge_cnn".into(),
+            inputs: vec![vec![0.0]],
+            enqueued: Instant::now(),
+            reply,
+        };
+        let j = BatchJob { family: "edge_cnn".into(), seq: 0, requests: vec![req] };
+        assert_eq!(j.requests.len(), 1);
+    }
+}

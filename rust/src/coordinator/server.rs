@@ -1,24 +1,60 @@
-//! The inference server: router → batcher → executor pool.
+//! The inference server: sharded router → batcher shards →
+//! work-stealing executor pool.
 //!
-//! Each executor worker owns its own artifact [`Runtime`] (runtime
-//! clients are not shared across threads) and serves the families that
-//! hash to it ([`super::worker_for_family`]). Every response carries
-//! both the *measured* CPU numerics and the *modeled* Mensa-G edge
-//! cost (latency/energy/accelerator mix) from the simulator, **scaled
-//! per request**: a batch of N amortizes one full-model cost across
-//! its members, so metrics totals count each executed inference once.
-//! The per-family costs come from the process-wide
-//! [`ScheduleCache`](crate::scheduler::ScheduleCache) — scheduling and
-//! simulating the proxy models happens once per process, not once per
-//! server or per worker.
+//! # Threading model
+//!
+//! `std::thread` + `std::sync::mpsc`/`Condvar` (tokio is not available
+//! offline — see DESIGN.md substitutions). `Server::start` spawns:
+//!
+//! * `ServerConfig::batcher_shards` **batcher** threads, each draining
+//!   its own bounded router queue (requests are sharded by the stable
+//!   family hash, so one family always accumulates on one shard);
+//! * `ServerConfig::workers` **executor** threads sharing one
+//!   [`ExecutorPool`](super::pool::ExecutorPool): per-family FIFO job
+//!   queues with a family-lease discipline. An idle worker takes
+//!   (steals) a whole family queue; it alone drains that family until
+//!   the queue empties, then releases the lease. Cross-family load
+//!   rebalances dynamically — a hot family no longer pins one worker
+//!   while the rest idle, which was PR 1's static-hash failure mode —
+//!   while same-family jobs still execute strictly in flush order.
+//!
+//! All workers share a single **`Arc<Runtime>`**: the artifact
+//! manifest is parsed and every variant compiled exactly once per
+//! server, regardless of worker count (asserted by
+//! `tests/shared_runtime.rs` via `runtime::manifest_load_count`), and
+//! batch variants of a family share their weight matrices physically.
+//! Each worker owns a reusable `ExecScratch`, so steady-state
+//! execution does not allocate intermediates.
+//!
+//! # Ordering guarantee
+//!
+//! Per family, responses preserve request submission order: one shard
+//! accumulates a family's requests in arrival order, the pool's
+//! per-family queue is FIFO, the family lease serializes execution (at
+//! most one worker runs a given family at any instant), and oversized
+//! jobs split into chunks executed front to back. Every job carries a
+//! per-family sequence number and [`Metrics`] counts regressions, so
+//! the invariant is observable (`Snapshot::fifo_violations == 0`).
+//! *Across* families there is no ordering — that concurrency is the
+//! point of the pool.
+//!
+//! Every response carries both the *measured* CPU numerics and the
+//! *modeled* Mensa-G edge cost (latency/energy/accelerator mix) from
+//! the simulator, **scaled per request**: a batch of N amortizes one
+//! full-model cost across its members, so metrics totals count each
+//! executed inference once. The per-family costs come from the
+//! process-wide [`ScheduleCache`](crate::scheduler::ScheduleCache) —
+//! scheduling and simulating the proxy models happens once per
+//! process, not once per server or per worker.
 
 use super::batcher::{BatchJob, Batcher};
 use super::metrics::{Metrics, Snapshot};
-use super::Request;
+use super::pool::ExecutorPool;
+use super::{worker_for_family, Request};
 use crate::accel::configs;
 use crate::config::ServerConfig;
 use crate::model::zoo;
-use crate::runtime::Runtime;
+use crate::runtime::{ExecScratch, Runtime, RuntimeOptions};
 use crate::scheduler::ScheduleCache;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, Result};
@@ -77,90 +113,100 @@ pub struct Server;
 
 /// Handle to a running server.
 pub struct ServerHandle {
-    req_tx: SyncSender<Request>,
+    /// One router queue per batcher shard, indexed by family hash.
+    req_txs: Vec<SyncSender<Request>>,
     metrics: Arc<Metrics>,
     threads: Vec<JoinHandle<()>>,
 }
 
+/// Per-worker reusable buffers: the packed per-input batch tensors
+/// plus the runtime's execution scratch. One instance per executor
+/// thread makes the whole execute path allocation-free at steady state
+/// (outputs still allocate — they are moved into responses).
+#[derive(Default)]
+struct WorkerScratch {
+    packed: Vec<Vec<f32>>,
+    exec: ExecScratch,
+}
+
 impl Server {
-    /// Start a server over an artifacts directory. Spawns the batcher
-    /// plus `cfg.workers` executor threads (each loading its own
-    /// runtime) and blocks until every worker has loaded (or failed to
-    /// load) the artifacts.
+    /// Start a server over an artifacts directory: parse the manifest
+    /// and compile every variant **once**, then spawn
+    /// `cfg.batcher_shards` batcher threads and `cfg.workers` executor
+    /// threads sharing that `Arc<Runtime>`.
     pub fn start(artifacts_dir: &str, cfg: ServerConfig) -> Result<ServerHandle> {
         let workers = cfg.workers.max(1);
+        let shards = cfg.batcher_shards.max(1);
         let metrics = Arc::new(Metrics::default());
-        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
 
         // Modeled per-family edge costs, shared read-only by all
         // workers; the ScheduleCache makes repeat server starts cheap.
         let sim_costs = Arc::new(family_sim_costs());
 
-        // Executor pool: per-worker bounded job channels (at most 2
-        // batches in flight each; beyond that the batcher blocks and
-        // the router queue absorbs, then rejects, the excess).
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let mut job_txs = Vec::with_capacity(workers);
-        let mut threads = Vec::with_capacity(workers + 1);
+        // One runtime for the whole pool: manifest parsed once,
+        // weights materialized once, shared immutably.
+        let runtime = Arc::new(Runtime::load_with(
+            artifacts_dir,
+            RuntimeOptions { naive_kernels: cfg.naive_kernels },
+        )?);
+
+        let pool = Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards));
+        let device_latency = Duration::from_micros(cfg.device_latency_us);
+        let mut threads = Vec::with_capacity(workers + shards);
         for w in 0..workers {
-            let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(2);
-            job_txs.push(job_tx);
-            let dir = artifacts_dir.to_string();
+            let worker_runtime = Arc::clone(&runtime);
+            let worker_pool = Arc::clone(&pool);
             let worker_metrics = Arc::clone(&metrics);
             let worker_costs = Arc::clone(&sim_costs);
-            let worker_ready = ready_tx.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mensa-executor-{w}"))
                     .spawn(move || {
-                        let runtime = match Runtime::load(&dir) {
-                            Ok(rt) => {
-                                let _ = worker_ready.send(Ok(()));
-                                rt
-                            }
-                            Err(e) => {
-                                let _ = worker_ready.send(Err(e));
-                                return;
-                            }
-                        };
-                        executor_loop(runtime, job_rx, worker_metrics, worker_costs);
+                        executor_loop(
+                            w,
+                            worker_runtime,
+                            worker_pool,
+                            worker_metrics,
+                            worker_costs,
+                            device_latency,
+                        )
                     })
                     .expect("spawn executor"),
             );
         }
-        drop(ready_tx);
-        for _ in 0..workers {
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow!("executor worker died during startup"))??;
+
+        // Batcher shards: each drains its own router queue and feeds
+        // the shared pool.
+        let mut req_txs = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+            req_txs.push(req_tx);
+            let batcher = Batcher::new(req_rx, Arc::clone(&pool), &cfg);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("mensa-batcher-{s}"))
+                    .spawn(move || batcher.run())
+                    .expect("spawn batcher"),
+            );
         }
 
-        // Batcher thread: drains the router queue, fans jobs out to
-        // the per-worker channels by family hash.
-        let batcher = Batcher::new(req_rx, job_txs, &cfg);
-        threads.push(
-            std::thread::Builder::new()
-                .name("mensa-batcher".into())
-                .spawn(move || batcher.run())
-                .expect("spawn batcher"),
-        );
-
-        Ok(ServerHandle { req_tx, metrics, threads })
+        Ok(ServerHandle { req_txs, metrics, threads })
     }
 }
 
 impl ServerHandle {
     /// Submit a request; returns the response channel. Backpressure:
-    /// fails immediately when the bounded queue is full.
+    /// fails immediately when the family's shard queue is full.
     pub fn infer(
         &self,
         family: &str,
         inputs: Vec<Vec<f32>>,
     ) -> Result<Receiver<Result<InferenceResponse>>> {
         let (reply, rx) = mpsc::channel();
+        let shard = worker_for_family(family, self.req_txs.len());
         let req =
             Request { family: family.to_string(), inputs, enqueued: Instant::now(), reply };
-        match self.req_tx.try_send(req) {
+        match self.req_txs[shard].try_send(req) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejection();
@@ -186,11 +232,11 @@ impl ServerHandle {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: close the queue and join all threads (the
-    /// batcher drains pending batches; workers exit when their job
-    /// channels disconnect).
+    /// Graceful shutdown: close the router queues and join all threads
+    /// (each batcher shard drains its pending batches and signs off
+    /// the pool; workers exit once the pool closes and empties).
     pub fn shutdown(self) {
-        drop(self.req_tx);
+        drop(self.req_txs);
         for t in self.threads {
             let _ = t.join();
         }
@@ -234,12 +280,20 @@ fn family_sim_costs() -> HashMap<String, SimCost> {
 /// `shape` is the variant's input shape; `axis` its batch axis; the
 /// remainder is zero-padded (padding rows are discarded on unpack).
 pub fn pack_batch(shape: &[i64], axis: usize, per_request: &[&[f32]]) -> Vec<f32> {
-    let total: usize = shape.iter().product::<i64>() as usize;
-    let mut out = vec![0.0f32; total];
-    for (b, buf) in per_request.iter().enumerate() {
-        tensor::insert_sample_from(&mut out, shape, axis, b, buf);
-    }
+    let mut out = Vec::new();
+    pack_batch_into(&mut out, shape, axis, per_request);
     out
+}
+
+/// [`pack_batch`] into a reusable buffer (cleared and resized), the
+/// executor workers' zero-allocation path.
+pub fn pack_batch_into(out: &mut Vec<f32>, shape: &[i64], axis: usize, per_request: &[&[f32]]) {
+    let total: usize = shape.iter().product::<i64>() as usize;
+    out.clear();
+    out.resize(total, 0.0);
+    for (b, buf) in per_request.iter().enumerate() {
+        tensor::insert_sample_from(out, shape, axis, b, buf);
+    }
 }
 
 /// Split a batched output back into per-request buffers, mirroring
@@ -265,42 +319,48 @@ pub fn unpack_batch(
         .collect()
 }
 
-/// Largest batch capacity any variant of `family` offers.
-fn max_family_batch(runtime: &Runtime, family: &str) -> Option<usize> {
-    runtime
-        .model_names()
-        .iter()
-        .filter_map(|n| {
-            n.strip_prefix(family)
-                .and_then(|s| s.strip_prefix("_b"))
-                .and_then(|s| s.parse::<usize>().ok())
-        })
-        .max()
-}
-
-/// One worker's executor loop: drain this worker's batch jobs, split
-/// any job larger than the family's biggest compiled variant (chunks
-/// execute front to back, preserving per-family order), execute,
-/// reply.
+/// One worker's executor loop: lease a family from the pool, drain its
+/// job queue (splitting any job larger than the family's biggest
+/// compiled variant into front-to-back chunks), execute with this
+/// worker's reusable scratch, reply, release, repeat.
 fn executor_loop(
-    runtime: Runtime,
-    jobs: mpsc::Receiver<BatchJob>,
+    worker: usize,
+    runtime: Arc<Runtime>,
+    pool: Arc<ExecutorPool>,
     metrics: Arc<Metrics>,
     sim_costs: Arc<HashMap<String, SimCost>>,
+    device_latency: Duration,
 ) {
-    while let Ok(mut job) = jobs.recv() {
-        // Split oversized jobs: the batcher's max_batch may exceed the
-        // largest compiled variant (e.g. edge_lstm tops out at b4).
-        let cap = max_family_batch(&runtime, &job.family).unwrap_or(usize::MAX).max(1);
-        while job.requests.len() > cap {
-            let rest = job.requests.split_off(cap);
-            let chunk = BatchJob {
-                family: job.family.clone(),
-                requests: std::mem::replace(&mut job.requests, rest),
-            };
-            run_one_job(&runtime, chunk, &metrics, &sim_costs);
+    let mut scratch = WorkerScratch::default();
+    while let Some(family) = pool.take_family(worker) {
+        while let Some(mut job) = pool.next_job(&family, worker) {
+            let cap = runtime.max_batch(&job.family).unwrap_or(usize::MAX).max(1);
+            while job.requests.len() > cap {
+                let rest = job.requests.split_off(cap);
+                let chunk = BatchJob {
+                    family: job.family.clone(),
+                    seq: job.seq,
+                    requests: std::mem::replace(&mut job.requests, rest),
+                };
+                run_one_job(&runtime, chunk, worker, &metrics, &sim_costs, &mut scratch);
+                emulate_device(device_latency);
+            }
+            run_one_job(&runtime, job, worker, &metrics, &sim_costs, &mut scratch);
+            emulate_device(device_latency);
         }
-        run_one_job(&runtime, job, &metrics, &sim_costs);
+    }
+}
+
+/// Hardware-in-the-loop stand-in: hold this family's lease for the
+/// configured per-job device busy time (`ServerConfig::
+/// device_latency_us`). With the physical Mensa absent, this is what
+/// makes pool-balance effects measurable — while one family's
+/// "accelerator" is busy, a balanced pool runs other families'
+/// devices concurrently instead of queueing behind a statically-pinned
+/// worker. Zero (the default) disables it.
+fn emulate_device(latency: Duration) {
+    if !latency.is_zero() {
+        std::thread::sleep(latency);
     }
 }
 
@@ -308,18 +368,24 @@ fn executor_loop(
 fn run_one_job(
     runtime: &Runtime,
     job: BatchJob,
+    worker: usize,
     metrics: &Arc<Metrics>,
     sim_costs: &HashMap<String, SimCost>,
+    scratch: &mut WorkerScratch,
 ) {
     let n = job.requests.len();
     let exec_start = Instant::now();
-    let result = execute_batch(runtime, &job);
-    let BatchJob { family, requests } = job;
+    let result = execute_batch(runtime, &job, scratch);
+    let BatchJob { family, requests, seq } = job;
     match result {
         Ok((outputs, batch)) => {
-            metrics.record_job();
-            // One modeled full-model cost, amortized across the batch.
-            let sim = sim_costs.get(&family).cloned().unwrap_or_default().amortized(n);
+            // Jobs are counted on success only (failed batches land in
+            // `failed`, per request); the lease serializes same-family
+            // execution, so recording here still observes flush order.
+            metrics.record_job(&family, worker, seq);
+            // One modeled full-model cost, amortized across the batch
+            // (built once, not cloned-then-rebuilt).
+            let sim = sim_costs.get(&family).map(|c| c.amortized(n)).unwrap_or_default();
             for (req, output) in requests.into_iter().zip(outputs) {
                 let latency = req.enqueued.elapsed();
                 let queue = exec_start.duration_since(req.enqueued);
@@ -349,17 +415,22 @@ fn run_one_job(
     }
 }
 
-/// Execute one batch job: select variant, pack along each input's
-/// batch axis, run, unpack along the output's batch axis.
-fn execute_batch(runtime: &Runtime, job: &BatchJob) -> Result<(Vec<Vec<f32>>, usize)> {
+/// Execute one batch job: select the variant from the sorted family
+/// index, pack along each input's batch axis into the worker's
+/// reusable buffers, run with only the live rows active, unpack along
+/// the output's batch axis.
+fn execute_batch(
+    runtime: &Runtime,
+    job: &BatchJob,
+    scratch: &mut WorkerScratch,
+) -> Result<(Vec<Vec<f32>>, usize)> {
     let n = job.requests.len();
     let (variant, batch) = runtime
         .variant_for_batch(&job.family, n)
         .ok_or_else(|| anyhow!("no variant of `{}` fits batch {n}", job.family))?;
-    let variant = variant.to_string();
-    let model = runtime.model(&variant)?;
+    let model = runtime.model(variant)?;
     let n_inputs = model.spec.input_shapes.len();
-    let mut inputs = Vec::with_capacity(n_inputs);
+    scratch.packed.resize_with(n_inputs, Vec::new);
     for idx in 0..n_inputs {
         let shape = &model.spec.input_shapes[idx];
         let axis = model.spec.input_batch_axes[idx];
@@ -373,12 +444,11 @@ fn execute_batch(runtime: &Runtime, job: &BatchJob) -> Result<(Vec<Vec<f32>>, us
                     .ok_or_else(|| anyhow!("request missing input {idx}"))
             })
             .collect::<Result<_>>()?;
-        // Validate per-request sizes before packing.
-        let per_size: usize = shape
-            .iter()
-            .enumerate()
-            .map(|(d, &s)| if d == axis { 1 } else { s as usize })
-            .product();
+        // Validate per-request sizes before packing (same stride
+        // arithmetic as the execute-side walk — tensor.rs is the one
+        // definition both sides must agree on).
+        let (outer, _, inner) = tensor::batch_strides(shape, axis);
+        let per_size = outer * inner;
         for (i, buf) in per_req.iter().enumerate() {
             if buf.len() != per_size {
                 bail!(
@@ -387,9 +457,9 @@ fn execute_batch(runtime: &Runtime, job: &BatchJob) -> Result<(Vec<Vec<f32>>, us
                 );
             }
         }
-        inputs.push(pack_batch(shape, axis, &per_req));
+        pack_batch_into(&mut scratch.packed[idx], shape, axis, &per_req);
     }
-    let raw = model.execute(&inputs)?;
+    let raw = model.execute_with(&scratch.packed, n, &mut scratch.exec)?;
     let expected: usize = model.spec.output_shape.iter().product::<i64>() as usize;
     if raw.len() != expected {
         bail!("{variant}: output has {} elements, expected {expected}", raw.len());
@@ -424,6 +494,14 @@ mod tests {
             out,
             vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 10.0, 20.0, 30.0, 40.0, 0.0, 0.0]
         );
+    }
+
+    #[test]
+    fn pack_into_reused_buffer_clears_stale_data() {
+        let mut buf = vec![9.0f32; 32];
+        let a = [1.0, 2.0];
+        pack_batch_into(&mut buf, &[2, 2], 0, &[&a]);
+        assert_eq!(buf, vec![1.0, 2.0, 0.0, 0.0], "stale contents cleared and resized");
     }
 
     #[test]

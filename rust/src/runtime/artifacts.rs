@@ -15,6 +15,21 @@
 use crate::config::toml_lite::{self, Table, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of manifest *file* loads (not in-memory parses).
+///
+/// The serving acceptance bar is that starting a server parses the
+/// manifest exactly once regardless of worker count (the workers share
+/// one `Arc<Runtime>`); `rust/tests/shared_runtime.rs` asserts it via
+/// this counter.
+static MANIFEST_FILE_LOADS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`Manifest::load`] has read a manifest from disk in
+/// this process.
+pub fn manifest_load_count() -> u64 {
+    MANIFEST_FILE_LOADS.load(Ordering::Relaxed)
+}
 
 /// The batch axis a family's *input* tensors use when the manifest
 /// does not say otherwise: `edge_lstm` is time-major `[T, B, D]`
@@ -29,15 +44,25 @@ pub fn default_batch_axis(family: &str) -> usize {
     }
 }
 
+/// The `<N>` of a `<family>_b<N>` variant name, or `None` when the
+/// name carries no numeric batch suffix (such names are not batch
+/// variants). The single parser of the variant naming convention —
+/// `family_of`, [`ArtifactSpec::batch`], and the runtime's variant
+/// index all route through it.
+pub(crate) fn batch_suffix(name: &str) -> Option<usize> {
+    let idx = name.rfind("_b")?;
+    let digits = &name[idx + 2..];
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
 /// The `<family>` part of a `<family>_b<N>` variant name.
 fn family_of(name: &str) -> &str {
-    match name.rfind("_b") {
-        Some(idx) if !name[idx + 2..].is_empty()
-            && name[idx + 2..].chars().all(|c| c.is_ascii_digit()) =>
-        {
-            &name[..idx]
-        }
-        _ => name,
+    match batch_suffix(name) {
+        Some(_) => &name[..name.rfind("_b").expect("suffix implies separator")],
+        None => name,
     }
 }
 
@@ -70,10 +95,7 @@ impl ArtifactSpec {
     /// The batch size encoded in the name (first dim for CNN/joint,
     /// second for the `[T, B, D]` LSTM inputs).
     pub fn batch(&self) -> usize {
-        self.name
-            .rfind("_b")
-            .and_then(|idx| self.name[idx + 2..].parse().ok())
-            .unwrap_or(1)
+        batch_suffix(&self.name).unwrap_or(1)
     }
 }
 
@@ -157,6 +179,7 @@ impl Manifest {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        MANIFEST_FILE_LOADS.fetch_add(1, Ordering::Relaxed);
         Self::parse(&text)
     }
 

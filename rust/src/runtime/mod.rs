@@ -16,6 +16,23 @@
 //!   so this backend only builds once it is vendored next to `anyhow`
 //!   (see `rust/Cargo.toml`).
 //!
+//! # Sharing
+//!
+//! A [`Runtime`] is immutable after [`Runtime::load`] and (with the
+//! default reference backend) `Send + Sync`: the executor pool parses
+//! the manifest and compiles every variant **once**, then clones one
+//! `Arc<Runtime>` into each worker — startup cost and resident weights
+//! no longer scale with the worker count. Inside one load, batch
+//! variants of a family additionally share their weight matrices
+//! physically (see [`reference`]'s `WeightCache`). The PJRT backend
+//! must prove its client is thread-safe before it can join this
+//! scheme; until then it remains single-owner behind the feature gate.
+//!
+//! Variant lookup is served by a per-family index sorted by batch
+//! size, so the batcher's per-flush "smallest variant that fits"
+//! query is a map hit plus a short sorted scan instead of the old
+//! O(models) name parse.
+//!
 //! Python never runs here — the Rust binary is self-contained once a
 //! manifest exists.
 
@@ -25,7 +42,10 @@ mod reference;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
-pub use artifacts::{default_batch_axis, ArtifactSpec, Manifest};
+pub use artifacts::{default_batch_axis, manifest_load_count, ArtifactSpec, Manifest};
+pub use reference::ExecScratch;
+
+use artifacts::batch_suffix;
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -38,6 +58,16 @@ enum Backend {
     Pjrt(pjrt::PjrtModel),
 }
 
+/// Load-time options (kernel selection for benchmarking).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeOptions {
+    /// Use the pre-rewrite reference kernels (untransposed scan layout
+    /// with per-call allocations). This exists solely so
+    /// `benches/hotpath_micro.rs` can measure the serving path against
+    /// its PR-1 baseline; production loads leave it `false`.
+    pub naive_kernels: bool,
+}
+
 /// A compiled model variant ready to execute.
 pub struct LoadedModel {
     /// The artifact's manifest entry.
@@ -46,11 +76,30 @@ pub struct LoadedModel {
 }
 
 impl LoadedModel {
-    /// Execute with raw `f32` buffers (one per declared input).
+    /// Execute with raw `f32` buffers (one per declared input),
+    /// allocating throwaway scratch. Convenience wrapper over
+    /// [`LoadedModel::execute_with`] with every batch row active.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let batch = self.spec.output_shape[self.spec.output_batch_axis] as usize;
+        self.execute_with(inputs, batch, &mut ExecScratch::default())
+    }
+
+    /// Execute with raw `f32` buffers and caller-owned scratch.
     ///
     /// Buffers must match the artifact's input shapes exactly; the
-    /// output is the flattened result tensor.
-    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+    /// output is the flattened result tensor. Only the first `active`
+    /// batch rows are live data — the reference backend skips the
+    /// padding rows (their output is exactly zero either way), which
+    /// is how the executor pool avoids paying for variant-size
+    /// round-up. `scratch` is reused across calls by the executor
+    /// workers so steady-state execution performs no intermediate
+    /// allocations.
+    pub fn execute_with(
+        &self,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>> {
         if inputs.len() != self.spec.input_shapes.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -71,7 +120,7 @@ impl LoadedModel {
             }
         }
         match &self.backend {
-            Backend::Reference(model) => Ok(model.execute(&self.spec, inputs)),
+            Backend::Reference(model) => Ok(model.execute(&self.spec, inputs, active, scratch)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(model) => model.execute(&self.spec, inputs),
         }
@@ -84,41 +133,82 @@ impl LoadedModel {
 }
 
 /// The artifact runtime: every loaded model variant plus the backend's
-/// platform label.
+/// platform label. Immutable once loaded; share it behind an `Arc`.
 pub struct Runtime {
     models: HashMap<String, LoadedModel>,
+    /// `family → [(batch, variant name)]`, sorted ascending by batch:
+    /// the smallest variant that fits a request batch is the first
+    /// entry with `batch >= n`.
+    variants: HashMap<String, Vec<(usize, String)>>,
     platform: String,
 }
 
+// The reference backend is plain owned data (weights behind `Arc`s),
+// so one Runtime is shareable across the executor pool. This assertion
+// is what lets `Server::start` clone a single `Arc<Runtime>` into
+// every worker; the PJRT backend is excluded until its client proves
+// thread-safe.
+#[cfg(not(feature = "pjrt"))]
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Runtime>();
+};
+
 impl Runtime {
     /// Create a runtime over the artifacts directory (must contain
-    /// `manifest.toml`; see `python/compile/aot.py`).
+    /// `manifest.toml`; see `python/compile/aot.py`) with default
+    /// options.
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_with(artifacts_dir, RuntimeOptions::default())
+    }
+
+    /// Create a runtime with explicit [`RuntimeOptions`].
+    pub fn load_with(artifacts_dir: impl AsRef<Path>, opts: RuntimeOptions) -> Result<Self> {
         let dir = artifacts_dir.as_ref();
         let manifest = Manifest::load(dir.join("manifest.toml"))?;
         #[cfg(feature = "pjrt")]
         {
+            let _ = opts;
             pjrt::load(dir, manifest)
         }
         #[cfg(not(feature = "pjrt"))]
         {
-            Self::load_reference(manifest)
+            Self::load_reference(manifest, opts)
         }
     }
 
     /// Build every manifest entry with the reference interpreter.
     #[cfg_attr(feature = "pjrt", allow(dead_code))]
-    fn load_reference(manifest: Manifest) -> Result<Self> {
+    fn load_reference(manifest: Manifest, opts: RuntimeOptions) -> Result<Self> {
+        let mut cache = reference::WeightCache::default();
         let mut models = HashMap::new();
         for spec in manifest.artifacts {
-            let model = reference::RefModel::build(&spec)
+            let model = reference::RefModel::build_with(&spec, opts.naive_kernels, &mut cache)
                 .with_context(|| format!("building reference model `{}`", spec.name))?;
             models.insert(
                 spec.name.clone(),
                 LoadedModel { spec, backend: Backend::Reference(model) },
             );
         }
-        Ok(Self { models, platform: "cpu".into() })
+        Ok(Self::assemble(models, "cpu".into()))
+    }
+
+    /// Finish construction: build the sorted per-family variant index
+    /// over the loaded models (shared by both backends).
+    fn assemble(models: HashMap<String, LoadedModel>, platform: String) -> Self {
+        let mut variants: HashMap<String, Vec<(usize, String)>> = HashMap::new();
+        for (name, model) in &models {
+            if let Some(b) = batch_suffix(name) {
+                variants
+                    .entry(model.spec.family().to_string())
+                    .or_default()
+                    .push((b, name.clone()));
+            }
+        }
+        for list in variants.values_mut() {
+            list.sort_unstable();
+        }
+        Self { models, variants, platform }
     }
 
     /// Names of all loaded model variants.
@@ -140,53 +230,89 @@ impl Runtime {
 
     /// The execution platform (diagnostics): `cpu` for both the
     /// reference interpreter and the PJRT CPU client.
-    pub fn platform(&self) -> String {
-        self.platform.clone()
+    pub fn platform(&self) -> &str {
+        &self.platform
     }
 
     /// Pick the smallest batch variant of `family` (e.g. `edge_cnn`)
     /// that fits `batch` requests, if any (`<family>_b<NN>` naming).
+    /// Indexed: a map hit plus a short scan of the family's sorted
+    /// variant list.
     pub fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)> {
-        let mut best: Option<(&str, usize)> = None;
-        for name in self.models.keys() {
-            if let Some(b) = name
-                .strip_prefix(family)
-                .and_then(|s| s.strip_prefix("_b"))
-                .and_then(|s| s.parse::<usize>().ok())
-            {
-                if b >= batch && best.is_none_or(|(_, cur)| b < cur) {
-                    best = Some((name.as_str(), b));
-                }
-            }
-        }
-        best
+        self.variants
+            .get(family)?
+            .iter()
+            .find(|&&(b, _)| b >= batch)
+            .map(|(b, name)| (name.as_str(), *b))
+    }
+
+    /// Largest batch capacity any variant of `family` offers (the
+    /// executor's oversized-job chunk size).
+    pub fn max_batch(&self, family: &str) -> Option<usize> {
+        self.variants.get(family)?.last().map(|&(b, _)| b)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Runtime tests over the real checked-in manifest live in
-    // rust/tests/runtime_pjrt.rs; here we test pure helpers.
+    use super::*;
 
     #[test]
-    fn variant_selection_logic() {
-        // Emulate the selection rule without loading artifacts.
-        let names = ["edge_cnn_b1", "edge_cnn_b4", "edge_cnn_b8", "joint_b1"];
-        let pick = |family: &str, batch: usize| -> Option<usize> {
-            names
-                .iter()
-                .filter_map(|n| {
-                    n.strip_prefix(family)
-                        .and_then(|s| s.strip_prefix("_b"))
-                        .and_then(|s| s.parse::<usize>().ok())
-                })
-                .filter(|&b| b >= batch)
-                .min()
-        };
-        assert_eq!(pick("edge_cnn", 1), Some(1));
-        assert_eq!(pick("edge_cnn", 2), Some(4));
-        assert_eq!(pick("edge_cnn", 5), Some(8));
-        assert_eq!(pick("edge_cnn", 9), None);
-        assert_eq!(pick("joint", 1), Some(1));
+    fn batch_suffix_parsing() {
+        assert_eq!(batch_suffix("edge_cnn_b8"), Some(8));
+        assert_eq!(batch_suffix("edge_lstm_b1"), Some(1));
+        assert_eq!(batch_suffix("joint"), None, "no suffix, not a variant");
+        assert_eq!(batch_suffix("fam_bx2"), None, "non-numeric suffix");
+        assert_eq!(batch_suffix("fam_b"), None, "empty suffix");
+    }
+
+    #[test]
+    fn variant_index_picks_smallest_fit() {
+        let manifest = Manifest::parse(
+            r#"
+[[artifact]]
+name = "edge_cnn_b1"
+file = "edge_cnn_b1.hlo.txt"
+num_inputs = 1
+input0_shape = "1x4"
+output_shape = "1x3"
+sha256 = "0000000000000000"
+
+[[artifact]]
+name = "edge_cnn_b4"
+file = "edge_cnn_b4.hlo.txt"
+num_inputs = 1
+input0_shape = "4x4"
+output_shape = "4x3"
+sha256 = "0000000000000000"
+
+[[artifact]]
+name = "edge_cnn_b8"
+file = "edge_cnn_b8.hlo.txt"
+num_inputs = 1
+input0_shape = "8x4"
+output_shape = "8x3"
+sha256 = "0000000000000000"
+
+[[artifact]]
+name = "joint_b1"
+file = "joint_b1.hlo.txt"
+num_inputs = 1
+input0_shape = "1x4"
+output_shape = "1x3"
+sha256 = "0000000000000000"
+"#,
+        )
+        .unwrap();
+        let rt = Runtime::load_reference(manifest, RuntimeOptions::default()).unwrap();
+        assert_eq!(rt.variant_for_batch("edge_cnn", 1), Some(("edge_cnn_b1", 1)));
+        assert_eq!(rt.variant_for_batch("edge_cnn", 2), Some(("edge_cnn_b4", 4)));
+        assert_eq!(rt.variant_for_batch("edge_cnn", 5), Some(("edge_cnn_b8", 8)));
+        assert_eq!(rt.variant_for_batch("edge_cnn", 9), None);
+        assert_eq!(rt.variant_for_batch("joint", 1), Some(("joint_b1", 1)));
+        assert_eq!(rt.variant_for_batch("bert", 1), None);
+        assert_eq!(rt.max_batch("edge_cnn"), Some(8));
+        assert_eq!(rt.max_batch("joint"), Some(1));
+        assert_eq!(rt.max_batch("bert"), None);
     }
 }

@@ -65,5 +65,5 @@ pub(super) fn load(dir: &Path, manifest: Manifest) -> Result<Runtime> {
             },
         );
     }
-    Ok(Runtime { models, platform })
+    Ok(Runtime::assemble(models, platform))
 }

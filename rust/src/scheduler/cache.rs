@@ -16,16 +16,22 @@
 //!
 //! # Invalidation rules
 //!
-//! Entries are keyed by `(system.name, model.name)` — names, not
-//! structural hashes, because config sweeps construct systems once and
-//! the zoo's model names are unique. Consequently:
+//! Entries are keyed by `(system.name, model.name)` **plus a
+//! structural hash** of both: every accelerator's geometry/dataflow
+//! fields and every layer's structural parameters feed an FNV
+//! digest, so a config sweep that reuses a name with different
+//! hardware (or a rebuilt model under an old name) misses the cache
+//! instead of serving a stale schedule. Remaining caveats:
 //!
 //! * mutating an accelerator or model **in place** after it was cached
-//!   leaves a stale entry — call [`ScheduleCache::invalidate`] with the
-//!   system name (or [`ScheduleCache::clear`]) first;
-//! * two *different* systems sharing a name must not use the same
-//!   cache (give sweep variants distinct names, as
-//!   `bench_harness::ablations` does);
+//!   still leaves a stale entry reachable through the *old* structure
+//!   — call [`ScheduleCache::invalidate`] with the system name (or
+//!   [`ScheduleCache::clear`]) first; the structural hash protects
+//!   name *reuse*, not aliased mutation;
+//! * the hash covers accelerator fields and per-layer structure (name,
+//!   kind parameters, group); exotic sweeps that vary only the graph
+//!   edge list between identically-named, identically-parameterized
+//!   layers still need distinct model names;
 //! * the process-wide [`ScheduleCache::global`] instance is shared by
 //!   every server in the process, which is exactly what makes a second
 //!   `Server::start` cheap.
@@ -37,6 +43,80 @@ use crate::scheduler::{Mapping, MensaScheduler};
 use crate::sim::{RunReport, Simulator};
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
+
+/// Cache key: display names (for [`ScheduleCache::invalidate`]) plus
+/// the structural digest that catches name reuse across sweeps.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    system: String,
+    model: String,
+    structure: u64,
+}
+
+/// Incremental FNV-1a digest over heterogeneous fields (one wrapper
+/// around the project's single FNV loop in `util`).
+struct Digest(u64);
+
+impl Digest {
+    fn new() -> Self {
+        Digest(crate::util::FNV1A_64_OFFSET)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        self.0 = crate::util::fnv1a_64_extend(self.0, bytes);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+        self.bytes(&[0xFF]); // field separator
+    }
+
+    fn u64v(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn f64v(&mut self, v: f64) {
+        self.u64v(v.to_bits());
+    }
+}
+
+/// Structural digest of a (system, model) pair: accelerator geometry,
+/// dataflow/memory kinds, and each layer's structural parameters.
+/// Deliberately excludes `AccelConfig::buf_energy_cache` (a lazily
+/// initialized memo whose state must not affect identity).
+fn structural_hash(system: &MensaSystem, model: &ModelGraph) -> u64 {
+    use std::fmt::Write as _;
+    let mut d = Digest::new();
+    let mut buf = String::with_capacity(128);
+    d.str(&system.name);
+    d.u64v(system.accels.len() as u64);
+    for a in &system.accels {
+        d.str(&a.name);
+        d.u64v(a.pe_rows as u64);
+        d.u64v(a.pe_cols as u64);
+        d.f64v(a.clock_ghz);
+        d.u64v(a.param_buf_bytes);
+        d.u64v(a.act_buf_bytes);
+        d.u64v(a.pe_reg_bytes);
+        d.f64v(a.dram_bw_gbps);
+        buf.clear();
+        let _ = write!(buf, "{:?}/{:?}", a.memory, a.dataflow);
+        d.str(&buf);
+    }
+    d.str(&model.name);
+    d.str(model.kind.name());
+    d.u64v(model.len() as u64);
+    for layer in model.layers() {
+        // Layer's Debug form spells out name, kind parameters, and
+        // group — exactly the structural surface the cost model reads.
+        // One reused buffer keeps the per-lookup cost to formatting,
+        // far below the ≥10x hit-vs-cold bar.
+        buf.clear();
+        let _ = write!(buf, "{layer:?}");
+        d.str(&buf);
+    }
+    d.0
+}
 
 /// Per-layer × per-accelerator dataflow costs for one (model, system)
 /// pair, computed once up front.
@@ -100,7 +180,7 @@ pub struct ScheduledCost {
 /// under racing cold lookups.
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
-    entries: RwLock<HashMap<(String, String), Arc<ScheduledCost>>>,
+    entries: RwLock<HashMap<CacheKey, Arc<ScheduledCost>>>,
 }
 
 impl ScheduleCache {
@@ -116,10 +196,15 @@ impl ScheduleCache {
     }
 
     /// Schedule + simulate `model` on `system`, memoized. A hit is a
-    /// read-lock and an `Arc` clone; a miss builds one [`CostTable`]
-    /// and shares it between the scheduler and the simulator.
+    /// structural-hash computation, a read-lock, and an `Arc` clone; a
+    /// miss builds one [`CostTable`] and shares it between the
+    /// scheduler and the simulator.
     pub fn get_or_compute(&self, system: &MensaSystem, model: &ModelGraph) -> Arc<ScheduledCost> {
-        let key = (system.name.clone(), model.name.clone());
+        let key = CacheKey {
+            system: system.name.clone(),
+            model: model.name.clone(),
+            structure: structural_hash(system, model),
+        };
         if let Some(hit) = self.entries.read().expect("schedule cache lock").get(&key) {
             return Arc::clone(hit);
         }
@@ -137,7 +222,7 @@ impl ScheduleCache {
         self.entries
             .write()
             .expect("schedule cache lock")
-            .retain(|(sys, _), _| sys != system_name);
+            .retain(|key, _| key.system != system_name);
     }
 
     /// Drop all entries.
@@ -248,6 +333,35 @@ mod tests {
             warm_ns * 10.0 < cold_ns,
             "warm hit {warm_ns:.0} ns/lookup vs cold {cold_ns:.0} ns — cache not ≥ 10x faster"
         );
+    }
+
+    #[test]
+    fn reused_names_with_different_structure_do_not_collide() {
+        // The ROADMAP invalidation hazard: a config sweep constructs a
+        // *different* system under the same name. The structural hash
+        // must keep the entries apart instead of serving the first
+        // system's schedule for the second.
+        let cache = ScheduleCache::new();
+        let model = zoo::cnn(0);
+        let base = configs::mensa_g();
+        let mut tweaked = configs::mensa_g(); // same name...
+        tweaked.accels[0].pe_rows *= 2; // ...different hardware
+        let a = cache.get_or_compute(&base, &model);
+        let b = cache.get_or_compute(&tweaked, &model);
+        assert_eq!(base.name, tweaked.name, "the hazard under test");
+        assert!(!Arc::ptr_eq(&a, &b), "structural change must miss the cache");
+        assert_eq!(cache.len(), 2);
+        // And the same structure still hits.
+        let c = cache.get_or_compute(&configs::mensa_g(), &model);
+        assert!(Arc::ptr_eq(&a, &c), "identical structure must hit");
+        // Models reusing a name with different layers split too.
+        let mut renamed = zoo::cnn(1);
+        renamed.name = model.name.clone();
+        let d = cache.get_or_compute(&base, &renamed);
+        assert!(!Arc::ptr_eq(&a, &d));
+        // invalidate() still keys on the system display name.
+        cache.invalidate(&base.name);
+        assert!(cache.is_empty(), "all Mensa-G entries dropped by name");
     }
 
     #[test]

@@ -33,17 +33,27 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
-/// FNV-1a 64-bit hash. Used where a hash must be *stable across
-/// processes and builds* (executor-pool family routing, reference-
-/// backend weight seeding) — `std`'s `DefaultHasher` explicitly does
-/// not promise that.
-pub fn fnv1a_64(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.as_bytes() {
+/// The FNV-1a 64-bit offset basis: the seed for [`fnv1a_64`] and for
+/// incremental digests built on [`fnv1a_64_extend`].
+pub const FNV1A_64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64-bit hash. Start from
+/// [`FNV1A_64_OFFSET`]; every stable hash in the project routes
+/// through this one loop so the constants exist exactly once.
+pub fn fnv1a_64_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
         h ^= u64::from(*b);
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a 64-bit hash. Used where a hash must be *stable across
+/// processes and builds* (executor-pool family routing, reference-
+/// backend weight seeding, schedule-cache structural keys) — `std`'s
+/// `DefaultHasher` explicitly does not promise that.
+pub fn fnv1a_64(s: &str) -> u64 {
+    fnv1a_64_extend(FNV1A_64_OFFSET, s.as_bytes())
 }
 
 #[cfg(test)]

@@ -1,0 +1,46 @@
+//! Shared-artifact acceptance: starting a server must parse the
+//! manifest exactly once regardless of worker count (all executor
+//! workers clone one `Arc<Runtime>`).
+//!
+//! This is a **single-test binary on purpose**: `manifest_load_count`
+//! is a process-wide counter, and cargo runs tests within one binary
+//! concurrently — any sibling test that loaded a runtime would race
+//! the delta assertion. Keep it that way.
+
+use mensa::config::ServerConfig;
+use mensa::coordinator::Server;
+use mensa::runtime::manifest_load_count;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn startup_parses_manifest_once_regardless_of_worker_count() {
+    let Some(dir) = artifacts_dir() else { return };
+    for workers in [1usize, 4, 8] {
+        let before = manifest_load_count();
+        let cfg = ServerConfig { workers, ..Default::default() };
+        let server = Server::start(&dir, cfg).expect("start");
+        let after = manifest_load_count();
+        assert_eq!(
+            after - before,
+            1,
+            "{workers}-worker startup must load the manifest exactly once"
+        );
+        // The shared runtime actually serves.
+        let input: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 13) as f32 / 13.0).collect();
+        let resp = server
+            .infer_blocking("edge_cnn", vec![input], Duration::from_secs(30))
+            .expect("inference on shared runtime");
+        assert_eq!(resp.output.len(), 16);
+        server.shutdown();
+    }
+}

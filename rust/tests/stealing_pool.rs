@@ -1,0 +1,210 @@
+//! Work-stealing executor-pool contracts, end to end through the
+//! server:
+//!
+//! * **bit-exactness** — under a skewed concurrent load (one hot
+//!   family flooding, others trickling), every batched response equals
+//!   its request's solo output *bit for bit* (same kernels, same
+//!   per-sample walk, any misrouting or reordering inside a batch
+//!   would mismatch);
+//! * **FIFO** — same-family jobs execute in flush order; the batcher
+//!   stamps per-family sequence numbers and `Metrics` counts
+//!   regressions (`fifo_violations` must stay 0);
+//! * **load balance** — a hot family is no longer pinned to one
+//!   worker: with stealing enabled, >1 worker observes its jobs
+//!   (per-family metrics), while the static baseline keeps it pinned
+//!   (exactly 1 worker).
+
+use mensa::config::ServerConfig;
+use mensa::coordinator::Server;
+use mensa::util::rng::Rng;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+fn cnn_input(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect()
+}
+
+fn lstm_input(rng: &mut Rng) -> Vec<f32> {
+    (0..8 * 128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn skewed_concurrent_load_stays_bit_exact_and_fifo() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 4,
+        batch_timeout_us: 10_000,
+        work_stealing: true,
+        batcher_shards: 2,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+
+    // Property-style: several rounds of randomized skewed floods, each
+    // case replayable from its seed.
+    for round in 0u64..4 {
+        let mut rng = Rng::new(0x5EED ^ round);
+        // Hot family: 16 edge_cnn requests; background: 4 edge_lstm.
+        let hot: Vec<Vec<f32>> = (0..16).map(|_| cnn_input(&mut rng)).collect();
+        let cold: Vec<Vec<f32>> = (0..4).map(|_| lstm_input(&mut rng)).collect();
+
+        // Solo baselines (batch of 1 each — sequential).
+        let solo_hot: Vec<Vec<f32>> = hot
+            .iter()
+            .map(|x| {
+                server.infer_blocking("edge_cnn", vec![x.clone()], TIMEOUT).unwrap().output
+            })
+            .collect();
+        let solo_cold: Vec<Vec<f32>> = cold
+            .iter()
+            .map(|x| {
+                server.infer_blocking("edge_lstm", vec![x.clone()], TIMEOUT).unwrap().output
+            })
+            .collect();
+
+        // Concurrent skewed flood: interleave a cold request after
+        // every 4th hot one.
+        let mut rxs = Vec::new();
+        for (i, x) in hot.iter().enumerate() {
+            rxs.push(("edge_cnn", i, server.infer("edge_cnn", vec![x.clone()]).unwrap()));
+            if i % 4 == 3 {
+                let c = i / 4;
+                rxs.push((
+                    "edge_lstm",
+                    c,
+                    server.infer("edge_lstm", vec![cold[c].clone()]).unwrap(),
+                ));
+            }
+        }
+        let mut batched = 0;
+        for (family, i, rx) in rxs {
+            let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+            let solo = if family == "edge_cnn" { &solo_hot[i] } else { &solo_cold[i] };
+            assert_eq!(
+                &resp.output, solo,
+                "round {round}: {family} request {i} not bit-exact vs solo"
+            );
+            if resp.batch_size > 1 {
+                batched += 1;
+            }
+        }
+        assert!(batched >= 4, "round {round}: flood did not coalesce ({batched} batched)");
+    }
+
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "same-family jobs must execute in flush order");
+    assert_eq!(snap.failed, 0);
+    server.shutdown();
+}
+
+#[test]
+fn hot_family_migrates_across_workers_when_stealing() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_timeout_us: 500,
+        work_stealing: true,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let mut rng = Rng::new(7);
+    // Sequential blocking requests: each flush finds the whole pool
+    // idle, so the idle-queue rotation must spread the single hot
+    // family across workers (the anti-pinning regression test).
+    for _ in 0..16 {
+        let x = cnn_input(&mut rng);
+        server.infer_blocking("edge_cnn", vec![x], TIMEOUT).expect("inference");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let snap = server.metrics();
+    let workers_seen = snap
+        .workers_by_family
+        .iter()
+        .find(|(f, _)| f == "edge_cnn")
+        .map(|(_, ws)| ws.clone())
+        .unwrap_or_default();
+    assert!(
+        workers_seen.len() > 1,
+        "hot family stayed pinned to workers {workers_seen:?} despite stealing"
+    );
+    assert_eq!(snap.fifo_violations, 0);
+    server.shutdown();
+}
+
+#[test]
+fn static_baseline_pins_hot_family_to_one_worker() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_timeout_us: 500,
+        work_stealing: false,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let mut rng = Rng::new(11);
+    for _ in 0..8 {
+        let x = cnn_input(&mut rng);
+        server.infer_blocking("edge_cnn", vec![x], TIMEOUT).expect("inference");
+    }
+    let snap = server.metrics();
+    let workers_seen = snap
+        .workers_by_family
+        .iter()
+        .find(|(f, _)| f == "edge_cnn")
+        .map(|(_, ws)| ws.clone())
+        .unwrap_or_default();
+    assert_eq!(
+        workers_seen.len(),
+        1,
+        "static routing must keep a family on exactly one worker, saw {workers_seen:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn oversized_jobs_chunk_in_order_under_stealing() {
+    // edge_lstm tops out at b4; an 8-request flood must chunk without
+    // reordering or failures on the stealing pool.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        batch_timeout_us: 50_000,
+        work_stealing: true,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let mut rng = Rng::new(23);
+    let inputs: Vec<Vec<f32>> = (0..8).map(|_| lstm_input(&mut rng)).collect();
+    let solo: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| server.infer_blocking("edge_lstm", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
+        assert!(resp.batch_size <= 4, "chunk exceeds largest variant");
+        assert_eq!(&resp.output, &solo[i], "request {i} bit-exact through chunking");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.fifo_violations, 0);
+    server.shutdown();
+}
