@@ -11,20 +11,32 @@
 //! 4-worker pool — the deterministic worst case that *any* fixed
 //! hash suffers once families outnumber workers (pigeonhole), and the
 //! exact pathology the paper attributes to one-size-fits-all
-//! assignment. Three load cases run against both routing modes:
+//! assignment. Load cases:
 //!
 //! * `skewed_device_emulated` — one hot family (~30% of requests),
 //!   per-job emulated device busy time (the hardware-in-the-loop
-//!   stand-in for each family's edge accelerator). This is the
-//!   headline ≥2x case: static routing serializes every family's
-//!   device window behind one worker, stealing overlaps them, so the
-//!   gap scales with worker count rather than host core count.
-//! * `skewed_cpu_bound` — same skew, no emulation: the gain is then
-//!   bounded by host cores (informational on small CI machines).
-//! * `uniform_cpu_bound` — no skew, no emulation.
+//!   stand-in for each family's edge accelerator), static vs stealing
+//!   routing. This is the headline ≥2x case: static routing serializes
+//!   every family's device window behind one worker, stealing overlaps
+//!   them, so the gap scales with worker count rather than host cores.
+//! * `skewed_cpu_bound` / `uniform_cpu_bound` — no emulation; the
+//!   routing gain is then bounded by host cores (informational on
+//!   small CI machines).
+//! * `skewed_gemm` — same skewed load, stealing both sides, comparing
+//!   **batched GEMM vs per-sample** execution (PR 3's tentpole): the
+//!   batched path streams each weight tile once per column block
+//!   instead of once per sample, so at executed batches ≥ 4 its
+//!   throughput must beat the per-sample baseline.
+//! * `hot_family_reorder` — 100% of requests on ONE family with
+//!   device emulation, comparing the **family lease vs the reorder
+//!   buffer** (`reorder_depth = workers`): the lease serializes the
+//!   hot family's jobs on one worker at a time, the reorder buffer
+//!   fans them across the pool while `fifo_violations` stays 0
+//!   (asserted per run).
 //!
-//! A kernel microbenchmark (naive scan vs blocked/transposed
-//! zero-alloc) over the real `edge_cnn_b8` artifact rides along.
+//! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
+//! (real `edge_cnn_b8`) and per-sample vs batched GEMM (synthetic
+//! heavy-weight family, where parameter streaming dominates).
 
 use mensa::accel::configs;
 use mensa::bench_harness::timer;
@@ -39,7 +51,9 @@ use std::hint::black_box;
 use std::time::{Duration, Instant};
 
 /// Synthetic dense-family geometry: ~0.6 MMAC per sample keeps a
-/// batch-8 job in the hundreds of microseconds, large vs dispatch.
+/// batch-8 job in the hundreds of microseconds, large vs dispatch, and
+/// the ~2.4 MB weight matrix makes parameter streaming the dominant
+/// cost — the regime the batched GEMM targets.
 const BENCH_IN: usize = 1536;
 const BENCH_OUT: usize = 384;
 const BENCH_WORKERS: usize = 4;
@@ -118,16 +132,22 @@ fn main() {
         warm.mean_ns
     );
 
-    // 5. Reference-kernel microbench over the real edge_cnn_b8
-    // artifact: PR-1 naive scan layout (throwaway scratch per call) vs
-    // the blocked/transposed kernel with reused scratch.
+    // Shared synthetic serving artifacts (also the GEMM microbench
+    // substrate — its weight matrices dwarf the real edge_cnn's).
+    let families = colliding_families();
+    let bench_dir = write_bench_artifacts(&families);
+
+    // 5. Reference-kernel microbenches: PR-1 naive scan vs blocked
+    // kernels (real edge_cnn_b8), and per-sample vs batched GEMM
+    // (synthetic heavy-weight b8).
     let kernel = bench_kernels();
+    let gemm = bench_gemm_kernel(&bench_dir);
 
-    // 6. Serving throughput: work-stealing pool vs the static
-    // family-hash baseline under skewed and uniform loads.
-    let serving = bench_serving();
+    // 6. Serving throughput: routing, kernel, and ordering-discipline
+    // comparisons under skewed / uniform / hot-family loads.
+    let serving = bench_serving(&bench_dir, &families);
 
-    write_bench_json(&kernel, &serving);
+    write_bench_json(&kernel, &gemm, &serving);
 
     // 7. Macro: the full 24-model x 4-system evaluation grid.
     let m = timer::bench("grid/24x4_evaluation", 3, 2, || {
@@ -145,8 +165,11 @@ struct KernelResult {
 fn bench_kernels() -> KernelResult {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     let fast = Runtime::load(dir).expect("runtime");
-    let naive =
-        Runtime::load_with(dir, RuntimeOptions { naive_kernels: true }).expect("runtime");
+    let naive = Runtime::load_with(
+        dir,
+        RuntimeOptions { naive_kernels: true, ..Default::default() },
+    )
+    .expect("runtime");
     let model_fast = fast.model("edge_cnn_b8").expect("edge_cnn_b8");
     let model_naive = naive.model("edge_cnn_b8").expect("edge_cnn_b8");
     let input: Vec<f32> = (0..8 * 32 * 32 * 3).map(|i| ((i % 17) as f32 - 8.0) / 17.0).collect();
@@ -172,16 +195,63 @@ fn bench_kernels() -> KernelResult {
     }
 }
 
-/// One routing comparison: (static_rps, stealing_rps).
+/// Per-sample vs batched-GEMM timing over the synthetic heavy-weight
+/// family (weights ~2.4 MB: parameter streaming dominates, so the
+/// once-per-column-block amortization is what's measured).
+struct GemmResult {
+    per_sample_ns_per_sample: f64,
+    batched_ns_per_sample: f64,
+}
+
+fn bench_gemm_kernel(dir: &str) -> GemmResult {
+    let batched = Runtime::load(dir).expect("bench runtime");
+    let per_sample = Runtime::load_with(
+        dir,
+        RuntimeOptions { batched_gemm: false, ..Default::default() },
+    )
+    .expect("bench runtime");
+    let name = "fam000_b8";
+    let mb = batched.model(name).expect("bench b8 variant");
+    let mp = per_sample.model(name).expect("bench b8 variant");
+    let input: Vec<f32> =
+        (0..8 * BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
+    let inputs = vec![input];
+    let mut scratch = ExecScratch::default();
+    let b = timer::bench("ref_kernel/gemm_batched_b8", 10, 100, || {
+        black_box(mb.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
+    });
+    println!("{}", b.render());
+    let p = timer::bench("ref_kernel/gemm_per_sample_b8", 10, 100, || {
+        black_box(mp.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
+    });
+    println!("{}", p.render());
+    println!(
+        "batched GEMM speedup (b8, per sample): {:.2}x (per-sample {:.0} ns -> batched {:.0} ns)",
+        p.mean_ns / b.mean_ns.max(1.0),
+        p.mean_ns / 8.0,
+        b.mean_ns / 8.0
+    );
+    GemmResult {
+        per_sample_ns_per_sample: p.mean_ns / 8.0,
+        batched_ns_per_sample: b.mean_ns / 8.0,
+    }
+}
+
+/// One A/B serving comparison.
 struct CaseResult {
     name: &'static str,
-    static_rps: f64,
-    stealing_rps: f64,
+    /// Baseline / treatment labels for the JSON keys.
+    labels: (&'static str, &'static str),
+    baseline_rps: f64,
+    treatment_rps: f64,
+    /// Mean executed batch of the treatment run (the gemm case's
+    /// "batch >= 4" witness).
+    treatment_mean_batch: f64,
 }
 
 impl CaseResult {
     fn speedup(&self) -> f64 {
-        self.stealing_rps / self.static_rps.max(1e-9)
+        self.treatment_rps / self.baseline_rps.max(1e-9)
     }
 }
 
@@ -234,27 +304,54 @@ fn write_bench_artifacts(families: &[String]) -> String {
 /// (6/20 = 30%), the rest spread evenly.
 const SKEW_PATTERN: [usize; 20] = [0, 1, 2, 0, 3, 4, 0, 5, 6, 0, 7, 1, 0, 2, 3, 0, 4, 5, 6, 7];
 
-/// Run one serving case; returns completed requests per second.
-fn run_case(dir: &str, families: &[String], stealing: bool, skewed: bool, device_us: u64) -> f64 {
+/// How one serving run routes, executes, and orders.
+#[derive(Clone, Copy)]
+struct CaseOpts {
+    stealing: bool,
+    /// `skewed`: SKEW_PATTERN; `!skewed`: uniform round-robin — unless
+    /// `single_family`, which sends every request to families[0].
+    skewed: bool,
+    single_family: bool,
+    device_us: u64,
+    batched_gemm: bool,
+    reorder_depth: usize,
+}
+
+struct RunStats {
+    rps: f64,
+    mean_batch: f64,
+}
+
+/// Run one serving case; returns completed requests/second and the
+/// mean executed batch.
+fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
     let cfg = ServerConfig {
         workers: BENCH_WORKERS,
         max_batch: 8,
         batch_timeout_us: 300,
         queue_depth: 2 * BENCH_REQUESTS,
-        work_stealing: stealing,
-        // One shard in BOTH modes: the comparison isolates the routing
-        // discipline (sharding is a separate axis, and the colliding
-        // family set would all land on shard 0 anyway).
+        work_stealing: opts.stealing,
+        // One shard in ALL modes: the comparisons isolate routing /
+        // kernels / ordering (sharding is a separate axis, and the
+        // colliding family set would all land on shard 0 anyway).
         batcher_shards: 1,
         naive_kernels: false,
-        device_latency_us: device_us,
+        device_latency_us: opts.device_us,
+        batched_gemm: opts.batched_gemm,
+        reorder_depth: opts.reorder_depth,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(BENCH_REQUESTS);
     for k in 0..BENCH_REQUESTS {
-        let fam_idx = if skewed { SKEW_PATTERN[k % SKEW_PATTERN.len()] } else { k % families.len() };
+        let fam_idx = if opts.single_family {
+            0
+        } else if opts.skewed {
+            SKEW_PATTERN[k % SKEW_PATTERN.len()]
+        } else {
+            k % families.len()
+        };
         let family = &families[fam_idx];
         // Retry backpressure rejections, but fail fast (instead of
         // hanging CI) if the server has actually died.
@@ -280,34 +377,87 @@ fn run_case(dir: &str, families: &[String], stealing: bool, skewed: bool, device
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics();
-    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO");
+    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
     server.shutdown();
-    BENCH_REQUESTS as f64 / wall
+    RunStats { rps: BENCH_REQUESTS as f64 / wall, mean_batch: snap.mean_batch }
 }
 
-fn bench_serving() -> ServingResult {
+fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
     timer::header("serving_throughput");
-    let families = colliding_families();
-    let dir = write_bench_artifacts(&families);
     println!(
         "synthetic families (all statically pinned to worker 0 of {BENCH_WORKERS}): {families:?}"
     );
+    let defaults = CaseOpts {
+        stealing: true,
+        skewed: true,
+        single_family: false,
+        device_us: 0,
+        batched_gemm: true,
+        reorder_depth: 0,
+    };
     let mut cases = Vec::new();
+
+    // Routing comparisons (PR 2's cases): static vs stealing.
     for (name, skewed, device_us) in [
         ("skewed_device_emulated", true, BENCH_DEVICE_US),
         ("skewed_cpu_bound", true, 0),
         ("uniform_cpu_bound", false, 0),
     ] {
-        let static_rps = run_case(&dir, &families, false, skewed, device_us);
-        let stealing_rps = run_case(&dir, &families, true, skewed, device_us);
-        let case = CaseResult { name, static_rps, stealing_rps };
-        println!(
-            "{name:<24} static {static_rps:>9.0} req/s | stealing {stealing_rps:>9.0} req/s | \
-             speedup {:.2}x",
-            case.speedup()
+        let routed = CaseOpts { skewed, device_us, ..defaults };
+        let base = run_case(dir, families, CaseOpts { stealing: false, ..routed });
+        let treat = run_case(dir, families, routed);
+        push_case(
+            &mut cases,
+            CaseResult {
+                name,
+                labels: ("static_rps", "stealing_rps"),
+                baseline_rps: base.rps,
+                treatment_rps: treat.rps,
+                treatment_mean_batch: treat.mean_batch,
+            },
         );
-        cases.push(case);
     }
+
+    // Kernel comparison (PR 3 tentpole): per-sample vs batched GEMM,
+    // stealing both sides, CPU-bound so kernel time dominates.
+    let base = run_case(dir, families, CaseOpts { batched_gemm: false, ..defaults });
+    let treat = run_case(dir, families, defaults);
+    let gemm_batch = treat.mean_batch;
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "skewed_gemm",
+            labels: ("per_sample_rps", "batched_rps"),
+            baseline_rps: base.rps,
+            treatment_rps: treat.rps,
+            treatment_mean_batch: treat.mean_batch,
+        },
+    );
+
+    // Ordering-discipline comparison (PR 3 tentpole): one hot family,
+    // device emulation — the lease serializes its jobs on one worker
+    // at a time; the reorder buffer fans them across the pool while
+    // run_case asserts fifo_violations == 0.
+    let hot = CaseOpts {
+        skewed: false,
+        single_family: true,
+        device_us: BENCH_DEVICE_US,
+        ..defaults
+    };
+    let base = run_case(dir, families, hot);
+    let treat = run_case(dir, families, CaseOpts { reorder_depth: BENCH_WORKERS, ..hot });
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "hot_family_reorder",
+            labels: ("lease_rps", "reorder_rps"),
+            baseline_rps: base.rps,
+            treatment_rps: treat.rps,
+            treatment_mean_batch: treat.mean_batch,
+        },
+    );
+
+    // Acceptance bars (printed, recorded in BENCH_serving.json).
     let headline = &cases[0];
     if headline.speedup() >= 2.0 {
         println!(
@@ -321,10 +471,49 @@ fn bench_serving() -> ServingResult {
             headline.speedup()
         );
     }
+    let gemm = cases.iter().find(|c| c.name == "skewed_gemm").expect("gemm case");
+    if gemm.speedup() > 1.0 && gemm_batch >= 4.0 {
+        println!(
+            "PASS: batched GEMM {:.2}x over per-sample at mean executed batch {gemm_batch:.1}",
+            gemm.speedup()
+        );
+    } else {
+        println!(
+            "WARN: batched GEMM speedup {:.2}x (mean executed batch {gemm_batch:.1}) — \
+             expected > 1x at batch >= 4",
+            gemm.speedup()
+        );
+    }
+    let reorder = cases.iter().find(|c| c.name == "hot_family_reorder").expect("reorder case");
+    if reorder.speedup() > 1.0 {
+        println!(
+            "PASS: reorder buffer {:.2}x over family lease on the hot family (FIFO held)",
+            reorder.speedup()
+        );
+    } else {
+        println!(
+            "WARN: reorder buffer speedup {:.2}x <= 1x on the hot-family case",
+            reorder.speedup()
+        );
+    }
     ServingResult { cases }
 }
 
-fn write_bench_json(kernel: &KernelResult, serving: &ServingResult) {
+fn push_case(cases: &mut Vec<CaseResult>, case: CaseResult) {
+    println!(
+        "{:<24} {} {:>9.0} req/s | {} {:>9.0} req/s | speedup {:.2}x | mean batch {:.1}",
+        case.name,
+        case.labels.0,
+        case.baseline_rps,
+        case.labels.1,
+        case.treatment_rps,
+        case.speedup(),
+        case.treatment_mean_batch,
+    );
+    cases.push(case);
+}
+
+fn write_bench_json(kernel: &KernelResult, gemm: &GemmResult, serving: &ServingResult) {
     let mut json = String::from("{\n  \"bench\": \"serving_throughput\",\n");
     let _ = write!(
         json,
@@ -334,13 +523,25 @@ fn write_bench_json(kernel: &KernelResult, serving: &ServingResult) {
     for case in &serving.cases {
         let _ = write!(
             json,
-            "  \"{}\": {{\"static_rps\": {:.1}, \"stealing_rps\": {:.1}, \"speedup\": {:.3}}},\n",
+            "  \"{}\": {{\"{}\": {:.1}, \"{}\": {:.1}, \"speedup\": {:.3}, \
+             \"mean_batch\": {:.2}}},\n",
             case.name,
-            case.static_rps,
-            case.stealing_rps,
-            case.speedup()
+            case.labels.0,
+            case.baseline_rps,
+            case.labels.1,
+            case.treatment_rps,
+            case.speedup(),
+            case.treatment_mean_batch,
         );
     }
+    let _ = write!(
+        json,
+        "  \"gemm_dense\": {{\"per_sample_ns_per_sample\": {:.1}, \
+         \"batched_ns_per_sample\": {:.1}, \"speedup\": {:.3}}},\n",
+        gemm.per_sample_ns_per_sample,
+        gemm.batched_ns_per_sample,
+        gemm.per_sample_ns_per_sample / gemm.batched_ns_per_sample.max(1e-9)
+    );
     let _ = write!(
         json,
         "  \"kernel_dense\": {{\"naive_ns_per_sample\": {:.1}, \"blocked_ns_per_sample\": {:.1}, \

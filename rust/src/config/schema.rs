@@ -167,6 +167,19 @@ pub struct ServerConfig {
     /// edge accelerator being busy, so pool-balance effects are
     /// measurable without physical Mensa hardware.
     pub device_latency_us: u64,
+    /// Execute each batch as one blocked GEMM in the reference backend
+    /// (weights streamed once per column block instead of once per
+    /// sample) — the default. `false` keeps the bit-identical
+    /// per-sample path as the measured benchmark baseline.
+    pub batched_gemm: bool,
+    /// Intra-family parallelism (work-stealing mode only): with a
+    /// value >= 2, up to that many workers execute one family's
+    /// backlog concurrently and a per-family sequence-numbered reorder
+    /// buffer restores client-observed FIFO at delivery
+    /// (`fifo_violations` stays 0). Values <= 1 keep the family-lease
+    /// discipline (one worker per family at a time), the measured
+    /// baseline.
+    pub reorder_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -180,6 +193,8 @@ impl Default for ServerConfig {
             batcher_shards: 2,
             naive_kernels: false,
             device_latency_us: 0,
+            batched_gemm: true,
+            reorder_depth: 0,
         }
     }
 }
@@ -214,6 +229,12 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("device_latency_us").and_then(Value::as_int) {
                 cfg.device_latency_us = v.max(0) as u64;
+            }
+            if let Some(v) = t.get("batched_gemm").and_then(Value::as_bool) {
+                cfg.batched_gemm = v;
+            }
+            if let Some(v) = t.get("reorder_depth").and_then(Value::as_int) {
+                cfg.reorder_depth = v.max(0) as usize;
             }
         }
         Ok(cfg)
@@ -304,6 +325,8 @@ memory = "hbm_internal"
         assert_eq!(d.batcher_shards, 2);
         assert!(!d.naive_kernels);
         assert_eq!(d.device_latency_us, 0);
+        assert!(d.batched_gemm, "batched GEMM is the production default");
+        assert_eq!(d.reorder_depth, 0, "family-lease discipline is the default");
         let cfg = ServerConfig::from_toml("[server]\nmax_batch = 16\nworkers = 4\n").unwrap();
         assert_eq!(cfg.max_batch, 16);
         assert_eq!(cfg.workers, 4);
@@ -315,15 +338,20 @@ memory = "hbm_internal"
     fn server_config_pool_keys_parse() {
         let cfg = ServerConfig::from_toml(
             "[server]\nwork_stealing = false\nbatcher_shards = 4\n\
-             naive_kernels = true\ndevice_latency_us = 500\n",
+             naive_kernels = true\ndevice_latency_us = 500\n\
+             batched_gemm = false\nreorder_depth = 4\n",
         )
         .unwrap();
         assert!(!cfg.work_stealing);
         assert_eq!(cfg.batcher_shards, 4);
         assert!(cfg.naive_kernels);
         assert_eq!(cfg.device_latency_us, 500);
+        assert!(!cfg.batched_gemm);
+        assert_eq!(cfg.reorder_depth, 4);
         // Clamping.
-        let cfg = ServerConfig::from_toml("[server]\nbatcher_shards = 0\n").unwrap();
+        let cfg = ServerConfig::from_toml("[server]\nbatcher_shards = 0\nreorder_depth = -3\n")
+            .unwrap();
         assert_eq!(cfg.batcher_shards, 1);
+        assert_eq!(cfg.reorder_depth, 0, "negative reorder depth clamps to lease mode");
     }
 }

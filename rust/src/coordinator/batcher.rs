@@ -9,9 +9,12 @@
 //! Flushed jobs go to the shared [`ExecutorPool`]: per-family FIFO
 //! queues with a family-lease discipline, so different families batch
 //! *and* execute independently while same-family jobs stay ordered.
-//! Each job carries a per-family **sequence number**; the executor
-//! reports it to [`Metrics`](super::Metrics), which turns the FIFO
-//! contract into a checkable invariant (`fifo_violations == 0`).
+//! Each job carries a per-family **sequence number**; it orders
+//! delivery through the server's reorder buffer when several workers
+//! drain one family concurrently (`reorder_depth >= 2`), and the
+//! delivery path reports it to [`Metrics`](super::Metrics), which
+//! turns the client-observed FIFO contract into a checkable invariant
+//! (`fifo_violations == 0`).
 //!
 //! At high request rates one accumulation loop becomes the next
 //! serialization point, so the server runs several batcher **shards**
@@ -89,16 +92,31 @@ impl Batcher {
                 .unwrap_or(Duration::from_millis(50));
             match self.rx.recv_timeout(wait) {
                 Ok(req) => {
-                    // One key clone per request (down from the three
-                    // `family.clone()`s of the old loop); the flush
-                    // path reuses the map's own key allocation.
-                    let p = pending
-                        .entry(req.family.clone())
-                        .or_insert_with(|| Pending { since: Instant::now(), requests: Vec::new() });
-                    p.requests.push(req);
-                    if p.requests.len() >= self.max_batch {
-                        let family = p.requests[0].family.clone();
-                        self.flush(&mut pending, &mut seqs, &family);
+                    // Clone-free steady state: appending to an
+                    // existing entry clones nothing, and a
+                    // flush-on-full takes the map's own key allocation
+                    // back out and moves it into the job. A family
+                    // name is only ever cloned when its entry is first
+                    // created.
+                    let filling =
+                        pending.get(&req.family).map_or(1, |p| p.requests.len() + 1);
+                    if filling >= self.max_batch {
+                        let (key, mut p) = match pending.remove_entry(&req.family) {
+                            Some(entry) => entry,
+                            None => (
+                                req.family.clone(),
+                                Pending { since: Instant::now(), requests: Vec::new() },
+                            ),
+                        };
+                        p.requests.push(req);
+                        self.emit(key, p.requests, &mut seqs);
+                    } else if let Some(p) = pending.get_mut(&req.family) {
+                        p.requests.push(req);
+                    } else {
+                        pending.insert(
+                            req.family.clone(),
+                            Pending { since: Instant::now(), requests: vec![req] },
+                        );
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {}
@@ -131,24 +149,31 @@ impl Batcher {
         family: &str,
     ) {
         if let Some((key, p)) = pending.remove_entry(family) {
-            if p.requests.is_empty() {
-                return;
-            }
-            let seq = match seqs.get_mut(family) {
-                Some(s) => {
-                    let v = *s;
-                    *s += 1;
-                    v
-                }
-                None => {
-                    seqs.insert(key.clone(), 1);
-                    0
-                }
-            };
-            // May block on the family's inflight cap — that is the
-            // backpressure path.
-            self.pool.push(BatchJob { family: key, seq, requests: p.requests });
+            self.emit(key, p.requests, seqs);
         }
+    }
+
+    /// Stamp the next per-family sequence number on `requests` and
+    /// push the job. `family` is moved into the job (the map's own key
+    /// allocation — the flush path never clones it).
+    fn emit(&self, family: String, requests: Vec<Request>, seqs: &mut HashMap<String, u64>) {
+        if requests.is_empty() {
+            return;
+        }
+        let seq = match seqs.get_mut(&family) {
+            Some(s) => {
+                let v = *s;
+                *s += 1;
+                v
+            }
+            None => {
+                seqs.insert(family.clone(), 1);
+                0
+            }
+        };
+        // May block on the family's inflight cap — that is the
+        // backpressure path.
+        self.pool.push(BatchJob { family, seq, requests });
     }
 }
 
@@ -175,7 +200,7 @@ mod tests {
     /// forwards every job to the returned channel.
     fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
         let (req_tx, req_rx) = mpsc::channel();
-        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
         let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg);
         thread::spawn(move || b.run());
         let (job_tx, job_rx) = mpsc::channel();

@@ -11,14 +11,19 @@
 //! Two fields exist specifically to make the work-stealing pool's
 //! contracts testable:
 //!
-//! * `workers_by_family` — which workers executed each family's jobs.
-//!   Under the stealing pool a hot family migrates (set size > 1);
-//!   under static routing it stays pinned (set size == 1).
+//! * `workers_by_family` — which workers executed each family's jobs
+//!   ([`Metrics::record_job`], recorded at *execution*). Under the
+//!   stealing pool a hot family migrates (set size > 1); under static
+//!   routing it stays pinned (set size == 1); with a reorder buffer
+//!   (`reorder_depth >= 2`) several workers appear even for a single
+//!   hot family — the intra-family parallelism witness.
 //! * `fifo_violations` — counts every job whose per-family sequence
-//!   number ran *backwards*. The batcher stamps jobs 0, 1, 2, … per
-//!   family; the family-lease discipline must keep them non-decreasing
-//!   (oversized-job chunks legitimately repeat a seq), so any nonzero
-//!   value is an ordering bug.
+//!   number ran *backwards* ([`Metrics::record_job_order`], recorded
+//!   at *delivery*, where clients observe order). The batcher stamps
+//!   jobs 0, 1, 2, … per family; the family lease (or the reorder
+//!   buffer's sequenced completion slots) must keep deliveries
+//!   non-decreasing (oversized-job chunks legitimately repeat a seq),
+//!   so any nonzero value is an ordering bug.
 
 use crate::util::stats;
 use std::collections::{BTreeMap, BTreeSet};
@@ -104,14 +109,24 @@ impl Metrics {
     }
 
     /// Record one executed batch job (after oversized-job splitting):
-    /// which worker ran it and its per-family flush sequence number.
-    /// Chunks of one oversized job share a `seq`, so the FIFO check is
-    /// non-decreasing, not strictly increasing.
-    pub fn record_job(&self, family: &str, worker: usize, seq: u64) {
-        let mut guard = self.inner.lock().expect("metrics lock");
-        let m = &mut *guard;
+    /// which worker ran it. Called at execution time, so the worker
+    /// attribution is correct even when delivery happens on another
+    /// thread (reorder mode).
+    pub fn record_job(&self, family: &str, worker: usize) {
+        let mut m = self.inner.lock().expect("metrics lock");
         m.jobs += 1;
         m.workers_by_family.entry(family.to_string()).or_default().insert(worker);
+    }
+
+    /// Record the per-family flush sequence number of a job whose
+    /// responses are being delivered. Called at delivery time — the
+    /// point where clients observe order — so it checks exactly the
+    /// FIFO contract both the family lease and the reorder buffer
+    /// promise. Chunks of one oversized job share a `seq`, so the
+    /// check is non-decreasing, not strictly increasing.
+    pub fn record_job_order(&self, family: &str, seq: u64) {
+        let mut guard = self.inner.lock().expect("metrics lock");
+        let m = &mut *guard;
         match m.last_seq_by_family.get_mut(family) {
             Some(last) => {
                 if seq < *last {
@@ -188,7 +203,8 @@ mod tests {
             0.5,
             0.01,
         );
-        m.record_job("edge_cnn", 0, 0);
+        m.record_job("edge_cnn", 0);
+        m.record_job_order("edge_cnn", 0);
         m.record_rejection();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
@@ -208,10 +224,10 @@ mod tests {
     #[test]
     fn worker_sets_accumulate_per_family() {
         let m = Metrics::default();
-        m.record_job("edge_cnn", 0, 0);
-        m.record_job("edge_cnn", 2, 1);
-        m.record_job("edge_cnn", 2, 2);
-        m.record_job("joint", 1, 0);
+        m.record_job("edge_cnn", 0);
+        m.record_job("edge_cnn", 2);
+        m.record_job("edge_cnn", 2);
+        m.record_job("joint", 1);
         let s = m.snapshot();
         assert_eq!(
             s.workers_by_family,
@@ -227,16 +243,16 @@ mod tests {
     #[test]
     fn fifo_violations_detect_reordering() {
         let m = Metrics::default();
-        m.record_job("edge_cnn", 0, 0);
-        m.record_job("edge_cnn", 1, 1);
+        m.record_job_order("edge_cnn", 0);
+        m.record_job_order("edge_cnn", 1);
         // Chunks of one oversized job repeat a seq: not a violation.
-        m.record_job("edge_cnn", 1, 1);
+        m.record_job_order("edge_cnn", 1);
         assert_eq!(m.snapshot().fifo_violations, 0);
         // Going backwards is.
-        m.record_job("edge_cnn", 0, 0);
+        m.record_job_order("edge_cnn", 0);
         assert_eq!(m.snapshot().fifo_violations, 1);
         // Other families are tracked independently.
-        m.record_job("joint", 0, 0);
+        m.record_job_order("joint", 0);
         assert_eq!(m.snapshot().fifo_violations, 1);
     }
 

@@ -32,7 +32,12 @@
 //! idled. Leasing whole queues (never individual jobs) is what lets
 //! cross-family work rebalance *without* giving up per-family FIFO
 //! execution; `ServerConfig::work_stealing = false` restores the
-//! static baseline for benchmarking.
+//! static baseline for benchmarking. With
+//! `ServerConfig::reorder_depth >= 2` the lease widens: several
+//! workers drain one hot family concurrently and a per-family
+//! sequence-numbered reorder buffer ([`pool::ReorderBuffer`]) restores
+//! client-observed FIFO at delivery — intra-family parallelism without
+//! giving up the ordering contract.
 //!
 //! All workers execute against a single shared `Arc<Runtime>` (the
 //! manifest is parsed once per server) and keep per-worker scratch so
@@ -45,7 +50,7 @@ pub mod server;
 
 pub use batcher::{BatchJob, Batcher};
 pub use metrics::Metrics;
-pub use pool::ExecutorPool;
+pub use pool::{ExecutorPool, ReorderBuffer};
 pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
 
 use crate::util::fnv1a_64;

@@ -1,5 +1,6 @@
 //! Work-stealing executor pool: per-family FIFO job queues with a
-//! family-lease discipline.
+//! family-lease discipline, plus the response [`ReorderBuffer`] that
+//! unlocks intra-family parallelism.
 //!
 //! The paper's core serving lesson is that static assignment of
 //! heterogeneous work leaves capacity idle; PR 1's software pool
@@ -7,12 +8,21 @@
 //! `SyncSender` per worker). This pool replaces it:
 //!
 //! * every family gets its own FIFO queue of flushed [`BatchJob`]s;
-//! * a worker takes a **lease** on a whole family — it drains that
-//!   family's queue serially and releases the lease only when the
-//!   queue is empty. Workers steal *family queues*, never individual
-//!   jobs, so same-family jobs still execute strictly in flush order
-//!   (the FIFO contract) while cross-family work rebalances onto
-//!   whichever worker is idle;
+//! * a worker takes a **hold** on a family — it drains that family's
+//!   queue and releases the hold when the queue is empty. In the
+//!   default lease discipline at most one worker holds a family at a
+//!   time, so same-family jobs execute strictly in flush order (the
+//!   FIFO contract) while cross-family work rebalances onto whichever
+//!   worker is idle;
+//! * with `reorder_depth >= 2` (stealing mode only), up to
+//!   `reorder_depth` workers may hold **one** family concurrently:
+//!   jobs are still *popped* in flush order, but they *complete* in
+//!   any order, and the server restores client-observed FIFO through
+//!   the per-family sequence-numbered completion slots of a
+//!   [`ReorderBuffer`]. This is what lets a hot family's backlog use
+//!   the whole pool instead of serializing behind one lease
+//!   (`Snapshot::fifo_violations == 0` remains the invariant — checked
+//!   at delivery, where clients observe order);
 //! * an idle worker waits on a condvar; when a family becomes ready it
 //!   is handed directly to the longest-idle worker (FIFO idle queue),
 //!   which rotates a hot family across the pool instead of re-pinning
@@ -35,11 +45,14 @@
 //! Shutdown: each batcher shard calls [`ExecutorPool::producer_done`]
 //! after flushing its pending batches; when the last producer signs
 //! off the pool closes and workers exit once every queue is drained.
+//! Job execution in the server is wrapped in `catch_unwind`, so a
+//! panicking job surfaces as per-request errors instead of a dead
+//! worker stranding its held family queues.
 
 use super::batcher::BatchJob;
 use super::worker_for_family;
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Flushed-but-unexecuted jobs a single family may accumulate before
 /// `push` blocks (the batcher-side backpressure bound, matching PR 1's
@@ -49,19 +62,21 @@ pub const FAMILY_INFLIGHT_CAP: usize = 2;
 /// One family's pending work.
 struct FamilyQueue {
     jobs: VecDeque<BatchJob>,
-    /// Worker currently holding this family's lease, if any.
-    leased_by: Option<usize>,
-    /// Whether the family is sitting in a ready queue (unleased, has
-    /// jobs, waiting for a worker).
+    /// Workers currently holding this family (popping its jobs). The
+    /// lease discipline caps this at one; reorder mode at
+    /// `family_concurrency`.
+    holders: Vec<usize>,
+    /// Whether the family is sitting in a ready queue (has jobs,
+    /// waiting for an additional worker).
     ready_queued: bool,
 }
 
 struct PoolState {
     queues: HashMap<String, FamilyQueue>,
-    /// Families with jobs and no lease. One shared queue in stealing
-    /// mode; one per worker in static mode.
+    /// Families with jobs awaiting a worker. One shared queue in
+    /// stealing mode; one per worker in static mode.
     ready: Vec<VecDeque<String>>,
-    /// Direct handoff slots: a family leased to an idle worker before
+    /// Direct handoff slots: a family held for an idle worker before
     /// it wakes.
     assigned: Vec<Option<String>>,
     /// Workers waiting for work, longest-idle first.
@@ -81,16 +96,25 @@ pub struct ExecutorPool {
     space: Condvar,
     workers: usize,
     stealing: bool,
+    /// Max workers that may drain one family concurrently: 1 under the
+    /// lease discipline, `reorder_depth` when the server runs a
+    /// reorder buffer.
+    family_concurrency: usize,
 }
 
 impl ExecutorPool {
     /// Create a pool for `workers` executor threads fed by `producers`
     /// batcher shards. `stealing` selects work-stealing (default) vs
-    /// the static family-hash baseline.
-    pub fn new(workers: usize, stealing: bool, producers: usize) -> Self {
+    /// the static family-hash baseline. `reorder_depth >= 2` (stealing
+    /// only) lets that many workers drain one family concurrently —
+    /// callers must then reorder completions before replying (see
+    /// [`ReorderBuffer`]); any smaller value keeps the family-lease
+    /// discipline.
+    pub fn new(workers: usize, stealing: bool, producers: usize, reorder_depth: usize) -> Self {
         assert!(workers > 0, "executor pool needs at least one worker");
         assert!(producers > 0, "executor pool needs at least one producer");
         let ready_queues = if stealing { 1 } else { workers };
+        let family_concurrency = if stealing { reorder_depth.max(1) } else { 1 };
         Self {
             state: Mutex::new(PoolState {
                 queues: HashMap::new(),
@@ -104,12 +128,19 @@ impl ExecutorPool {
             space: Condvar::new(),
             workers,
             stealing,
+            family_concurrency,
         }
     }
 
     /// Whether this pool steals (true) or pins families (false).
     pub fn is_stealing(&self) -> bool {
         self.stealing
+    }
+
+    /// Max workers that may drain one family concurrently (1 = lease
+    /// discipline).
+    pub fn family_concurrency(&self) -> usize {
+        self.family_concurrency
     }
 
     /// Enqueue a flushed job, blocking while the family is at its
@@ -124,20 +155,29 @@ impl ExecutorPool {
             st = self.space.wait(st).expect("pool lock");
         }
         debug_assert!(!st.closed, "push after close");
-        let family = job.family.clone();
-        let needs_dispatch = {
-            let q = st.queues.entry(family.clone()).or_insert_with(|| FamilyQueue {
-                jobs: VecDeque::new(),
-                leased_by: None,
-                ready_queued: false,
-            });
-            q.jobs.push_back(job);
-            q.leased_by.is_none() && !q.ready_queued
+        // Enqueue, cloning the family name only when a dispatch is
+        // actually needed: in the steady state (family at its
+        // concurrency cap or already queued ready) a push is
+        // clone-free — the holders drain the backlog.
+        let family = match st.queues.get_mut(&job.family) {
+            Some(q) => {
+                let dispatch = q.holders.len() < self.family_concurrency && !q.ready_queued;
+                let family = dispatch.then(|| job.family.clone());
+                q.jobs.push_back(job);
+                family
+            }
+            None => {
+                let family = job.family.clone();
+                let mut jobs = VecDeque::new();
+                jobs.push_back(job);
+                st.queues.insert(
+                    family.clone(),
+                    FamilyQueue { jobs, holders: Vec::new(), ready_queued: false },
+                );
+                Some(family)
+            }
         };
-        if !needs_dispatch {
-            // Leased (the holder will drain it) or already ready.
-            return;
-        }
+        let Some(family) = family else { return };
         // Hand the family to an idle worker if one may take it, else
         // queue it ready.
         let target = if self.stealing {
@@ -151,7 +191,7 @@ impl ExecutorPool {
         };
         match target {
             Some(w) => {
-                st.queues.get_mut(&family).expect("just inserted").leased_by = Some(w);
+                st.queues.get_mut(&family).expect("just inserted").holders.push(w);
                 st.assigned[w] = Some(family);
             }
             None => {
@@ -163,9 +203,9 @@ impl ExecutorPool {
         self.work.notify_all();
     }
 
-    /// Block until a family lease is available for worker `w` (or the
+    /// Block until a family hold is available for worker `w` (or the
     /// pool is closed and drained — then `None`, and the worker should
-    /// exit). The returned family is leased to `w`; drain it with
+    /// exit). The returned family is held by `w`; drain it with
     /// [`ExecutorPool::next_job`] until that returns `None`.
     pub fn take_family(&self, w: usize) -> Option<String> {
         debug_assert!(w < self.workers);
@@ -176,10 +216,19 @@ impl ExecutorPool {
                 return Some(family);
             }
             let rq = if self.stealing { 0 } else { w };
-            if let Some(family) = st.ready[rq].pop_front() {
-                let q = st.queues.get_mut(&family).expect("ready family has a queue");
+            while let Some(family) = st.ready[rq].pop_front() {
+                // In reorder mode another holder may have drained (or
+                // be over-holding) the family since it was queued
+                // ready; skip such entries instead of double-holding.
+                let Some(q) = st.queues.get_mut(&family) else { continue };
                 q.ready_queued = false;
-                q.leased_by = Some(w);
+                if q.jobs.is_empty() || q.holders.len() >= self.family_concurrency {
+                    if q.jobs.is_empty() && q.holders.is_empty() {
+                        st.queues.remove(&family);
+                    }
+                    continue;
+                }
+                q.holders.push(w);
                 st.idle.retain(|&x| x != w);
                 return Some(family);
             }
@@ -193,22 +242,40 @@ impl ExecutorPool {
         }
     }
 
-    /// Pop the next job of a family leased to worker `w`, or release
-    /// the lease and return `None` when the queue is empty. The
-    /// release and any concurrent `push` serialize on the pool lock,
-    /// so a job can never be executed by two workers and same-family
-    /// jobs always run in push order.
+    /// Pop the next job of a family held by worker `w`, or release the
+    /// hold and return `None` when the queue is empty. Pops and
+    /// releases serialize on the pool lock, so a job can never be
+    /// popped by two workers and same-family jobs always *start* in
+    /// push order; completion order is the caller's business (lease
+    /// mode: completion == start order; reorder mode: restored by the
+    /// [`ReorderBuffer`]).
     pub fn next_job(&self, family: &str, w: usize) -> Option<BatchJob> {
         let mut st = self.state.lock().expect("pool lock");
-        let q = st.queues.get_mut(family).expect("leased family has a queue");
-        debug_assert_eq!(q.leased_by, Some(w), "worker drains only its own lease");
+        let q = st.queues.get_mut(family).expect("held family has a queue");
+        debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
         match q.jobs.pop_front() {
             Some(job) => {
+                // Backlog remains and concurrency headroom exists:
+                // offer the family to another worker (reorder mode's
+                // fan-out; a no-op under the lease discipline where
+                // holders.len() == family_concurrency == 1).
+                if !q.jobs.is_empty()
+                    && q.holders.len() < self.family_concurrency
+                    && !q.ready_queued
+                {
+                    q.ready_queued = true;
+                    let rq = if self.stealing { 0 } else { worker_for_family(family, self.workers) };
+                    st.ready[rq].push_back(family.to_string());
+                    self.work.notify_all();
+                }
                 self.space.notify_all();
                 Some(job)
             }
             None => {
-                st.queues.remove(family);
+                q.holders.retain(|&x| x != w);
+                if q.holders.is_empty() && !q.ready_queued {
+                    st.queues.remove(family);
+                }
                 None
             }
         }
@@ -232,6 +299,88 @@ impl ExecutorPool {
     pub fn queued_jobs(&self) -> usize {
         let st = self.state.lock().expect("pool lock");
         st.queues.values().map(|q| q.jobs.len()).sum()
+    }
+}
+
+/// Per-family sequence-numbered completion slots: restores
+/// client-observed FIFO when multiple workers drain one family
+/// concurrently (`reorder_depth >= 2`).
+///
+/// Jobs are *popped* from the pool in flush order but *complete* in
+/// any order; each completed job is submitted here under its
+/// per-family sequence number, and the buffer invokes the delivery
+/// callback for every job that is now contiguous with the last
+/// delivered one — in sequence order, **under that family's slot
+/// lock**, so two workers finishing one family out of order can never
+/// interleave its deliveries, while deliveries for *different*
+/// families proceed concurrently (the outer map lock is held only for
+/// the slot lookup, never across a delivery). In the steady state
+/// about `family_concurrency` jobs of a family sit
+/// popped-but-undelivered; while the oldest sequence is still
+/// *executing*, later holders can park more completions than that, but
+/// the window is self-limiting — execution always terminates (panics
+/// are caught and still fill their slot), so the buffer drains within
+/// one job's execution time and never stalls indefinitely.
+///
+/// Items are moved in and moved out — the buffer never clones a
+/// response.
+pub struct ReorderBuffer<T> {
+    families: Mutex<HashMap<String, Arc<Mutex<FamilySlots<T>>>>>,
+}
+
+struct FamilySlots<T> {
+    /// Next sequence number owed to clients.
+    next: u64,
+    /// Completed-but-undeliverable jobs, keyed by sequence number.
+    done: BTreeMap<u64, T>,
+}
+
+impl<T> Default for ReorderBuffer<T> {
+    fn default() -> Self {
+        Self { families: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl<T> ReorderBuffer<T> {
+    /// Create an empty buffer (all families start at sequence 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit the completed `item` for `(family, seq)` and deliver, in
+    /// sequence order, every item that is now contiguous with the
+    /// delivery cursor. The callback runs under the family's slot lock
+    /// — keep it to channel sends and metrics.
+    pub fn submit(&self, family: &str, seq: u64, item: T, mut deliver: impl FnMut(T)) {
+        let slot = {
+            let mut fams = self.families.lock().expect("reorder lock");
+            // The steady state (family already tracked) is clone-free;
+            // the key is cloned once per family lifetime.
+            match fams.get(family) {
+                Some(slot) => Arc::clone(slot),
+                None => {
+                    let slot =
+                        Arc::new(Mutex::new(FamilySlots { next: 0, done: BTreeMap::new() }));
+                    fams.insert(family.to_string(), Arc::clone(&slot));
+                    slot
+                }
+            }
+        };
+        let mut slots = slot.lock().expect("reorder slot lock");
+        debug_assert!(seq >= slots.next, "sequence {seq} already delivered");
+        let prev = slots.done.insert(seq, item);
+        debug_assert!(prev.is_none(), "sequence {seq} submitted twice");
+        while let Some(ready) = slots.done.remove(&slots.next) {
+            slots.next += 1;
+            deliver(ready);
+        }
+    }
+
+    /// Completed jobs waiting on an earlier sequence number, across
+    /// all families. Diagnostics/tests only.
+    pub fn pending(&self) -> usize {
+        let fams = self.families.lock().expect("reorder lock");
+        fams.values().map(|s| s.lock().expect("reorder slot lock").done.len()).sum()
     }
 }
 
@@ -271,7 +420,7 @@ mod tests {
 
     #[test]
     fn same_family_jobs_arrive_in_push_order() {
-        let pool = Arc::new(ExecutorPool::new(3, true, 1));
+        let pool = Arc::new(ExecutorPool::new(3, true, 1, 1));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..3).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -292,7 +441,7 @@ mod tests {
 
     #[test]
     fn spaced_jobs_rotate_across_idle_workers() {
-        let pool = Arc::new(ExecutorPool::new(4, true, 1));
+        let pool = Arc::new(ExecutorPool::new(4, true, 1, 1));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..4).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -301,7 +450,7 @@ mod tests {
             pool.push(job("hot", seq));
             let (w, _) = rx.recv_timeout(RECV).expect("job");
             seen.insert(w);
-            // Let the worker release the lease and re-idle before the
+            // Let the worker release the hold and re-idle before the
             // next push, so the rotation (idle queue FIFO) is visible.
             thread::sleep(Duration::from_millis(30));
         }
@@ -317,7 +466,7 @@ mod tests {
 
     #[test]
     fn static_mode_pins_families_to_their_hash_worker() {
-        let pool = Arc::new(ExecutorPool::new(2, false, 1));
+        let pool = Arc::new(ExecutorPool::new(2, false, 1, 1));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -342,7 +491,7 @@ mod tests {
 
     #[test]
     fn close_drains_pending_queues() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
         pool.push(job("a", 0));
         pool.push(job("b", 0));
         assert_eq!(pool.queued_jobs(), 2);
@@ -360,7 +509,7 @@ mod tests {
 
     #[test]
     fn push_blocks_at_family_cap_until_a_worker_drains() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1));
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
         for seq in 0..FAMILY_INFLIGHT_CAP as u64 {
             pool.push(job("fam", seq));
         }
@@ -385,6 +534,117 @@ mod tests {
         pusher.join().unwrap();
         pool.producer_done();
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn lease_discipline_blocks_second_worker_on_same_family() {
+        // reorder_depth <= 1: while worker 0 holds the family, worker 1
+        // must not receive its queued backlog.
+        let pool = Arc::new(ExecutorPool::new(2, true, 1, 1));
+        pool.push(job("hot", 0));
+        pool.push(job("hot", 1));
+        let p0 = Arc::clone(&pool);
+        let (got0_tx, got0_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let w0 = thread::spawn(move || {
+            let fam = p0.take_family(0).expect("family");
+            let j = p0.next_job(&fam, 0).expect("job");
+            got0_tx.send(j.seq).unwrap();
+            release_rx.recv().ok(); // hold the job "executing"
+            while p0.next_job(&fam, 0).is_some() {}
+            while let Some(f) = p0.take_family(0) {
+                while p0.next_job(&f, 0).is_some() {}
+            }
+        });
+        assert_eq!(got0_rx.recv_timeout(RECV).unwrap(), 0);
+        let p1 = Arc::clone(&pool);
+        let (got1_tx, got1_rx) = mpsc::channel();
+        let w1 = thread::spawn(move || {
+            while let Some(f) = p1.take_family(1) {
+                while let Some(j) = p1.next_job(&f, 1) {
+                    let _ = got1_tx.send(j.seq);
+                }
+            }
+        });
+        assert!(
+            got1_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "lease discipline must serialize one family on one worker"
+        );
+        release_tx.send(()).unwrap();
+        pool.producer_done();
+        w0.join().unwrap();
+        w1.join().unwrap();
+    }
+
+    #[test]
+    fn reorder_mode_lets_two_workers_drain_one_family() {
+        let pool = Arc::new(ExecutorPool::new(2, true, 1, 2));
+        assert_eq!(pool.family_concurrency(), 2);
+        pool.push(job("hot", 0));
+        pool.push(job("hot", 1));
+        // Worker 0 takes the family and pops job 0, then stalls
+        // mid-execution.
+        let p0 = Arc::clone(&pool);
+        let (got0_tx, got0_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let w0 = thread::spawn(move || {
+            let fam = p0.take_family(0).expect("family");
+            let j = p0.next_job(&fam, 0).expect("job");
+            got0_tx.send(j.seq).unwrap();
+            release_rx.recv().ok();
+            while p0.next_job(&fam, 0).is_some() {}
+            while let Some(f) = p0.take_family(0) {
+                while p0.next_job(&f, 0).is_some() {}
+            }
+        });
+        assert_eq!(got0_rx.recv_timeout(RECV).unwrap(), 0, "first job pops in order");
+        // Worker 1 must join the same family concurrently and drain
+        // the backlog while worker 0 is still "executing".
+        let p1 = Arc::clone(&pool);
+        let (got1_tx, got1_rx) = mpsc::channel();
+        let w1 = thread::spawn(move || {
+            while let Some(f) = p1.take_family(1) {
+                while let Some(j) = p1.next_job(&f, 1) {
+                    let _ = got1_tx.send(j.seq);
+                }
+            }
+        });
+        assert_eq!(
+            got1_rx.recv_timeout(RECV).unwrap(),
+            1,
+            "second worker drains the hot family's backlog concurrently"
+        );
+        release_tx.send(()).unwrap();
+        pool.producer_done();
+        w0.join().unwrap();
+        w1.join().unwrap();
+    }
+
+    #[test]
+    fn reorder_buffer_restores_sequence_order() {
+        let buf = ReorderBuffer::new();
+        let mut delivered: Vec<u64> = Vec::new();
+        buf.submit("fam", 2, 2u64, |v| delivered.push(v));
+        assert!(delivered.is_empty(), "seq 2 must wait for 0 and 1");
+        assert_eq!(buf.pending(), 1);
+        buf.submit("fam", 0, 0u64, |v| delivered.push(v));
+        assert_eq!(delivered, vec![0], "seq 0 delivers immediately; 2 still waits");
+        buf.submit("fam", 1, 1u64, |v| delivered.push(v));
+        assert_eq!(delivered, vec![0, 1, 2], "seq 1 releases the buffered 2");
+        assert_eq!(buf.pending(), 0);
+    }
+
+    #[test]
+    fn reorder_buffer_families_are_independent() {
+        let buf = ReorderBuffer::new();
+        let mut a: Vec<&str> = Vec::new();
+        buf.submit("a", 0, "a0", |v| a.push(v));
+        assert_eq!(a, vec!["a0"]);
+        let mut b: Vec<&str> = Vec::new();
+        buf.submit("b", 1, "b1", |v| b.push(v));
+        assert!(b.is_empty(), "family b's seq 0 is still outstanding");
+        buf.submit("b", 0, "b0", |v| b.push(v));
+        assert_eq!(b, vec!["b0", "b1"]);
     }
 
     #[test]

@@ -30,13 +30,31 @@
 //!
 //! Per family, responses preserve request submission order: one shard
 //! accumulates a family's requests in arrival order, the pool's
-//! per-family queue is FIFO, the family lease serializes execution (at
-//! most one worker runs a given family at any instant), and oversized
-//! jobs split into chunks executed front to back. Every job carries a
-//! per-family sequence number and [`Metrics`] counts regressions, so
-//! the invariant is observable (`Snapshot::fifo_violations == 0`).
+//! per-family queue is FIFO, and oversized jobs split into chunks
+//! executed front to back. Execution-to-delivery ordering then comes
+//! from one of two interchangeable mechanisms:
+//!
+//! * **family lease** (`reorder_depth <= 1`, the default): at most one
+//!   worker runs a given family at any instant, so completion order
+//!   *is* flush order;
+//! * **reorder buffer** (`reorder_depth >= 2`, stealing mode): up to
+//!   `reorder_depth` workers execute one family's backlog
+//!   concurrently — the intra-family parallelism a hot family needs —
+//!   and completed jobs park in per-family sequence-numbered slots
+//!   ([`ReorderBuffer`](super::pool::ReorderBuffer)) until every
+//!   earlier flush has been delivered, so clients still observe strict
+//!   FIFO.
+//!
+//! Every job carries a per-family sequence number and [`Metrics`]
+//! counts regressions at the delivery point, so the invariant is
+//! observable (`Snapshot::fifo_violations == 0`) in both modes.
 //! *Across* families there is no ordering — that concurrency is the
 //! point of the pool.
+//!
+//! Job execution is wrapped in `catch_unwind`: a panicking kernel
+//! surfaces as per-request errors (and, in reorder mode, still fills
+//! its completion slot) instead of killing the worker and stranding
+//! its held family queues — the shutdown-hang ROADMAP item.
 //!
 //! Every response carries both the *measured* CPU numerics and the
 //! *modeled* Mensa-G edge cost (latency/energy/accelerator mix) from
@@ -49,7 +67,7 @@
 
 use super::batcher::{BatchJob, Batcher};
 use super::metrics::{Metrics, Snapshot};
-use super::pool::ExecutorPool;
+use super::pool::{ExecutorPool, ReorderBuffer};
 use super::{worker_for_family, Request};
 use crate::accel::configs;
 use crate::config::ServerConfig;
@@ -59,6 +77,7 @@ use crate::scheduler::ScheduleCache;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -115,6 +134,12 @@ pub struct Server;
 pub struct ServerHandle {
     /// One router queue per batcher shard, indexed by family hash.
     req_txs: Vec<SyncSender<Request>>,
+    /// Families the loaded runtime can serve. Unknown names are
+    /// rejected at `infer()` so they can never occupy per-family
+    /// serving state (batcher pending/seq entries, pool queues,
+    /// reorder slots) — that state is only ever created for this
+    /// fixed, manifest-bounded set.
+    families: std::collections::HashSet<String>,
     metrics: Arc<Metrics>,
     threads: Vec<JoinHandle<()>>,
 }
@@ -147,10 +172,22 @@ impl Server {
         // weights materialized once, shared immutably.
         let runtime = Arc::new(Runtime::load_with(
             artifacts_dir,
-            RuntimeOptions { naive_kernels: cfg.naive_kernels },
+            RuntimeOptions {
+                naive_kernels: cfg.naive_kernels,
+                batched_gemm: cfg.batched_gemm,
+            },
         )?);
 
-        let pool = Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards));
+        let families: std::collections::HashSet<String> =
+            runtime.families().into_iter().collect();
+
+        let pool =
+            Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, cfg.reorder_depth));
+        // Intra-family parallelism: when the pool lets several workers
+        // drain one family, a shared reorder buffer restores
+        // client-observed FIFO at delivery.
+        let reorder = (pool.family_concurrency() > 1)
+            .then(|| Arc::new(ReorderBuffer::<JobDone>::new()));
         let device_latency = Duration::from_micros(cfg.device_latency_us);
         let mut threads = Vec::with_capacity(workers + shards);
         for w in 0..workers {
@@ -158,6 +195,7 @@ impl Server {
             let worker_pool = Arc::clone(&pool);
             let worker_metrics = Arc::clone(&metrics);
             let worker_costs = Arc::clone(&sim_costs);
+            let worker_reorder = reorder.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mensa-executor-{w}"))
@@ -169,6 +207,7 @@ impl Server {
                             worker_metrics,
                             worker_costs,
                             device_latency,
+                            worker_reorder,
                         )
                     })
                     .expect("spawn executor"),
@@ -190,7 +229,7 @@ impl Server {
             );
         }
 
-        Ok(ServerHandle { req_txs, metrics, threads })
+        Ok(ServerHandle { req_txs, families, metrics, threads })
     }
 }
 
@@ -202,6 +241,13 @@ impl ServerHandle {
         family: &str,
         inputs: Vec<Vec<f32>>,
     ) -> Result<Receiver<Result<InferenceResponse>>> {
+        // Reject unknown families before they enter the pipeline: a
+        // request that can never execute must not create per-family
+        // serving state keyed by an attacker-chosen name.
+        if !self.families.contains(family) {
+            self.metrics.record_failure();
+            bail!("no variant of `{family}` is loaded");
+        }
         let (reply, rx) = mpsc::channel();
         let shard = worker_for_family(family, self.req_txs.len());
         let req =
@@ -319,10 +365,47 @@ pub fn unpack_batch(
         .collect()
 }
 
-/// One worker's executor loop: lease a family from the pool, drain its
-/// job queue (splitting any job larger than the family's biggest
+/// One executed chunk of a job, awaiting delivery (replies not yet
+/// sent). Responses *move* through here — built at execution, moved
+/// into the reorder buffer, moved out to the clients; nothing is
+/// copied.
+struct ChunkDone {
+    /// When execution started (queue-delay accounting anchor).
+    exec_start: Instant,
+    /// Execution result: the per-request outputs with the executed
+    /// variant's capacity and the amortized per-request cost share, or
+    /// the error every member request receives.
+    outcome: Result<ChunkOk, ChunkErr>,
+}
+
+struct ChunkOk {
+    /// Capacity of the executed variant (metrics batch column).
+    batch: usize,
+    /// Modeled full-model cost amortized over this chunk.
+    sim: SimCost,
+    /// Each request paired with its own output row.
+    pairs: Vec<(Request, Vec<f32>)>,
+}
+
+struct ChunkErr {
+    requests: Vec<Request>,
+    error: String,
+}
+
+/// One popped job, fully executed (all oversized-job chunks, front to
+/// back), tagged with its per-family flush sequence number for ordered
+/// delivery.
+struct JobDone {
+    seq: u64,
+    chunks: Vec<ChunkDone>,
+}
+
+/// One worker's executor loop: take a family hold from the pool, drain
+/// its job queue (splitting any job larger than the family's biggest
 /// compiled variant into front-to-back chunks), execute with this
-/// worker's reusable scratch, reply, release, repeat.
+/// worker's reusable scratch, deliver (directly under the family
+/// lease; through the reorder buffer's sequenced slots otherwise),
+/// release, repeat.
 fn executor_loop(
     worker: usize,
     runtime: Arc<Runtime>,
@@ -330,24 +413,198 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     sim_costs: Arc<HashMap<String, SimCost>>,
     device_latency: Duration,
+    reorder: Option<Arc<ReorderBuffer<JobDone>>>,
 ) {
     let mut scratch = WorkerScratch::default();
     while let Some(family) = pool.take_family(worker) {
-        while let Some(mut job) = pool.next_job(&family, worker) {
-            let cap = runtime.max_batch(&job.family).unwrap_or(usize::MAX).max(1);
-            while job.requests.len() > cap {
-                let rest = job.requests.split_off(cap);
-                let chunk = BatchJob {
-                    family: job.family.clone(),
-                    seq: job.seq,
-                    requests: std::mem::replace(&mut job.requests, rest),
-                };
-                run_one_job(&runtime, chunk, worker, &metrics, &sim_costs, &mut scratch);
-                emulate_device(device_latency);
+        while let Some(job) = pool.next_job(&family, worker) {
+            let seq = job.seq;
+            match &reorder {
+                // Reorder mode: the whole job (all chunks) fills one
+                // sequence slot. The buffer invokes the callback
+                // (under the family's slot lock) for every job now
+                // contiguous with the delivery cursor — possibly zero
+                // (an earlier flush is still running on another
+                // worker), possibly several (this job unblocked
+                // buffered successors).
+                Some(buf) => {
+                    let mut chunks = Vec::new();
+                    exec_job(
+                        &runtime,
+                        job,
+                        worker,
+                        &metrics,
+                        &sim_costs,
+                        &mut scratch,
+                        device_latency,
+                        |chunk| chunks.push(chunk),
+                    );
+                    let done = JobDone { seq, chunks };
+                    buf.submit(&family, seq, done, |d| deliver(&metrics, &family, d));
+                }
+                // Lease mode: the hold already serializes this family,
+                // so each chunk's responses stream out the moment the
+                // chunk finishes (before its emulated device window),
+                // exactly as before the reorder buffer existed.
+                None => exec_job(
+                    &runtime,
+                    job,
+                    worker,
+                    &metrics,
+                    &sim_costs,
+                    &mut scratch,
+                    device_latency,
+                    |chunk| deliver_chunk(&metrics, &family, seq, chunk),
+                ),
             }
-            run_one_job(&runtime, job, worker, &metrics, &sim_costs, &mut scratch);
-            emulate_device(device_latency);
         }
+    }
+}
+
+/// Execute every chunk of one job, front to back, handing each
+/// completed chunk to `sink` *before* the chunk's emulated device
+/// window. Never panics: the kernel call is wrapped in [`guard_panic`],
+/// so a poisoned job produces per-request errors (and still fills its
+/// reorder slot) instead of unwinding the worker and stranding its
+/// held family queues.
+#[allow(clippy::too_many_arguments)]
+fn exec_job(
+    runtime: &Runtime,
+    mut job: BatchJob,
+    worker: usize,
+    metrics: &Metrics,
+    sim_costs: &HashMap<String, SimCost>,
+    scratch: &mut WorkerScratch,
+    device_latency: Duration,
+    mut sink: impl FnMut(ChunkDone),
+) {
+    let cap = runtime.max_batch(&job.family).unwrap_or(usize::MAX).max(1);
+    loop {
+        let rest = if job.requests.len() > cap {
+            Some(job.requests.split_off(cap))
+        } else {
+            None
+        };
+        let requests = std::mem::take(&mut job.requests);
+        sink(exec_chunk(runtime, &job.family, requests, worker, metrics, sim_costs, scratch));
+        emulate_device(device_latency);
+        match rest {
+            Some(r) => job.requests = r,
+            None => break,
+        }
+    }
+}
+
+/// Execute one capacity-fitting chunk.
+fn exec_chunk(
+    runtime: &Runtime,
+    family: &str,
+    requests: Vec<Request>,
+    worker: usize,
+    metrics: &Metrics,
+    sim_costs: &HashMap<String, SimCost>,
+    scratch: &mut WorkerScratch,
+) -> ChunkDone {
+    let n = requests.len();
+    let exec_start = Instant::now();
+    let result = guard_panic(|| execute_batch(runtime, family, &requests, scratch));
+    match result {
+        Ok((outputs, batch)) => {
+            // Jobs are counted on success only (failed batches land in
+            // `failed`, per request), at execution time so the worker
+            // attribution is right even when another thread delivers.
+            metrics.record_job(family, worker);
+            // One modeled full-model cost, amortized across the batch
+            // (built once, moved into the last response at delivery).
+            let sim = sim_costs.get(family).map(|c| c.amortized(n)).unwrap_or_default();
+            ChunkDone {
+                exec_start,
+                outcome: Ok(ChunkOk {
+                    batch,
+                    sim,
+                    pairs: requests.into_iter().zip(outputs).collect(),
+                }),
+            }
+        }
+        Err(e) => ChunkDone {
+            exec_start,
+            outcome: Err(ChunkErr { requests, error: format!("{e:#}") }),
+        },
+    }
+}
+
+/// Send one executed job's responses to its clients, chunk by chunk in
+/// request order (reorder-mode delivery path).
+fn deliver(metrics: &Metrics, family: &str, done: JobDone) {
+    let JobDone { seq, chunks } = done;
+    for chunk in chunks {
+        deliver_chunk(metrics, family, seq, chunk);
+    }
+}
+
+/// Send one executed chunk's responses and record the delivery-point
+/// metrics (the FIFO check lives here — where clients observe order).
+fn deliver_chunk(metrics: &Metrics, family: &str, seq: u64, chunk: ChunkDone) {
+    let ChunkDone { exec_start, outcome } = chunk;
+    match outcome {
+        Ok(ok) => {
+            metrics.record_job_order(family, seq);
+            let n = ok.pairs.len();
+            let mut sim = ok.sim;
+            let mut remaining = n;
+            for (req, output) in ok.pairs {
+                remaining -= 1;
+                // The last response takes the cost share by move.
+                let share = if remaining == 0 {
+                    std::mem::take(&mut sim)
+                } else {
+                    sim.clone()
+                };
+                let latency = req.enqueued.elapsed();
+                let queue = exec_start.duration_since(req.enqueued);
+                metrics.record_completion(
+                    family,
+                    latency,
+                    queue,
+                    ok.batch,
+                    share.energy_j,
+                    share.latency_s,
+                );
+                let _ = req.reply.send(Ok(InferenceResponse {
+                    output,
+                    latency,
+                    queue,
+                    batch_size: n,
+                    sim: share,
+                }));
+            }
+        }
+        Err(err) => {
+            for req in err.requests {
+                metrics.record_failure();
+                let _ = req.reply.send(Err(anyhow!("{}", err.error)));
+            }
+        }
+    }
+}
+
+/// Run `f`, converting a panic into an `Err`. This is the executor
+/// pool's panic isolation (ROADMAP item): before it, a panicking job
+/// unwound the worker thread while it held a family queue, stranding
+/// that family's backlog and hanging shutdown on the join.
+fn guard_panic<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    catch_unwind(AssertUnwindSafe(f))
+        .unwrap_or_else(|payload| Err(anyhow!("executor panicked: {}", panic_message(&*payload))))
+}
+
+/// Best-effort text from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -364,78 +621,28 @@ fn emulate_device(latency: Duration) {
     }
 }
 
-/// Execute one (capacity-fitting) job and deliver its responses.
-fn run_one_job(
-    runtime: &Runtime,
-    job: BatchJob,
-    worker: usize,
-    metrics: &Arc<Metrics>,
-    sim_costs: &HashMap<String, SimCost>,
-    scratch: &mut WorkerScratch,
-) {
-    let n = job.requests.len();
-    let exec_start = Instant::now();
-    let result = execute_batch(runtime, &job, scratch);
-    let BatchJob { family, requests, seq } = job;
-    match result {
-        Ok((outputs, batch)) => {
-            // Jobs are counted on success only (failed batches land in
-            // `failed`, per request); the lease serializes same-family
-            // execution, so recording here still observes flush order.
-            metrics.record_job(&family, worker, seq);
-            // One modeled full-model cost, amortized across the batch
-            // (built once, not cloned-then-rebuilt).
-            let sim = sim_costs.get(&family).map(|c| c.amortized(n)).unwrap_or_default();
-            for (req, output) in requests.into_iter().zip(outputs) {
-                let latency = req.enqueued.elapsed();
-                let queue = exec_start.duration_since(req.enqueued);
-                metrics.record_completion(
-                    &family,
-                    latency,
-                    queue,
-                    batch,
-                    sim.energy_j,
-                    sim.latency_s,
-                );
-                let _ = req.reply.send(Ok(InferenceResponse {
-                    output,
-                    latency,
-                    queue,
-                    batch_size: n,
-                    sim: sim.clone(),
-                }));
-            }
-        }
-        Err(e) => {
-            for req in requests {
-                metrics.record_failure();
-                let _ = req.reply.send(Err(anyhow!("{e:#}")));
-            }
-        }
-    }
-}
-
-/// Execute one batch job: select the variant from the sorted family
+/// Execute one batch chunk: select the variant from the sorted family
 /// index, pack along each input's batch axis into the worker's
-/// reusable buffers, run with only the live rows active, unpack along
+/// reusable buffers, run with only the live rows active (the reference
+/// backend computes the whole block as one batched GEMM), unpack along
 /// the output's batch axis.
 fn execute_batch(
     runtime: &Runtime,
-    job: &BatchJob,
+    family: &str,
+    requests: &[Request],
     scratch: &mut WorkerScratch,
 ) -> Result<(Vec<Vec<f32>>, usize)> {
-    let n = job.requests.len();
+    let n = requests.len();
     let (variant, batch) = runtime
-        .variant_for_batch(&job.family, n)
-        .ok_or_else(|| anyhow!("no variant of `{}` fits batch {n}", job.family))?;
+        .variant_for_batch(family, n)
+        .ok_or_else(|| anyhow!("no variant of `{family}` fits batch {n}"))?;
     let model = runtime.model(variant)?;
     let n_inputs = model.spec.input_shapes.len();
     scratch.packed.resize_with(n_inputs, Vec::new);
     for idx in 0..n_inputs {
         let shape = &model.spec.input_shapes[idx];
         let axis = model.spec.input_batch_axes[idx];
-        let per_req: Vec<&[f32]> = job
-            .requests
+        let per_req: Vec<&[f32]> = requests
             .iter()
             .map(|r| {
                 r.inputs
@@ -543,6 +750,18 @@ mod tests {
         // split of the same buffer does NOT reproduce request 0.
         let old_style_row0 = packed[..t * d].to_vec();
         assert_ne!(old_style_row0, reqs[0], "batch-major split interleaves timesteps");
+    }
+
+    #[test]
+    fn guard_panic_converts_panics_to_errors() {
+        // The pool's panic isolation: a panicking kernel must become a
+        // per-request error, not unwind the worker (which would strand
+        // its held family queues and hang shutdown on the join).
+        let err = guard_panic(|| -> Result<()> { panic!("boom at layer 3") }).unwrap_err();
+        assert!(format!("{err:#}").contains("boom at layer 3"), "{err:#}");
+        let err = guard_panic(|| -> Result<()> { std::panic::panic_any(42usize) }).unwrap_err();
+        assert!(format!("{err:#}").contains("non-string"), "{err:#}");
+        assert_eq!(guard_panic(|| Ok(7)).unwrap(), 7, "non-panicking path untouched");
     }
 
     #[test]

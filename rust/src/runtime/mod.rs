@@ -7,8 +7,10 @@
 //! executes each variant through one of two backends:
 //!
 //! * **reference** (default): the pure-Rust deterministic interpreter
-//!   in [`reference`] — no native dependencies, per-sample execution
-//!   along the manifest's batch axes, used by the offline build and CI;
+//!   in [`reference`] — no native dependencies, batched-GEMM execution
+//!   along the manifest's batch axes (per-sample execution kept as the
+//!   bench baseline via [`RuntimeOptions::batched_gemm`]), used by the
+//!   offline build and CI;
 //! * **pjrt** (`--features pjrt`): the original XLA path — each
 //!   `artifacts/*.hlo.txt` goes through the `xla` crate
 //!   (`HloModuleProto::from_text_file` → `XlaComputation` →
@@ -59,13 +61,26 @@ enum Backend {
 }
 
 /// Load-time options (kernel selection for benchmarking).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct RuntimeOptions {
     /// Use the pre-rewrite reference kernels (untransposed scan layout
     /// with per-call allocations). This exists solely so
     /// `benches/hotpath_micro.rs` can measure the serving path against
-    /// its PR-1 baseline; production loads leave it `false`.
+    /// its PR-1 baseline; production loads leave it `false`. Naive
+    /// kernels are per-sample only (`batched_gemm` is ignored).
     pub naive_kernels: bool,
+    /// Execute each batch as one blocked GEMM (`X · Wᵀ`), streaming
+    /// every weight tile once per column block instead of once per
+    /// sample (the default). `false` keeps the per-sample blocked
+    /// matvec — bit-identical numerics, kept as the measured benchmark
+    /// baseline for `benches/hotpath_micro.rs`.
+    pub batched_gemm: bool,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        Self { naive_kernels: false, batched_gemm: true }
+    }
 }
 
 /// A compiled model variant ready to execute.
@@ -183,7 +198,7 @@ impl Runtime {
         let mut cache = reference::WeightCache::default();
         let mut models = HashMap::new();
         for spec in manifest.artifacts {
-            let model = reference::RefModel::build_with(&spec, opts.naive_kernels, &mut cache)
+            let model = reference::RefModel::build_with(&spec, opts, &mut cache)
                 .with_context(|| format!("building reference model `{}`", spec.name))?;
             models.insert(
                 spec.name.clone(),
@@ -228,10 +243,39 @@ impl Runtime {
         self.model(name)?.execute(inputs)
     }
 
+    /// Batch-shaped execution entry point: run a variant over its
+    /// packed batch buffers (`[B, D]` / time-major `[T, B, D]`) with
+    /// only the first `active` rows live and caller-owned scratch.
+    /// Name-keyed convenience over [`LoadedModel::execute_with`] — the
+    /// executor-pool workers call that method directly (they already
+    /// hold the `LoadedModel` for packing against its spec). With the
+    /// reference backend the whole block is computed as one batched
+    /// GEMM, so each weight tile streams once per batch instead of
+    /// once per sample.
+    pub fn execute_batch(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>> {
+        self.model(name)?.execute_with(inputs, active, scratch)
+    }
+
     /// The execution platform (diagnostics): `cpu` for both the
     /// reference interpreter and the PJRT CPU client.
     pub fn platform(&self) -> &str {
         &self.platform
+    }
+
+    /// Families with at least one batch variant loaded, sorted. The
+    /// server validates request families against this set up front, so
+    /// unknown names are rejected at `infer()` instead of occupying
+    /// per-family serving state (batcher entries, reorder slots).
+    pub fn families(&self) -> Vec<String> {
+        let mut f: Vec<String> = self.variants.keys().cloned().collect();
+        f.sort_unstable();
+        f
     }
 
     /// Pick the smallest batch variant of `family` (e.g. `edge_cnn`)

@@ -9,6 +9,14 @@
 //! `anyhow` (see `rust/Cargo.toml`). The default build uses
 //! [`super::reference`] instead; both backends sit behind the same
 //! [`super::LoadedModel::execute`] validation.
+//!
+//! Batching: the lowered HLO modules are already batch-shaped
+//! (`<family>_b<N>` variants), so XLA executes each job as a true
+//! batched GEMM natively — the reference backend's `batched_gemm`
+//! path mirrors exactly this amortization in pure Rust. The `active`
+//! row count and `ExecScratch` of `execute_with` are reference-only
+//! concerns: PJRT runs the full padded batch on its own buffers
+//! (padding rows are zero and are discarded on unpack either way).
 
 use super::artifacts::{ArtifactSpec, Manifest};
 use super::{Backend, LoadedModel, Runtime};

@@ -22,17 +22,32 @@
 //!
 //! # Kernels (§Perf)
 //!
-//! The default kernel is a **blocked, transposed-weight** matvec:
-//! weights are stored `[out][in]` so each output is a dot product over
-//! a contiguous row against the (L1-resident) input sample, computed
-//! four output rows at a time so every loaded `x` element feeds four
-//! MACs. Execution is **zero-allocation** on the hot path: per-sample
-//! extraction, pre-activation, and hidden-state buffers live in a
-//! caller-owned [`ExecScratch`] that the executor-pool workers reuse
-//! across batches, and padding rows (beyond the job's live batch) are
-//! skipped outright — an all-zero sample's output is exactly
-//! `tanh(0) = 0`, which is what the zero-filled output buffer already
-//! holds.
+//! The default execution path is a **true batched GEMM**
+//! (`batched_gemm: true`): the whole packed activation block is
+//! computed as `X · Wᵀ` with register blocking over *both* output rows
+//! and batch columns (4×4), so each weight element loaded from memory
+//! feeds four samples' MACs and each activation element feeds four
+//! output rows. Weights are streamed **once per four-sample column
+//! block instead of once per sample** — the software analogue of the
+//! parameter-traffic amortization the paper attributes to batching on
+//! the Edge TPU. The recurrent cell batches the same way: each `Wx` /
+//! `Wh` row is streamed once per timestep for the whole batch.
+//!
+//! The per-sample path (`batched_gemm: false`) is the same blocked,
+//! transposed-weight matvec applied one sample at a time; it survives
+//! as the measured benchmark baseline for `benches/hotpath_micro.rs`.
+//! Both paths use identical per-element accumulation order (single
+//! accumulator, `k` ascending, shared `dot` for remainder rows), so
+//! they are **bit-identical** — asserted by
+//! `rust/tests/batched_gemm.rs` across batch sizes and both batch
+//! axes.
+//!
+//! Execution is **zero-allocation** on the hot path: extraction,
+//! pre-activation, and hidden-state buffers live in a caller-owned
+//! [`ExecScratch`] that the executor-pool workers reuse across
+//! batches, and padding rows (beyond the job's live batch) are skipped
+//! outright — an all-zero sample's output is exactly `tanh(0) = 0`,
+//! which is what the zero-filled output buffer already holds.
 //!
 //! The pre-rewrite kernel (untransposed zero-skip scan layout) is
 //! kept behind `naive: true` purely as the benchmark baseline for
@@ -47,6 +62,7 @@
 //! `pjrt` feature once the `xla` crate is vendored.
 
 use super::artifacts::ArtifactSpec;
+use super::RuntimeOptions;
 use crate::util::rng::Rng;
 use crate::util::{fnv1a_64, tensor};
 use anyhow::{bail, Result};
@@ -69,10 +85,19 @@ pub struct ExecScratch {
     samples: Vec<Vec<f32>>,
     /// Per-sample output staging (`out_per_sample` elements).
     result: Vec<f32>,
-    /// Recurrent pre-activation accumulator (`h` elements).
+    /// Recurrent pre-activation accumulator (`h` elements per-sample,
+    /// `active × h` batched).
     pre: Vec<f32>,
-    /// Recurrent hidden state (`h` elements).
+    /// Recurrent hidden state (`h` elements per-sample, `active × h`
+    /// batched).
     hidden: Vec<f32>,
+    /// Batched-GEMM staging: all extracted samples of one input,
+    /// row-major `active × per_sample` (one buffer per declared
+    /// input).
+    batch_samples: Vec<Vec<f32>>,
+    /// Batched-GEMM output staging, row-major `active ×
+    /// out_per_sample`.
+    batch_result: Vec<f32>,
 }
 
 /// Per-sample network behind one artifact.
@@ -94,6 +119,10 @@ pub(crate) struct RefModel {
     out_per_sample: usize,
     /// Benchmark-baseline kernel selection (pre-rewrite scan layout).
     naive: bool,
+    /// Batched-GEMM execution (weights streamed once per column block
+    /// instead of once per sample); `false` is the per-sample bench
+    /// baseline. Ignored in naive mode (which is per-sample only).
+    batched: bool,
 }
 
 /// Elements per sample: the shape's product with the batch axis
@@ -182,22 +211,114 @@ fn matvec_transposed_acc(wt: &[f32], x: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Accumulate `out[c] += Wᵀ · x[c]` for every sample column `c` as one
+/// blocked GEMM: `wt` is transposed `[n_out × n_in]`, `xs` packs
+/// `cols` samples row-major (`cols × n_in`), `out` is `cols × n_out`.
+///
+/// Register-blocked 4 output rows × 4 batch columns: inside a block,
+/// each loaded weight element feeds four samples and each loaded
+/// activation feeds four output rows, so the weight matrix is streamed
+/// once per four-sample column block instead of once per sample — the
+/// batch amortization of parameter traffic.
+///
+/// Per output element the accumulation order is identical to
+/// [`matvec_transposed_acc`] (single accumulator, `k` ascending;
+/// remainder rows via the same [`dot`]), so this path is bit-identical
+/// to the per-sample path.
+fn gemm_transposed_acc(
+    wt: &[f32],
+    xs: &[f32],
+    n_in: usize,
+    n_out: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(wt.len(), n_in * n_out);
+    debug_assert_eq!(xs.len(), cols * n_in);
+    debug_assert_eq!(out.len(), cols * n_out);
+    let mut o = 0;
+    while o + 4 <= n_out {
+        let r0 = &wt[o * n_in..(o + 1) * n_in];
+        let r1 = &wt[(o + 1) * n_in..(o + 2) * n_in];
+        let r2 = &wt[(o + 2) * n_in..(o + 3) * n_in];
+        let r3 = &wt[(o + 3) * n_in..(o + 4) * n_in];
+        let mut c = 0;
+        while c + 4 <= cols {
+            let x0 = &xs[c * n_in..(c + 1) * n_in];
+            let x1 = &xs[(c + 1) * n_in..(c + 2) * n_in];
+            let x2 = &xs[(c + 2) * n_in..(c + 3) * n_in];
+            let x3 = &xs[(c + 3) * n_in..(c + 4) * n_in];
+            // acc[row][col]; each cell is a single accumulator chain
+            // over ascending k, exactly like the per-sample kernel.
+            let mut acc = [[0.0f32; 4]; 4];
+            for k in 0..n_in {
+                let w = [r0[k], r1[k], r2[k], r3[k]];
+                let x = [x0[k], x1[k], x2[k], x3[k]];
+                for (row, &wv) in w.iter().enumerate() {
+                    acc[row][0] += wv * x[0];
+                    acc[row][1] += wv * x[1];
+                    acc[row][2] += wv * x[2];
+                    acc[row][3] += wv * x[3];
+                }
+            }
+            for j in 0..4 {
+                let base = (c + j) * n_out + o;
+                out[base] += acc[0][j];
+                out[base + 1] += acc[1][j];
+                out[base + 2] += acc[2][j];
+                out[base + 3] += acc[3][j];
+            }
+            c += 4;
+        }
+        // Column remainder: the per-sample 4-row block per leftover
+        // sample.
+        while c < cols {
+            let x = &xs[c * n_in..(c + 1) * n_in];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (k, &xv) in x.iter().enumerate() {
+                a0 += r0[k] * xv;
+                a1 += r1[k] * xv;
+                a2 += r2[k] * xv;
+                a3 += r3[k] * xv;
+            }
+            let base = c * n_out + o;
+            out[base] += a0;
+            out[base + 1] += a1;
+            out[base + 2] += a2;
+            out[base + 3] += a3;
+            c += 1;
+        }
+        o += 4;
+    }
+    // Row remainder: same `dot` the per-sample path uses.
+    while o < n_out {
+        let row = &wt[o * n_in..(o + 1) * n_in];
+        for c in 0..cols {
+            out[c * n_out + o] += dot(row, &xs[c * n_in..(c + 1) * n_in]);
+        }
+        o += 1;
+    }
+}
+
 impl RefModel {
     /// Build the reference net for an artifact spec with the default
-    /// (blocked/transposed) kernels and a throwaway weight cache.
+    /// options (batched GEMM kernels) and a throwaway weight cache.
     #[cfg(test)]
     pub(crate) fn build(spec: &ArtifactSpec) -> Result<Self> {
-        Self::build_with(spec, false, &mut WeightCache::default())
+        Self::build_with(spec, RuntimeOptions::default(), &mut WeightCache::default())
     }
 
-    /// Build the reference net for an artifact spec. `naive` selects
-    /// the pre-rewrite benchmark-baseline kernels; `cache` shares
-    /// weight matrices across batch variants of the same family.
+    /// Build the reference net for an artifact spec.
+    /// `opts.naive_kernels` selects the pre-rewrite benchmark-baseline
+    /// kernels, `opts.batched_gemm` the batched vs per-sample
+    /// execution path; `cache` shares weight matrices across batch
+    /// variants of the same family.
     pub(crate) fn build_with(
         spec: &ArtifactSpec,
-        naive: bool,
+        opts: RuntimeOptions,
         cache: &mut WeightCache,
     ) -> Result<Self> {
+        let naive = opts.naive_kernels;
         if spec.input_shapes.is_empty() {
             bail!("artifact has no inputs");
         }
@@ -257,7 +378,7 @@ impl RefModel {
                 .collect();
             RefNet::Dense { weights }
         };
-        Ok(Self { net, out_per_sample, naive })
+        Ok(Self { net, out_per_sample, naive, batched: opts.batched_gemm })
     }
 
     /// Execute the variant batch. Inputs are already validated against
@@ -277,7 +398,11 @@ impl RefModel {
         let batch = spec.output_shape[spec.output_batch_axis] as usize;
         let active = active.min(batch);
         let mut out = vec![0.0f32; out_total];
-        let ExecScratch { samples, result, pre, hidden } = scratch;
+        if self.batched && !self.naive {
+            self.execute_batched(spec, inputs, active, &mut out, scratch);
+            return out;
+        }
+        let ExecScratch { samples, result, pre, hidden, .. } = scratch;
         samples.resize_with(inputs.len(), Vec::new);
         for (i, shape) in spec.input_shapes.iter().enumerate() {
             let per = per_sample_elems(shape, spec.input_batch_axes[i]);
@@ -304,6 +429,94 @@ impl RefModel {
             );
         }
         out
+    }
+
+    /// The whole active batch through the net as one blocked GEMM:
+    /// every input's live samples are extracted into a packed
+    /// `active × per_sample` block, the GEMM streams each weight tile
+    /// once per column block (instead of once per sample), and the
+    /// result rows are inserted back along the output batch axis.
+    /// Bit-identical to the per-sample path (same per-element
+    /// accumulation order), verified by `rust/tests/batched_gemm.rs`.
+    fn execute_batched(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Vec<f32>],
+        active: usize,
+        out: &mut [f32],
+        scratch: &mut ExecScratch,
+    ) {
+        let ExecScratch { batch_samples, batch_result, pre, hidden, .. } = scratch;
+        batch_samples.resize_with(inputs.len(), Vec::new);
+        for (i, buf) in inputs.iter().enumerate() {
+            let shape = &spec.input_shapes[i];
+            let axis = spec.input_batch_axes[i];
+            let per = per_sample_elems(shape, axis);
+            let xs = &mut batch_samples[i];
+            xs.resize(active * per, 0.0);
+            for b in 0..active {
+                tensor::extract_sample_into(buf, shape, axis, b, &mut xs[b * per..(b + 1) * per]);
+            }
+        }
+        let n_out = self.out_per_sample;
+        batch_result.resize(active * n_out, 0.0);
+        match &self.net {
+            RefNet::Dense { weights } => {
+                batch_result.fill(0.0);
+                for (i, wt) in weights.iter().enumerate() {
+                    let per =
+                        per_sample_elems(&spec.input_shapes[i], spec.input_batch_axes[i]);
+                    gemm_transposed_acc(
+                        wt,
+                        &batch_samples[i],
+                        per,
+                        n_out,
+                        active,
+                        batch_result,
+                    );
+                }
+                for v in batch_result.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            RefNet::Recurrent { wx, wh, t, d, h } => {
+                let (t, d, h) = (*t, *d, *h);
+                let xs = &batch_samples[0];
+                hidden.resize(active * h, 0.0);
+                hidden.fill(0.0);
+                pre.resize(active * h, 0.0);
+                for step in 0..t {
+                    // Stream each weight row once for the whole batch:
+                    // `j` outer, samples inner — the per-element math
+                    // (`dot` + `dot`) is exactly the per-sample cell.
+                    for j in 0..h {
+                        let rx = &wx[j * d..(j + 1) * d];
+                        let rh = &wh[j * h..(j + 1) * h];
+                        for c in 0..active {
+                            let xt = &xs[c * (t * d) + step * d..c * (t * d) + (step + 1) * d];
+                            pre[c * h + j] =
+                                dot(rx, xt) + dot(rh, &hidden[c * h..(c + 1) * h]);
+                        }
+                    }
+                    for (hv, &p) in hidden.iter_mut().zip(pre.iter()) {
+                        *hv = p.tanh();
+                    }
+                    for c in 0..active {
+                        batch_result[c * (t * h) + step * h..c * (t * h) + (step + 1) * h]
+                            .copy_from_slice(&hidden[c * h..(c + 1) * h]);
+                    }
+                }
+            }
+        }
+        for b in 0..active {
+            tensor::insert_sample_from(
+                out,
+                &spec.output_shape,
+                spec.output_batch_axis,
+                b,
+                &batch_result[b * n_out..(b + 1) * n_out],
+            );
+        }
     }
 
     /// One sample through the net, writing `out_per_sample` elements
@@ -460,8 +673,8 @@ mod tests {
         let s1 = dense_spec(1);
         let s4 = dense_spec(4);
         let mut cache = WeightCache::default();
-        let m1 = RefModel::build_with(&s1, false, &mut cache).unwrap();
-        let m4 = RefModel::build_with(&s4, false, &mut cache).unwrap();
+        let m1 = RefModel::build_with(&s1, RuntimeOptions::default(), &mut cache).unwrap();
+        let m4 = RefModel::build_with(&s4, RuntimeOptions::default(), &mut cache).unwrap();
         let reqs: Vec<Vec<f32>> = (0..4)
             .map(|r| (0..8).map(|i| ((i + r * 3) % 7) as f32 / 7.0).collect())
             .collect();
@@ -481,8 +694,8 @@ mod tests {
         let s1 = dense_spec(1);
         let s8 = dense_spec(8);
         let mut cache = WeightCache::default();
-        let m1 = RefModel::build_with(&s1, false, &mut cache).unwrap();
-        let m8 = RefModel::build_with(&s8, false, &mut cache).unwrap();
+        let m1 = RefModel::build_with(&s1, RuntimeOptions::default(), &mut cache).unwrap();
+        let m8 = RefModel::build_with(&s8, RuntimeOptions::default(), &mut cache).unwrap();
         let (RefNet::Dense { weights: w1 }, RefNet::Dense { weights: w8 }) =
             (&m1.net, &m8.net)
         else {
@@ -531,8 +744,14 @@ mod tests {
         // float tolerance (the modes are never mixed in one server, so
         // bit-exactness is only required *within* a mode).
         let s = dense_spec(1);
-        let fast = RefModel::build_with(&s, false, &mut WeightCache::default()).unwrap();
-        let naive = RefModel::build_with(&s, true, &mut WeightCache::default()).unwrap();
+        let fast = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
+            .unwrap();
+        let naive = RefModel::build_with(
+            &s,
+            RuntimeOptions { naive_kernels: true, ..Default::default() },
+            &mut WeightCache::default(),
+        )
+        .unwrap();
         let x: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) / 8.0).collect();
         let a = run(&fast, &s, &[x.clone()]);
         let b = run(&naive, &s, &[x]);
@@ -570,6 +789,43 @@ mod tests {
         let sb1 = spec("edge_lstm_b1", vec![(vec![4, 1, 3], 1)], (vec![4, 1, 2], 1));
         let m1 = RefModel::build(&sb1).unwrap();
         assert_eq!(run(&m1, &sb1, &[fwd]), s0, "batched == solo for the lstm");
+    }
+
+    /// The two execution paths must agree bitwise (the serving
+    /// correctness contract the full property test in
+    /// `rust/tests/batched_gemm.rs` checks over the real manifest).
+    #[test]
+    fn batched_gemm_is_bit_identical_to_per_sample() {
+        let per_sample_opts = RuntimeOptions { batched_gemm: false, ..Default::default() };
+        // Dense, batch-major, out=7 exercises one full 4-row GEMM
+        // block plus the `dot` row remainder; batches 1/2/4/8 exercise
+        // full and remainder column blocks.
+        for batch in [1i64, 2, 4, 8] {
+            let s = spec(
+                &format!("wide_b{batch}"),
+                vec![(vec![batch, 6], 0)],
+                (vec![batch, 7], 0),
+            );
+            let g = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
+                .unwrap();
+            let p = RefModel::build_with(&s, per_sample_opts, &mut WeightCache::default()).unwrap();
+            let n = (batch * 6) as usize;
+            let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 5) % 31) as f32 / 31.0 - 0.4).collect();
+            assert_eq!(
+                run(&g, &s, &[x.clone()]),
+                run(&p, &s, &[x]),
+                "dense batch {batch} diverges"
+            );
+        }
+        // Recurrent, time-major [T=4, B=3, D=3] with one padding row.
+        let s = spec("edge_lstm_b3", vec![(vec![4, 3, 3], 1)], (vec![4, 3, 2], 1));
+        let g = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
+            .unwrap();
+        let p = RefModel::build_with(&s, per_sample_opts, &mut WeightCache::default()).unwrap();
+        let x: Vec<f32> = (0..4 * 3 * 3).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
+        let a = g.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
+        let b = p.execute(&s, &[x], 2, &mut ExecScratch::default());
+        assert_eq!(a, b, "recurrent time-major batch diverges");
     }
 
     #[test]
