@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the serving benchmark.
+
+Compares a freshly generated ``BENCH_serving.json`` (written by
+``cargo bench --bench hotpath_micro``) against the committed
+``BENCH_baseline.json`` and fails (exit 1) when any tracked metric
+falls below its tolerance band, so the speedups the serving PRs bought
+can never silently regress.
+
+Baseline format::
+
+    {
+      "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+      "cases": {
+        "<case>": {"speedup": <floor>, "<label>_rps": <floor>, ...},
+        ...
+      }
+    }
+
+Every metric listed under a case is checked as
+``current >= baseline * (1 - tol)`` where ``tol`` is ``speedup_rel``
+for ``speedup`` metrics and ``rps_rel`` for throughput metrics.
+Speedup ratios are dimensionless and stable across runner generations;
+absolute rps floors are deliberately loose (they catch order-of-
+magnitude collapses, not noise). Regenerate the baseline on the CI
+runner class with ``--write-baseline`` after an intentional perf
+change.
+
+Usage:
+    compare_bench.py CURRENT BASELINE          # gate (exit 1 on regression)
+    compare_bench.py --self-test               # unit-test the gate itself
+    compare_bench.py CURRENT --write-baseline OUT [--note TEXT]
+"""
+
+import json
+import math
+import sys
+
+# Metrics captured by --write-baseline: the headline ratio plus the
+# treatment-side throughput of every serving case, and the kernel-micro
+# ratios.
+TRACKED = {
+    "skewed_device_emulated": ("speedup", "stealing_rps"),
+    "skewed_cpu_bound": ("speedup", "stealing_rps"),
+    "uniform_cpu_bound": ("speedup", "stealing_rps"),
+    "skewed_gemm": ("speedup", "batched_rps"),
+    "hot_family_reorder": ("speedup", "reorder_rps"),
+    "oversized_job_chunks": ("speedup", "chunk_granular_rps"),
+    "adaptive_depth": ("speedup", "adaptive_rps"),
+    "gemm_dense": ("speedup",),
+    "kernel_dense": ("speedup",),
+}
+
+DEFAULT_TOLERANCE = {"speedup_rel": 0.35, "rps_rel": 0.6}
+
+
+def check(current, baseline):
+    """Return (checked_count, failure_messages)."""
+    tol = dict(DEFAULT_TOLERANCE)
+    tol.update(baseline.get("tolerance", {}))
+    checked, failures = 0, []
+    cases = baseline.get("cases", {})
+    if not cases:
+        failures.append("baseline has no cases to check")
+    for case, expect in sorted(cases.items()):
+        got = current.get(case)
+        if not isinstance(got, dict):
+            failures.append(f"{case}: missing from current results")
+            continue
+        for metric, base in sorted(expect.items()):
+            rel = tol["speedup_rel"] if metric == "speedup" else tol["rps_rel"]
+            floor = float(base) * (1.0 - float(rel))
+            value = got.get(metric)
+            if not isinstance(value, (int, float)) or not math.isfinite(value):
+                failures.append(f"{case}.{metric}: missing or non-finite ({value!r})")
+            elif value < floor:
+                failures.append(
+                    f"{case}.{metric}: {value:.3f} < floor {floor:.3f} "
+                    f"(baseline {float(base):.3f}, tolerance {float(rel):.0%})"
+                )
+            else:
+                checked += 1
+    return checked, failures
+
+
+def write_baseline(current, note):
+    cases = {}
+    for case, metrics in TRACKED.items():
+        got = current.get(case)
+        if not isinstance(got, dict):
+            continue
+        entry = {}
+        for metric in metrics:
+            value = got.get(metric)
+            if isinstance(value, (int, float)) and math.isfinite(value):
+                entry[metric] = round(float(value), 3)
+        if entry:
+            cases[case] = entry
+    return {
+        "bench": "serving_throughput",
+        "note": note,
+        "tolerance": dict(DEFAULT_TOLERANCE),
+        "cases": cases,
+    }
+
+
+def self_test():
+    """Unit tests for the gate: a healthy run passes, a synthetically
+    degraded run (and a missing case) must fail."""
+    baseline = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {
+            "hot_family_reorder": {"speedup": 2.0, "reorder_rps": 500.0},
+            "oversized_job_chunks": {"speedup": 1.6, "chunk_granular_rps": 400.0},
+            "gemm_dense": {"speedup": 1.2},
+        },
+    }
+    healthy = {
+        "hot_family_reorder": {"speedup": 2.4, "reorder_rps": 900.0},
+        "oversized_job_chunks": {"speedup": 1.9, "chunk_granular_rps": 700.0},
+        "gemm_dense": {"speedup": 1.5},
+    }
+    checked, failures = check(healthy, baseline)
+    assert not failures, f"healthy run must pass, got {failures}"
+    assert checked == 5, f"expected 5 checked metrics, got {checked}"
+
+    # Degraded speedup: below baseline * (1 - 0.35).
+    degraded = json.loads(json.dumps(healthy))
+    degraded["hot_family_reorder"]["speedup"] = 1.2  # floor is 1.3
+    _, failures = check(degraded, baseline)
+    assert any("hot_family_reorder.speedup" in f for f in failures), failures
+
+    # Degraded throughput: an order-of-magnitude collapse.
+    degraded = json.loads(json.dumps(healthy))
+    degraded["oversized_job_chunks"]["chunk_granular_rps"] = 50.0  # floor is 160
+    _, failures = check(degraded, baseline)
+    assert any("chunk_granular_rps" in f for f in failures), failures
+
+    # A case missing from the current results is a failure, not a skip.
+    missing = {k: v for k, v in healthy.items() if k != "gemm_dense"}
+    _, failures = check(missing, baseline)
+    assert any("gemm_dense: missing" in f for f in failures), failures
+
+    # Non-finite values are failures.
+    broken = json.loads(json.dumps(healthy))
+    broken["gemm_dense"]["speedup"] = float("nan")
+    _, failures = check(broken, baseline)
+    assert any("gemm_dense.speedup" in f for f in failures), failures
+
+    # Values inside the tolerance band pass.
+    tolerated = json.loads(json.dumps(healthy))
+    tolerated["hot_family_reorder"]["speedup"] = 1.4  # floor is 1.3
+    _, failures = check(tolerated, baseline)
+    assert not failures, f"in-band value must pass, got {failures}"
+
+    # write_baseline round-trips through check.
+    regen = write_baseline(healthy, "self-test")
+    _, failures = check(healthy, regen)
+    assert not failures, f"regenerated baseline must accept its own run: {failures}"
+    print("compare_bench.py self-test: OK")
+
+
+def main(argv):
+    if "--self-test" in argv:
+        self_test()
+        return 0
+    args = [a for a in argv if not a.startswith("--")]
+    if "--write-baseline" in argv:
+        out = argv[argv.index("--write-baseline") + 1]
+        note = "regenerated"
+        if "--note" in argv:
+            note = argv[argv.index("--note") + 1]
+        with open(args[0]) as f:
+            current = json.load(f)
+        baseline = write_baseline(current, note)
+        with open(out, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out} ({len(baseline['cases'])} cases)")
+        return 0
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    with open(args[0]) as f:
+        current = json.load(f)
+    with open(args[1]) as f:
+        baseline = json.load(f)
+    checked, failures = check(current, baseline)
+    if failures:
+        print(f"PERF REGRESSION GATE: {len(failures)} failure(s) "
+              f"({checked} metric(s) passed):")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print(f"perf gate: {checked} metric(s) within tolerance of {args[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -33,6 +33,19 @@
 //!   hot family's jobs on one worker at a time, the reorder buffer
 //!   fans them across the pool while `fifo_violations` stays 0
 //!   (asserted per run).
+//! * `oversized_job_chunks` — closed-loop bursts of 32 requests on one
+//!   family (`max_batch = 32`, variants top out at b8), so exactly one
+//!   four-chunk job is in flight at a time, with per-chunk device
+//!   emulation. **Job-granular vs chunk-granular** sequencing
+//!   (`chunk_level`): job-granular runs the four chunks front-to-back
+//!   on one worker (4 serial device windows per burst); chunk-granular
+//!   spreads them across the pool (PR 4's tentpole).
+//! * `adaptive_depth` — shifting 100% skew (the hot family alternates
+//!   each quarter of the run) with device emulation, comparing the
+//!   **static lease vs adaptive per-family depth**
+//!   (`reorder_depth_max = workers`): the adaptive policy widens
+//!   whichever family is currently backlogged, without a hand-tuned
+//!   static `reorder_depth`.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
 //! (real `edge_cnn_b8`) and per-sample vs batched GEMM (synthetic
@@ -309,12 +322,26 @@ const SKEW_PATTERN: [usize; 20] = [0, 1, 2, 0, 3, 4, 0, 5, 6, 0, 7, 1, 0, 2, 3, 
 struct CaseOpts {
     stealing: bool,
     /// `skewed`: SKEW_PATTERN; `!skewed`: uniform round-robin — unless
-    /// `single_family`, which sends every request to families[0].
+    /// `single_family` / `shifting` override the choice.
     skewed: bool,
     single_family: bool,
+    /// Shifting 100% skew: the hot family alternates between
+    /// families[0] and families[1] each quarter of the run (the
+    /// adaptive-depth case's load).
+    shifting: bool,
     device_us: u64,
     batched_gemm: bool,
     reorder_depth: usize,
+    /// Adaptive per-family depth clamp (0 = static `reorder_depth`).
+    reorder_depth_max: usize,
+    /// Chunk-granular sequencing (batcher pre-splits oversized
+    /// flushes); `false` is the job-granular baseline.
+    chunk_level: bool,
+    max_batch: usize,
+    /// Closed-loop burst size (wait for each burst's responses before
+    /// submitting the next); 0 = open loop. Bursts keep exactly one
+    /// oversized job in flight — the chunk-granularity A/B.
+    burst: usize,
 }
 
 struct RunStats {
@@ -322,13 +349,50 @@ struct RunStats {
     mean_batch: f64,
 }
 
+/// Which family request `k` of a run targets.
+fn family_index(opts: CaseOpts, k: usize, n_families: usize) -> usize {
+    if opts.single_family {
+        0
+    } else if opts.shifting {
+        (k / (BENCH_REQUESTS / 4).max(1)) % 2
+    } else if opts.skewed {
+        SKEW_PATTERN[k % SKEW_PATTERN.len()]
+    } else {
+        k % n_families
+    }
+}
+
+/// Submit one request, retrying backpressure rejections but failing
+/// fast (instead of hanging CI) if the server has actually died.
+fn submit_with_retry(
+    server: &mensa::coordinator::ServerHandle,
+    family: &str,
+    input: &[f32],
+) -> std::sync::mpsc::Receiver<anyhow::Result<mensa::coordinator::InferenceResponse>> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        match server.infer(family, vec![input.to_vec()]) {
+            Ok(rx) => return rx,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "bench submission stalled for 120s (server dead?): {e:#}"
+                );
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    }
+}
+
 /// Run one serving case; returns completed requests/second and the
 /// mean executed batch.
 fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
     let cfg = ServerConfig {
         workers: BENCH_WORKERS,
-        max_batch: 8,
-        batch_timeout_us: 300,
+        max_batch: opts.max_batch,
+        // Burst mode accumulates a whole burst into one flush; give
+        // the batcher enough slack to see the burst's final request.
+        batch_timeout_us: if opts.burst > 0 { 3_000 } else { 300 },
         queue_depth: 2 * BENCH_REQUESTS,
         work_stealing: opts.stealing,
         // One shard in ALL modes: the comparisons isolate routing /
@@ -339,41 +403,40 @@ fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
         device_latency_us: opts.device_us,
         batched_gemm: opts.batched_gemm,
         reorder_depth: opts.reorder_depth,
+        reorder_depth_max: opts.reorder_depth_max,
+        chunk_level: opts.chunk_level,
+        panic_on_poison: false,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(BENCH_REQUESTS);
-    for k in 0..BENCH_REQUESTS {
-        let fam_idx = if opts.single_family {
-            0
-        } else if opts.skewed {
-            SKEW_PATTERN[k % SKEW_PATTERN.len()]
-        } else {
-            k % families.len()
-        };
-        let family = &families[fam_idx];
-        // Retry backpressure rejections, but fail fast (instead of
-        // hanging CI) if the server has actually died.
-        let deadline = Instant::now() + Duration::from_secs(120);
-        loop {
-            match server.infer(family, vec![input.clone()]) {
-                Ok(rx) => {
-                    rxs.push(rx);
-                    break;
-                }
-                Err(e) => {
-                    assert!(
-                        Instant::now() < deadline,
-                        "bench submission stalled for 120s (server dead?): {e:#}"
-                    );
-                    std::thread::sleep(Duration::from_micros(200));
-                }
+    if opts.burst > 0 {
+        // Closed loop: one burst (one oversized flush) in flight at a
+        // time.
+        let mut k = 0;
+        while k < BENCH_REQUESTS {
+            let n = opts.burst.min(BENCH_REQUESTS - k);
+            let mut rxs = Vec::with_capacity(n);
+            for i in 0..n {
+                let family = &families[family_index(opts, k + i, families.len())];
+                rxs.push(submit_with_retry(&server, family, &input));
             }
+            for rx in rxs {
+                rx.recv_timeout(Duration::from_secs(120))
+                    .expect("bench recv")
+                    .expect("bench ok");
+            }
+            k += n;
         }
-    }
-    for rx in rxs {
-        rx.recv_timeout(Duration::from_secs(120)).expect("bench recv").expect("bench ok");
+    } else {
+        let mut rxs = Vec::with_capacity(BENCH_REQUESTS);
+        for k in 0..BENCH_REQUESTS {
+            let family = &families[family_index(opts, k, families.len())];
+            rxs.push(submit_with_retry(&server, family, &input));
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(120)).expect("bench recv").expect("bench ok");
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics();
@@ -391,9 +454,14 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         stealing: true,
         skewed: true,
         single_family: false,
+        shifting: false,
         device_us: 0,
         batched_gemm: true,
         reorder_depth: 0,
+        reorder_depth_max: 0,
+        chunk_level: true,
+        max_batch: 8,
+        burst: 0,
     };
     let mut cases = Vec::new();
 
@@ -457,6 +525,58 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         },
     );
 
+    // Chunk-granularity comparison (PR 4 tentpole): closed-loop bursts
+    // keep exactly ONE oversized job (32 requests = four b8 chunks) in
+    // flight. Job-granular sequencing runs the four chunks
+    // front-to-back on one worker — four serial device windows per
+    // burst; chunk-granular spreads them across the pool, so the
+    // device windows overlap regardless of host core count.
+    let oversized = CaseOpts {
+        skewed: false,
+        single_family: true,
+        device_us: 2 * BENCH_DEVICE_US,
+        max_batch: 32,
+        burst: 32,
+        reorder_depth: BENCH_WORKERS,
+        ..defaults
+    };
+    let base = run_case(dir, families, CaseOpts { chunk_level: false, ..oversized });
+    let treat = run_case(dir, families, oversized);
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "oversized_job_chunks",
+            labels: ("job_granular_rps", "chunk_granular_rps"),
+            baseline_rps: base.rps,
+            treatment_rps: treat.rps,
+            treatment_mean_batch: treat.mean_batch,
+        },
+    );
+
+    // Adaptive-depth comparison (PR 4 tentpole): shifting 100% skew —
+    // the hot family alternates each quarter of the run. The static
+    // lease serializes whichever family is hot; the adaptive policy
+    // (`reorder_depth_max = workers`) widens it automatically as its
+    // backlog builds and releases the width when the skew moves on.
+    let shifting = CaseOpts {
+        skewed: false,
+        shifting: true,
+        device_us: BENCH_DEVICE_US,
+        ..defaults
+    };
+    let base = run_case(dir, families, shifting);
+    let treat = run_case(dir, families, CaseOpts { reorder_depth_max: BENCH_WORKERS, ..shifting });
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "adaptive_depth",
+            labels: ("static_rps", "adaptive_rps"),
+            baseline_rps: base.rps,
+            treatment_rps: treat.rps,
+            treatment_mean_batch: treat.mean_batch,
+        },
+    );
+
     // Acceptance bars (printed, recorded in BENCH_serving.json).
     let headline = &cases[0];
     if headline.speedup() >= 2.0 {
@@ -494,6 +614,30 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         println!(
             "WARN: reorder buffer speedup {:.2}x <= 1x on the hot-family case",
             reorder.speedup()
+        );
+    }
+    let chunks = cases.iter().find(|c| c.name == "oversized_job_chunks").expect("chunk case");
+    if chunks.speedup() > 1.0 {
+        println!(
+            "PASS: chunk-granular sequencing {:.2}x over job-granular on one oversized job",
+            chunks.speedup()
+        );
+    } else {
+        println!(
+            "WARN: chunk-granular speedup {:.2}x <= 1x on the oversized-job case",
+            chunks.speedup()
+        );
+    }
+    let adaptive = cases.iter().find(|c| c.name == "adaptive_depth").expect("adaptive case");
+    if adaptive.speedup() > 1.0 {
+        println!(
+            "PASS: adaptive depth {:.2}x over the static lease under shifting skew",
+            adaptive.speedup()
+        );
+    } else {
+        println!(
+            "WARN: adaptive depth speedup {:.2}x <= 1x under shifting skew",
+            adaptive.speedup()
         );
     }
     ServingResult { cases }

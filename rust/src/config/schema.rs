@@ -174,12 +174,33 @@ pub struct ServerConfig {
     pub batched_gemm: bool,
     /// Intra-family parallelism (work-stealing mode only): with a
     /// value >= 2, up to that many workers execute one family's
-    /// backlog concurrently and a per-family sequence-numbered reorder
+    /// backlog concurrently and a per-family chunk-sequenced reorder
     /// buffer restores client-observed FIFO at delivery
     /// (`fifo_violations` stays 0). Values <= 1 keep the family-lease
     /// discipline (one worker per family at a time), the measured
-    /// baseline.
+    /// baseline. Ignored when `reorder_depth_max` enables the adaptive
+    /// policy.
     pub reorder_depth: usize,
+    /// Adaptive per-family reorder depth (work-stealing mode only):
+    /// with a value >= 2, each family's concurrency is derived from
+    /// the observed backlog (EWMA of its queue length sampled at
+    /// dispatch), clamped to `[1, reorder_depth_max]` — cold families
+    /// keep the cheap family-lease discipline, hot families widen
+    /// automatically. Overrides the static `reorder_depth`. 0 (the
+    /// default) disables the adaptive policy.
+    pub reorder_depth_max: usize,
+    /// Chunk-granular sequencing (the default): the batcher splits an
+    /// oversized flush into capacity-sized chunks up front, so one
+    /// big job's chunks spread across up to `reorder_depth` workers.
+    /// `false` keeps the job-granular baseline (the executor splits at
+    /// execution time, front-to-back on one worker) for the
+    /// `oversized_job_chunks` benchmark A/B.
+    pub chunk_level: bool,
+    /// Test hook (never set in production configs, not parsed from
+    /// TOML): make the reference kernels panic when an input contains
+    /// the `runtime::POISON_INPUT` sentinel, so the panic-isolation
+    /// path is drivable end to end through the server API.
+    pub panic_on_poison: bool,
 }
 
 impl Default for ServerConfig {
@@ -195,6 +216,9 @@ impl Default for ServerConfig {
             device_latency_us: 0,
             batched_gemm: true,
             reorder_depth: 0,
+            reorder_depth_max: 0,
+            chunk_level: true,
+            panic_on_poison: false,
         }
     }
 }
@@ -235,6 +259,12 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("reorder_depth").and_then(Value::as_int) {
                 cfg.reorder_depth = v.max(0) as usize;
+            }
+            if let Some(v) = t.get("reorder_depth_max").and_then(Value::as_int) {
+                cfg.reorder_depth_max = v.max(0) as usize;
+            }
+            if let Some(v) = t.get("chunk_level").and_then(Value::as_bool) {
+                cfg.chunk_level = v;
             }
         }
         Ok(cfg)
@@ -327,6 +357,9 @@ memory = "hbm_internal"
         assert_eq!(d.device_latency_us, 0);
         assert!(d.batched_gemm, "batched GEMM is the production default");
         assert_eq!(d.reorder_depth, 0, "family-lease discipline is the default");
+        assert_eq!(d.reorder_depth_max, 0, "adaptive depth is opt-in");
+        assert!(d.chunk_level, "chunk-granular sequencing is the default");
+        assert!(!d.panic_on_poison, "poison hook is test-only");
         let cfg = ServerConfig::from_toml("[server]\nmax_batch = 16\nworkers = 4\n").unwrap();
         assert_eq!(cfg.max_batch, 16);
         assert_eq!(cfg.workers, 4);
@@ -339,7 +372,8 @@ memory = "hbm_internal"
         let cfg = ServerConfig::from_toml(
             "[server]\nwork_stealing = false\nbatcher_shards = 4\n\
              naive_kernels = true\ndevice_latency_us = 500\n\
-             batched_gemm = false\nreorder_depth = 4\n",
+             batched_gemm = false\nreorder_depth = 4\n\
+             reorder_depth_max = 6\nchunk_level = false\n",
         )
         .unwrap();
         assert!(!cfg.work_stealing);
@@ -348,10 +382,15 @@ memory = "hbm_internal"
         assert_eq!(cfg.device_latency_us, 500);
         assert!(!cfg.batched_gemm);
         assert_eq!(cfg.reorder_depth, 4);
+        assert_eq!(cfg.reorder_depth_max, 6);
+        assert!(!cfg.chunk_level);
         // Clamping.
-        let cfg = ServerConfig::from_toml("[server]\nbatcher_shards = 0\nreorder_depth = -3\n")
-            .unwrap();
+        let cfg = ServerConfig::from_toml(
+            "[server]\nbatcher_shards = 0\nreorder_depth = -3\nreorder_depth_max = -1\n",
+        )
+        .unwrap();
         assert_eq!(cfg.batcher_shards, 1);
         assert_eq!(cfg.reorder_depth, 0, "negative reorder depth clamps to lease mode");
+        assert_eq!(cfg.reorder_depth_max, 0, "negative adaptive cap clamps to disabled");
     }
 }

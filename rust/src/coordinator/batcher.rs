@@ -1,4 +1,5 @@
-//! Dynamic batching: group same-family requests into batch jobs.
+//! Dynamic batching: group same-family requests into batch jobs and
+//! split oversized flushes into **capacity-sized chunks**.
 //!
 //! The batcher drains its router queue, accumulating requests per
 //! family; a family's pending set flushes when it reaches `max_batch`
@@ -6,15 +7,26 @@
 //! standard serving trade-off: larger batches amortize dispatch (and on
 //! a real Mensa, fill the PE arrays), at the cost of queueing delay.
 //!
-//! Flushed jobs go to the shared [`ExecutorPool`]: per-family FIFO
-//! queues with a family-lease discipline, so different families batch
-//! *and* execute independently while same-family jobs stay ordered.
-//! Each job carries a per-family **sequence number**; it orders
-//! delivery through the server's reorder buffer when several workers
-//! drain one family concurrently (`reorder_depth >= 2`), and the
-//! delivery path reports it to [`Metrics`](super::Metrics), which
-//! turns the client-observed FIFO contract into a checkable invariant
-//! (`fifo_violations == 0`).
+//! A flush larger than the family's biggest compiled variant is split
+//! **here**, at emit time, into capacity-sized chunks (the server
+//! supplies the per-family capacities from the runtime's variant
+//! index), each pushed as its own [`BatchJob`] stamped `(seq, chunk,
+//! last)`. Making the chunk the pool's unit of dispatch is what lets
+//! one oversized job spread across several workers instead of running
+//! front-to-back on one — the chunk-granular sequencing of PR 4; the
+//! `chunk_level = false` config knob keeps the old job-granular
+//! behavior (the executor then splits at execution time, serially) as
+//! the measured benchmark baseline.
+//!
+//! Chunks go to the shared [`ExecutorPool`]: per-family FIFO work
+//! lists with a family-lease discipline, so different families batch
+//! *and* execute independently while same-family chunks stay ordered.
+//! Each chunk carries the per-family flush **sequence number** plus
+//! its **chunk index**; they order delivery through the server's
+//! reorder buffer when several workers drain one family concurrently,
+//! and the delivery path reports them to
+//! [`Metrics`](super::Metrics), which turns the client-observed FIFO
+//! contract into a checkable invariant (`fifo_violations == 0`).
 //!
 //! At high request rates one accumulation loop becomes the next
 //! serialization point, so the server runs several batcher **shards**
@@ -31,7 +43,7 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A flushed batch ready for an executor worker.
+/// A flushed chunk ready for an executor worker.
 #[derive(Debug)]
 pub struct BatchJob {
     /// Model family.
@@ -40,6 +52,13 @@ pub struct BatchJob {
     /// pool must observe these non-decreasing per family, which is the
     /// FIFO ordering invariant `Metrics` checks.
     pub seq: u64,
+    /// Chunk index within flush `seq` (0, 1, 2, …): an oversized flush
+    /// splits into several chunks sharing one `seq`; delivery order is
+    /// lexicographic `(seq, chunk)`.
+    pub chunk: u32,
+    /// Whether this is the final chunk of flush `seq` — the reorder
+    /// buffer's cue to advance its cursor to the next flush.
+    pub last: bool,
     /// The member requests, arrival order.
     pub requests: Vec<Request>,
 }
@@ -51,27 +70,43 @@ struct Pending {
     requests: Vec<Request>,
 }
 
-/// One batching shard. Owns a router receiver; emits [`BatchJob`]s
-/// into the bounded per-family queues of the [`ExecutorPool`]: when a
-/// family falls behind, the shard blocks on its cap, the router queue
-/// fills, and `infer()` rejects — end-to-end backpressure instead of
-/// unbounded buffering.
+/// One batching shard. Owns a router receiver; emits [`BatchJob`]
+/// chunks into the bounded per-family queues of the [`ExecutorPool`]:
+/// when a family falls behind, the shard blocks on its cap, the router
+/// queue fills, and `infer()` rejects — end-to-end backpressure
+/// instead of unbounded buffering.
 pub struct Batcher {
     rx: Receiver<Request>,
     pool: Arc<ExecutorPool>,
     max_batch: usize,
     timeout: Duration,
+    /// Largest executable batch per family (from the runtime's variant
+    /// index): the chunk size for oversized flushes. Families absent
+    /// from the map are never split.
+    chunk_caps: Arc<HashMap<String, usize>>,
+    /// Split oversized flushes here (chunk-granular sequencing, the
+    /// default) vs emitting them whole for the executor to split
+    /// serially (the job-granular benchmark baseline).
+    chunk_level: bool,
 }
 
 impl Batcher {
     /// Create a batching shard between one router queue and the
-    /// executor pool.
-    pub fn new(rx: Receiver<Request>, pool: Arc<ExecutorPool>, cfg: &ServerConfig) -> Self {
+    /// executor pool. `chunk_caps` holds each family's largest
+    /// executable batch — the chunk size for oversized flushes.
+    pub fn new(
+        rx: Receiver<Request>,
+        pool: Arc<ExecutorPool>,
+        cfg: &ServerConfig,
+        chunk_caps: Arc<HashMap<String, usize>>,
+    ) -> Self {
         Self {
             rx,
             pool,
             max_batch: cfg.max_batch.max(1),
             timeout: Duration::from_micros(cfg.batch_timeout_us),
+            chunk_caps,
+            chunk_level: cfg.chunk_level,
         }
     }
 
@@ -153,9 +188,11 @@ impl Batcher {
         }
     }
 
-    /// Stamp the next per-family sequence number on `requests` and
-    /// push the job. `family` is moved into the job (the map's own key
-    /// allocation — the flush path never clones it).
+    /// Stamp the next per-family sequence number on `requests`, split
+    /// the flush into capacity-sized chunks (chunk-granular mode), and
+    /// push each. `family` is moved into the final chunk (the map's
+    /// own key allocation — the flush path clones it only for the
+    /// leading chunks of an oversized flush).
     fn emit(&self, family: String, requests: Vec<Request>, seqs: &mut HashMap<String, u64>) {
         if requests.is_empty() {
             return;
@@ -171,15 +208,38 @@ impl Batcher {
                 0
             }
         };
-        // May block on the family's inflight cap — that is the
+        let cap = if self.chunk_level {
+            self.chunk_caps.get(&family).copied().unwrap_or(usize::MAX).max(1)
+        } else {
+            usize::MAX
+        };
+        // Pushes may block on the family's inflight cap — that is the
         // backpressure path.
-        self.pool.push(BatchJob { family, seq, requests });
+        let mut chunk: u32 = 0;
+        let mut rest = requests;
+        loop {
+            if rest.len() <= cap {
+                self.pool.push(BatchJob { family, seq, chunk, last: true, requests: rest });
+                return;
+            }
+            let tail = rest.split_off(cap);
+            self.pool.push(BatchJob {
+                family: family.clone(),
+                seq,
+                chunk,
+                last: false,
+                requests: rest,
+            });
+            rest = tail;
+            chunk += 1;
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::DepthPolicy;
     use std::sync::mpsc;
     use std::thread;
 
@@ -198,10 +258,13 @@ mod tests {
 
     /// Start a batcher over a single-worker pool and a worker that
     /// forwards every job to the returned channel.
-    fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
+    fn start_with(
+        cfg: ServerConfig,
+        caps: Arc<HashMap<String, usize>>,
+    ) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
         let (req_tx, req_rx) = mpsc::channel();
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
-        let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg);
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg, caps);
         thread::spawn(move || b.run());
         let (job_tx, job_rx) = mpsc::channel();
         thread::spawn(move || {
@@ -214,6 +277,10 @@ mod tests {
             }
         });
         (req_tx, job_rx)
+    }
+
+    fn start(cfg: ServerConfig) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
+        start_with(cfg, Arc::new(HashMap::new()))
     }
 
     #[test]
@@ -229,6 +296,8 @@ mod tests {
         let job = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!(job.family, "edge_cnn");
         assert_eq!(job.seq, 0);
+        assert_eq!(job.chunk, 0);
+        assert!(job.last, "an unsplit flush is its own final chunk");
         assert_eq!(job.requests.len(), 3);
     }
 
@@ -283,6 +352,54 @@ mod tests {
         }
         assert_eq!(cnn_seqs, vec![0, 1], "per-family flush counter");
         assert_eq!(joint_seqs, vec![0]);
+    }
+
+    #[test]
+    fn oversized_flush_splits_into_capacity_chunks() {
+        // max_batch 5 with a family capacity of 2: one flush must emit
+        // chunks (seq 0, chunk 0..=2) of sizes 2/2/1, `last` only on
+        // the final one.
+        let mut caps = HashMap::new();
+        caps.insert("edge_lstm".to_string(), 2usize);
+        let cfg = ServerConfig { max_batch: 5, batch_timeout_us: 1_000_000, ..Default::default() };
+        let (tx, jobs) = start_with(cfg, Arc::new(caps));
+        let mut keep = Vec::new();
+        for _ in 0..5 {
+            let (r, rx) = req("edge_lstm");
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            let j = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+            got.push((j.seq, j.chunk, j.last, j.requests.len()));
+        }
+        assert_eq!(
+            got,
+            vec![(0, 0, false, 2), (0, 1, false, 2), (0, 2, true, 1)],
+            "capacity-sized chunks, shared seq, last flag on the final chunk"
+        );
+    }
+
+    #[test]
+    fn job_granular_mode_emits_oversized_flushes_whole() {
+        let mut caps = HashMap::new();
+        caps.insert("edge_lstm".to_string(), 2usize);
+        let cfg = ServerConfig {
+            max_batch: 5,
+            batch_timeout_us: 1_000_000,
+            chunk_level: false,
+            ..Default::default()
+        };
+        let (tx, jobs) = start_with(cfg, Arc::new(caps));
+        let mut keep = Vec::new();
+        for _ in 0..5 {
+            let (r, rx) = req("edge_lstm");
+            keep.push(rx);
+            tx.send(r).unwrap();
+        }
+        let j = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!((j.seq, j.chunk, j.last, j.requests.len()), (0, 0, true, 5));
     }
 
     #[test]

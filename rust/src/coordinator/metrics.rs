@@ -17,13 +17,21 @@
 //!   routing it stays pinned (set size == 1); with a reorder buffer
 //!   (`reorder_depth >= 2`) several workers appear even for a single
 //!   hot family — the intra-family parallelism witness.
-//! * `fifo_violations` — counts every job whose per-family sequence
-//!   number ran *backwards* ([`Metrics::record_job_order`], recorded
-//!   at *delivery*, where clients observe order). The batcher stamps
-//!   jobs 0, 1, 2, … per family; the family lease (or the reorder
-//!   buffer's sequenced completion slots) must keep deliveries
-//!   non-decreasing (oversized-job chunks legitimately repeat a seq),
-//!   so any nonzero value is an ordering bug.
+//! * `fifo_violations` — counts every chunk whose per-family
+//!   `(flush seq, chunk seq)` key failed to advance
+//!   ([`Metrics::record_job_order`], recorded at *delivery*, where
+//!   clients observe order). The batcher stamps flushes 0, 1, 2, … per
+//!   family and chunks 0, 1, 2, … within a flush, and every chunk is
+//!   delivered exactly once, so deliveries must be **strictly
+//!   increasing** in lexicographic `(seq, chunk)` order — a repeated
+//!   key means a chunk was delivered twice, which is as much an
+//!   ordering bug as running backwards. Any nonzero value is a bug.
+//! * `depth_by_family` (snapshot-only) — the high watermark of the
+//!   per-family concurrency the executor pool granted, filled in by
+//!   `ServerHandle::metrics` from the pool's gauges: the adaptive
+//!   reorder depth's observability (hot families widen, cold families
+//!   stay at the lease depth of 1). Empty in bare `Metrics`
+//!   snapshots.
 
 use crate::util::stats;
 use std::collections::{BTreeMap, BTreeSet};
@@ -43,7 +51,7 @@ struct Inner {
     sim_energy_j: f64,
     sim_latency_s: f64,
     workers_by_family: BTreeMap<String, BTreeSet<usize>>,
-    last_seq_by_family: BTreeMap<String, u64>,
+    last_seq_by_family: BTreeMap<String, (u64, u32)>,
     fifo_violations: u64,
 }
 
@@ -82,9 +90,16 @@ pub struct Snapshot {
     /// Which executor workers ran each family's jobs, sorted by
     /// family; the stealing pool's load-balance witness.
     pub workers_by_family: Vec<(String, Vec<usize>)>,
-    /// Jobs observed with a per-family sequence number lower than an
-    /// already-executed one. Must be zero — FIFO ordering invariant.
+    /// Chunks observed with a per-family `(flush seq, chunk seq)` key
+    /// lower than an already-delivered one. Must be zero — FIFO
+    /// ordering invariant.
     pub fifo_violations: u64,
+    /// High watermark of the per-family concurrency the executor pool
+    /// granted (adaptive reorder depth gauge), sorted by family.
+    /// Filled by `ServerHandle::metrics` from the pool; populated only
+    /// under the adaptive policy (a static depth needs no per-family
+    /// bookkeeping), and empty in bare `Metrics` snapshots.
+    pub depth_by_family: Vec<(String, usize)>,
 }
 
 impl Metrics {
@@ -118,25 +133,27 @@ impl Metrics {
         m.workers_by_family.entry(family.to_string()).or_default().insert(worker);
     }
 
-    /// Record the per-family flush sequence number of a job whose
+    /// Record the per-family `(flush seq, chunk seq)` of a chunk whose
     /// responses are being delivered. Called at delivery time — the
     /// point where clients observe order — so it checks exactly the
     /// FIFO contract both the family lease and the reorder buffer
-    /// promise. Chunks of one oversized job share a `seq`, so the
-    /// check is non-decreasing, not strictly increasing.
-    pub fn record_job_order(&self, family: &str, seq: u64) {
+    /// promise: every chunk delivered exactly once, in strictly
+    /// increasing lexicographic `(seq, chunk)` order (a repeated key
+    /// would mean duplicate delivery).
+    pub fn record_job_order(&self, family: &str, seq: u64, chunk: u32) {
         let mut guard = self.inner.lock().expect("metrics lock");
         let m = &mut *guard;
+        let key = (seq, chunk);
         match m.last_seq_by_family.get_mut(family) {
             Some(last) => {
-                if seq < *last {
+                if key <= *last {
                     m.fifo_violations += 1;
                 } else {
-                    *last = seq;
+                    *last = key;
                 }
             }
             None => {
-                m.last_seq_by_family.insert(family.to_string(), seq);
+                m.last_seq_by_family.insert(family.to_string(), key);
             }
         }
     }
@@ -176,6 +193,7 @@ impl Metrics {
                 .map(|(k, v)| (k.clone(), v.iter().copied().collect()))
                 .collect(),
             fifo_violations: m.fifo_violations,
+            depth_by_family: Vec::new(),
         }
     }
 }
@@ -204,7 +222,7 @@ mod tests {
             0.01,
         );
         m.record_job("edge_cnn", 0);
-        m.record_job_order("edge_cnn", 0);
+        m.record_job_order("edge_cnn", 0, 0);
         m.record_rejection();
         let s = m.snapshot();
         assert_eq!(s.completed, 2);
@@ -243,17 +261,38 @@ mod tests {
     #[test]
     fn fifo_violations_detect_reordering() {
         let m = Metrics::default();
-        m.record_job_order("edge_cnn", 0);
-        m.record_job_order("edge_cnn", 1);
-        // Chunks of one oversized job repeat a seq: not a violation.
-        m.record_job_order("edge_cnn", 1);
+        m.record_job_order("edge_cnn", 0, 0);
+        m.record_job_order("edge_cnn", 1, 0);
         assert_eq!(m.snapshot().fifo_violations, 0);
-        // Going backwards is.
-        m.record_job_order("edge_cnn", 0);
+        // Keys are unique per delivery: a repeat means a chunk was
+        // delivered twice — a violation, not a benign re-record.
+        m.record_job_order("edge_cnn", 1, 0);
         assert_eq!(m.snapshot().fifo_violations, 1);
+        // Going backwards is one too.
+        m.record_job_order("edge_cnn", 0, 0);
+        assert_eq!(m.snapshot().fifo_violations, 2);
         // Other families are tracked independently.
-        m.record_job_order("joint", 0);
+        m.record_job_order("joint", 0, 0);
+        assert_eq!(m.snapshot().fifo_violations, 2);
+    }
+
+    #[test]
+    fn fifo_violations_detect_chunk_reordering() {
+        let m = Metrics::default();
+        // Chunks of one flush deliver in chunk order, then the next
+        // flush restarts at chunk 0: all non-decreasing.
+        m.record_job_order("edge_lstm", 0, 0);
+        m.record_job_order("edge_lstm", 0, 1);
+        m.record_job_order("edge_lstm", 1, 0);
+        assert_eq!(m.snapshot().fifo_violations, 0);
+        // A stale chunk of the earlier flush after the next flush
+        // started delivering runs the key backwards.
+        m.record_job_order("edge_lstm", 0, 2);
         assert_eq!(m.snapshot().fifo_violations, 1);
+        // Out-of-order chunks within one flush are violations too.
+        m.record_job_order("joint", 0, 1);
+        m.record_job_order("joint", 0, 0);
+        assert_eq!(m.snapshot().fifo_violations, 2);
     }
 
     #[test]

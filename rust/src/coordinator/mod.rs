@@ -35,9 +35,16 @@
 //! static baseline for benchmarking. With
 //! `ServerConfig::reorder_depth >= 2` the lease widens: several
 //! workers drain one hot family concurrently and a per-family
-//! sequence-numbered reorder buffer ([`pool::ReorderBuffer`]) restores
-//! client-observed FIFO at delivery — intra-family parallelism without
-//! giving up the ordering contract.
+//! `(flush seq, chunk seq)`-keyed reorder buffer
+//! ([`pool::ReorderBuffer`]) restores client-observed FIFO at
+//! delivery — intra-family parallelism without giving up the ordering
+//! contract. Since PR 4 the unit of dispatch is one capacity-sized
+//! **chunk** (the batcher pre-splits oversized flushes), so even a
+//! single giant job spreads across the pool, and
+//! `ServerConfig::reorder_depth_max` makes the per-family depth
+//! **adaptive**: derived from the backlog EWMA at dispatch, so cold
+//! families keep the cheap lease while hot families widen
+//! automatically (`Snapshot::depth_by_family` is the gauge).
 //!
 //! All workers execute against a single shared `Arc<Runtime>` (the
 //! manifest is parsed once per server) and keep per-worker scratch so
@@ -50,7 +57,7 @@ pub mod server;
 
 pub use batcher::{BatchJob, Batcher};
 pub use metrics::Metrics;
-pub use pool::{ExecutorPool, ReorderBuffer};
+pub use pool::{DepthPolicy, ExecutorPool, ReorderBuffer};
 pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
 
 use crate::util::fnv1a_64;

@@ -1,28 +1,47 @@
-//! Work-stealing executor pool: per-family FIFO job queues with a
-//! family-lease discipline, plus the response [`ReorderBuffer`] that
-//! unlocks intra-family parallelism.
+//! Work-stealing executor pool: per-family FIFO work lists with a
+//! family-lease discipline, per-family **adaptive concurrency**, and
+//! the chunk-sequenced response [`ReorderBuffer`] that unlocks
+//! intra-family — and, since the lists went chunk-granular,
+//! intra-*job* — parallelism.
 //!
 //! The paper's core serving lesson is that static assignment of
 //! heterogeneous work leaves capacity idle; PR 1's software pool
 //! reproduced exactly that with its fixed family-hash fan-out (one
 //! `SyncSender` per worker). This pool replaces it:
 //!
-//! * every family gets its own FIFO queue of flushed [`BatchJob`]s;
+//! * every family gets its own FIFO work list of flushed [`BatchJob`]s
+//!   — since PR 4 these are **chunks** (the batcher splits an
+//!   oversized flush into capacity-sized pieces up front), so the unit
+//!   of dispatch is one executable chunk, not one arbitrarily large
+//!   job;
 //! * a worker takes a **hold** on a family — it drains that family's
-//!   queue and releases the hold when the queue is empty. In the
-//!   default lease discipline at most one worker holds a family at a
-//!   time, so same-family jobs execute strictly in flush order (the
-//!   FIFO contract) while cross-family work rebalances onto whichever
+//!   list and releases the hold when the list is empty. In the default
+//!   lease discipline at most one worker holds a family at a time, so
+//!   same-family chunks execute strictly in flush order (the FIFO
+//!   contract) while cross-family work rebalances onto whichever
 //!   worker is idle;
-//! * with `reorder_depth >= 2` (stealing mode only), up to
-//!   `reorder_depth` workers may hold **one** family concurrently:
-//!   jobs are still *popped* in flush order, but they *complete* in
-//!   any order, and the server restores client-observed FIFO through
-//!   the per-family sequence-numbered completion slots of a
-//!   [`ReorderBuffer`]. This is what lets a hot family's backlog use
-//!   the whole pool instead of serializing behind one lease
+//! * with a [`DepthPolicy`] allowing more than one holder (stealing
+//!   mode only), up to that many workers may hold **one** family
+//!   concurrently: chunks are still *popped* in flush order, but they
+//!   *complete* in any order, and the server restores client-observed
+//!   FIFO through the per-family `(job seq, chunk seq)`-keyed
+//!   completion slots of a [`ReorderBuffer`]. This is what lets a hot
+//!   family's backlog — or a single oversized job's chunks — use the
+//!   whole pool instead of serializing behind one lease
 //!   (`Snapshot::fifo_violations == 0` remains the invariant — checked
 //!   at delivery, where clients observe order);
+//! * the per-family concurrency is either a static knob
+//!   ([`DepthPolicy::Static`], the `reorder_depth` config key) or
+//!   **adaptive** ([`DepthPolicy::Adaptive`], `reorder_depth_max`):
+//!   each push samples the family's queue length into an EWMA, and the
+//!   granted depth is `ceil(ewma)` clamped to `[1, max]` — cold
+//!   families keep the cheap single-holder lease, hot families widen
+//!   automatically as backlog builds. This is the serving-side
+//!   analogue of Mensa's per-layer accelerator choice: concurrency
+//!   follows the observed load instead of a one-size-for-all setting.
+//!   The granted depth per family is exported as a high-watermark
+//!   gauge ([`ExecutorPool::depth_by_family`],
+//!   `Snapshot::depth_by_family`);
 //! * an idle worker waits on a condvar; when a family becomes ready it
 //!   is handed directly to the longest-idle worker (FIFO idle queue),
 //!   which rotates a hot family across the pool instead of re-pinning
@@ -32,21 +51,23 @@
 //!   serving pool sizes; per-worker parkers are the upgrade path if
 //!   worker counts grow;
 //! * `push` applies backpressure per family: at most
-//!   [`FAMILY_INFLIGHT_CAP`] jobs may sit queued per family before the
-//!   batcher blocks, mirroring PR 1's bounded per-worker channels so
-//!   the router queue (and ultimately `infer()`) still absorbs and
-//!   rejects overload.
+//!   `max(`[`FAMILY_INFLIGHT_CAP`]`, 2 × max depth)` chunks may sit
+//!   queued per family before the batcher blocks — the bound scales
+//!   with the allowed fan-out so a widened family can actually fill
+//!   its workers, while the router queue (and ultimately `infer()`)
+//!   still absorbs and rejects overload.
 //!
 //! **Static mode** (`work_stealing = false` in `ServerConfig`) keeps
 //! the PR 1 discipline — a family is only ever offered to
-//! [`worker_for_family`]'s worker — and exists as the measured
-//! baseline for `benches/hotpath_micro.rs` and as a debugging fallback.
+//! [`worker_for_family`]'s worker, with a forced single-holder lease —
+//! and exists as the measured baseline for `benches/hotpath_micro.rs`
+//! and as a debugging fallback.
 //!
 //! Shutdown: each batcher shard calls [`ExecutorPool::producer_done`]
 //! after flushing its pending batches; when the last producer signs
 //! off the pool closes and workers exit once every queue is drained.
 //! Job execution in the server is wrapped in `catch_unwind`, so a
-//! panicking job surfaces as per-request errors instead of a dead
+//! panicking chunk surfaces as per-request errors instead of a dead
 //! worker stranding its held family queues.
 
 use super::batcher::BatchJob;
@@ -54,17 +75,42 @@ use super::worker_for_family;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Flushed-but-unexecuted jobs a single family may accumulate before
-/// `push` blocks (the batcher-side backpressure bound, matching PR 1's
-/// bounded per-worker channels).
+/// Minimum flushed-but-unexecuted chunks a single family may
+/// accumulate before `push` blocks (the batcher-side backpressure
+/// bound, matching PR 1's bounded per-worker channels). Pools that
+/// allow deeper family concurrency scale this bound to `2 × max depth`
+/// so the fan-out can stay fed.
 pub const FAMILY_INFLIGHT_CAP: usize = 2;
+
+/// EWMA smoothing for the backlog signal that drives
+/// [`DepthPolicy::Adaptive`]: each push folds the family's queue
+/// length in with this weight.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// How many workers may drain one family concurrently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepthPolicy {
+    /// A fixed per-family concurrency: `1` is the family-lease
+    /// discipline, `>= 2` requires the caller to reorder completions
+    /// (the `reorder_depth` config knob).
+    Static(usize),
+    /// Derive each family's concurrency from its observed backlog
+    /// (EWMA of queue length sampled at dispatch), clamped to
+    /// `[1, max]` (the `reorder_depth_max` config knob). Cold families
+    /// behave exactly like the lease; hot families widen as their
+    /// backlog builds.
+    Adaptive {
+        /// Upper clamp on the granted per-family concurrency.
+        max: usize,
+    },
+}
 
 /// One family's pending work.
 struct FamilyQueue {
     jobs: VecDeque<BatchJob>,
-    /// Workers currently holding this family (popping its jobs). The
-    /// lease discipline caps this at one; reorder mode at
-    /// `family_concurrency`.
+    /// Workers currently holding this family (popping its chunks). The
+    /// lease discipline caps this at one; wider policies at the
+    /// family's granted depth.
     holders: Vec<usize>,
     /// Whether the family is sitting in a ready queue (has jobs,
     /// waiting for an additional worker).
@@ -81,6 +127,16 @@ struct PoolState {
     assigned: Vec<Option<String>>,
     /// Workers waiting for work, longest-idle first.
     idle: VecDeque<usize>,
+    /// Per-family EWMA of the queue length, sampled at each push (the
+    /// adaptive-depth signal; static policies never touch it).
+    /// Survives queue drain/removal so a hot family keeps its history
+    /// across momentary empties; bounded by the family set (the server
+    /// rejects unknown families at `infer()`).
+    ewma: HashMap<String, f64>,
+    /// High watermark of the depth granted to each family — the
+    /// observability gauge behind `Snapshot::depth_by_family`.
+    /// Maintained by the adaptive policy only.
+    depth_hwm: BTreeMap<String, usize>,
     /// Producers (batcher shards) still alive.
     producers: usize,
     closed: bool,
@@ -96,31 +152,32 @@ pub struct ExecutorPool {
     space: Condvar,
     workers: usize,
     stealing: bool,
-    /// Max workers that may drain one family concurrently: 1 under the
-    /// lease discipline, `reorder_depth` when the server runs a
-    /// reorder buffer.
-    family_concurrency: usize,
+    /// Per-family concurrency policy. Static mode (no stealing) forces
+    /// `Static(1)`.
+    depth: DepthPolicy,
 }
 
 impl ExecutorPool {
     /// Create a pool for `workers` executor threads fed by `producers`
     /// batcher shards. `stealing` selects work-stealing (default) vs
-    /// the static family-hash baseline. `reorder_depth >= 2` (stealing
-    /// only) lets that many workers drain one family concurrently —
-    /// callers must then reorder completions before replying (see
-    /// [`ReorderBuffer`]); any smaller value keeps the family-lease
-    /// discipline.
-    pub fn new(workers: usize, stealing: bool, producers: usize, reorder_depth: usize) -> Self {
+    /// the static family-hash baseline. `depth` sets how many workers
+    /// may drain one family concurrently — any policy allowing more
+    /// than one requires the caller to reorder completions before
+    /// replying (see [`ReorderBuffer`]); without stealing the policy
+    /// is forced to the single-holder lease.
+    pub fn new(workers: usize, stealing: bool, producers: usize, depth: DepthPolicy) -> Self {
         assert!(workers > 0, "executor pool needs at least one worker");
         assert!(producers > 0, "executor pool needs at least one producer");
         let ready_queues = if stealing { 1 } else { workers };
-        let family_concurrency = if stealing { reorder_depth.max(1) } else { 1 };
+        let depth = if stealing { depth } else { DepthPolicy::Static(1) };
         Self {
             state: Mutex::new(PoolState {
                 queues: HashMap::new(),
                 ready: (0..ready_queues).map(|_| VecDeque::new()).collect(),
                 assigned: vec![None; workers],
                 idle: VecDeque::new(),
+                ewma: HashMap::new(),
+                depth_hwm: BTreeMap::new(),
                 producers,
                 closed: false,
             }),
@@ -128,7 +185,7 @@ impl ExecutorPool {
             space: Condvar::new(),
             workers,
             stealing,
-            family_concurrency,
+            depth,
         }
     }
 
@@ -137,31 +194,103 @@ impl ExecutorPool {
         self.stealing
     }
 
-    /// Max workers that may drain one family concurrently (1 = lease
-    /// discipline).
+    /// Max workers that may ever drain one family concurrently (1 =
+    /// lease discipline): the static depth, or the adaptive clamp. The
+    /// server uses `> 1` to decide whether a reorder buffer is needed.
     pub fn family_concurrency(&self) -> usize {
-        self.family_concurrency
+        match self.depth {
+            DepthPolicy::Static(d) => d.max(1),
+            DepthPolicy::Adaptive { max } => max.max(1),
+        }
     }
 
-    /// Enqueue a flushed job, blocking while the family is at its
+    /// Depth currently granted to `family` under the policy. Static
+    /// policies never touch the EWMA state; the adaptive policy reads
+    /// the family's backlog average (absent → cold → lease depth).
+    fn allowed_for(&self, st: &PoolState, family: &str) -> usize {
+        match self.depth {
+            DepthPolicy::Static(d) => d.max(1),
+            DepthPolicy::Adaptive { max } => {
+                let ewma = st.ewma.get(family).copied().unwrap_or(1.0);
+                (ewma.ceil() as usize).clamp(1, max.max(1))
+            }
+        }
+    }
+
+    /// Queued chunks one family may accumulate before `push` blocks.
+    fn inflight_cap(&self) -> usize {
+        FAMILY_INFLIGHT_CAP.max(self.family_concurrency().saturating_mul(2))
+    }
+
+    /// Ready-queue index for a family: the one shared queue when
+    /// stealing, the family's hash worker otherwise.
+    fn ready_queue(&self, family: &str) -> usize {
+        if self.stealing {
+            0
+        } else {
+            worker_for_family(family, self.workers)
+        }
+    }
+
+    /// High watermark of the per-family concurrency this pool has
+    /// granted, sorted by family — the [`DepthPolicy::Adaptive`]
+    /// observability witness that a hot family widened while cold
+    /// families kept the lease. Empty under [`DepthPolicy::Static`],
+    /// whose constant depth needs no per-family bookkeeping (and the
+    /// hot path skips it).
+    pub fn depth_by_family(&self) -> Vec<(String, usize)> {
+        let st = self.state.lock().expect("pool lock");
+        st.depth_hwm.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Enqueue a flushed chunk, blocking while the family is at its
     /// inflight cap. Called by the batcher shards only.
     pub fn push(&self, job: BatchJob) {
-        let mut st = self.state.lock().expect("pool lock");
+        let cap = self.inflight_cap();
+        let mut guard = self.state.lock().expect("pool lock");
         loop {
-            let queued = st.queues.get(&job.family).map_or(0, |q| q.jobs.len());
-            if queued < FAMILY_INFLIGHT_CAP {
+            let queued = guard.queues.get(&job.family).map_or(0, |q| q.jobs.len());
+            if queued < cap {
                 break;
             }
-            st = self.space.wait(st).expect("pool lock");
+            guard = self.space.wait(guard).expect("pool lock");
         }
-        debug_assert!(!st.closed, "push after close");
+        debug_assert!(!guard.closed, "push after close");
+        let st = &mut *guard;
+        // Adaptive policy only: fold the queue length this push brings
+        // the family to into its backlog EWMA (sampled at dispatch)
+        // and record the granted depth (gauge, high watermark). Static
+        // policies skip the bookkeeping entirely — their depth is
+        // constant, and this runs under the contended pool lock.
+        // Clone-free except the first push of a family's lifetime.
+        let allowed = match self.depth {
+            DepthPolicy::Static(d) => d.max(1),
+            DepthPolicy::Adaptive { .. } => {
+                let sample =
+                    st.queues.get(&job.family).map_or(0, |q| q.jobs.len()) as f64 + 1.0;
+                match st.ewma.get_mut(&job.family) {
+                    Some(e) => *e = EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * *e,
+                    None => {
+                        st.ewma.insert(job.family.clone(), sample);
+                    }
+                }
+                let granted = self.allowed_for(st, &job.family);
+                match st.depth_hwm.get_mut(&job.family) {
+                    Some(h) => *h = (*h).max(granted),
+                    None => {
+                        st.depth_hwm.insert(job.family.clone(), granted);
+                    }
+                }
+                granted
+            }
+        };
         // Enqueue, cloning the family name only when a dispatch is
-        // actually needed: in the steady state (family at its
-        // concurrency cap or already queued ready) a push is
-        // clone-free — the holders drain the backlog.
+        // actually needed: in the steady state (family at its granted
+        // depth or already queued ready) a push is clone-free — the
+        // holders drain the backlog.
         let family = match st.queues.get_mut(&job.family) {
             Some(q) => {
-                let dispatch = q.holders.len() < self.family_concurrency && !q.ready_queued;
+                let dispatch = q.holders.len() < allowed && !q.ready_queued;
                 let family = dispatch.then(|| job.family.clone());
                 q.jobs.push_back(job);
                 family
@@ -196,7 +325,7 @@ impl ExecutorPool {
             }
             None => {
                 st.queues.get_mut(&family).expect("just inserted").ready_queued = true;
-                let rq = if self.stealing { 0 } else { worker_for_family(&family, self.workers) };
+                let rq = self.ready_queue(&family);
                 st.ready[rq].push_back(family);
             }
         }
@@ -209,20 +338,22 @@ impl ExecutorPool {
     /// [`ExecutorPool::next_job`] until that returns `None`.
     pub fn take_family(&self, w: usize) -> Option<String> {
         debug_assert!(w < self.workers);
-        let mut st = self.state.lock().expect("pool lock");
+        let mut guard = self.state.lock().expect("pool lock");
         loop {
+            let st = &mut *guard;
             if let Some(family) = st.assigned[w].take() {
                 st.idle.retain(|&x| x != w);
                 return Some(family);
             }
             let rq = if self.stealing { 0 } else { w };
             while let Some(family) = st.ready[rq].pop_front() {
-                // In reorder mode another holder may have drained (or
-                // be over-holding) the family since it was queued
-                // ready; skip such entries instead of double-holding.
+                // Another holder may have drained (or be over-holding)
+                // the family since it was queued ready; skip such
+                // entries instead of double-holding.
+                let allowed = self.allowed_for(st, &family);
                 let Some(q) = st.queues.get_mut(&family) else { continue };
                 q.ready_queued = false;
-                if q.jobs.is_empty() || q.holders.len() >= self.family_concurrency {
+                if q.jobs.is_empty() || q.holders.len() >= allowed {
                     if q.jobs.is_empty() && q.holders.is_empty() {
                         st.queues.remove(&family);
                     }
@@ -238,33 +369,32 @@ impl ExecutorPool {
             if !st.idle.contains(&w) {
                 st.idle.push_back(w);
             }
-            st = self.work.wait(st).expect("pool lock");
+            guard = self.work.wait(guard).expect("pool lock");
         }
     }
 
-    /// Pop the next job of a family held by worker `w`, or release the
-    /// hold and return `None` when the queue is empty. Pops and
-    /// releases serialize on the pool lock, so a job can never be
-    /// popped by two workers and same-family jobs always *start* in
+    /// Pop the next chunk of a family held by worker `w`, or release
+    /// the hold and return `None` when the queue is empty. Pops and
+    /// releases serialize on the pool lock, so a chunk can never be
+    /// popped by two workers and same-family chunks always *start* in
     /// push order; completion order is the caller's business (lease
-    /// mode: completion == start order; reorder mode: restored by the
-    /// [`ReorderBuffer`]).
+    /// mode: completion == start order; wider policies: restored by
+    /// the [`ReorderBuffer`]).
     pub fn next_job(&self, family: &str, w: usize) -> Option<BatchJob> {
-        let mut st = self.state.lock().expect("pool lock");
+        let mut guard = self.state.lock().expect("pool lock");
+        let st = &mut *guard;
+        let allowed = self.allowed_for(st, family);
         let q = st.queues.get_mut(family).expect("held family has a queue");
         debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
         match q.jobs.pop_front() {
             Some(job) => {
                 // Backlog remains and concurrency headroom exists:
-                // offer the family to another worker (reorder mode's
+                // offer the family to another worker (the multi-holder
                 // fan-out; a no-op under the lease discipline where
-                // holders.len() == family_concurrency == 1).
-                if !q.jobs.is_empty()
-                    && q.holders.len() < self.family_concurrency
-                    && !q.ready_queued
-                {
+                // holders.len() == allowed == 1).
+                if !q.jobs.is_empty() && q.holders.len() < allowed && !q.ready_queued {
                     q.ready_queued = true;
-                    let rq = if self.stealing { 0 } else { worker_for_family(family, self.workers) };
+                    let rq = self.ready_queue(family);
                     st.ready[rq].push_back(family.to_string());
                     self.work.notify_all();
                 }
@@ -294,33 +424,34 @@ impl ExecutorPool {
         }
     }
 
-    /// Jobs currently queued (not yet popped by a worker), across all
-    /// families. Diagnostics/tests only.
+    /// Chunks currently queued (not yet popped by a worker), across
+    /// all families. Diagnostics/tests only.
     pub fn queued_jobs(&self) -> usize {
         let st = self.state.lock().expect("pool lock");
         st.queues.values().map(|q| q.jobs.len()).sum()
     }
 }
 
-/// Per-family sequence-numbered completion slots: restores
-/// client-observed FIFO when multiple workers drain one family
-/// concurrently (`reorder_depth >= 2`).
+/// Per-family `(job seq, chunk seq)`-keyed completion slots: restores
+/// client-observed FIFO when multiple workers drain one family — or
+/// one oversized job's chunks — concurrently.
 ///
-/// Jobs are *popped* from the pool in flush order but *complete* in
-/// any order; each completed job is submitted here under its
-/// per-family sequence number, and the buffer invokes the delivery
-/// callback for every job that is now contiguous with the last
-/// delivered one — in sequence order, **under that family's slot
+/// Chunks are *popped* from the pool in flush order but *complete* in
+/// any order; each completed chunk is submitted here under its
+/// per-family `(seq, chunk)` key plus a `last` flag marking its job's
+/// final chunk, and the buffer invokes the delivery callback for every
+/// chunk that is now contiguous with the last delivered one — in
+/// lexicographic `(seq, chunk)` order, **under that family's slot
 /// lock**, so two workers finishing one family out of order can never
 /// interleave its deliveries, while deliveries for *different*
 /// families proceed concurrently (the outer map lock is held only for
-/// the slot lookup, never across a delivery). In the steady state
-/// about `family_concurrency` jobs of a family sit
-/// popped-but-undelivered; while the oldest sequence is still
-/// *executing*, later holders can park more completions than that, but
-/// the window is self-limiting — execution always terminates (panics
-/// are caught and still fill their slot), so the buffer drains within
-/// one job's execution time and never stalls indefinitely.
+/// the slot lookup, never across a delivery). The cursor advances to
+/// `(seq, chunk + 1)` after an intermediate chunk and to `(seq + 1,
+/// 0)` after a `last` chunk, so the buffer needs no up-front chunk
+/// count — it learns each job's length from the flags, which every
+/// chunk eventually supplies (execution always terminates: panics are
+/// caught and still fill their slot), so the buffer drains within one
+/// chunk's execution time and never stalls indefinitely.
 ///
 /// Items are moved in and moved out — the buffer never clones a
 /// response.
@@ -329,10 +460,11 @@ pub struct ReorderBuffer<T> {
 }
 
 struct FamilySlots<T> {
-    /// Next sequence number owed to clients.
-    next: u64,
-    /// Completed-but-undeliverable jobs, keyed by sequence number.
-    done: BTreeMap<u64, T>,
+    /// Next `(job seq, chunk seq)` owed to clients.
+    next: (u64, u32),
+    /// Completed-but-undeliverable chunks, keyed by `(seq, chunk)`;
+    /// the payload carries the job-final flag.
+    done: BTreeMap<(u64, u32), (bool, T)>,
 }
 
 impl<T> Default for ReorderBuffer<T> {
@@ -342,16 +474,25 @@ impl<T> Default for ReorderBuffer<T> {
 }
 
 impl<T> ReorderBuffer<T> {
-    /// Create an empty buffer (all families start at sequence 0).
+    /// Create an empty buffer (all families start at `(0, 0)`).
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Submit the completed `item` for `(family, seq)` and deliver, in
-    /// sequence order, every item that is now contiguous with the
-    /// delivery cursor. The callback runs under the family's slot lock
-    /// — keep it to channel sends and metrics.
-    pub fn submit(&self, family: &str, seq: u64, item: T, mut deliver: impl FnMut(T)) {
+    /// Submit the completed `item` for `(family, seq, chunk)` —
+    /// `last` marks the final chunk of job `seq` — and deliver, in
+    /// `(seq, chunk)` order, every item that is now contiguous with
+    /// the delivery cursor. The callback runs under the family's slot
+    /// lock — keep it to channel sends and metrics.
+    pub fn submit(
+        &self,
+        family: &str,
+        seq: u64,
+        chunk: u32,
+        last: bool,
+        item: T,
+        mut deliver: impl FnMut(T),
+    ) {
         let slot = {
             let mut fams = self.families.lock().expect("reorder lock");
             // The steady state (family already tracked) is clone-free;
@@ -360,23 +501,26 @@ impl<T> ReorderBuffer<T> {
                 Some(slot) => Arc::clone(slot),
                 None => {
                     let slot =
-                        Arc::new(Mutex::new(FamilySlots { next: 0, done: BTreeMap::new() }));
+                        Arc::new(Mutex::new(FamilySlots { next: (0, 0), done: BTreeMap::new() }));
                     fams.insert(family.to_string(), Arc::clone(&slot));
                     slot
                 }
             }
         };
         let mut slots = slot.lock().expect("reorder slot lock");
-        debug_assert!(seq >= slots.next, "sequence {seq} already delivered");
-        let prev = slots.done.insert(seq, item);
-        debug_assert!(prev.is_none(), "sequence {seq} submitted twice");
-        while let Some(ready) = slots.done.remove(&slots.next) {
-            slots.next += 1;
+        let key = (seq, chunk);
+        debug_assert!(key >= slots.next, "chunk {key:?} already delivered");
+        let prev = slots.done.insert(key, (last, item));
+        debug_assert!(prev.is_none(), "chunk {key:?} submitted twice");
+        loop {
+            let cursor = slots.next;
+            let Some((is_last, ready)) = slots.done.remove(&cursor) else { break };
+            slots.next = if is_last { (cursor.0 + 1, 0) } else { (cursor.0, cursor.1 + 1) };
             deliver(ready);
         }
     }
 
-    /// Completed jobs waiting on an earlier sequence number, across
+    /// Completed chunks waiting on an earlier `(seq, chunk)`, across
     /// all families. Diagnostics/tests only.
     pub fn pending(&self) -> usize {
         let fams = self.families.lock().expect("reorder lock");
@@ -394,7 +538,7 @@ mod tests {
     use std::time::{Duration, Instant};
 
     fn job(family: &str, seq: u64) -> BatchJob {
-        BatchJob { family: family.into(), seq, requests: Vec::new() }
+        BatchJob { family: family.into(), seq, chunk: 0, last: true, requests: Vec::new() }
     }
 
     /// Spawn a worker loop that forwards (worker, job) pairs to a
@@ -420,7 +564,7 @@ mod tests {
 
     #[test]
     fn same_family_jobs_arrive_in_push_order() {
-        let pool = Arc::new(ExecutorPool::new(3, true, 1, 1));
+        let pool = Arc::new(ExecutorPool::new(3, true, 1, DepthPolicy::Static(1)));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..3).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -441,7 +585,7 @@ mod tests {
 
     #[test]
     fn spaced_jobs_rotate_across_idle_workers() {
-        let pool = Arc::new(ExecutorPool::new(4, true, 1, 1));
+        let pool = Arc::new(ExecutorPool::new(4, true, 1, DepthPolicy::Static(1)));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..4).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -466,7 +610,7 @@ mod tests {
 
     #[test]
     fn static_mode_pins_families_to_their_hash_worker() {
-        let pool = Arc::new(ExecutorPool::new(2, false, 1, 1));
+        let pool = Arc::new(ExecutorPool::new(2, false, 1, DepthPolicy::Static(1)));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -491,7 +635,7 @@ mod tests {
 
     #[test]
     fn close_drains_pending_queues() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
         pool.push(job("a", 0));
         pool.push(job("b", 0));
         assert_eq!(pool.queued_jobs(), 2);
@@ -509,7 +653,7 @@ mod tests {
 
     #[test]
     fn push_blocks_at_family_cap_until_a_worker_drains() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, 1));
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
         for seq in 0..FAMILY_INFLIGHT_CAP as u64 {
             pool.push(job("fam", seq));
         }
@@ -538,9 +682,9 @@ mod tests {
 
     #[test]
     fn lease_discipline_blocks_second_worker_on_same_family() {
-        // reorder_depth <= 1: while worker 0 holds the family, worker 1
-        // must not receive its queued backlog.
-        let pool = Arc::new(ExecutorPool::new(2, true, 1, 1));
+        // Static(1): while worker 0 holds the family, worker 1 must
+        // not receive its queued backlog.
+        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Static(1)));
         pool.push(job("hot", 0));
         pool.push(job("hot", 1));
         let p0 = Arc::clone(&pool);
@@ -578,7 +722,7 @@ mod tests {
 
     #[test]
     fn reorder_mode_lets_two_workers_drain_one_family() {
-        let pool = Arc::new(ExecutorPool::new(2, true, 1, 2));
+        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Static(2)));
         assert_eq!(pool.family_concurrency(), 2);
         pool.push(job("hot", 0));
         pool.push(job("hot", 1));
@@ -621,16 +765,72 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_depth_widens_with_backlog_and_keeps_cold_families_leased() {
+        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Adaptive { max: 3 }));
+        assert_eq!(pool.family_concurrency(), 3, "adaptive cap is the max concurrency");
+        // No workers yet: the hot family's backlog builds (samples 1,
+        // 2, 3, 4, 5), the EWMA climbs, and the granted depth widens
+        // toward the clamp; a single cold push stays at depth 1.
+        for seq in 0..5 {
+            pool.push(job("hot", seq));
+        }
+        pool.push(job("cold", 0));
+        let depths: std::collections::HashMap<String, usize> =
+            pool.depth_by_family().into_iter().collect();
+        assert!(
+            depths["hot"] >= 2,
+            "backlogged family must widen beyond the lease, got {depths:?}"
+        );
+        assert_eq!(depths["cold"], 1, "cold family keeps the lease discipline");
+        // Drain and shut down cleanly.
+        pool.producer_done();
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        for _ in 0..6 {
+            rx.recv_timeout(RECV).expect("drained job");
+        }
+        for t in workers {
+            t.join().unwrap();
+        }
+        assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
     fn reorder_buffer_restores_sequence_order() {
         let buf = ReorderBuffer::new();
         let mut delivered: Vec<u64> = Vec::new();
-        buf.submit("fam", 2, 2u64, |v| delivered.push(v));
+        buf.submit("fam", 2, 0, true, 2u64, |v| delivered.push(v));
         assert!(delivered.is_empty(), "seq 2 must wait for 0 and 1");
         assert_eq!(buf.pending(), 1);
-        buf.submit("fam", 0, 0u64, |v| delivered.push(v));
+        buf.submit("fam", 0, 0, true, 0u64, |v| delivered.push(v));
         assert_eq!(delivered, vec![0], "seq 0 delivers immediately; 2 still waits");
-        buf.submit("fam", 1, 1u64, |v| delivered.push(v));
+        buf.submit("fam", 1, 0, true, 1u64, |v| delivered.push(v));
         assert_eq!(delivered, vec![0, 1, 2], "seq 1 releases the buffered 2");
+        assert_eq!(buf.pending(), 0);
+    }
+
+    #[test]
+    fn reorder_buffer_orders_chunks_within_and_across_jobs() {
+        // Chunk-granular sequencing: job 0 spans chunks (0,0..=2); job
+        // 1 is a single chunk. Whatever completes first, delivery is
+        // lexicographic (seq, chunk), and the `last` flag advances the
+        // cursor to the next job.
+        let buf = ReorderBuffer::new();
+        let mut got: Vec<(u64, u32)> = Vec::new();
+        buf.submit("fam", 0, 1, false, (0u64, 1u32), |v| got.push(v));
+        assert!(got.is_empty(), "chunk (0,1) must wait for (0,0)");
+        buf.submit("fam", 1, 0, true, (1, 0), |v| got.push(v));
+        assert!(got.is_empty(), "job 1 must wait for all of job 0");
+        assert_eq!(buf.pending(), 2);
+        buf.submit("fam", 0, 0, false, (0, 0), |v| got.push(v));
+        assert_eq!(got, vec![(0, 0), (0, 1)], "contiguous chunks flush together");
+        buf.submit("fam", 0, 2, true, (0, 2), |v| got.push(v));
+        assert_eq!(
+            got,
+            vec![(0, 0), (0, 1), (0, 2), (1, 0)],
+            "the job-final chunk advances delivery to the next job"
+        );
         assert_eq!(buf.pending(), 0);
     }
 
@@ -638,12 +838,12 @@ mod tests {
     fn reorder_buffer_families_are_independent() {
         let buf = ReorderBuffer::new();
         let mut a: Vec<&str> = Vec::new();
-        buf.submit("a", 0, "a0", |v| a.push(v));
+        buf.submit("a", 0, 0, true, "a0", |v| a.push(v));
         assert_eq!(a, vec!["a0"]);
         let mut b: Vec<&str> = Vec::new();
-        buf.submit("b", 1, "b1", |v| b.push(v));
+        buf.submit("b", 1, 0, true, "b1", |v| b.push(v));
         assert!(b.is_empty(), "family b's seq 0 is still outstanding");
-        buf.submit("b", 0, "b0", |v| b.push(v));
+        buf.submit("b", 0, 0, true, "b0", |v| b.push(v));
         assert_eq!(b, vec!["b0", "b1"]);
     }
 
@@ -658,7 +858,13 @@ mod tests {
             enqueued: Instant::now(),
             reply,
         };
-        let j = BatchJob { family: "edge_cnn".into(), seq: 0, requests: vec![req] };
+        let j = BatchJob {
+            family: "edge_cnn".into(),
+            seq: 0,
+            chunk: 0,
+            last: true,
+            requests: vec![req],
+        };
         assert_eq!(j.requests.len(), 1);
     }
 }

@@ -30,31 +30,39 @@
 //!
 //! Per family, responses preserve request submission order: one shard
 //! accumulates a family's requests in arrival order, the pool's
-//! per-family queue is FIFO, and oversized jobs split into chunks
-//! executed front to back. Execution-to-delivery ordering then comes
-//! from one of two interchangeable mechanisms:
+//! per-family queue is FIFO, and an oversized flush splits into
+//! capacity-sized **chunks** stamped `(flush seq, chunk seq)` — in the
+//! batcher by default (`chunk_level = true`), so each chunk is its own
+//! unit of dispatch, or at execution time in the job-granular
+//! baseline. Execution-to-delivery ordering then comes from one of two
+//! interchangeable mechanisms:
 //!
-//! * **family lease** (`reorder_depth <= 1`, the default): at most one
-//!   worker runs a given family at any instant, so completion order
-//!   *is* flush order;
-//! * **reorder buffer** (`reorder_depth >= 2`, stealing mode): up to
-//!   `reorder_depth` workers execute one family's backlog
-//!   concurrently — the intra-family parallelism a hot family needs —
-//!   and completed jobs park in per-family sequence-numbered slots
+//! * **family lease** (depth 1, the default): at most one worker runs
+//!   a given family at any instant, so completion order *is* flush
+//!   order;
+//! * **reorder buffer** (static `reorder_depth >= 2`, or adaptive
+//!   `reorder_depth_max >= 2`; stealing mode): several workers execute
+//!   one family's backlog — including one oversized job's chunks —
+//!   concurrently, and completed chunks park in per-family
+//!   `(seq, chunk)`-keyed slots
 //!   ([`ReorderBuffer`](super::pool::ReorderBuffer)) until every
-//!   earlier flush has been delivered, so clients still observe strict
-//!   FIFO.
+//!   earlier chunk has been delivered, so clients still observe strict
+//!   FIFO. Under the adaptive policy the per-family depth follows the
+//!   observed backlog (EWMA at dispatch, clamped by
+//!   `reorder_depth_max`): cold families keep the lease, hot families
+//!   widen — observable via `Snapshot::depth_by_family`.
 //!
-//! Every job carries a per-family sequence number and [`Metrics`]
-//! counts regressions at the delivery point, so the invariant is
-//! observable (`Snapshot::fifo_violations == 0`) in both modes.
-//! *Across* families there is no ordering — that concurrency is the
-//! point of the pool.
+//! Every chunk carries its `(seq, chunk)` key and [`Metrics`] counts
+//! regressions at the delivery point, so the invariant is observable
+//! (`Snapshot::fifo_violations == 0`) in all modes. *Across* families
+//! there is no ordering — that concurrency is the point of the pool.
 //!
-//! Job execution is wrapped in `catch_unwind`: a panicking kernel
-//! surfaces as per-request errors (and, in reorder mode, still fills
-//! its completion slot) instead of killing the worker and stranding
-//! its held family queues — the shutdown-hang ROADMAP item.
+//! Chunk execution is wrapped in `catch_unwind` **per chunk**: a
+//! panicking kernel surfaces as errors for exactly that chunk's
+//! requests (and still fills its completion slot, so sibling chunks of
+//! the same job keep delivering in order) instead of killing the
+//! worker and stranding its held family queues — the shutdown-hang
+//! ROADMAP item.
 //!
 //! Every response carries both the *measured* CPU numerics and the
 //! *modeled* Mensa-G edge cost (latency/energy/accelerator mix) from
@@ -67,7 +75,7 @@
 
 use super::batcher::{BatchJob, Batcher};
 use super::metrics::{Metrics, Snapshot};
-use super::pool::{ExecutorPool, ReorderBuffer};
+use super::pool::{DepthPolicy, ExecutorPool, ReorderBuffer};
 use super::{worker_for_family, Request};
 use crate::accel::configs;
 use crate::config::ServerConfig;
@@ -141,6 +149,8 @@ pub struct ServerHandle {
     /// fixed, manifest-bounded set.
     families: std::collections::HashSet<String>,
     metrics: Arc<Metrics>,
+    /// Kept for the depth gauges ([`Snapshot::depth_by_family`]).
+    pool: Arc<ExecutorPool>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -175,19 +185,33 @@ impl Server {
             RuntimeOptions {
                 naive_kernels: cfg.naive_kernels,
                 batched_gemm: cfg.batched_gemm,
+                panic_on_poison: cfg.panic_on_poison,
             },
         )?);
 
         let families: std::collections::HashSet<String> =
             runtime.families().into_iter().collect();
+        // Per-family chunk capacity (largest compiled variant): the
+        // one definition shared by the batcher's chunk-granular
+        // splitting and the executor's job-granular fallback.
+        let chunk_caps: Arc<HashMap<String, usize>> =
+            Arc::new(families.iter().map(|f| (f.clone(), runtime.chunk_cap(f))).collect());
 
-        let pool =
-            Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, cfg.reorder_depth));
-        // Intra-family parallelism: when the pool lets several workers
-        // drain one family, a shared reorder buffer restores
+        // Per-family concurrency policy: adaptive (backlog-driven,
+        // clamped by `reorder_depth_max`) takes precedence over the
+        // static `reorder_depth`; without stealing the pool forces the
+        // single-holder lease.
+        let depth = if cfg.reorder_depth_max >= 2 {
+            DepthPolicy::Adaptive { max: cfg.reorder_depth_max }
+        } else {
+            DepthPolicy::Static(cfg.reorder_depth.max(1))
+        };
+        let pool = Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, depth));
+        // Intra-family parallelism: when the pool may let several
+        // workers drain one family, a shared reorder buffer restores
         // client-observed FIFO at delivery.
         let reorder = (pool.family_concurrency() > 1)
-            .then(|| Arc::new(ReorderBuffer::<JobDone>::new()));
+            .then(|| Arc::new(ReorderBuffer::<ChunkDone>::new()));
         let device_latency = Duration::from_micros(cfg.device_latency_us);
         let mut threads = Vec::with_capacity(workers + shards);
         for w in 0..workers {
@@ -220,7 +244,7 @@ impl Server {
         for s in 0..shards {
             let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
             req_txs.push(req_tx);
-            let batcher = Batcher::new(req_rx, Arc::clone(&pool), &cfg);
+            let batcher = Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::clone(&chunk_caps));
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mensa-batcher-{s}"))
@@ -229,7 +253,7 @@ impl Server {
             );
         }
 
-        Ok(ServerHandle { req_txs, families, metrics, threads })
+        Ok(ServerHandle { req_txs, families, metrics, pool, threads })
     }
 }
 
@@ -273,9 +297,12 @@ impl ServerHandle {
         rx.recv_timeout(timeout).map_err(|e| anyhow!("inference timed out: {e}"))?
     }
 
-    /// Current metrics snapshot.
+    /// Current metrics snapshot, including the pool's per-family
+    /// depth gauges (the adaptive reorder depth's observability).
     pub fn metrics(&self) -> Snapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.depth_by_family = self.pool.depth_by_family();
+        snap
     }
 
     /// Graceful shutdown: close the router queues and join all threads
@@ -365,11 +392,17 @@ pub fn unpack_batch(
         .collect()
 }
 
-/// One executed chunk of a job, awaiting delivery (replies not yet
-/// sent). Responses *move* through here — built at execution, moved
-/// into the reorder buffer, moved out to the clients; nothing is
-/// copied.
+/// One executed chunk, awaiting delivery (replies not yet sent).
+/// Responses *move* through here — built at execution, moved into the
+/// reorder buffer, moved out to the clients; nothing is copied.
 struct ChunkDone {
+    /// Per-family flush sequence number (delivery-order key, major).
+    seq: u64,
+    /// Chunk index within the flush (delivery-order key, minor).
+    chunk: u32,
+    /// Final chunk of its flush — advances the reorder cursor to the
+    /// next flush.
+    last: bool,
     /// When execution started (queue-delay accounting anchor).
     exec_start: Instant,
     /// Execution result: the per-request outputs with the executed
@@ -392,20 +425,12 @@ struct ChunkErr {
     error: String,
 }
 
-/// One popped job, fully executed (all oversized-job chunks, front to
-/// back), tagged with its per-family flush sequence number for ordered
-/// delivery.
-struct JobDone {
-    seq: u64,
-    chunks: Vec<ChunkDone>,
-}
-
 /// One worker's executor loop: take a family hold from the pool, drain
-/// its job queue (splitting any job larger than the family's biggest
-/// compiled variant into front-to-back chunks), execute with this
-/// worker's reusable scratch, deliver (directly under the family
-/// lease; through the reorder buffer's sequenced slots otherwise),
-/// release, repeat.
+/// its chunk queue (chunks are pre-split by the batcher in
+/// chunk-granular mode; a job-granular job is split here, front to
+/// back), execute with this worker's reusable scratch, deliver
+/// (directly under the family lease; through the reorder buffer's
+/// `(seq, chunk)` slots otherwise), release, repeat.
 fn executor_loop(
     worker: usize,
     runtime: Arc<Runtime>,
@@ -413,35 +438,36 @@ fn executor_loop(
     metrics: Arc<Metrics>,
     sim_costs: Arc<HashMap<String, SimCost>>,
     device_latency: Duration,
-    reorder: Option<Arc<ReorderBuffer<JobDone>>>,
+    reorder: Option<Arc<ReorderBuffer<ChunkDone>>>,
 ) {
     let mut scratch = WorkerScratch::default();
     while let Some(family) = pool.take_family(worker) {
         while let Some(job) = pool.next_job(&family, worker) {
-            let seq = job.seq;
             match &reorder {
-                // Reorder mode: the whole job (all chunks) fills one
-                // sequence slot. The buffer invokes the callback
-                // (under the family's slot lock) for every job now
+                // Reorder mode: every chunk fills its own
+                // `(seq, chunk)` slot the moment it finishes — *other
+                // workers may be executing sibling chunks of the same
+                // flush concurrently*. The buffer invokes the callback
+                // (under the family's slot lock) for every chunk now
                 // contiguous with the delivery cursor — possibly zero
-                // (an earlier flush is still running on another
-                // worker), possibly several (this job unblocked
-                // buffered successors).
-                Some(buf) => {
-                    let mut chunks = Vec::new();
-                    exec_job(
-                        &runtime,
-                        job,
-                        worker,
-                        &metrics,
-                        &sim_costs,
-                        &mut scratch,
-                        device_latency,
-                        |chunk| chunks.push(chunk),
-                    );
-                    let done = JobDone { seq, chunks };
-                    buf.submit(&family, seq, done, |d| deliver(&metrics, &family, d));
-                }
+                // (an earlier chunk is still running elsewhere),
+                // possibly several (this chunk unblocked buffered
+                // successors).
+                Some(buf) => exec_job(
+                    &runtime,
+                    job,
+                    worker,
+                    &metrics,
+                    &sim_costs,
+                    &mut scratch,
+                    device_latency,
+                    |chunk| {
+                        let (seq, idx, last) = (chunk.seq, chunk.chunk, chunk.last);
+                        buf.submit(&family, seq, idx, last, chunk, |done| {
+                            deliver_chunk(&metrics, &family, done)
+                        });
+                    },
+                ),
                 // Lease mode: the hold already serializes this family,
                 // so each chunk's responses stream out the moment the
                 // chunk finishes (before its emulated device window),
@@ -454,18 +480,22 @@ fn executor_loop(
                     &sim_costs,
                     &mut scratch,
                     device_latency,
-                    |chunk| deliver_chunk(&metrics, &family, seq, chunk),
+                    |chunk| deliver_chunk(&metrics, &family, chunk),
                 ),
             }
         }
     }
 }
 
-/// Execute every chunk of one job, front to back, handing each
-/// completed chunk to `sink` *before* the chunk's emulated device
-/// window. Never panics: the kernel call is wrapped in [`guard_panic`],
-/// so a poisoned job produces per-request errors (and still fills its
-/// reorder slot) instead of unwinding the worker and stranding its
+/// Execute one popped pool entry. In chunk-granular mode the entry
+/// *is* one capacity-fitting chunk (the batcher pre-split it, so the
+/// loop runs once); a job-granular entry is split here into
+/// front-to-back chunks sharing its flush `seq`. Each completed chunk
+/// goes to `sink` *before* the chunk's emulated device window. Never
+/// panics: the kernel call is wrapped in [`guard_panic`] per chunk, so
+/// a poisoned chunk produces errors for exactly its own requests (and
+/// still fills its reorder slot — sibling chunks of the same flush
+/// deliver normally) instead of unwinding the worker and stranding its
 /// held family queues.
 #[allow(clippy::too_many_arguments)]
 fn exec_job(
@@ -478,7 +508,8 @@ fn exec_job(
     device_latency: Duration,
     mut sink: impl FnMut(ChunkDone),
 ) {
-    let cap = runtime.max_batch(&job.family).unwrap_or(usize::MAX).max(1);
+    let cap = runtime.chunk_cap(&job.family);
+    let mut chunk_idx = job.chunk;
     loop {
         let rest = if job.requests.len() > cap {
             Some(job.requests.split_off(cap))
@@ -486,20 +517,41 @@ fn exec_job(
             None
         };
         let requests = std::mem::take(&mut job.requests);
-        sink(exec_chunk(runtime, &job.family, requests, worker, metrics, sim_costs, scratch));
+        // A pre-split chunk is final iff the batcher flagged it; a
+        // job-granular split is final on its locally-last chunk.
+        let last = rest.is_none() && job.last;
+        sink(exec_chunk(
+            runtime,
+            &job.family,
+            requests,
+            job.seq,
+            chunk_idx,
+            last,
+            worker,
+            metrics,
+            sim_costs,
+            scratch,
+        ));
         emulate_device(device_latency);
         match rest {
-            Some(r) => job.requests = r,
+            Some(r) => {
+                job.requests = r;
+                chunk_idx += 1;
+            }
             None => break,
         }
     }
 }
 
 /// Execute one capacity-fitting chunk.
+#[allow(clippy::too_many_arguments)]
 fn exec_chunk(
     runtime: &Runtime,
     family: &str,
     requests: Vec<Request>,
+    seq: u64,
+    chunk: u32,
+    last: bool,
     worker: usize,
     metrics: &Metrics,
     sim_costs: &HashMap<String, SimCost>,
@@ -510,7 +562,7 @@ fn exec_chunk(
     let result = guard_panic(|| execute_batch(runtime, family, &requests, scratch));
     match result {
         Ok((outputs, batch)) => {
-            // Jobs are counted on success only (failed batches land in
+            // Jobs are counted on success only (failed chunks land in
             // `failed`, per request), at execution time so the worker
             // attribution is right even when another thread delivers.
             metrics.record_job(family, worker);
@@ -518,6 +570,9 @@ fn exec_chunk(
             // (built once, moved into the last response at delivery).
             let sim = sim_costs.get(family).map(|c| c.amortized(n)).unwrap_or_default();
             ChunkDone {
+                seq,
+                chunk,
+                last,
                 exec_start,
                 outcome: Ok(ChunkOk {
                     batch,
@@ -527,28 +582,22 @@ fn exec_chunk(
             }
         }
         Err(e) => ChunkDone {
+            seq,
+            chunk,
+            last,
             exec_start,
             outcome: Err(ChunkErr { requests, error: format!("{e:#}") }),
         },
     }
 }
 
-/// Send one executed job's responses to its clients, chunk by chunk in
-/// request order (reorder-mode delivery path).
-fn deliver(metrics: &Metrics, family: &str, done: JobDone) {
-    let JobDone { seq, chunks } = done;
-    for chunk in chunks {
-        deliver_chunk(metrics, family, seq, chunk);
-    }
-}
-
 /// Send one executed chunk's responses and record the delivery-point
 /// metrics (the FIFO check lives here — where clients observe order).
-fn deliver_chunk(metrics: &Metrics, family: &str, seq: u64, chunk: ChunkDone) {
-    let ChunkDone { exec_start, outcome } = chunk;
+fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone) {
+    let ChunkDone { seq, chunk, last: _, exec_start, outcome } = done;
     match outcome {
         Ok(ok) => {
-            metrics.record_job_order(family, seq);
+            metrics.record_job_order(family, seq, chunk);
             let n = ok.pairs.len();
             let mut sim = ok.sim;
             let mut remaining = n;

@@ -45,7 +45,7 @@ mod reference;
 mod pjrt;
 
 pub use artifacts::{default_batch_axis, manifest_load_count, ArtifactSpec, Manifest};
-pub use reference::ExecScratch;
+pub use reference::{ExecScratch, POISON_INPUT};
 
 use artifacts::batch_suffix;
 
@@ -75,11 +75,17 @@ pub struct RuntimeOptions {
     /// matvec — bit-identical numerics, kept as the measured benchmark
     /// baseline for `benches/hotpath_micro.rs`.
     pub batched_gemm: bool,
+    /// Test hook: panic when an executed input contains the
+    /// [`POISON_INPUT`] sentinel. This is how the integration tests
+    /// drive the server's panic-isolation path (`catch_unwind` per
+    /// chunk) through the public API with a real, deterministic
+    /// mid-job kernel panic. Never enabled in production loads.
+    pub panic_on_poison: bool,
 }
 
 impl Default for RuntimeOptions {
     fn default() -> Self {
-        Self { naive_kernels: false, batched_gemm: true }
+        Self { naive_kernels: false, batched_gemm: true, panic_on_poison: false }
     }
 }
 
@@ -291,9 +297,19 @@ impl Runtime {
     }
 
     /// Largest batch capacity any variant of `family` offers (the
-    /// executor's oversized-job chunk size).
+    /// oversized-job chunk size).
     pub fn max_batch(&self, family: &str) -> Option<usize> {
         self.variants.get(family)?.last().map(|&(b, _)| b)
+    }
+
+    /// Capacity of one executed chunk of `family`: the largest
+    /// compiled batch variant, or `usize::MAX` for families without
+    /// batch variants (never split). This is the **one** definition of
+    /// the chunk size shared by the batcher's chunk-granular splitting
+    /// and the executor's job-granular fallback, so a pre-split chunk
+    /// always fits a single execution.
+    pub fn chunk_cap(&self, family: &str) -> usize {
+        self.max_batch(family).unwrap_or(usize::MAX).max(1)
     }
 }
 
@@ -358,5 +374,7 @@ sha256 = "0000000000000000"
         assert_eq!(rt.max_batch("edge_cnn"), Some(8));
         assert_eq!(rt.max_batch("joint"), Some(1));
         assert_eq!(rt.max_batch("bert"), None);
+        assert_eq!(rt.chunk_cap("edge_cnn"), 8);
+        assert_eq!(rt.chunk_cap("bert"), usize::MAX, "unknown families are never split");
     }
 }

@@ -75,6 +75,14 @@ use std::sync::Arc;
 /// `Runtime::load`, which is the only place models are built.
 pub(crate) type WeightCache = HashMap<(String, u64, usize, usize), Arc<Vec<f32>>>;
 
+/// Input sentinel for the `panic_on_poison` test hook: a runtime
+/// loaded with `RuntimeOptions::panic_on_poison` panics (by exact bit
+/// pattern) when any executed input contains this value, giving the
+/// integration tests a deterministic mid-job kernel panic to aim at
+/// the server's `catch_unwind` isolation. An ordinary request will
+/// never hit it — it is a single exact f32 out in the 1e33 range.
+pub const POISON_INPUT: f32 = -1.0e33;
+
 /// Reusable per-worker execution scratch: all intermediate buffers the
 /// reference kernels need. One instance per executor-pool worker turns
 /// the per-sample `Vec` churn of the old kernels into amortized,
@@ -123,6 +131,9 @@ pub(crate) struct RefModel {
     /// instead of once per sample); `false` is the per-sample bench
     /// baseline. Ignored in naive mode (which is per-sample only).
     batched: bool,
+    /// Test hook: panic on the [`POISON_INPUT`] sentinel (see
+    /// `RuntimeOptions::panic_on_poison`).
+    poison: bool,
 }
 
 /// Elements per sample: the shape's product with the batch axis
@@ -378,7 +389,13 @@ impl RefModel {
                 .collect();
             RefNet::Dense { weights }
         };
-        Ok(Self { net, out_per_sample, naive, batched: opts.batched_gemm })
+        Ok(Self {
+            net,
+            out_per_sample,
+            naive,
+            batched: opts.batched_gemm,
+            poison: opts.panic_on_poison,
+        })
     }
 
     /// Execute the variant batch. Inputs are already validated against
@@ -394,6 +411,13 @@ impl RefModel {
         active: usize,
         scratch: &mut ExecScratch,
     ) -> Vec<f32> {
+        if self.poison {
+            for buf in inputs {
+                if buf.iter().any(|&v| v == POISON_INPUT) {
+                    panic!("poison input sentinel executed (panic_on_poison test hook)");
+                }
+            }
+        }
         let out_total: usize = spec.output_shape.iter().product::<i64>() as usize;
         let batch = spec.output_shape[spec.output_batch_axis] as usize;
         let active = active.min(batch);
@@ -826,6 +850,33 @@ mod tests {
         let a = g.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
         let b = p.execute(&s, &[x], 2, &mut ExecScratch::default());
         assert_eq!(a, b, "recurrent time-major batch diverges");
+    }
+
+    #[test]
+    fn poison_sentinel_panics_only_when_hook_enabled() {
+        let s = dense_spec(1);
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        x[3] = POISON_INPUT;
+        // Hook off (the default): the sentinel is just a number.
+        let m = RefModel::build(&s).unwrap();
+        let out = run(&m, &s, &[x.clone()]);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Hook on: deterministic panic, the integration tests' handle
+        // on the server's per-chunk catch_unwind isolation.
+        let hooked = RefModel::build_with(
+            &s,
+            RuntimeOptions { panic_on_poison: true, ..Default::default() },
+            &mut WeightCache::default(),
+        )
+        .unwrap();
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(&hooked, &s, &[x.clone()])
+        }))
+        .is_err();
+        assert!(panicked, "poisoned input must panic under the hook");
+        // Clean inputs execute normally even with the hook armed.
+        let clean: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        assert_eq!(run(&hooked, &s, &[clean.clone()]), run(&m, &s, &[clean]));
     }
 
     #[test]

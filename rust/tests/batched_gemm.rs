@@ -102,9 +102,35 @@ fn reorder_buffer_delivers_shuffled_completions_in_sequence_order() {
     let order = [3u64, 0, 2, 1, 7, 4, 6, 5, 8, 11, 10, 9];
     let mut delivered: Vec<u64> = Vec::new();
     for seq in order {
-        buf.submit("hot", seq, seq, |v| delivered.push(v));
+        buf.submit("hot", seq, 0, true, seq, |v| delivered.push(v));
     }
     assert_eq!(delivered, (0..12).collect::<Vec<_>>(), "delivery must be in sequence order");
+    assert_eq!(buf.pending(), 0, "nothing left buffered");
+}
+
+#[test]
+fn reorder_buffer_delivers_shuffled_chunks_in_lexicographic_order() {
+    // Chunk-granular injection: jobs 0..3 of 3/1/2 chunks, submitted
+    // in an adversarial order, must deliver in (seq, chunk) order with
+    // the `last` flag advancing the cursor across job boundaries.
+    let buf = ReorderBuffer::new();
+    let chunks = [
+        (1u64, 0u32, true),
+        (0, 2, true),
+        (2, 1, true),
+        (0, 0, false),
+        (2, 0, false),
+        (0, 1, false),
+    ];
+    let mut delivered: Vec<(u64, u32)> = Vec::new();
+    for (seq, chunk, last) in chunks {
+        buf.submit("hot", seq, chunk, last, (seq, chunk), |v| delivered.push(v));
+    }
+    assert_eq!(
+        delivered,
+        vec![(0, 0), (0, 1), (0, 2), (1, 0), (2, 0), (2, 1)],
+        "delivery must be lexicographic in (flush seq, chunk seq)"
+    );
     assert_eq!(buf.pending(), 0, "nothing left buffered");
 }
 
