@@ -10,7 +10,7 @@ can never silently regress.
 Baseline format::
 
     {
-      "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+      "tolerance": {"speedup_rel": 0.30, "rps_rel": 0.5},
       "cases": {
         "<case>": {"speedup": <floor>, "<label>_rps": <floor>, ...},
         ...
@@ -49,9 +49,32 @@ TRACKED = {
     "adaptive_depth": ("speedup", "adaptive_rps"),
     "gemm_dense": ("speedup",),
     "kernel_dense": ("speedup",),
+    # Panel-prepacked weight layout vs row-major (scalar kernels both
+    # sides) and the explicit AVX2+FMA microkernel vs the portable
+    # scalar path (packed layout both sides). The simd_kernel floor
+    # assumes the runner class has AVX2+FMA (all GitHub-hosted x86
+    # runners do); a non-AVX2 runner would report ~1.0 and fail loudly.
+    "packed_panels": ("speedup",),
+    "simd_kernel": ("speedup",),
 }
 
-DEFAULT_TOLERANCE = {"speedup_rel": 0.35, "rps_rel": 0.6}
+DEFAULT_TOLERANCE = {"speedup_rel": 0.30, "rps_rel": 0.5}
+
+# Absolute floors layered on top of the tolerance bands. The kernel
+# dispatch ratios are dimensionless "feature works at all" signals: a
+# value at ~1.0 means the SIMD microkernel (or the panel layout)
+# regressed to parity with its baseline, which the relative band alone
+# would wave through (1.3 * (1 - 0.30) = 0.91 < 1.0). A case metric
+# listed here must clear BOTH the band floor and this absolute floor.
+ABS_FLOORS = {
+    ("simd_kernel", "speedup"): 1.05,
+    ("packed_panels", "speedup"): 1.02,
+    # Batched GEMM actively slower than per-sample, or the blocked
+    # kernel at parity with the naive scan, is a broken feature even
+    # when the relative band (floor 0.70 / 0.91) would pass it.
+    ("gemm_dense", "speedup"): 0.95,
+    ("kernel_dense", "speedup"): 1.05,
+}
 
 
 def check(current, baseline):
@@ -70,6 +93,7 @@ def check(current, baseline):
         for metric, base in sorted(expect.items()):
             rel = tol["speedup_rel"] if metric == "speedup" else tol["rps_rel"]
             floor = float(base) * (1.0 - float(rel))
+            floor = max(floor, ABS_FLOORS.get((case, metric), floor))
             value = got.get(metric)
             if not isinstance(value, (int, float)) or not math.isfinite(value):
                 failures.append(f"{case}.{metric}: missing or non-finite ({value!r})")
@@ -152,6 +176,19 @@ def self_test():
     tolerated["hot_family_reorder"]["speedup"] = 1.4  # floor is 1.3
     _, failures = check(tolerated, baseline)
     assert not failures, f"in-band value must pass, got {failures}"
+
+    # Absolute floors: a kernel-dispatch ratio regressing to parity
+    # must fail even though the relative band would allow it
+    # (1.3 * (1 - 0.35) = 0.845 < 1.0 < ABS floor 1.05).
+    abs_base = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {"simd_kernel": {"speedup": 1.3}},
+    }
+    _, failures = check({"simd_kernel": {"speedup": 1.0}}, abs_base)
+    assert any("simd_kernel.speedup" in f for f in failures), (
+        f"parity must trip the absolute floor, got {failures}")
+    _, failures = check({"simd_kernel": {"speedup": 1.2}}, abs_base)
+    assert not failures, f"above both floors must pass, got {failures}"
 
     # write_baseline round-trips through check.
     regen = write_baseline(healthy, "self-test")

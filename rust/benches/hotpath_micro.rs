@@ -48,15 +48,27 @@
 //!   static `reorder_depth`.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
-//! (real `edge_cnn_b8`) and per-sample vs batched GEMM (synthetic
-//! heavy-weight family, where parameter streaming dominates).
+//! (real `edge_cnn_b8`), per-sample vs batched GEMM (synthetic
+//! heavy-weight family, where parameter streaming dominates), and the
+//! PR 5 pair —
+//!
+//! * `packed_panels` — scalar kernels both sides, **row-major
+//!   transposed vs panel-major prepacked** weight layout: the packed
+//!   walk is one sequential stream with `x[k]` loaded once per 8 rows
+//!   instead of once per 4, so it must beat the row-major baseline at
+//!   identical (bit-for-bit) numerics.
+//! * `simd_kernel` — packed layout both sides, **portable scalar vs
+//!   the runtime-dispatched explicit AVX2+FMA microkernel**. On hosts
+//!   without AVX2 the dispatch falls back to scalar and the speedup
+//!   reports ~1.0 (a WARN is printed; the CI gate runs on AVX2
+//!   runners).
 
 use mensa::accel::configs;
 use mensa::bench_harness::timer;
 use mensa::config::ServerConfig;
 use mensa::coordinator::{worker_for_family, Server};
 use mensa::model::zoo;
-use mensa::runtime::{ExecScratch, Runtime, RuntimeOptions};
+use mensa::runtime::{simd_kernel_available, ExecScratch, KernelKind, Runtime, RuntimeOptions};
 use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
 use mensa::sim::Simulator;
 use std::fmt::Write as _;
@@ -151,16 +163,19 @@ fn main() {
     let bench_dir = write_bench_artifacts(&families);
 
     // 5. Reference-kernel microbenches: PR-1 naive scan vs blocked
-    // kernels (real edge_cnn_b8), and per-sample vs batched GEMM
-    // (synthetic heavy-weight b8).
+    // kernels (real edge_cnn_b8), per-sample vs batched GEMM
+    // (synthetic heavy-weight b8), row-major vs packed panels, and
+    // scalar vs the explicit-SIMD microkernel.
     let kernel = bench_kernels();
     let gemm = bench_gemm_kernel(&bench_dir);
+    let packed = bench_packed_panels(&bench_dir);
+    let simd = bench_simd_kernel(&bench_dir);
 
     // 6. Serving throughput: routing, kernel, and ordering-discipline
     // comparisons under skewed / uniform / hot-family loads.
     let serving = bench_serving(&bench_dir, &families);
 
-    write_bench_json(&kernel, &gemm, &serving);
+    write_bench_json(&kernel, &gemm, &packed, &simd, &serving);
 
     // 7. Macro: the full 24-model x 4-system evaluation grid.
     let m = timer::bench("grid/24x4_evaluation", 3, 2, || {
@@ -248,6 +263,97 @@ fn bench_gemm_kernel(dir: &str) -> GemmResult {
         per_sample_ns_per_sample: p.mean_ns / 8.0,
         batched_ns_per_sample: b.mean_ns / 8.0,
     }
+}
+
+/// One kernel-micro A/B over the synthetic heavy-weight b8 variant:
+/// baseline vs treatment `RuntimeOptions`, ns per sample.
+fn bench_kernel_ab(
+    dir: &str,
+    label: (&str, &str),
+    baseline_opts: RuntimeOptions,
+    treatment_opts: RuntimeOptions,
+) -> (f64, f64) {
+    let baseline = Runtime::load_with(dir, baseline_opts).expect("bench runtime");
+    let treatment = Runtime::load_with(dir, treatment_opts).expect("bench runtime");
+    let name = "fam000_b8";
+    let mb = baseline.model(name).expect("bench b8 variant");
+    let mt = treatment.model(name).expect("bench b8 variant");
+    let input: Vec<f32> =
+        (0..8 * BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
+    let inputs = vec![input];
+    let mut scratch = ExecScratch::default();
+    let b = timer::bench(label.0, 10, 100, || {
+        black_box(mb.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
+    });
+    println!("{}", b.render());
+    let t = timer::bench(label.1, 10, 100, || {
+        black_box(mt.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
+    });
+    println!("{}", t.render());
+    (b.mean_ns / 8.0, t.mean_ns / 8.0)
+}
+
+/// Row-major vs panel-major weight layout, scalar kernels both sides
+/// (the layouts are bit-identical, so this isolates the memory-walk
+/// effect of the prepack).
+struct PackedResult {
+    row_major_ns_per_sample: f64,
+    packed_ns_per_sample: f64,
+}
+
+fn bench_packed_panels(dir: &str) -> PackedResult {
+    let scalar_rows = RuntimeOptions {
+        kernel: KernelKind::Scalar,
+        packed_weights: false,
+        ..Default::default()
+    };
+    let scalar_packed = RuntimeOptions { kernel: KernelKind::Scalar, ..Default::default() };
+    let (row_major, packed) = bench_kernel_ab(
+        dir,
+        ("ref_kernel/row_major_scalar_b8", "ref_kernel/packed_scalar_b8"),
+        scalar_rows,
+        scalar_packed,
+    );
+    println!(
+        "packed panels speedup (b8, scalar, per sample): {:.2}x \
+         (row-major {row_major:.0} ns -> packed {packed:.0} ns)",
+        row_major / packed.max(1e-9)
+    );
+    PackedResult { row_major_ns_per_sample: row_major, packed_ns_per_sample: packed }
+}
+
+/// Portable scalar vs runtime-dispatched explicit-SIMD microkernel,
+/// packed layout both sides.
+struct SimdResult {
+    scalar_ns_per_sample: f64,
+    simd_ns_per_sample: f64,
+}
+
+fn bench_simd_kernel(dir: &str) -> SimdResult {
+    let scalar = RuntimeOptions { kernel: KernelKind::Scalar, ..Default::default() };
+    // Auto: resolves to the AVX2+FMA microkernel where available —
+    // exactly what a production load does.
+    let auto = RuntimeOptions::default();
+    let (scalar_ns, simd_ns) = bench_kernel_ab(
+        dir,
+        ("ref_kernel/scalar_packed_b8", "ref_kernel/simd_packed_b8"),
+        scalar,
+        auto,
+    );
+    let speedup = scalar_ns / simd_ns.max(1e-9);
+    if simd_kernel_available() {
+        if speedup >= 1.3 {
+            println!("PASS: explicit-SIMD kernel {speedup:.2}x over scalar (>= 1.3x)");
+        } else {
+            println!("WARN: explicit-SIMD kernel speedup {speedup:.2}x < 1.3x");
+        }
+    } else {
+        println!(
+            "WARN: no AVX2+FMA on this host — simd_kernel measures scalar vs scalar \
+             ({speedup:.2}x); the CI gate expects an AVX2 runner"
+        );
+    }
+    SimdResult { scalar_ns_per_sample: scalar_ns, simd_ns_per_sample: simd_ns }
 }
 
 /// One A/B serving comparison.
@@ -400,6 +506,8 @@ fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
         // colliding family set would all land on shard 0 anyway).
         batcher_shards: 1,
         naive_kernels: false,
+        kernel: KernelKind::Auto,
+        packed_weights: true,
         device_latency_us: opts.device_us,
         batched_gemm: opts.batched_gemm,
         reorder_depth: opts.reorder_depth,
@@ -657,7 +765,13 @@ fn push_case(cases: &mut Vec<CaseResult>, case: CaseResult) {
     cases.push(case);
 }
 
-fn write_bench_json(kernel: &KernelResult, gemm: &GemmResult, serving: &ServingResult) {
+fn write_bench_json(
+    kernel: &KernelResult,
+    gemm: &GemmResult,
+    packed: &PackedResult,
+    simd: &SimdResult,
+    serving: &ServingResult,
+) {
     let mut json = String::from("{\n  \"bench\": \"serving_throughput\",\n");
     let _ = write!(
         json,
@@ -685,6 +799,22 @@ fn write_bench_json(kernel: &KernelResult, gemm: &GemmResult, serving: &ServingR
         gemm.per_sample_ns_per_sample,
         gemm.batched_ns_per_sample,
         gemm.per_sample_ns_per_sample / gemm.batched_ns_per_sample.max(1e-9)
+    );
+    let _ = write!(
+        json,
+        "  \"packed_panels\": {{\"row_major_ns_per_sample\": {:.1}, \
+         \"packed_ns_per_sample\": {:.1}, \"speedup\": {:.3}}},\n",
+        packed.row_major_ns_per_sample,
+        packed.packed_ns_per_sample,
+        packed.row_major_ns_per_sample / packed.packed_ns_per_sample.max(1e-9)
+    );
+    let _ = write!(
+        json,
+        "  \"simd_kernel\": {{\"scalar_ns_per_sample\": {:.1}, \
+         \"simd_ns_per_sample\": {:.1}, \"speedup\": {:.3}}},\n",
+        simd.scalar_ns_per_sample,
+        simd.simd_ns_per_sample,
+        simd.scalar_ns_per_sample / simd.simd_ns_per_sample.max(1e-9)
     );
     let _ = write!(
         json,

@@ -22,6 +22,7 @@
 use super::toml_lite::{self, Table, Value};
 use crate::accel::configs::MensaSystem;
 use crate::accel::{AccelConfig, DataflowKind, MemoryAttachment};
+use crate::runtime::KernelKind;
 use crate::util::KB;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -161,6 +162,20 @@ pub struct ServerConfig {
     /// Benchmark baseline only: execute with the pre-rewrite reference
     /// kernels (untransposed zero-skip scan layout).
     pub naive_kernels: bool,
+    /// Kernel implementation for the reference backend's inner loops:
+    /// `auto` (the default) dispatches at load time to the explicit
+    /// AVX2+FMA microkernel when the CPU supports it and to the
+    /// portable scalar path otherwise; `scalar` forces the portable
+    /// path (the measured bench baseline, bit-identical to the
+    /// pre-panel kernels); `simd` forces the microkernel and fails to
+    /// start where it cannot run. The `MENSA_KERNEL` environment
+    /// variable overrides this knob (the CI forced-fallback hook).
+    pub kernel: KernelKind,
+    /// Prepack weight matrices into panel-major layout at load (the
+    /// default), so the GEMM and recurrent kernels read weights purely
+    /// sequentially. `false` keeps the row-major transposed layout —
+    /// the `packed_panels` benchmark baseline (scalar kernels only).
+    pub packed_weights: bool,
     /// Emulated per-job device busy time, microseconds (0 = off). A
     /// hardware-in-the-loop stand-in: the executing worker holds the
     /// family lease for this long per batch job, modeling the family's
@@ -213,6 +228,8 @@ impl Default for ServerConfig {
             work_stealing: true,
             batcher_shards: 2,
             naive_kernels: false,
+            kernel: KernelKind::Auto,
+            packed_weights: true,
             device_latency_us: 0,
             batched_gemm: true,
             reorder_depth: 0,
@@ -250,6 +267,12 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("naive_kernels").and_then(Value::as_bool) {
                 cfg.naive_kernels = v;
+            }
+            if let Some(v) = t.get("kernel").and_then(Value::as_str) {
+                cfg.kernel = KernelKind::parse(v).context("parsing `kernel`")?;
+            }
+            if let Some(v) = t.get("packed_weights").and_then(Value::as_bool) {
+                cfg.packed_weights = v;
             }
             if let Some(v) = t.get("device_latency_us").and_then(Value::as_int) {
                 cfg.device_latency_us = v.max(0) as u64;
@@ -354,6 +377,8 @@ memory = "hbm_internal"
         assert!(d.work_stealing, "stealing pool is the default");
         assert_eq!(d.batcher_shards, 2);
         assert!(!d.naive_kernels);
+        assert_eq!(d.kernel, KernelKind::Auto, "runtime dispatch is the default");
+        assert!(d.packed_weights, "panel-major prepacking is the production default");
         assert_eq!(d.device_latency_us, 0);
         assert!(d.batched_gemm, "batched GEMM is the production default");
         assert_eq!(d.reorder_depth, 0, "family-lease discipline is the default");
@@ -392,5 +417,20 @@ memory = "hbm_internal"
         assert_eq!(cfg.batcher_shards, 1);
         assert_eq!(cfg.reorder_depth, 0, "negative reorder depth clamps to lease mode");
         assert_eq!(cfg.reorder_depth_max, 0, "negative adaptive cap clamps to disabled");
+    }
+
+    #[test]
+    fn server_config_kernel_knob_parses_and_rejects() {
+        let cfg = ServerConfig::from_toml(
+            "[server]\nkernel = \"scalar\"\npacked_weights = false\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Scalar);
+        assert!(!cfg.packed_weights);
+        let cfg = ServerConfig::from_toml("[server]\nkernel = \"simd\"\n").unwrap();
+        assert_eq!(cfg.kernel, KernelKind::Simd);
+        assert!(cfg.packed_weights, "default layout retained");
+        let err = ServerConfig::from_toml("[server]\nkernel = \"fast\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kernel"), "{err:#}");
     }
 }

@@ -26,11 +26,13 @@
 //!   increasing** in lexicographic `(seq, chunk)` order — a repeated
 //!   key means a chunk was delivered twice, which is as much an
 //!   ordering bug as running backwards. Any nonzero value is a bug.
-//! * `depth_by_family` (snapshot-only) — the high watermark of the
-//!   per-family concurrency the executor pool granted, filled in by
+//! * `depth_by_family` / `current_depth_by_family` (snapshot-only) —
+//!   the high watermark and the live value of the per-family
+//!   concurrency the executor pool granted, filled in by
 //!   `ServerHandle::metrics` from the pool's gauges: the adaptive
 //!   reorder depth's observability (hot families widen, cold families
-//!   stay at the lease depth of 1). Empty in bare `Metrics`
+//!   stay at the lease depth of 1, and the live gauge narrows back to
+//!   1 after a family's backlog drains). Empty in bare `Metrics`
 //!   snapshots.
 
 use crate::util::stats;
@@ -100,6 +102,13 @@ pub struct Snapshot {
     /// under the adaptive policy (a static depth needs no per-family
     /// bookkeeping), and empty in bare `Metrics` snapshots.
     pub depth_by_family: Vec<(String, usize)>,
+    /// The *currently* granted per-family concurrency (adaptive policy
+    /// only), sorted by family. Unlike [`Snapshot::depth_by_family`]'s
+    /// high watermark this gauge comes back down as a backlog drains —
+    /// the witness that a formerly hot family released its extra
+    /// reorder-depth width. Filled by `ServerHandle::metrics`; empty
+    /// in bare `Metrics` snapshots.
+    pub current_depth_by_family: Vec<(String, usize)>,
 }
 
 impl Metrics {
@@ -194,6 +203,7 @@ impl Metrics {
                 .collect(),
             fifo_violations: m.fifo_violations,
             depth_by_family: Vec::new(),
+            current_depth_by_family: Vec::new(),
         }
     }
 }

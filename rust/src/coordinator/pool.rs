@@ -33,15 +33,21 @@
 //! * the per-family concurrency is either a static knob
 //!   ([`DepthPolicy::Static`], the `reorder_depth` config key) or
 //!   **adaptive** ([`DepthPolicy::Adaptive`], `reorder_depth_max`):
-//!   each push samples the family's queue length into an EWMA, and the
-//!   granted depth is `ceil(ewma)` clamped to `[1, max]` — cold
-//!   families keep the cheap single-holder lease, hot families widen
-//!   automatically as backlog builds. This is the serving-side
-//!   analogue of Mensa's per-layer accelerator choice: concurrency
-//!   follows the observed load instead of a one-size-for-all setting.
-//!   The granted depth per family is exported as a high-watermark
-//!   gauge ([`ExecutorPool::depth_by_family`],
-//!   `Snapshot::depth_by_family`);
+//!   every push, pop, and release samples the family's queue length
+//!   into an EWMA, and the granted depth is `ceil(ewma)` clamped to
+//!   `[1, max]` — cold families keep the cheap single-holder lease,
+//!   hot families widen **immediately** as backlog builds, and a
+//!   draining family narrows back down *without needing new pushes*:
+//!   pops fold the shrinking backlog, narrowing waits out a
+//!   [`NARROW_HYSTERESIS`]-sample streak (so a momentary dip doesn't
+//!   flap the width), and a fully drained family returns to the lease
+//!   depth outright. This is the serving-side analogue of Mensa's
+//!   per-layer accelerator choice: concurrency follows the observed
+//!   load instead of a one-size-for-all setting. The granted depth per
+//!   family is exported both as a high-watermark gauge
+//!   ([`ExecutorPool::depth_by_family`], `Snapshot::depth_by_family`)
+//!   and live ([`ExecutorPool::current_depth_by_family`],
+//!   `Snapshot::current_depth_by_family`);
 //! * an idle worker waits on a condvar; when a family becomes ready it
 //!   is handed directly to the longest-idle worker (FIFO idle queue),
 //!   which rotates a hot family across the pool instead of re-pinning
@@ -83,9 +89,18 @@ use std::sync::{Arc, Condvar, Mutex};
 pub const FAMILY_INFLIGHT_CAP: usize = 2;
 
 /// EWMA smoothing for the backlog signal that drives
-/// [`DepthPolicy::Adaptive`]: each push folds the family's queue
-/// length in with this weight.
+/// [`DepthPolicy::Adaptive`]: pushes, pops, and releases each fold the
+/// family's observed queue length in with this weight, so the average
+/// decays as a backlog *drains* — not only when new pushes arrive.
 const EWMA_ALPHA: f64 = 0.25;
+
+/// Consecutive below-grant backlog samples required before the
+/// adaptive policy narrows a family's granted depth (hysteresis): a
+/// momentary dip in a still-hot family must not flap its width back
+/// toward the lease. Widening is always immediate; a *fully drained*
+/// family (queue empty, last holder released) skips the hysteresis and
+/// returns to the lease depth outright.
+pub const NARROW_HYSTERESIS: u32 = 2;
 
 /// How many workers may drain one family concurrently.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,12 +142,19 @@ struct PoolState {
     assigned: Vec<Option<String>>,
     /// Workers waiting for work, longest-idle first.
     idle: VecDeque<usize>,
-    /// Per-family EWMA of the queue length, sampled at each push (the
-    /// adaptive-depth signal; static policies never touch it).
-    /// Survives queue drain/removal so a hot family keeps its history
-    /// across momentary empties; bounded by the family set (the server
-    /// rejects unknown families at `infer()`).
+    /// Per-family EWMA of the queue length, sampled at each push, pop,
+    /// and release (the adaptive-depth signal; static policies never
+    /// touch it). Survives queue drain/removal so a hot family keeps
+    /// its history across momentary empties; bounded by the family set
+    /// (the server rejects unknown families at `infer()`).
     ewma: HashMap<String, f64>,
+    /// Per-family granted depth with narrowing hysteresis:
+    /// `(granted, below-grant streak)`. Widening tracks the EWMA
+    /// immediately; narrowing waits for [`NARROW_HYSTERESIS`]
+    /// consecutive below-grant samples, and a full drain resets the
+    /// grant to the lease depth. Maintained by the adaptive policy
+    /// only.
+    granted: HashMap<String, (usize, u32)>,
     /// High watermark of the depth granted to each family — the
     /// observability gauge behind `Snapshot::depth_by_family`.
     /// Maintained by the adaptive policy only.
@@ -177,6 +199,7 @@ impl ExecutorPool {
                 assigned: vec![None; workers],
                 idle: VecDeque::new(),
                 ewma: HashMap::new(),
+                granted: HashMap::new(),
                 depth_hwm: BTreeMap::new(),
                 producers,
                 closed: false,
@@ -206,14 +229,85 @@ impl ExecutorPool {
 
     /// Depth currently granted to `family` under the policy. Static
     /// policies never touch the EWMA state; the adaptive policy reads
-    /// the family's backlog average (absent → cold → lease depth).
+    /// the family's hysteresis-filtered grant (absent → cold → lease
+    /// depth).
     fn allowed_for(&self, st: &PoolState, family: &str) -> usize {
         match self.depth {
             DepthPolicy::Static(d) => d.max(1),
-            DepthPolicy::Adaptive { max } => {
-                let ewma = st.ewma.get(family).copied().unwrap_or(1.0);
-                (ewma.ceil() as usize).clamp(1, max.max(1))
+            DepthPolicy::Adaptive { .. } => {
+                st.granted.get(family).map_or(1, |&(g, _)| g)
             }
+        }
+    }
+
+    /// Fold one backlog sample (the queue length observed at a push,
+    /// pop, or release) into `family`'s EWMA and update its granted
+    /// depth. Widening applies immediately; narrowing waits for
+    /// [`NARROW_HYSTERESIS`] consecutive below-grant samples, then
+    /// drops straight to the EWMA-derived depth. Returns the granted
+    /// depth. Adaptive policy only — static policies never call this
+    /// (their depth is constant, and this runs under the contended
+    /// pool lock). Clone-free except a family's first sample.
+    fn fold_backlog_sample(
+        &self,
+        st: &mut PoolState,
+        family: &str,
+        sample: f64,
+        max: usize,
+    ) -> usize {
+        let ewma = match st.ewma.get_mut(family) {
+            Some(e) => {
+                *e = EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * *e;
+                *e
+            }
+            None => {
+                st.ewma.insert(family.to_string(), sample);
+                sample
+            }
+        };
+        let raw = (ewma.ceil() as usize).clamp(1, max.max(1));
+        // The high watermark can only advance when the grant widens
+        // (or on a family's first sample), so the gauge map is touched
+        // only then — not on every pop/release sample.
+        let (granted, widened) = match st.granted.get_mut(family) {
+            Some((g, below)) => {
+                if raw >= *g {
+                    let widened = raw > *g;
+                    *g = raw;
+                    *below = 0;
+                    (raw, widened)
+                } else {
+                    *below += 1;
+                    if *below >= NARROW_HYSTERESIS {
+                        *g = raw;
+                        *below = 0;
+                    }
+                    (*g, false)
+                }
+            }
+            None => {
+                st.granted.insert(family.to_string(), (raw, 0));
+                (raw, true)
+            }
+        };
+        if widened {
+            match st.depth_hwm.get_mut(family) {
+                Some(h) => *h = (*h).max(granted),
+                None => {
+                    st.depth_hwm.insert(family.to_string(), granted);
+                }
+            }
+        }
+        granted
+    }
+
+    /// A fully drained family (no queued chunks, no holders) returns
+    /// to the lease depth immediately — an empty queue is an
+    /// unambiguous drain, no hysteresis needed. The EWMA history
+    /// survives, so a returning burst re-widens within a few pushes.
+    fn reset_granted(st: &mut PoolState, family: &str) {
+        if let Some(g) = st.granted.get_mut(family) {
+            *g = (1, 0);
         }
     }
 
@@ -243,6 +337,19 @@ impl ExecutorPool {
         st.depth_hwm.iter().map(|(k, &v)| (k.clone(), v)).collect()
     }
 
+    /// The *currently* granted per-family depth, sorted by family —
+    /// unlike [`ExecutorPool::depth_by_family`]'s high watermark, this
+    /// gauge comes back down: pops and releases fold drain samples
+    /// into the EWMA, and a fully drained family resets to the lease
+    /// depth of 1. Empty under [`DepthPolicy::Static`].
+    pub fn current_depth_by_family(&self) -> Vec<(String, usize)> {
+        let st = self.state.lock().expect("pool lock");
+        let mut v: Vec<(String, usize)> =
+            st.granted.iter().map(|(k, &(g, _))| (k.clone(), g)).collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Enqueue a flushed chunk, blocking while the family is at its
     /// inflight cap. Called by the batcher shards only.
     pub fn push(&self, job: BatchJob) {
@@ -262,26 +369,12 @@ impl ExecutorPool {
         // and record the granted depth (gauge, high watermark). Static
         // policies skip the bookkeeping entirely — their depth is
         // constant, and this runs under the contended pool lock.
-        // Clone-free except the first push of a family's lifetime.
         let allowed = match self.depth {
             DepthPolicy::Static(d) => d.max(1),
-            DepthPolicy::Adaptive { .. } => {
+            DepthPolicy::Adaptive { max } => {
                 let sample =
                     st.queues.get(&job.family).map_or(0, |q| q.jobs.len()) as f64 + 1.0;
-                match st.ewma.get_mut(&job.family) {
-                    Some(e) => *e = EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * *e,
-                    None => {
-                        st.ewma.insert(job.family.clone(), sample);
-                    }
-                }
-                let granted = self.allowed_for(st, &job.family);
-                match st.depth_hwm.get_mut(&job.family) {
-                    Some(h) => *h = (*h).max(granted),
-                    None => {
-                        st.depth_hwm.insert(job.family.clone(), granted);
-                    }
-                }
-                granted
+                self.fold_backlog_sample(st, &job.family, sample, max)
             }
         };
         // Enqueue, cloning the family name only when a dispatch is
@@ -356,6 +449,11 @@ impl ExecutorPool {
                 if q.jobs.is_empty() || q.holders.len() >= allowed {
                     if q.jobs.is_empty() && q.holders.is_empty() {
                         st.queues.remove(&family);
+                        // Same full-drain width release as next_job's
+                        // removal path.
+                        if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
+                            Self::reset_granted(st, &family);
+                        }
                     }
                     continue;
                 }
@@ -383,15 +481,30 @@ impl ExecutorPool {
     pub fn next_job(&self, family: &str, w: usize) -> Option<BatchJob> {
         let mut guard = self.state.lock().expect("pool lock");
         let st = &mut *guard;
-        let allowed = self.allowed_for(st, family);
-        let q = st.queues.get_mut(family).expect("held family has a queue");
-        debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
-        match q.jobs.pop_front() {
+        let popped = {
+            let q = st.queues.get_mut(family).expect("held family has a queue");
+            debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
+            q.jobs.pop_front()
+        };
+        match popped {
             Some(job) => {
+                // Drain-side decay (adaptive only): fold the backlog
+                // this pop leaves behind, so a formerly hot family's
+                // granted depth follows its drain back down instead of
+                // waiting for new pushes to pull the average.
+                let allowed = match self.depth {
+                    DepthPolicy::Static(d) => d.max(1),
+                    DepthPolicy::Adaptive { max } => {
+                        let remaining =
+                            st.queues.get(family).map_or(0, |q| q.jobs.len()) as f64;
+                        self.fold_backlog_sample(st, family, remaining, max)
+                    }
+                };
                 // Backlog remains and concurrency headroom exists:
                 // offer the family to another worker (the multi-holder
                 // fan-out; a no-op under the lease discipline where
                 // holders.len() == allowed == 1).
+                let q = st.queues.get_mut(family).expect("held family has a queue");
                 if !q.jobs.is_empty() && q.holders.len() < allowed && !q.ready_queued {
                     q.ready_queued = true;
                     let rq = self.ready_queue(family);
@@ -402,9 +515,21 @@ impl ExecutorPool {
                 Some(job)
             }
             None => {
+                // Release: an empty pop is a zero-backlog observation
+                // (adaptive only) — fold it so the EWMA keeps decaying
+                // while holders wind down.
+                if let DepthPolicy::Adaptive { max } = self.depth {
+                    self.fold_backlog_sample(st, family, 0.0, max);
+                }
+                let q = st.queues.get_mut(family).expect("held family has a queue");
                 q.holders.retain(|&x| x != w);
                 if q.holders.is_empty() && !q.ready_queued {
                     st.queues.remove(family);
+                    // Fully drained: the extra reorder-depth width is
+                    // released outright (no new pushes needed).
+                    if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
+                        Self::reset_granted(st, family);
+                    }
                 }
                 None
             }
@@ -794,6 +919,62 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
+    fn adaptive_depth_narrows_back_to_lease_after_drain() {
+        // Widen a family by backlog, then drain it synchronously on
+        // this thread: each pop folds the shrinking queue into the
+        // EWMA and the final release resets the fully drained family
+        // to the lease depth — no new pushes involved.
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Adaptive { max: 4 }));
+        for seq in 0..8 {
+            pool.push(job("hot", seq));
+        }
+        let widened: std::collections::HashMap<String, usize> =
+            pool.current_depth_by_family().into_iter().collect();
+        assert!(widened["hot"] >= 2, "backlog must widen the grant, got {widened:?}");
+        let fam = pool.take_family(0).expect("queued family");
+        assert_eq!(fam, "hot");
+        let mut drained = 0;
+        while pool.next_job(&fam, 0).is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, 8);
+        let narrowed: std::collections::HashMap<String, usize> =
+            pool.current_depth_by_family().into_iter().collect();
+        assert_eq!(
+            narrowed["hot"], 1,
+            "a drained family must return to the single-holder lease"
+        );
+        // The high watermark keeps the historical width.
+        let hwm: std::collections::HashMap<String, usize> =
+            pool.depth_by_family().into_iter().collect();
+        assert!(hwm["hot"] >= 2, "high watermark survives the drain, got {hwm:?}");
+        pool.producer_done();
+        // Pool is already empty; a worker loop would exit immediately.
+        assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
+    fn narrowing_waits_out_the_hysteresis_streak() {
+        // Direct sample-level check of the hysteresis: a single
+        // below-grant sample must not narrow; a streak must.
+        let pool = ExecutorPool::new(1, true, 1, DepthPolicy::Adaptive { max: 4 });
+        let mut st = pool.state.lock().expect("pool lock");
+        // Build the grant up to the clamp (EWMA settles at 4.0).
+        for _ in 0..3 {
+            pool.fold_backlog_sample(&mut st, "hot", 4.0, 4);
+        }
+        assert_eq!(st.granted["hot"].0, 4);
+        // One dip: the streak starts but the grant holds.
+        pool.fold_backlog_sample(&mut st, "hot", 0.0, 4);
+        assert_eq!(st.granted["hot"].0, 4, "one below-grant sample must not narrow");
+        // The streak completes: the grant drops to the decayed EWMA.
+        for _ in 0..8 {
+            pool.fold_backlog_sample(&mut st, "hot", 0.0, 4);
+        }
+        assert_eq!(st.granted["hot"].0, 1, "sustained drain narrows to the lease");
     }
 
     #[test]

@@ -185,6 +185,8 @@ impl Server {
             RuntimeOptions {
                 naive_kernels: cfg.naive_kernels,
                 batched_gemm: cfg.batched_gemm,
+                kernel: cfg.kernel,
+                packed_weights: cfg.packed_weights,
                 panic_on_poison: cfg.panic_on_poison,
             },
         )?);
@@ -298,10 +300,13 @@ impl ServerHandle {
     }
 
     /// Current metrics snapshot, including the pool's per-family
-    /// depth gauges (the adaptive reorder depth's observability).
+    /// depth gauges (the adaptive reorder depth's observability):
+    /// both the high watermark and the *currently* granted depth, so
+    /// tests can prove a drained family narrowed back to the lease.
     pub fn metrics(&self) -> Snapshot {
         let mut snap = self.metrics.snapshot();
         snap.depth_by_family = self.pool.depth_by_family();
+        snap.current_depth_by_family = self.pool.current_depth_by_family();
         snap
     }
 

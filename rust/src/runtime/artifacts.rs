@@ -44,26 +44,29 @@ pub fn default_batch_axis(family: &str) -> usize {
     }
 }
 
-/// The `<N>` of a `<family>_b<N>` variant name, or `None` when the
-/// name carries no numeric batch suffix (such names are not batch
-/// variants). The single parser of the variant naming convention —
-/// `family_of`, [`ArtifactSpec::batch`], and the runtime's variant
-/// index all route through it.
-pub(crate) fn batch_suffix(name: &str) -> Option<usize> {
+/// Split a `<family>_b<N>` variant name at its batch suffix, or
+/// `None` when the name carries no numeric suffix (such names are not
+/// batch variants). The single parser of the variant naming
+/// convention — [`batch_suffix`], `family_of`, [`ArtifactSpec::batch`],
+/// and the runtime's variant index all route through it (one `rfind`
+/// per parse; the old split helpers each re-scanned the name).
+fn split_variant(name: &str) -> Option<(&str, usize)> {
     let idx = name.rfind("_b")?;
     let digits = &name[idx + 2..];
     if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
         return None;
     }
-    digits.parse().ok()
+    Some((&name[..idx], digits.parse().ok()?))
+}
+
+/// The `<N>` of a `<family>_b<N>` variant name, if any.
+pub(crate) fn batch_suffix(name: &str) -> Option<usize> {
+    split_variant(name).map(|(_, b)| b)
 }
 
 /// The `<family>` part of a `<family>_b<N>` variant name.
 fn family_of(name: &str) -> &str {
-    match batch_suffix(name) {
-        Some(_) => &name[..name.rfind("_b").expect("suffix implies separator")],
-        None => name,
-    }
+    split_variant(name).map_or(name, |(family, _)| family)
 }
 
 /// One artifact entry: a compiled model variant.

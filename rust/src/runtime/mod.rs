@@ -9,8 +9,11 @@
 //! * **reference** (default): the pure-Rust deterministic interpreter
 //!   in [`reference`] — no native dependencies, batched-GEMM execution
 //!   along the manifest's batch axes (per-sample execution kept as the
-//!   bench baseline via [`RuntimeOptions::batched_gemm`]), used by the
-//!   offline build and CI;
+//!   bench baseline via [`RuntimeOptions::batched_gemm`]), weights
+//!   prepacked into panel-major layout with the inner loops dispatched
+//!   once per load between an explicit AVX2+FMA microkernel and a
+//!   portable scalar path ([`RuntimeOptions::kernel`], overridable via
+//!   [`KERNEL_ENV`]), used by the offline build and CI;
 //! * **pjrt** (`--features pjrt`): the original XLA path — each
 //!   `artifacts/*.hlo.txt` goes through the `xla` crate
 //!   (`HloModuleProto::from_text_file` → `XlaComputation` →
@@ -60,6 +63,87 @@ enum Backend {
     Pjrt(pjrt::PjrtModel),
 }
 
+/// Which inner-loop implementation the reference backend's kernels
+/// use (the `kernel` key of `[server]` configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Runtime dispatch (the default): the explicit-SIMD microkernel
+    /// when the CPU supports AVX2+FMA and the panel layout is enabled,
+    /// the portable scalar kernels otherwise.
+    #[default]
+    Auto,
+    /// Force the explicit-SIMD microkernel; loading fails when the
+    /// host lacks AVX2+FMA or `packed_weights` is off.
+    Simd,
+    /// Force the portable scalar kernels — the measured benchmark
+    /// baseline, bit-identical to the pre-panel serving kernels.
+    Scalar,
+}
+
+impl KernelKind {
+    /// Parse a config/env value (`auto` | `simd` | `scalar`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => Self::Auto,
+            "simd" => Self::Simd,
+            "scalar" => Self::Scalar,
+            other => bail!("unknown kernel `{other}` (expected auto|simd|scalar)"),
+        })
+    }
+}
+
+/// Environment variable overriding the configured [`KernelKind`]
+/// (`auto` | `simd` | `scalar`; empty or unset = no override), read
+/// once per [`Runtime::load`]. This is the dispatch-override test
+/// hook: CI's forced-fallback matrix leg sets `MENSA_KERNEL=scalar`
+/// so the portable path is exercised end to end even on AVX2
+/// machines.
+pub const KERNEL_ENV: &str = "MENSA_KERNEL";
+
+/// Whether the explicit-SIMD microkernel can run on this host
+/// (x86-64 with AVX2 and FMA, detected at runtime).
+pub fn simd_kernel_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve the configured kernel to a concrete dispatch decision
+/// (`true` = SIMD microkernels). `env_override` (the [`KERNEL_ENV`]
+/// value, if set) wins over `kind`; `packed` says whether the panel
+/// layout the SIMD kernels require is being built. Pure so the
+/// dispatch table is unit-testable without touching the process
+/// environment.
+#[cfg_attr(feature = "pjrt", allow(dead_code))]
+fn resolve_kernel(kind: KernelKind, env_override: Option<&str>, packed: bool) -> Result<bool> {
+    let kind = match env_override {
+        Some(s) => KernelKind::parse(s)
+            .with_context(|| format!("parsing {KERNEL_ENV} override `{s}`"))?,
+        None => kind,
+    };
+    match kind {
+        KernelKind::Scalar => Ok(false),
+        KernelKind::Auto => Ok(packed && simd_kernel_available()),
+        KernelKind::Simd => {
+            if !simd_kernel_available() {
+                bail!("kernel = \"simd\" requested but this host lacks AVX2+FMA");
+            }
+            if !packed {
+                bail!(
+                    "kernel = \"simd\" requires the panel layout \
+                     (packed_weights = true and naive_kernels = false)"
+                );
+            }
+            Ok(true)
+        }
+    }
+}
+
 /// Load-time options (kernel selection for benchmarking).
 #[derive(Debug, Clone, Copy)]
 pub struct RuntimeOptions {
@@ -75,6 +159,21 @@ pub struct RuntimeOptions {
     /// matvec — bit-identical numerics, kept as the measured benchmark
     /// baseline for `benches/hotpath_micro.rs`.
     pub batched_gemm: bool,
+    /// Kernel implementation for the reference backend's inner loops:
+    /// [`KernelKind::Auto`] (the default) resolves once per load via
+    /// `is_x86_feature_detected!`; `scalar` is the measured bench
+    /// baseline (bit-identical to the pre-panel kernels); `simd`
+    /// forces the AVX2+FMA microkernel and fails to load where it
+    /// cannot run. The [`KERNEL_ENV`] environment variable overrides
+    /// this field (the CI forced-fallback hook).
+    pub kernel: KernelKind,
+    /// Prepack each weight matrix into panel-major layout at load time
+    /// (the default): output-row panels of 8 interleaved k-major, so
+    /// the GEMM and recurrent kernels read weights purely
+    /// sequentially. `false` keeps the row-major transposed layout —
+    /// the measured `packed_panels` benchmark baseline (scalar kernels
+    /// only; the SIMD microkernel requires the panels).
+    pub packed_weights: bool,
     /// Test hook: panic when an executed input contains the
     /// [`POISON_INPUT`] sentinel. This is how the integration tests
     /// drive the server's panic-isolation path (`catch_unwind` per
@@ -85,7 +184,13 @@ pub struct RuntimeOptions {
 
 impl Default for RuntimeOptions {
     fn default() -> Self {
-        Self { naive_kernels: false, batched_gemm: true, panic_on_poison: false }
+        Self {
+            naive_kernels: false,
+            batched_gemm: true,
+            kernel: KernelKind::Auto,
+            packed_weights: true,
+            panic_on_poison: false,
+        }
     }
 }
 
@@ -162,6 +267,10 @@ pub struct Runtime {
     /// entry with `batch >= n`.
     variants: HashMap<String, Vec<(usize, String)>>,
     platform: String,
+    /// Resolved kernel dispatch label (`simd` | `scalar` for the
+    /// reference backend, `native` for PJRT) — diagnostics and the
+    /// dispatch tests' observability.
+    kernel: &'static str,
 }
 
 // The reference backend is plain owned data (weights behind `Arc`s),
@@ -198,25 +307,36 @@ impl Runtime {
         }
     }
 
-    /// Build every manifest entry with the reference interpreter.
+    /// Build every manifest entry with the reference interpreter. The
+    /// kernel dispatch (`opts.kernel`, overridable via [`KERNEL_ENV`])
+    /// resolves **once here** — every model of the load shares the
+    /// decision, so batched and per-sample paths can never mix kernel
+    /// paths within one server.
     #[cfg_attr(feature = "pjrt", allow(dead_code))]
     fn load_reference(manifest: Manifest, opts: RuntimeOptions) -> Result<Self> {
+        let env_override = std::env::var(KERNEL_ENV).ok().filter(|s| !s.is_empty());
+        let packed = opts.packed_weights && !opts.naive_kernels;
+        let simd = resolve_kernel(opts.kernel, env_override.as_deref(), packed)?;
         let mut cache = reference::WeightCache::default();
         let mut models = HashMap::new();
         for spec in manifest.artifacts {
-            let model = reference::RefModel::build_with(&spec, opts, &mut cache)
+            let model = reference::RefModel::build_with(&spec, opts, simd, &mut cache)
                 .with_context(|| format!("building reference model `{}`", spec.name))?;
             models.insert(
                 spec.name.clone(),
                 LoadedModel { spec, backend: Backend::Reference(model) },
             );
         }
-        Ok(Self::assemble(models, "cpu".into()))
+        Ok(Self::assemble(models, "cpu".into(), if simd { "simd" } else { "scalar" }))
     }
 
     /// Finish construction: build the sorted per-family variant index
     /// over the loaded models (shared by both backends).
-    fn assemble(models: HashMap<String, LoadedModel>, platform: String) -> Self {
+    fn assemble(
+        models: HashMap<String, LoadedModel>,
+        platform: String,
+        kernel: &'static str,
+    ) -> Self {
         let mut variants: HashMap<String, Vec<(usize, String)>> = HashMap::new();
         for (name, model) in &models {
             if let Some(b) = batch_suffix(name) {
@@ -229,7 +349,7 @@ impl Runtime {
         for list in variants.values_mut() {
             list.sort_unstable();
         }
-        Self { models, variants, platform }
+        Self { models, variants, platform, kernel }
     }
 
     /// Names of all loaded model variants.
@@ -274,6 +394,15 @@ impl Runtime {
         &self.platform
     }
 
+    /// The resolved kernel dispatch: `simd` (AVX2+FMA microkernels) or
+    /// `scalar` (portable path) for the reference backend, `native`
+    /// for PJRT. This is how the forced-fallback tests observe that
+    /// `kernel = "scalar"` / `MENSA_KERNEL=scalar` actually took
+    /// effect.
+    pub fn kernel_path(&self) -> &'static str {
+        self.kernel
+    }
+
     /// Families with at least one batch variant loaded, sorted. The
     /// server validates request families against this set up front, so
     /// unknown names are rejected at `infer()` instead of occupying
@@ -316,6 +445,42 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kernel_kind_parses_and_rejects() {
+        assert_eq!(KernelKind::parse("auto").unwrap(), KernelKind::Auto);
+        assert_eq!(KernelKind::parse("simd").unwrap(), KernelKind::Simd);
+        assert_eq!(KernelKind::parse("scalar").unwrap(), KernelKind::Scalar);
+        let err = KernelKind::parse("sse2").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kernel"), "{err:#}");
+    }
+
+    #[test]
+    fn kernel_resolution_table() {
+        // Scalar always resolves scalar, whatever the host supports.
+        assert!(!resolve_kernel(KernelKind::Scalar, None, true).unwrap());
+        // Auto without the panel layout never selects SIMD (the
+        // microkernel requires packed weights).
+        assert!(!resolve_kernel(KernelKind::Auto, None, false).unwrap());
+        // Auto with panels follows the host's capability.
+        assert_eq!(
+            resolve_kernel(KernelKind::Auto, None, true).unwrap(),
+            simd_kernel_available()
+        );
+        // Forcing simd without the panel layout is a load error even
+        // on AVX2 hosts; without AVX2 it errors for the missing ISA.
+        assert!(resolve_kernel(KernelKind::Simd, None, false).is_err());
+        if simd_kernel_available() {
+            assert!(resolve_kernel(KernelKind::Simd, None, true).unwrap());
+        } else {
+            assert!(resolve_kernel(KernelKind::Simd, None, true).is_err());
+        }
+        // The env override wins over the configured kind (the CI
+        // forced-fallback hook) and rejects junk values.
+        assert!(!resolve_kernel(KernelKind::Auto, Some("scalar"), true).unwrap());
+        assert!(!resolve_kernel(KernelKind::Simd, Some("scalar"), true).unwrap());
+        assert!(resolve_kernel(KernelKind::Auto, Some("avx512"), true).is_err());
+    }
 
     #[test]
     fn batch_suffix_parsing() {

@@ -73,5 +73,5 @@ pub(super) fn load(dir: &Path, manifest: Manifest) -> Result<Runtime> {
             },
         );
     }
-    Ok(Runtime::assemble(models, platform))
+    Ok(Runtime::assemble(models, platform, "native"))
 }

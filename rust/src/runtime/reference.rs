@@ -17,30 +17,70 @@
 //! bit for bit — the coordinator's correctness contract. On top of the
 //! seed identity, builds share the generated matrices *physically*: a
 //! [`WeightCache`] hands every variant of a family the same
-//! `Arc<Vec<f32>>`, so loading `edge_cnn_b1/b4/b8` materializes each
-//! weight matrix once instead of three times.
+//! `Arc<Weights>`, so loading `edge_cnn_b1/b4/b8` materializes each
+//! weight matrix once instead of three times. The cache is keyed by
+//! `Arc<str>` family names with borrowed `&str` lookup, so a cache hit
+//! on the build path allocates nothing (the old `(String, …)` tuple
+//! key cloned the family name once per variant).
 //!
-//! # Kernels (§Perf)
+//! # Weight layout (§Perf)
+//!
+//! The serving weight layout is **panel-major prepacked** (built once
+//! per family at [`WeightCache`] fill time, owned by the cache — never
+//! per-worker scratch). The transposed `[n_out × n_in]` matrix is
+//! regrouped into panels of [`PANEL_ROWS`] = 8 output rows matching
+//! the microkernel's register-block height, each panel interleaved
+//! k-major — element `(row r, input k)` of panel `p` lives at
+//! `p·8·n_in + k·8 + r` — with the `n_out % 8` tail rows stored
+//! row-major, unchanged, after the last panel. Both the batched GEMM
+//! and the recurrent `Wx`/`Wh` streams therefore read weights **purely
+//! sequentially**: one hardware stream instead of the four strided row
+//! streams of the old layout, with each 32-byte group feeding one
+//! 8-lane register block. The row-major transposed layout survives as
+//! the `packed_weights = false` benchmark baseline (the `packed_panels`
+//! A/B in `benches/hotpath_micro.rs`), and the recurrent net keeps its
+//! row-major copy alongside the panels because the scalar recurrent
+//! cell streams whole `Wx`/`Wh` rows through [`dot`].
+//!
+//! # Kernels and dispatch (§Perf)
+//!
+//! Two kernel implementations sit on top of the packed layout,
+//! selected **once per `Runtime::load`** by the `kernel` config knob
+//! (`auto` | `simd` | `scalar`, see `RuntimeOptions::kernel`) with
+//! `auto` resolving via `is_x86_feature_detected!`:
+//!
+//! * **simd** — explicit 8-lane f32 AVX2+FMA microkernels
+//!   (`core::arch::x86_64`, the [`simd`] module): per panel one
+//!   `_mm256_fmadd_ps` chain over ascending `k` with the activation
+//!   broadcast, register-tiled 8 output rows × 4 batch columns in the
+//!   batched GEMM so each loaded weight vector feeds four samples.
+//!   Numerics are *ulp-close* to the scalar path (FMA contracts the
+//!   multiply-add and lanes split the row set), property-tested by
+//!   `rust/tests/kernel_paths.rs`;
+//! * **scalar** — the portable unrolled kernels. On the packed layout
+//!   the scalar panel kernels process 8 rows per pass (one sequential
+//!   weight stream, `x[k]` loaded once per 8 rows); on the row-major
+//!   layout they are exactly the pre-packing blocked kernels. Every
+//!   scalar route keeps the historical per-element accumulation order
+//!   (single accumulator per output, `k` ascending, [`dot`] for the
+//!   `n_out % 4` remainder rows), so **scalar outputs are bit-identical
+//!   across layouts and to the pre-panel kernels** — the measured
+//!   benchmark baseline.
+//!
+//! # Batched execution
 //!
 //! The default execution path is a **true batched GEMM**
 //! (`batched_gemm: true`): the whole packed activation block is
-//! computed as `X · Wᵀ` with register blocking over *both* output rows
-//! and batch columns (4×4), so each weight element loaded from memory
-//! feeds four samples' MACs and each activation element feeds four
-//! output rows. Weights are streamed **once per four-sample column
-//! block instead of once per sample** — the software analogue of the
-//! parameter-traffic amortization the paper attributes to batching on
-//! the Edge TPU. The recurrent cell batches the same way: each `Wx` /
-//! `Wh` row is streamed once per timestep for the whole batch.
-//!
-//! The per-sample path (`batched_gemm: false`) is the same blocked,
-//! transposed-weight matvec applied one sample at a time; it survives
-//! as the measured benchmark baseline for `benches/hotpath_micro.rs`.
-//! Both paths use identical per-element accumulation order (single
-//! accumulator, `k` ascending, shared `dot` for remainder rows), so
-//! they are **bit-identical** — asserted by
-//! `rust/tests/batched_gemm.rs` across batch sizes and both batch
-//! axes.
+//! computed as `X · Wᵀ` with register blocking over output rows and
+//! batch columns, so each weight element loaded from memory feeds four
+//! samples' MACs — weights stream **once per column block instead of
+//! once per sample**, the software analogue of the parameter-traffic
+//! amortization the paper attributes to batching on the Edge TPU. The
+//! recurrent cell batches the same way. The per-sample path
+//! (`batched_gemm: false`) applies the same kernels one sample at a
+//! time; within a kernel path the two are **bit-identical** (identical
+//! per-element accumulation order), asserted by
+//! `rust/tests/batched_gemm.rs` and `rust/tests/kernel_paths.rs`.
 //!
 //! Execution is **zero-allocation** on the hot path: extraction,
 //! pre-activation, and hidden-state buffers live in a caller-owned
@@ -69,11 +109,11 @@ use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Family-keyed weight store: every batch variant of a family resolves
-/// to the same physical matrix. Keyed by `(family, matrix index,
-/// fan_in, fan_out)`; one cache lives for the duration of a
-/// `Runtime::load`, which is the only place models are built.
-pub(crate) type WeightCache = HashMap<(String, u64, usize, usize), Arc<Vec<f32>>>;
+/// Output rows per packed weight panel — the SIMD register-block
+/// height (8 f32 lanes in one AVX2 `ymm` register). The scalar panel
+/// kernels use the same height, so one packed layout serves both
+/// dispatch paths.
+pub(crate) const PANEL_ROWS: usize = 8;
 
 /// Input sentinel for the `panic_on_poison` test hook: a runtime
 /// loaded with `RuntimeOptions::panic_on_poison` panics (by exact bit
@@ -108,16 +148,183 @@ pub struct ExecScratch {
     batch_result: Vec<f32>,
 }
 
+/// How one weight matrix is materialized (derived from
+/// [`RuntimeOptions`] and the net kind at build time).
+#[derive(Debug, Clone, Copy)]
+struct WeightMode {
+    /// Pre-rewrite scan layout (`rows` holds the canonical
+    /// `[fan_in × fan_out]` matrix; no panels).
+    naive: bool,
+    /// Build the panel-major pack.
+    packed: bool,
+    /// Keep the row-major transposed copy alongside the panels (the
+    /// recurrent scalar cell streams whole rows; dense nets drop it
+    /// when packed).
+    keep_rows: bool,
+}
+
+/// One deterministic weight matrix in its compute layout(s). Owned by
+/// the [`WeightCache`] (one instance per `(family, index, dims)`,
+/// shared by every batch variant behind an `Arc`), so the panel pack
+/// runs once per family — never per worker or per variant.
+#[derive(Debug)]
+pub(crate) struct Weights {
+    n_in: usize,
+    n_out: usize,
+    /// Row-major layout. Default modes: transposed `[n_out × n_in]`
+    /// (empty for packed dense nets, which need only the panels).
+    /// Naive mode: the canonical `[n_in × n_out]` scan layout.
+    rows: Vec<f32>,
+    /// Panel-major pack of the transposed matrix (see [`pack_panels`];
+    /// empty when packing is disabled or in naive mode).
+    panels: Vec<f32>,
+}
+
+impl Weights {
+    /// Generate and lay out the matrix for `(family, index)`.
+    fn build(family: &str, index: u64, fan_in: usize, fan_out: usize, mode: WeightMode) -> Self {
+        let canonical = gen_weights(family, index, fan_in, fan_out);
+        if mode.naive {
+            return Self { n_in: fan_in, n_out: fan_out, rows: canonical, panels: Vec::new() };
+        }
+        let transposed = transpose(&canonical, fan_in, fan_out);
+        let panels = if mode.packed {
+            pack_panels(&transposed, fan_out, fan_in)
+        } else {
+            Vec::new()
+        };
+        let rows = if mode.packed && !mode.keep_rows { Vec::new() } else { transposed };
+        Self { n_in: fan_in, n_out: fan_out, rows, panels }
+    }
+
+    /// Full [`PANEL_ROWS`]-row panels in the pack (0 when unpacked).
+    fn full_panels(&self) -> usize {
+        if self.panels.is_empty() {
+            0
+        } else {
+            self.n_out / PANEL_ROWS
+        }
+    }
+
+    /// First output row not covered by a full panel.
+    fn tail_start(&self) -> usize {
+        self.full_panels() * PANEL_ROWS
+    }
+
+    /// One packed panel (`PANEL_ROWS × n_in` elements, k-interleaved).
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.panels[p * PANEL_ROWS * self.n_in..][..PANEL_ROWS * self.n_in]
+    }
+
+    /// The row-major transposed tail rows after the last full panel.
+    fn tail(&self) -> &[f32] {
+        &self.panels[self.tail_start() * self.n_in..]
+    }
+
+    /// Transposed row `j` (`n_in` elements). Only valid in layouts
+    /// that keep the row-major copy (unpacked, or recurrent packed).
+    fn row(&self, j: usize) -> &[f32] {
+        &self.rows[j * self.n_in..][..self.n_in]
+    }
+
+    /// The raw row-major buffer (naive scan layout or transposed,
+    /// depending on the build mode).
+    fn rows_raw(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// `out += Wᵀ·x`, routed by layout and kernel path. Every scalar
+    /// route is bit-identical (same per-element accumulation order);
+    /// the SIMD route is ulp-close.
+    fn matvec_acc(&self, x: &[f32], out: &mut [f32], simd: bool) {
+        if self.panels.is_empty() {
+            return matvec_transposed_acc(&self.rows, x, out);
+        }
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: `simd` is only ever true after the load-time
+            // dispatch verified AVX2+FMA via `is_x86_feature_detected!`
+            // (see `runtime::resolve_kernel`).
+            return unsafe { simd::matvec_panels(self, x, out) };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = simd;
+        matvec_panels_acc(self, x, out);
+    }
+
+    /// Batched `out[c] += Wᵀ·x[c]` over `cols` packed samples, routed
+    /// by layout and kernel path (see [`Weights::matvec_acc`]).
+    fn gemm_acc(&self, xs: &[f32], cols: usize, out: &mut [f32], simd: bool) {
+        if self.panels.is_empty() {
+            return gemm_transposed_acc(&self.rows, xs, self.n_in, self.n_out, cols, out);
+        }
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: as in `matvec_acc` — AVX2+FMA checked at load.
+            return unsafe { simd::gemm_panels(self, xs, cols, out) };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = simd;
+        gemm_panels_acc(self, xs, cols, out);
+    }
+}
+
+/// Family-keyed weight store: every batch variant of a family resolves
+/// to the same physical [`Weights`]. The outer map is keyed by
+/// `Arc<str>` family names and looked up by borrowed `&str`
+/// (`Arc<str>: Borrow<str>`), so the steady state — every variant
+/// after a family's first — neither clones a `String` nor allocates at
+/// all. One cache lives for the duration of a `Runtime::load`, which
+/// is the only place models are built.
+#[derive(Debug, Default)]
+pub(crate) struct WeightCache {
+    families: HashMap<Arc<str>, HashMap<(u64, usize, usize), Arc<Weights>>>,
+}
+
+impl WeightCache {
+    /// The matrix for `(family, index, fan_in, fan_out)`, building (and
+    /// packing) it on first use. Hits are clone-free: the family key is
+    /// allocated once per family lifetime, on the first miss.
+    fn get_or_build(
+        &mut self,
+        family: &str,
+        index: u64,
+        fan_in: usize,
+        fan_out: usize,
+        mode: WeightMode,
+    ) -> Arc<Weights> {
+        let dims = (index, fan_in, fan_out);
+        if let Some(per_dim) = self.families.get_mut(family) {
+            if let Some(w) = per_dim.get(&dims) {
+                return Arc::clone(w);
+            }
+            let w = Arc::new(Weights::build(family, index, fan_in, fan_out, mode));
+            per_dim.insert(dims, Arc::clone(&w));
+            return w;
+        }
+        let w = Arc::new(Weights::build(family, index, fan_in, fan_out, mode));
+        let mut per_dim = HashMap::new();
+        per_dim.insert(dims, Arc::clone(&w));
+        self.families.insert(Arc::<str>::from(family), per_dim);
+        w
+    }
+
+    /// Total cached matrices across all families (tests only).
+    #[cfg(test)]
+    fn matrices(&self) -> usize {
+        self.families.values().map(HashMap::len).sum()
+    }
+}
+
 /// Per-sample network behind one artifact.
 enum RefNet {
-    /// `tanh(Σᵢ Wᵢ·xᵢ)`; one weight matrix per declared input. Stored
-    /// transposed `[out × in]` by default, `[in × out]` in naive mode.
-    Dense { weights: Vec<Arc<Vec<f32>>> },
+    /// `tanh(Σᵢ Wᵢ·xᵢ)`; one weight matrix per declared input.
+    Dense { weights: Vec<Arc<Weights>> },
     /// Time-major recurrent cell over `t` steps of width `d`, hidden
-    /// size `h`. Default layout: `wx` is `[h × d]`, `wh` is `[h × h]`
-    /// (transposed); naive mode keeps the old `[d × h]` / `[h × h]`
-    /// scan layout.
-    Recurrent { wx: Arc<Vec<f32>>, wh: Arc<Vec<f32>>, t: usize, d: usize, h: usize },
+    /// size `h`. `wx` is `[h × d]`, `wh` is `[h × h]` (transposed
+    /// rows, plus panels when packed; naive mode keeps the old
+    /// `[d × h]` / `[h × h]` scan layout).
+    Recurrent { wx: Arc<Weights>, wh: Arc<Weights>, t: usize, d: usize, h: usize },
 }
 
 /// A loaded reference model: the per-sample net plus the geometry
@@ -131,6 +338,10 @@ pub(crate) struct RefModel {
     /// instead of once per sample); `false` is the per-sample bench
     /// baseline. Ignored in naive mode (which is per-sample only).
     batched: bool,
+    /// Resolved kernel dispatch: explicit AVX2+FMA microkernels (true)
+    /// vs the portable scalar path. Resolved once per `Runtime::load`;
+    /// true implies the panel layout was built.
+    simd: bool,
     /// Test hook: panic on the [`POISON_INPUT`] sentinel (see
     /// `RuntimeOptions::panic_on_poison`).
     poison: bool,
@@ -147,9 +358,9 @@ fn per_sample_elems(shape: &[i64], axis: usize) -> usize {
 /// Deterministic weight matrix for `(family, index)`, scaled to keep
 /// `tanh` out of saturation (`U(-√(3/fan_in), √(3/fan_in))`). The
 /// canonical layout is row-major `[fan_in × fan_out]` — the same
-/// logical weights PR 1 generated — so the naive and blocked kernels
-/// compute the same network (the blocked kernel stores a transpose of
-/// this canonical matrix, not a reinterpretation of the stream).
+/// logical weights PR 1 generated — so every kernel layout computes
+/// the same network (transpose and pack reshuffle this canonical
+/// matrix, never reinterpret the stream).
 fn gen_weights(family: &str, index: u64, fan_in: usize, fan_out: usize) -> Vec<f32> {
     let seed = fnv1a_64(family) ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(index + 1);
     let mut rng = Rng::new(seed);
@@ -166,6 +377,31 @@ fn transpose(v: &[f32], rows: usize, cols: usize) -> Vec<f32> {
             out[c * rows + r] = v[r * cols + c];
         }
     }
+    out
+}
+
+/// Panel-major repack of a transposed `[n_out × n_in]` matrix: full
+/// panels of [`PANEL_ROWS`] output rows interleaved k-major — element
+/// `(row r, input k)` of panel `p` at `p·8·n_in + k·8 + r` — then the
+/// `n_out % 8` tail rows row-major, byte-for-byte as in the source.
+/// One contiguous buffer of the same length, so the pack costs one
+/// pass and no extra resident memory beyond the (dropped or kept)
+/// row-major original.
+fn pack_panels(transposed: &[f32], n_out: usize, n_in: usize) -> Vec<f32> {
+    debug_assert_eq!(transposed.len(), n_out * n_in);
+    let mut out = vec![0.0f32; transposed.len()];
+    let nfull = n_out / PANEL_ROWS;
+    for p in 0..nfull {
+        let base = p * PANEL_ROWS * n_in;
+        for r in 0..PANEL_ROWS {
+            let row = &transposed[(p * PANEL_ROWS + r) * n_in..][..n_in];
+            for (k, &v) in row.iter().enumerate() {
+                out[base + k * PANEL_ROWS + r] = v;
+            }
+        }
+    }
+    let tail = nfull * PANEL_ROWS * n_in;
+    out[tail..].copy_from_slice(&transposed[tail..]);
     out
 }
 
@@ -193,7 +429,10 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 /// Accumulate `out += Wᵀ · x` where `wt` is transposed `[out × in]`.
 /// Blocked four output rows at a time so each loaded `x` element feeds
-/// four MACs from registers.
+/// four MACs from registers. This is the pre-panel kernel, kept as the
+/// `packed_weights = false` benchmark baseline and as the shared tail
+/// handler: the panel kernels route their `n_out % 8` tail rows here,
+/// which is what makes scalar outputs bit-identical across layouts.
 fn matvec_transposed_acc(wt: &[f32], x: &[f32], out: &mut [f32]) {
     let n_in = x.len();
     debug_assert_eq!(wt.len(), n_in * out.len());
@@ -223,19 +462,14 @@ fn matvec_transposed_acc(wt: &[f32], x: &[f32], out: &mut [f32]) {
 }
 
 /// Accumulate `out[c] += Wᵀ · x[c]` for every sample column `c` as one
-/// blocked GEMM: `wt` is transposed `[n_out × n_in]`, `xs` packs
-/// `cols` samples row-major (`cols × n_in`), `out` is `cols × n_out`.
-///
-/// Register-blocked 4 output rows × 4 batch columns: inside a block,
-/// each loaded weight element feeds four samples and each loaded
-/// activation feeds four output rows, so the weight matrix is streamed
-/// once per four-sample column block instead of once per sample — the
-/// batch amortization of parameter traffic.
-///
-/// Per output element the accumulation order is identical to
-/// [`matvec_transposed_acc`] (single accumulator, `k` ascending;
-/// remainder rows via the same [`dot`]), so this path is bit-identical
-/// to the per-sample path.
+/// blocked GEMM over the row-major transposed layout: `wt` is
+/// `[n_out × n_in]`, `xs` packs `cols` samples row-major
+/// (`cols × n_in`), `out` is `cols × n_out`. Register-blocked 4 output
+/// rows × 4 batch columns; per output element the accumulation order
+/// is identical to [`matvec_transposed_acc`] (single accumulator, `k`
+/// ascending; remainder rows via the same [`dot`]), so this path is
+/// bit-identical to the per-sample path. Kept as the
+/// `packed_weights = false` benchmark baseline.
 fn gemm_transposed_acc(
     wt: &[f32],
     xs: &[f32],
@@ -311,25 +545,321 @@ fn gemm_transposed_acc(
     }
 }
 
+/// Scalar `out += Wᵀ·x` over the panel-major layout: per full panel,
+/// 8 independent accumulator chains walk one sequential weight stream
+/// (`x[k]` loaded once per 8 rows instead of once per 4). Per output
+/// element the accumulation is a single chain over ascending `k` —
+/// exactly [`matvec_transposed_acc`]'s full-block order — and the tail
+/// rows run through [`matvec_transposed_acc`] itself (full 4-row
+/// blocks, then [`dot`]), so this is **bit-identical** to the
+/// row-major kernel for every `n_out`.
+fn matvec_panels_acc(w: &Weights, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.n_in);
+    debug_assert_eq!(out.len(), w.n_out);
+    for p in 0..w.full_panels() {
+        let panel = w.panel(p);
+        let mut acc = [0.0f32; PANEL_ROWS];
+        for (k, &xv) in x.iter().enumerate() {
+            let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+            for (a, &wv) in acc.iter_mut().zip(wk) {
+                *a += wv * xv;
+            }
+        }
+        for (dst, a) in out[p * PANEL_ROWS..][..PANEL_ROWS].iter_mut().zip(acc) {
+            *dst += a;
+        }
+    }
+    matvec_transposed_acc(w.tail(), x, &mut out[w.tail_start()..]);
+}
+
+/// Scalar batched `out[c] += Wᵀ·x[c]` over the panel-major layout:
+/// 8 output rows × 4 batch columns per register tile, one sequential
+/// weight stream per panel (streamed once per four-sample column
+/// block — the batch amortization of parameter traffic, now on a
+/// purely sequential walk). Per-cell accumulation order matches
+/// [`gemm_transposed_acc`] exactly (single chain, ascending `k`; tail
+/// rows via [`matvec_transposed_acc`] per column), so the scalar
+/// batched path is bit-identical across layouts.
+fn gemm_panels_acc(w: &Weights, xs: &[f32], cols: usize, out: &mut [f32]) {
+    let (n_in, n_out) = (w.n_in, w.n_out);
+    debug_assert_eq!(xs.len(), cols * n_in);
+    debug_assert_eq!(out.len(), cols * n_out);
+    for p in 0..w.full_panels() {
+        let panel = w.panel(p);
+        let o = p * PANEL_ROWS;
+        let mut c = 0;
+        while c + 4 <= cols {
+            let x0 = &xs[c * n_in..][..n_in];
+            let x1 = &xs[(c + 1) * n_in..][..n_in];
+            let x2 = &xs[(c + 2) * n_in..][..n_in];
+            let x3 = &xs[(c + 3) * n_in..][..n_in];
+            // acc[col][row]: each cell is a single accumulator chain
+            // over ascending k, exactly like the row-major kernel.
+            let mut acc = [[0.0f32; PANEL_ROWS]; 4];
+            for k in 0..n_in {
+                let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+                let xk = [x0[k], x1[k], x2[k], x3[k]];
+                for (aj, &xv) in acc.iter_mut().zip(&xk) {
+                    for (a, &wv) in aj.iter_mut().zip(wk) {
+                        *a += wv * xv;
+                    }
+                }
+            }
+            for (j, aj) in acc.iter().enumerate() {
+                let dst = &mut out[(c + j) * n_out + o..][..PANEL_ROWS];
+                for (d, &a) in dst.iter_mut().zip(aj) {
+                    *d += a;
+                }
+            }
+            c += 4;
+        }
+        // Column remainder: the single-sample panel block.
+        while c < cols {
+            let x = &xs[c * n_in..][..n_in];
+            let mut acc = [0.0f32; PANEL_ROWS];
+            for (k, &xv) in x.iter().enumerate() {
+                let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+                for (a, &wv) in acc.iter_mut().zip(wk) {
+                    *a += wv * xv;
+                }
+            }
+            let dst = &mut out[c * n_out + o..][..PANEL_ROWS];
+            for (d, &a) in dst.iter_mut().zip(acc) {
+                *d += a;
+            }
+            c += 1;
+        }
+    }
+    // Tail rows: per column, the row-major kernel itself — full 4-row
+    // blocks single-chain, remainder rows via `dot` — the pre-packing
+    // per-row treatment, bit for bit.
+    let (tail, ts) = (w.tail(), w.tail_start());
+    if ts < n_out {
+        for c in 0..cols {
+            matvec_transposed_acc(
+                tail,
+                &xs[c * n_in..][..n_in],
+                &mut out[c * n_out + ts..(c + 1) * n_out],
+            );
+        }
+    }
+}
+
+/// Recurrent pre-activation `pre = Wx·xₜ + Wh·hₜ₋₁` for one sample,
+/// routed by kernel path. The scalar route is the historical cell
+/// ([`dot`] + [`dot`] per output row, reading the row-major copy);
+/// the SIMD route runs one FMA chain per panel over both weight
+/// streams. Both the batched and per-sample recurrent paths call this
+/// per sample (the scalar batched path keeps its row-outer streaming
+/// loop instead, which computes the identical bits), so the two
+/// execution paths stay bit-identical within a kernel path.
+fn recurrent_step_into(
+    wx: &Weights,
+    wh: &Weights,
+    xt: &[f32],
+    hidden: &[f32],
+    pre: &mut [f32],
+    simd: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `simd` is only ever true after the load-time
+        // dispatch verified AVX2+FMA (see `runtime::resolve_kernel`).
+        return unsafe { simd::recurrent_panels_step(wx, wh, xt, hidden, pre) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    for (j, dst) in pre.iter_mut().enumerate() {
+        *dst = dot(wx.row(j), xt) + dot(wh.row(j), hidden);
+    }
+}
+
+/// Explicit-SIMD (AVX2 + FMA) microkernels over the panel-major
+/// layout — the `kernel = "simd"` / resolved-`auto` dispatch target.
+///
+/// # Safety contract
+///
+/// Every function here is `#[target_feature(enable = "avx2", enable =
+/// "fma")]` and therefore `unsafe fn`. The **only** obligation on the
+/// caller is that the host CPU supports AVX2 and FMA; the runtime
+/// establishes this once per `Runtime::load` via
+/// `is_x86_feature_detected!` (`runtime::resolve_kernel`), and the
+/// `simd` flag threaded through [`RefModel`] is the witness — no call
+/// site sets it by hand. All memory access stays within safe-slice
+/// bounds: pointer offsets mirror the checked panel accessors
+/// ([`Weights::panel`] / [`Weights::tail`]) and are
+/// `debug_assert`-guarded against the slice lengths, and every vector
+/// memory op is unaligned (`loadu`/`storeu`), so there is no alignment
+/// precondition.
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::{dot, matvec_transposed_acc, Weights, PANEL_ROWS};
+    use core::arch::x86_64::*;
+
+    /// `out += Wᵀ·x` (panel layout): one 8-lane FMA chain per panel
+    /// over ascending `k` (lane `r` holds output row `p·8 + r`), the
+    /// activation broadcast once per `k`. Tail rows go through the
+    /// scalar row-major kernel, bit-identical to the scalar path.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (runtime-checked at dispatch).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn matvec_panels(w: &Weights, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), w.n_in);
+        debug_assert_eq!(out.len(), w.n_out);
+        for p in 0..w.full_panels() {
+            let panel = w.panel(p);
+            let mut acc = _mm256_setzero_ps();
+            for (k, &xv) in x.iter().enumerate() {
+                let wv = _mm256_loadu_ps(panel.as_ptr().add(k * PANEL_ROWS));
+                acc = _mm256_fmadd_ps(wv, _mm256_set1_ps(xv), acc);
+            }
+            let dst = out.as_mut_ptr().add(p * PANEL_ROWS);
+            _mm256_storeu_ps(dst, _mm256_add_ps(_mm256_loadu_ps(dst), acc));
+        }
+        matvec_transposed_acc(w.tail(), x, &mut out[w.tail_start()..]);
+    }
+
+    /// Batched `out[c] += Wᵀ·x[c]` (panel layout): 8 output rows × 4
+    /// batch columns per register tile — each loaded weight vector
+    /// feeds four samples' FMAs, so weights stream once per column
+    /// block (the batch amortization) on a purely sequential walk.
+    /// Per-cell structure (one FMA chain, ascending `k`) matches
+    /// [`matvec_panels`], so the batched and per-sample SIMD paths are
+    /// bit-identical to each other.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (runtime-checked at dispatch).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gemm_panels(w: &Weights, xs: &[f32], cols: usize, out: &mut [f32]) {
+        let (n_in, n_out) = (w.n_in, w.n_out);
+        debug_assert_eq!(xs.len(), cols * n_in);
+        debug_assert_eq!(out.len(), cols * n_out);
+        for p in 0..w.full_panels() {
+            let panel = w.panel(p);
+            let o = p * PANEL_ROWS;
+            let mut c = 0;
+            while c + 4 <= cols {
+                let x0 = xs.as_ptr().add(c * n_in);
+                let x1 = xs.as_ptr().add((c + 1) * n_in);
+                let x2 = xs.as_ptr().add((c + 2) * n_in);
+                let x3 = xs.as_ptr().add((c + 3) * n_in);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                for k in 0..n_in {
+                    let wv = _mm256_loadu_ps(panel.as_ptr().add(k * PANEL_ROWS));
+                    a0 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x0.add(k)), a0);
+                    a1 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x1.add(k)), a1);
+                    a2 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x2.add(k)), a2);
+                    a3 = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x3.add(k)), a3);
+                }
+                for (j, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+                    let dst = out.as_mut_ptr().add((c + j) * n_out + o);
+                    _mm256_storeu_ps(dst, _mm256_add_ps(_mm256_loadu_ps(dst), a));
+                }
+                c += 4;
+            }
+            // Column remainder: the single-sample chain, cell-for-cell
+            // the per-sample kernel.
+            while c < cols {
+                let x = xs.as_ptr().add(c * n_in);
+                let mut acc = _mm256_setzero_ps();
+                for k in 0..n_in {
+                    let wv = _mm256_loadu_ps(panel.as_ptr().add(k * PANEL_ROWS));
+                    acc = _mm256_fmadd_ps(wv, _mm256_set1_ps(*x.add(k)), acc);
+                }
+                let dst = out.as_mut_ptr().add(c * n_out + o);
+                _mm256_storeu_ps(dst, _mm256_add_ps(_mm256_loadu_ps(dst), acc));
+                c += 1;
+            }
+        }
+        let (tail, ts) = (w.tail(), w.tail_start());
+        if ts < n_out {
+            for c in 0..cols {
+                matvec_transposed_acc(
+                    tail,
+                    &xs[c * n_in..][..n_in],
+                    &mut out[c * n_out + ts..(c + 1) * n_out],
+                );
+            }
+        }
+    }
+
+    /// One sample's recurrent pre-activation `pre = Wx·xₜ + Wh·hₜ₋₁`:
+    /// per panel, a single FMA chain runs over the `Wx` stream and
+    /// continues over the `Wh` stream (both purely sequential), then
+    /// stores 8 rows of `pre`. Tail rows use the scalar cell
+    /// ([`dot`] + [`dot`]), bit-identical to the scalar path. `wx` and
+    /// `wh` share `n_out = h`, so their panel grids line up.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (runtime-checked at dispatch).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn recurrent_panels_step(
+        wx: &Weights,
+        wh: &Weights,
+        xt: &[f32],
+        hidden: &[f32],
+        pre: &mut [f32],
+    ) {
+        debug_assert_eq!(wx.n_out, wh.n_out);
+        debug_assert_eq!(xt.len(), wx.n_in);
+        debug_assert_eq!(hidden.len(), wh.n_in);
+        debug_assert_eq!(pre.len(), wx.n_out);
+        for p in 0..wx.full_panels() {
+            let px = wx.panel(p);
+            let ph = wh.panel(p);
+            let mut acc = _mm256_setzero_ps();
+            for (k, &xv) in xt.iter().enumerate() {
+                let wv = _mm256_loadu_ps(px.as_ptr().add(k * PANEL_ROWS));
+                acc = _mm256_fmadd_ps(wv, _mm256_set1_ps(xv), acc);
+            }
+            for (k, &hv) in hidden.iter().enumerate() {
+                let wv = _mm256_loadu_ps(ph.as_ptr().add(k * PANEL_ROWS));
+                acc = _mm256_fmadd_ps(wv, _mm256_set1_ps(hv), acc);
+            }
+            _mm256_storeu_ps(pre.as_mut_ptr().add(p * PANEL_ROWS), acc);
+        }
+        let (d, h, ts) = (wx.n_in, wh.n_in, wx.tail_start());
+        for (t, dst) in pre[ts..].iter_mut().enumerate() {
+            *dst = dot(&wx.tail()[t * d..][..d], xt) + dot(&wh.tail()[t * h..][..h], hidden);
+        }
+    }
+}
+
 impl RefModel {
     /// Build the reference net for an artifact spec with the default
-    /// options (batched GEMM kernels) and a throwaway weight cache.
+    /// options (batched GEMM, packed panels, auto kernel dispatch) and
+    /// a throwaway weight cache.
     #[cfg(test)]
     pub(crate) fn build(spec: &ArtifactSpec) -> Result<Self> {
-        Self::build_with(spec, RuntimeOptions::default(), &mut WeightCache::default())
+        Self::build_with(
+            spec,
+            RuntimeOptions::default(),
+            super::simd_kernel_available(),
+            &mut WeightCache::default(),
+        )
     }
 
     /// Build the reference net for an artifact spec.
     /// `opts.naive_kernels` selects the pre-rewrite benchmark-baseline
-    /// kernels, `opts.batched_gemm` the batched vs per-sample
-    /// execution path; `cache` shares weight matrices across batch
-    /// variants of the same family.
+    /// kernels, `opts.batched_gemm` the batched vs per-sample execution
+    /// path, `opts.packed_weights` the panel-major vs row-major weight
+    /// layout; `simd` is the **resolved** kernel dispatch (the caller —
+    /// `Runtime::load_reference` — has already checked CPU support and
+    /// layout compatibility). `cache` shares weight matrices across
+    /// batch variants of the same family.
     pub(crate) fn build_with(
         spec: &ArtifactSpec,
         opts: RuntimeOptions,
+        simd: bool,
         cache: &mut WeightCache,
     ) -> Result<Self> {
         let naive = opts.naive_kernels;
+        let packed = opts.packed_weights && !naive;
+        debug_assert!(!simd || packed, "SIMD dispatch requires the panel layout");
         if spec.input_shapes.is_empty() {
             bail!("artifact has no inputs");
         }
@@ -349,22 +879,11 @@ impl RefModel {
         let out_per_sample = per_sample_elems(&spec.output_shape, spec.output_batch_axis);
         // Weight matrices are cached per (family, index, dims): batch
         // variants have identical per-sample geometry, so b1/b4/b8 all
-        // receive the same Arc. The naive mode stores the canonical
-        // `[in × out]` matrix, the default mode its `[out × in]`
-        // transpose — same logical network either way, and the layouts
-        // never mix within one cache (one Runtime load = one mode).
-        let mut shared = |index: u64, fan_in: usize, fan_out: usize| -> Arc<Vec<f32>> {
-            Arc::clone(
-                cache.entry((family.to_string(), index, fan_in, fan_out)).or_insert_with(|| {
-                    let canonical = gen_weights(family, index, fan_in, fan_out);
-                    Arc::new(if naive {
-                        canonical
-                    } else {
-                        transpose(&canonical, fan_in, fan_out)
-                    })
-                }),
-            )
-        };
+        // receive the same Arc. Layouts never mix within one cache
+        // (one Runtime load = one mode). Recurrent nets keep the
+        // row-major copy next to the panels (the scalar cell streams
+        // whole rows); packed dense nets need only the panels.
+        let mode = |keep_rows: bool| WeightMode { naive, packed, keep_rows };
         let net = if family == "edge_lstm" {
             let shape = &spec.input_shapes[0];
             if shape.len() != 3 || spec.input_batch_axes[0] != 1 {
@@ -376,7 +895,13 @@ impl RefModel {
                 bail!("edge_lstm output ({out_per_sample} per sample) not divisible by T={t}");
             }
             let h = out_per_sample / t;
-            RefNet::Recurrent { wx: shared(0, d, h), wh: shared(1, h, h), t, d, h }
+            RefNet::Recurrent {
+                wx: cache.get_or_build(family, 0, d, h, mode(true)),
+                wh: cache.get_or_build(family, 1, h, h, mode(true)),
+                t,
+                d,
+                h,
+            }
         } else {
             let weights = spec
                 .input_shapes
@@ -384,7 +909,13 @@ impl RefModel {
                 .zip(&spec.input_batch_axes)
                 .enumerate()
                 .map(|(i, (shape, &axis))| {
-                    shared(i as u64, per_sample_elems(shape, axis), out_per_sample)
+                    cache.get_or_build(
+                        family,
+                        i as u64,
+                        per_sample_elems(shape, axis),
+                        out_per_sample,
+                        mode(!packed),
+                    )
                 })
                 .collect();
             RefNet::Dense { weights }
@@ -394,6 +925,7 @@ impl RefModel {
             out_per_sample,
             naive,
             batched: opts.batched_gemm,
+            simd,
             poison: opts.panic_on_poison,
         })
     }
@@ -460,8 +992,9 @@ impl RefModel {
     /// `active × per_sample` block, the GEMM streams each weight tile
     /// once per column block (instead of once per sample), and the
     /// result rows are inserted back along the output batch axis.
-    /// Bit-identical to the per-sample path (same per-element
-    /// accumulation order), verified by `rust/tests/batched_gemm.rs`.
+    /// Bit-identical to the per-sample path within a kernel path (same
+    /// per-element accumulation order), verified by
+    /// `rust/tests/batched_gemm.rs` and `rust/tests/kernel_paths.rs`.
     fn execute_batched(
         &self,
         spec: &ArtifactSpec,
@@ -487,17 +1020,8 @@ impl RefModel {
         match &self.net {
             RefNet::Dense { weights } => {
                 batch_result.fill(0.0);
-                for (i, wt) in weights.iter().enumerate() {
-                    let per =
-                        per_sample_elems(&spec.input_shapes[i], spec.input_batch_axes[i]);
-                    gemm_transposed_acc(
-                        wt,
-                        &batch_samples[i],
-                        per,
-                        n_out,
-                        active,
-                        batch_result,
-                    );
+                for (w, xs) in weights.iter().zip(batch_samples.iter()) {
+                    w.gemm_acc(xs, active, batch_result, self.simd);
                 }
                 for v in batch_result.iter_mut() {
                     *v = v.tanh();
@@ -510,16 +1034,36 @@ impl RefModel {
                 hidden.fill(0.0);
                 pre.resize(active * h, 0.0);
                 for step in 0..t {
-                    // Stream each weight row once for the whole batch:
-                    // `j` outer, samples inner — the per-element math
-                    // (`dot` + `dot`) is exactly the per-sample cell.
-                    for j in 0..h {
-                        let rx = &wx[j * d..(j + 1) * d];
-                        let rh = &wh[j * h..(j + 1) * h];
+                    if self.simd {
+                        // SIMD: per sample, one panel pass over both
+                        // weight streams (panels are L1-resident
+                        // across samples, so weights still stream once
+                        // per batch).
                         for c in 0..active {
-                            let xt = &xs[c * (t * d) + step * d..c * (t * d) + (step + 1) * d];
-                            pre[c * h + j] =
-                                dot(rx, xt) + dot(rh, &hidden[c * h..(c + 1) * h]);
+                            let xt = &xs[c * (t * d) + step * d..][..d];
+                            recurrent_step_into(
+                                wx,
+                                wh,
+                                xt,
+                                &hidden[c * h..(c + 1) * h],
+                                &mut pre[c * h..(c + 1) * h],
+                                true,
+                            );
+                        }
+                    } else {
+                        // Scalar: stream each weight row once for the
+                        // whole batch (`j` outer, samples inner) — the
+                        // per-element math (`dot` + `dot`) is exactly
+                        // the per-sample cell.
+                        for j in 0..h {
+                            let rx = wx.row(j);
+                            let rh = wh.row(j);
+                            for c in 0..active {
+                                let xt =
+                                    &xs[c * (t * d) + step * d..c * (t * d) + (step + 1) * d];
+                                pre[c * h + j] =
+                                    dot(rx, xt) + dot(rh, &hidden[c * h..(c + 1) * h]);
+                            }
                         }
                     }
                     for (hv, &p) in hidden.iter_mut().zip(pre.iter()) {
@@ -558,8 +1102,8 @@ impl RefModel {
         match &self.net {
             RefNet::Dense { weights } => {
                 result.fill(0.0);
-                for (x, wt) in samples.iter().zip(weights) {
-                    matvec_transposed_acc(wt, x, result);
+                for (x, w) in samples.iter().zip(weights) {
+                    w.matvec_acc(x, result, self.simd);
                 }
                 for v in result.iter_mut() {
                     *v = v.tanh();
@@ -573,10 +1117,7 @@ impl RefModel {
                 pre.resize(h, 0.0);
                 for step in 0..t {
                     let xt = &x[step * d..(step + 1) * d];
-                    for j in 0..h {
-                        pre[j] = dot(&wx[j * d..(j + 1) * d], xt)
-                            + dot(&wh[j * h..(j + 1) * h], hidden);
-                    }
+                    recurrent_step_into(wx, wh, xt, hidden, pre, self.simd);
                     for (hv, &p) in hidden.iter_mut().zip(pre.iter()) {
                         *hv = p.tanh();
                     }
@@ -600,6 +1141,7 @@ impl RefModel {
                 let n = self.out_per_sample;
                 result.fill(0.0);
                 for (x, w) in samples.iter().zip(weights) {
+                    let w = w.rows_raw();
                     for (k, &xv) in x.iter().enumerate() {
                         if xv != 0.0 {
                             let row = &w[k * n..(k + 1) * n];
@@ -615,6 +1157,7 @@ impl RefModel {
             }
             RefNet::Recurrent { wx, wh, t, d, h } => {
                 let (t, d, h) = (*t, *d, *h);
+                let (wx, wh) = (wx.rows_raw(), wh.rows_raw());
                 let x = &samples[0];
                 hidden.resize(h, 0.0);
                 hidden.fill(0.0);
@@ -648,6 +1191,7 @@ impl RefModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::simd_kernel_available;
 
     fn spec(
         name: &str,
@@ -673,6 +1217,21 @@ mod tests {
         )
     }
 
+    /// Build with explicit options, routing through the real dispatch
+    /// (`runtime::resolve_kernel`, no env override so unit tests stay
+    /// deterministic) — callers only pass `Simd` after checking host
+    /// support, so the resolution cannot fail here.
+    fn build_opts(s: &ArtifactSpec, opts: RuntimeOptions) -> RefModel {
+        let packed = opts.packed_weights && !opts.naive_kernels;
+        let simd = crate::runtime::resolve_kernel(opts.kernel, None, packed).unwrap();
+        RefModel::build_with(s, opts, simd, &mut WeightCache::default()).unwrap()
+    }
+
+    /// Build forcing the scalar kernels (any layout).
+    fn build_scalar(s: &ArtifactSpec, opts: RuntimeOptions) -> RefModel {
+        RefModel::build_with(s, opts, false, &mut WeightCache::default()).unwrap()
+    }
+
     /// Full-batch execute with a throwaway scratch (test convenience).
     fn run(m: &RefModel, s: &ArtifactSpec, inputs: &[Vec<f32>]) -> Vec<f32> {
         let batch = s.output_shape[s.output_batch_axis] as usize;
@@ -693,12 +1252,96 @@ mod tests {
     }
 
     #[test]
+    fn pack_panels_interleaves_full_panels_and_keeps_tail_rows() {
+        // 10 rows × 3 inputs: one full 8-row panel + 2 tail rows.
+        let (n_out, n_in) = (10usize, 3usize);
+        let wt: Vec<f32> = (0..n_out * n_in).map(|i| i as f32).collect();
+        let packed = pack_panels(&wt, n_out, n_in);
+        assert_eq!(packed.len(), wt.len());
+        // Element (row r, input k) of panel 0 at k*8 + r.
+        for r in 0..PANEL_ROWS {
+            for k in 0..n_in {
+                assert_eq!(packed[k * PANEL_ROWS + r], wt[r * n_in + k], "panel ({r},{k})");
+            }
+        }
+        // Tail rows 8 and 9 are byte-identical row-major.
+        assert_eq!(&packed[8 * n_in..], &wt[8 * n_in..], "tail rows unchanged");
+    }
+
+    #[test]
+    fn packed_scalar_kernels_are_bit_identical_to_row_major() {
+        // n_out = 13 exercises one full panel, a full 4-row tail block,
+        // and a `dot` remainder row; cols 1/3/4/7 exercise full and
+        // remainder column blocks of both kernels.
+        let (n_in, n_out) = (11usize, 13usize);
+        let w_packed = Weights::build(
+            "bitfam",
+            0,
+            n_in,
+            n_out,
+            WeightMode { naive: false, packed: true, keep_rows: false },
+        );
+        let w_rows = Weights::build(
+            "bitfam",
+            0,
+            n_in,
+            n_out,
+            WeightMode { naive: false, packed: false, keep_rows: true },
+        );
+        for cols in [1usize, 3, 4, 7] {
+            let xs: Vec<f32> =
+                (0..cols * n_in).map(|i| ((i * 7 + 3) % 13) as f32 / 13.0 - 0.4).collect();
+            let mut a = vec![0.1f32; cols * n_out];
+            let mut b = a.clone();
+            w_packed.gemm_acc(&xs, cols, &mut a, false);
+            w_rows.gemm_acc(&xs, cols, &mut b, false);
+            assert_eq!(a, b, "gemm diverges at cols={cols}");
+            let mut a1 = vec![0.2f32; n_out];
+            let mut b1 = a1.clone();
+            w_packed.matvec_acc(&xs[..n_in], &mut a1, false);
+            w_rows.matvec_acc(&xs[..n_in], &mut b1, false);
+            assert_eq!(a1, b1, "matvec diverges");
+        }
+    }
+
+    #[test]
+    fn simd_kernels_match_scalar_closely() {
+        if !simd_kernel_available() {
+            eprintln!("SKIP: no AVX2+FMA on this host");
+            return;
+        }
+        let (n_in, n_out) = (19usize, 21usize); // 2 panels + 5 tail rows
+        let w = Weights::build(
+            "simdfam",
+            0,
+            n_in,
+            n_out,
+            WeightMode { naive: false, packed: true, keep_rows: false },
+        );
+        for cols in [1usize, 4, 6] {
+            let xs: Vec<f32> =
+                (0..cols * n_in).map(|i| ((i * 5 + 1) % 17) as f32 / 17.0 - 0.45).collect();
+            let mut simd_out = vec![0.0f32; cols * n_out];
+            let mut scalar_out = vec![0.0f32; cols * n_out];
+            w.gemm_acc(&xs, cols, &mut simd_out, true);
+            w.gemm_acc(&xs, cols, &mut scalar_out, false);
+            for (i, (a, b)) in simd_out.iter().zip(&scalar_out).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "cols={cols} element {i}: simd {a} vs scalar {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn batched_rows_match_solo_runs_bitwise() {
         let s1 = dense_spec(1);
         let s4 = dense_spec(4);
         let mut cache = WeightCache::default();
-        let m1 = RefModel::build_with(&s1, RuntimeOptions::default(), &mut cache).unwrap();
-        let m4 = RefModel::build_with(&s4, RuntimeOptions::default(), &mut cache).unwrap();
+        let simd = simd_kernel_available();
+        let m1 = RefModel::build_with(&s1, RuntimeOptions::default(), simd, &mut cache).unwrap();
+        let m4 = RefModel::build_with(&s4, RuntimeOptions::default(), simd, &mut cache).unwrap();
         let reqs: Vec<Vec<f32>> = (0..4)
             .map(|r| (0..8).map(|i| ((i + r * 3) % 7) as f32 / 7.0).collect())
             .collect();
@@ -718,15 +1361,30 @@ mod tests {
         let s1 = dense_spec(1);
         let s8 = dense_spec(8);
         let mut cache = WeightCache::default();
-        let m1 = RefModel::build_with(&s1, RuntimeOptions::default(), &mut cache).unwrap();
-        let m8 = RefModel::build_with(&s8, RuntimeOptions::default(), &mut cache).unwrap();
+        let m1 =
+            RefModel::build_with(&s1, RuntimeOptions::default(), false, &mut cache).unwrap();
+        let m8 =
+            RefModel::build_with(&s8, RuntimeOptions::default(), false, &mut cache).unwrap();
         let (RefNet::Dense { weights: w1 }, RefNet::Dense { weights: w8 }) =
             (&m1.net, &m8.net)
         else {
             panic!("dense nets expected");
         };
         assert!(Arc::ptr_eq(&w1[0], &w8[0]), "b1/b8 must share one physical matrix");
-        assert_eq!(cache.len(), 1, "one family, one matrix");
+        assert_eq!(cache.matrices(), 1, "one family, one matrix");
+    }
+
+    #[test]
+    fn cache_hits_do_not_grow_the_family_map() {
+        let mut cache = WeightCache::default();
+        let mode = WeightMode { naive: false, packed: true, keep_rows: false };
+        let a = cache.get_or_build("fam", 0, 4, 6, mode);
+        let b = cache.get_or_build("fam", 0, 4, 6, mode);
+        assert!(Arc::ptr_eq(&a, &b), "hit returns the same Arc");
+        let c = cache.get_or_build("fam", 1, 4, 6, mode);
+        assert!(!Arc::ptr_eq(&a, &c), "different index, different matrix");
+        assert_eq!(cache.matrices(), 2);
+        assert_eq!(cache.families.len(), 1, "one Arc<str> key per family");
     }
 
     #[test]
@@ -768,14 +1426,8 @@ mod tests {
         // float tolerance (the modes are never mixed in one server, so
         // bit-exactness is only required *within* a mode).
         let s = dense_spec(1);
-        let fast = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
-            .unwrap();
-        let naive = RefModel::build_with(
-            &s,
-            RuntimeOptions { naive_kernels: true, ..Default::default() },
-            &mut WeightCache::default(),
-        )
-        .unwrap();
+        let fast = build_opts(&s, RuntimeOptions::default());
+        let naive = build_scalar(&s, RuntimeOptions { naive_kernels: true, ..Default::default() });
         let x: Vec<f32> = (0..8).map(|i| (i as f32 - 4.0) / 8.0).collect();
         let a = run(&fast, &s, &[x.clone()]);
         let b = run(&naive, &s, &[x]);
@@ -815,41 +1467,54 @@ mod tests {
         assert_eq!(run(&m1, &sb1, &[fwd]), s0, "batched == solo for the lstm");
     }
 
-    /// The two execution paths must agree bitwise (the serving
-    /// correctness contract the full property test in
-    /// `rust/tests/batched_gemm.rs` checks over the real manifest).
+    /// The two execution paths must agree bitwise within each kernel
+    /// path (the serving correctness contract the full property tests
+    /// in `rust/tests/batched_gemm.rs` and `rust/tests/kernel_paths.rs`
+    /// check over real manifests).
     #[test]
     fn batched_gemm_is_bit_identical_to_per_sample() {
-        let per_sample_opts = RuntimeOptions { batched_gemm: false, ..Default::default() };
-        // Dense, batch-major, out=7 exercises one full 4-row GEMM
-        // block plus the `dot` row remainder; batches 1/2/4/8 exercise
-        // full and remainder column blocks.
-        for batch in [1i64, 2, 4, 8] {
-            let s = spec(
-                &format!("wide_b{batch}"),
-                vec![(vec![batch, 6], 0)],
-                (vec![batch, 7], 0),
-            );
-            let g = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
-                .unwrap();
-            let p = RefModel::build_with(&s, per_sample_opts, &mut WeightCache::default()).unwrap();
-            let n = (batch * 6) as usize;
-            let x: Vec<f32> = (0..n).map(|i| ((i * 13 + 5) % 31) as f32 / 31.0 - 0.4).collect();
-            assert_eq!(
-                run(&g, &s, &[x.clone()]),
-                run(&p, &s, &[x]),
-                "dense batch {batch} diverges"
-            );
+        // Dense, batch-major, out=7 exercises the tail-only pack (no
+        // full panel: one 4-row block plus the `dot` remainder);
+        // batches 1/2/4/8 exercise full and remainder column blocks.
+        // Run every kernel path the host supports.
+        let mut paths: Vec<RuntimeOptions> = vec![
+            RuntimeOptions::default(),
+            RuntimeOptions { packed_weights: false, ..Default::default() },
+        ];
+        if simd_kernel_available() {
+            let forced = crate::runtime::KernelKind::Simd;
+            paths.push(RuntimeOptions { kernel: forced, ..Default::default() });
         }
-        // Recurrent, time-major [T=4, B=3, D=3] with one padding row.
-        let s = spec("edge_lstm_b3", vec![(vec![4, 3, 3], 1)], (vec![4, 3, 2], 1));
-        let g = RefModel::build_with(&s, RuntimeOptions::default(), &mut WeightCache::default())
-            .unwrap();
-        let p = RefModel::build_with(&s, per_sample_opts, &mut WeightCache::default()).unwrap();
-        let x: Vec<f32> = (0..4 * 3 * 3).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
-        let a = g.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
-        let b = p.execute(&s, &[x], 2, &mut ExecScratch::default());
-        assert_eq!(a, b, "recurrent time-major batch diverges");
+        for opts in paths {
+            let per_sample_opts = RuntimeOptions { batched_gemm: false, ..opts };
+            for batch in [1i64, 2, 4, 8] {
+                let s = spec(
+                    &format!("wide_b{batch}"),
+                    vec![(vec![batch, 6], 0)],
+                    (vec![batch, 7], 0),
+                );
+                let g = build_opts(&s, opts);
+                let p = build_opts(&s, per_sample_opts);
+                let n = (batch * 6) as usize;
+                let x: Vec<f32> =
+                    (0..n).map(|i| ((i * 13 + 5) % 31) as f32 / 31.0 - 0.4).collect();
+                assert_eq!(
+                    run(&g, &s, &[x.clone()]),
+                    run(&p, &s, &[x]),
+                    "dense batch {batch} diverges ({opts:?})"
+                );
+            }
+            // Recurrent, time-major [T=4, B=3, D=3] with one padding
+            // row (h=2: tail-only pack for the recurrent weights too).
+            let s = spec("edge_lstm_b3", vec![(vec![4, 3, 3], 1)], (vec![4, 3, 2], 1));
+            let g = build_opts(&s, opts);
+            let p = build_opts(&s, per_sample_opts);
+            let x: Vec<f32> =
+                (0..4 * 3 * 3).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
+            let a = g.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
+            let b = p.execute(&s, &[x], 2, &mut ExecScratch::default());
+            assert_eq!(a, b, "recurrent time-major batch diverges ({opts:?})");
+        }
     }
 
     #[test]
@@ -863,12 +1528,10 @@ mod tests {
         assert!(out.iter().all(|v| v.is_finite()));
         // Hook on: deterministic panic, the integration tests' handle
         // on the server's per-chunk catch_unwind isolation.
-        let hooked = RefModel::build_with(
+        let hooked = build_opts(
             &s,
             RuntimeOptions { panic_on_poison: true, ..Default::default() },
-            &mut WeightCache::default(),
-        )
-        .unwrap();
+        );
         let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run(&hooked, &s, &[x.clone()])
         }))

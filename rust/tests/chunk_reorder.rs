@@ -15,7 +15,11 @@
 //!   at 0 (previously asserted only inside the bench binary);
 //! * **adaptive depth** — with `reorder_depth_max`, a backlogged
 //!   family widens beyond the lease while a cold family stays at depth
-//!   1 (`Snapshot::depth_by_family`).
+//!   1 (`Snapshot::depth_by_family`), and a formerly hot family
+//!   **narrows back to the single-holder lease after its backlog
+//!   drains, without any new pushes** — pops and releases fold drain
+//!   samples into the depth EWMA
+//!   (`Snapshot::current_depth_by_family`).
 
 use mensa::config::ServerConfig;
 use mensa::coordinator::Server;
@@ -293,6 +297,82 @@ fn adaptive_depth_widens_hot_family_and_keeps_cold_family_leased() {
         1,
         "a cold family must keep the lease discipline, gauges: {:?}",
         snap.depth_by_family
+    );
+    server.shutdown();
+}
+
+#[test]
+fn adaptive_depth_narrows_after_backlog_drains_without_new_pushes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xD2A1);
+    let hot: Vec<Vec<f32>> = (0..32).map(|_| cnn_input(&mut rng)).collect();
+    let solo = solo_outputs(&dir, "edge_cnn", &hot);
+
+    // Same shape of load as the widening test: small batches + per-job
+    // device time build a backlog, so the hot family's granted depth
+    // widens. Then the flood simply *stops* — every response below is
+    // received, so the backlog is fully drained — and the decay-on-pop
+    // EWMA plus the full-drain release must return the family to the
+    // single-holder lease without a single further push.
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 2,
+        batch_timeout_us: 1_000,
+        work_stealing: true,
+        reorder_depth_max: 4,
+        device_latency_us: 5_000,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = hot
+        .iter()
+        .map(|x| {
+            loop {
+                match server.infer("edge_cnn", vec![x.clone()]) {
+                    Ok(rx) => return rx,
+                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output, solo[i], "request {i} bit-exact");
+    }
+    // All responses are in, but the last holders may still be inside
+    // their emulated device windows; give them time to release (the
+    // release is what folds the final zero-backlog samples and resets
+    // a fully drained family).
+    std::thread::sleep(Duration::from_millis(200));
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0);
+    assert_eq!(snap.failed, 0);
+    let hwm = |family: &str| {
+        snap.depth_by_family
+            .iter()
+            .find(|(f, _)| f == family)
+            .map(|(_, d)| *d)
+            .unwrap_or(0)
+    };
+    let live = |family: &str| {
+        snap.current_depth_by_family
+            .iter()
+            .find(|(f, _)| f == family)
+            .map(|(_, d)| *d)
+            .unwrap_or(0)
+    };
+    assert!(
+        hwm("edge_cnn") >= 2,
+        "the flood must have widened the family (else this test proves nothing), \
+         high watermarks: {:?}",
+        snap.depth_by_family
+    );
+    assert_eq!(
+        live("edge_cnn"),
+        1,
+        "a drained family must release its width back to the lease without new \
+         pushes, live gauges: {:?}",
+        snap.current_depth_by_family
     );
     server.shutdown();
 }

@@ -1,0 +1,61 @@
+//! The `MENSA_KERNEL` dispatch-override hook, isolated in its own
+//! test binary: the tests below mutate the process environment, and
+//! cargo runs each integration-test binary as its own process (tests
+//! *within* a binary run concurrently, so this file holds exactly one
+//! `#[test]`), which keeps the mutation from racing the kernel-path
+//! suites.
+//!
+//! This is the hook CI's forced-fallback matrix leg uses
+//! (`MENSA_KERNEL=scalar` on an AVX2 runner), so it must demonstrably
+//! override the configured kernel — including an explicit
+//! `kernel = "simd"` — and reject junk values at load.
+
+use mensa::runtime::{
+    simd_kernel_available, KernelKind, Runtime, RuntimeOptions, KERNEL_ENV,
+};
+use std::fmt::Write as _;
+
+fn manifest_dir() -> String {
+    let dir = std::env::temp_dir().join(format!("mensa_kernel_env_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create manifest dir");
+    let mut m = String::new();
+    let _ = write!(
+        m,
+        "[[artifact]]\nname = \"envfam_b4\"\nfile = \"envfam_b4.hlo.txt\"\n\
+         num_inputs = 1\ninput0_shape = \"4x16\"\ninput0_batch_axis = 0\n\
+         output_shape = \"4x16\"\noutput_batch_axis = 0\nsha256 = \"referencebackend\"\n"
+    );
+    std::fs::write(dir.join("manifest.toml"), m).expect("write manifest");
+    dir.to_str().expect("utf8 temp dir").to_string()
+}
+
+#[test]
+fn env_override_wins_over_config_and_rejects_junk() {
+    let dir = manifest_dir();
+    // Force scalar over the default (auto) config.
+    std::env::set_var(KERNEL_ENV, "scalar");
+    let rt = Runtime::load(&dir).expect("load under scalar override");
+    assert_eq!(rt.kernel_path(), "scalar", "override must force the portable path");
+    // The override also beats an explicit `kernel = "simd"` — that is
+    // the whole point of the CI hook (run everything scalar without
+    // touching configs). Only meaningful where simd could resolve.
+    if simd_kernel_available() {
+        let rt = Runtime::load_with(
+            &dir,
+            RuntimeOptions { kernel: KernelKind::Simd, ..Default::default() },
+        )
+        .expect("load simd-config under scalar override");
+        assert_eq!(rt.kernel_path(), "scalar", "override beats explicit simd");
+    }
+    // Junk values fail the load loudly instead of silently defaulting.
+    std::env::set_var(KERNEL_ENV, "avx512");
+    let err = Runtime::load(&dir).expect_err("junk override must fail");
+    assert!(format!("{err:#}").contains("unknown kernel"), "{err:#}");
+    // Empty means unset (how CI's `auto` matrix leg spells "no
+    // override").
+    std::env::set_var(KERNEL_ENV, "");
+    let rt = Runtime::load(&dir).expect("empty override is ignored");
+    let expect = if simd_kernel_available() { "simd" } else { "scalar" };
+    assert_eq!(rt.kernel_path(), expect, "empty override falls back to the config");
+    std::env::remove_var(KERNEL_ENV);
+}
