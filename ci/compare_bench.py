@@ -47,6 +47,7 @@ TRACKED = {
     "hot_family_reorder": ("speedup", "reorder_rps"),
     "oversized_job_chunks": ("speedup", "chunk_granular_rps"),
     "adaptive_depth": ("speedup", "adaptive_rps"),
+    "mensa_placement": ("speedup", "mensa_rps"),
     "gemm_dense": ("speedup",),
     "kernel_dense": ("speedup",),
     # Panel-prepacked weight layout vs row-major (scalar kernels both
@@ -69,6 +70,11 @@ DEFAULT_TOLERANCE = {"speedup_rel": 0.30, "rps_rel": 0.5}
 ABS_FLOORS = {
     ("simd_kernel", "speedup"): 1.05,
     ("packed_panels", "speedup"): 1.02,
+    # Mensa-placed heterogeneous pool at (or below) parity with the
+    # homogeneous roster means placement buys nothing — the paper's
+    # headline effect, so parity is a broken feature regardless of the
+    # relative band.
+    ("mensa_placement", "speedup"): 1.0,
     # Batched GEMM actively slower than per-sample, or the blocked
     # kernel at parity with the naive scan, is a broken feature even
     # when the relative band (floor 0.70 / 0.91) would pass it.

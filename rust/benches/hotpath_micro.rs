@@ -46,6 +46,15 @@
 //!   (`reorder_depth_max = workers`): the adaptive policy widens
 //!   whichever family is currently backlogged, without a hand-tuned
 //!   static `reorder_depth`.
+//! * `mensa_placement` — the same skewed mix on two `[[device]]`
+//!   rosters of equal worker count: a **homogeneous pool** (three
+//!   Edge-TPU-baseline workers) vs the **Mensa heterogeneous pool**
+//!   (Pascal + Pavlov + Jacquard, one worker each) with
+//!   placement-aware dispatch. Both arms share one calibrated
+//!   `latency_scale`, so the only difference is *which class's
+//!   emulated window each family pays* — the paper's Mensa claim
+//!   (bandwidth-starved families on the HBM classes, compute-bound
+//!   ones on Pascal) as a serving A/B.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
 //! (real `edge_cnn_b8`), per-sample vs batched GEMM (synthetic
@@ -65,8 +74,8 @@
 
 use mensa::accel::configs;
 use mensa::bench_harness::timer;
-use mensa::config::ServerConfig;
-use mensa::coordinator::{worker_for_family, Server};
+use mensa::config::{DeviceClass, DeviceClassSpec, ServerConfig};
+use mensa::coordinator::{device, worker_for_family, Server};
 use mensa::model::zoo;
 use mensa::runtime::{simd_kernel_available, ExecScratch, KernelKind, Runtime, RuntimeOptions};
 use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
@@ -493,6 +502,20 @@ fn submit_with_retry(
 /// Run one serving case; returns completed requests/second and the
 /// mean executed batch.
 fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
+    run_case_with(dir, families, opts, Vec::new())
+}
+
+/// [`run_case`] with an explicit `[[device]]` roster (empty = the
+/// homogeneous pre-roster pool). A multi-class roster additionally
+/// asserts that at least two device classes actually executed jobs
+/// (`jobs_by_device`) — the heterogeneous pool's liveness witness.
+fn run_case_with(
+    dir: &str,
+    families: &[String],
+    opts: CaseOpts,
+    devices: Vec<DeviceClassSpec>,
+) -> RunStats {
+    let multi_class = devices.len() > 1;
     let cfg = ServerConfig {
         workers: BENCH_WORKERS,
         max_batch: opts.max_batch,
@@ -514,6 +537,11 @@ fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
         reorder_depth_max: opts.reorder_depth_max,
         chunk_level: opts.chunk_level,
         panic_on_poison: false,
+        devices,
+        transfer_us: 50,
+        // Large vs the emulated windows: placement holds while the
+        // preferred class keeps up, spill only rescues a stall.
+        spill_after_us: 20_000,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
@@ -549,8 +577,41 @@ fn run_case(dir: &str, families: &[String], opts: CaseOpts) -> RunStats {
     let wall = t0.elapsed().as_secs_f64();
     let snap = server.metrics();
     assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
+    if multi_class {
+        assert!(
+            snap.jobs_by_device.len() >= 2,
+            "heterogeneous roster must execute on >= 2 device classes, got {:?}",
+            snap.jobs_by_device
+        );
+    }
     server.shutdown();
     RunStats { rps: BENCH_REQUESTS as f64 / wall, mean_batch: snap.mean_batch }
+}
+
+/// One `latency_scale` shared by BOTH `mensa_placement` arms:
+/// calibrated so the slowest (class, family) modeled base latency
+/// across every candidate class lands at `BENCH_DEVICE_US`. Sharing
+/// the scale keeps the arms comparable — the A/B measures *placement*,
+/// not a rescaling artifact.
+fn mensa_roster_scale(families: &[String]) -> f64 {
+    let candidates = [
+        DeviceClass::Baseline,
+        DeviceClass::Pascal,
+        DeviceClass::Pavlov,
+        DeviceClass::Jacquard,
+    ];
+    let specs: Vec<DeviceClassSpec> = candidates
+        .iter()
+        .map(|&class| DeviceClassSpec { class, workers: 1, latency_scale: 1.0 })
+        .collect();
+    let profiles = device::build_profiles(&specs, families, Duration::ZERO);
+    let mut max_base = 0.0f64;
+    for p in &profiles {
+        for f in families {
+            max_base = max_base.max(p.base_latency_s(f));
+        }
+    }
+    (BENCH_DEVICE_US as f64 * 1e-6) / max_base.max(1e-12)
 }
 
 fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
@@ -685,6 +746,41 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         },
     );
 
+    // Mensa-placement comparison (PR 6 tentpole): the zoo's skewed mix
+    // on two equal-size `[[device]]` rosters — three homogeneous
+    // Edge-TPU-baseline workers vs Pascal + Pavlov + Jacquard with
+    // placement-aware dispatch. Same calibrated latency_scale on both
+    // sides: the only difference is which class's emulated window each
+    // family pays, i.e. the placement itself. The synthetic families
+    // proxy-cycle over the zoo's CNN / LSTM / transducer models, so
+    // the mix contains both bandwidth-starved and compute-bound work.
+    let scale = mensa_roster_scale(families);
+    let homogeneous = vec![DeviceClassSpec {
+        class: DeviceClass::Baseline,
+        workers: 3,
+        latency_scale: scale,
+    }];
+    let mensa_pool = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: scale },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 1, latency_scale: scale },
+        DeviceClassSpec { class: DeviceClass::Jacquard, workers: 1, latency_scale: scale },
+    ];
+    // Device windows come from the roster profiles; the legacy flat
+    // knob stays off.
+    let placed = CaseOpts { device_us: 0, ..defaults };
+    let base = run_case_with(dir, families, placed, homogeneous);
+    let treat = run_case_with(dir, families, placed, mensa_pool);
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "mensa_placement",
+            labels: ("homogeneous_rps", "mensa_rps"),
+            baseline_rps: base.rps,
+            treatment_rps: treat.rps,
+            treatment_mean_batch: treat.mean_batch,
+        },
+    );
+
     // Acceptance bars (printed, recorded in BENCH_serving.json).
     let headline = &cases[0];
     if headline.speedup() >= 2.0 {
@@ -746,6 +842,18 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         println!(
             "WARN: adaptive depth speedup {:.2}x <= 1x under shifting skew",
             adaptive.speedup()
+        );
+    }
+    let placement = cases.iter().find(|c| c.name == "mensa_placement").expect("placement case");
+    if placement.speedup() > 1.0 {
+        println!(
+            "PASS: Mensa placement {:.2}x over the homogeneous roster on the skewed mix",
+            placement.speedup()
+        );
+    } else {
+        println!(
+            "WARN: Mensa placement speedup {:.2}x <= 1x over the homogeneous roster",
+            placement.speedup()
         );
     }
     ServingResult { cases }

@@ -11,5 +11,5 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{ServerConfig, SystemSpec};
+pub use schema::{DeviceClass, DeviceClassSpec, ServerConfig, SystemSpec};
 pub use toml_lite::{Document, Value};

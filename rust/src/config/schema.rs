@@ -134,6 +134,104 @@ impl SystemSpec {
     }
 }
 
+/// A named accelerator model a serving worker can bind to — the
+/// `class` key of a `[[device]]` roster entry. Each class maps to one
+/// of the built-in `accel::configs` constructors; the coordinator
+/// derives its throughput/latency/batch-affinity profile from the
+/// accelerator's dataflow cost model via the `ScheduleCache`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// The monolithic Edge TPU baseline (`edge_tpu_baseline`).
+    Baseline,
+    /// Pascal: compute-centric output-stationary (most-CNN class).
+    Pascal,
+    /// Pavlov: LSTM-oriented weight-stationary streaming on
+    /// in-package HBM.
+    Pavlov,
+    /// Jacquard: reduced-footprint weight-stationary on in-package
+    /// HBM.
+    Jacquard,
+    /// Eyeriss v2 row-stationary (comparison point).
+    Eyeriss,
+}
+
+impl DeviceClass {
+    /// Parse a `[[device]]` `class` value (lowercase accelerator
+    /// name).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "baseline" => Self::Baseline,
+            "pascal" => Self::Pascal,
+            "pavlov" => Self::Pavlov,
+            "jacquard" => Self::Jacquard,
+            "eyeriss" => Self::Eyeriss,
+            other => bail!(
+                "unknown device class `{other}` \
+                 (expected baseline|pascal|pavlov|jacquard|eyeriss)"
+            ),
+        })
+    }
+
+    /// The class's stable lowercase label (metrics attribution,
+    /// `jobs_by_device` keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Baseline => "baseline",
+            Self::Pascal => "pascal",
+            Self::Pavlov => "pavlov",
+            Self::Jacquard => "jacquard",
+            Self::Eyeriss => "eyeriss",
+        }
+    }
+
+    /// The accelerator hardware model backing this class.
+    pub fn accel(self) -> AccelConfig {
+        use crate::accel::configs;
+        match self {
+            Self::Baseline => configs::edge_tpu_baseline(),
+            Self::Pascal => configs::pascal(),
+            Self::Pavlov => configs::pavlov(),
+            Self::Jacquard => configs::jacquard(),
+            Self::Eyeriss => configs::eyeriss_v2(),
+        }
+    }
+}
+
+/// One `[[device]]` roster entry: a device class plus how many pool
+/// workers bind to it and an emulation scale for its modeled windows.
+#[derive(Debug, Clone)]
+pub struct DeviceClassSpec {
+    /// Which accelerator model these workers emulate.
+    pub class: DeviceClass,
+    /// Worker threads bound to this class (clamped to at least 1).
+    /// With a roster present, the pool size is the roster total and
+    /// the top-level `workers` knob is ignored.
+    pub workers: usize,
+    /// Multiplier on the modeled per-chunk service window (default
+    /// 1.0; must be positive). Benchmarks use it to calibrate the
+    /// emulated windows to a measurable magnitude without changing
+    /// the classes' *relative* speeds.
+    pub latency_scale: f64,
+}
+
+fn parse_device(t: &Table) -> Result<DeviceClassSpec> {
+    let class = DeviceClass::parse(get_str(t, "class")?)?;
+    let workers = match t.get("workers").and_then(Value::as_int) {
+        Some(v) => v.max(1) as usize,
+        None => 1,
+    };
+    let latency_scale = match t.get("latency_scale") {
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| anyhow!("device `{}`: non-numeric latency_scale", class.name()))?,
+        None => 1.0,
+    };
+    if latency_scale <= 0.0 || !latency_scale.is_finite() {
+        bail!("device `{}`: latency_scale must be positive", class.name());
+    }
+    Ok(DeviceClassSpec { class, workers, latency_scale })
+}
+
 /// Serving-path configuration for the coordinator (see
 /// `configs/server.toml`).
 #[derive(Debug, Clone)]
@@ -216,6 +314,26 @@ pub struct ServerConfig {
     /// the `runtime::POISON_INPUT` sentinel, so the panic-isolation
     /// path is drivable end to end through the server API.
     pub panic_on_poison: bool,
+    /// Heterogeneous device roster (`[[device]]` tables): each entry
+    /// binds `workers` pool threads to one emulated accelerator class
+    /// with a distinct throughput/latency/batch-affinity profile, and
+    /// job placement follows the Mensa schedule's preferred class per
+    /// family. Empty (the default) keeps the homogeneous pool: every
+    /// worker runs the bare runtime, with `device_latency_us` as the
+    /// degenerate single-class flat profile when nonzero.
+    pub devices: Vec<DeviceClassSpec>,
+    /// Emulated layer-to-layer transfer cost, microseconds: charged
+    /// once per job when consecutive jobs of a family execute on
+    /// different device classes (activations cross accelerators).
+    /// Only meaningful with a `[[device]]` roster.
+    pub transfer_us: u64,
+    /// Device-class-aware stealing spill threshold, microseconds: a
+    /// worker only steals jobs its own class serves well, unless a
+    /// job has waited longer than this at the head of another class's
+    /// ready queue — then any idle worker may spill-steal it rather
+    /// than let it strand. Only meaningful with a `[[device]]`
+    /// roster.
+    pub spill_after_us: u64,
 }
 
 impl Default for ServerConfig {
@@ -236,6 +354,9 @@ impl Default for ServerConfig {
             reorder_depth_max: 0,
             chunk_level: true,
             panic_on_poison: false,
+            devices: Vec::new(),
+            transfer_us: 100,
+            spill_after_us: 500,
         }
     }
 }
@@ -288,6 +409,17 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("chunk_level").and_then(Value::as_bool) {
                 cfg.chunk_level = v;
+            }
+            if let Some(v) = t.get("transfer_us").and_then(Value::as_int) {
+                cfg.transfer_us = v.max(0) as u64;
+            }
+            if let Some(v) = t.get("spill_after_us").and_then(Value::as_int) {
+                cfg.spill_after_us = v.max(0) as u64;
+            }
+        }
+        if let Some(device_tables) = doc.arrays.get("device") {
+            for dt in device_tables {
+                cfg.devices.push(parse_device(dt).context("parsing [[device]]")?);
             }
         }
         Ok(cfg)
@@ -417,6 +549,75 @@ memory = "hbm_internal"
         assert_eq!(cfg.batcher_shards, 1);
         assert_eq!(cfg.reorder_depth, 0, "negative reorder depth clamps to lease mode");
         assert_eq!(cfg.reorder_depth_max, 0, "negative adaptive cap clamps to disabled");
+    }
+
+    #[test]
+    fn device_roster_defaults() {
+        // No [[device]] tables: empty roster, default transfer/spill.
+        let cfg = ServerConfig::from_toml("[server]\nworkers = 4\n").unwrap();
+        assert!(cfg.devices.is_empty(), "homogeneous pool is the default");
+        assert_eq!(cfg.transfer_us, 100);
+        assert_eq!(cfg.spill_after_us, 500);
+        // A minimal entry gets per-entry defaults.
+        let cfg = ServerConfig::from_toml("[[device]]\nclass = \"pascal\"\n").unwrap();
+        assert_eq!(cfg.devices.len(), 1);
+        assert_eq!(cfg.devices[0].class, DeviceClass::Pascal);
+        assert_eq!(cfg.devices[0].workers, 1, "default one worker per entry");
+        assert_eq!(cfg.devices[0].latency_scale, 1.0);
+    }
+
+    #[test]
+    fn device_roster_parses_and_clamps() {
+        let cfg = ServerConfig::from_toml(
+            "[server]\ntransfer_us = 250\nspill_after_us = 900\n\
+             \n[[device]]\nclass = \"pascal\"\nworkers = 2\nlatency_scale = 0.5\n\
+             \n[[device]]\nclass = \"pavlov\"\nworkers = 0\n\
+             \n[[device]]\nclass = \"jacquard\"\nlatency_scale = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transfer_us, 250);
+        assert_eq!(cfg.spill_after_us, 900);
+        assert_eq!(cfg.devices.len(), 3);
+        assert_eq!(cfg.devices[0].class, DeviceClass::Pascal);
+        assert_eq!(cfg.devices[0].workers, 2);
+        assert_eq!(cfg.devices[0].latency_scale, 0.5);
+        assert_eq!(cfg.devices[1].workers, 1, "zero workers clamps to 1");
+        assert_eq!(cfg.devices[2].latency_scale, 2.0, "int coerces to float");
+        // Negative transfer/spill clamp to zero.
+        let cfg = ServerConfig::from_toml(
+            "[server]\ntransfer_us = -5\nspill_after_us = -1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transfer_us, 0);
+        assert_eq!(cfg.spill_after_us, 0);
+    }
+
+    #[test]
+    fn device_roster_rejects_bad_entries() {
+        let err = ServerConfig::from_toml("[[device]]\nclass = \"tpuv9\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown device class"), "{err:#}");
+        let err = ServerConfig::from_toml("[[device]]\nworkers = 2\n").unwrap_err();
+        assert!(format!("{err:#}").contains("class"), "missing class key: {err:#}");
+        let err = ServerConfig::from_toml(
+            "[[device]]\nclass = \"pascal\"\nlatency_scale = 0.0\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("latency_scale"), "{err:#}");
+    }
+
+    #[test]
+    fn device_class_names_roundtrip() {
+        for class in [
+            DeviceClass::Baseline,
+            DeviceClass::Pascal,
+            DeviceClass::Pavlov,
+            DeviceClass::Jacquard,
+            DeviceClass::Eyeriss,
+        ] {
+            assert_eq!(DeviceClass::parse(class.name()).unwrap(), class);
+            // Every class is backed by a real accelerator model.
+            assert!(class.accel().num_pes() > 0);
+        }
     }
 
     #[test]

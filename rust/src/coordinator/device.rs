@@ -1,0 +1,461 @@
+//! Emulated device classes for the heterogeneous executor pool.
+//!
+//! The paper's thesis is that routing each model to the accelerator
+//! that fits it (Pascal for compute-heavy CNNs, Pavlov for
+//! bandwidth-bound LSTMs, Jacquard for embedding-heavy transducers)
+//! beats the monolithic Edge TPU ~3x. The offline scheduler and
+//! simulator already reproduce that figure; this module promotes the
+//! same `accel/dataflow` cost models to **runtime device classes** so
+//! the serving pool can reproduce it end to end:
+//!
+//! * a [`DeviceProfile`] turns one `[[device]]` roster entry
+//!   ([`DeviceClassSpec`]) into per-family emulated service windows —
+//!   the modeled single-accelerator latency of the family's proxy
+//!   model (via the process-wide [`ScheduleCache`], so repeat server
+//!   starts are lookups), scaled by the entry's `latency_scale`, with
+//!   a batch-affinity shape derived from the accelerator's memory
+//!   attachment (see [`DeviceProfile::window`]);
+//! * a [`DeviceBackend`] wraps the shared `Arc<Runtime>` behind the
+//!   [`Backend`] seam: numerics stay bit-identical to the reference
+//!   interpreter (every class executes the same kernels), while
+//!   `device_window`/`transfer_window` report the class's emulated
+//!   timing — this is the generalization of the old flat
+//!   `device_latency_us` knob, which survives as the degenerate
+//!   single-class [`DeviceProfile::flat`] roster;
+//! * [`placement`] derives the job→device mapping the pool dispatches
+//!   by: each family prefers the class with the lowest modeled base
+//!   latency, exactly the Mensa phase-1 argument applied at chunk
+//!   granularity;
+//! * a [`TransferTracker`] detects when consecutive jobs of a family
+//!   cross device classes (spill stealing, roster edits), so the
+//!   executor can charge the layer-to-layer activation transfer cost
+//!   the paper's heterogeneous systems pay.
+//!
+//! # ScheduleCache and roster changes
+//!
+//! Profiles are keyed into the [`ScheduleCache`] by the *structural
+//! hash* of each single-accelerator system, so two servers started
+//! with different rosters (or one roster edited between starts) can
+//! never serve each other's placements: a changed class is a changed
+//! accelerator geometry, which is a different cache key — the
+//! `roster_change_rekeys_schedule_cache` test below pins this.
+
+use crate::accel::configs::MensaSystem;
+use crate::accel::MemoryAttachment;
+use crate::config::DeviceClassSpec;
+use crate::model::{zoo, ModelGraph};
+use crate::runtime::{ArtifactSpec, Backend, ExecScratch, Runtime};
+use crate::scheduler::ScheduleCache;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Representative zoo model for a serving family's modeled cost — the
+/// same proxy choice as `family_sim_costs` (DESIGN.md §Serving), with
+/// unknown (synthetic benchmark) families hash-cycled over the three
+/// proxies so every family gets a deterministic, positive profile.
+fn proxy_model(family: &str) -> ModelGraph {
+    match family {
+        "edge_cnn" => zoo::cnn(0),
+        "edge_lstm" => zoo::lstm(2),
+        "joint" => zoo::transducer(0),
+        other => match crate::util::fnv1a_64(other) % 3 {
+            0 => zoo::cnn(0),
+            1 => zoo::lstm(2),
+            _ => zoo::transducer(0),
+        },
+    }
+}
+
+/// One device class's emulated timing: per-family base (batch-1)
+/// service windows plus the batch-affinity shape and the class's
+/// layer-to-layer transfer cost.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    /// Lowercase class label (metrics attribution).
+    class: String,
+    /// Modeled batch-1 window per family, seconds (already scaled by
+    /// the roster entry's `latency_scale`).
+    base_s: HashMap<String, f64>,
+    /// Window for families absent from `base_s` (the flat profile's
+    /// only entry; 0.0 for modeled profiles, which cover every family
+    /// by construction).
+    default_base_s: f64,
+    /// Fraction of the base window paid **once per chunk** regardless
+    /// of batch size — weight streaming. The rest scales with the
+    /// batch (activations). 1.0 = flat (the legacy knob).
+    once_frac: f64,
+    /// Transfer window charged when a family crosses classes.
+    transfer: Duration,
+}
+
+impl DeviceProfile {
+    /// Build a class's profile from its roster entry: the modeled
+    /// whole-model latency of each family's proxy on a
+    /// single-accelerator system of this class (memoized in the
+    /// global [`ScheduleCache`]), scaled by `latency_scale`. The
+    /// batch-affinity fraction follows the accelerator's memory
+    /// attachment: bandwidth-starved LPDDR4 parts spend most of a
+    /// window streaming weights (once per chunk, so batching
+    /// amortizes strongly), in-package HBM parts barely notice.
+    pub fn modeled(spec: &DeviceClassSpec, families: &[String], transfer: Duration) -> Self {
+        let accel = spec.class.accel();
+        let once_frac = match accel.memory {
+            MemoryAttachment::Lpddr4 => 0.75,
+            MemoryAttachment::HbmExternal => 0.5,
+            MemoryAttachment::HbmInternal => 0.25,
+        };
+        let system = MensaSystem::single(accel);
+        let cache = ScheduleCache::global();
+        let mut base_s = HashMap::new();
+        for family in families {
+            let model = proxy_model(family);
+            let report = &cache.get_or_compute(&system, &model).report;
+            base_s.insert(family.clone(), report.total_latency_s * spec.latency_scale);
+        }
+        Self {
+            class: spec.class.name().to_string(),
+            base_s,
+            default_base_s: 0.0,
+            once_frac,
+            transfer,
+        }
+    }
+
+    /// The degenerate single-class profile: every family, every batch
+    /// size gets the same fixed window — bit-for-bit the behavior of
+    /// the legacy `device_latency_us` knob it replaces (one sleep per
+    /// chunk, batch-independent), now expressed through the same
+    /// [`Backend::device_window`] seam as the modeled classes.
+    pub fn flat(class: &str, window: Duration) -> Self {
+        Self {
+            class: class.to_string(),
+            base_s: HashMap::new(),
+            default_base_s: window.as_secs_f64(),
+            once_frac: 1.0,
+            transfer: Duration::ZERO,
+        }
+    }
+
+    /// The class label (`pascal`, `pavlov`, … or the flat class's
+    /// name).
+    pub fn class(&self) -> &str {
+        &self.class
+    }
+
+    /// Modeled batch-1 latency for `family`, seconds — the placement
+    /// objective ([`placement`] sends each family to the class
+    /// minimizing this).
+    pub fn base_latency_s(&self, family: &str) -> f64 {
+        self.base_s.get(family).copied().unwrap_or(self.default_base_s)
+    }
+
+    /// Emulated service window for one chunk of `family` with `batch`
+    /// live rows: `base · (m + (1 − m) · batch)`, where `m` is the
+    /// once-per-chunk (weight-streaming) fraction. Per-sample cost
+    /// `window/batch` falls toward `(1 − m) · base` as batches grow —
+    /// strongest on LPDDR4 classes, flat when `m = 1`.
+    pub fn window(&self, family: &str, batch: usize) -> Duration {
+        let base = self.base_latency_s(family);
+        let b = batch.max(1) as f64;
+        Duration::from_secs_f64(base * (self.once_frac + (1.0 - self.once_frac) * b))
+    }
+
+    /// The class's layer-to-layer transfer window.
+    pub fn transfer(&self) -> Duration {
+        self.transfer
+    }
+}
+
+/// Build one [`DeviceProfile`] per roster entry (roster order — the
+/// same order `Server::start` expands workers in, so profile index ==
+/// class index everywhere). Shared by the server, the bench harness
+/// (window calibration), and the e2e tests (exact expected windows).
+pub fn build_profiles(
+    roster: &[DeviceClassSpec],
+    families: &[String],
+    transfer: Duration,
+) -> Vec<DeviceProfile> {
+    roster.iter().map(|spec| DeviceProfile::modeled(spec, families, transfer)).collect()
+}
+
+/// Mensa placement at serving granularity: each family's preferred
+/// class is the profile with the lowest modeled batch-1 latency
+/// (first index wins ties). The pool dispatches and steals by this
+/// mapping; spill stealing past the staleness threshold is the only
+/// way a job runs elsewhere.
+pub fn placement(profiles: &[DeviceProfile], families: &[String]) -> HashMap<String, usize> {
+    families
+        .iter()
+        .map(|family| {
+            let best = profiles
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.base_latency_s(family)
+                        .partial_cmp(&b.base_latency_s(family))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            (family.clone(), best)
+        })
+        .collect()
+}
+
+/// A device-class execution backend: the shared reference [`Runtime`]
+/// (numerics, variant index, chunk capacities — bit-identical across
+/// classes) wrapped with one class's emulated timing profile. One
+/// instance per roster entry, shared by that class's workers behind
+/// `Arc<dyn Backend>`.
+pub struct DeviceBackend {
+    runtime: Arc<Runtime>,
+    profile: DeviceProfile,
+}
+
+impl DeviceBackend {
+    /// Wrap the pool's shared runtime with a class profile.
+    pub fn new(runtime: Arc<Runtime>, profile: DeviceProfile) -> Self {
+        Self { runtime, profile }
+    }
+
+    /// The class's timing profile.
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+}
+
+impl Backend for DeviceBackend {
+    fn device_class(&self) -> &str {
+        self.profile.class()
+    }
+
+    fn kernel_path(&self) -> &str {
+        self.runtime.kernel_path()
+    }
+
+    fn chunk_cap(&self, family: &str) -> usize {
+        self.runtime.chunk_cap(family)
+    }
+
+    fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)> {
+        self.runtime.variant_for_batch(family, batch)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.runtime.model(name).map(|m| &m.spec)
+    }
+
+    fn execute_batch(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>> {
+        self.runtime.execute_batch(name, inputs, active, scratch)
+    }
+
+    fn device_window(&self, family: &str, batch: usize) -> Duration {
+        self.profile.window(family, batch)
+    }
+
+    fn transfer_window(&self, _family: &str) -> Duration {
+        self.profile.transfer()
+    }
+}
+
+/// Tracks, per family, which device class executed its last job, so
+/// the executor can charge the layer-to-layer transfer window exactly
+/// when consecutive jobs cross classes. Shared by all workers (one
+/// lock touch per *job*, far off the per-sample path).
+#[derive(Debug, Default)]
+pub struct TransferTracker {
+    last_class: Mutex<HashMap<String, String>>,
+}
+
+impl TransferTracker {
+    /// Record that `family`'s next job executes on `class`; returns
+    /// `true` when this crosses from a different class (a transfer).
+    /// The family's first job never counts as a crossing.
+    pub fn crossed(&self, family: &str, class: &str) -> bool {
+        let mut last = self.last_class.lock().expect("transfer tracker lock");
+        match last.get_mut(family) {
+            Some(prev) if prev == class => false,
+            Some(prev) => {
+                *prev = class.to_string();
+                true
+            }
+            None => {
+                last.insert(family.to_string(), class.to_string());
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs;
+    use crate::config::DeviceClass;
+    use crate::model::zoo;
+
+    fn spec(class: DeviceClass, latency_scale: f64) -> DeviceClassSpec {
+        DeviceClassSpec { class, workers: 1, latency_scale }
+    }
+
+    fn serving_families() -> Vec<String> {
+        vec!["edge_cnn".into(), "edge_lstm".into(), "joint".into()]
+    }
+
+    #[test]
+    fn flat_profile_reproduces_legacy_knob() {
+        let p = DeviceProfile::flat("device", Duration::from_micros(500));
+        for family in ["edge_cnn", "edge_lstm", "anything"] {
+            for batch in [1, 4, 8, 64] {
+                assert_eq!(
+                    p.window(family, batch),
+                    Duration::from_micros(500),
+                    "flat window is family- and batch-independent"
+                );
+            }
+        }
+        assert_eq!(p.transfer(), Duration::ZERO);
+        assert_eq!(p.class(), "device");
+    }
+
+    #[test]
+    fn modeled_profiles_cover_every_family_positively() {
+        // Including synthetic benchmark families, which take a proxy
+        // by hash instead of by name.
+        let families: Vec<String> =
+            vec!["edge_cnn".into(), "edge_lstm".into(), "joint".into(), "fam007".into()];
+        let profiles = build_profiles(
+            &[spec(DeviceClass::Pascal, 1.0), spec(DeviceClass::Pavlov, 1.0)],
+            &families,
+            Duration::from_micros(100),
+        );
+        assert_eq!(profiles.len(), 2);
+        for p in &profiles {
+            for f in &families {
+                assert!(p.base_latency_s(f) > 0.0, "{}: {f} has no modeled base", p.class());
+            }
+            assert_eq!(p.transfer(), Duration::from_micros(100));
+        }
+        assert_eq!(profiles[0].class(), "pascal");
+        assert_eq!(profiles[1].class(), "pavlov");
+    }
+
+    #[test]
+    fn latency_scale_scales_windows_linearly() {
+        let families = serving_families();
+        let p1 = DeviceProfile::modeled(&spec(DeviceClass::Pascal, 1.0), &families, Duration::ZERO);
+        let p2 = DeviceProfile::modeled(&spec(DeviceClass::Pascal, 0.5), &families, Duration::ZERO);
+        for f in &families {
+            let ratio = p2.base_latency_s(f) / p1.base_latency_s(f);
+            assert!((ratio - 0.5).abs() < 1e-12, "{f}: scale not linear ({ratio})");
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_most_on_bandwidth_starved_classes() {
+        let families = serving_families();
+        // Pascal sits on LPDDR4: most of a window is weight streaming,
+        // paid once per chunk, so per-sample cost falls with batch.
+        let pascal =
+            DeviceProfile::modeled(&spec(DeviceClass::Pascal, 1.0), &families, Duration::ZERO);
+        let w1 = pascal.window("edge_cnn", 1).as_secs_f64();
+        let w8 = pascal.window("edge_cnn", 8).as_secs_f64();
+        assert!(w8 > w1, "bigger chunks take longer in wall-clock");
+        assert!(w8 / 8.0 < w1 * 0.5, "per-sample cost amortizes (m = 0.75)");
+        // Pavlov sits in-package: weights are cheap, so batching
+        // amortizes the window much less.
+        let pavlov =
+            DeviceProfile::modeled(&spec(DeviceClass::Pavlov, 1.0), &families, Duration::ZERO);
+        let v1 = pavlov.window("edge_lstm", 1).as_secs_f64();
+        let v8 = pavlov.window("edge_lstm", 8).as_secs_f64();
+        assert!(v8 / 8.0 > v1 * 0.75, "in-package class has weak batch affinity");
+    }
+
+    #[test]
+    fn placement_is_argmin_over_base_latency() {
+        let families = serving_families();
+        let profiles = build_profiles(
+            &[
+                spec(DeviceClass::Pascal, 1.0),
+                spec(DeviceClass::Pavlov, 1.0),
+                spec(DeviceClass::Jacquard, 1.0),
+            ],
+            &families,
+            Duration::ZERO,
+        );
+        let map = placement(&profiles, &families);
+        for f in &families {
+            let chosen = map[f];
+            for (i, p) in profiles.iter().enumerate() {
+                assert!(
+                    profiles[chosen].base_latency_s(f) <= p.base_latency_s(f),
+                    "{f}: class {chosen} is not the argmin (class {i} is faster)"
+                );
+            }
+        }
+        // The classes are genuinely heterogeneous: at least two
+        // distinct preferred classes across the zoo's three families —
+        // the Mensa placement premise.
+        let distinct: std::collections::HashSet<usize> = map.values().copied().collect();
+        assert!(distinct.len() >= 2, "all families prefer one class: {map:?}");
+    }
+
+    #[test]
+    fn roster_change_rekeys_schedule_cache() {
+        // The staleness satellite: a server restarted with a different
+        // roster must not be served placements computed for the old
+        // one. Profiles key the cache by each class's single-accel
+        // system, whose structural hash covers the accelerator
+        // geometry — so a roster edit is a different key, and both
+        // rosters' entries coexist (no invalidation required).
+        let cache = ScheduleCache::new();
+        let model = zoo::cnn(0);
+        let a = cache.get_or_compute(&MensaSystem::single(configs::pascal()), &model);
+        let b = cache.get_or_compute(&MensaSystem::single(configs::pavlov()), &model);
+        assert!(!Arc::ptr_eq(&a, &b), "different classes share a cache entry");
+        assert_eq!(cache.len(), 2, "both rosters' entries coexist");
+        // Restarting with the original roster hits the original entry.
+        let a2 = cache.get_or_compute(&MensaSystem::single(configs::pascal()), &model);
+        assert!(Arc::ptr_eq(&a, &a2), "unchanged roster must still hit");
+        assert!(
+            a.report.total_latency_s != b.report.total_latency_s,
+            "distinct classes model distinct latencies"
+        );
+    }
+
+    #[test]
+    fn transfer_tracker_detects_class_crossings() {
+        let t = TransferTracker::default();
+        assert!(!t.crossed("edge_cnn", "pascal"), "first job is not a crossing");
+        assert!(!t.crossed("edge_cnn", "pascal"), "same class is not a crossing");
+        assert!(t.crossed("edge_cnn", "pavlov"), "class change is a crossing");
+        assert!(!t.crossed("edge_cnn", "pavlov"), "settled on the new class");
+        assert!(t.crossed("edge_cnn", "pascal"), "moving back crosses again");
+        // Families are tracked independently.
+        assert!(!t.crossed("edge_lstm", "pavlov"));
+    }
+
+    #[test]
+    fn device_backend_delegates_timing_to_profile() {
+        // The flat profile through the Backend seam — the degenerate
+        // roster the legacy `device_latency_us` knob maps to. (The
+        // numerics delegation to the shared runtime is covered by the
+        // e2e hetero_pool test, which compares responses bit-for-bit
+        // against solo executions.)
+        let p = DeviceProfile::flat("device", Duration::from_micros(250));
+        assert_eq!(p.window("x", 64), Duration::from_micros(250));
+        // Send + Sync: one DeviceBackend is shared by its class's
+        // workers behind Arc<dyn Backend>.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<DeviceBackend>();
+        assert_send_sync::<TransferTracker>();
+    }
+}

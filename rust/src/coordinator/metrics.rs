@@ -26,6 +26,13 @@
 //!   increasing** in lexicographic `(seq, chunk)` order — a repeated
 //!   key means a chunk was delivered twice, which is as much an
 //!   ordering bug as running backwards. Any nonzero value is a bug.
+//! * `jobs_by_device` / `cross_device_transfers` — the heterogeneous
+//!   pool's placement witness: which device class executed each job
+//!   (recorded at execution, next to the worker attribution) and how
+//!   often a family's consecutive jobs crossed classes (each crossing
+//!   charges the emulated layer-to-layer transfer window). The e2e
+//!   tests assert hot families land on their preferred class *and*
+//!   `fifo_violations == 0` holds under heterogeneous dispatch.
 //! * `depth_by_family` / `current_depth_by_family` (snapshot-only) —
 //!   the high watermark and the live value of the per-family
 //!   concurrency the executor pool granted, filled in by
@@ -53,6 +60,8 @@ struct Inner {
     sim_energy_j: f64,
     sim_latency_s: f64,
     workers_by_family: BTreeMap<String, BTreeSet<usize>>,
+    jobs_by_device: BTreeMap<String, u64>,
+    cross_device_transfers: u64,
     last_seq_by_family: BTreeMap<String, (u64, u32)>,
     fifo_violations: u64,
 }
@@ -92,6 +101,16 @@ pub struct Snapshot {
     /// Which executor workers ran each family's jobs, sorted by
     /// family; the stealing pool's load-balance witness.
     pub workers_by_family: Vec<(String, Vec<usize>)>,
+    /// Executed batch jobs per device class, sorted by class label
+    /// (`cpu` for the bare runtime); the heterogeneous pool's
+    /// placement witness — a Mensa roster should attribute each hot
+    /// family's jobs to its preferred class.
+    pub jobs_by_device: Vec<(String, u64)>,
+    /// Jobs whose family's previous job executed on a *different*
+    /// device class, so a layer-to-layer transfer window was charged.
+    /// Zero in a homogeneous pool; low-but-nonzero under spill
+    /// stealing.
+    pub cross_device_transfers: u64,
     /// Chunks observed with a per-family `(flush seq, chunk seq)` key
     /// lower than an already-delivered one. Must be zero — FIFO
     /// ordering invariant.
@@ -133,13 +152,22 @@ impl Metrics {
     }
 
     /// Record one executed batch job (after oversized-job splitting):
-    /// which worker ran it. Called at execution time, so the worker
-    /// attribution is correct even when delivery happens on another
-    /// thread (reorder mode).
-    pub fn record_job(&self, family: &str, worker: usize) {
+    /// which worker ran it and which device class the worker's backend
+    /// belongs to. Called at execution time, so the attribution is
+    /// correct even when delivery happens on another thread (reorder
+    /// mode).
+    pub fn record_job(&self, family: &str, worker: usize, device: &str) {
         let mut m = self.inner.lock().expect("metrics lock");
         m.jobs += 1;
         m.workers_by_family.entry(family.to_string()).or_default().insert(worker);
+        *m.jobs_by_device.entry(device.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one emulated layer-to-layer transfer: a family's job
+    /// landed on a different device class than its previous job, so
+    /// the executor charged the class's transfer window.
+    pub fn record_transfer(&self) {
+        self.inner.lock().expect("metrics lock").cross_device_transfers += 1;
     }
 
     /// Record the per-family `(flush seq, chunk seq)` of a chunk whose
@@ -201,6 +229,8 @@ impl Metrics {
                 .iter()
                 .map(|(k, v)| (k.clone(), v.iter().copied().collect()))
                 .collect(),
+            jobs_by_device: m.jobs_by_device.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            cross_device_transfers: m.cross_device_transfers,
             fifo_violations: m.fifo_violations,
             depth_by_family: Vec::new(),
             current_depth_by_family: Vec::new(),
@@ -231,7 +261,7 @@ mod tests {
             0.5,
             0.01,
         );
-        m.record_job("edge_cnn", 0);
+        m.record_job("edge_cnn", 0, "cpu");
         m.record_job_order("edge_cnn", 0, 0);
         m.record_rejection();
         let s = m.snapshot();
@@ -247,15 +277,17 @@ mod tests {
             vec![("edge_cnn".to_string(), 1), ("edge_lstm".to_string(), 1)]
         );
         assert_eq!(s.workers_by_family, vec![("edge_cnn".to_string(), vec![0])]);
+        assert_eq!(s.jobs_by_device, vec![("cpu".to_string(), 1)]);
+        assert_eq!(s.cross_device_transfers, 0);
     }
 
     #[test]
     fn worker_sets_accumulate_per_family() {
         let m = Metrics::default();
-        m.record_job("edge_cnn", 0);
-        m.record_job("edge_cnn", 2);
-        m.record_job("edge_cnn", 2);
-        m.record_job("joint", 1);
+        m.record_job("edge_cnn", 0, "pascal");
+        m.record_job("edge_cnn", 2, "pascal");
+        m.record_job("edge_cnn", 2, "pascal");
+        m.record_job("joint", 1, "pavlov");
         let s = m.snapshot();
         assert_eq!(
             s.workers_by_family,
@@ -266,6 +298,21 @@ mod tests {
         );
         assert_eq!(s.jobs, 4);
         assert_eq!(s.fifo_violations, 0);
+    }
+
+    #[test]
+    fn device_attribution_and_transfers() {
+        let m = Metrics::default();
+        m.record_job("edge_cnn", 0, "pascal");
+        m.record_job("edge_cnn", 0, "pascal");
+        m.record_job("edge_lstm", 1, "pavlov");
+        m.record_transfer();
+        let s = m.snapshot();
+        assert_eq!(
+            s.jobs_by_device,
+            vec![("pascal".to_string(), 2), ("pavlov".to_string(), 1)]
+        );
+        assert_eq!(s.cross_device_transfers, 1);
     }
 
     #[test]
@@ -313,6 +360,8 @@ mod tests {
         assert_eq!(s.p99_us, 0.0);
         assert!(s.completed_by_family.is_empty());
         assert!(s.workers_by_family.is_empty());
+        assert!(s.jobs_by_device.is_empty());
+        assert_eq!(s.cross_device_transfers, 0);
         assert_eq!(s.fifo_violations, 0);
     }
 }

@@ -49,15 +49,32 @@
 //! All workers execute against a single shared `Arc<Runtime>` (the
 //! manifest is parsed once per server) and keep per-worker scratch so
 //! the execute path is allocation-free at steady state.
+//!
+//! # Heterogeneous device classes
+//!
+//! With a `[[device]]` roster configured, workers bind to **device
+//! classes** built from the `accel/dataflow` models ([`device`]): each
+//! class wraps the shared runtime behind the
+//! [`Backend`](crate::runtime::Backend) seam with its own emulated
+//! throughput/latency/batch-affinity profile, job→class placement
+//! follows the Mensa schedule (each family prefers the class with the
+//! lowest modeled latency), work-stealing becomes class-aware (a
+//! worker only steals work its class serves well, spilling past a
+//! staleness threshold), and a layer-to-layer transfer window is
+//! charged whenever a family's consecutive jobs cross classes.
+//! `Snapshot::jobs_by_device` / `cross_device_transfers` witness the
+//! placement; client-observed FIFO is preserved unchanged.
 
 pub mod batcher;
+pub mod device;
 pub mod metrics;
 pub mod pool;
 pub mod server;
 
 pub use batcher::{BatchJob, Batcher};
+pub use device::{DeviceBackend, DeviceProfile, TransferTracker};
 pub use metrics::Metrics;
-pub use pool::{DepthPolicy, ExecutorPool, ReorderBuffer};
+pub use pool::{DepthPolicy, ExecutorPool, PoolTopology, ReorderBuffer};
 pub use server::{InferenceResponse, Server, ServerHandle, SimCost};
 
 use crate::util::fnv1a_64;

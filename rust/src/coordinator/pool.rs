@@ -69,6 +69,23 @@
 //! and exists as the measured baseline for `benches/hotpath_micro.rs`
 //! and as a debugging fallback.
 //!
+//! **Heterogeneous mode** ([`ExecutorPool::new_hetero`], driven by the
+//! `[[device]]` roster in `ServerConfig`) binds every worker to a
+//! device class and splits the shared ready queue per class
+//! ([`PoolTopology`]): a ready family is offered to its *preferred*
+//! class (the Mensa placement — lowest modeled latency), handed
+//! directly only to idle workers of that class, and queued on the
+//! class's own ready list otherwise. Stealing becomes class-aware: a
+//! worker drains its own class's queue freely but may only **spill**
+//! onto another class's backlog once the entry at that queue's front
+//! has aged past [`PoolTopology::spill_after`] (every entry carries
+//! its enqueue `Instant`) — so placement holds while the preferred
+//! class keeps up, and work still rebalances rather than stranding
+//! when it doesn't. Parked workers wait with a `spill_after` timeout
+//! so stale foreign backlog is noticed without any new push. Pool
+//! close marks everything spillable: draining correctness never
+//! depends on the staleness clock.
+//!
 //! Shutdown: each batcher shard calls [`ExecutorPool::producer_done`]
 //! after flushing its pending batches; when the last producer signs
 //! off the pool closes and workers exit once every queue is drained.
@@ -80,6 +97,7 @@ use super::batcher::BatchJob;
 use super::worker_for_family;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Minimum flushed-but-unexecuted chunks a single family may
 /// accumulate before `push` blocks (the batcher-side backpressure
@@ -120,6 +138,61 @@ pub enum DepthPolicy {
     },
 }
 
+/// Device-class topology for a heterogeneous pool: which class each
+/// worker executes on, which class each family prefers, and how stale
+/// a preferred-class backlog entry must grow before another class may
+/// spill-steal it.
+///
+/// Built by the server from the `[[device]]` roster: workers expand in
+/// roster order (so worker→class is deterministic), and the per-family
+/// preference is the Mensa placement — argmin of the modeled base
+/// latency across the roster's device profiles
+/// (`coordinator::device::placement`).
+#[derive(Debug, Clone)]
+pub struct PoolTopology {
+    /// `worker_class[w]` is the device-class index worker `w` is bound
+    /// to. Length = pool worker count.
+    pub worker_class: Vec<usize>,
+    /// Each family's preferred class index (the placement). Families
+    /// absent from the map fall back to class 0.
+    pub class_of_family: HashMap<String, usize>,
+    /// Number of device classes — one ready queue per class.
+    pub classes: usize,
+    /// Age the front entry of a class's ready queue must reach before
+    /// a worker of *another* class may take it (the spill policy).
+    pub spill_after: Duration,
+}
+
+impl PoolTopology {
+    /// Build a topology; `classes` is derived from the densest class
+    /// index used. Every class in `0..classes` must have at least one
+    /// worker (otherwise its queue could strand until `spill_after`),
+    /// and every family preference must name an existing class.
+    pub fn new(
+        worker_class: Vec<usize>,
+        class_of_family: HashMap<String, usize>,
+        spill_after: Duration,
+    ) -> Self {
+        assert!(!worker_class.is_empty(), "hetero pool needs at least one worker");
+        let classes = worker_class.iter().copied().max().unwrap_or(0) + 1;
+        for c in 0..classes {
+            assert!(
+                worker_class.contains(&c),
+                "device class {c} has no worker (classes must be contiguous and populated)"
+            );
+        }
+        for (family, &c) in &class_of_family {
+            assert!(c < classes, "family {family} placed on unknown class {c}");
+        }
+        Self { worker_class, class_of_family, classes, spill_after }
+    }
+
+    /// Preferred class for `family` (absent → class 0).
+    fn class_of(&self, family: &str) -> usize {
+        self.class_of_family.get(family).copied().unwrap_or(0)
+    }
+}
+
 /// One family's pending work.
 struct FamilyQueue {
     jobs: VecDeque<BatchJob>,
@@ -134,9 +207,11 @@ struct FamilyQueue {
 
 struct PoolState {
     queues: HashMap<String, FamilyQueue>,
-    /// Families with jobs awaiting a worker. One shared queue in
-    /// stealing mode; one per worker in static mode.
-    ready: Vec<VecDeque<String>>,
+    /// Families with jobs awaiting a worker, each stamped with its
+    /// enqueue time (the spill-staleness clock; homogeneous modes
+    /// ignore it). One shared queue in stealing mode, one per worker
+    /// in static mode, one per device class in heterogeneous mode.
+    ready: Vec<VecDeque<(String, Instant)>>,
     /// Direct handoff slots: a family held for an idle worker before
     /// it wakes.
     assigned: Vec<Option<String>>,
@@ -177,6 +252,8 @@ pub struct ExecutorPool {
     /// Per-family concurrency policy. Static mode (no stealing) forces
     /// `Static(1)`.
     depth: DepthPolicy,
+    /// Device-class topology; `None` for the homogeneous pool.
+    topology: Option<PoolTopology>,
 }
 
 impl ExecutorPool {
@@ -189,9 +266,32 @@ impl ExecutorPool {
     /// is forced to the single-holder lease.
     pub fn new(workers: usize, stealing: bool, producers: usize, depth: DepthPolicy) -> Self {
         assert!(workers > 0, "executor pool needs at least one worker");
-        assert!(producers > 0, "executor pool needs at least one producer");
         let ready_queues = if stealing { 1 } else { workers };
         let depth = if stealing { depth } else { DepthPolicy::Static(1) };
+        Self::build(workers, stealing, producers, depth, ready_queues, None)
+    }
+
+    /// Create a heterogeneous pool: one worker per `topology.worker_class`
+    /// entry, one ready queue per device class, class-aware dispatch
+    /// with stale-spill stealing (see the module docs). Heterogeneous
+    /// dispatch *is* a stealing discipline — the static family-hash
+    /// baseline has no class concept — so `is_stealing()` reports true.
+    pub fn new_hetero(topology: PoolTopology, producers: usize, depth: DepthPolicy) -> Self {
+        let workers = topology.worker_class.len();
+        let ready_queues = topology.classes;
+        Self::build(workers, true, producers, depth, ready_queues, Some(topology))
+    }
+
+    fn build(
+        workers: usize,
+        stealing: bool,
+        producers: usize,
+        depth: DepthPolicy,
+        ready_queues: usize,
+        topology: Option<PoolTopology>,
+    ) -> Self {
+        assert!(workers > 0, "executor pool needs at least one worker");
+        assert!(producers > 0, "executor pool needs at least one producer");
         Self {
             state: Mutex::new(PoolState {
                 queues: HashMap::new(),
@@ -209,12 +309,18 @@ impl ExecutorPool {
             workers,
             stealing,
             depth,
+            topology,
         }
     }
 
     /// Whether this pool steals (true) or pins families (false).
     pub fn is_stealing(&self) -> bool {
         self.stealing
+    }
+
+    /// The device-class topology, when this is a heterogeneous pool.
+    pub fn topology(&self) -> Option<&PoolTopology> {
+        self.topology.as_ref()
     }
 
     /// Max workers that may ever drain one family concurrently (1 =
@@ -316,13 +422,14 @@ impl ExecutorPool {
         FAMILY_INFLIGHT_CAP.max(self.family_concurrency().saturating_mul(2))
     }
 
-    /// Ready-queue index for a family: the one shared queue when
-    /// stealing, the family's hash worker otherwise.
+    /// Ready-queue index for a family: its preferred device class in
+    /// heterogeneous mode, the one shared queue when stealing, the
+    /// family's hash worker otherwise.
     fn ready_queue(&self, family: &str) -> usize {
-        if self.stealing {
-            0
-        } else {
-            worker_for_family(family, self.workers)
+        match &self.topology {
+            Some(t) => t.class_of(family),
+            None if self.stealing => 0,
+            None => worker_for_family(family, self.workers),
         }
     }
 
@@ -401,14 +508,25 @@ impl ExecutorPool {
         };
         let Some(family) = family else { return };
         // Hand the family to an idle worker if one may take it, else
-        // queue it ready.
-        let target = if self.stealing {
-            st.idle.pop_front()
-        } else {
-            let w = worker_for_family(&family, self.workers);
-            match st.idle.iter().position(|&x| x == w) {
-                Some(pos) => st.idle.remove(pos),
-                None => None,
+        // queue it ready. Heterogeneous pools hand off only to idle
+        // workers of the family's *preferred* class — other classes
+        // reach it solely through the stale-spill path, so placement
+        // is never diluted by a momentarily idle wrong-class worker.
+        let target = match &self.topology {
+            Some(t) => {
+                let cls = t.class_of(&family);
+                match st.idle.iter().position(|&x| t.worker_class[x] == cls) {
+                    Some(pos) => st.idle.remove(pos),
+                    None => None,
+                }
+            }
+            None if self.stealing => st.idle.pop_front(),
+            None => {
+                let w = worker_for_family(&family, self.workers);
+                match st.idle.iter().position(|&x| x == w) {
+                    Some(pos) => st.idle.remove(pos),
+                    None => None,
+                }
             }
         };
         match target {
@@ -419,16 +537,49 @@ impl ExecutorPool {
             None => {
                 st.queues.get_mut(&family).expect("just inserted").ready_queued = true;
                 let rq = self.ready_queue(&family);
-                st.ready[rq].push_back(family);
+                st.ready[rq].push_back((family, Instant::now()));
             }
         }
         self.work.notify_all();
+    }
+
+    /// Attempt to take a hold on `family` for worker `w`. Another
+    /// holder may have drained (or be over-holding) the family since
+    /// it was queued ready; such entries are skipped (`false`) with
+    /// the same full-drain cleanup as `next_job`'s release path,
+    /// instead of double-holding.
+    fn claim(&self, st: &mut PoolState, family: &str, w: usize) -> bool {
+        let allowed = self.allowed_for(st, family);
+        let Some(q) = st.queues.get_mut(family) else { return false };
+        q.ready_queued = false;
+        if q.jobs.is_empty() || q.holders.len() >= allowed {
+            if q.jobs.is_empty() && q.holders.is_empty() {
+                st.queues.remove(family);
+                if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
+                    Self::reset_granted(st, family);
+                }
+            }
+            return false;
+        }
+        q.holders.push(w);
+        st.idle.retain(|&x| x != w);
+        true
     }
 
     /// Block until a family hold is available for worker `w` (or the
     /// pool is closed and drained — then `None`, and the worker should
     /// exit). The returned family is held by `w`; drain it with
     /// [`ExecutorPool::next_job`] until that returns `None`.
+    ///
+    /// Heterogeneous pools drain the worker's own class queue first;
+    /// when it is empty, other classes' queues are scanned and their
+    /// front entries taken only once older than the topology's
+    /// `spill_after` (per-queue FIFO means everything behind a fresh
+    /// front is fresher still, so the scan stops there). A closed pool
+    /// treats every entry as stale — drain correctness never waits on
+    /// the staleness clock. Parked hetero workers time out at
+    /// `spill_after` so foreign backlog ages into view without a
+    /// fresh push.
     pub fn take_family(&self, w: usize) -> Option<String> {
         debug_assert!(w < self.workers);
         let mut guard = self.state.lock().expect("pool lock");
@@ -438,28 +589,38 @@ impl ExecutorPool {
                 st.idle.retain(|&x| x != w);
                 return Some(family);
             }
-            let rq = if self.stealing { 0 } else { w };
-            while let Some(family) = st.ready[rq].pop_front() {
-                // Another holder may have drained (or be over-holding)
-                // the family since it was queued ready; skip such
-                // entries instead of double-holding.
-                let allowed = self.allowed_for(st, &family);
-                let Some(q) = st.queues.get_mut(&family) else { continue };
-                q.ready_queued = false;
-                if q.jobs.is_empty() || q.holders.len() >= allowed {
-                    if q.jobs.is_empty() && q.holders.is_empty() {
-                        st.queues.remove(&family);
-                        // Same full-drain width release as next_job's
-                        // removal path.
-                        if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
-                            Self::reset_granted(st, &family);
+            let rq = match &self.topology {
+                Some(t) => t.worker_class[w],
+                None if self.stealing => 0,
+                None => w,
+            };
+            while let Some((family, _)) = st.ready[rq].pop_front() {
+                if self.claim(st, &family, w) {
+                    return Some(family);
+                }
+            }
+            if let Some(t) = &self.topology {
+                let spill_after = t.spill_after;
+                let closed = st.closed;
+                for other in 0..st.ready.len() {
+                    if other == rq {
+                        continue;
+                    }
+                    loop {
+                        let stale = match st.ready[other].front() {
+                            Some((_, at)) => closed || at.elapsed() >= spill_after,
+                            None => false,
+                        };
+                        if !stale {
+                            break;
+                        }
+                        let (family, _) =
+                            st.ready[other].pop_front().expect("front just checked");
+                        if self.claim(st, &family, w) {
+                            return Some(family);
                         }
                     }
-                    continue;
                 }
-                q.holders.push(w);
-                st.idle.retain(|&x| x != w);
-                return Some(family);
             }
             if st.closed {
                 return None;
@@ -467,7 +628,17 @@ impl ExecutorPool {
             if !st.idle.contains(&w) {
                 st.idle.push_back(w);
             }
-            guard = self.work.wait(guard).expect("pool lock");
+            guard = match &self.topology {
+                Some(t) => {
+                    // Bounded park: wake to re-scan for newly stale
+                    // spill candidates. Clamped away from zero so a
+                    // zero spill_after degrades to a 1 ms poll, not a
+                    // spin.
+                    let park = t.spill_after.max(Duration::from_millis(1));
+                    self.work.wait_timeout(guard, park).expect("pool lock").0
+                }
+                None => self.work.wait(guard).expect("pool lock"),
+            };
         }
     }
 
@@ -508,7 +679,10 @@ impl ExecutorPool {
                 if !q.jobs.is_empty() && q.holders.len() < allowed && !q.ready_queued {
                     q.ready_queued = true;
                     let rq = self.ready_queue(family);
-                    st.ready[rq].push_back(family.to_string());
+                    // Re-offers restamp the clock: the preferred class
+                    // gets first shot at each chunk before the backlog
+                    // ages into spill range again.
+                    st.ready[rq].push_back((family.to_string(), Instant::now()));
                     self.work.notify_all();
                 }
                 self.space.notify_all();
@@ -1026,6 +1200,89 @@ mod tests {
         assert!(b.is_empty(), "family b's seq 0 is still outstanding");
         buf.submit("b", 0, 0, true, "b0", |v| b.push(v));
         assert_eq!(b, vec!["b0", "b1"]);
+    }
+
+    fn topology(worker_class: Vec<usize>, prefs: &[(&str, usize)], spill: Duration) -> PoolTopology {
+        let class_of_family =
+            prefs.iter().map(|&(f, c)| (f.to_string(), c)).collect::<HashMap<_, _>>();
+        PoolTopology::new(worker_class, class_of_family, spill)
+    }
+
+    #[test]
+    fn topology_derives_class_count_and_defaults_unknown_families() {
+        let t = topology(vec![0, 1, 1], &[("a", 0), ("b", 1)], Duration::from_millis(5));
+        assert_eq!(t.classes, 2);
+        assert_eq!(t.class_of("a"), 0);
+        assert_eq!(t.class_of("b"), 1);
+        assert_eq!(t.class_of("unplaced"), 0, "unknown families fall back to class 0");
+    }
+
+    #[test]
+    fn hetero_pool_routes_families_to_their_class_workers() {
+        // Workers 0 (class 0) and 1 (class 1); spill effectively off.
+        let t = topology(vec![0, 1], &[("a", 0), ("b", 1)], Duration::from_secs(3600));
+        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        assert!(pool.is_stealing());
+        assert_eq!(pool.topology().unwrap().classes, 2);
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        for seq in 0..4 {
+            pool.push(job("a", seq));
+            pool.push(job("b", seq));
+        }
+        for _ in 0..8 {
+            let (w, j) = rx.recv_timeout(RECV).expect("job");
+            let expect = if j.family == "a" { 0 } else { 1 };
+            assert_eq!(
+                w, expect,
+                "family {} must run on its placed class's worker under a huge spill_after",
+                j.family
+            );
+        }
+        pool.producer_done();
+        for t in workers {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn hetero_worker_spills_onto_stale_foreign_backlog() {
+        // Family "b" prefers class 1, but class 1's worker never runs:
+        // after spill_after the class-0 worker must take it anyway.
+        let t = topology(vec![0, 1], &[("b", 1)], Duration::from_millis(50));
+        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        let (tx, rx) = mpsc::channel();
+        let worker = spawn_worker(&pool, 0, tx);
+        let t0 = Instant::now();
+        pool.push(job("b", 0));
+        let (w, j) = rx.recv_timeout(RECV).expect("spilled job");
+        assert_eq!(w, 0);
+        assert_eq!(j.family, "b");
+        assert!(
+            t0.elapsed() >= Duration::from_millis(50),
+            "spill must wait out the staleness threshold, took {:?}",
+            t0.elapsed()
+        );
+        pool.producer_done();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn hetero_close_marks_foreign_backlog_spillable() {
+        // A closed pool must drain other classes' queues without
+        // waiting out spill_after, or shutdown strands queued work
+        // when a class's workers already exited.
+        let t = topology(vec![0, 1], &[("b", 1)], Duration::from_secs(3600));
+        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        pool.push(job("b", 0));
+        pool.producer_done();
+        let (tx, rx) = mpsc::channel();
+        let worker = spawn_worker(&pool, 0, tx);
+        let (w, j) = rx.recv_timeout(RECV).expect("drained job");
+        assert_eq!((w, j.family.as_str()), (0, "b"));
+        worker.join().unwrap();
+        assert_eq!(pool.queued_jobs(), 0);
     }
 
     #[test]

@@ -72,15 +72,47 @@
 //! process-wide [`ScheduleCache`](crate::scheduler::ScheduleCache) —
 //! scheduling and simulating the proxy models happens once per
 //! process, not once per server or per worker.
+//!
+//! # Device classes and the `Backend` seam
+//!
+//! Executors no longer touch the [`Runtime`] directly: each worker
+//! executes through an **`Arc<dyn Backend>`**
+//! ([`Backend`](crate::runtime::Backend)), resolved at startup from
+//! the config:
+//!
+//! * no `[[device]]` roster, `device_latency_us = 0` — the bare
+//!   shared `Runtime` (zero emulated windows, identical to the
+//!   pre-seam server);
+//! * no roster, `device_latency_us > 0` — one flat
+//!   [`DeviceBackend`](super::device::DeviceBackend) shared by all
+//!   workers: the legacy knob is exactly a degenerate single-class
+//!   roster whose window is batch-independent;
+//! * a `[[device]]` roster — one *modeled* `DeviceBackend` per
+//!   entry (profiles built from the `accel/dataflow` models), workers
+//!   expanded in roster order so worker→class is deterministic, and
+//!   the pool constructed heterogeneous
+//!   ([`PoolTopology`](super::pool::PoolTopology)): families are
+//!   placed on the class with the lowest modeled latency (the Mensa
+//!   placement), stealing is class-aware with stale-spill, and a
+//!   transfer window is charged when a family's consecutive jobs
+//!   cross classes ([`TransferTracker`](super::device::
+//!   TransferTracker), `Snapshot::cross_device_transfers`).
+//!
+//! All backends wrap the *same* `Arc<Runtime>`, so numerics stay
+//! bit-identical across classes (same kernel path, same weights);
+//! only the emulated timing differs. Delivery ordering is untouched —
+//! the FIFO invariant (`Snapshot::fifo_violations == 0`) holds under
+//! heterogeneous dispatch, which `tests/hetero_pool.rs` pins.
 
 use super::batcher::{BatchJob, Batcher};
+use super::device::{self, DeviceBackend, DeviceProfile, TransferTracker};
 use super::metrics::{Metrics, Snapshot};
-use super::pool::{DepthPolicy, ExecutorPool, ReorderBuffer};
+use super::pool::{DepthPolicy, ExecutorPool, PoolTopology, ReorderBuffer};
 use super::{worker_for_family, Request};
 use crate::accel::configs;
 use crate::config::ServerConfig;
 use crate::model::zoo;
-use crate::runtime::{ExecScratch, Runtime, RuntimeOptions};
+use crate::runtime::{Backend, ExecScratch, Runtime, RuntimeOptions};
 use crate::scheduler::ScheduleCache;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, Result};
@@ -208,19 +240,91 @@ impl Server {
         } else {
             DepthPolicy::Static(cfg.reorder_depth.max(1))
         };
-        let pool = Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, depth));
+
+        // Resolve the executor pool and the per-worker execution
+        // backends behind the `Backend` seam. Every backend wraps the
+        // one shared runtime — numerics are bit-identical across
+        // classes; only the emulated device timing differs.
+        let mut family_names: Vec<String> = families.iter().cloned().collect();
+        family_names.sort();
+        let (pool, worker_backends, transfers): (
+            Arc<ExecutorPool>,
+            Vec<Arc<dyn Backend>>,
+            Option<Arc<TransferTracker>>,
+        ) = if cfg.devices.is_empty() {
+            let pool =
+                Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, depth));
+            let backend: Arc<dyn Backend> = if cfg.device_latency_us == 0 {
+                // No emulated device at all: the bare runtime
+                // (zero windows), the pre-seam behavior exactly.
+                Arc::clone(&runtime) as Arc<dyn Backend>
+            } else {
+                // Back-compat: the legacy flat per-chunk knob is a
+                // degenerate single-class roster whose window ignores
+                // the batch size.
+                Arc::new(DeviceBackend::new(
+                    Arc::clone(&runtime),
+                    DeviceProfile::flat(
+                        "device",
+                        Duration::from_micros(cfg.device_latency_us),
+                    ),
+                ))
+            };
+            (pool, vec![backend; workers], None)
+        } else {
+            if !cfg.work_stealing {
+                bail!(
+                    "a [[device]] roster requires work_stealing = true: \
+                     class-aware placement is a stealing discipline"
+                );
+            }
+            // Each class's profile simulates its accelerator through
+            // the process-wide ScheduleCache, whose key includes a
+            // structural hash of the accelerator geometry — a changed
+            // roster re-keys instead of reusing stale schedules (see
+            // `device` and `scheduler::cache` docs).
+            let transfer = Duration::from_micros(cfg.transfer_us);
+            let profiles = device::build_profiles(&cfg.devices, &family_names, transfer);
+            let placement = device::placement(&profiles, &family_names);
+            // Workers expand in roster order, so worker→class (and
+            // with it `jobs_by_device` attribution) is deterministic.
+            let mut worker_class = Vec::new();
+            for (ci, spec) in cfg.devices.iter().enumerate() {
+                for _ in 0..spec.workers.max(1) {
+                    worker_class.push(ci);
+                }
+            }
+            let class_backends: Vec<Arc<dyn Backend>> = profiles
+                .into_iter()
+                .map(|p| {
+                    Arc::new(DeviceBackend::new(Arc::clone(&runtime), p)) as Arc<dyn Backend>
+                })
+                .collect();
+            let worker_backends: Vec<Arc<dyn Backend>> =
+                worker_class.iter().map(|&c| Arc::clone(&class_backends[c])).collect();
+            let topology = PoolTopology::new(
+                worker_class,
+                placement,
+                Duration::from_micros(cfg.spill_after_us),
+            );
+            let pool = Arc::new(ExecutorPool::new_hetero(topology, shards, depth));
+            (pool, worker_backends, Some(Arc::new(TransferTracker::default())))
+        };
+        // With a roster the worker count is the roster's, not
+        // `cfg.workers`.
+        let workers = worker_backends.len();
+
         // Intra-family parallelism: when the pool may let several
         // workers drain one family, a shared reorder buffer restores
         // client-observed FIFO at delivery.
         let reorder = (pool.family_concurrency() > 1)
             .then(|| Arc::new(ReorderBuffer::<ChunkDone>::new()));
-        let device_latency = Duration::from_micros(cfg.device_latency_us);
         let mut threads = Vec::with_capacity(workers + shards);
-        for w in 0..workers {
-            let worker_runtime = Arc::clone(&runtime);
+        for (w, backend) in worker_backends.into_iter().enumerate() {
             let worker_pool = Arc::clone(&pool);
             let worker_metrics = Arc::clone(&metrics);
             let worker_costs = Arc::clone(&sim_costs);
+            let worker_transfers = transfers.clone();
             let worker_reorder = reorder.clone();
             threads.push(
                 std::thread::Builder::new()
@@ -228,11 +332,11 @@ impl Server {
                     .spawn(move || {
                         executor_loop(
                             w,
-                            worker_runtime,
+                            backend,
                             worker_pool,
                             worker_metrics,
                             worker_costs,
-                            device_latency,
+                            worker_transfers,
                             worker_reorder,
                         )
                     })
@@ -433,16 +537,16 @@ struct ChunkErr {
 /// One worker's executor loop: take a family hold from the pool, drain
 /// its chunk queue (chunks are pre-split by the batcher in
 /// chunk-granular mode; a job-granular job is split here, front to
-/// back), execute with this worker's reusable scratch, deliver
-/// (directly under the family lease; through the reorder buffer's
-/// `(seq, chunk)` slots otherwise), release, repeat.
+/// back), execute through this worker's [`Backend`] with its reusable
+/// scratch, deliver (directly under the family lease; through the
+/// reorder buffer's `(seq, chunk)` slots otherwise), release, repeat.
 fn executor_loop(
     worker: usize,
-    runtime: Arc<Runtime>,
+    backend: Arc<dyn Backend>,
     pool: Arc<ExecutorPool>,
     metrics: Arc<Metrics>,
     sim_costs: Arc<HashMap<String, SimCost>>,
-    device_latency: Duration,
+    transfers: Option<Arc<TransferTracker>>,
     reorder: Option<Arc<ReorderBuffer<ChunkDone>>>,
 ) {
     let mut scratch = WorkerScratch::default();
@@ -459,13 +563,13 @@ fn executor_loop(
                 // possibly several (this chunk unblocked buffered
                 // successors).
                 Some(buf) => exec_job(
-                    &runtime,
+                    &*backend,
                     job,
                     worker,
                     &metrics,
                     &sim_costs,
                     &mut scratch,
-                    device_latency,
+                    transfers.as_deref(),
                     |chunk| {
                         let (seq, idx, last) = (chunk.seq, chunk.chunk, chunk.last);
                         buf.submit(&family, seq, idx, last, chunk, |done| {
@@ -478,13 +582,13 @@ fn executor_loop(
                 // chunk finishes (before its emulated device window),
                 // exactly as before the reorder buffer existed.
                 None => exec_job(
-                    &runtime,
+                    &*backend,
                     job,
                     worker,
                     &metrics,
                     &sim_costs,
                     &mut scratch,
-                    device_latency,
+                    transfers.as_deref(),
                     |chunk| deliver_chunk(&metrics, &family, chunk),
                 ),
             }
@@ -504,16 +608,27 @@ fn executor_loop(
 /// held family queues.
 #[allow(clippy::too_many_arguments)]
 fn exec_job(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     mut job: BatchJob,
     worker: usize,
     metrics: &Metrics,
     sim_costs: &HashMap<String, SimCost>,
     scratch: &mut WorkerScratch,
-    device_latency: Duration,
+    transfers: Option<&TransferTracker>,
     mut sink: impl FnMut(ChunkDone),
 ) {
-    let cap = runtime.chunk_cap(&job.family);
+    let cap = backend.chunk_cap(&job.family);
+    // Layer-to-layer transfer: charged once per job, exactly when this
+    // family's previous job ran on a different device class (weights/
+    // activations conceptually move across memories). Added to the
+    // first chunk's emulated window below.
+    let mut transfer = Duration::ZERO;
+    if let Some(t) = transfers {
+        if t.crossed(&job.family, backend.device_class()) {
+            metrics.record_transfer();
+            transfer = backend.transfer_window(&job.family);
+        }
+    }
     let mut chunk_idx = job.chunk;
     loop {
         let rest = if job.requests.len() > cap {
@@ -525,8 +640,13 @@ fn exec_job(
         // A pre-split chunk is final iff the batcher flagged it; a
         // job-granular split is final on its locally-last chunk.
         let last = rest.is_none() && job.last;
+        // The emulated device window models batch affinity: the
+        // once-per-chunk share (weight streaming) amortizes across the
+        // chunk's rows, so classes differ in how much a batch helps.
+        let window = backend.device_window(&job.family, requests.len())
+            + std::mem::take(&mut transfer);
         sink(exec_chunk(
-            runtime,
+            backend,
             &job.family,
             requests,
             job.seq,
@@ -537,7 +657,7 @@ fn exec_job(
             sim_costs,
             scratch,
         ));
-        emulate_device(device_latency);
+        emulate_device(window);
         match rest {
             Some(r) => {
                 job.requests = r;
@@ -551,7 +671,7 @@ fn exec_job(
 /// Execute one capacity-fitting chunk.
 #[allow(clippy::too_many_arguments)]
 fn exec_chunk(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     family: &str,
     requests: Vec<Request>,
     seq: u64,
@@ -564,13 +684,14 @@ fn exec_chunk(
 ) -> ChunkDone {
     let n = requests.len();
     let exec_start = Instant::now();
-    let result = guard_panic(|| execute_batch(runtime, family, &requests, scratch));
+    let result = guard_panic(|| execute_batch(backend, family, &requests, scratch));
     match result {
         Ok((outputs, batch)) => {
             // Jobs are counted on success only (failed chunks land in
             // `failed`, per request), at execution time so the worker
-            // attribution is right even when another thread delivers.
-            metrics.record_job(family, worker);
+            // and device-class attribution is right even when another
+            // thread delivers.
+            metrics.record_job(family, worker, backend.device_class());
             // One modeled full-model cost, amortized across the batch
             // (built once, moved into the last response at delivery).
             let sim = sim_costs.get(family).map(|c| c.amortized(n)).unwrap_or_default();
@@ -662,13 +783,14 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
-/// Hardware-in-the-loop stand-in: hold this family's lease for the
-/// configured per-job device busy time (`ServerConfig::
-/// device_latency_us`). With the physical Mensa absent, this is what
-/// makes pool-balance effects measurable — while one family's
-/// "accelerator" is busy, a balanced pool runs other families'
-/// devices concurrently instead of queueing behind a statically-pinned
-/// worker. Zero (the default) disables it.
+/// Hardware-in-the-loop stand-in: hold this chunk's worker for the
+/// emulated device busy window the [`Backend`] computed
+/// (`Backend::device_window`, plus any one-shot transfer charge).
+/// With the physical Mensa absent, this is what makes pool-balance
+/// and device-placement effects measurable — while one class's
+/// "accelerator" is busy, other classes run concurrently instead of
+/// queueing behind a statically-pinned worker. A zero window (the
+/// bare-runtime backend, or `device_latency_us = 0`) disables it.
 fn emulate_device(latency: Duration) {
     if !latency.is_zero() {
         std::thread::sleep(latency);
@@ -679,23 +801,25 @@ fn emulate_device(latency: Duration) {
 /// index, pack along each input's batch axis into the worker's
 /// reusable buffers, run with only the live rows active (the reference
 /// backend computes the whole block as one batched GEMM), unpack along
-/// the output's batch axis.
+/// the output's batch axis. Everything flows through the [`Backend`]
+/// seam — variant selection, spec lookup, and execution — so the same
+/// code serves the bare runtime and every device class.
 fn execute_batch(
-    runtime: &Runtime,
+    backend: &dyn Backend,
     family: &str,
     requests: &[Request],
     scratch: &mut WorkerScratch,
 ) -> Result<(Vec<Vec<f32>>, usize)> {
     let n = requests.len();
-    let (variant, batch) = runtime
+    let (variant, batch) = backend
         .variant_for_batch(family, n)
         .ok_or_else(|| anyhow!("no variant of `{family}` fits batch {n}"))?;
-    let model = runtime.model(variant)?;
-    let n_inputs = model.spec.input_shapes.len();
+    let spec = backend.spec(variant)?;
+    let n_inputs = spec.input_shapes.len();
     scratch.packed.resize_with(n_inputs, Vec::new);
     for idx in 0..n_inputs {
-        let shape = &model.spec.input_shapes[idx];
-        let axis = model.spec.input_batch_axes[idx];
+        let shape = &spec.input_shapes[idx];
+        let axis = spec.input_batch_axes[idx];
         let per_req: Vec<&[f32]> = requests
             .iter()
             .map(|r| {
@@ -720,13 +844,12 @@ fn execute_batch(
         }
         pack_batch_into(&mut scratch.packed[idx], shape, axis, &per_req);
     }
-    let raw = model.execute_with(&scratch.packed, n, &mut scratch.exec)?;
-    let expected: usize = model.spec.output_shape.iter().product::<i64>() as usize;
+    let raw = backend.execute_batch(variant, &scratch.packed, n, &mut scratch.exec)?;
+    let expected: usize = spec.output_shape.iter().product::<i64>() as usize;
     if raw.len() != expected {
         bail!("{variant}: output has {} elements, expected {expected}", raw.len());
     }
-    let outputs =
-        unpack_batch(&raw, &model.spec.output_shape, model.spec.output_batch_axis, n);
+    let outputs = unpack_batch(&raw, &spec.output_shape, spec.output_batch_axis, n);
     Ok((outputs, batch))
 }
 

@@ -17,9 +17,22 @@
 //! * **pjrt** (`--features pjrt`): the original XLA path — each
 //!   `artifacts/*.hlo.txt` goes through the `xla` crate
 //!   (`HloModuleProto::from_text_file` → `XlaComputation` →
-//!   `PjRtClient::compile`). The `xla` crate is not vendorable offline,
-//!   so this backend only builds once it is vendored next to `anyhow`
-//!   (see `rust/Cargo.toml`).
+//!   `PjRtClient::compile`). The build links the vendored offline
+//!   *API stub* in `rust/vendor/xla` — the feature compiles and lints
+//!   against the seam, but client creation fails at load time until
+//!   the real `xla` crate is swapped in (see `rust/Cargo.toml`).
+//!
+//! # The `Backend` seam
+//!
+//! The executor pool never names `Runtime` directly on its hot path:
+//! workers hold an `Arc<dyn Backend>` ([`Backend`]) and the server
+//! decides per device class what sits behind it — the bare reference
+//! runtime (the degenerate homogeneous pool), or a device-class
+//! emulation wrapping it with accelerator-model timing
+//! (`coordinator::device`). The trait's contract (Send + Sync,
+//! bit-identity per kernel path, advisory timing windows) is
+//! documented on [`Backend`]; the future native PJRT client joins the
+//! pool through the same seam.
 //!
 //! # Sharing
 //!
@@ -31,7 +44,7 @@
 //! variants of a family additionally share their weight matrices
 //! physically (see [`reference`]'s `WeightCache`). The PJRT backend
 //! must prove its client is thread-safe before it can join this
-//! scheme; until then it remains single-owner behind the feature gate.
+//! scheme; the vendored stub satisfies the bound trivially.
 //!
 //! Variant lookup is served by a per-family index sorted by batch
 //! size, so the batcher's per-flush "smallest variant that fits"
@@ -56,11 +69,123 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Executable form of one artifact.
-enum Backend {
+/// Executable form of one artifact (the per-model dispatch; the
+/// pool-level seam is the [`Backend`] trait).
+enum ModelBackend {
     Reference(reference::RefModel),
     #[cfg(feature = "pjrt")]
     Pjrt(pjrt::PjrtModel),
+}
+
+/// The executor-pool seam: everything a worker needs from an execution
+/// engine, abstracted from the concrete [`Runtime`].
+///
+/// # Contract
+///
+/// * **`Send + Sync`** — one backend instance is shared behind an
+///   `Arc<dyn Backend>` by every worker of its device class, so
+///   implementations must be safe to call concurrently. The reference
+///   interpreter qualifies (immutable weights behind `Arc`s); a real
+///   PJRT client must prove the same before joining the pool.
+/// * **Bit-identity per kernel path** — for a fixed
+///   [`Backend::kernel_path`] (`simd` | `scalar` | `native`), repeated
+///   [`Backend::execute_batch`] calls with identical inputs must return
+///   bit-identical outputs. Device classes may differ in *timing*
+///   (see [`Backend::device_window`]) but never in numerics: the
+///   heterogeneous-pool e2e tests compare responses against solo
+///   reference executions byte for byte.
+/// * **Timing is advisory emulation** — [`Backend::device_window`] and
+///   [`Backend::transfer_window`] return the wall-clock the executor
+///   should charge for a chunk on this device class (zero for a bare
+///   CPU runtime). They model accelerator service time; they do not
+///   gate correctness.
+///
+/// The batcher and executor consult [`Backend::chunk_cap`] /
+/// [`Backend::variant_for_batch`] so chunk splitting and variant
+/// selection follow the *backend's* compiled batch shapes, and
+/// [`Backend::spec`] exposes the manifest entry a worker packs
+/// request buffers against.
+pub trait Backend: Send + Sync {
+    /// Short device-class label for metrics attribution (`cpu` for the
+    /// bare reference runtime; an accelerator name like `pascal` for
+    /// emulated device classes).
+    fn device_class(&self) -> &str;
+
+    /// Resolved kernel dispatch label (`simd` | `scalar` | `native`)
+    /// — diagnostics and the dispatch tests' observability.
+    fn kernel_path(&self) -> &str;
+
+    /// Capacity of one executed chunk of `family` (see
+    /// [`Runtime::chunk_cap`]).
+    fn chunk_cap(&self, family: &str) -> usize;
+
+    /// Smallest compiled batch variant of `family` fitting `batch`
+    /// requests (see [`Runtime::variant_for_batch`]).
+    fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)>;
+
+    /// Manifest entry for a loaded variant — the shapes and batch axes
+    /// workers pack request buffers against.
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec>;
+
+    /// Execute a variant over packed batch buffers with only the first
+    /// `active` rows live and caller-owned scratch.
+    fn execute_batch(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>>;
+
+    /// Emulated device service time for one chunk of `family` with
+    /// `batch` live rows — charged (slept) by the executor after the
+    /// chunk's kernels run. Zero for the bare CPU runtime.
+    fn device_window(&self, family: &str, batch: usize) -> std::time::Duration;
+
+    /// Emulated layer-to-layer transfer cost charged when consecutive
+    /// jobs of `family` cross device classes. Zero for the bare CPU
+    /// runtime (a single class never crosses).
+    fn transfer_window(&self, family: &str) -> std::time::Duration;
+}
+
+impl Backend for Runtime {
+    fn device_class(&self) -> &str {
+        "cpu"
+    }
+
+    fn kernel_path(&self) -> &str {
+        self.kernel
+    }
+
+    fn chunk_cap(&self, family: &str) -> usize {
+        Runtime::chunk_cap(self, family)
+    }
+
+    fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)> {
+        Runtime::variant_for_batch(self, family, batch)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.model(name).map(|m| &m.spec)
+    }
+
+    fn execute_batch(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>> {
+        Runtime::execute_batch(self, name, inputs, active, scratch)
+    }
+
+    fn device_window(&self, _family: &str, _batch: usize) -> std::time::Duration {
+        std::time::Duration::ZERO
+    }
+
+    fn transfer_window(&self, _family: &str) -> std::time::Duration {
+        std::time::Duration::ZERO
+    }
 }
 
 /// Which inner-loop implementation the reference backend's kernels
@@ -198,7 +323,7 @@ impl Default for RuntimeOptions {
 pub struct LoadedModel {
     /// The artifact's manifest entry.
     pub spec: ArtifactSpec,
-    backend: Backend,
+    backend: ModelBackend,
 }
 
 impl LoadedModel {
@@ -246,9 +371,11 @@ impl LoadedModel {
             }
         }
         match &self.backend {
-            Backend::Reference(model) => Ok(model.execute(&self.spec, inputs, active, scratch)),
+            ModelBackend::Reference(model) => {
+                Ok(model.execute(&self.spec, inputs, active, scratch))
+            }
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(model) => model.execute(&self.spec, inputs),
+            ModelBackend::Pjrt(model) => model.execute(&self.spec, inputs),
         }
     }
 
@@ -276,9 +403,10 @@ pub struct Runtime {
 // The reference backend is plain owned data (weights behind `Arc`s),
 // so one Runtime is shareable across the executor pool. This assertion
 // is what lets `Server::start` clone a single `Arc<Runtime>` into
-// every worker; the PJRT backend is excluded until its client proves
-// thread-safe.
-#[cfg(not(feature = "pjrt"))]
+// every worker — and what `impl Backend for Runtime` requires, since
+// `Backend: Send + Sync`. Under `--features pjrt` the vendored `xla`
+// stub's types are plain data too; a real PJRT client must uphold the
+// same bound to keep this compiling.
 const _: fn() = || {
     fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Runtime>();
@@ -324,7 +452,7 @@ impl Runtime {
                 .with_context(|| format!("building reference model `{}`", spec.name))?;
             models.insert(
                 spec.name.clone(),
-                LoadedModel { spec, backend: Backend::Reference(model) },
+                LoadedModel { spec, backend: ModelBackend::Reference(model) },
             );
         }
         Ok(Self::assemble(models, "cpu".into(), if simd { "simd" } else { "scalar" }))

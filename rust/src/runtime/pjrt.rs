@@ -3,12 +3,15 @@
 //! This is the original hardware-faithful execution path: each
 //! `artifacts/*.hlo.txt` is parsed and compiled through the external
 //! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::compile`). The `xla` crate links native XLA libraries
-//! and cannot be vendored into the offline build image, so this module
-//! only compiles with `--features pjrt` after vendoring `xla` next to
-//! `anyhow` (see `rust/Cargo.toml`). The default build uses
-//! [`super::reference`] instead; both backends sit behind the same
-//! [`super::LoadedModel::execute`] validation.
+//! `PjRtClient::compile`). The real `xla` crate links native XLA
+//! libraries and cannot live in the offline build image, so
+//! `--features pjrt` compiles against the vendored API stub in
+//! `rust/vendor/xla`: this module type-checks and lints, but
+//! `PjRtClient::cpu()` fails at load time with a clear error until
+//! the real crate is swapped in (see `rust/Cargo.toml`). The default
+//! build uses [`super::reference`] instead; both backends sit behind
+//! the same [`super::LoadedModel::execute`] validation and the pool
+//! reaches either through the [`super::Backend`] trait seam.
 //!
 //! Batching: the lowered HLO modules are already batch-shaped
 //! (`<family>_b<N>` variants), so XLA executes each job as a true
@@ -19,7 +22,7 @@
 //! (padding rows are zero and are discarded on unpack either way).
 
 use super::artifacts::{ArtifactSpec, Manifest};
-use super::{Backend, LoadedModel, Runtime};
+use super::{LoadedModel, ModelBackend, Runtime};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -69,7 +72,7 @@ pub(super) fn load(dir: &Path, manifest: Manifest) -> Result<Runtime> {
             spec.name.clone(),
             LoadedModel {
                 spec,
-                backend: Backend::Pjrt(PjrtModel { _client: Arc::clone(&client), exe }),
+                backend: ModelBackend::Pjrt(PjrtModel { _client: Arc::clone(&client), exe }),
             },
         );
     }

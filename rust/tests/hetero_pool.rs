@@ -1,0 +1,276 @@
+//! Heterogeneous device-class serving, end to end through the server:
+//!
+//! * **Mensa placement** — with a `[[device]]` roster (Pascal +
+//!   Pavlov) and a strict staleness threshold, a skewed CNN+LSTM mix
+//!   lands each hot family on the device class the `accel/dataflow`
+//!   models prefer for it: every executing worker of a family belongs
+//!   to its placed class (`Snapshot::workers_by_family` against the
+//!   roster-order worker→class expansion), both classes execute
+//!   (`Snapshot::jobs_by_device`), and no transfer is ever charged
+//!   because no family crosses classes;
+//! * **client-observed FIFO and bit-exact numerics** — every response
+//!   under heterogeneous dispatch is bit-identical to a solo run on
+//!   the default (roster-free) server, and `fifo_violations == 0`:
+//!   the Backend seam changes *timing attribution only*, never
+//!   results or ordering;
+//! * **spill stealing charges transfers** — with the staleness
+//!   threshold at zero, the non-preferred class spills onto a single
+//!   hot family's backlog; both classes execute it concurrently, the
+//!   [`TransferTracker`] observes the class crossings
+//!   (`Snapshot::cross_device_transfers >= 1`), and FIFO still holds
+//!   through the reorder buffer;
+//! * **roster validation** — a `[[device]]` roster with
+//!   `work_stealing = false` is rejected at startup (class-aware
+//!   placement is a stealing discipline).
+
+use mensa::config::{DeviceClass, DeviceClassSpec, ServerConfig};
+use mensa::coordinator::{device, Server};
+use mensa::util::rng::Rng;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+fn cnn_input(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect()
+}
+
+fn lstm_input(rng: &mut Rng) -> Vec<f32> {
+    (0..8 * 128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+/// Solo (batch-1) outputs from a fresh roster-free server — the
+/// bit-exact reference every heterogeneous response must reproduce.
+fn solo_outputs(dir: &str, family: &str, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let server = Server::start(dir, ServerConfig::default()).expect("solo server");
+    let out = inputs
+        .iter()
+        .map(|x| server.infer_blocking(family, vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    server.shutdown();
+    out
+}
+
+/// Build a roster whose slowest (class, family) modeled window is
+/// `target` — the same calibration the bench harness uses, so the
+/// emulated device time stays in test-friendly territory while the
+/// classes keep their *relative* heterogeneity (`latency_scale` is
+/// uniform across the roster, so the placement argmin is unchanged).
+fn scaled_roster(
+    classes: &[(DeviceClass, usize)],
+    families: &[String],
+    target: Duration,
+) -> Vec<DeviceClassSpec> {
+    let probe: Vec<DeviceClassSpec> = classes
+        .iter()
+        .map(|&(class, workers)| DeviceClassSpec { class, workers, latency_scale: 1.0 })
+        .collect();
+    let profiles = device::build_profiles(&probe, families, Duration::ZERO);
+    let max_base = profiles
+        .iter()
+        .flat_map(|p| families.iter().map(move |f| p.base_latency_s(f)))
+        .fold(0.0f64, f64::max);
+    let scale = target.as_secs_f64() / max_base.max(1e-12);
+    probe
+        .into_iter()
+        .map(|mut spec| {
+            spec.latency_scale = scale;
+            spec
+        })
+        .collect()
+}
+
+/// Roster-order worker→class expansion — must mirror `Server::start`
+/// exactly (worker 0..w0 is class 0, the next w1 are class 1, …).
+fn worker_classes(roster: &[DeviceClassSpec]) -> Vec<usize> {
+    roster
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, spec)| std::iter::repeat(ci).take(spec.workers.max(1)))
+        .collect()
+}
+
+#[test]
+fn roster_requires_work_stealing() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        work_stealing: false,
+        devices: vec![DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: 1.0 }],
+        ..Default::default()
+    };
+    let err = Server::start(&dir, cfg).expect_err("a roster without stealing must be rejected");
+    assert!(
+        format!("{err:#}").contains("work_stealing"),
+        "error should name the offending knob, got: {err:#}"
+    );
+}
+
+#[test]
+fn skewed_mix_lands_hot_families_on_their_preferred_classes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let families: Vec<String> = vec!["edge_cnn".into(), "edge_lstm".into()];
+    // Pascal (compute-dense, LPDDR4) + Pavlov (in-package bandwidth):
+    // the paper's CNN-vs-LSTM split. Two workers per class so each
+    // family can also spread within its class.
+    let roster = scaled_roster(
+        &[(DeviceClass::Pascal, 2), (DeviceClass::Pavlov, 2)],
+        &families,
+        Duration::from_micros(300),
+    );
+    // The placement the server will derive (argmin over modeled
+    // batch-1 latency; a uniform latency_scale cannot change it).
+    let place = device::placement(&device::build_profiles(&roster, &families, Duration::ZERO), &families);
+    assert_ne!(
+        place["edge_cnn"], place["edge_lstm"],
+        "the zoo's skew mix must split across the roster — heterogeneity premise: {place:?}"
+    );
+    let classes = worker_classes(&roster);
+
+    let mut rng = Rng::new(0x4E7E);
+    let cnn: Vec<Vec<f32>> = (0..24).map(|_| cnn_input(&mut rng)).collect();
+    let lstm: Vec<Vec<f32>> = (0..24).map(|_| lstm_input(&mut rng)).collect();
+    let solo_cnn = solo_outputs(&dir, "edge_cnn", &cnn);
+    let solo_lstm = solo_outputs(&dir, "edge_lstm", &lstm);
+
+    let cfg = ServerConfig {
+        work_stealing: true,
+        max_batch: 4,
+        batch_timeout_us: 1_000,
+        devices: roster,
+        transfer_us: 100,
+        // Effectively infinite: placement stays strict, nothing spills.
+        spill_after_us: 60_000_000,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let submit = |family: &str, x: &Vec<f32>| loop {
+        match server.infer(family, vec![x.clone()]) {
+            Ok(rx) => return rx,
+            Err(_) => std::thread::sleep(Duration::from_micros(200)),
+        }
+    };
+    // Interleave the two families so both classes are busy at once.
+    let mut cnn_rxs = Vec::new();
+    let mut lstm_rxs = Vec::new();
+    for i in 0..24 {
+        cnn_rxs.push(submit("edge_cnn", &cnn[i]));
+        lstm_rxs.push(submit("edge_lstm", &lstm[i]));
+    }
+    for (i, rx) in cnn_rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output, solo_cnn[i], "cnn request {i} bit-exact across the seam");
+    }
+    for (i, rx) in lstm_rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output, solo_lstm[i], "lstm request {i} bit-exact across the seam");
+    }
+
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "clients must observe strict FIFO");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 48);
+    // Both classes executed — two device classes ran concurrently.
+    let jobs_on = |class: &str| {
+        snap.jobs_by_device.iter().find(|(c, _)| c == class).map(|(_, n)| *n).unwrap_or(0)
+    };
+    assert!(jobs_on("pascal") > 0, "pascal executed nothing: {:?}", snap.jobs_by_device);
+    assert!(jobs_on("pavlov") > 0, "pavlov executed nothing: {:?}", snap.jobs_by_device);
+    assert_eq!(
+        snap.jobs_by_device.iter().map(|(_, n)| n).sum::<u64>(),
+        snap.jobs,
+        "every job is attributed to exactly one device class"
+    );
+    // Placement held: every worker that executed a family belongs to
+    // the family's placed class (workers expand in roster order).
+    for (family, workers) in &snap.workers_by_family {
+        let want = place[family];
+        for &w in workers {
+            assert_eq!(
+                classes[w], want,
+                "{family} ran on worker {w} (class {}), placed on class {want}",
+                classes[w]
+            );
+        }
+    }
+    // No family ever changed class, so no transfer was charged.
+    assert_eq!(snap.cross_device_transfers, 0, "strict placement must not cross classes");
+    server.shutdown();
+}
+
+#[test]
+fn zero_staleness_spill_crosses_classes_and_keeps_fifo() {
+    let Some(dir) = artifacts_dir() else { return };
+    let families: Vec<String> = vec!["edge_lstm".into()];
+    // One worker per class, a single hot family: the non-preferred
+    // class has nothing of its own, and with the staleness threshold
+    // at zero every queued chunk is immediately fair game — so both
+    // classes drain the backlog together, and every hop between them
+    // is a class crossing the TransferTracker must charge.
+    let roster = scaled_roster(
+        &[(DeviceClass::Pascal, 1), (DeviceClass::Pavlov, 1)],
+        &families,
+        Duration::from_millis(1),
+    );
+    let mut rng = Rng::new(0x5B11);
+    let inputs: Vec<Vec<f32>> = (0..32).map(|_| lstm_input(&mut rng)).collect();
+    let solo = solo_outputs(&dir, "edge_lstm", &inputs);
+
+    let cfg = ServerConfig {
+        work_stealing: true,
+        max_batch: 2,
+        batch_timeout_us: 500,
+        // Depth 4 lets both classes hold the family concurrently; the
+        // reorder buffer is what keeps delivery FIFO.
+        reorder_depth: 4,
+        devices: roster,
+        transfer_us: 200,
+        spill_after_us: 0,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| loop {
+            match server.infer("edge_lstm", vec![x.clone()]) {
+                Ok(rx) => return rx,
+                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+            }
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output, solo[i], "request {i} bit-exact under cross-class spill");
+    }
+
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "spill must never reorder client deliveries");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 32);
+    assert!(
+        snap.jobs_by_device.len() >= 2,
+        "zero staleness must pull the idle class in: {:?}",
+        snap.jobs_by_device
+    );
+    // Both classes executed the one family, so its class sequence
+    // changed at least once — and never more often than once per job.
+    assert!(
+        snap.cross_device_transfers >= 1,
+        "two classes served one family with no charged transfer"
+    );
+    assert!(
+        snap.cross_device_transfers <= snap.jobs,
+        "at most one transfer per executed job ({} > {})",
+        snap.cross_device_transfers,
+        snap.jobs
+    );
+    server.shutdown();
+}

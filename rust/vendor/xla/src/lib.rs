@@ -1,0 +1,167 @@
+//! Offline API stub for the `xla` crate.
+//!
+//! The real `xla` crate links the native XLA/PJRT libraries and cannot
+//! be vendored into the offline build image. This stub reproduces the
+//! *API surface* `runtime::pjrt` compiles against — client creation,
+//! HLO parsing, compilation, execution, literal conversion — so the
+//! feature-gated PJRT backend type-checks, lints, and stays wired into
+//! the `runtime::Backend` seam without the native toolchain.
+//!
+//! Every constructor that would touch native code returns
+//! [`Error::Unavailable`]: a `--features pjrt` build *runs*, but
+//! `PjRtClient::cpu()` fails at load time with a clear message instead
+//! of executing anything. Swapping in the real crate (same package
+//! name, path or registry) restores native execution with no source
+//! changes in `runtime::pjrt`.
+//!
+//! All types here are plain owned data, so they are `Send + Sync` —
+//! which is what lets the shared-`Arc<Runtime>` executor pool (and the
+//! `runtime::Backend` trait's `Send + Sync` supertrait) compile under
+//! the feature. A real PJRT client must uphold the same bound to join
+//! the pool.
+
+use std::fmt;
+
+/// Stub error: the native XLA/PJRT libraries are not linked.
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs the real `xla` crate.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: the vendored `xla` stub has no native XLA/PJRT \
+                 libraries (swap in the real crate to execute)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub `Result` alias matching the real crate's fallible API.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A parsed HLO module (stub: never constructed successfully).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("parsing HLO text"))
+    }
+}
+
+/// A computation ready to compile.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module (infallible in the real crate too).
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub — this is the
+    /// load-time error a `--features pjrt` build surfaces.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("creating PJRT CPU client"))
+    }
+
+    /// The backing platform's name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("compiling computation"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list; returns per-device, per-output
+    /// buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("executing"))
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("fetching result"))
+    }
+}
+
+/// A host-side tensor literal.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1(_data: &[f32]) -> Self {
+        Self { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("reshaping literal"))
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::Unavailable("unwrapping tuple"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("converting literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_unavailable_errors() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = Error::Unavailable("doing something");
+        assert!(e.to_string().contains("stub"), "{e}");
+    }
+
+    #[test]
+    fn stub_types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<Literal>();
+    }
+}
