@@ -19,7 +19,8 @@ Baseline format::
 
 Every metric listed under a case is checked as
 ``current >= baseline * (1 - tol)`` where ``tol`` is ``speedup_rel``
-for ``speedup`` metrics and ``rps_rel`` for throughput metrics.
+for ``speedup`` metrics and ``rps_rel`` for everything else
+(throughput, SLO attainment, dimensionless ratios).
 Speedup ratios are dimensionless and stable across runner generations;
 absolute rps floors are deliberately loose (they catch order-of-
 magnitude collapses, not noise). Regenerate the baseline on the CI
@@ -48,6 +49,15 @@ TRACKED = {
     "oversized_job_chunks": ("speedup", "chunk_granular_rps"),
     "adaptive_depth": ("speedup", "adaptive_rps"),
     "mensa_placement": ("speedup", "mensa_rps"),
+    # Overload A/B: SLO attainment of the shed arm (in-budget fraction
+    # of the full offered load), its block->shed ratio, and the shed
+    # arm's goodput. All three are built from emulated device windows
+    # (thread sleeps), so they are stable across runner generations.
+    "overload_goodput": ("slo_gain", "shed_slo", "shed_goodput_rps"),
+    # Hierarchical inference: small-first throughput gain over
+    # always-large, plus the escalated fraction (pinned near 0.5 by
+    # the bench's median-confidence threshold).
+    "hier_escalation": ("speedup", "escalated_frac"),
     "gemm_dense": ("speedup",),
     "kernel_dense": ("speedup",),
     # Panel-prepacked weight layout vs row-major (scalar kernels both
@@ -80,6 +90,20 @@ ABS_FLOORS = {
     # when the relative band (floor 0.70 / 0.91) would pass it.
     ("gemm_dense", "speedup"): 0.95,
     ("kernel_dense", "speedup"): 1.05,
+    # Overload protection that does not beat blocking on SLO
+    # attainment at ~4x offered load is a broken feature: the entire
+    # point of admission control + shedding is that the served subset
+    # meets its budgets. The shed_slo floor catches the degenerate
+    # "shed everything" implementation that would make the ratio look
+    # fine while serving nothing.
+    ("overload_goodput", "slo_gain"): 1.2,
+    ("overload_goodput", "shed_slo"): 0.10,
+    # Hierarchical escalation at (or below) always-large parity means
+    # the small-first pass saves nothing; an escalated fraction near
+    # zero means the confidence gate stopped routing to the large
+    # variant at all (the bench pins it near 0.5 by construction).
+    ("hier_escalation", "speedup"): 1.05,
+    ("hier_escalation", "escalated_frac"): 0.05,
 }
 
 
@@ -195,6 +219,21 @@ def self_test():
         f"parity must trip the absolute floor, got {failures}")
     _, failures = check({"simd_kernel": {"speedup": 1.2}}, abs_base)
     assert not failures, f"above both floors must pass, got {failures}"
+
+    # Non-speedup metrics (SLO attainment, ratios) ride the rps_rel
+    # band but still hit their absolute floors: a shed arm whose SLO
+    # gain collapses to parity must fail even inside the loose band.
+    slo_base = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {"overload_goodput": {"slo_gain": 3.0, "shed_slo": 0.2}},
+    }
+    _, failures = check(
+        {"overload_goodput": {"slo_gain": 1.0, "shed_slo": 0.15}}, slo_base)
+    assert any("overload_goodput.slo_gain" in f for f in failures), (
+        f"slo_gain parity must trip the absolute floor, got {failures}")
+    _, failures = check(
+        {"overload_goodput": {"slo_gain": 2.0, "shed_slo": 0.15}}, slo_base)
+    assert not failures, f"in-band slo metrics must pass, got {failures}"
 
     # write_baseline round-trips through check.
     regen = write_baseline(healthy, "self-test")

@@ -55,6 +55,22 @@
 //!   emulated window each family pays* — the paper's Mensa claim
 //!   (bandwidth-starved families on the HBM classes, compute-bound
 //!   ones on Pascal) as a serving A/B.
+//! * `overload_goodput` — PR 7's tentpole A/B: one family offered
+//!   ~4x its emulated service capacity in bursty open-loop arrivals,
+//!   every request on a fixed deadline, `overload = "block"` vs
+//!   `"shed"`. Blocking answers everything eventually but queues blow
+//!   almost every budget; admission + enqueue shedding keeps queues
+//!   short so the requests that ARE served land inside their budgets.
+//!   Reported per arm: SLO attainment (in-budget fraction of the full
+//!   *offered* load) and goodput (in-budget responses per second),
+//!   plus their block→shed ratio (`slo_gain`).
+//! * `hier_escalation` — hierarchical inference: every request sent
+//!   straight to the large variant vs small-first with
+//!   confidence-gated escalation (`escalate_to`). The threshold is
+//!   pinned at the probed median confidence of the small variant over
+//!   the exact bench inputs, so ~half the requests escalate by
+//!   construction; the small pass costs ~1/16th of the large one, so
+//!   hierarchical serving pays roughly half the MACs.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
 //! (real `edge_cnn_b8`), per-sample vs batched GEMM (synthetic
@@ -74,12 +90,13 @@
 
 use mensa::accel::configs;
 use mensa::bench_harness::timer;
-use mensa::config::{DeviceClass, DeviceClassSpec, ServerConfig};
+use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
 use mensa::coordinator::{device, worker_for_family, Server};
 use mensa::model::zoo;
 use mensa::runtime::{simd_kernel_available, ExecScratch, KernelKind, Runtime, RuntimeOptions};
 use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
 use mensa::sim::Simulator;
+use mensa::util::rng::Rng;
 use std::fmt::Write as _;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -94,6 +111,16 @@ const BENCH_WORKERS: usize = 4;
 const BENCH_FAMILIES: usize = 8;
 const BENCH_REQUESTS: usize = 1600;
 const BENCH_DEVICE_US: u64 = 1000;
+/// Overload A/B: one family whose 1 ms emulated window caps the pool
+/// at `BENCH_WORKERS` req/ms; bursts average ~15 req/ms (~4x).
+const OVERLOAD_REQUESTS: usize = 600;
+const OVERLOAD_DEADLINE_US: u64 = 6_000;
+/// Hierarchical-escalation A/B: a small/large variant pair sharing
+/// the `BENCH_IN` input; the 64 vs 1024 output width makes the small
+/// pass ~1/16th of the large one's MACs.
+const ESC_REQUESTS: usize = 256;
+const ESC_SMALL_OUT: usize = 64;
+const ESC_LARGE_OUT: usize = 1024;
 
 fn main() {
     timer::header("hotpath_micro");
@@ -383,8 +410,39 @@ impl CaseResult {
     }
 }
 
+/// The overload A/B's headline numbers (the `overload_goodput` case).
+struct OverloadResult {
+    /// In-budget fraction of the full offered load, per arm.
+    block_slo: f64,
+    shed_slo: f64,
+    /// `shed_slo / block_slo` — how much overload protection lifts
+    /// SLO attainment at the same offered load.
+    slo_gain: f64,
+    /// In-budget responses per second of wall clock, per arm.
+    block_goodput_rps: f64,
+    shed_goodput_rps: f64,
+}
+
+/// The hierarchical-inference A/B (the `hier_escalation` case).
+struct EscalationResult {
+    always_large_rps: f64,
+    hierarchical_rps: f64,
+    /// Mean executed batch of the hierarchical arm.
+    mean_batch: f64,
+    /// Server-side `escalations / requests` of the hierarchical arm.
+    escalated_frac: f64,
+}
+
+impl EscalationResult {
+    fn speedup(&self) -> f64 {
+        self.hierarchical_rps / self.always_large_rps.max(1e-9)
+    }
+}
+
 struct ServingResult {
     cases: Vec<CaseResult>,
+    overload: OverloadResult,
+    escalation: EscalationResult,
 }
 
 /// Family names that all hash to worker 0 of a `BENCH_WORKERS` pool —
@@ -420,6 +478,20 @@ fn write_bench_artifacts(families: &[String]) -> String {
                 "\n[[artifact]]\nname = \"{family}_b{b}\"\nfile = \"{family}_b{b}.hlo.txt\"\n\
                  num_inputs = 1\ninput0_shape = \"{b}x{BENCH_IN}\"\ninput0_batch_axis = 0\n\
                  output_shape = \"{b}x{BENCH_OUT}\"\noutput_batch_axis = 0\n\
+                 sha256 = \"referencebackend\"\n"
+            );
+        }
+    }
+    // Hierarchical-escalation pair: same input geometry, 16x apart in
+    // output width (≈ MAC cost), so "small first, escalate only the
+    // low-confidence tail" has real compute to save.
+    for (family, out) in [("esc_small", ESC_SMALL_OUT), ("esc_large", ESC_LARGE_OUT)] {
+        for b in [1usize, 4, 8] {
+            let _ = write!(
+                manifest,
+                "\n[[artifact]]\nname = \"{family}_b{b}\"\nfile = \"{family}_b{b}.hlo.txt\"\n\
+                 num_inputs = 1\ninput0_shape = \"{b}x{BENCH_IN}\"\ninput0_batch_axis = 0\n\
+                 output_shape = \"{b}x{out}\"\noutput_batch_axis = 0\n\
                  sha256 = \"referencebackend\"\n"
             );
         }
@@ -542,6 +614,12 @@ fn run_case_with(
         // Large vs the emulated windows: placement holds while the
         // preferred class keeps up, spill only rescues a stall.
         spill_after_us: 20_000,
+        // The classic cases serve without deadlines or tiers; the
+        // overload / escalation cases build their own configs.
+        deadline_us: 0,
+        overload: OverloadPolicy::Block,
+        families: Vec::new(),
+        escalation_threshold: 0.35,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
@@ -612,6 +690,252 @@ fn mensa_roster_scale(families: &[String]) -> f64 {
         }
     }
     (BENCH_DEVICE_US as f64 * 1e-6) / max_base.max(1e-12)
+}
+
+/// One arm of the overload A/B: in-budget fraction of the offered
+/// load and in-budget responses per second.
+struct OverloadArm {
+    slo: f64,
+    goodput_rps: f64,
+}
+
+/// Burst sizes for the overload arms, drawn from the repo PRNG with a
+/// pinned seed so BOTH arms offer the identical arrival sequence:
+/// ~60 requests every 4 ms against a 4 req/ms service capacity (~4x).
+fn overload_bursts() -> Vec<usize> {
+    let mut rng = Rng::new(0x0BAD_10AD);
+    let mut bursts = Vec::new();
+    let mut left = OVERLOAD_REQUESTS;
+    while left > 0 {
+        let n = rng.range_usize(40, 80).min(left);
+        bursts.push(n);
+        left -= n;
+    }
+    bursts
+}
+
+/// Run one overload arm. Every request carries the config-default
+/// deadline; `shed` selects the overload policy. Admission rejections,
+/// enqueue sheds, dequeue expiries, and late responses all count
+/// against SLO attainment — the numerator is "answered within budget",
+/// the denominator the full offered load, so the arms compare fairly
+/// even though the shed arm answers far fewer requests.
+fn run_overload_arm(dir: &str, family: &str, shed: bool) -> OverloadArm {
+    let overload = if shed {
+        OverloadPolicy::Shed
+    } else {
+        OverloadPolicy::Block
+    };
+    let cfg = ServerConfig {
+        workers: BENCH_WORKERS,
+        max_batch: 1,
+        batch_timeout_us: 200,
+        queue_depth: 2 * OVERLOAD_REQUESTS,
+        work_stealing: true,
+        batcher_shards: 1,
+        naive_kernels: false,
+        kernel: KernelKind::Auto,
+        packed_weights: true,
+        device_latency_us: BENCH_DEVICE_US,
+        batched_gemm: true,
+        reorder_depth: BENCH_WORKERS,
+        reorder_depth_max: 0,
+        chunk_level: true,
+        panic_on_poison: false,
+        devices: Vec::new(),
+        transfer_us: 50,
+        spill_after_us: 20_000,
+        deadline_us: OVERLOAD_DEADLINE_US,
+        overload,
+        families: Vec::new(),
+        escalation_threshold: 0.35,
+    };
+    let server = Server::start(dir, cfg).expect("bench server start");
+    let budget = Duration::from_micros(OVERLOAD_DEADLINE_US);
+    let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    let mut rejected = 0usize;
+    for burst in overload_bursts() {
+        for _ in 0..burst {
+            // Admission control rejects some submissions outright in
+            // the shed arm; those count against SLO attainment, not as
+            // bench failures.
+            match server.infer(family, vec![input.clone()]) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        std::thread::sleep(Duration::from_millis(4));
+    }
+    let mut served = 0usize;
+    let mut in_time = 0usize;
+    for rx in rxs {
+        // Enqueue sheds / dequeue expiries reply with an error — they
+        // simply never make the in-budget numerator.
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(120)).expect("bench recv") {
+            served += 1;
+            if resp.latency <= budget {
+                in_time += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
+    assert_eq!(snap.failed, 0, "overload outcomes must be sheds/expiries, not failures");
+    // Conservation: every offered request is answered or shed exactly
+    // once, whether it was refused at admission, at enqueue, or at
+    // dequeue.
+    assert_eq!(
+        snap.completed + snap.jobs_shed + snap.jobs_expired,
+        OVERLOAD_REQUESTS as u64,
+        "offered = completed + shed + expired (admission rejections: {rejected})"
+    );
+    if !shed {
+        assert_eq!(served, OVERLOAD_REQUESTS, "block arm must answer the full offered load");
+    }
+    server.shutdown();
+    OverloadArm {
+        slo: in_time as f64 / OVERLOAD_REQUESTS as f64,
+        goodput_rps: in_time as f64 / wall,
+    }
+}
+
+/// Client-side mirror of the server's confidence score (peak share of
+/// the output's absolute mass), used to probe the small variant's
+/// confidence distribution before the hierarchical arm runs.
+fn output_confidence(xs: &[f32]) -> f64 {
+    let mut peak = 0.0f64;
+    let mut mass = 0.0f64;
+    for &x in xs {
+        let a = f64::from(x.abs());
+        peak = peak.max(a);
+        mass += a;
+    }
+    if mass > 0.0 { peak / mass } else { 0.0 }
+}
+
+/// The escalation A/B's request set: per-request pseudo-random inputs
+/// (pinned seed) so the small variant's confidences form a spread the
+/// median threshold can split.
+fn escalation_inputs() -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0xE5CA_1A7E);
+    (0..ESC_REQUESTS)
+        .map(|_| (0..BENCH_IN).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+/// Probe the small variant's confidences on the exact bench inputs
+/// (batched serving is bit-identical to batch-1, so the bare-runtime
+/// confidences equal the served ones) and pin the escalation threshold
+/// between the two central order statistics — with distinct
+/// confidences exactly half the requests escalate.
+fn probe_escalation_threshold(dir: &str, inputs: &[Vec<f32>]) -> f64 {
+    let rt = Runtime::load(dir).expect("bench runtime");
+    let model = rt.model("esc_small_b1").expect("esc_small_b1");
+    let mut confs: Vec<f64> = inputs
+        .iter()
+        .map(|input| {
+            let out = model.execute(&[input.clone()]).expect("probe exec");
+            output_confidence(&out)
+        })
+        .collect();
+    confs.sort_by(|a, b| a.partial_cmp(b).expect("finite confidence"));
+    let (lo, hi) = (confs[0], confs[confs.len() - 1]);
+    let mut t = 0.5 * (confs[confs.len() / 2 - 1] + confs[confs.len() / 2]);
+    if t <= lo || t > hi {
+        // Tie-degenerate lower half: any threshold strictly inside
+        // (lo, hi] keeps the escalated fraction in (0, 1).
+        t = 0.5 * (lo + hi);
+    }
+    if lo >= hi {
+        // All-equal distribution: escalate everything rather than
+        // nothing, so the path is still exercised (and the speedup
+        // honestly reports the escalation overhead).
+        t = hi + hi.abs() * 1e-9 + f64::EPSILON;
+    }
+    t.min(1.0)
+}
+
+/// Server config shared by both escalation arms; `hierarchical` adds
+/// the `[[family]]` entry that routes low-confidence small-variant
+/// outputs to the large variant.
+fn escalation_config(threshold: f64, hierarchical: bool) -> ServerConfig {
+    ServerConfig {
+        workers: BENCH_WORKERS,
+        max_batch: 8,
+        batch_timeout_us: 300,
+        queue_depth: 2 * ESC_REQUESTS,
+        work_stealing: true,
+        batcher_shards: 1,
+        naive_kernels: false,
+        kernel: KernelKind::Auto,
+        packed_weights: true,
+        device_latency_us: 0,
+        batched_gemm: true,
+        // Full pool concurrency for BOTH arms, so the A/B measures the
+        // compute saved by the small-first pass, not a family-lease
+        // serialization artifact.
+        reorder_depth: BENCH_WORKERS,
+        reorder_depth_max: 0,
+        chunk_level: true,
+        panic_on_poison: false,
+        devices: Vec::new(),
+        transfer_us: 50,
+        spill_after_us: 20_000,
+        deadline_us: 0,
+        overload: OverloadPolicy::Block,
+        families: if hierarchical {
+            vec![FamilyPolicy {
+                name: "esc_small".to_string(),
+                priority: 0,
+                escalate_to: Some("esc_large".to_string()),
+            }]
+        } else {
+            Vec::new()
+        },
+        escalation_threshold: threshold,
+    }
+}
+
+/// Run one escalation arm open-loop over `inputs`; returns (rps, mean
+/// executed batch, escalated fraction). Large-shaped responses must
+/// match the server's escalation counter one-for-one.
+fn run_escalation_arm(
+    dir: &str,
+    family: &str,
+    cfg: ServerConfig,
+    inputs: &[Vec<f32>],
+) -> (f64, f64, f64) {
+    let server = Server::start(dir, cfg).expect("bench server start");
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        rxs.push(submit_with_retry(&server, family, input));
+    }
+    let mut large_outputs = 0usize;
+    for rx in rxs {
+        let resp =
+            rx.recv_timeout(Duration::from_secs(120)).expect("bench recv").expect("bench ok");
+        if resp.output.len() == ESC_LARGE_OUT {
+            large_outputs += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
+    if family == "esc_small" {
+        assert_eq!(
+            snap.escalations as usize,
+            large_outputs,
+            "every large-shaped response is exactly one escalation"
+        );
+    } else {
+        assert_eq!(snap.escalations, 0, "the always-large arm must not escalate");
+    }
+    server.shutdown();
+    (inputs.len() as f64 / wall, snap.mean_batch, snap.escalations as f64 / inputs.len() as f64)
 }
 
 fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
@@ -781,6 +1105,61 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         },
     );
 
+    // Overload-protection comparison (PR 7 tentpole): one family at
+    // ~4x its emulated service capacity, every request on a 6 ms
+    // budget — `overload = "block"` vs `"shed"`. Blocking answers
+    // everything eventually but almost every answer blows its budget;
+    // admission + enqueue shedding refuses the unmeetable work up
+    // front, so the requests that ARE served land inside their
+    // budgets and both SLO attainment and goodput rise.
+    let block = run_overload_arm(dir, &families[0], false);
+    let shed = run_overload_arm(dir, &families[0], true);
+    let overload = OverloadResult {
+        block_slo: block.slo,
+        shed_slo: shed.slo,
+        slo_gain: shed.slo / block.slo.max(1.0 / OVERLOAD_REQUESTS as f64),
+        block_goodput_rps: block.goodput_rps,
+        shed_goodput_rps: shed.goodput_rps,
+    };
+    println!(
+        "{:<24} block_slo {:>6.3} | shed_slo {:>6.3} | slo_gain {:.2}x | goodput {:.0} -> \
+         {:.0} req/s",
+        "overload_goodput",
+        overload.block_slo,
+        overload.shed_slo,
+        overload.slo_gain,
+        overload.block_goodput_rps,
+        overload.shed_goodput_rps,
+    );
+
+    // Hierarchical-inference comparison (PR 7 tentpole): always-large
+    // vs small-first with confidence-gated escalation. The threshold
+    // sits at the probed median confidence, so ~half the requests
+    // escalate and the hierarchical arm pays ~(1 + 16)/2 / 16 ≈ 0.53
+    // of the always-large MACs.
+    let esc_inputs = escalation_inputs();
+    let threshold = probe_escalation_threshold(dir, &esc_inputs);
+    let (large_rps, _, _) =
+        run_escalation_arm(dir, "esc_large", escalation_config(threshold, false), &esc_inputs);
+    let (hier_rps, hier_batch, escalated_frac) =
+        run_escalation_arm(dir, "esc_small", escalation_config(threshold, true), &esc_inputs);
+    let escalation = EscalationResult {
+        always_large_rps: large_rps,
+        hierarchical_rps: hier_rps,
+        mean_batch: hier_batch,
+        escalated_frac,
+    };
+    println!(
+        "{:<24} always_large {:>9.0} req/s | hierarchical {:>9.0} req/s | speedup {:.2}x | \
+         escalated {:.0}% (threshold {:.4})",
+        "hier_escalation",
+        escalation.always_large_rps,
+        escalation.hierarchical_rps,
+        escalation.speedup(),
+        100.0 * escalation.escalated_frac,
+        threshold,
+    );
+
     // Acceptance bars (printed, recorded in BENCH_serving.json).
     let headline = &cases[0];
     if headline.speedup() >= 2.0 {
@@ -856,7 +1235,32 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
             placement.speedup()
         );
     }
-    ServingResult { cases }
+    if overload.slo_gain > 1.0 && overload.shed_slo > overload.block_slo {
+        println!(
+            "PASS: shedding lifts SLO attainment {:.3} -> {:.3} ({:.2}x) at ~4x offered load",
+            overload.block_slo, overload.shed_slo, overload.slo_gain
+        );
+    } else {
+        println!(
+            "WARN: shed-arm SLO attainment {:.3} <= block arm's {:.3} under overload",
+            overload.shed_slo, overload.block_slo
+        );
+    }
+    if escalation.speedup() > 1.0 && escalation.escalated_frac > 0.0 {
+        println!(
+            "PASS: hierarchical escalation {:.2}x over always-large at {:.0}% escalated",
+            escalation.speedup(),
+            100.0 * escalation.escalated_frac
+        );
+    } else {
+        println!(
+            "WARN: hierarchical escalation {:.2}x (escalated {:.0}%) — expected > 1x with a \
+             partial escalation rate",
+            escalation.speedup(),
+            100.0 * escalation.escalated_frac
+        );
+    }
+    ServingResult { cases, overload, escalation }
 }
 
 fn push_case(cases: &mut Vec<CaseResult>, case: CaseResult) {
@@ -900,6 +1304,28 @@ fn write_bench_json(
             case.treatment_mean_batch,
         );
     }
+    let o = &serving.overload;
+    let _ = write!(
+        json,
+        "  \"overload_goodput\": {{\"block_slo\": {:.4}, \"shed_slo\": {:.4}, \
+         \"slo_gain\": {:.3}, \"block_goodput_rps\": {:.1}, \"shed_goodput_rps\": {:.1}}},\n",
+        o.block_slo,
+        o.shed_slo,
+        o.slo_gain,
+        o.block_goodput_rps,
+        o.shed_goodput_rps
+    );
+    let e = &serving.escalation;
+    let _ = write!(
+        json,
+        "  \"hier_escalation\": {{\"always_large_rps\": {:.1}, \"hierarchical_rps\": {:.1}, \
+         \"speedup\": {:.3}, \"escalated_frac\": {:.4}, \"mean_batch\": {:.2}}},\n",
+        e.always_large_rps,
+        e.hierarchical_rps,
+        e.speedup(),
+        e.escalated_frac,
+        e.mean_batch
+    );
     let _ = write!(
         json,
         "  \"gemm_dense\": {{\"per_sample_ns_per_sample\": {:.1}, \

@@ -11,5 +11,8 @@
 pub mod schema;
 pub mod toml_lite;
 
-pub use schema::{DeviceClass, DeviceClassSpec, ServerConfig, SystemSpec};
+pub use schema::{
+    DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig, SystemSpec,
+    MAX_PRIORITY,
+};
 pub use toml_lite::{Document, Value};

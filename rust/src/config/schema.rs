@@ -214,7 +214,20 @@ pub struct DeviceClassSpec {
     pub latency_scale: f64,
 }
 
+/// Reject keys that no parser consumed: a typo'd knob silently falling
+/// back to its default is the worst failure mode a config can have, so
+/// every serving-config table validates its key set.
+fn reject_unknown_keys(t: &Table, allowed: &[&str], ctx: &str) -> Result<()> {
+    for key in t.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("{ctx}: unknown key `{key}` (expected one of {allowed:?})");
+        }
+    }
+    Ok(())
+}
+
 fn parse_device(t: &Table) -> Result<DeviceClassSpec> {
+    reject_unknown_keys(t, &["class", "workers", "latency_scale"], "[[device]]")?;
     let class = DeviceClass::parse(get_str(t, "class")?)?;
     let workers = match t.get("workers").and_then(Value::as_int) {
         Some(v) => v.max(1) as usize,
@@ -230,6 +243,80 @@ fn parse_device(t: &Table) -> Result<DeviceClassSpec> {
         bail!("device `{}`: latency_scale must be positive", class.name());
     }
     Ok(DeviceClassSpec { class, workers, latency_scale })
+}
+
+/// What the serving path does when a bounded queue is full — the
+/// `overload` key of `[server]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverloadPolicy {
+    /// Block the producer until a worker drains the queue (the
+    /// default, and the pre-PR-7 behavior): latency grows without
+    /// bound past saturation, but nothing is dropped.
+    #[default]
+    Block,
+    /// Reject instead of waiting: a chunk that cannot be queued is
+    /// shed immediately (its requests error, its reorder slot still
+    /// fills so FIFO holds), keeping queues — and therefore the
+    /// latency of everything that *is* served — short. Shedding order
+    /// follows the priority tiers: low-tier families hit their
+    /// (smaller) effective caps first.
+    Shed,
+}
+
+impl OverloadPolicy {
+    /// Parse the `overload` config value (`block` | `shed`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "block" => Self::Block,
+            "shed" => Self::Shed,
+            other => bail!("unknown overload policy `{other}` (expected block|shed)"),
+        })
+    }
+}
+
+/// Highest priority tier (`priority` is validated into `0..=MAX_PRIORITY`).
+pub const MAX_PRIORITY: u8 = 3;
+
+/// Per-family serving policy from a `[[family]]` table: priority tier
+/// and the optional hierarchical-escalation target.
+#[derive(Debug, Clone)]
+pub struct FamilyPolicy {
+    /// Model family the entry applies to.
+    pub name: String,
+    /// Priority tier in `0..=3`; higher tiers are claimed first by
+    /// idle workers and shed last under `overload = "shed"`.
+    /// Families without a `[[family]]` entry default to tier 0.
+    pub priority: u8,
+    /// Hierarchical inference: requests hit `name`'s (small) model
+    /// first, and only low-confidence outputs escalate to this
+    /// (large) family, inheriting the remaining deadline budget.
+    pub escalate_to: Option<String>,
+}
+
+fn parse_family(t: &Table) -> Result<FamilyPolicy> {
+    reject_unknown_keys(t, &["name", "priority", "escalate_to"], "[[family]]")?;
+    let name = get_str(t, "name")?.to_string();
+    if name.is_empty() {
+        bail!("[[family]]: name must be non-empty");
+    }
+    let priority = match t.get("priority").and_then(Value::as_int) {
+        Some(v) if (0..=MAX_PRIORITY as i64).contains(&v) => v as u8,
+        Some(v) => bail!("family `{name}`: priority {v} out of range 0..={MAX_PRIORITY}"),
+        None => 0,
+    };
+    let escalate_to = match t.get("escalate_to") {
+        Some(v) => {
+            let target = v
+                .as_str()
+                .ok_or_else(|| anyhow!("family `{name}`: non-string escalate_to"))?;
+            if target == name {
+                bail!("family `{name}`: escalate_to must name a different family");
+            }
+            Some(target.to_string())
+        }
+        None => None,
+    };
+    Ok(FamilyPolicy { name, priority, escalate_to })
 }
 
 /// Serving-path configuration for the coordinator (see
@@ -334,6 +421,32 @@ pub struct ServerConfig {
     /// than let it strand. Only meaningful with a `[[device]]`
     /// roster.
     pub spill_after_us: u64,
+    /// Default per-request deadline, microseconds (0 = no deadline).
+    /// Requests carry their deadline from `infer()` through every
+    /// `BatchJob` chunk: admission control sheds a request at enqueue
+    /// when the modeled queue + execution time already exceeds the
+    /// remaining budget, and executors drop (never execute) chunks
+    /// whose requests have all expired by dequeue time. When set in
+    /// TOML the value must be positive — use absence, not 0, to
+    /// disable.
+    pub deadline_us: u64,
+    /// Bounded-queue behavior past saturation: `block` (the default)
+    /// stalls producers at the per-family inflight cap; `shed` rejects
+    /// instead, erroring the chunk's requests immediately while its
+    /// reorder slot still fills (FIFO holds). Shed mode scales each
+    /// family's effective cap by its priority tier, so the lowest
+    /// tiers shed first.
+    pub overload: OverloadPolicy,
+    /// Per-family serving policies (`[[family]]` tables): priority
+    /// tier and optional hierarchical-escalation target. Families
+    /// without an entry serve at tier 0 with no escalation.
+    pub families: Vec<FamilyPolicy>,
+    /// Hierarchical-inference confidence threshold in `[0, 1]`: an
+    /// escalating family's output escalates to its `escalate_to`
+    /// target when its confidence score (peak share of the output's
+    /// absolute mass) falls below this value. 0 never escalates; 1
+    /// escalates everything with a non-degenerate output.
+    pub escalation_threshold: f64,
 }
 
 impl Default for ServerConfig {
@@ -357,6 +470,10 @@ impl Default for ServerConfig {
             devices: Vec::new(),
             transfer_us: 100,
             spill_after_us: 500,
+            deadline_us: 0,
+            overload: OverloadPolicy::Block,
+            families: Vec::new(),
+            escalation_threshold: 0.35,
         }
     }
 }
@@ -368,6 +485,31 @@ impl ServerConfig {
         let doc = toml_lite::parse(text).map_err(|e| anyhow!("config parse error: {e}"))?;
         let mut cfg = Self::default();
         if let Some(t) = doc.tables.get("server") {
+            reject_unknown_keys(
+                t,
+                &[
+                    "max_batch",
+                    "batch_timeout_us",
+                    "workers",
+                    "queue_depth",
+                    "work_stealing",
+                    "batcher_shards",
+                    "naive_kernels",
+                    "kernel",
+                    "packed_weights",
+                    "device_latency_us",
+                    "batched_gemm",
+                    "reorder_depth",
+                    "reorder_depth_max",
+                    "chunk_level",
+                    "transfer_us",
+                    "spill_after_us",
+                    "deadline_us",
+                    "overload",
+                    "escalation_threshold",
+                ],
+                "[server]",
+            )?;
             if let Some(v) = t.get("max_batch").and_then(Value::as_int) {
                 cfg.max_batch = v.max(1) as usize;
             }
@@ -416,13 +558,48 @@ impl ServerConfig {
             if let Some(v) = t.get("spill_after_us").and_then(Value::as_int) {
                 cfg.spill_after_us = v.max(0) as u64;
             }
+            if let Some(v) = t.get("deadline_us") {
+                let v = v.as_int().ok_or_else(|| anyhow!("non-integer `deadline_us`"))?;
+                if v <= 0 {
+                    bail!("deadline_us must be positive (omit the key to disable deadlines)");
+                }
+                cfg.deadline_us = v as u64;
+            }
+            if let Some(v) = t.get("overload").and_then(Value::as_str) {
+                cfg.overload = OverloadPolicy::parse(v).context("parsing `overload`")?;
+            }
+            if let Some(v) = t.get("escalation_threshold") {
+                let v = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("non-numeric `escalation_threshold`"))?;
+                if !(0.0..=1.0).contains(&v) {
+                    bail!("escalation_threshold must be in [0, 1], got {v}");
+                }
+                cfg.escalation_threshold = v;
+            }
         }
         if let Some(device_tables) = doc.arrays.get("device") {
             for dt in device_tables {
                 cfg.devices.push(parse_device(dt).context("parsing [[device]]")?);
             }
         }
+        if let Some(family_tables) = doc.arrays.get("family") {
+            for ft in family_tables {
+                cfg.families.push(parse_family(ft).context("parsing [[family]]")?);
+            }
+            for (i, fam) in cfg.families.iter().enumerate() {
+                if cfg.families[..i].iter().any(|f| f.name == fam.name) {
+                    bail!("duplicate [[family]] entry for `{}`", fam.name);
+                }
+            }
+        }
         Ok(cfg)
+    }
+
+    /// Per-family priority lookup (tier 0 for families without a
+    /// `[[family]]` entry).
+    pub fn priority_of(&self, family: &str) -> u8 {
+        self.families.iter().find(|f| f.name == family).map(|f| f.priority).unwrap_or(0)
     }
 }
 
@@ -618,6 +795,99 @@ memory = "hbm_internal"
             // Every class is backed by a real accelerator model.
             assert!(class.accel().num_pes() > 0);
         }
+    }
+
+    #[test]
+    fn overload_knobs_parse_with_defaults() {
+        let d = ServerConfig::default();
+        assert_eq!(d.deadline_us, 0, "deadlines are opt-in");
+        assert_eq!(d.overload, OverloadPolicy::Block, "blocking backpressure is the default");
+        assert!(d.families.is_empty(), "tier 0 / no escalation without [[family]] entries");
+        assert_eq!(d.escalation_threshold, 0.35);
+        let cfg = ServerConfig::from_toml(
+            "[server]\ndeadline_us = 5000\noverload = \"shed\"\n\
+             escalation_threshold = 0.8\n\
+             \n[[family]]\nname = \"edge_cnn\"\npriority = 3\n\
+             \n[[family]]\nname = \"edge_lstm\"\nescalate_to = \"joint\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.deadline_us, 5000);
+        assert_eq!(cfg.overload, OverloadPolicy::Shed);
+        assert_eq!(cfg.escalation_threshold, 0.8);
+        assert_eq!(cfg.families.len(), 2);
+        assert_eq!(cfg.priority_of("edge_cnn"), 3);
+        assert_eq!(cfg.priority_of("edge_lstm"), 0, "priority defaults to tier 0");
+        assert_eq!(cfg.priority_of("joint"), 0, "unlisted families are tier 0");
+        assert_eq!(cfg.families[1].escalate_to.as_deref(), Some("joint"));
+        assert_eq!(cfg.families[0].escalate_to, None);
+    }
+
+    #[test]
+    fn overload_knobs_reject_bad_values() {
+        // deadline_us must be positive when present (absence disables).
+        let err = ServerConfig::from_toml("[server]\ndeadline_us = 0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("deadline_us must be positive"), "{err:#}");
+        let err = ServerConfig::from_toml("[server]\ndeadline_us = -5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("deadline_us must be positive"), "{err:#}");
+        // overload is a closed enum.
+        let err = ServerConfig::from_toml("[server]\noverload = \"drop\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown overload policy"), "{err:#}");
+        // escalation_threshold is a fraction.
+        let err =
+            ServerConfig::from_toml("[server]\nescalation_threshold = 1.5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("[0, 1]"), "{err:#}");
+        // priority range is 0..=3.
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\npriority = 4\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\npriority = -1\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // Families must be named, unique, and not escalate to themselves.
+        let err = ServerConfig::from_toml("[[family]]\npriority = 1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("name"), "{err:#}");
+        let err = ServerConfig::from_toml(
+            "[[family]]\nname = \"a\"\n\n[[family]]\nname = \"a\"\n",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\nescalate_to = \"a\"\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("different family"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_not_ignored() {
+        // A typo'd [server] knob must error instead of silently using
+        // the default.
+        let err = ServerConfig::from_toml("[server]\nmax_bacth = 16\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key `max_bacth`"), "{err:#}");
+        let err = ServerConfig::from_toml("[[device]]\nclass = \"pascal\"\nworker = 2\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key `worker`"), "{err:#}");
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\nprio = 1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key `prio`"), "{err:#}");
+        // panic_on_poison is a test hook, never a TOML knob.
+        let err = ServerConfig::from_toml("[server]\npanic_on_poison = true\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+    }
+
+    #[test]
+    fn roster_and_shed_compose() {
+        // A [[device]] roster plus overload = "shed" plus [[family]]
+        // tiers must parse together — the overload layer sits on top
+        // of the heterogeneous pool, not beside it.
+        let cfg = ServerConfig::from_toml(
+            "[server]\noverload = \"shed\"\ndeadline_us = 2000\n\
+             \n[[device]]\nclass = \"pascal\"\nworkers = 2\n\
+             \n[[device]]\nclass = \"pavlov\"\n\
+             \n[[family]]\nname = \"edge_lstm\"\npriority = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.overload, OverloadPolicy::Shed);
+        assert_eq!(cfg.devices.len(), 2);
+        assert_eq!(cfg.priority_of("edge_lstm"), 2);
+        assert_eq!(cfg.deadline_us, 2000);
     }
 
     #[test]

@@ -59,8 +59,35 @@ pub struct BatchJob {
     /// Whether this is the final chunk of flush `seq` — the reorder
     /// buffer's cue to advance its cursor to the next flush.
     pub last: bool,
-    /// The member requests, arrival order.
+    /// The member requests, arrival order. Each carries its own
+    /// `enqueued` timestamp and optional `deadline` budget, so the
+    /// executor can expire a stale chunk at dequeue and the delivery
+    /// path can count deadline misses — the chunk itself needs no
+    /// aggregate deadline.
     pub requests: Vec<Request>,
+}
+
+impl BatchJob {
+    /// True when **every** deadline-carrying member request has blown
+    /// its budget at `now` — the executor's dequeue-expiry test.
+    /// Requests without deadlines never expire, so a mixed chunk (or a
+    /// deadline-free workload) always executes; `false` for an empty
+    /// chunk or one with no deadlines at all.
+    pub fn all_expired_at(&self, now: std::time::Instant) -> bool {
+        let mut saw_deadline = false;
+        for r in &self.requests {
+            match r.deadline_at() {
+                Some(at) => {
+                    if now < at {
+                        return false;
+                    }
+                    saw_deadline = true;
+                }
+                None => return false,
+            }
+        }
+        saw_deadline
+    }
 }
 
 /// One family's accumulating batch.
@@ -88,6 +115,13 @@ pub struct Batcher {
     /// default) vs emitting them whole for the executor to split
     /// serially (the job-granular benchmark baseline).
     chunk_level: bool,
+    /// `overload = "shed"` wiring: when set, chunks go through the
+    /// pool's non-blocking [`ExecutorPool::try_push`], and a bounced
+    /// chunk is handed to this sink instead of parking the shard. The
+    /// server builds the sink to fail the chunk's requests *and* fill
+    /// its reorder slot, so client-observed FIFO survives the shed.
+    /// `None` (the default) keeps the blocking `push` discipline.
+    shed_sink: Option<Arc<dyn Fn(BatchJob) + Send + Sync>>,
 }
 
 impl Batcher {
@@ -107,7 +141,17 @@ impl Batcher {
             timeout: Duration::from_micros(cfg.batch_timeout_us),
             chunk_caps,
             chunk_level: cfg.chunk_level,
+            shed_sink: None,
         }
+    }
+
+    /// Switch this shard to the `overload = "shed"` discipline:
+    /// dispatch becomes non-blocking and chunks the pool bounces are
+    /// handed to `sink` (which must reply to the chunk's requests and
+    /// keep the family's delivery cursor moving).
+    pub fn with_shed_sink(mut self, sink: Arc<dyn Fn(BatchJob) + Send + Sync>) -> Self {
+        self.shed_sink = Some(sink);
+        self
     }
 
     /// Run until the request channel closes. Flushes all pending
@@ -213,17 +257,18 @@ impl Batcher {
         } else {
             usize::MAX
         };
-        // Pushes may block on the family's inflight cap — that is the
-        // backpressure path.
+        // Blocking mode: pushes may park on the family's inflight cap
+        // — that is the backpressure path. Shed mode never parks: the
+        // pool bounces the chunk and the sink fails it fast.
         let mut chunk: u32 = 0;
         let mut rest = requests;
         loop {
             if rest.len() <= cap {
-                self.pool.push(BatchJob { family, seq, chunk, last: true, requests: rest });
+                self.dispatch(BatchJob { family, seq, chunk, last: true, requests: rest });
                 return;
             }
             let tail = rest.split_off(cap);
-            self.pool.push(BatchJob {
+            self.dispatch(BatchJob {
                 family: family.clone(),
                 seq,
                 chunk,
@@ -232,6 +277,21 @@ impl Batcher {
             });
             rest = tail;
             chunk += 1;
+        }
+    }
+
+    /// Hand one chunk to the pool under the configured overload
+    /// discipline. Every emitted `(seq, chunk)` key ends up either
+    /// executed or shed-through-the-sink — never silently dropped —
+    /// because the reorder cursor must see all of them.
+    fn dispatch(&self, job: BatchJob) {
+        match &self.shed_sink {
+            Some(sink) => {
+                if let Some(bounced) = self.pool.try_push(job) {
+                    sink(bounced);
+                }
+            }
+            None => self.pool.push(job),
         }
     }
 }
@@ -250,6 +310,8 @@ mod tests {
                 family: family.into(),
                 inputs: vec![vec![0.0]],
                 enqueued: Instant::now(),
+                deadline: None,
+                escalated: false,
                 reply: tx,
             },
             rx,
@@ -400,6 +462,48 @@ mod tests {
         }
         let j = jobs.recv_timeout(Duration::from_secs(2)).unwrap();
         assert_eq!((j.seq, j.chunk, j.last, j.requests.len()), (0, 0, true, 5));
+    }
+
+    #[test]
+    fn shed_sink_receives_bounced_chunks_without_blocking() {
+        use crate::coordinator::pool::FAMILY_INFLIGHT_CAP;
+        use std::sync::Mutex;
+        // Pool with NO worker running: the family queue fills to the
+        // inflight cap, after which flushes must bounce to the sink
+        // instead of parking the shard (a blocking batcher would hang
+        // here forever).
+        let (req_tx, req_rx) = mpsc::channel();
+        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let cfg = ServerConfig { max_batch: 1, batch_timeout_us: 1_000, ..Default::default() };
+        let shed: Arc<Mutex<Vec<BatchJob>>> = Arc::new(Mutex::new(Vec::new()));
+        let store = Arc::clone(&shed);
+        let sink: Arc<dyn Fn(BatchJob) + Send + Sync> =
+            Arc::new(move |j| store.lock().unwrap().push(j));
+        let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::new(HashMap::new()))
+            .with_shed_sink(sink);
+        thread::spawn(move || b.run());
+        let mut keep = Vec::new();
+        for _ in 0..FAMILY_INFLIGHT_CAP + 2 {
+            let (r, rx) = req("edge_cnn");
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if shed.lock().unwrap().len() >= 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "bounced chunks never reached the sink");
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            pool.queued_jobs(),
+            FAMILY_INFLIGHT_CAP,
+            "admitted chunks stay queued; bounced ones never entered"
+        );
+        for j in shed.lock().unwrap().iter() {
+            assert_eq!(j.family, "edge_cnn");
+        }
     }
 
     #[test]

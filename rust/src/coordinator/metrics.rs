@@ -42,21 +42,98 @@
 //!   1 after a family's backlog drains). Empty in bare `Metrics`
 //!   snapshots.
 
-use crate::util::stats;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Log2 bucket count of [`LatencyHistogram`]: bucket 0 holds `[0, 1)`
+/// µs, bucket `i >= 1` holds `[2^(i-1), 2^i)` µs, and the last bucket
+/// absorbs everything from `2^(HIST_BUCKETS-2)` µs (~76 hours) up —
+/// far past any latency a serving path can produce, so saturation is
+/// a reporting clamp, never an accounting loss.
+const HIST_BUCKETS: usize = 40;
+
+/// Fixed-size log-bucketed latency histogram: recording is an array
+/// increment (no allocation, no sorting on the hot path), and
+/// percentile queries return the **upper bound** of the bucket the
+/// rank falls in — a conservative estimate that never understates a
+/// tail latency by more than the 2x bucket width.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { counts: [0; HIST_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket(us: f64) -> usize {
+        // `!(us >= 1.0)` also routes NaN to bucket 0 instead of
+        // panicking in `ilog2(0)`; casts saturate, so any huge or
+        // infinite value lands in the overflow bucket.
+        if !(us >= 1.0) {
+            0
+        } else {
+            ((us as u64).ilog2() as usize + 1).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Upper bound of bucket `i` in microseconds (the value percentile
+    /// queries report). The overflow bucket reports twice its lower
+    /// bound — finite, so downstream arithmetic stays finite.
+    fn upper_us(i: usize) -> f64 {
+        (1u64 << i) as f64
+    }
+
+    /// Record one latency sample (microseconds).
+    pub fn record(&mut self, us: f64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.total += 1;
+    }
+
+    /// Samples recorded.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The `p`-th percentile (p in `[0, 100]`) as the matching
+    /// bucket's upper bound; 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let target = target.min(self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::upper_us(i);
+            }
+        }
+        Self::upper_us(HIST_BUCKETS - 1)
+    }
+}
+
 #[derive(Debug, Default)]
 struct Inner {
-    latencies_us: Vec<f64>,
-    queue_us: Vec<f64>,
-    batch_sizes: Vec<f64>,
+    latencies: LatencyHistogram,
+    queue_us_sum: f64,
+    batch_sum: f64,
     completed: u64,
     completed_by_family: BTreeMap<String, u64>,
     jobs: u64,
     rejected: u64,
     failed: u64,
+    jobs_shed: u64,
+    jobs_expired: u64,
+    deadline_misses: u64,
+    jobs_panicked: u64,
+    escalations: u64,
     sim_energy_j: f64,
     sim_latency_s: f64,
     workers_by_family: BTreeMap<String, BTreeSet<usize>>,
@@ -86,9 +163,31 @@ pub struct Snapshot {
     pub rejected: u64,
     /// Requests that failed in execution.
     pub failed: u64,
-    /// p50 end-to-end latency, microseconds.
+    /// Requests shed by overload protection: deadline-aware admission
+    /// control at `infer()` (the modeled queue + execution time
+    /// already exceeded the deadline) or a full family queue under
+    /// `overload = "shed"`. Shed requests never reach a device.
+    pub jobs_shed: u64,
+    /// Requests dropped at dequeue because their deadline expired
+    /// while queued — the executor skips the chunk entirely instead
+    /// of burning device time on an answer nobody is waiting for.
+    pub jobs_expired: u64,
+    /// Requests that *were* served but delivered after their
+    /// deadline; the SLO-attainment complement of `completed`.
+    pub deadline_misses: u64,
+    /// Chunks whose execution panicked (caught per chunk by
+    /// `server::guard_panic`; each panicked chunk's requests also
+    /// count in `failed`).
+    pub jobs_panicked: u64,
+    /// Requests escalated from a small family variant to its
+    /// `escalate_to` target on low-confidence output (hierarchical
+    /// inference).
+    pub escalations: u64,
+    /// p50 end-to-end latency, microseconds (log-bucket upper bound).
     pub p50_us: f64,
-    /// p99 end-to-end latency, microseconds.
+    /// p95 end-to-end latency, microseconds (log-bucket upper bound).
+    pub p95_us: f64,
+    /// p99 end-to-end latency, microseconds (log-bucket upper bound).
     pub p99_us: f64,
     /// Mean queueing delay, microseconds.
     pub mean_queue_us: f64,
@@ -144,9 +243,9 @@ impl Metrics {
         let mut m = self.inner.lock().expect("metrics lock");
         m.completed += 1;
         *m.completed_by_family.entry(family.to_string()).or_insert(0) += 1;
-        m.latencies_us.push(latency.as_secs_f64() * 1e6);
-        m.queue_us.push(queue.as_secs_f64() * 1e6);
-        m.batch_sizes.push(batch as f64);
+        m.latencies.record(latency.as_secs_f64() * 1e6);
+        m.queue_us_sum += queue.as_secs_f64() * 1e6;
+        m.batch_sum += batch as f64;
         m.sim_energy_j += sim_energy_j;
         m.sim_latency_s += sim_latency_s;
     }
@@ -205,6 +304,34 @@ impl Metrics {
         self.inner.lock().expect("metrics lock").failed += 1;
     }
 
+    /// Record `n` requests shed by overload protection (admission
+    /// control or a full queue under `overload = "shed"`).
+    pub fn record_shed(&self, n: u64) {
+        self.inner.lock().expect("metrics lock").jobs_shed += n;
+    }
+
+    /// Record `n` requests dropped at dequeue after their deadline
+    /// expired in the queue.
+    pub fn record_expired(&self, n: u64) {
+        self.inner.lock().expect("metrics lock").jobs_expired += n;
+    }
+
+    /// Record a response delivered after its deadline.
+    pub fn record_deadline_miss(&self) {
+        self.inner.lock().expect("metrics lock").deadline_misses += 1;
+    }
+
+    /// Record a chunk whose execution panicked (caught by
+    /// `server::guard_panic`).
+    pub fn record_panic(&self) {
+        self.inner.lock().expect("metrics lock").jobs_panicked += 1;
+    }
+
+    /// Record a request escalated to its family's large variant.
+    pub fn record_escalation(&self) {
+        self.inner.lock().expect("metrics lock").escalations += 1;
+    }
+
     /// Snapshot current values.
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().expect("metrics lock");
@@ -218,10 +345,20 @@ impl Metrics {
             jobs: m.jobs,
             rejected: m.rejected,
             failed: m.failed,
-            p50_us: stats::percentile(&m.latencies_us, 50.0),
-            p99_us: stats::percentile(&m.latencies_us, 99.0),
-            mean_queue_us: stats::mean(&m.queue_us),
-            mean_batch: stats::mean(&m.batch_sizes),
+            jobs_shed: m.jobs_shed,
+            jobs_expired: m.jobs_expired,
+            deadline_misses: m.deadline_misses,
+            jobs_panicked: m.jobs_panicked,
+            escalations: m.escalations,
+            p50_us: m.latencies.percentile(50.0),
+            p95_us: m.latencies.percentile(95.0),
+            p99_us: m.latencies.percentile(99.0),
+            mean_queue_us: if m.completed == 0 {
+                0.0
+            } else {
+                m.queue_us_sum / m.completed as f64
+            },
+            mean_batch: if m.completed == 0 { 0.0 } else { m.batch_sum / m.completed as f64 },
             sim_energy_j: m.sim_energy_j,
             sim_latency_s: m.sim_latency_s,
             workers_by_family: m
@@ -269,8 +406,12 @@ mod tests {
         assert_eq!(s.jobs, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.failed, 0);
-        assert!((s.p50_us - 200.0).abs() < 1.0);
+        // Log buckets report upper bounds: 100µs -> (64, 128], 300µs
+        // -> (256, 512].
+        assert_eq!(s.p50_us, 128.0);
+        assert_eq!(s.p99_us, 512.0);
         assert!((s.mean_batch - 6.0).abs() < 1e-9);
+        assert!((s.mean_queue_us - 20.0).abs() < 1e-9);
         assert!((s.sim_energy_j - 1.0).abs() < 1e-12);
         assert_eq!(
             s.completed_by_family,
@@ -357,11 +498,104 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.jobs, 0);
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p95_us, 0.0);
         assert_eq!(s.p99_us, 0.0);
+        assert_eq!(s.mean_queue_us, 0.0);
+        assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.jobs_shed, 0);
+        assert_eq!(s.jobs_expired, 0);
+        assert_eq!(s.deadline_misses, 0);
+        assert_eq!(s.jobs_panicked, 0);
+        assert_eq!(s.escalations, 0);
         assert!(s.completed_by_family.is_empty());
         assert!(s.workers_by_family.is_empty());
         assert!(s.jobs_by_device.is_empty());
         assert_eq!(s.cross_device_transfers, 0);
         assert_eq!(s.fifo_violations, 0);
+    }
+
+    #[test]
+    fn overload_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_shed(3);
+        m.record_shed(2);
+        m.record_expired(4);
+        m.record_deadline_miss();
+        m.record_panic();
+        m.record_escalation();
+        m.record_escalation();
+        let s = m.snapshot();
+        assert_eq!(s.jobs_shed, 5);
+        assert_eq!(s.jobs_expired, 4);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.jobs_panicked, 1);
+        assert_eq!(s.escalations, 2);
+        // Overload counters are disjoint from execution failures.
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn histogram_single_sample_pins_every_percentile() {
+        let mut h = LatencyHistogram::default();
+        h.record(100.0);
+        // One sample: every percentile is that sample's bucket upper
+        // bound (100µs falls in (64, 128]).
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 128.0, "p{p}");
+        }
+        assert_eq!(h.total(), 1);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.total(), 0);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.0, "p{p}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_split_percentiles() {
+        let mut h = LatencyHistogram::default();
+        // 90 fast samples at ~10µs, 10 slow at ~10ms: p50 reads the
+        // fast bucket, p95/p99 the slow one.
+        for _ in 0..90 {
+            h.record(10.0);
+        }
+        for _ in 0..10 {
+            h.record(10_000.0);
+        }
+        assert_eq!(h.percentile(50.0), 16.0, "10µs lands in (8, 16]");
+        assert_eq!(h.percentile(95.0), 16384.0, "10ms lands in (8192, 16384]");
+        assert_eq!(h.percentile(99.0), 16384.0);
+    }
+
+    #[test]
+    fn histogram_saturates_finite_on_overflow() {
+        let mut h = LatencyHistogram::default();
+        // Absurd values (and even non-finite garbage) must clamp into
+        // the fixed bucket range, never panic, and report finite.
+        h.record(1e30);
+        h.record(f64::INFINITY);
+        h.record(f64::NAN); // routed to bucket 0, not a crash
+        h.record(-5.0); // negative clamps to bucket 0
+        assert_eq!(h.total(), 4);
+        let p99 = h.percentile(99.0);
+        assert!(p99.is_finite(), "overflow bucket must report finite, got {p99}");
+        assert_eq!(p99, (1u64 << 39) as f64, "saturation cap is the last bucket bound");
+        assert_eq!(h.percentile(25.0), 1.0, "sub-µs bucket upper bound");
+    }
+
+    #[test]
+    fn histogram_sub_microsecond_and_boundary_values() {
+        let mut h = LatencyHistogram::default();
+        h.record(0.0);
+        h.record(0.5);
+        h.record(1.0); // exactly 1µs: first log bucket (0, 2]... reports 2
+        assert_eq!(h.percentile(50.0), 1.0);
+        assert_eq!(h.percentile(100.0), 2.0);
     }
 }

@@ -102,8 +102,29 @@ pub struct Request {
     pub inputs: Vec<Vec<f32>>,
     /// Enqueue timestamp (queueing-delay accounting).
     pub enqueued: Instant,
+    /// Latency budget relative to `enqueued`. `None` = no deadline:
+    /// the request is never admission-shed, never expires, and never
+    /// counts toward `deadline_misses`. Escalated requests carry the
+    /// *original* budget so the large variant inherits whatever time
+    /// remains, per the hierarchical-inference contract.
+    pub deadline: Option<std::time::Duration>,
+    /// Set once a request has been escalated small→large so a
+    /// low-confidence large output can never re-escalate.
+    pub escalated: bool,
     /// Where the response goes.
     pub reply: mpsc::Sender<anyhow::Result<InferenceResponse>>,
+}
+
+impl Request {
+    /// Absolute wall-clock deadline, if a budget was set.
+    pub fn deadline_at(&self) -> Option<Instant> {
+        self.deadline.map(|d| self.enqueued + d)
+    }
+
+    /// True when the budget is already exhausted at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        matches!(self.deadline_at(), Some(at) if now >= at)
+    }
 }
 
 #[cfg(test)]

@@ -61,7 +61,14 @@
 //!   queued per family before the batcher blocks — the bound scales
 //!   with the allowed fan-out so a widened family can actually fill
 //!   its workers, while the router queue (and ultimately `infer()`)
-//!   still absorbs and rejects overload.
+//!   still absorbs and rejects overload. Under `overload = "shed"`
+//!   the batcher uses the non-blocking [`ExecutorPool::try_push`]
+//!   instead: a chunk that would have blocked is handed back to be
+//!   failed fast (its reorder slot still filled, so FIFO holds), and
+//!   the reject threshold scales with the family's **priority tier**
+//!   (`[[family]]` config, `priority + 1` times the blocking cap) so
+//!   the lowest tiers shed first while the claim path hands ready
+//!   families to workers highest-tier-first.
 //!
 //! **Static mode** (`work_stealing = false` in `ServerConfig`) keeps
 //! the PR 1 discipline — a family is only ever offered to
@@ -254,6 +261,15 @@ pub struct ExecutorPool {
     depth: DepthPolicy,
     /// Device-class topology; `None` for the homogeneous pool.
     topology: Option<PoolTopology>,
+    /// Per-family priority tier (`0..=MAX_PRIORITY`, higher = more
+    /// important; absent = tier 0), from the `[[family]]` config.
+    /// Immutable after construction ([`ExecutorPool::with_priorities`]),
+    /// so reads are lock-free. Two effects when non-empty: ready
+    /// families are claimed highest-tier-first (FIFO *within* a tier),
+    /// and [`ExecutorPool::try_push`] scales each family's reject
+    /// threshold by `priority + 1`, so under overload the lowest tiers
+    /// run out of queue — and shed — first.
+    priorities: HashMap<String, u8>,
 }
 
 impl ExecutorPool {
@@ -310,7 +326,22 @@ impl ExecutorPool {
             stealing,
             depth,
             topology,
+            priorities: HashMap::new(),
         }
+    }
+
+    /// Attach per-family priority tiers (builder style, before the
+    /// pool is shared). Families absent from the map are tier 0; an
+    /// empty map keeps the priority machinery entirely off the claim
+    /// path.
+    pub fn with_priorities(mut self, priorities: HashMap<String, u8>) -> Self {
+        self.priorities = priorities;
+        self
+    }
+
+    /// The family's configured priority tier (absent → 0).
+    pub fn priority_of(&self, family: &str) -> u8 {
+        self.priorities.get(family).copied().unwrap_or(0)
     }
 
     /// Whether this pool steals (true) or pins families (false).
@@ -458,7 +489,8 @@ impl ExecutorPool {
     }
 
     /// Enqueue a flushed chunk, blocking while the family is at its
-    /// inflight cap. Called by the batcher shards only.
+    /// inflight cap. Called by the batcher shards only (the
+    /// `overload = "block"` discipline).
     pub fn push(&self, job: BatchJob) {
         let cap = self.inflight_cap();
         let mut guard = self.state.lock().expect("pool lock");
@@ -469,8 +501,44 @@ impl ExecutorPool {
             }
             guard = self.space.wait(guard).expect("pool lock");
         }
+        self.admit(&mut guard, job);
+    }
+
+    /// Non-blocking enqueue for the `overload = "shed"` discipline:
+    /// where [`ExecutorPool::push`] would block, this hands the chunk
+    /// straight back (`Some(job)`) so the caller can fail its requests
+    /// — and fill its reorder slot — without ever parking a batcher
+    /// shard behind an overloaded family. The reject threshold is the
+    /// blocking cap scaled by `priority + 1`: under uniform overload
+    /// tier-0 families run out of queue (and shed) first, while the
+    /// top tier rides out a burst `MAX_PRIORITY + 1` times longer.
+    pub fn try_push(&self, job: BatchJob) -> Option<BatchJob> {
+        let cap = self
+            .inflight_cap()
+            .saturating_mul(self.priority_of(&job.family) as usize + 1);
+        let mut guard = self.state.lock().expect("pool lock");
+        let queued = guard.queues.get(&job.family).map_or(0, |q| q.jobs.len());
+        if queued >= cap {
+            return Some(job);
+        }
+        self.admit(&mut guard, job);
+        None
+    }
+
+    /// Chunks currently queued (not yet claimed) for `family`. The
+    /// admission controller's backlog probe: one lock, no allocation.
+    pub fn queued_for(&self, family: &str) -> usize {
+        let guard = self.state.lock().expect("pool lock");
+        guard.queues.get(family).map_or(0, |q| q.jobs.len())
+    }
+
+    /// Shared enqueue body (caller holds the lock and has settled the
+    /// block/shed capacity question): fold the backlog sample, queue
+    /// the chunk, and dispatch the family to an idle worker or a ready
+    /// queue.
+    fn admit(&self, guard: &mut PoolState, job: BatchJob) {
         debug_assert!(!guard.closed, "push after close");
-        let st = &mut *guard;
+        let st = guard;
         // Adaptive policy only: fold the queue length this push brings
         // the family to into its backlog EWMA (sampled at dispatch)
         // and record the granted depth (gauge, high watermark). Static
@@ -543,6 +611,31 @@ impl ExecutorPool {
         self.work.notify_all();
     }
 
+    /// Take the next family from ready queue `rq`, honouring priority
+    /// tiers: the highest-tier entry wins, FIFO among entries of the
+    /// same tier. With no priorities configured (every deployment
+    /// before the `[[family]]` knob, and every family at tier 0) this
+    /// is a plain `pop_front` — the scan never runs, so the default
+    /// claim path is untouched.
+    fn pop_ready(&self, st: &mut PoolState, rq: usize) -> Option<String> {
+        if self.priorities.is_empty() {
+            return st.ready[rq].pop_front().map(|(f, _)| f);
+        }
+        let mut best: Option<(usize, u8)> = None;
+        for (i, (family, _)) in st.ready[rq].iter().enumerate() {
+            let p = self.priority_of(family);
+            let better = match best {
+                None => true,
+                Some((_, bp)) => p > bp,
+            };
+            if better {
+                best = Some((i, p));
+            }
+        }
+        let (idx, _) = best?;
+        st.ready[rq].remove(idx).map(|(f, _)| f)
+    }
+
     /// Attempt to take a hold on `family` for worker `w`. Another
     /// holder may have drained (or be over-holding) the family since
     /// it was queued ready; such entries are skipped (`false`) with
@@ -594,7 +687,7 @@ impl ExecutorPool {
                 None if self.stealing => 0,
                 None => w,
             };
-            while let Some((family, _)) = st.ready[rq].pop_front() {
+            while let Some(family) = self.pop_ready(st, rq) {
                 if self.claim(st, &family, w) {
                     return Some(family);
                 }
@@ -1286,6 +1379,72 @@ mod tests {
     }
 
     #[test]
+    fn try_push_rejects_at_cap_instead_of_blocking() {
+        // No workers: the family's queue fills to the inflight cap,
+        // after which try_push must hand the chunk straight back where
+        // push would have parked the producer.
+        let pool = ExecutorPool::new(1, true, 1, DepthPolicy::Static(1));
+        let cap = FAMILY_INFLIGHT_CAP;
+        for seq in 0..cap as u64 {
+            assert!(pool.try_push(job("fam", seq)).is_none(), "below cap must admit");
+        }
+        let bounced = pool.try_push(job("fam", cap as u64));
+        let bounced = bounced.expect("at cap try_push must return the chunk");
+        assert_eq!((bounced.family.as_str(), bounced.seq), ("fam", cap as u64));
+        assert_eq!(pool.queued_jobs(), cap, "rejected chunk never entered the queue");
+    }
+
+    #[test]
+    fn priority_scales_the_shed_threshold() {
+        // Tier 3 rides out a burst (MAX_PRIORITY + 1 =) 4x longer than
+        // tier 0 before try_push starts bouncing.
+        let prios: HashMap<String, u8> =
+            [("lo".to_string(), 0u8), ("hi".to_string(), 3u8)].into_iter().collect();
+        let pool =
+            ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)).with_priorities(prios);
+        let cap = FAMILY_INFLIGHT_CAP;
+        for seq in 0..cap as u64 {
+            assert!(pool.try_push(job("lo", seq)).is_none());
+        }
+        assert!(pool.try_push(job("lo", cap as u64)).is_some(), "tier 0 sheds at the base cap");
+        for seq in 0..(cap * 4) as u64 {
+            assert!(pool.try_push(job("hi", seq)).is_none(), "tier 3 absorbs 4x the backlog");
+        }
+        assert!(pool.try_push(job("hi", (cap * 4) as u64)).is_some(), "then sheds too");
+    }
+
+    #[test]
+    fn ready_families_are_claimed_highest_tier_first() {
+        // Push a low- then a high-tier family with no worker running:
+        // both land in the shared ready queue in push order, but the
+        // claim path must hand out the high tier first (and FIFO is
+        // preserved within a tier).
+        let prios: HashMap<String, u8> = [
+            ("lo_a".to_string(), 0u8),
+            ("lo_b".to_string(), 0u8),
+            ("hi".to_string(), 2u8),
+        ]
+        .into_iter()
+        .collect();
+        let pool =
+            ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)).with_priorities(prios);
+        pool.push(job("lo_a", 0));
+        pool.push(job("lo_b", 0));
+        pool.push(job("hi", 0));
+        let first = pool.take_family(0).expect("ready family");
+        assert_eq!(first, "hi", "highest tier claims first regardless of push order");
+        while pool.next_job(&first, 0).is_some() {}
+        let second = pool.take_family(0).expect("ready family");
+        assert_eq!(second, "lo_a", "FIFO within a tier");
+        while pool.next_job(&second, 0).is_some() {}
+        let third = pool.take_family(0).expect("ready family");
+        assert_eq!(third, "lo_b");
+        while pool.next_job(&third, 0).is_some() {}
+        pool.producer_done();
+        assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
     fn requests_type_compiles_in_jobs() {
         // BatchJob carries real Requests on the serving path; the pool
         // itself never inspects them.
@@ -1294,6 +1453,8 @@ mod tests {
             family: "edge_cnn".into(),
             inputs: vec![vec![0.0]],
             enqueued: Instant::now(),
+            deadline: None,
+            escalated: false,
             reply,
         };
         let j = BatchJob {

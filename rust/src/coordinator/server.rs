@@ -103,6 +103,47 @@
 //! only the emulated timing differs. Delivery ordering is untouched —
 //! the FIFO invariant (`Snapshot::fifo_violations == 0`) holds under
 //! heterogeneous dispatch, which `tests/hetero_pool.rs` pins.
+//!
+//! # Overload protection
+//!
+//! Past saturation the default (`overload = "block"`) discipline
+//! parks the batcher on the pool's inflight caps and lets the router
+//! queue absorb the rest: nothing is dropped, but every response's
+//! latency grows with the backlog. `overload = "shed"` turns the
+//! same bounds into a load-shedding ladder, engaged at three points —
+//! always *before* device time is burned, never after:
+//!
+//! 1. **admission** (`infer`): a deadline-carrying request is
+//!    rejected on the spot when the modeled queue + execution time
+//!    (per-chunk device window × queued chunks, from the family's
+//!    placed [`DeviceProfile`]) already exceeds its budget
+//!    (`Snapshot::jobs_shed`);
+//! 2. **enqueue**: the batcher dispatches through the non-blocking
+//!    `ExecutorPool::try_push`; a bounced chunk is failed fast through
+//!    a shed sink that still fills the chunk's reorder slot, so
+//!    client-observed FIFO survives (`jobs_shed`). The bounce
+//!    threshold scales with the family's `[[family]]` priority tier —
+//!    lowest tiers shed first;
+//! 3. **dequeue**: a chunk whose member deadlines have *all* expired
+//!    while queued is dropped, not executed (`jobs_expired`); a
+//!    mixed chunk still runs, and any response delivered past its
+//!    deadline counts `deadline_misses`.
+//!
+//! Deadlines come from `deadline_us` (every request) or per call via
+//! [`ServerHandle::infer_with_deadline`]; requests without one never
+//! shed or expire.
+//!
+//! # Hierarchical inference
+//!
+//! `[[family]]` entries with `escalate_to` enable the DIME-style
+//! small→large cascade as a first-class server mode: requests are
+//! served by the small family, and only outputs whose confidence
+//! (peak fraction of the output mass) falls below
+//! `escalation_threshold` are re-submitted — once — to the large
+//! family, inheriting the original enqueue time so the remaining
+//! deadline budget carries over (`Snapshot::escalations`). An
+//! escalation that cannot be queued (router full, shutdown, budget
+//! exhausted) falls back to delivering the small result.
 
 use super::batcher::{BatchJob, Batcher};
 use super::device::{self, DeviceBackend, DeviceProfile, TransferTracker};
@@ -110,7 +151,7 @@ use super::metrics::{Metrics, Snapshot};
 use super::pool::{DepthPolicy, ExecutorPool, PoolTopology, ReorderBuffer};
 use super::{worker_for_family, Request};
 use crate::accel::configs;
-use crate::config::ServerConfig;
+use crate::config::{OverloadPolicy, ServerConfig};
 use crate::model::zoo;
 use crate::runtime::{Backend, ExecScratch, Runtime, RuntimeOptions};
 use crate::scheduler::ScheduleCache;
@@ -119,7 +160,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -181,8 +222,26 @@ pub struct ServerHandle {
     /// fixed, manifest-bounded set.
     families: std::collections::HashSet<String>,
     metrics: Arc<Metrics>,
-    /// Kept for the depth gauges ([`Snapshot::depth_by_family`]).
+    /// Kept for the depth gauges ([`Snapshot::depth_by_family`]) and
+    /// the admission controller's backlog probe.
     pool: Arc<ExecutorPool>,
+    /// Overload discipline: admission control and dequeue expiry are
+    /// armed only under [`OverloadPolicy::Shed`].
+    overload: OverloadPolicy,
+    /// Budget stamped on every request that does not bring its own
+    /// (the `deadline_us` knob; `None` = deadlines off by default).
+    default_deadline: Option<Duration>,
+    /// Modeled per-chunk service time per family — the admission
+    /// controller's cost model. Placed device window at batch 1 under
+    /// a roster, the flat `device_latency_us` window otherwise; empty
+    /// for the bare runtime (no emulated device ⇒ no modeled wait, so
+    /// admission never sheds and overload is handled at enqueue).
+    service_est: HashMap<String, Duration>,
+    /// Hierarchical-inference escalator, when any `[[family]]` entry
+    /// configures `escalate_to`. Shared with the delivery path;
+    /// disarmed (its router senders dropped) at shutdown so batcher
+    /// shards can observe disconnection.
+    escalator: Option<Arc<Escalator>>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -241,19 +300,45 @@ impl Server {
             DepthPolicy::Static(cfg.reorder_depth.max(1))
         };
 
+        // `[[family]]` policies must name loaded families: a typo'd
+        // priority silently protecting nothing — or an escalation
+        // target that can never execute — is a config error, caught
+        // here like the roster validation.
+        for fam in &cfg.families {
+            if !families.contains(&fam.name) {
+                bail!("[[family]] `{}`: no variant of this family is loaded", fam.name);
+            }
+            if let Some(target) = &fam.escalate_to {
+                if !families.contains(target) {
+                    bail!(
+                        "[[family]] `{}`: escalate_to names unloaded family `{target}`",
+                        fam.name
+                    );
+                }
+            }
+        }
+        let priorities: HashMap<String, u8> =
+            cfg.families.iter().map(|f| (f.name.clone(), f.priority)).collect();
+
         // Resolve the executor pool and the per-worker execution
         // backends behind the `Backend` seam. Every backend wraps the
         // one shared runtime — numerics are bit-identical across
-        // classes; only the emulated device timing differs.
+        // classes; only the emulated device timing differs. The pool
+        // carries the `[[family]]` priority tiers (claim order and
+        // shed thresholds); `service_est` is the admission
+        // controller's modeled per-chunk service time.
         let mut family_names: Vec<String> = families.iter().cloned().collect();
         family_names.sort();
+        let mut service_est: HashMap<String, Duration> = HashMap::new();
         let (pool, worker_backends, transfers): (
             Arc<ExecutorPool>,
             Vec<Arc<dyn Backend>>,
             Option<Arc<TransferTracker>>,
         ) = if cfg.devices.is_empty() {
-            let pool =
-                Arc::new(ExecutorPool::new(workers, cfg.work_stealing, shards, depth));
+            let pool = Arc::new(
+                ExecutorPool::new(workers, cfg.work_stealing, shards, depth)
+                    .with_priorities(priorities),
+            );
             let backend: Arc<dyn Backend> = if cfg.device_latency_us == 0 {
                 // No emulated device at all: the bare runtime
                 // (zero windows), the pre-seam behavior exactly.
@@ -262,12 +347,13 @@ impl Server {
                 // Back-compat: the legacy flat per-chunk knob is a
                 // degenerate single-class roster whose window ignores
                 // the batch size.
+                let window = Duration::from_micros(cfg.device_latency_us);
+                for f in &family_names {
+                    service_est.insert(f.clone(), window);
+                }
                 Arc::new(DeviceBackend::new(
                     Arc::clone(&runtime),
-                    DeviceProfile::flat(
-                        "device",
-                        Duration::from_micros(cfg.device_latency_us),
-                    ),
+                    DeviceProfile::flat("device", window),
                 ))
             };
             (pool, vec![backend; workers], None)
@@ -286,6 +372,14 @@ impl Server {
             let transfer = Duration::from_micros(cfg.transfer_us);
             let profiles = device::build_profiles(&cfg.devices, &family_names, transfer);
             let placement = device::placement(&profiles, &family_names);
+            // Admission cost model: each family's modeled batch-1
+            // window on its *placed* class — the same windows the
+            // executors will sleep, so the modeled wait tracks the
+            // emulated reality.
+            for f in &family_names {
+                let class = placement.get(f).copied().unwrap_or(0);
+                service_est.insert(f.clone(), profiles[class].window(f, 1));
+            }
             // Workers expand in roster order, so worker→class (and
             // with it `jobs_by_device` attribution) is deterministic.
             let mut worker_class = Vec::new();
@@ -307,18 +401,61 @@ impl Server {
                 placement,
                 Duration::from_micros(cfg.spill_after_us),
             );
-            let pool = Arc::new(ExecutorPool::new_hetero(topology, shards, depth));
+            let pool = Arc::new(
+                ExecutorPool::new_hetero(topology, shards, depth)
+                    .with_priorities(priorities),
+            );
             (pool, worker_backends, Some(Arc::new(TransferTracker::default())))
         };
         // With a roster the worker count is the roster's, not
         // `cfg.workers`.
         let workers = worker_backends.len();
 
+        // Router channels are created before the executor threads:
+        // the escalator (consulted at delivery, inside the executors)
+        // re-submits low-confidence requests through the same sharded
+        // queues `infer()` uses, so per-family arrival order of
+        // escalated work is still batcher-owned.
+        let mut req_txs = Vec::with_capacity(shards);
+        let mut req_rxs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+            req_txs.push(req_tx);
+            req_rxs.push(req_rx);
+        }
+
+        // Hierarchical inference: built when any `[[family]]` entry
+        // names an escalation target. Holds *clones* of the router
+        // senders behind a disarm latch — `shutdown()` takes them back
+        // so the batcher shards can observe channel disconnection (an
+        // always-armed clone inside the executors would deadlock the
+        // join: batchers wait on the senders, executors wait on the
+        // batchers' pool sign-off).
+        let targets: HashMap<String, String> = cfg
+            .families
+            .iter()
+            .filter_map(|f| f.escalate_to.clone().map(|t| (f.name.clone(), t)))
+            .collect();
+        let escalator = (!targets.is_empty()).then(|| {
+            Arc::new(Escalator {
+                targets,
+                threshold: cfg.escalation_threshold,
+                txs: Mutex::new(Some(req_txs.clone())),
+                metrics: Arc::clone(&metrics),
+            })
+        });
+
         // Intra-family parallelism: when the pool may let several
         // workers drain one family, a shared reorder buffer restores
         // client-observed FIFO at delivery.
         let reorder = (pool.family_concurrency() > 1)
             .then(|| Arc::new(ReorderBuffer::<ChunkDone>::new()));
+
+        // The shed discipline drops chunks at dequeue once every
+        // member deadline has expired (never before execution cost is
+        // at stake, never after it is paid).
+        let expire_at_dequeue = cfg.overload == OverloadPolicy::Shed;
+
         let mut threads = Vec::with_capacity(workers + shards);
         for (w, backend) in worker_backends.into_iter().enumerate() {
             let worker_pool = Arc::clone(&pool);
@@ -326,6 +463,7 @@ impl Server {
             let worker_costs = Arc::clone(&sim_costs);
             let worker_transfers = transfers.clone();
             let worker_reorder = reorder.clone();
+            let worker_escalator = escalator.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mensa-executor-{w}"))
@@ -338,19 +476,61 @@ impl Server {
                             worker_costs,
                             worker_transfers,
                             worker_reorder,
+                            worker_escalator,
+                            expire_at_dequeue,
                         )
                     })
                     .expect("spawn executor"),
             );
         }
 
+        // Shed sink: where a blocking batcher would park on the pool's
+        // inflight cap, the shed batcher bounces the chunk here. The
+        // sink fails the chunk's requests through the normal delivery
+        // path — via the reorder buffer when one exists, so the shed
+        // chunk still fills its `(seq, chunk)` slot and sibling chunks
+        // never stall behind a hole in the cursor.
+        let shed_sink: Option<Arc<dyn Fn(BatchJob) + Send + Sync>> =
+            (cfg.overload == OverloadPolicy::Shed).then(|| {
+                let metrics = Arc::clone(&metrics);
+                let reorder = reorder.clone();
+                let escalator = escalator.clone();
+                let sink: Arc<dyn Fn(BatchJob) + Send + Sync> =
+                    Arc::new(move |job: BatchJob| {
+                        let BatchJob { family, seq, chunk, last, requests } = job;
+                        let done = ChunkDone {
+                            seq,
+                            chunk,
+                            last,
+                            exec_start: Instant::now(),
+                            outcome: Err(ChunkErr {
+                                requests,
+                                error: format!(
+                                    "overloaded: `{family}` chunk shed at enqueue"
+                                ),
+                                kind: DropKind::Shed,
+                            }),
+                        };
+                        match &reorder {
+                            Some(buf) => buf.submit(&family, seq, chunk, last, done, |d| {
+                                deliver_chunk(&metrics, &family, d, escalator.as_deref())
+                            }),
+                            None => {
+                                deliver_chunk(&metrics, &family, done, escalator.as_deref())
+                            }
+                        }
+                    });
+                sink
+            });
+
         // Batcher shards: each drains its own router queue and feeds
         // the shared pool.
-        let mut req_txs = Vec::with_capacity(shards);
-        for s in 0..shards {
-            let (req_tx, req_rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-            req_txs.push(req_tx);
-            let batcher = Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::clone(&chunk_caps));
+        for (s, req_rx) in req_rxs.into_iter().enumerate() {
+            let mut batcher =
+                Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::clone(&chunk_caps));
+            if let Some(sink) = &shed_sink {
+                batcher = batcher.with_shed_sink(Arc::clone(sink));
+            }
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("mensa-batcher-{s}"))
@@ -359,17 +539,51 @@ impl Server {
             );
         }
 
-        Ok(ServerHandle { req_txs, families, metrics, pool, threads })
+        Ok(ServerHandle {
+            req_txs,
+            families,
+            metrics,
+            pool,
+            overload: cfg.overload,
+            default_deadline: (cfg.deadline_us > 0)
+                .then(|| Duration::from_micros(cfg.deadline_us)),
+            service_est,
+            escalator,
+            threads,
+        })
     }
 }
 
 impl ServerHandle {
     /// Submit a request; returns the response channel. Backpressure:
-    /// fails immediately when the family's shard queue is full.
+    /// fails immediately when the family's shard queue is full. The
+    /// request carries the config's default deadline (`deadline_us`;
+    /// none when 0) — see [`ServerHandle::infer_with_deadline`] for a
+    /// per-request budget.
     pub fn infer(
         &self,
         family: &str,
         inputs: Vec<Vec<f32>>,
+    ) -> Result<Receiver<Result<InferenceResponse>>> {
+        self.infer_with_deadline(family, inputs, self.default_deadline)
+    }
+
+    /// Submit a request with an explicit latency budget (`None`
+    /// disables the deadline for this request regardless of config).
+    ///
+    /// Under `overload = "shed"` a deadline-carrying request passes
+    /// **admission control** first: with the family's modeled
+    /// per-chunk service time `s` (its placed device window — zero
+    /// for the bare runtime, where there is nothing to model) and `q`
+    /// chunks already queued, a budget below `s × (q + 1)` is already
+    /// unmeetable, so the request is shed *now* — before it occupies
+    /// a queue slot, and long before it could burn device time
+    /// (`Snapshot::jobs_shed`).
+    pub fn infer_with_deadline(
+        &self,
+        family: &str,
+        inputs: Vec<Vec<f32>>,
+        deadline: Option<Duration>,
     ) -> Result<Receiver<Result<InferenceResponse>>> {
         // Reject unknown families before they enter the pipeline: a
         // request that can never execute must not create per-family
@@ -378,10 +592,33 @@ impl ServerHandle {
             self.metrics.record_failure();
             bail!("no variant of `{family}` is loaded");
         }
+        if self.overload == OverloadPolicy::Shed {
+            if let Some(budget) = deadline {
+                let per_chunk =
+                    self.service_est.get(family).copied().unwrap_or(Duration::ZERO);
+                if !per_chunk.is_zero() {
+                    let queued = self.pool.queued_for(family) as u32;
+                    let modeled = per_chunk.saturating_mul(queued + 1);
+                    if modeled > budget {
+                        self.metrics.record_shed(1);
+                        bail!(
+                            "admission shed: modeled wait {modeled:?} exceeds the \
+                             {budget:?} deadline for `{family}` ({queued} chunks queued)"
+                        );
+                    }
+                }
+            }
+        }
         let (reply, rx) = mpsc::channel();
         let shard = worker_for_family(family, self.req_txs.len());
-        let req =
-            Request { family: family.to_string(), inputs, enqueued: Instant::now(), reply };
+        let req = Request {
+            family: family.to_string(),
+            inputs,
+            enqueued: Instant::now(),
+            deadline,
+            escalated: false,
+            reply,
+        };
         match self.req_txs[shard].try_send(req) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => {
@@ -414,10 +651,16 @@ impl ServerHandle {
         snap
     }
 
-    /// Graceful shutdown: close the router queues and join all threads
-    /// (each batcher shard drains its pending batches and signs off
-    /// the pool; workers exit once the pool closes and empties).
+    /// Graceful shutdown: disarm the escalator (it holds router-sender
+    /// clones; in-flight low-confidence deliveries fall back to their
+    /// small results from here on), close the router queues, and join
+    /// all threads (each batcher shard drains its pending batches and
+    /// signs off the pool; workers exit once the pool closes and
+    /// empties).
     pub fn shutdown(self) {
+        if let Some(esc) = &self.escalator {
+            esc.disarm();
+        }
         drop(self.req_txs);
         for t in self.threads {
             let _ = t.join();
@@ -529,9 +772,118 @@ struct ChunkOk {
     pairs: Vec<(Request, Vec<f32>)>,
 }
 
+/// Why a chunk produced no outputs — each kind lands in a different
+/// [`Snapshot`] counter at delivery, so overload protection is
+/// distinguishable from genuine failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DropKind {
+    /// Kernel error or caught panic (`Snapshot::failed`).
+    Error,
+    /// Every member deadline blown while queued; dropped at dequeue
+    /// without executing (`Snapshot::jobs_expired`).
+    Expired,
+    /// Bounced by the shed path before entering the pool
+    /// (`Snapshot::jobs_shed`).
+    Shed,
+}
+
 struct ChunkErr {
     requests: Vec<Request>,
     error: String,
+    kind: DropKind,
+}
+
+/// Hierarchical-inference escalation: re-submits low-confidence
+/// small-variant outputs to the configured large family, consulted at
+/// the delivery point ([`deliver_chunk`]). The router senders live
+/// behind a disarm latch — see `Server::start` for the shutdown
+/// ordering this protects.
+struct Escalator {
+    /// Small family → large family (`[[family]] escalate_to`).
+    targets: HashMap<String, String>,
+    /// Outputs with [`confidence`] below this escalate.
+    threshold: f64,
+    /// Router senders (one per batcher shard), taken at shutdown.
+    txs: Mutex<Option<Vec<SyncSender<Request>>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Escalator {
+    /// Decide `req`'s fate given its small-variant `output`: forward a
+    /// low-confidence, in-budget, not-yet-escalated request to the
+    /// large family — inheriting `enqueued` and `deadline`, so the
+    /// large pass runs on the *remaining* budget — and return `None`
+    /// (the reply channel travels with it). Otherwise hand the request
+    /// back (`Some`) for normal delivery of the small result; that
+    /// includes every fallback: no target for this family, already
+    /// escalated, confident enough, budget exhausted, or the router
+    /// unavailable (queue full / shutdown).
+    fn escalate(&self, req: Request, output: &[f32]) -> Option<Request> {
+        let Some(target) = self.targets.get(&req.family) else { return Some(req) };
+        if req.escalated || confidence(output) >= self.threshold {
+            return Some(req);
+        }
+        if req.expired_at(Instant::now()) {
+            // Out of budget: a large pass is guaranteed late — the
+            // small result now beats a better answer too late.
+            return Some(req);
+        }
+        let Request { family, inputs, enqueued, deadline, escalated: _, reply } = req;
+        let fwd = Request {
+            family: target.clone(),
+            inputs,
+            enqueued,
+            deadline,
+            escalated: true,
+            reply,
+        };
+        let guard = self.txs.lock().expect("escalator lock");
+        let Some(txs) = guard.as_ref() else {
+            // Disarmed (shutdown in flight): fall back to the small
+            // result.
+            let Request { inputs, enqueued, deadline, reply, .. } = fwd;
+            return Some(Request { family, inputs, enqueued, deadline, escalated: false, reply });
+        };
+        let shard = worker_for_family(target, txs.len());
+        match txs[shard].try_send(fwd) {
+            Ok(()) => {
+                self.metrics.record_escalation();
+                None
+            }
+            Err(TrySendError::Full(fwd)) | Err(TrySendError::Disconnected(fwd)) => {
+                let Request { inputs, enqueued, deadline, reply, .. } = fwd;
+                Some(Request { family, inputs, enqueued, deadline, escalated: false, reply })
+            }
+        }
+    }
+
+    /// Drop the router-sender clones: escalation falls back to small
+    /// results and the batcher shards can observe disconnection.
+    fn disarm(&self) {
+        self.txs.lock().expect("escalator lock").take();
+    }
+}
+
+/// Peak fraction of the output's absolute mass: `max|x| / Σ|x|`, in
+/// `(0, 1]` for any non-degenerate output (an all-zero output scores
+/// 0.0 and escalates). A flat output — no dominating logit — scores
+/// near `1/n`: the cheap, allocation-free "not sure" signal the
+/// hierarchical-inference cascade keys on.
+fn confidence(output: &[f32]) -> f64 {
+    let mut max = 0.0f64;
+    let mut sum = 0.0f64;
+    for &x in output {
+        let a = (x as f64).abs();
+        if a > max {
+            max = a;
+        }
+        sum += a;
+    }
+    if sum > 0.0 {
+        max / sum
+    } else {
+        0.0
+    }
 }
 
 /// One worker's executor loop: take a family hold from the pool, drain
@@ -540,6 +892,7 @@ struct ChunkErr {
 /// back), execute through this worker's [`Backend`] with its reusable
 /// scratch, deliver (directly under the family lease; through the
 /// reorder buffer's `(seq, chunk)` slots otherwise), release, repeat.
+#[allow(clippy::too_many_arguments)]
 fn executor_loop(
     worker: usize,
     backend: Arc<dyn Backend>,
@@ -548,6 +901,8 @@ fn executor_loop(
     sim_costs: Arc<HashMap<String, SimCost>>,
     transfers: Option<Arc<TransferTracker>>,
     reorder: Option<Arc<ReorderBuffer<ChunkDone>>>,
+    escalator: Option<Arc<Escalator>>,
+    expire_at_dequeue: bool,
 ) {
     let mut scratch = WorkerScratch::default();
     while let Some(family) = pool.take_family(worker) {
@@ -570,10 +925,11 @@ fn executor_loop(
                     &sim_costs,
                     &mut scratch,
                     transfers.as_deref(),
+                    expire_at_dequeue,
                     |chunk| {
                         let (seq, idx, last) = (chunk.seq, chunk.chunk, chunk.last);
                         buf.submit(&family, seq, idx, last, chunk, |done| {
-                            deliver_chunk(&metrics, &family, done)
+                            deliver_chunk(&metrics, &family, done, escalator.as_deref())
                         });
                     },
                 ),
@@ -589,7 +945,8 @@ fn executor_loop(
                     &sim_costs,
                     &mut scratch,
                     transfers.as_deref(),
-                    |chunk| deliver_chunk(&metrics, &family, chunk),
+                    expire_at_dequeue,
+                    |chunk| deliver_chunk(&metrics, &family, chunk, escalator.as_deref()),
                 ),
             }
         }
@@ -615,8 +972,32 @@ fn exec_job(
     sim_costs: &HashMap<String, SimCost>,
     scratch: &mut WorkerScratch,
     transfers: Option<&TransferTracker>,
+    expire_at_dequeue: bool,
     mut sink: impl FnMut(ChunkDone),
 ) {
+    // Dequeue expiry (shed discipline): a chunk whose member deadlines
+    // have *all* blown while it queued is dropped without executing —
+    // the one place stale work can still be refused before any device
+    // time is spent. Its `(seq, chunk)` slot is filled with the error
+    // outcome, so the reorder cursor advances exactly as if it ran. A
+    // mixed chunk (any live deadline, or any deadline-free request)
+    // executes normally; its late members surface as deadline misses
+    // at delivery instead.
+    if expire_at_dequeue && job.all_expired_at(Instant::now()) {
+        let BatchJob { family, seq, chunk, last, requests } = job;
+        sink(ChunkDone {
+            seq,
+            chunk,
+            last,
+            exec_start: Instant::now(),
+            outcome: Err(ChunkErr {
+                requests,
+                error: format!("deadline expired before `{family}` chunk executed"),
+                kind: DropKind::Expired,
+            }),
+        });
+        return;
+    }
     let cap = backend.chunk_cap(&job.family);
     // Layer-to-layer transfer: charged once per job, exactly when this
     // family's previous job ran on a different device class (weights/
@@ -684,7 +1065,15 @@ fn exec_chunk(
 ) -> ChunkDone {
     let n = requests.len();
     let exec_start = Instant::now();
-    let result = guard_panic(|| execute_batch(backend, family, &requests, scratch));
+    let (result, panicked) =
+        guard_panic_flagged(|| execute_batch(backend, family, &requests, scratch));
+    if panicked {
+        // The poisoned-chunk trace (`Snapshot::jobs_panicked`): its
+        // requests also land in `failed` at delivery, but without this
+        // counter a caught panic is indistinguishable from an input
+        // error.
+        metrics.record_panic();
+    }
     match result {
         Ok((outputs, batch)) => {
             // Jobs are counted on success only (failed chunks land in
@@ -712,14 +1101,24 @@ fn exec_chunk(
             chunk,
             last,
             exec_start,
-            outcome: Err(ChunkErr { requests, error: format!("{e:#}") }),
+            outcome: Err(ChunkErr {
+                requests,
+                error: format!("{e:#}"),
+                kind: DropKind::Error,
+            }),
         },
     }
 }
 
 /// Send one executed chunk's responses and record the delivery-point
 /// metrics (the FIFO check lives here — where clients observe order).
-fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone) {
+/// With an [`Escalator`], each successful response consults the
+/// hierarchical-inference cascade first: a low-confidence small-variant
+/// output is re-submitted to the large family instead of delivered
+/// (its completion is recorded exactly once, by the pass that actually
+/// replies). Dropped chunks land in the counter their [`DropKind`]
+/// names — shed and expired work is overload protection, not failure.
+fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone, escalator: Option<&Escalator>) {
     let ChunkDone { seq, chunk, last: _, exec_start, outcome } = done;
     match outcome {
         Ok(ok) => {
@@ -735,8 +1134,22 @@ fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone) {
                 } else {
                     sim.clone()
                 };
+                let req = match escalator {
+                    Some(esc) => match esc.escalate(req, &output) {
+                        Some(req) => req,
+                        // Escalated: the large pass owns the reply
+                        // channel now; this pass records nothing.
+                        None => continue,
+                    },
+                    None => req,
+                };
                 let latency = req.enqueued.elapsed();
                 let queue = exec_start.duration_since(req.enqueued);
+                if let Some(budget) = req.deadline {
+                    if latency > budget {
+                        metrics.record_deadline_miss();
+                    }
+                }
                 metrics.record_completion(
                     family,
                     latency,
@@ -755,8 +1168,19 @@ fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone) {
             }
         }
         Err(err) => {
+            let n = err.requests.len() as u64;
+            match err.kind {
+                DropKind::Error => {}
+                DropKind::Expired => metrics.record_expired(n),
+                DropKind::Shed => metrics.record_shed(n),
+            }
             for req in err.requests {
-                metrics.record_failure();
+                // `failed` counts genuine failures only; shed/expired
+                // requests still receive an error reply but are
+                // accounted as overload protection.
+                if err.kind == DropKind::Error {
+                    metrics.record_failure();
+                }
                 let _ = req.reply.send(Err(anyhow!("{}", err.error)));
             }
         }
@@ -766,10 +1190,25 @@ fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone) {
 /// Run `f`, converting a panic into an `Err`. This is the executor
 /// pool's panic isolation (ROADMAP item): before it, a panicking job
 /// unwound the worker thread while it held a family queue, stranding
-/// that family's backlog and hanging shutdown on the join.
+/// that family's backlog and hanging shutdown on the join. The
+/// execute path itself uses [`guard_panic_flagged`] (it also counts
+/// `jobs_panicked`); this wrapper keeps the historical contract
+/// pinned by its unit test.
+#[cfg_attr(not(test), allow(dead_code))]
 fn guard_panic<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
-    catch_unwind(AssertUnwindSafe(f))
-        .unwrap_or_else(|payload| Err(anyhow!("executor panicked: {}", panic_message(&*payload))))
+    guard_panic_flagged(f).0
+}
+
+/// [`guard_panic`] variant that also reports *whether* a panic fired,
+/// so the caller can bump `Snapshot::jobs_panicked` without string-
+/// matching the error text.
+fn guard_panic_flagged<T>(f: impl FnOnce() -> Result<T>) -> (Result<T>, bool) {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(result) => (result, false),
+        Err(payload) => {
+            (Err(anyhow!("executor panicked: {}", panic_message(&*payload))), true)
+        }
+    }
 }
 
 /// Best-effort text from a panic payload.
@@ -939,6 +1378,41 @@ mod tests {
         let err = guard_panic(|| -> Result<()> { std::panic::panic_any(42usize) }).unwrap_err();
         assert!(format!("{err:#}").contains("non-string"), "{err:#}");
         assert_eq!(guard_panic(|| Ok(7)).unwrap(), 7, "non-panicking path untouched");
+    }
+
+    #[test]
+    fn confidence_is_peak_fraction_of_mass() {
+        // A dominated output is confident; a flat one is not.
+        assert!(confidence(&[9.0, 0.1, 0.1]) > 0.9);
+        let flat = confidence(&[1.0, 1.0, 1.0, 1.0]);
+        assert!((flat - 0.25).abs() < 1e-12, "flat output scores 1/n, got {flat}");
+        // Sign must not matter (these are raw regression outputs, not
+        // softmaxed probabilities).
+        assert_eq!(confidence(&[-3.0, 1.0]), confidence(&[3.0, 1.0]));
+        // Degenerate outputs escalate rather than divide by zero.
+        assert_eq!(confidence(&[]), 0.0);
+        assert_eq!(confidence(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn request_deadline_expiry() {
+        let (reply, _rx) = mpsc::channel();
+        let mut req = Request {
+            family: "edge_cnn".into(),
+            inputs: Vec::new(),
+            enqueued: Instant::now() - Duration::from_millis(10),
+            deadline: None,
+            escalated: false,
+            reply,
+        };
+        // No deadline: never expires, no absolute deadline instant.
+        assert!(req.deadline_at().is_none());
+        assert!(!req.expired_at(Instant::now()));
+        // A blown budget expires; a roomy one does not.
+        req.deadline = Some(Duration::from_millis(1));
+        assert!(req.expired_at(Instant::now()));
+        req.deadline = Some(Duration::from_secs(3600));
+        assert!(!req.expired_at(Instant::now()));
     }
 
     #[test]

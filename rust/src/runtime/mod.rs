@@ -129,6 +129,13 @@ pub trait Backend: Send + Sync {
 
     /// Execute a variant over packed batch buffers with only the first
     /// `active` rows live and caller-owned scratch.
+    ///
+    /// The executor guarantees this is never called for work the
+    /// server already refused: under `overload = "shed"`, admission-
+    /// rejected requests, enqueue-shed chunks, and chunks whose member
+    /// deadlines all expired while queued are dropped *upstream*, so
+    /// a backend only ever burns (emulated) device time on work that
+    /// can still be delivered.
     fn execute_batch(
         &self,
         name: &str,

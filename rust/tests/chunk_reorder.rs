@@ -174,6 +174,11 @@ fn poisoned_chunk_errors_only_its_own_requests() {
     assert_eq!(snap.failed, 4, "exactly the poisoned chunk's requests fail");
     assert_eq!(snap.completed, 12, "sibling chunks all deliver");
     assert_eq!(snap.fifo_violations, 0, "the failed slot must not break ordering");
+    assert_eq!(
+        snap.jobs_panicked, 1,
+        "one caught panic, attributed to exactly one chunk — the counter that \
+         distinguishes a panic from an ordinary input error"
+    );
     // Server stays healthy after the panic.
     let mut rng = Rng::new(0xBEEF);
     let x = lstm_input(&mut rng);

@@ -1,0 +1,498 @@
+//! Overload-protection contracts, end to end through the server:
+//!
+//! * **admission control** — under `overload = "shed"`, a
+//!   deadline-carrying request whose modeled queue + execution time
+//!   already exceeds its budget is rejected *at `infer()`*, before it
+//!   occupies any queue slot (`jobs_shed`); the same request under
+//!   `overload = "block"` executes and surfaces as a `deadline_miss`;
+//! * **enqueue shedding preserves FIFO** — chunks bounced by the
+//!   non-blocking pool path error their requests immediately, but
+//!   still fill their `(seq, chunk)` reorder slots: every response
+//!   that *is* delivered stays bit-exact and in submission order
+//!   (`fifo_violations == 0`), and nothing hangs at shutdown;
+//! * **priority tiers shed lowest first** — a tier-3 family rides out
+//!   a burst that sheds a tier-0 family, deterministically (the
+//!   effective cap scales with `priority + 1`);
+//! * **dequeue expiry** — a chunk whose member deadlines have *all*
+//!   blown while queued is dropped without executing
+//!   (`jobs_expired`); a mixed chunk (any live or deadline-free
+//!   member) executes, and its late members count `deadline_misses`;
+//! * **hierarchical escalation** — with `escalate_to` configured,
+//!   low-confidence small-family outputs are re-served by the large
+//!   family (bit-exact against solo large-family runs), while an
+//!   exhausted deadline budget falls back to the small result;
+//! * **roster composition** — the shed ladder works unchanged on a
+//!   heterogeneous `[[device]]` pool.
+
+use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
+use mensa::coordinator::{device, Server};
+use mensa::util::rng::Rng;
+use std::fmt::Write as _;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+fn cnn_input(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect()
+}
+
+fn lstm_input(rng: &mut Rng) -> Vec<f32> {
+    (0..8 * 128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+fn policy(name: &str, priority: u8, escalate_to: Option<&str>) -> FamilyPolicy {
+    FamilyPolicy {
+        name: name.to_string(),
+        priority,
+        escalate_to: escalate_to.map(str::to_string),
+    }
+}
+
+#[test]
+fn admission_sheds_unmeetable_deadlines_before_queueing() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xADC1);
+    let x = cnn_input(&mut rng);
+    // 50 ms emulated device: the modeled per-chunk service time the
+    // admission controller prices queue positions with.
+    let base = ServerConfig {
+        workers: 1,
+        device_latency_us: 50_000,
+        ..Default::default()
+    };
+
+    // Shed mode: a 10 ms budget cannot cover one 50 ms chunk even on
+    // an idle server — rejected at infer(), zero device time burned.
+    let cfg = ServerConfig { overload: OverloadPolicy::Shed, ..base.clone() };
+    let server = Server::start(&dir, cfg).expect("start shed server");
+    let err = server
+        .infer_with_deadline("edge_cnn", vec![x.clone()], Some(Duration::from_millis(10)))
+        .expect_err("10 ms budget against a 50 ms modeled chunk must shed");
+    assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
+    // A roomy budget and a deadline-free request both pass admission.
+    let ok = server
+        .infer_with_deadline("edge_cnn", vec![x.clone()], Some(Duration::from_secs(5)))
+        .expect("roomy budget admits");
+    ok.recv_timeout(TIMEOUT).expect("recv").expect("roomy budget completes");
+    server.infer_blocking("edge_cnn", vec![x.clone()], TIMEOUT).expect("no deadline, no shed");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_shed, 1, "exactly the unmeetable request shed");
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.failed, 0, "shed work is overload protection, not failure");
+    assert_eq!(snap.deadline_misses, 0, "the roomy budget was met");
+    server.shutdown();
+
+    // Block mode never admission-sheds: the same hopeless request
+    // executes — and its lateness is visible as a deadline miss.
+    let server = Server::start(&dir, base).expect("start block server");
+    let rx = server
+        .infer_with_deadline("edge_cnn", vec![x], Some(Duration::from_millis(10)))
+        .expect("block mode admits everything");
+    rx.recv_timeout(TIMEOUT).expect("recv").expect("block mode still serves it");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_shed, 0);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.deadline_misses, 1, "delivered past its 10 ms budget");
+    server.shutdown();
+}
+
+#[test]
+fn enqueue_shedding_keeps_delivered_responses_exact_and_in_order() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0x5EED);
+    let inputs: Vec<Vec<f32>> = (0..24).map(|_| cnn_input(&mut rng)).collect();
+    // Solo reference outputs (batch-1, default server).
+    let solo_server = Server::start(&dir, ServerConfig::default()).expect("solo");
+    let solo: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| solo_server.infer_blocking("edge_cnn", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    solo_server.shutdown();
+
+    // One chunk per request (max_batch 1), 50 ms device windows, and
+    // the reorder path (depth 4 → effective cap 8): a 24-request burst
+    // must overflow the bounded queue, and shed mode bounces the
+    // overflow instead of parking the batcher.
+    let cfg = ServerConfig {
+        workers: 4,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        work_stealing: true,
+        reorder_depth: 4,
+        device_latency_us: 50_000,
+        overload: OverloadPolicy::Shed,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| loop {
+            // Retry router backpressure; pool-level shedding answers
+            // through the reply channel, not here.
+            match server.infer("edge_cnn", vec![x.clone()]) {
+                Ok(rx) => break rx,
+                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+            }
+        })
+        .collect();
+    let mut shed = 0u64;
+    let mut completed = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(TIMEOUT).expect("every request gets a terminal reply") {
+            Ok(resp) => {
+                completed += 1;
+                assert_eq!(resp.output, solo[i], "request {i}: delivered responses bit-exact");
+            }
+            Err(e) => {
+                shed += 1;
+                assert!(
+                    format!("{e:#}").contains("shed"),
+                    "request {i}: only shed errors expected, got {e:#}"
+                );
+            }
+        }
+    }
+    assert!(shed >= 4, "a 24-burst against a cap of 8 must shed, shed only {shed}");
+    assert!(completed >= 8, "the bounded queue's worth must still be served");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_shed, shed, "every client-visible shed is counted once");
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.completed + snap.jobs_shed, 24, "conservation: served + shed = offered");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(
+        snap.fifo_violations, 0,
+        "shed chunks must fill their reorder slots — order survives shedding"
+    );
+    // The log-bucketed latency histogram is populated and ordered.
+    assert!(snap.p50_us > 0.0, "completions must land in the histogram");
+    assert!(snap.p50_us <= snap.p95_us && snap.p95_us <= snap.p99_us);
+    server.shutdown();
+}
+
+#[test]
+fn priority_tiers_shed_the_low_tier_first() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0x7137);
+    let hi_inputs: Vec<Vec<f32>> = (0..6).map(|_| lstm_input(&mut rng)).collect();
+    let lo_inputs: Vec<Vec<f32>> = (0..6).map(|_| cnn_input(&mut rng)).collect();
+    // One worker, one chunk per request, lease discipline (cap 2):
+    // tier 0 bounces past 2 queued chunks, tier 3 past 8. The worker
+    // claims the tier-3 family first (priority-ordered claim) and sits
+    // in 50 ms device windows, so the tier-0 burst meets a full queue.
+    let cfg = ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        device_latency_us: 50_000,
+        overload: OverloadPolicy::Shed,
+        families: vec![policy("edge_lstm", 3, None), policy("edge_cnn", 0, None)],
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let hi_rxs: Vec<_> = hi_inputs
+        .iter()
+        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit hi"))
+        .collect();
+    let lo_rxs: Vec<_> = lo_inputs
+        .iter()
+        .map(|x| server.infer("edge_cnn", vec![x.clone()]).expect("submit lo"))
+        .collect();
+    let mut hi_shed = 0u64;
+    for rx in hi_rxs {
+        if rx.recv_timeout(TIMEOUT).expect("hi reply").is_err() {
+            hi_shed += 1;
+        }
+    }
+    let mut lo_shed = 0u64;
+    for rx in lo_rxs {
+        if rx.recv_timeout(TIMEOUT).expect("lo reply").is_err() {
+            lo_shed += 1;
+        }
+    }
+    assert_eq!(hi_shed, 0, "6 chunks sit under the tier-3 cap of 8 — nothing sheds");
+    assert!(lo_shed >= 1, "the tier-0 burst exceeds its cap of 2 and must shed");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_shed, lo_shed, "all shedding landed on the low tier");
+    assert_eq!(snap.completed + snap.jobs_shed, 12);
+    assert_eq!(snap.fifo_violations, 0);
+    assert_eq!(snap.failed, 0);
+    server.shutdown();
+}
+
+#[test]
+fn expired_chunks_drop_at_dequeue_and_mixed_chunks_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xE817);
+    // One worker, pairs per chunk, 50 ms device windows, shed mode.
+    let cfg = ServerConfig {
+        workers: 1,
+        max_batch: 2,
+        batch_timeout_us: 20_000,
+        device_latency_us: 50_000,
+        overload: OverloadPolicy::Shed,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+
+    // Phase 1 — a MIXED chunk must execute. Six deadline-free cnn
+    // blockers (three 50 ms chunks) occupy the worker; then one
+    // deadline-free + one 60 ms-deadline lstm request coalesce into a
+    // single chunk. Its deadline member blows while queued, but the
+    // deadline-free member keeps the chunk alive: both are served, and
+    // the late one counts a deadline miss — not an expiry.
+    let blockers: Vec<_> = (0..6)
+        .map(|_| {
+            let x = cnn_input(&mut rng);
+            server.infer("edge_cnn", vec![x]).expect("blocker")
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    let free = server.infer("edge_lstm", vec![lstm_input(&mut rng)]).expect("free member");
+    let dead = server
+        .infer_with_deadline(
+            "edge_lstm",
+            vec![lstm_input(&mut rng)],
+            Some(Duration::from_millis(60)),
+        )
+        .expect("60 ms budget passes admission on an empty lstm queue");
+    for rx in blockers {
+        rx.recv_timeout(TIMEOUT).expect("recv").expect("blocker completes");
+    }
+    free.recv_timeout(TIMEOUT).expect("recv").expect("deadline-free member served");
+    dead.recv_timeout(TIMEOUT).expect("recv").expect("mixed chunk executes its late member");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_expired, 0, "a mixed chunk never expires");
+    assert_eq!(snap.deadline_misses, 1, "the late member is a miss, not an expiry");
+
+    // Phase 2 — an ALL-EXPIRED chunk must drop at dequeue. Four fresh
+    // blockers (two 50 ms chunks) delay the worker ~100 ms; two lstm
+    // requests that BOTH carry 60 ms budgets pass admission (their own
+    // queue is empty — cross-family wait is the model's blind spot)
+    // and then blow their deadlines while queued: the whole chunk is
+    // refused before execution.
+    let blockers: Vec<_> = (0..4)
+        .map(|_| {
+            let x = cnn_input(&mut rng);
+            server.infer("edge_cnn", vec![x]).expect("blocker")
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    let doomed: Vec<_> = (0..2)
+        .map(|_| {
+            server
+                .infer_with_deadline(
+                    "edge_lstm",
+                    vec![lstm_input(&mut rng)],
+                    Some(Duration::from_millis(60)),
+                )
+                .expect("passes admission: the lstm queue itself is empty")
+        })
+        .collect();
+    for rx in blockers {
+        rx.recv_timeout(TIMEOUT).expect("recv").expect("blocker completes");
+    }
+    for (i, rx) in doomed.into_iter().enumerate() {
+        let err = rx
+            .recv_timeout(TIMEOUT)
+            .expect("expired requests still get a terminal reply")
+            .expect_err("an all-expired chunk must not deliver outputs");
+        assert!(
+            format!("{err:#}").contains("deadline expired"),
+            "request {i}: expected the expiry error, got {err:#}"
+        );
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_expired, 2, "both members of the all-expired chunk counted");
+    assert_eq!(snap.deadline_misses, 1, "no new misses: expired work is never delivered");
+    assert_eq!(snap.failed, 0, "expiry is overload protection, not failure");
+    assert_eq!(snap.completed, 12, "every deadline-free request was served");
+    assert_eq!(snap.fifo_violations, 0, "dropped chunks still advance the cursor");
+    server.shutdown();
+}
+
+/// Write a synthetic two-family manifest (shared input shape, so a
+/// request can be re-served verbatim by the large family) once per
+/// process: `tiny` (12 → 6) escalates to `big` (12 → 20).
+fn escalation_manifest_dir() -> &'static str {
+    static DIR: OnceLock<String> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mensa_overload_shed_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create manifest dir");
+        let mut m = String::from("# Generated by overload_shed.rs — escalation pair.\n");
+        for (fam, d_out) in [("tiny", 6usize), ("big", 20usize)] {
+            for b in [1usize, 4] {
+                let _ = write!(
+                    m,
+                    "\n[[artifact]]\nname = \"{fam}_b{b}\"\nfile = \"{fam}_b{b}.hlo.txt\"\n\
+                     num_inputs = 1\ninput0_shape = \"{b}x12\"\ninput0_batch_axis = 0\n\
+                     output_shape = \"{b}x{d_out}\"\noutput_batch_axis = 0\n\
+                     sha256 = \"referencebackend\"\n"
+                );
+            }
+        }
+        std::fs::write(dir.join("manifest.toml"), m).expect("write manifest");
+        dir.to_str().expect("utf8 temp dir").to_string()
+    })
+}
+
+#[test]
+fn escalation_reserves_low_confidence_requests_on_the_large_family() {
+    let dir = escalation_manifest_dir();
+    let inputs: Vec<Vec<f32>> = (0..8)
+        .map(|r| (0..12).map(|i| (((i * 31 + r * 7 + 3) % 101) as f32 / 101.0) - 0.5).collect())
+        .collect();
+    // Solo references for both families (no escalation configured).
+    let solo_server = Server::start(dir, ServerConfig::default()).expect("solo");
+    let solo_tiny: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| solo_server.infer_blocking("tiny", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    let solo_big: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| solo_server.infer_blocking("big", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    solo_server.shutdown();
+
+    // Threshold 1.0: every dense output scores below it, so every
+    // `tiny` request escalates — responses must be `big`'s outputs,
+    // bit-exact, delivered on the original reply channels.
+    let cfg = ServerConfig {
+        families: vec![policy("tiny", 0, Some("big"))],
+        escalation_threshold: 1.0,
+        ..Default::default()
+    };
+    let server = Server::start(dir, cfg).expect("start");
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| server.infer("tiny", vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
+        assert_eq!(resp.output.len(), 20, "request {i}: served by the large family");
+        assert_eq!(resp.output, solo_big[i], "request {i}: bit-exact against solo big");
+    }
+    let mid = server.metrics();
+    assert_eq!(mid.escalations, 8, "every request took the cascade");
+    assert_eq!(mid.completed, 8, "completion recorded once, at final delivery");
+    assert_eq!(mid.failed, 0);
+    assert_eq!(mid.fifo_violations, 0);
+
+    // An exhausted budget must NOT escalate: a better answer that is
+    // guaranteed late loses to the small result now. (Block mode, so
+    // the hopeless deadline is neither admission-shed nor expired.)
+    let rx = server
+        .infer_with_deadline("tiny", vec![inputs[0].clone()], Some(Duration::from_nanos(1)))
+        .expect("submit");
+    let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("small fallback delivers");
+    assert_eq!(resp.output, solo_tiny[0], "budget-exhausted request keeps the small result");
+    let snap = server.metrics();
+    assert_eq!(snap.escalations, 8, "no escalation on an exhausted budget");
+    assert_eq!(snap.deadline_misses, 1, "the late small result is still a miss");
+    server.shutdown();
+
+    // Threshold 0.0 is the off switch: nothing escalates.
+    let cfg = ServerConfig {
+        families: vec![policy("tiny", 0, Some("big"))],
+        escalation_threshold: 0.0,
+        ..Default::default()
+    };
+    let server = Server::start(dir, cfg).expect("start");
+    let resp = server
+        .infer_blocking("tiny", vec![inputs[0].clone()], TIMEOUT)
+        .expect("ok");
+    assert_eq!(resp.output, solo_tiny[0], "threshold 0 serves the small family");
+    assert_eq!(server.metrics().escalations, 0);
+    server.shutdown();
+}
+
+#[test]
+fn escalation_target_must_be_loaded() {
+    let dir = escalation_manifest_dir();
+    let cfg = ServerConfig {
+        families: vec![policy("tiny", 0, Some("missing"))],
+        ..Default::default()
+    };
+    let err = Server::start(dir, cfg).expect_err("unloaded escalation target must be rejected");
+    assert!(format!("{err:#}").contains("missing"), "{err:#}");
+    let cfg = ServerConfig {
+        families: vec![policy("ghost", 1, None)],
+        ..Default::default()
+    };
+    let err = Server::start(dir, cfg).expect_err("[[family]] must name a loaded family");
+    assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+}
+
+#[test]
+fn shed_ladder_composes_with_a_device_roster() {
+    let Some(dir) = artifacts_dir() else { return };
+    let families: Vec<String> =
+        vec!["edge_cnn".into(), "edge_lstm".into(), "joint".into()];
+    // Calibrate the roster so its slowest modeled (class, family)
+    // window is ~20 ms — test-friendly absolute scale, heterogeneity
+    // (and with it the placement) preserved.
+    let probe = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: 1.0 },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 1, latency_scale: 1.0 },
+    ];
+    let profiles = device::build_profiles(&probe, &families, Duration::ZERO);
+    let max_base = profiles
+        .iter()
+        .flat_map(|p| families.iter().map(move |f| p.base_latency_s(f)))
+        .fold(0.0f64, f64::max);
+    let scale = Duration::from_millis(20).as_secs_f64() / max_base.max(1e-12);
+    let roster: Vec<DeviceClassSpec> = probe
+        .into_iter()
+        .map(|mut spec| {
+            spec.latency_scale = scale;
+            spec
+        })
+        .collect();
+
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        work_stealing: true,
+        devices: roster,
+        overload: OverloadPolicy::Shed,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    // Admission control prices chunks with the *placed* class's
+    // modeled window — microseconds of budget cannot buy one.
+    let mut rng = Rng::new(0x0575);
+    let err = server
+        .infer_with_deadline("edge_cnn", vec![cnn_input(&mut rng)], Some(Duration::from_micros(1)))
+        .expect_err("1 µs budget must shed at admission under a roster");
+    assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
+    // A deadline-free burst sheds at enqueue past the bounded queue —
+    // never fails, never hangs, FIFO intact.
+    let rxs: Vec<_> = (0..16)
+        .map(|_| {
+            let x = cnn_input(&mut rng);
+            server.infer("edge_cnn", vec![x]).expect("submit")
+        })
+        .collect();
+    let mut served = 0u64;
+    for rx in rxs {
+        if rx.recv_timeout(TIMEOUT).expect("terminal reply").is_ok() {
+            served += 1;
+        }
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.completed, served);
+    assert_eq!(snap.completed + snap.jobs_shed, 16 + 1, "conservation incl. the admission shed");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.fifo_violations, 0);
+    server.shutdown();
+}
