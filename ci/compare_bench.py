@@ -58,6 +58,13 @@ TRACKED = {
     # always-large, plus the escalated fraction (pinned near 0.5 by
     # the bench's median-confidence threshold).
     "hier_escalation": ("speedup", "escalated_frac"),
+    # Fault tolerance: goodput retained under a one-class blackout
+    # with retry + breaker failover armed (the backup class can absorb
+    # the paced load by construction), its ratio over the
+    # recovery-disabled arm (saturated at ~25x by the bench), and the
+    # failover arm's absolute goodput. Arrival-paced, so all three are
+    # stable across runner generations.
+    "degraded_failover": ("retention", "retention_gain", "failover_rps"),
     "gemm_dense": ("speedup",),
     "kernel_dense": ("speedup",),
     # Panel-prepacked weight layout vs row-major (scalar kernels both
@@ -104,6 +111,14 @@ ABS_FLOORS = {
     # variant at all (the bench pins it near 0.5 by construction).
     ("hier_escalation", "speedup"): 1.05,
     ("hier_escalation", "escalated_frac"): 0.05,
+    # Failover that retains less than half the healthy goodput under a
+    # one-class blackout is a broken feature: the bench paces arrivals
+    # so the backup class alone can absorb the load, so the retention
+    # ceiling is ~1.0 and anything near the relative band's floor
+    # means requests are failing or stalling. A gain at (or below)
+    # parity means armed recovery serves no better than none at all.
+    ("degraded_failover", "retention"): 0.5,
+    ("degraded_failover", "retention_gain"): 1.5,
 }
 
 
@@ -234,6 +249,25 @@ def self_test():
     _, failures = check(
         {"overload_goodput": {"slo_gain": 2.0, "shed_slo": 0.15}}, slo_base)
     assert not failures, f"in-band slo metrics must pass, got {failures}"
+
+    # Degraded-failover floors: retention collapsing below 0.5 must
+    # fail even inside the loose relative band, and a retention gain
+    # at parity (failover no better than bare) must fail likewise.
+    fo_base = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {"degraded_failover": {"retention": 0.95, "retention_gain": 20.0}},
+    }
+    _, failures = check(
+        {"degraded_failover": {"retention": 0.4, "retention_gain": 18.0}}, fo_base)
+    assert any("degraded_failover.retention:" in f for f in failures), (
+        f"sub-0.5 retention must trip the absolute floor, got {failures}")
+    _, failures = check(
+        {"degraded_failover": {"retention": 0.9, "retention_gain": 1.0}}, fo_base)
+    assert any("degraded_failover.retention_gain" in f for f in failures), (
+        f"gain parity must trip the absolute floor, got {failures}")
+    _, failures = check(
+        {"degraded_failover": {"retention": 0.8, "retention_gain": 15.0}}, fo_base)
+    assert not failures, f"healthy failover metrics must pass, got {failures}"
 
     # write_baseline round-trips through check.
     regen = write_baseline(healthy, "self-test")

@@ -71,6 +71,17 @@
 //!   the exact bench inputs, so ~half the requests escalate by
 //!   construction; the small pass costs ~1/16th of the large one, so
 //!   hierarchical serving pays roughly half the MACs.
+//! * `degraded_failover` — PR 8's fault-tolerance A/B/C: one family on
+//!   a calibrated two-class `[[device]]` roster, arrivals paced at
+//!   ~70% of the BACKUP class's service capacity. Healthy roster vs
+//!   "placed class blacked out, budget-aware retry + circuit-breaker
+//!   failover armed" vs the same blackout with recovery disabled
+//!   (`retry_max = 0`, `breaker_threshold = 0`). The breaker re-places
+//!   the family on the backup class, so the failover arm must RETAIN
+//!   most of the healthy goodput (`retention`); the bare arm fails
+//!   every placed request, so `retention_gain` (failover retention
+//!   over bare retention, saturated at ~25x) shows what the recovery
+//!   ladder buys.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
 //! (real `edge_cnn_b8`), per-sample vs batched GEMM (synthetic
@@ -93,7 +104,9 @@ use mensa::bench_harness::timer;
 use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
 use mensa::coordinator::{device, worker_for_family, Server};
 use mensa::model::zoo;
-use mensa::runtime::{simd_kernel_available, ExecScratch, KernelKind, Runtime, RuntimeOptions};
+use mensa::runtime::{
+    simd_kernel_available, ExecScratch, FaultPlan, KernelKind, Runtime, RuntimeOptions,
+};
 use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
 use mensa::sim::Simulator;
 use mensa::util::rng::Rng;
@@ -121,6 +134,15 @@ const OVERLOAD_DEADLINE_US: u64 = 6_000;
 const ESC_REQUESTS: usize = 256;
 const ESC_SMALL_OUT: usize = 64;
 const ESC_LARGE_OUT: usize = 1024;
+/// Degraded-failover A/B/C: arrivals are paced (one
+/// `FAILOVER_BURST`-sized burst per `FAILOVER_BURST` ms ≈ 1 req/ms)
+/// and the roster's shared `latency_scale` is calibrated so the
+/// SLOWEST class serves the load family in `FAILOVER_DEVICE_US` — the
+/// backup class alone sustains the offered load at ~70% utilization,
+/// so goodput retention measures recovery, not capacity starvation.
+const FAILOVER_REQUESTS: usize = 240;
+const FAILOVER_BURST: usize = 12;
+const FAILOVER_DEVICE_US: u64 = 700;
 
 fn main() {
     timer::header("hotpath_micro");
@@ -439,10 +461,42 @@ impl EscalationResult {
     }
 }
 
+/// The fault-tolerance A/B/C (the `degraded_failover` case).
+struct FailoverResult {
+    /// OK responses per second with the roster healthy.
+    healthy_rps: f64,
+    /// ... with the placed class blacked out, retry + breaker armed.
+    failover_rps: f64,
+    /// ... under the same blackout with recovery disabled
+    /// (`retry_max = 0`, `breaker_threshold = 0`).
+    no_failover_rps: f64,
+}
+
+impl FailoverResult {
+    /// Goodput fraction failover retains under the blackout.
+    fn retention(&self) -> f64 {
+        self.failover_rps / self.healthy_rps.max(1e-9)
+    }
+
+    fn no_failover_retention(&self) -> f64 {
+        self.no_failover_rps / self.healthy_rps.max(1e-9)
+    }
+
+    /// Failover retention over bare retention. The bare arm loses
+    /// every placed request (its retention is exactly 0 — blackout is
+    /// absolute and spill is parked out of reach), so the denominator
+    /// is floored at 4%: the reported gain saturates at ~25x instead
+    /// of diverging, keeping the CI regression band meaningful.
+    fn retention_gain(&self) -> f64 {
+        self.retention() / self.no_failover_retention().max(0.04)
+    }
+}
+
 struct ServingResult {
     cases: Vec<CaseResult>,
     overload: OverloadResult,
     escalation: EscalationResult,
+    failover: FailoverResult,
 }
 
 /// Family names that all hash to worker 0 of a `BENCH_WORKERS` pool —
@@ -614,12 +668,17 @@ fn run_case_with(
         // Large vs the emulated windows: placement holds while the
         // preferred class keeps up, spill only rescues a stall.
         spill_after_us: 20_000,
-        // The classic cases serve without deadlines or tiers; the
-        // overload / escalation cases build their own configs.
+        // The classic cases serve without deadlines, tiers, or fault
+        // tolerance; the overload / escalation / failover cases build
+        // their own configs.
         deadline_us: 0,
         overload: OverloadPolicy::Block,
         families: Vec::new(),
         escalation_threshold: 0.35,
+        retry_max: 0,
+        breaker_threshold: 0,
+        breaker_cooldown_us: 250_000,
+        fault: None,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
@@ -749,6 +808,10 @@ fn run_overload_arm(dir: &str, family: &str, shed: bool) -> OverloadArm {
         overload,
         families: Vec::new(),
         escalation_threshold: 0.35,
+        retry_max: 0,
+        breaker_threshold: 0,
+        breaker_cooldown_us: 250_000,
+        fault: None,
     };
     let server = Server::start(dir, cfg).expect("bench server start");
     let budget = Duration::from_micros(OVERLOAD_DEADLINE_US);
@@ -800,6 +863,116 @@ fn run_overload_arm(dir: &str, family: &str, shed: bool) -> OverloadArm {
         slo: in_time as f64 / OVERLOAD_REQUESTS as f64,
         goodput_rps: in_time as f64 / wall,
     }
+}
+
+/// Calibrated two-class roster for the `degraded_failover` A/B/C,
+/// plus the load family's placed (primary) class label. The shared
+/// `latency_scale` pins the SLOWEST class's batch-1 window for the
+/// family at `FAILOVER_DEVICE_US`, so the backup class can always
+/// absorb the paced offered load on its own.
+fn failover_roster(family: &str) -> (Vec<DeviceClassSpec>, String) {
+    let probe = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: 1.0 },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 1, latency_scale: 1.0 },
+    ];
+    let fams = vec![family.to_string()];
+    let profiles = device::build_profiles(&probe, &fams, Duration::ZERO);
+    let slowest = profiles.iter().map(|p| p.base_latency_s(family)).fold(0.0f64, f64::max);
+    let scale = (FAILOVER_DEVICE_US as f64 * 1e-6) / slowest.max(1e-12);
+    let specs: Vec<DeviceClassSpec> =
+        probe.into_iter().map(|s| DeviceClassSpec { latency_scale: scale, ..s }).collect();
+    let profiles = device::build_profiles(&specs, &fams, Duration::ZERO);
+    let ranking = device::placement_ranking(&profiles, &fams);
+    let primary = profiles[ranking[family][0]].class().to_string();
+    (specs, primary)
+}
+
+/// Run one `degraded_failover` arm: `FAILOVER_REQUESTS` single-family
+/// requests paced in bursts at ~70% of the backup class's service
+/// capacity, so every arm's wall clock is arrival-dominated and the
+/// goodput ratios reduce to completed fractions (stable across
+/// hosts). Returns OK responses per second of wall clock.
+fn run_failover_arm(
+    dir: &str,
+    family: &str,
+    devices: Vec<DeviceClassSpec>,
+    fault: Option<FaultPlan>,
+    failover: bool,
+) -> f64 {
+    let degraded = fault.is_some();
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_timeout_us: 200,
+        queue_depth: 2 * FAILOVER_REQUESTS,
+        work_stealing: true,
+        batcher_shards: 1,
+        naive_kernels: false,
+        kernel: KernelKind::Auto,
+        packed_weights: true,
+        device_latency_us: 0,
+        batched_gemm: true,
+        reorder_depth: 0,
+        reorder_depth_max: 0,
+        chunk_level: true,
+        panic_on_poison: false,
+        devices,
+        transfer_us: 50,
+        // Parked far out of reach: spill stealing must never quietly
+        // rescue (or re-poison) a placement across classes mid-arm —
+        // recovery has to come from the breaker re-placement, or not
+        // at all.
+        spill_after_us: 10_000_000,
+        deadline_us: 0,
+        overload: OverloadPolicy::Block,
+        families: Vec::new(),
+        escalation_threshold: 0.35,
+        retry_max: if failover { 10 } else { 0 },
+        breaker_threshold: if failover { 2 } else { 0 },
+        // One trip decides the arm: no half-open probe mid-run.
+        breaker_cooldown_us: 3_600_000_000,
+        fault,
+    };
+    let server = Server::start(dir, cfg).expect("bench server start");
+    let input: Vec<f32> = (0..BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(FAILOVER_REQUESTS);
+    let mut k = 0;
+    while k < FAILOVER_REQUESTS {
+        let n = FAILOVER_BURST.min(FAILOVER_REQUESTS - k);
+        for _ in 0..n {
+            rxs.push(submit_with_retry(&server, family, &input));
+        }
+        k += n;
+        std::thread::sleep(Duration::from_micros(FAILOVER_BURST as u64 * 1_000));
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(120)).expect("bench recv").is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
+    assert_eq!(
+        snap.completed + snap.failed,
+        FAILOVER_REQUESTS as u64,
+        "every offered request must terminate as completed or failed"
+    );
+    if !degraded {
+        assert_eq!(snap.failed, 0, "the healthy arm must not fail requests");
+        assert_eq!(snap.breaker_trips, 0, "the healthy arm must not trip the breaker");
+    } else if failover {
+        assert_eq!(snap.failed, 0, "failover must recover every blacked-out request");
+        assert!(snap.breaker_trips >= 1, "the blacked-out class must trip its breaker");
+        assert!(snap.failovers >= 1, "the placed family must fail over");
+        assert!(snap.jobs_retried >= 1, "recovery must ride the retry path");
+    } else {
+        assert!(snap.failed > 0, "no-failover under blackout must lose requests");
+    }
+    server.shutdown();
+    ok as f64 / wall
 }
 
 /// Client-side mirror of the server's confidence score (peak share of
@@ -896,6 +1069,10 @@ fn escalation_config(threshold: f64, hierarchical: bool) -> ServerConfig {
             Vec::new()
         },
         escalation_threshold: threshold,
+        retry_max: 0,
+        breaker_threshold: 0,
+        breaker_cooldown_us: 250_000,
+        fault: None,
     }
 }
 
@@ -1160,6 +1337,36 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         threshold,
     );
 
+    // Fault-tolerance comparison (PR 8 tentpole): one family on a
+    // calibrated two-class roster, paced at ~70% of the BACKUP
+    // class's capacity. Healthy; the placed class blacked out with
+    // retry + circuit-breaker failover armed; the same blackout with
+    // recovery disabled. Arrivals are paced, so the goodput ratios
+    // reduce to completed fractions: the breaker re-places the family
+    // on the backup class, which absorbs the load, while the bare arm
+    // fails every placed request.
+    let (fo_roster, fo_primary) = failover_roster(&families[0]);
+    let blackout = FaultPlan {
+        seed: 0x0FA1,
+        blackout_class: Some(fo_primary.clone()),
+        ..FaultPlan::default()
+    };
+    let healthy_rps = run_failover_arm(dir, &families[0], fo_roster.clone(), None, true);
+    let failover_rps =
+        run_failover_arm(dir, &families[0], fo_roster.clone(), Some(blackout.clone()), true);
+    let no_failover_rps = run_failover_arm(dir, &families[0], fo_roster, Some(blackout), false);
+    let failover = FailoverResult { healthy_rps, failover_rps, no_failover_rps };
+    println!(
+        "{:<24} healthy {:>6.0} req/s | blackout+failover {:>6.0} req/s | blackout bare \
+         {:>6.0} req/s | retention {:.3} | gain {:.1}x (blacked class: {fo_primary})",
+        "degraded_failover",
+        failover.healthy_rps,
+        failover.failover_rps,
+        failover.no_failover_rps,
+        failover.retention(),
+        failover.retention_gain(),
+    );
+
     // Acceptance bars (printed, recorded in BENCH_serving.json).
     let headline = &cases[0];
     if headline.speedup() >= 2.0 {
@@ -1260,7 +1467,22 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
             100.0 * escalation.escalated_frac
         );
     }
-    ServingResult { cases, overload, escalation }
+    if failover.retention() >= 0.5 && failover.retention_gain() > 1.0 {
+        println!(
+            "PASS: breaker failover retains {:.0}% of healthy goodput under a class blackout \
+             (bare arm: {:.0}%)",
+            100.0 * failover.retention(),
+            100.0 * failover.no_failover_retention(),
+        );
+    } else {
+        println!(
+            "WARN: failover goodput retention {:.2} (gain {:.1}x) — expected >= 0.5 with the \
+             backup class absorbing the load",
+            failover.retention(),
+            failover.retention_gain(),
+        );
+    }
+    ServingResult { cases, overload, escalation, failover }
 }
 
 fn push_case(cases: &mut Vec<CaseResult>, case: CaseResult) {
@@ -1325,6 +1547,17 @@ fn write_bench_json(
         e.speedup(),
         e.escalated_frac,
         e.mean_batch
+    );
+    let fo = &serving.failover;
+    let _ = write!(
+        json,
+        "  \"degraded_failover\": {{\"healthy_rps\": {:.1}, \"failover_rps\": {:.1}, \
+         \"no_failover_rps\": {:.1}, \"retention\": {:.4}, \"retention_gain\": {:.3}}},\n",
+        fo.healthy_rps,
+        fo.failover_rps,
+        fo.no_failover_rps,
+        fo.retention(),
+        fo.retention_gain()
     );
     let _ = write!(
         json,

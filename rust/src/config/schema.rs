@@ -22,7 +22,7 @@
 use super::toml_lite::{self, Table, Value};
 use crate::accel::configs::MensaSystem;
 use crate::accel::{AccelConfig, DataflowKind, MemoryAttachment};
-use crate::runtime::KernelKind;
+use crate::runtime::{FaultPlan, KernelKind};
 use crate::util::KB;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -319,6 +319,66 @@ fn parse_family(t: &Table) -> Result<FamilyPolicy> {
     Ok(FamilyPolicy { name, priority, escalate_to })
 }
 
+fn parse_fault(t: &Table) -> Result<FaultPlan> {
+    reject_unknown_keys(
+        t,
+        &[
+            "seed",
+            "exec_error_rate",
+            "panic_rate",
+            "stall_rate",
+            "stall_us",
+            "death_rate",
+            "max_deaths",
+            "brownout_class",
+            "brownout_scale",
+            "blackout_class",
+        ],
+        "[fault]",
+    )?;
+    let mut plan = FaultPlan::default();
+    let rate = |key: &str| -> Result<Option<f64>> {
+        match t.get(key) {
+            Some(v) => Ok(Some(
+                v.as_f64().ok_or_else(|| anyhow!("fault: non-numeric `{key}`"))?,
+            )),
+            None => Ok(None),
+        }
+    };
+    if let Some(v) = t.get("seed").and_then(Value::as_int) {
+        plan.seed = v.max(0) as u64;
+    }
+    if let Some(v) = rate("exec_error_rate")? {
+        plan.exec_error_rate = v;
+    }
+    if let Some(v) = rate("panic_rate")? {
+        plan.panic_rate = v;
+    }
+    if let Some(v) = rate("stall_rate")? {
+        plan.stall_rate = v;
+    }
+    if let Some(v) = t.get("stall_us").and_then(Value::as_int) {
+        plan.stall_us = v.max(0) as u64;
+    }
+    if let Some(v) = rate("death_rate")? {
+        plan.death_rate = v;
+    }
+    if let Some(v) = t.get("max_deaths").and_then(Value::as_int) {
+        plan.max_deaths = v.max(0) as u64;
+    }
+    if let Some(v) = t.get("brownout_class").and_then(Value::as_str) {
+        plan.brownout_class = Some(v.to_string());
+    }
+    if let Some(v) = rate("brownout_scale")? {
+        plan.brownout_scale = v;
+    }
+    if let Some(v) = t.get("blackout_class").and_then(Value::as_str) {
+        plan.blackout_class = Some(v.to_string());
+    }
+    plan.validate()?;
+    Ok(plan)
+}
+
 /// Serving-path configuration for the coordinator (see
 /// `configs/server.toml`).
 #[derive(Debug, Clone)]
@@ -447,6 +507,31 @@ pub struct ServerConfig {
     /// absolute mass) falls below this value. 0 never escalates; 1
     /// escalates everything with a non-degenerate output.
     pub escalation_threshold: f64,
+    /// Bounded retry budget per chunk: a chunk failing with a
+    /// *retryable* error (an injected transient fault or a caught
+    /// kernel panic) is re-enqueued at the front of its family queue
+    /// up to this many times before its requests error. 0 (the
+    /// default) disables retry — failures surface immediately, the
+    /// pre-fault-tolerance behavior. Retries are deadline-aware: a
+    /// chunk whose members have all expired is never re-enqueued.
+    /// Requires `chunk_level = true` (the default).
+    pub retry_max: u32,
+    /// Circuit-breaker trip threshold: consecutive unhealthy chunk
+    /// outcomes (retryable failures, or service windows inflated far
+    /// beyond the class's modeled window — brownout) on one device
+    /// class before its placed families fail over to their next-best
+    /// class in the modeled-latency ranking. 0 disables the breaker.
+    /// Only meaningful with a `[[device]]` roster.
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker stays open, microseconds. After the
+    /// cooldown the breaker half-opens: placements revert so a probe
+    /// chunk reaches the class again — a healthy probe closes the
+    /// breaker, an unhealthy one re-trips it immediately.
+    pub breaker_cooldown_us: u64,
+    /// Deterministic fault-injection plan (`[fault]` table), merged
+    /// with the `MENSA_FAULT` env spec at server start (env wins per
+    /// key). `None`/inert plans inject nothing and cost nothing.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -474,6 +559,10 @@ impl Default for ServerConfig {
             overload: OverloadPolicy::Block,
             families: Vec::new(),
             escalation_threshold: 0.35,
+            retry_max: 0,
+            breaker_threshold: 3,
+            breaker_cooldown_us: 250_000,
+            fault: None,
         }
     }
 }
@@ -507,6 +596,9 @@ impl ServerConfig {
                     "deadline_us",
                     "overload",
                     "escalation_threshold",
+                    "retry_max",
+                    "breaker_threshold",
+                    "breaker_cooldown_us",
                 ],
                 "[server]",
             )?;
@@ -577,6 +669,18 @@ impl ServerConfig {
                 }
                 cfg.escalation_threshold = v;
             }
+            if let Some(v) = t.get("retry_max").and_then(Value::as_int) {
+                cfg.retry_max = v.max(0).min(u32::MAX as i64) as u32;
+            }
+            if let Some(v) = t.get("breaker_threshold").and_then(Value::as_int) {
+                cfg.breaker_threshold = v.max(0).min(u32::MAX as i64) as u32;
+            }
+            if let Some(v) = t.get("breaker_cooldown_us").and_then(Value::as_int) {
+                cfg.breaker_cooldown_us = v.max(0) as u64;
+            }
+        }
+        if let Some(t) = doc.tables.get("fault") {
+            cfg.fault = Some(parse_fault(t).context("parsing [fault]")?);
         }
         if let Some(device_tables) = doc.arrays.get("device") {
             for dt in device_tables {
@@ -854,6 +958,47 @@ memory = "hbm_internal"
         let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\nescalate_to = \"a\"\n")
             .unwrap_err();
         assert!(format!("{err:#}").contains("different family"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_and_retry_knobs_parse_with_defaults() {
+        let d = ServerConfig::default();
+        assert_eq!(d.retry_max, 0, "retry is opt-in");
+        assert_eq!(d.breaker_threshold, 3);
+        assert_eq!(d.breaker_cooldown_us, 250_000);
+        assert!(d.fault.is_none(), "no fault plan by default");
+        let cfg = ServerConfig::from_toml(
+            "[server]\nretry_max = 5\nbreaker_threshold = 2\nbreaker_cooldown_us = 9000\n\
+             \n[fault]\nseed = 42\nexec_error_rate = 0.25\nstall_rate = 0.1\nstall_us = 80\n\
+             blackout_class = \"pascal\"\nbrownout_class = \"pavlov\"\nbrownout_scale = 16.0\n\
+             death_rate = 0.5\nmax_deaths = 2\npanic_rate = 0.05\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.retry_max, 5);
+        assert_eq!(cfg.breaker_threshold, 2);
+        assert_eq!(cfg.breaker_cooldown_us, 9000);
+        let plan = cfg.fault.expect("[fault] table parsed");
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.exec_error_rate, 0.25);
+        assert_eq!(plan.stall_us, 80);
+        assert_eq!(plan.blackout_class.as_deref(), Some("pascal"));
+        assert_eq!(plan.brownout_class.as_deref(), Some("pavlov"));
+        assert_eq!(plan.brownout_scale, 16.0);
+        assert_eq!(plan.death_rate, 0.5);
+        assert_eq!(plan.max_deaths, 2);
+        assert!(plan.is_active());
+    }
+
+    #[test]
+    fn fault_knobs_reject_bad_values() {
+        // Rates are fractions.
+        let err = ServerConfig::from_toml("[fault]\nexec_error_rate = 1.5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("[0, 1]"), "{err:#}");
+        let err = ServerConfig::from_toml("[fault]\nbrownout_scale = 0.5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("brownout_scale"), "{err:#}");
+        // Typo'd fault keys error like every other table's.
+        let err = ServerConfig::from_toml("[fault]\nexec_error = 0.1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key `exec_error`"), "{err:#}");
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub struct BatchJob {
     /// path can count deadline misses — the chunk itself needs no
     /// aggregate deadline.
     pub requests: Vec<Request>,
+    /// How many times this chunk has already been executed and failed
+    /// with a *transient* error (the fault-tolerance retry counter).
+    /// The batcher always emits `0`; the executor's retry path
+    /// re-enqueues a bumped copy until `retry_max` is exhausted.
+    pub attempts: u32,
 }
 
 impl BatchJob {
@@ -264,7 +269,14 @@ impl Batcher {
         let mut rest = requests;
         loop {
             if rest.len() <= cap {
-                self.dispatch(BatchJob { family, seq, chunk, last: true, requests: rest });
+                self.dispatch(BatchJob {
+                    family,
+                    seq,
+                    chunk,
+                    last: true,
+                    requests: rest,
+                    attempts: 0,
+                });
                 return;
             }
             let tail = rest.split_off(cap);
@@ -274,6 +286,7 @@ impl Batcher {
                 chunk,
                 last: false,
                 requests: rest,
+                attempts: 0,
             });
             rest = tail;
             chunk += 1;

@@ -204,6 +204,32 @@ pub fn placement(profiles: &[DeviceProfile], families: &[String]) -> HashMap<Str
         .collect()
 }
 
+/// The full per-family failover ranking behind [`placement`]: every
+/// class index sorted ascending by modeled batch-1 latency (ties by
+/// index, so `ranking[f][0] == placement[f]`). The circuit breaker
+/// walks this list when a class degrades — the family fails over to
+/// the first healthy class in its own ranking, not to a global
+/// second-best — and falls back to it in order as breakers re-open.
+pub fn placement_ranking(
+    profiles: &[DeviceProfile],
+    families: &[String],
+) -> HashMap<String, Vec<usize>> {
+    families
+        .iter()
+        .map(|family| {
+            let mut order: Vec<usize> = (0..profiles.len()).collect();
+            order.sort_by(|&a, &b| {
+                profiles[a]
+                    .base_latency_s(family)
+                    .partial_cmp(&profiles[b].base_latency_s(family))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            (family.clone(), order)
+        })
+        .collect()
+}
+
 /// A device-class execution backend: the shared reference [`Runtime`]
 /// (numerics, variant index, chunk capacities — bit-identical across
 /// classes) wrapped with one class's emulated timing profile. One
@@ -406,6 +432,34 @@ mod tests {
         // the Mensa placement premise.
         let distinct: std::collections::HashSet<usize> = map.values().copied().collect();
         assert!(distinct.len() >= 2, "all families prefer one class: {map:?}");
+    }
+
+    #[test]
+    fn ranking_is_total_and_agrees_with_placement() {
+        let families = serving_families();
+        let profiles = build_profiles(
+            &[
+                spec(DeviceClass::Pascal, 1.0),
+                spec(DeviceClass::Pavlov, 1.0),
+                spec(DeviceClass::Jacquard, 1.0),
+            ],
+            &families,
+            Duration::ZERO,
+        );
+        let map = placement(&profiles, &families);
+        let ranking = placement_ranking(&profiles, &families);
+        for f in &families {
+            let order = &ranking[f];
+            assert_eq!(order.len(), profiles.len(), "{f}: ranking must cover every class");
+            assert_eq!(order[0], map[f], "{f}: ranking head must be the placement");
+            for pair in order.windows(2) {
+                assert!(
+                    profiles[pair[0]].base_latency_s(f)
+                        <= profiles[pair[1]].base_latency_s(f),
+                    "{f}: ranking not ascending at {pair:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -141,6 +141,10 @@ struct Inner {
     cross_device_transfers: u64,
     last_seq_by_family: BTreeMap<String, (u64, u32)>,
     fifo_violations: u64,
+    workers_respawned: u64,
+    jobs_retried: u64,
+    breaker_trips: u64,
+    failovers: u64,
 }
 
 /// Thread-safe metrics registry shared by the server components.
@@ -227,6 +231,24 @@ pub struct Snapshot {
     /// reorder-depth width. Filled by `ServerHandle::metrics`; empty
     /// in bare `Metrics` snapshots.
     pub current_depth_by_family: Vec<(String, usize)>,
+    /// Executor worker threads the supervisor respawned after a death
+    /// (a panic escaping the per-chunk guard, or an injected death
+    /// from the fault plan). The dead worker's family lease is
+    /// released and re-queued before the replacement starts.
+    pub workers_respawned: u64,
+    /// Chunks re-enqueued after a retryable failure (injected
+    /// transient error or caught panic). Each retry spends one unit
+    /// of the chunk's bounded attempt budget (`retry_max`).
+    pub jobs_retried: u64,
+    /// Circuit-breaker trips: a device class's health score crossed
+    /// `breaker_threshold` consecutive failures, so its placed
+    /// families were re-placed on their next-best class until a
+    /// health probe closes the breaker.
+    pub breaker_trips: u64,
+    /// Family placements moved to another class by a breaker trip
+    /// (reverted placements don't count — this tracks degraded-mode
+    /// entries, not exits).
+    pub failovers: u64,
 }
 
 impl Metrics {
@@ -332,6 +354,26 @@ impl Metrics {
         self.inner.lock().expect("metrics lock").escalations += 1;
     }
 
+    /// Record a dead executor worker respawned by the supervisor.
+    pub fn record_respawn(&self) {
+        self.inner.lock().expect("metrics lock").workers_respawned += 1;
+    }
+
+    /// Record a chunk re-enqueued after a retryable failure.
+    pub fn record_retry(&self) {
+        self.inner.lock().expect("metrics lock").jobs_retried += 1;
+    }
+
+    /// Record a circuit-breaker trip on a device class.
+    pub fn record_breaker_trip(&self) {
+        self.inner.lock().expect("metrics lock").breaker_trips += 1;
+    }
+
+    /// Record one family placement failed over to another class.
+    pub fn record_failover(&self) {
+        self.inner.lock().expect("metrics lock").failovers += 1;
+    }
+
     /// Snapshot current values.
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().expect("metrics lock");
@@ -371,6 +413,10 @@ impl Metrics {
             fifo_violations: m.fifo_violations,
             depth_by_family: Vec::new(),
             current_depth_by_family: Vec::new(),
+            workers_respawned: m.workers_respawned,
+            jobs_retried: m.jobs_retried,
+            breaker_trips: m.breaker_trips,
+            failovers: m.failovers,
         }
     }
 }
@@ -513,6 +559,10 @@ mod tests {
         assert!(s.jobs_by_device.is_empty());
         assert_eq!(s.cross_device_transfers, 0);
         assert_eq!(s.fifo_violations, 0);
+        assert_eq!(s.workers_respawned, 0);
+        assert_eq!(s.jobs_retried, 0);
+        assert_eq!(s.breaker_trips, 0);
+        assert_eq!(s.failovers, 0);
     }
 
     #[test]
@@ -534,6 +584,26 @@ mod tests {
         // Overload counters are disjoint from execution failures.
         assert_eq!(s.failed, 0);
         assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn fault_tolerance_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_respawn();
+        m.record_retry();
+        m.record_retry();
+        m.record_breaker_trip();
+        m.record_failover();
+        m.record_failover();
+        m.record_failover();
+        let s = m.snapshot();
+        assert_eq!(s.workers_respawned, 1);
+        assert_eq!(s.jobs_retried, 2);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.failovers, 3);
+        // Recovery counters never masquerade as failures.
+        assert_eq!(s.failed, 0);
+        assert_eq!(s.jobs_panicked, 0);
     }
 
     #[test]

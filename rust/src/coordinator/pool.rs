@@ -241,6 +241,13 @@ struct PoolState {
     /// observability gauge behind `Snapshot::depth_by_family`.
     /// Maintained by the adaptive policy only.
     depth_hwm: BTreeMap<String, usize>,
+    /// Per-family placement overrides installed by the failover
+    /// controller while a device class's circuit breaker is open: the
+    /// family's effective class for dispatch, spill, and draining.
+    /// Absent = the topology placement. Ignored (and the wrong-class
+    /// drain ban with it) once the pool closes, so drain correctness
+    /// never depends on breaker state.
+    overrides: HashMap<String, usize>,
     /// Producers (batcher shards) still alive.
     producers: usize,
     closed: bool,
@@ -317,6 +324,7 @@ impl ExecutorPool {
                 ewma: HashMap::new(),
                 granted: HashMap::new(),
                 depth_hwm: BTreeMap::new(),
+                overrides: HashMap::new(),
                 producers,
                 closed: false,
             }),
@@ -453,15 +461,60 @@ impl ExecutorPool {
         FAMILY_INFLIGHT_CAP.max(self.family_concurrency().saturating_mul(2))
     }
 
-    /// Ready-queue index for a family: its preferred device class in
-    /// heterogeneous mode, the one shared queue when stealing, the
-    /// family's hash worker otherwise.
-    fn ready_queue(&self, family: &str) -> usize {
+    /// Ready-queue index for a family: its *effective* device class in
+    /// heterogeneous mode (the failover override when one is installed,
+    /// the topology placement otherwise), the one shared queue when
+    /// stealing, the family's hash worker otherwise.
+    fn ready_queue(&self, st: &PoolState, family: &str) -> usize {
         match &self.topology {
-            Some(t) => t.class_of(family),
+            Some(t) => Self::effective_class(st, t, family),
             None if self.stealing => 0,
             None => worker_for_family(family, self.workers),
         }
+    }
+
+    /// The device class `family` is currently dispatched to: the
+    /// failover override while its breaker is open, the topology
+    /// placement otherwise.
+    fn effective_class(st: &PoolState, t: &PoolTopology, family: &str) -> usize {
+        st.overrides.get(family).copied().unwrap_or_else(|| t.class_of(family))
+    }
+
+    /// Whether worker `w` must not drain `family` right now: a failover
+    /// override points the family at a class `w` is not bound to. Bans
+    /// lift when the pool closes — drain correctness never waits on
+    /// breaker state — and never apply to homogeneous pools.
+    fn banned(&self, st: &PoolState, family: &str, w: usize) -> bool {
+        if st.closed {
+            return false;
+        }
+        match (&self.topology, st.overrides.get(family)) {
+            (Some(t), Some(&cls)) => t.worker_class[w] != cls,
+            _ => false,
+        }
+    }
+
+    /// Install (`Some`) or clear (`None`) a failover placement override
+    /// for `family`. While installed, dispatch, spill, and draining all
+    /// treat `cls` as the family's class: ready entries land on that
+    /// class's queue and wrong-class workers release their holds
+    /// instead of popping chunks (see [`ExecutorPool::next_job`]).
+    /// No-op on homogeneous pools.
+    pub fn set_class_override(&self, family: &str, cls: Option<usize>) {
+        let Some(t) = &self.topology else { return };
+        let mut st = self.state.lock().expect("pool lock");
+        match cls {
+            Some(c) => {
+                assert!(c < t.classes, "override onto unknown class {c}");
+                st.overrides.insert(family.to_string(), c);
+            }
+            None => {
+                st.overrides.remove(family);
+            }
+        }
+        // Wake parked workers on both sides of the move: the new class
+        // must notice backlog it now owns, the old class must re-park.
+        self.work.notify_all();
     }
 
     /// High watermark of the per-family concurrency this pool has
@@ -582,7 +635,7 @@ impl ExecutorPool {
         // is never diluted by a momentarily idle wrong-class worker.
         let target = match &self.topology {
             Some(t) => {
-                let cls = t.class_of(&family);
+                let cls = Self::effective_class(st, t, &family);
                 match st.idle.iter().position(|&x| t.worker_class[x] == cls) {
                     Some(pos) => st.idle.remove(pos),
                     None => None,
@@ -604,11 +657,96 @@ impl ExecutorPool {
             }
             None => {
                 st.queues.get_mut(&family).expect("just inserted").ready_queued = true;
-                let rq = self.ready_queue(&family);
+                let rq = self.ready_queue(st, &family);
                 st.ready[rq].push_back((family, Instant::now()));
             }
         }
         self.work.notify_all();
+    }
+
+    /// Re-enqueue a chunk at the **front** of its family's queue — the
+    /// transient-failure retry path. Front placement preserves the
+    /// FIFO contract: the retried chunk is the oldest undelivered
+    /// `(seq, chunk)` key its family has, so it must be the next one
+    /// popped. Unlike [`ExecutorPool::push`] this never blocks on the
+    /// inflight cap (the chunk already held a slot a moment ago and
+    /// the retrying worker still holds the family) and is legal on a
+    /// closed pool (retries during drain are still drained: the caller
+    /// holds the family and keeps popping until empty).
+    pub fn requeue_front(&self, job: BatchJob) {
+        let mut guard = self.state.lock().expect("pool lock");
+        let st = &mut *guard;
+        let family = match st.queues.get_mut(&job.family) {
+            Some(q) => {
+                let dispatch = q.holders.is_empty() && !q.ready_queued;
+                let family = dispatch.then(|| job.family.clone());
+                q.jobs.push_front(job);
+                family
+            }
+            None => {
+                let family = job.family.clone();
+                let mut jobs = VecDeque::new();
+                jobs.push_back(job);
+                st.queues.insert(
+                    family.clone(),
+                    FamilyQueue { jobs, holders: Vec::new(), ready_queued: false },
+                );
+                Some(family)
+            }
+        };
+        // The common case — the retrying worker still holds the family
+        // — needs no dispatch: its next `next_job` pops the retry. A
+        // holderless queue (the worker was banned away by a failover
+        // override between pop and retry, or died and was released) is
+        // re-offered like a fresh push.
+        if let Some(family) = family {
+            st.queues.get_mut(&family).expect("just touched").ready_queued = true;
+            let rq = self.ready_queue(st, &family);
+            st.ready[rq].push_back((family, Instant::now()));
+        }
+        self.work.notify_all();
+    }
+
+    /// Drop every hold and handoff worker `w` owns — the supervisor's
+    /// cleanup when `w`'s thread died (panic escaped the chunk guard or
+    /// an injected death) before a replacement thread takes over the
+    /// index. Families the dead worker held are re-offered to the rest
+    /// of the pool exactly as if the worker had released them, so a
+    /// death never strands a lease.
+    pub fn release_worker(&self, w: usize) {
+        debug_assert!(w < self.workers);
+        let mut guard = self.state.lock().expect("pool lock");
+        let st = &mut *guard;
+        st.idle.retain(|&x| x != w);
+        st.assigned[w] = None;
+        let held: Vec<String> = st
+            .queues
+            .iter()
+            .filter(|(_, q)| q.holders.contains(&w))
+            .map(|(f, _)| f.clone())
+            .collect();
+        for family in held {
+            let (empty, requeue) = {
+                let q = st.queues.get_mut(&family).expect("family just listed");
+                q.holders.retain(|&x| x != w);
+                (q.jobs.is_empty(), !q.jobs.is_empty() && !q.ready_queued)
+            };
+            if requeue {
+                let rq = self.ready_queue(st, &family);
+                st.queues.get_mut(&family).expect("family just listed").ready_queued = true;
+                st.ready[rq].push_back((family.clone(), Instant::now()));
+            } else if empty {
+                let q = st.queues.get(&family).expect("family just listed");
+                if q.holders.is_empty() && !q.ready_queued {
+                    st.queues.remove(&family);
+                    if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
+                        Self::reset_granted(st, &family);
+                    }
+                }
+            }
+        }
+        self.work.notify_all();
+        self.space.notify_all();
     }
 
     /// Take the next family from ready queue `rq`, honouring priority
@@ -745,6 +883,35 @@ impl ExecutorPool {
     pub fn next_job(&self, family: &str, w: usize) -> Option<BatchJob> {
         let mut guard = self.state.lock().expect("pool lock");
         let st = &mut *guard;
+        // Failover ban: a placement override points this family at a
+        // class `w` is not bound to (its own class's breaker is open,
+        // or `w` spill-stole a family that has since been re-placed).
+        // Release the hold without popping and hand any backlog to the
+        // effective class's ready queue. Never taken on a closed pool.
+        if self.banned(st, family, w) {
+            let (empty, requeue) = {
+                let q = st.queues.get_mut(family).expect("held family has a queue");
+                debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
+                q.holders.retain(|&x| x != w);
+                (q.jobs.is_empty(), !q.jobs.is_empty() && !q.ready_queued)
+            };
+            if requeue {
+                let rq = self.ready_queue(st, family);
+                st.queues.get_mut(family).expect("held family has a queue").ready_queued =
+                    true;
+                st.ready[rq].push_back((family.to_string(), Instant::now()));
+                self.work.notify_all();
+            } else if empty {
+                let q = st.queues.get(family).expect("held family has a queue");
+                if q.holders.is_empty() && !q.ready_queued {
+                    st.queues.remove(family);
+                    if matches!(self.depth, DepthPolicy::Adaptive { .. }) {
+                        Self::reset_granted(st, family);
+                    }
+                }
+            }
+            return None;
+        }
         let popped = {
             let q = st.queues.get_mut(family).expect("held family has a queue");
             debug_assert!(q.holders.contains(&w), "worker drains only families it holds");
@@ -768,10 +935,17 @@ impl ExecutorPool {
                 // offer the family to another worker (the multi-holder
                 // fan-out; a no-op under the lease discipline where
                 // holders.len() == allowed == 1).
-                let q = st.queues.get_mut(family).expect("held family has a queue");
-                if !q.jobs.is_empty() && q.holders.len() < allowed && !q.ready_queued {
-                    q.ready_queued = true;
-                    let rq = self.ready_queue(family);
+                let offer = {
+                    let q = st.queues.get_mut(family).expect("held family has a queue");
+                    let offer =
+                        !q.jobs.is_empty() && q.holders.len() < allowed && !q.ready_queued;
+                    if offer {
+                        q.ready_queued = true;
+                    }
+                    offer
+                };
+                if offer {
+                    let rq = self.ready_queue(st, family);
                     // Re-offers restamp the clock: the preferred class
                     // gets first shot at each chunk before the backlog
                     // ages into spill range again.
@@ -930,7 +1104,14 @@ mod tests {
     use std::time::{Duration, Instant};
 
     fn job(family: &str, seq: u64) -> BatchJob {
-        BatchJob { family: family.into(), seq, chunk: 0, last: true, requests: Vec::new() }
+        BatchJob {
+            family: family.into(),
+            seq,
+            chunk: 0,
+            last: true,
+            requests: Vec::new(),
+            attempts: 0,
+        }
     }
 
     /// Spawn a worker loop that forwards (worker, job) pairs to a
@@ -1463,6 +1644,7 @@ mod tests {
             chunk: 0,
             last: true,
             requests: vec![req],
+            attempts: 0,
         };
         assert_eq!(j.requests.len(), 1);
     }

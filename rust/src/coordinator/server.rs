@@ -115,9 +115,10 @@
 //!
 //! 1. **admission** (`infer`): a deadline-carrying request is
 //!    rejected on the spot when the modeled queue + execution time
-//!    (per-chunk device window × queued chunks, from the family's
-//!    placed [`DeviceProfile`]) already exceeds its budget
-//!    (`Snapshot::jobs_shed`);
+//!    (per-chunk service estimate × queued chunks; under a roster the
+//!    estimate is the inverse of the classes' *summed* drain rates,
+//!    since spill stealing drains a backlog in parallel) already
+//!    exceeds its budget (`Snapshot::jobs_shed`);
 //! 2. **enqueue**: the batcher dispatches through the non-blocking
 //!    `ExecutorPool::try_push`; a bounced chunk is failed fast through
 //!    a shed sink that still fills the chunk's reorder slot, so
@@ -153,7 +154,9 @@ use super::{worker_for_family, Request};
 use crate::accel::configs;
 use crate::config::{OverloadPolicy, ServerConfig};
 use crate::model::zoo;
-use crate::runtime::{Backend, ExecScratch, Runtime, RuntimeOptions};
+use crate::runtime::fault::is_retryable;
+use crate::runtime::{Backend, DeathInjector, ExecScratch, FaultBackend, FaultPlan, Runtime,
+    RuntimeOptions};
 use crate::scheduler::ScheduleCache;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, Result};
@@ -265,6 +268,30 @@ impl Server {
         let shards = cfg.batcher_shards.max(1);
         let metrics = Arc::new(Metrics::default());
 
+        // Retry is chunk-granular: the executor re-enqueues a failed
+        // chunk under its original `(seq, chunk)` key. A job-granular
+        // pool entry splits *inside* the executor, so a mid-job retry
+        // would re-execute sub-chunks whose responses already left the
+        // building — reject the combination at startup.
+        if cfg.retry_max > 0 && !cfg.chunk_level {
+            bail!(
+                "retry_max = {} requires chunk_level = true: \
+                 transient-failure retry re-enqueues individual chunks",
+                cfg.retry_max
+            );
+        }
+
+        // Fault-injection shim: the `[fault]` config table merged with
+        // the MENSA_FAULT env spec (env wins per key). An inert plan —
+        // e.g. CI's pinned `seed=` with no configured faults — resolves
+        // to None and the serving path is byte-for-byte untouched.
+        let fault = FaultPlan::resolve(cfg.fault.as_ref())?;
+        let death = fault
+            .as_ref()
+            .filter(|p| p.death_rate > 0.0)
+            .map(|p| Arc::new(DeathInjector::new(p)));
+        let fault = fault.map(Arc::new);
+
         // Modeled per-family edge costs, shared read-only by all
         // workers; the ScheduleCache makes repeat server starts cheap.
         let sim_costs = Arc::new(family_sim_costs());
@@ -330,10 +357,11 @@ impl Server {
         let mut family_names: Vec<String> = families.iter().cloned().collect();
         family_names.sort();
         let mut service_est: HashMap<String, Duration> = HashMap::new();
-        let (pool, worker_backends, transfers): (
+        let (pool, worker_backends, transfers, failover): (
             Arc<ExecutorPool>,
             Vec<Arc<dyn Backend>>,
             Option<Arc<TransferTracker>>,
+            Option<Arc<FailoverController>>,
         ) = if cfg.devices.is_empty() {
             let pool = Arc::new(
                 ExecutorPool::new(workers, cfg.work_stealing, shards, depth)
@@ -356,7 +384,9 @@ impl Server {
                     DeviceProfile::flat("device", window),
                 ))
             };
-            (pool, vec![backend; workers], None)
+            // No roster ⇒ nothing to fail over to: the breaker only
+            // arms under heterogeneous placement.
+            (pool, vec![backend; workers], None, None)
         } else {
             if !cfg.work_stealing {
                 bail!(
@@ -372,13 +402,26 @@ impl Server {
             let transfer = Duration::from_micros(cfg.transfer_us);
             let profiles = device::build_profiles(&cfg.devices, &family_names, transfer);
             let placement = device::placement(&profiles, &family_names);
-            // Admission cost model: each family's modeled batch-1
-            // window on its *placed* class — the same windows the
-            // executors will sleep, so the modeled wait tracks the
-            // emulated reality.
+            let rankings = device::placement_ranking(&profiles, &family_names);
+            // Admission cost model: the roster's *aggregate* drain
+            // rate for the family, not just the placed class's batch-1
+            // window. Spill (and failover) let any class drain a
+            // backlog, so modeling only the primary over-states the
+            // wait and over-sheds exactly when the other classes are
+            // picking up the slack.
             for f in &family_names {
-                let class = placement.get(f).copied().unwrap_or(0);
-                service_est.insert(f.clone(), profiles[class].window(f, 1));
+                let rate: f64 = cfg
+                    .devices
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(ci, spec)| {
+                        let w = profiles[ci].window(f, 1).as_secs_f64();
+                        (w > 0.0).then(|| spec.workers.max(1) as f64 / w)
+                    })
+                    .sum();
+                if rate > 0.0 {
+                    service_est.insert(f.clone(), Duration::from_secs_f64(1.0 / rate));
+                }
             }
             // Workers expand in roster order, so worker→class (and
             // with it `jobs_by_device` attribution) is deterministic.
@@ -389,9 +432,10 @@ impl Server {
                 }
             }
             let class_backends: Vec<Arc<dyn Backend>> = profiles
-                .into_iter()
+                .iter()
                 .map(|p| {
-                    Arc::new(DeviceBackend::new(Arc::clone(&runtime), p)) as Arc<dyn Backend>
+                    Arc::new(DeviceBackend::new(Arc::clone(&runtime), p.clone()))
+                        as Arc<dyn Backend>
                 })
                 .collect();
             let worker_backends: Vec<Arc<dyn Backend>> =
@@ -405,11 +449,39 @@ impl Server {
                 ExecutorPool::new_hetero(topology, shards, depth)
                     .with_priorities(priorities),
             );
-            (pool, worker_backends, Some(Arc::new(TransferTracker::default())))
+            // Circuit breaker + cross-class failover: compares each
+            // class's *healthy* modeled windows (the un-faulted
+            // profiles captured here) against what the live backend
+            // reports, so brownouts are detected deterministically.
+            let failover = (cfg.breaker_threshold > 0).then(|| {
+                Arc::new(FailoverController::new(
+                    Arc::clone(&pool),
+                    Arc::clone(&metrics),
+                    profiles,
+                    rankings,
+                    cfg.breaker_threshold,
+                    Duration::from_micros(cfg.breaker_cooldown_us),
+                ))
+            });
+            (pool, worker_backends, Some(Arc::new(TransferTracker::default())), failover)
         };
         // With a roster the worker count is the roster's, not
         // `cfg.workers`.
         let workers = worker_backends.len();
+
+        // Fault-injection shim: when a plan is active (config or
+        // MENSA_FAULT), every worker's backend is wrapped the same way
+        // DeviceBackend wraps the runtime. Each worker gets its own
+        // seeded stream, so runs reproduce independent of thread
+        // interleaving.
+        let worker_backends: Vec<Arc<dyn Backend>> = match &fault {
+            Some(plan) => worker_backends
+                .into_iter()
+                .enumerate()
+                .map(|(w, b)| FaultBackend::wrap(b, Arc::clone(plan), &format!("worker-{w}")))
+                .collect(),
+            None => worker_backends,
+        };
 
         // Router channels are created before the executor threads:
         // the escalator (consulted at delivery, inside the executors)
@@ -456,33 +528,122 @@ impl Server {
         // at stake, never after it is paid).
         let expire_at_dequeue = cfg.overload == OverloadPolicy::Shed;
 
-        let mut threads = Vec::with_capacity(workers + shards);
-        for (w, backend) in worker_backends.into_iter().enumerate() {
-            let worker_pool = Arc::clone(&pool);
-            let worker_metrics = Arc::clone(&metrics);
-            let worker_costs = Arc::clone(&sim_costs);
-            let worker_transfers = transfers.clone();
-            let worker_reorder = reorder.clone();
-            let worker_escalator = escalator.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("mensa-executor-{w}"))
-                    .spawn(move || {
-                        executor_loop(
-                            w,
-                            backend,
-                            worker_pool,
-                            worker_metrics,
-                            worker_costs,
-                            worker_transfers,
-                            worker_reorder,
-                            worker_escalator,
-                            expire_at_dequeue,
-                        )
-                    })
-                    .expect("spawn executor"),
-            );
-        }
+        // Everything an executor thread reads, bundled behind one Arc
+        // so the supervisor can respawn workers from a shared handle.
+        let ctx = Arc::new(WorkerCtx {
+            pool: Arc::clone(&pool),
+            metrics: Arc::clone(&metrics),
+            sim_costs: Arc::clone(&sim_costs),
+            transfers: transfers.clone(),
+            reorder: reorder.clone(),
+            escalator: escalator.clone(),
+            expire_at_dequeue,
+            chunk_level: cfg.chunk_level,
+            retry_max: cfg.retry_max,
+            failover,
+            death,
+            inflight: (0..workers).map(|_| Mutex::new(None)).collect(),
+            worker_class: pool.topology().map(|t| t.worker_class.clone()),
+        });
+
+        // Supervised workers: executors run under a supervisor thread
+        // that observes every worker exit. A clean exit (pool closed
+        // and drained) is counted down; a panicked exit — a panic that
+        // escaped the per-chunk guard, or an injected worker death —
+        // releases the lease the dead thread held, tombstones the
+        // reorder slot it owed (so sibling chunks never stall behind a
+        // hole in the cursor), and respawns the worker under the same
+        // class binding. Respawn happens even mid-drain: the fresh
+        // worker drains the re-queued backlog and exits cleanly, so
+        // `shutdown()` never hangs on a lost lease (see
+        // `tests/chaos.rs`).
+        let (exit_tx, exit_rx) = mpsc::channel::<(usize, bool)>();
+        let supervisor = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("mensa-supervisor".into())
+                .spawn(move || {
+                    let spawn_one = |w: usize| {
+                        let ctx = Arc::clone(&ctx);
+                        let backend = Arc::clone(&worker_backends[w]);
+                        let tx = exit_tx.clone();
+                        std::thread::Builder::new()
+                            .name(format!("mensa-executor-{w}"))
+                            .spawn(move || {
+                                // Drop guard: reports this worker's
+                                // exit (and whether it unwound) even
+                                // when the thread dies by panic.
+                                let _exit = ExitNotify { tx, worker: w };
+                                executor_loop(w, backend, &ctx)
+                            })
+                            .expect("spawn executor")
+                    };
+                    let mut handles: Vec<Option<std::thread::JoinHandle<()>>> =
+                        (0..workers).map(|w| Some(spawn_one(w))).collect();
+                    // `spawn_one` keeps a sender alive, so the channel
+                    // never disconnects while this loop runs: liveness
+                    // comes from counting clean exits instead.
+                    let mut alive = workers;
+                    while alive > 0 {
+                        let Ok((w, panicked)) = exit_rx.recv() else { break };
+                        if let Some(h) = handles[w].take() {
+                            let _ = h.join();
+                        }
+                        if !panicked {
+                            alive -= 1;
+                            continue;
+                        }
+                        // The dead thread may still hold a family
+                        // lease — hand its queues back to the pool —
+                        // and may owe the reorder buffer a chunk slot.
+                        let owed = ctx.inflight[w].lock().expect("inflight lock").take();
+                        if let (Some(buf), Some((family, seq, chunk, last))) =
+                            (ctx.reorder.as_ref(), owed)
+                        {
+                            // Tombstone: an empty errored chunk fills
+                            // the lost `(seq, chunk)` slot so the
+                            // delivery cursor can advance past it. No
+                            // requests ride in it, so no counters move
+                            // at delivery.
+                            let done = ChunkDone {
+                                seq,
+                                chunk,
+                                last,
+                                attempts: 0,
+                                exec_start: Instant::now(),
+                                outcome: Err(ChunkErr {
+                                    requests: Vec::new(),
+                                    error: format!(
+                                        "worker {w} died with a `{family}` chunk in flight"
+                                    ),
+                                    kind: DropKind::Error,
+                                }),
+                            };
+                            buf.submit(&family, seq, chunk, last, done, |d| {
+                                deliver_chunk(
+                                    &ctx.metrics,
+                                    &family,
+                                    d,
+                                    ctx.escalator.as_deref(),
+                                )
+                            });
+                        }
+                        // Count the respawn BEFORE the release makes
+                        // the re-offered queues servable: any request
+                        // completed thanks to this recovery observes
+                        // the counter.
+                        ctx.metrics.record_respawn();
+                        ctx.pool.release_worker(w);
+                        handles[w] = Some(spawn_one(w));
+                    }
+                    for h in handles.iter_mut().filter_map(|h| h.take()) {
+                        let _ = h.join();
+                    }
+                })
+                .expect("spawn supervisor")
+        };
+        let mut threads = Vec::with_capacity(1 + shards);
+        threads.push(supervisor);
 
         // Shed sink: where a blocking batcher would park on the pool's
         // inflight cap, the shed batcher bounces the chunk here. The
@@ -497,11 +658,12 @@ impl Server {
                 let escalator = escalator.clone();
                 let sink: Arc<dyn Fn(BatchJob) + Send + Sync> =
                     Arc::new(move |job: BatchJob| {
-                        let BatchJob { family, seq, chunk, last, requests } = job;
+                        let BatchJob { family, seq, chunk, last, requests, attempts } = job;
                         let done = ChunkDone {
                             seq,
                             chunk,
                             last,
+                            attempts,
                             exec_start: Instant::now(),
                             outcome: Err(ChunkErr {
                                 requests,
@@ -573,7 +735,10 @@ impl ServerHandle {
     ///
     /// Under `overload = "shed"` a deadline-carrying request passes
     /// **admission control** first: with the family's modeled
-    /// per-chunk service time `s` (its placed device window — zero
+    /// per-chunk service time `s` (under a roster, the inverse of the
+    /// classes' summed batch-1 drain rates — spill stealing lets every
+    /// class chew on a backlog, so pricing only the placed class would
+    /// over-shed; the flat `device_latency_us` window otherwise; zero
     /// for the bare runtime, where there is nothing to model) and `q`
     /// chunks already queued, a budget below `s × (q + 1)` is already
     /// unmeetable, so the request is shed *now* — before it occupies
@@ -755,6 +920,9 @@ struct ChunkDone {
     /// Final chunk of its flush — advances the reorder cursor to the
     /// next flush.
     last: bool,
+    /// Execution attempts already spent on this chunk (mirrors
+    /// [`BatchJob::attempts`]) — the retry path's budget counter.
+    attempts: u32,
     /// When execution started (queue-delay accounting anchor).
     exec_start: Instant,
     /// Execution result: the per-request outputs with the executed
@@ -886,16 +1054,10 @@ fn confidence(output: &[f32]) -> f64 {
     }
 }
 
-/// One worker's executor loop: take a family hold from the pool, drain
-/// its chunk queue (chunks are pre-split by the batcher in
-/// chunk-granular mode; a job-granular job is split here, front to
-/// back), execute through this worker's [`Backend`] with its reusable
-/// scratch, deliver (directly under the family lease; through the
-/// reorder buffer's `(seq, chunk)` slots otherwise), release, repeat.
-#[allow(clippy::too_many_arguments)]
-fn executor_loop(
-    worker: usize,
-    backend: Arc<dyn Backend>,
+/// Everything an executor thread reads, bundled so the supervisor can
+/// respawn a worker from one shared handle (the per-worker pieces —
+/// index and backend — stay with the spawn closure).
+struct WorkerCtx {
     pool: Arc<ExecutorPool>,
     metrics: Arc<Metrics>,
     sim_costs: Arc<HashMap<String, SimCost>>,
@@ -903,52 +1065,372 @@ fn executor_loop(
     reorder: Option<Arc<ReorderBuffer<ChunkDone>>>,
     escalator: Option<Arc<Escalator>>,
     expire_at_dequeue: bool,
-) {
+    /// Chunk-granular pool entries (the batcher pre-split them): after
+    /// a submit the worker owes nothing until its next pop. In
+    /// job-granular mode the worker owes the rest of the split.
+    chunk_level: bool,
+    /// Transient-failure retry budget per chunk (`retry_max`; 0
+    /// disables the retry path entirely).
+    retry_max: u32,
+    failover: Option<Arc<FailoverController>>,
+    death: Option<Arc<DeathInjector>>,
+    /// `inflight[w]`: the `(family, seq, chunk, last-of-flush)` reorder
+    /// slot worker `w` owes next — what the supervisor tombstones when
+    /// that thread dies before submitting it.
+    inflight: Vec<Mutex<Option<(String, u64, u32, bool)>>>,
+    /// Worker → device-class binding (roster mode only), for breaker
+    /// health attribution.
+    worker_class: Option<Vec<usize>>,
+}
+
+/// Drop guard inside each executor thread: reports `(worker, panicked)`
+/// to the supervisor on every exit path, including an unwinding panic.
+struct ExitNotify {
+    tx: mpsc::Sender<(usize, bool)>,
+    worker: usize,
+}
+
+impl Drop for ExitNotify {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.worker, std::thread::panicking()));
+    }
+}
+
+/// One worker's executor loop: take a family hold from the pool, drain
+/// its chunk queue (chunks are pre-split by the batcher in
+/// chunk-granular mode; a job-granular job is split here, front to
+/// back), execute through this worker's [`Backend`] with its reusable
+/// scratch, deliver (directly under the family lease; through the
+/// reorder buffer's `(seq, chunk)` slots otherwise), release, repeat.
+///
+/// Fault-tolerance hooks, all inert without the matching config: an
+/// injected death panics *outside* the per-chunk guard (the supervisor
+/// must see a genuinely dead thread); each executed chunk feeds the
+/// failover controller's health model; transient failures re-enqueue
+/// through [`try_requeue`] instead of delivering errors.
+fn executor_loop(worker: usize, backend: Arc<dyn Backend>, ctx: &WorkerCtx) {
     let mut scratch = WorkerScratch::default();
-    while let Some(family) = pool.take_family(worker) {
-        while let Some(job) = pool.next_job(&family, worker) {
-            match &reorder {
-                // Reorder mode: every chunk fills its own
-                // `(seq, chunk)` slot the moment it finishes — *other
-                // workers may be executing sibling chunks of the same
-                // flush concurrently*. The buffer invokes the callback
-                // (under the family's slot lock) for every chunk now
-                // contiguous with the delivery cursor — possibly zero
-                // (an earlier chunk is still running elsewhere),
-                // possibly several (this chunk unblocked buffered
-                // successors).
-                Some(buf) => exec_job(
-                    &*backend,
-                    job,
-                    worker,
-                    &metrics,
-                    &sim_costs,
-                    &mut scratch,
-                    transfers.as_deref(),
-                    expire_at_dequeue,
-                    |chunk| {
-                        let (seq, idx, last) = (chunk.seq, chunk.chunk, chunk.last);
-                        buf.submit(&family, seq, idx, last, chunk, |done| {
-                            deliver_chunk(&metrics, &family, done, escalator.as_deref())
-                        });
-                    },
-                ),
-                // Lease mode: the hold already serializes this family,
-                // so each chunk's responses stream out the moment the
-                // chunk finishes (before its emulated device window),
-                // exactly as before the reorder buffer existed.
-                None => exec_job(
-                    &*backend,
-                    job,
-                    worker,
-                    &metrics,
-                    &sim_costs,
-                    &mut scratch,
-                    transfers.as_deref(),
-                    expire_at_dequeue,
-                    |chunk| deliver_chunk(&metrics, &family, chunk, escalator.as_deref()),
-                ),
+    let class = ctx.worker_class.as_ref().map_or(0, |wc| wc[worker]);
+    while let Some(family) = ctx.pool.take_family(worker) {
+        if let Some(death) = &ctx.death {
+            if death.should_die() {
+                // Escapes every guard on purpose; the family lease is
+                // held (nothing popped yet), so recovery exercises the
+                // supervisor's release path.
+                panic!("injected worker death (fault plan)");
             }
+        }
+        if let Some(failover) = &ctx.failover {
+            failover.maybe_probe(Instant::now());
+        }
+        while let Some(job) = ctx.pool.next_job(&family, worker) {
+            let job_last = job.last;
+            *ctx.inflight[worker].lock().expect("inflight lock") =
+                Some((family.clone(), job.seq, job.chunk, job.last));
+            exec_job(
+                &*backend,
+                job,
+                worker,
+                &ctx.metrics,
+                &ctx.sim_costs,
+                &mut scratch,
+                ctx.transfers.as_deref(),
+                ctx.expire_at_dequeue,
+                |chunk| {
+                    // Advance the owed slot before handing the chunk
+                    // on: from here the worker owes the *next* chunk
+                    // of a job-granular split (nothing, once the pool
+                    // entry is spent).
+                    *ctx.inflight[worker].lock().expect("inflight lock") =
+                        (!ctx.chunk_level && !chunk.last).then(|| {
+                            (family.clone(), chunk.seq, chunk.chunk + 1, job_last)
+                        });
+                    if let Some(failover) = &ctx.failover {
+                        // Health signal: executed chunks only — a shed
+                        // or expired chunk never touched the device.
+                        let signal = match &chunk.outcome {
+                            Ok(ok) => Some((ok.pairs.len(), false)),
+                            Err(e) if e.kind == DropKind::Error => {
+                                Some((e.requests.len(), is_retryable(&e.error)))
+                            }
+                            Err(_) => None,
+                        };
+                        if let Some((n, failed)) = signal {
+                            failover.observe(
+                                class,
+                                &family,
+                                n,
+                                backend.device_window(&family, n.max(1)),
+                                failed,
+                            );
+                        }
+                    }
+                    let Some(chunk) = try_requeue(ctx, &family, chunk) else {
+                        return;
+                    };
+                    match &ctx.reorder {
+                        // Reorder mode: every chunk fills its own
+                        // `(seq, chunk)` slot the moment it finishes —
+                        // *other workers may be executing sibling
+                        // chunks of the same flush concurrently*. The
+                        // buffer invokes the callback (under the
+                        // family's slot lock) for every chunk now
+                        // contiguous with the delivery cursor.
+                        Some(buf) => {
+                            let (seq, idx, last) = (chunk.seq, chunk.chunk, chunk.last);
+                            buf.submit(&family, seq, idx, last, chunk, |done| {
+                                deliver_chunk(
+                                    &ctx.metrics,
+                                    &family,
+                                    done,
+                                    ctx.escalator.as_deref(),
+                                )
+                            });
+                        }
+                        // Lease mode: the hold already serializes this
+                        // family, so responses stream out the moment
+                        // the chunk finishes.
+                        None => deliver_chunk(
+                            &ctx.metrics,
+                            &family,
+                            chunk,
+                            ctx.escalator.as_deref(),
+                        ),
+                    }
+                },
+            );
+            *ctx.inflight[worker].lock().expect("inflight lock") = None;
+        }
+    }
+}
+
+/// Budget-aware retry: a chunk that failed with a *transient* error
+/// (the fault shim's marker, or a caught executor panic) and has
+/// attempts left goes back to the **front** of its family queue — the
+/// holder re-pops it next, preserving `(seq, chunk)` delivery order —
+/// instead of failing its requests. Returns the chunk back when it
+/// must deliver: non-retryable outcome, budget exhausted, or (under
+/// the shed discipline) every member deadline already blown, where a
+/// retry could only burn device time on answers nobody can use.
+fn try_requeue(ctx: &WorkerCtx, family: &str, done: ChunkDone) -> Option<ChunkDone> {
+    let retryable = ctx.retry_max > 0
+        && done.attempts < ctx.retry_max
+        && matches!(
+            &done.outcome,
+            Err(e) if e.kind == DropKind::Error && is_retryable(&e.error)
+        );
+    if !retryable {
+        return Some(done);
+    }
+    let ChunkDone { seq, chunk, last, attempts, exec_start, outcome } = done;
+    let err = match outcome {
+        Err(e) => e,
+        Ok(_) => unreachable!("retryable implies an errored outcome"),
+    };
+    let job = BatchJob {
+        family: family.to_string(),
+        seq,
+        chunk,
+        last,
+        requests: err.requests,
+        attempts: attempts + 1,
+    };
+    if ctx.expire_at_dequeue && job.all_expired_at(Instant::now()) {
+        // Same accounting as dequeue expiry: overload protection
+        // (`jobs_expired`), not failure — the shed invariants hold
+        // under faults.
+        return Some(ChunkDone {
+            seq,
+            chunk,
+            last,
+            attempts,
+            exec_start,
+            outcome: Err(ChunkErr {
+                requests: job.requests,
+                error: format!("deadline expired before `{family}` chunk could retry"),
+                kind: DropKind::Expired,
+            }),
+        });
+    }
+    ctx.metrics.record_retry();
+    ctx.pool.requeue_front(job);
+    None
+}
+
+/// Per-class circuit breaker + cross-class failover. Fed by every
+/// executed chunk ([`FailoverController::observe`]): a transient
+/// failure or an observed device window blown past
+/// [`FailoverController::DEGRADED_RATIO`]× the healthy model counts
+/// against the executing class; `threshold` consecutive strikes trip
+/// its breaker. Tripping re-places every family whose best available
+/// class changed — onto the next class in the modeled-latency ranking
+/// — via the pool's override table (the transfer tracker charges the
+/// cross-class move exactly as it charges spill). After `cooldown` a
+/// probe half-opens the breaker and routing reverts, so the primary
+/// proves itself on real traffic: a healthy probe closes the breaker,
+/// an unhealthy one re-trips it and fails back over.
+struct FailoverController {
+    pool: Arc<ExecutorPool>,
+    metrics: Arc<Metrics>,
+    /// The *healthy* modeled profiles, captured before the fault shim
+    /// wraps the backends — the baseline observations are judged
+    /// against.
+    profiles: Vec<DeviceProfile>,
+    /// Per family, class indices in modeled-latency order;
+    /// `rankings[f][0]` is the placement.
+    rankings: HashMap<String, Vec<usize>>,
+    /// Consecutive unhealthy observations that trip a class's breaker.
+    threshold: u32,
+    /// How long a tripped breaker stays open before a probe.
+    cooldown: Duration,
+    state: Mutex<FailoverState>,
+}
+
+struct FailoverState {
+    health: Vec<ClassHealth>,
+    /// Family → class currently receiving its work (absent = primary).
+    placed: HashMap<String, usize>,
+}
+
+struct ClassHealth {
+    fails: u32,
+    state: BreakerState,
+}
+
+enum BreakerState {
+    Closed,
+    Open { since: Instant },
+    HalfOpen,
+}
+
+impl FailoverController {
+    /// Observed window beyond this multiple of the healthy model is a
+    /// brownout strike. Generous on purpose: scheduler jitter on a
+    /// loaded host must not trip breakers, a browned-out class
+    /// (default `brownout_scale` 8×) still must.
+    const DEGRADED_RATIO: f64 = 3.0;
+
+    fn new(
+        pool: Arc<ExecutorPool>,
+        metrics: Arc<Metrics>,
+        profiles: Vec<DeviceProfile>,
+        rankings: HashMap<String, Vec<usize>>,
+        threshold: u32,
+        cooldown: Duration,
+    ) -> Self {
+        let health = (0..profiles.len())
+            .map(|_| ClassHealth { fails: 0, state: BreakerState::Closed })
+            .collect();
+        Self {
+            pool,
+            metrics,
+            profiles,
+            rankings,
+            threshold,
+            cooldown,
+            state: Mutex::new(FailoverState { health, placed: HashMap::new() }),
+        }
+    }
+
+    /// Fold one executed chunk into `class`'s health.
+    fn observe(
+        &self,
+        class: usize,
+        family: &str,
+        batch: usize,
+        observed: Duration,
+        failed: bool,
+    ) {
+        let modeled = self.profiles[class].window(family, batch.max(1));
+        let unhealthy = failed
+            || (!modeled.is_zero()
+                && observed.as_secs_f64() > modeled.as_secs_f64() * Self::DEGRADED_RATIO);
+        let mut st = self.state.lock().expect("failover lock");
+        let trip = {
+            let h = &mut st.health[class];
+            match h.state {
+                BreakerState::Open { .. } => false,
+                BreakerState::Closed if !unhealthy => {
+                    // Strikes are consecutive, not cumulative: one
+                    // healthy chunk resets the count.
+                    h.fails = 0;
+                    false
+                }
+                BreakerState::Closed => {
+                    h.fails += 1;
+                    if h.fails >= self.threshold {
+                        h.state = BreakerState::Open { since: Instant::now() };
+                        true
+                    } else {
+                        false
+                    }
+                }
+                BreakerState::HalfOpen if !unhealthy => {
+                    // Healthy probe: the breaker closes. Routing
+                    // already reverted when the probe half-opened it.
+                    h.state = BreakerState::Closed;
+                    h.fails = 0;
+                    false
+                }
+                BreakerState::HalfOpen => {
+                    // The probe failed: straight back to open (and the
+                    // cooldown clock restarts).
+                    h.state = BreakerState::Open { since: Instant::now() };
+                    h.fails = 0;
+                    true
+                }
+            }
+        };
+        if trip {
+            self.metrics.record_breaker_trip();
+            self.reroute(&mut st);
+        }
+    }
+
+    /// Half-open any breaker whose cooldown has elapsed, reverting
+    /// routing so probe traffic reaches the recovering class. Called
+    /// from the executors' take loop — no dedicated timer thread.
+    fn maybe_probe(&self, now: Instant) {
+        let mut st = self.state.lock().expect("failover lock");
+        let mut changed = false;
+        for h in &mut st.health {
+            if let BreakerState::Open { since } = h.state {
+                if now.duration_since(since) >= self.cooldown {
+                    h.state = BreakerState::HalfOpen;
+                    h.fails = 0;
+                    changed = true;
+                }
+            }
+        }
+        if changed {
+            self.reroute(&mut st);
+        }
+    }
+
+    /// Recompute every family's effective class from the breaker
+    /// states — the best-ranked class not currently open (half-open
+    /// counts: probes must carry real traffic) — and apply the delta
+    /// to the pool's override table. With every ranked class open, the
+    /// primary keeps the work: executing against a failing device
+    /// still beats queueing forever.
+    fn reroute(&self, st: &mut FailoverState) {
+        for (family, ranking) in &self.rankings {
+            let primary = ranking[0];
+            let effective = ranking
+                .iter()
+                .copied()
+                .find(|&c| !matches!(st.health[c].state, BreakerState::Open { .. }))
+                .unwrap_or(primary);
+            let prev = st.placed.get(family).copied().unwrap_or(primary);
+            if effective == prev {
+                continue;
+            }
+            if effective != primary {
+                self.metrics.record_failover();
+            }
+            st.placed.insert(family.clone(), effective);
+            self.pool
+                .set_class_override(family, (effective != primary).then_some(effective));
         }
     }
 }
@@ -984,11 +1466,12 @@ fn exec_job(
     // executes normally; its late members surface as deadline misses
     // at delivery instead.
     if expire_at_dequeue && job.all_expired_at(Instant::now()) {
-        let BatchJob { family, seq, chunk, last, requests } = job;
+        let BatchJob { family, seq, chunk, last, requests, attempts } = job;
         sink(ChunkDone {
             seq,
             chunk,
             last,
+            attempts,
             exec_start: Instant::now(),
             outcome: Err(ChunkErr {
                 requests,
@@ -1033,6 +1516,7 @@ fn exec_job(
             job.seq,
             chunk_idx,
             last,
+            job.attempts,
             worker,
             metrics,
             sim_costs,
@@ -1058,6 +1542,7 @@ fn exec_chunk(
     seq: u64,
     chunk: u32,
     last: bool,
+    attempts: u32,
     worker: usize,
     metrics: &Metrics,
     sim_costs: &HashMap<String, SimCost>,
@@ -1088,6 +1573,7 @@ fn exec_chunk(
                 seq,
                 chunk,
                 last,
+                attempts,
                 exec_start,
                 outcome: Ok(ChunkOk {
                     batch,
@@ -1100,6 +1586,7 @@ fn exec_chunk(
             seq,
             chunk,
             last,
+            attempts,
             exec_start,
             outcome: Err(ChunkErr {
                 requests,
@@ -1119,7 +1606,7 @@ fn exec_chunk(
 /// replies). Dropped chunks land in the counter their [`DropKind`]
 /// names — shed and expired work is overload protection, not failure.
 fn deliver_chunk(metrics: &Metrics, family: &str, done: ChunkDone, escalator: Option<&Escalator>) {
-    let ChunkDone { seq, chunk, last: _, exec_start, outcome } = done;
+    let ChunkDone { seq, chunk, last: _, attempts: _, exec_start, outcome } = done;
     match outcome {
         Ok(ok) => {
             metrics.record_job_order(family, seq, chunk);
@@ -1413,6 +1900,149 @@ mod tests {
         assert!(req.expired_at(Instant::now()));
         req.deadline = Some(Duration::from_secs(3600));
         assert!(!req.expired_at(Instant::now()));
+    }
+
+    fn test_ctx(retry_max: u32) -> WorkerCtx {
+        WorkerCtx {
+            pool: Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1))),
+            metrics: Arc::new(Metrics::default()),
+            sim_costs: Arc::new(HashMap::new()),
+            transfers: None,
+            reorder: None,
+            escalator: None,
+            expire_at_dequeue: true,
+            chunk_level: true,
+            retry_max,
+            failover: None,
+            death: None,
+            inflight: vec![Mutex::new(None)],
+            worker_class: None,
+        }
+    }
+
+    fn errored(attempts: u32, kind: DropKind, error: &str) -> ChunkDone {
+        ChunkDone {
+            seq: 0,
+            chunk: 0,
+            last: true,
+            attempts,
+            exec_start: Instant::now(),
+            outcome: Err(ChunkErr { requests: Vec::new(), error: error.into(), kind }),
+        }
+    }
+
+    #[test]
+    fn try_requeue_gates_on_budget_and_error_kind() {
+        let ctx = test_ctx(2);
+        // Transient errors with budget left are re-enqueued (`None`) —
+        // the fault shim's marker and a caught executor panic both
+        // qualify.
+        let t = "transient fault: injected exec error";
+        assert!(try_requeue(&ctx, "edge_cnn", errored(0, DropKind::Error, t)).is_none());
+        assert!(try_requeue(&ctx, "edge_cnn", errored(1, DropKind::Error, "executor panicked: boom"))
+            .is_none());
+        assert_eq!(ctx.metrics.snapshot().jobs_retried, 2);
+        assert_eq!(ctx.pool.queued_for("edge_cnn"), 2);
+        // Budget exhausted: the error delivers.
+        assert!(try_requeue(&ctx, "edge_cnn", errored(2, DropKind::Error, t)).is_some());
+        // Non-transient errors and shed chunks never retry.
+        assert!(try_requeue(&ctx, "edge_cnn", errored(0, DropKind::Error, "bad input")).is_some());
+        assert!(try_requeue(&ctx, "edge_cnn", errored(0, DropKind::Shed, t)).is_some());
+        // retry_max = 0 disables the path outright.
+        let off = test_ctx(0);
+        assert!(try_requeue(&off, "edge_cnn", errored(0, DropKind::Error, t)).is_some());
+        assert_eq!(ctx.metrics.snapshot().jobs_retried, 2, "no extra retries recorded");
+    }
+
+    #[test]
+    fn retry_is_deadline_aware() {
+        // A retryable chunk whose member deadlines have all blown is
+        // expired (overload accounting), not re-executed: retries must
+        // never burn device time on answers nobody can use.
+        let ctx = test_ctx(5);
+        let (reply, _rx) = mpsc::channel();
+        let req = Request {
+            family: "edge_cnn".into(),
+            inputs: Vec::new(),
+            enqueued: Instant::now() - Duration::from_millis(10),
+            deadline: Some(Duration::from_millis(1)),
+            escalated: false,
+            reply,
+        };
+        let done = ChunkDone {
+            seq: 0,
+            chunk: 0,
+            last: true,
+            attempts: 0,
+            exec_start: Instant::now(),
+            outcome: Err(ChunkErr {
+                requests: vec![req],
+                error: "transient fault: injected exec error".into(),
+                kind: DropKind::Error,
+            }),
+        };
+        let back = try_requeue(&ctx, "edge_cnn", done).expect("expired chunk must not retry");
+        match back.outcome {
+            Err(e) => assert_eq!(e.kind, DropKind::Expired, "expired, not failed"),
+            Ok(_) => unreachable!(),
+        }
+        assert_eq!(ctx.metrics.snapshot().jobs_retried, 0);
+        assert_eq!(ctx.pool.queued_for("edge_cnn"), 0);
+    }
+
+    #[test]
+    fn breaker_trips_fails_over_and_reverts() {
+        let topology = PoolTopology::new(
+            vec![0, 1],
+            HashMap::from([("edge_cnn".to_string(), 0)]),
+            Duration::from_micros(50),
+        );
+        let pool = Arc::new(ExecutorPool::new_hetero(topology, 1, DepthPolicy::Static(1)));
+        let metrics = Arc::new(Metrics::default());
+        let profiles = vec![
+            DeviceProfile::flat("fast", Duration::from_micros(100)),
+            DeviceProfile::flat("slow", Duration::from_micros(400)),
+        ];
+        let rankings = HashMap::from([("edge_cnn".to_string(), vec![0usize, 1])]);
+        let ctl = FailoverController::new(
+            Arc::clone(&pool),
+            Arc::clone(&metrics),
+            profiles,
+            rankings,
+            2,
+            Duration::from_millis(1),
+        );
+        let healthy = Duration::from_micros(100);
+        let browned = Duration::from_micros(1000);
+        // Strikes are consecutive: a healthy chunk in between resets.
+        ctl.observe(0, "edge_cnn", 1, browned, false);
+        ctl.observe(0, "edge_cnn", 1, healthy, false);
+        assert_eq!(metrics.snapshot().breaker_trips, 0);
+        // Two consecutive strikes (a brownout and a transient failure)
+        // trip the breaker and re-place the family on the next class.
+        ctl.observe(0, "edge_cnn", 1, browned, false);
+        ctl.observe(0, "edge_cnn", 1, healthy, true);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.breaker_trips, 1);
+        assert_eq!(snap.failovers, 1);
+        // While open, further strikes are absorbed (no re-trip spam).
+        ctl.observe(0, "edge_cnn", 1, browned, true);
+        assert_eq!(metrics.snapshot().breaker_trips, 1);
+        // Cooldown elapsed: the probe half-opens and routing reverts
+        // to the primary; a failed probe re-trips and fails back over.
+        std::thread::sleep(Duration::from_millis(2));
+        ctl.maybe_probe(Instant::now());
+        ctl.observe(0, "edge_cnn", 1, browned, false);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.breaker_trips, 2);
+        assert_eq!(snap.failovers, 2);
+        // A healthy probe after the next cooldown closes the breaker:
+        // a later lone strike starts from zero again.
+        std::thread::sleep(Duration::from_millis(2));
+        ctl.maybe_probe(Instant::now());
+        ctl.observe(0, "edge_cnn", 1, healthy, false);
+        ctl.observe(0, "edge_cnn", 1, browned, false);
+        assert_eq!(metrics.snapshot().breaker_trips, 2, "closed breaker forgot old strikes");
     }
 
     #[test]

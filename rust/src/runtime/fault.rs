@@ -1,0 +1,523 @@
+//! Deterministic fault injection at the [`Backend`] seam.
+//!
+//! A [`FaultPlan`] describes which faults to inject — transient
+//! execute errors, kernel panics, latency stalls, per-class brownout
+//! (window inflation) and blackout (every execute fails) — and a
+//! [`FaultBackend`] wraps any `Arc<dyn Backend>` with that plan, the
+//! same way `coordinator::device::DeviceBackend` wraps the shared
+//! `Arc<Runtime>`. Workers cannot tell a wrapped backend from a real
+//! one, so the whole fault-tolerance stack (retry, circuit breaker,
+//! failover, supervision) is exercised through the public seam.
+//!
+//! Two properties make the shim usable in CI:
+//!
+//! * **Deterministic**: every random draw comes from a SplitMix64
+//!   [`Rng`] seeded from `plan.seed` xor a per-wrapper stream label,
+//!   so a pinned seed reproduces the same fault sequence per worker
+//!   (modulo thread interleaving of shared streams, which the chaos
+//!   tests avoid by asserting invariants, not exact schedules).
+//! * **Config + env**: plans come from the `[fault]` config table
+//!   and/or the [`FAULT_ENV`] environment variable (read once per
+//!   server start, the [`crate::runtime::KERNEL_ENV`] pattern); the
+//!   env spec overrides matching config keys, so CI can pin a seed
+//!   across the whole suite without editing configs.
+//!
+//! Injected failures are marked with [`TRANSIENT_MARKER`] in the
+//! error text; the executor's retry path classifies on that marker
+//! (plus caught panics), so genuine input/shape errors never burn
+//! retry budget.
+
+use crate::runtime::{ArtifactSpec, Backend, ExecScratch};
+use crate::util::fnv1a_64;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Environment variable carrying a fault-plan spec
+/// (`key=value,key=value`; empty or unset = no override), read once
+/// per `Server::start`. Keys match the `[fault]` config table. CI's
+/// chaos leg sets `MENSA_FAULT=seed=<pinned>` so every configured
+/// plan in the suite draws from a reproducible stream.
+pub const FAULT_ENV: &str = "MENSA_FAULT";
+
+/// Marker embedded in every injected failure's error text (and the
+/// blackout error). The retry path treats errors containing this
+/// marker — plus caught panics — as retryable; everything else fails
+/// fast.
+pub const TRANSIENT_MARKER: &str = "transient fault";
+
+/// Is this error text a retryable (injected-transient or panic)
+/// failure? Kernel panics are formatted `executor panicked: …` by the
+/// server's `guard_panic_flagged`, and supervised recovery treats a
+/// panicked chunk like a transient: the kernel state is rebuilt from
+/// immutable weights, so a retry is safe.
+pub fn is_retryable(error: &str) -> bool {
+    error.contains(TRANSIENT_MARKER) || error.contains("executor panicked")
+}
+
+/// A deterministic fault-injection plan (the `[fault]` config table /
+/// [`FAULT_ENV`] spec). The default plan injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed for every fault stream; per-wrapper streams derive
+    /// from it (`seed ^ fnv1a(stream label)`).
+    pub seed: u64,
+    /// Probability an `execute_batch` call fails with a transient
+    /// error.
+    pub exec_error_rate: f64,
+    /// Probability an `execute_batch` call panics inside the kernel
+    /// (caught by the executor's per-chunk `catch_unwind`).
+    pub panic_rate: f64,
+    /// Probability an `execute_batch` call stalls for `stall_us`
+    /// before running (latency spike; the call still succeeds).
+    pub stall_rate: f64,
+    /// Stall duration in microseconds.
+    pub stall_us: u64,
+    /// Probability a worker thread dies (a panic *outside* the
+    /// per-chunk guard) when it next leases a family — the supervised
+    /// respawn path. Bounded by `max_deaths`.
+    pub death_rate: f64,
+    /// Total injected worker deaths across the pool's lifetime (the
+    /// respawn loop must terminate even at `death_rate = 1.0`).
+    pub max_deaths: u64,
+    /// Class whose device windows inflate by `brownout_scale`
+    /// (thermal-throttle emulation). Matches `Backend::device_class`.
+    pub brownout_class: Option<String>,
+    /// Window multiplier for the browned-out class (>= 1).
+    pub brownout_scale: f64,
+    /// Class on which every `execute_batch` fails transiently — a
+    /// whole-class outage the circuit breaker should route around.
+    pub blackout_class: Option<String>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            exec_error_rate: 0.0,
+            panic_rate: 0.0,
+            stall_rate: 0.0,
+            stall_us: 0,
+            death_rate: 0.0,
+            max_deaths: 4,
+            brownout_class: None,
+            brownout_scale: 8.0,
+            blackout_class: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Does this plan inject anything? Inert plans (seed-only, e.g.
+    /// CI's pinned-seed env with no configured faults) cost nothing:
+    /// the server skips wrapping entirely.
+    pub fn is_active(&self) -> bool {
+        self.exec_error_rate > 0.0
+            || self.panic_rate > 0.0
+            || (self.stall_rate > 0.0 && self.stall_us > 0)
+            || self.death_rate > 0.0
+            || self.brownout_class.is_some()
+            || self.blackout_class.is_some()
+    }
+
+    /// Apply a `key=value,key=value` spec (the [`FAULT_ENV`] format)
+    /// on top of this plan. Keys match the `[fault]` table; unknown
+    /// keys and malformed values are errors, not silent no-ops.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault spec item `{part}` is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let as_f64 = || -> Result<f64> {
+                value.parse().map_err(|_| anyhow!("fault spec `{key}`: bad number `{value}`"))
+            };
+            let as_u64 = || -> Result<u64> {
+                value.parse().map_err(|_| anyhow!("fault spec `{key}`: bad integer `{value}`"))
+            };
+            match key {
+                "seed" => self.seed = as_u64()?,
+                "exec_error_rate" => self.exec_error_rate = as_f64()?,
+                "panic_rate" => self.panic_rate = as_f64()?,
+                "stall_rate" => self.stall_rate = as_f64()?,
+                "stall_us" => self.stall_us = as_u64()?,
+                "death_rate" => self.death_rate = as_f64()?,
+                "max_deaths" => self.max_deaths = as_u64()?,
+                "brownout_class" => self.brownout_class = Some(value.to_string()),
+                "brownout_scale" => self.brownout_scale = as_f64()?,
+                "blackout_class" => self.blackout_class = Some(value.to_string()),
+                other => bail!("unknown fault spec key `{other}`"),
+            }
+        }
+        self.validate()
+    }
+
+    /// Range-check every knob (rates in [0, 1], scale >= 1).
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("exec_error_rate", self.exec_error_rate),
+            ("panic_rate", self.panic_rate),
+            ("stall_rate", self.stall_rate),
+            ("death_rate", self.death_rate),
+        ] {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                bail!("fault {name} must be in [0, 1], got {rate}");
+            }
+        }
+        if !self.brownout_scale.is_finite() || self.brownout_scale < 1.0 {
+            bail!("fault brownout_scale must be >= 1, got {}", self.brownout_scale);
+        }
+        Ok(())
+    }
+
+    /// Resolve the effective plan from an optional configured plan
+    /// plus the [`FAULT_ENV`] override (env wins per key). Returns
+    /// `None` when the result injects nothing.
+    pub fn resolve(configured: Option<&FaultPlan>) -> Result<Option<FaultPlan>> {
+        let env = std::env::var(FAULT_ENV).ok().filter(|s| !s.is_empty());
+        Self::resolve_with(configured, env.as_deref())
+    }
+
+    /// [`FaultPlan::resolve`] with the env value passed explicitly —
+    /// pure, so the merge table is unit-testable without touching the
+    /// process environment.
+    pub fn resolve_with(
+        configured: Option<&FaultPlan>,
+        env_spec: Option<&str>,
+    ) -> Result<Option<FaultPlan>> {
+        let mut plan = configured.cloned().unwrap_or_default();
+        if let Some(spec) = env_spec {
+            plan.apply_spec(spec)
+                .map_err(|e| anyhow!("parsing {FAULT_ENV} override `{spec}`: {e:#}"))?;
+        }
+        plan.validate()?;
+        Ok(plan.is_active().then_some(plan))
+    }
+
+    /// Derive a deterministic per-stream RNG (one per wrapper, keyed
+    /// by a stable label such as the worker index).
+    pub fn stream(&self, label: &str) -> Rng {
+        Rng::new(self.seed ^ fnv1a_64(label))
+    }
+}
+
+/// Pool-wide budget for injected worker deaths: `death_rate` draws
+/// pass only while the shared budget holds, so respawn loops
+/// terminate. Consulted by the executor loop *outside* the per-chunk
+/// panic guard (a death is a thread unwind, not a chunk error).
+#[derive(Debug)]
+pub struct DeathInjector {
+    rate: f64,
+    remaining: AtomicI64,
+    rng: Mutex<Rng>,
+}
+
+impl DeathInjector {
+    /// Build from a plan (shared by every worker; the RNG stream is
+    /// labeled `death`).
+    pub fn new(plan: &FaultPlan) -> Self {
+        Self {
+            rate: plan.death_rate,
+            remaining: AtomicI64::new(plan.max_deaths.min(i64::MAX as u64) as i64),
+            rng: Mutex::new(plan.stream("death")),
+        }
+    }
+
+    /// Should the calling worker die now? Draws the shared stream and
+    /// spends one unit of the death budget on success.
+    pub fn should_die(&self) -> bool {
+        if self.rate <= 0.0 || self.remaining.load(Ordering::Relaxed) <= 0 {
+            return false;
+        }
+        let hit = self.rng.lock().expect("death rng lock").chance(self.rate);
+        hit && self.remaining.fetch_sub(1, Ordering::Relaxed) > 0
+    }
+}
+
+/// What the fault stream decided for one `execute_batch` call.
+enum ExecFault {
+    None,
+    Stall(Duration),
+    Error,
+    Panic,
+}
+
+/// A fault-injecting [`Backend`] wrapper. Numerics, variant index,
+/// and chunk capacities delegate untouched; `execute_batch` and
+/// `device_window` consult the plan first. Identity holds when no
+/// fault fires: a surviving call is bit-identical to the inner
+/// backend's result.
+pub struct FaultBackend {
+    inner: Arc<dyn Backend>,
+    plan: Arc<FaultPlan>,
+    rng: Mutex<Rng>,
+}
+
+impl FaultBackend {
+    /// Wrap `inner` with `plan`, drawing from the stream labeled
+    /// `label` (one wrapper per worker keeps streams disjoint).
+    pub fn wrap(inner: Arc<dyn Backend>, plan: Arc<FaultPlan>, label: &str) -> Arc<dyn Backend> {
+        let rng = Mutex::new(plan.stream(label));
+        Arc::new(Self { inner, plan, rng })
+    }
+
+    fn class_matches(&self, which: &Option<String>) -> bool {
+        which.as_deref() == Some(self.inner.device_class())
+    }
+
+    fn draw_exec_fault(&self) -> ExecFault {
+        if self.class_matches(&self.plan.blackout_class) {
+            return ExecFault::Error;
+        }
+        let mut rng = self.rng.lock().expect("fault rng lock");
+        if rng.chance(self.plan.exec_error_rate) {
+            ExecFault::Error
+        } else if rng.chance(self.plan.panic_rate) {
+            ExecFault::Panic
+        } else if self.plan.stall_us > 0 && rng.chance(self.plan.stall_rate) {
+            ExecFault::Stall(Duration::from_micros(self.plan.stall_us))
+        } else {
+            ExecFault::None
+        }
+    }
+}
+
+impl Backend for FaultBackend {
+    fn device_class(&self) -> &str {
+        self.inner.device_class()
+    }
+
+    fn kernel_path(&self) -> &str {
+        self.inner.kernel_path()
+    }
+
+    fn chunk_cap(&self, family: &str) -> usize {
+        self.inner.chunk_cap(family)
+    }
+
+    fn variant_for_batch(&self, family: &str, batch: usize) -> Option<(&str, usize)> {
+        self.inner.variant_for_batch(family, batch)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.inner.spec(name)
+    }
+
+    fn execute_batch(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        scratch: &mut ExecScratch,
+    ) -> Result<Vec<f32>> {
+        match self.draw_exec_fault() {
+            ExecFault::None => {}
+            ExecFault::Stall(d) => std::thread::sleep(d),
+            ExecFault::Error => {
+                let class = self.inner.device_class();
+                if self.class_matches(&self.plan.blackout_class) {
+                    bail!("{TRANSIENT_MARKER}: class `{class}` blacked out");
+                }
+                bail!("{TRANSIENT_MARKER}: injected execute error on `{class}`");
+            }
+            ExecFault::Panic => {
+                panic!("{TRANSIENT_MARKER}: injected kernel panic");
+            }
+        }
+        self.inner.execute_batch(name, inputs, active, scratch)
+    }
+
+    fn device_window(&self, family: &str, batch: usize) -> Duration {
+        let window = self.inner.device_window(family, batch);
+        if self.class_matches(&self.plan.brownout_class) {
+            window.mul_f64(self.plan.brownout_scale)
+        } else {
+            window
+        }
+    }
+
+    fn transfer_window(&self, family: &str) -> Duration {
+        self.inner.transfer_window(family)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct StubBackend {
+        class: &'static str,
+    }
+
+    impl Backend for StubBackend {
+        fn device_class(&self) -> &str {
+            self.class
+        }
+        fn kernel_path(&self) -> &str {
+            "scalar"
+        }
+        fn chunk_cap(&self, _family: &str) -> usize {
+            8
+        }
+        fn variant_for_batch(&self, _family: &str, _batch: usize) -> Option<(&str, usize)> {
+            Some(("stub_b8", 8))
+        }
+        fn spec(&self, _name: &str) -> Result<&ArtifactSpec> {
+            bail!("stub backend has no manifest")
+        }
+        fn execute_batch(
+            &self,
+            _name: &str,
+            inputs: &[Vec<f32>],
+            _active: usize,
+            _scratch: &mut ExecScratch,
+        ) -> Result<Vec<f32>> {
+            Ok(inputs.first().cloned().unwrap_or_default())
+        }
+        fn device_window(&self, _family: &str, _batch: usize) -> Duration {
+            Duration::from_micros(100)
+        }
+        fn transfer_window(&self, _family: &str) -> Duration {
+            Duration::from_micros(10)
+        }
+    }
+
+    fn wrap(plan: FaultPlan) -> Arc<dyn Backend> {
+        FaultBackend::wrap(Arc::new(StubBackend { class: "pascal" }), Arc::new(plan), "w0")
+    }
+
+    fn exec(b: &Arc<dyn Backend>) -> Result<Vec<f32>> {
+        b.execute_batch("stub_b8", &[vec![1.0, 2.0]], 1, &mut ExecScratch::default())
+    }
+
+    #[test]
+    fn default_plan_is_inert_and_transparent() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_active());
+        let b = wrap(plan);
+        assert_eq!(exec(&b).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(b.device_window("f", 4), Duration::from_micros(100));
+        assert_eq!(b.device_class(), "pascal");
+        assert_eq!(b.chunk_cap("f"), 8);
+    }
+
+    #[test]
+    fn spec_parses_overrides_and_rejects_junk() {
+        let mut plan = FaultPlan::default();
+        plan.apply_spec("seed=42, exec_error_rate=0.25, brownout_class=pavlov, stall_us=50")
+            .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.exec_error_rate, 0.25);
+        assert_eq!(plan.brownout_class.as_deref(), Some("pavlov"));
+        assert_eq!(plan.stall_us, 50);
+        for bad in ["nonsense", "frob=1", "exec_error_rate=lots", "panic_rate=1.5"] {
+            assert!(
+                FaultPlan::default().apply_spec(bad).is_err(),
+                "spec `{bad}` should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_merges_env_over_config_and_drops_inert_plans() {
+        // Seed-only env (CI's pinned-seed chaos leg) over no config:
+        // still inert, so the server wraps nothing.
+        assert!(FaultPlan::resolve_with(None, Some("seed=7")).unwrap().is_none());
+        assert!(FaultPlan::resolve_with(None, None).unwrap().is_none());
+        // Env overrides the configured seed but keeps configured rates.
+        let cfg = FaultPlan { seed: 1, exec_error_rate: 0.5, ..FaultPlan::default() };
+        let merged = FaultPlan::resolve_with(Some(&cfg), Some("seed=99")).unwrap().unwrap();
+        assert_eq!(merged.seed, 99);
+        assert_eq!(merged.exec_error_rate, 0.5);
+        // Junk env is a startup error, not a silent no-op.
+        assert!(FaultPlan::resolve_with(None, Some("seed=banana")).is_err());
+    }
+
+    #[test]
+    fn validation_bounds_rates_and_scale() {
+        let bad = FaultPlan { exec_error_rate: 1.5, ..FaultPlan::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultPlan { brownout_scale: 0.5, ..FaultPlan::default() };
+        assert!(bad.validate().is_err());
+        let bad = FaultPlan { death_rate: -0.1, ..FaultPlan::default() };
+        assert!(bad.validate().is_err());
+        assert!(FaultPlan::default().validate().is_ok());
+    }
+
+    #[test]
+    fn injected_errors_are_transient_and_deterministic() {
+        let plan = FaultPlan { seed: 7, exec_error_rate: 0.5, ..FaultPlan::default() };
+        let observe = |label: &str| -> Vec<bool> {
+            let b = FaultBackend::wrap(
+                Arc::new(StubBackend { class: "pascal" }),
+                Arc::new(plan.clone()),
+                label,
+            );
+            (0..32).map(|_| exec(&b).is_err()).collect()
+        };
+        let a = observe("w0");
+        assert_eq!(a, observe("w0"), "same seed + stream must reproduce");
+        assert_ne!(a, observe("w1"), "streams are disjoint per label");
+        assert!(a.iter().any(|&e| e) && a.iter().any(|&e| !e), "rate 0.5 mixes");
+        // Every injected error carries the retryable marker.
+        let b = wrap(FaultPlan { exec_error_rate: 1.0, ..FaultPlan::default() });
+        let err = format!("{:#}", exec(&b).unwrap_err());
+        assert!(is_retryable(&err), "{err}");
+        assert!(!is_retryable("expected 2 inputs, got 1"), "shape errors fail fast");
+        assert!(is_retryable("executor panicked: boom"), "caught panics retry");
+    }
+
+    #[test]
+    fn blackout_fails_every_execute_on_matching_class_only() {
+        let plan = FaultPlan { blackout_class: Some("pascal".into()), ..FaultPlan::default() };
+        let b = wrap(plan.clone());
+        for _ in 0..8 {
+            let err = format!("{:#}", exec(&b).unwrap_err());
+            assert!(err.contains("blacked out") && is_retryable(&err), "{err}");
+        }
+        let other = FaultBackend::wrap(
+            Arc::new(StubBackend { class: "pavlov" }),
+            Arc::new(plan),
+            "w0",
+        );
+        assert!(exec(&other).is_ok(), "other classes are untouched");
+    }
+
+    #[test]
+    fn brownout_inflates_windows_on_matching_class_only() {
+        let plan = FaultPlan {
+            brownout_class: Some("pascal".into()),
+            brownout_scale: 8.0,
+            ..FaultPlan::default()
+        };
+        let b = wrap(plan.clone());
+        assert_eq!(b.device_window("f", 1), Duration::from_micros(800));
+        assert!(exec(&b).is_ok(), "brownout slows, never fails");
+        let other = FaultBackend::wrap(
+            Arc::new(StubBackend { class: "pavlov" }),
+            Arc::new(plan),
+            "w0",
+        );
+        assert_eq!(other.device_window("f", 1), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn injected_panics_are_caught_by_a_chunk_guard() {
+        let plan = FaultPlan { panic_rate: 1.0, ..FaultPlan::default() };
+        let b = wrap(plan);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec(&b)));
+        assert!(caught.is_err(), "panic_rate = 1 must panic");
+    }
+
+    #[test]
+    fn death_budget_bounds_injected_deaths() {
+        let plan = FaultPlan { death_rate: 1.0, max_deaths: 3, ..FaultPlan::default() };
+        let d = DeathInjector::new(&plan);
+        let deaths = (0..10).filter(|_| d.should_die()).count();
+        assert_eq!(deaths, 3, "budget caps deaths");
+        let never = DeathInjector::new(&FaultPlan::default());
+        assert!((0..10).all(|_| !never.should_die()), "rate 0 never dies");
+    }
+}

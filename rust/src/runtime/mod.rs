@@ -32,7 +32,8 @@
 //! (`coordinator::device`). The trait's contract (Send + Sync,
 //! bit-identity per kernel path, advisory timing windows) is
 //! documented on [`Backend`]; the future native PJRT client joins the
-//! pool through the same seam.
+//! pool through the same seam, and the chaos suite's deterministic
+//! fault shim ([`fault::FaultBackend`]) wraps any of them.
 //!
 //! # Sharing
 //!
@@ -55,12 +56,14 @@
 //! manifest exists.
 
 pub mod artifacts;
+pub mod fault;
 mod reference;
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use artifacts::{default_batch_axis, manifest_load_count, ArtifactSpec, Manifest};
+pub use fault::{DeathInjector, FaultBackend, FaultPlan, FAULT_ENV};
 pub use reference::{ExecScratch, POISON_INPUT};
 
 use artifacts::batch_suffix;

@@ -1,0 +1,557 @@
+//! Chaos suite: the fault-tolerance contracts, end to end through the
+//! server, with deterministic faults injected at the `Backend` seam:
+//!
+//! * **transient retry** — injected execute errors and kernel panics
+//!   are retried within the bounded attempt budget; every delivered
+//!   response stays bit-exact and in order, and nothing fails;
+//! * **supervised respawn** — injected worker deaths (a panic outside
+//!   the per-chunk guard) are survived: the supervisor re-queues the
+//!   dead worker's family lease and respawns it under the same class
+//!   binding (`workers_respawned`), losing no requests;
+//! * **blackout failover** — a whole device class failing transiently
+//!   trips its circuit breaker; placed families re-route to the
+//!   next-best class in their modeled-latency ranking and the run
+//!   completes bit-exact with FIFO intact (the acceptance scenario);
+//! * **brownout failover** — the breaker also trips on observed
+//!   latency alone (windows inflated past the degraded ratio), with
+//!   zero failures and zero retries;
+//! * **admission pricing** — under a roster, the modeled admission
+//!   wait prices the *aggregate* drain rate across spill-eligible
+//!   classes, not just the placed class;
+//! * **shutdown during drain** — worker deaths racing `shutdown()`
+//!   (with the escalator holding in-flight jobs) can neither strand a
+//!   lease nor hang the join;
+//! * **conservation property** — across batch sizes 1/4/8 on flat and
+//!   roster pools, `completed + jobs_shed + jobs_expired + failed ==
+//!   offered`, `fifo_violations == 0`, and delivered responses are
+//!   bit-exact against a fault-free run.
+//!
+//! Fault plans are configured per server (never via `MENSA_FAULT`, so
+//! parallel tests cannot interfere); CI's chaos leg overlays a pinned
+//! seed through the env, which these assertions tolerate by
+//! construction (wide probabilistic margins or rate-1.0 determinism).
+
+use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
+use mensa::coordinator::{device, DeviceProfile, Server};
+use mensa::runtime::FaultPlan;
+use mensa::util::rng::Rng;
+use std::fmt::Write as _;
+use std::sync::{mpsc, OnceLock};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        None
+    }
+}
+
+fn cnn_input(rng: &mut Rng) -> Vec<f32> {
+    (0..32 * 32 * 3).map(|_| rng.range_f64(0.0, 1.0) as f32).collect()
+}
+
+fn lstm_input(rng: &mut Rng) -> Vec<f32> {
+    (0..8 * 128).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+/// Batch-1 reference outputs from a fresh fault-free default server —
+/// the bit-exact target every faulted run must reproduce (batching,
+/// retries, respawns, and failover are all numerics-invariant).
+fn solo_outputs(dir: &str, reqs: &[(&str, Vec<f32>)]) -> Vec<Vec<f32>> {
+    let server = Server::start(dir, ServerConfig::default()).expect("solo server");
+    let out = reqs
+        .iter()
+        .map(|(family, x)| {
+            server.infer_blocking(family, vec![x.clone()], TIMEOUT).expect("solo").output
+        })
+        .collect();
+    server.shutdown();
+    out
+}
+
+/// The families the roster tests model (the serving artifacts' set).
+fn roster_families() -> Vec<String> {
+    vec!["edge_cnn".into(), "edge_lstm".into(), "joint".into()]
+}
+
+/// Two-class Pascal/Pavlov roster scaled so the slowest modeled
+/// (class, family) window is `slowest` — test-friendly absolute
+/// timing, heterogeneity (and with it placement and failover ranking)
+/// preserved. Returns the scaled specs plus their profiles, built
+/// exactly as `Server::start` builds them (profile index == class
+/// index).
+fn calibrated_roster(slowest: Duration) -> (Vec<DeviceClassSpec>, Vec<DeviceProfile>) {
+    let families = roster_families();
+    let probe = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: 1.0 },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 1, latency_scale: 1.0 },
+    ];
+    let base = device::build_profiles(&probe, &families, Duration::ZERO);
+    let max_base = base
+        .iter()
+        .flat_map(|p| families.iter().map(move |f| p.base_latency_s(f)))
+        .fold(0.0f64, f64::max);
+    let scale = slowest.as_secs_f64() / max_base.max(1e-12);
+    let roster: Vec<DeviceClassSpec> = probe
+        .into_iter()
+        .map(|mut spec| {
+            spec.latency_scale = scale;
+            spec
+        })
+        .collect();
+    let profiles = device::build_profiles(&roster, &families, Duration::ZERO);
+    (roster, profiles)
+}
+
+/// The class index `family` is placed on (rank 0) and its first
+/// failover target (rank 1), per the same ranking the breaker walks.
+fn primary_and_backup(profiles: &[DeviceProfile], family: &str) -> (usize, usize) {
+    let ranking = device::placement_ranking(profiles, &roster_families());
+    let order = &ranking[family];
+    (order[0], order[1])
+}
+
+#[test]
+fn transient_faults_retry_to_bit_exact_completion() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xFA17);
+    let reqs: Vec<(&str, Vec<f32>)> = (0..32).map(|_| ("edge_cnn", cnn_input(&mut rng))).collect();
+    let solo = solo_outputs(&dir, &reqs);
+
+    // Three workers spreading one family's chunks through the reorder
+    // buffer (the hardest ordering regime for front-requeued retries),
+    // under a heavy mix of injected errors, caught panics, and stalls.
+    // The attempt budget is far above any plausible consecutive-fault
+    // streak, so nothing may fail.
+    let cfg = ServerConfig {
+        workers: 3,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        reorder_depth: 3,
+        retry_max: 24,
+        fault: Some(FaultPlan {
+            seed: 0xFA17,
+            exec_error_rate: 0.3,
+            panic_rate: 0.2,
+            stall_rate: 0.1,
+            stall_us: 200,
+            ..FaultPlan::default()
+        }),
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("retries must absorb faults");
+        assert_eq!(resp.output, solo[i], "request {i}: bit-exact through retries");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 32);
+    assert_eq!(snap.failed, 0, "every injected fault is transient and within budget");
+    assert!(snap.jobs_retried >= 1, "a 0.3 error rate over 32 chunks must retry");
+    assert_eq!(snap.fifo_violations, 0, "front-requeued retries preserve delivery order");
+    server.shutdown();
+}
+
+#[test]
+fn worker_deaths_respawn_without_losing_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xDEAD);
+    let reqs: Vec<(&str, Vec<f32>)> = (0..8).map(|_| ("edge_cnn", cnn_input(&mut rng))).collect();
+    let solo = solo_outputs(&dir, &reqs);
+
+    // death_rate 1.0: every family take dies while the budget lasts.
+    // One family means takes are serialized on the lease, so exactly
+    // max_deaths takes die — each time the supervisor must release and
+    // re-offer the held queue and respawn — before take #4 serves the
+    // whole backlog.
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        fault: Some(FaultPlan { seed: 0xDEAD, death_rate: 1.0, max_deaths: 3, ..FaultPlan::default() }),
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("deaths must not lose requests");
+        assert_eq!(resp.output, solo[i], "request {i}: bit-exact across respawns");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.workers_respawned, 3, "every budgeted death respawned");
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed, 0, "a death at lease-take touches no in-flight chunk");
+    assert_eq!(snap.fifo_violations, 0);
+    server.shutdown();
+}
+
+#[test]
+fn blackout_fails_over_and_completes_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (roster, profiles) = calibrated_roster(Duration::from_millis(5));
+    let (primary, backup) = primary_and_backup(&profiles, "edge_cnn");
+    let primary_label = profiles[primary].class().to_string();
+    let backup_label = profiles[backup].class().to_string();
+    let mut rng = Rng::new(0xB1AC);
+    let reqs: Vec<(&str, Vec<f32>)> = (0..16).map(|_| ("edge_cnn", cnn_input(&mut rng))).collect();
+    let solo = solo_outputs(&dir, &reqs);
+
+    // The acceptance scenario: the placed class is blacked out (every
+    // execute fails transiently) AND workers die mid-run. Two strikes
+    // trip the breaker; the hour-long cooldown keeps it open for the
+    // whole test so no half-open probe reverts routing underneath the
+    // assertions. The retry budget must outlast the strikes a chunk
+    // burns before the trip re-routes its family.
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        devices: roster,
+        spill_after_us: 50_000,
+        retry_max: 10,
+        breaker_threshold: 2,
+        breaker_cooldown_us: 3_600_000_000,
+        fault: Some(FaultPlan {
+            seed: 0xB1AC,
+            blackout_class: Some(primary_label.clone()),
+            death_rate: 1.0,
+            max_deaths: 2,
+            ..FaultPlan::default()
+        }),
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("failover must serve it");
+        assert_eq!(resp.output, solo[i], "request {i}: bit-exact across the failover");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 16, "a blacked-out class loses no requests");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.jobs_shed, 0);
+    assert_eq!(snap.jobs_expired, 0);
+    assert_eq!(snap.fifo_violations, 0, "failover preserves per-family order");
+    assert!(snap.breaker_trips >= 1, "consecutive blackout failures must trip the breaker");
+    assert!(snap.failovers >= 1, "the placed family must re-route off the dead class");
+    assert!(snap.jobs_retried >= 1, "pre-trip failures must be retried, not failed");
+    assert_eq!(snap.workers_respawned, 2, "both budgeted deaths respawned");
+    let primary_jobs = snap
+        .jobs_by_device
+        .iter()
+        .find(|(class, _)| class == &primary_label)
+        .map_or(0, |(_, n)| *n);
+    assert_eq!(primary_jobs, 0, "no job can complete on the blacked-out class");
+    let backup_jobs = snap
+        .jobs_by_device
+        .iter()
+        .find(|(class, _)| class == &backup_label)
+        .map_or(0, |(_, n)| *n);
+    assert_eq!(backup_jobs, 16, "every job lands on the failover target");
+    server.shutdown();
+}
+
+#[test]
+fn brownout_trips_the_breaker_on_latency_alone() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (roster, profiles) = calibrated_roster(Duration::from_millis(2));
+    let (primary, _) = primary_and_backup(&profiles, "edge_cnn");
+    let primary_label = profiles[primary].class().to_string();
+    let mut rng = Rng::new(0xB708);
+    let reqs: Vec<(&str, Vec<f32>)> = (0..8).map(|_| ("edge_cnn", cnn_input(&mut rng))).collect();
+    let solo = solo_outputs(&dir, &reqs);
+
+    // Brownout inflates the placed class's observed windows 8x — far
+    // past the breaker's degraded ratio — while every execute still
+    // SUCCEEDS. The breaker must trip on latency health alone: zero
+    // failures, zero retries, and the family still fails over.
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        devices: roster,
+        breaker_threshold: 2,
+        breaker_cooldown_us: 3_600_000_000,
+        fault: Some(FaultPlan {
+            seed: 0xB708,
+            brownout_class: Some(primary_label),
+            brownout_scale: 8.0,
+            ..FaultPlan::default()
+        }),
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let rxs: Vec<_> = reqs
+        .iter()
+        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("brownout never fails");
+        assert_eq!(resp.output, solo[i], "request {i}: bit-exact under brownout");
+    }
+    let snap = server.metrics();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.jobs_retried, 0, "slow is not broken: nothing to retry");
+    assert!(snap.breaker_trips >= 1, "the degraded-latency ratio must trip the breaker");
+    assert!(snap.failovers >= 1, "the browned-out class's family must re-route");
+    assert_eq!(snap.fifo_violations, 0);
+    server.shutdown();
+}
+
+#[test]
+fn admission_prices_spill_eligible_classes_not_just_the_placed_one() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Scale so the PLACED class's edge_cnn window is exactly 20 ms;
+    // the other class is slower but still drains the queue in
+    // parallel past the spill threshold.
+    let families = roster_families();
+    let probe = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 1, latency_scale: 1.0 },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 1, latency_scale: 1.0 },
+    ];
+    let base = device::build_profiles(&probe, &families, Duration::ZERO);
+    let min_base = base
+        .iter()
+        .map(|p| p.base_latency_s("edge_cnn"))
+        .fold(f64::INFINITY, f64::min);
+    let scale = Duration::from_millis(20).as_secs_f64() / min_base.max(1e-12);
+    let roster: Vec<DeviceClassSpec> = probe
+        .into_iter()
+        .map(|mut spec| {
+            spec.latency_scale = scale;
+            spec
+        })
+        .collect();
+    let profiles = device::build_profiles(&roster, &families, Duration::ZERO);
+    let windows: Vec<f64> =
+        profiles.iter().map(|p| p.window("edge_cnn", 1).as_secs_f64()).collect();
+    let placed = windows.iter().copied().fold(f64::INFINITY, f64::min);
+    // The aggregate service estimate the fixed admission model uses:
+    // the inverse of the classes' summed drain rates (1 worker each).
+    let aggregate = 1.0 / windows.iter().map(|w| 1.0 / w).sum::<f64>();
+    assert!(aggregate < placed, "two drains are faster than one");
+
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        devices: roster,
+        overload: OverloadPolicy::Shed,
+        ..Default::default()
+    };
+    let server = Server::start(&dir, cfg).expect("start");
+    let mut rng = Rng::new(0xAD01);
+
+    // Below the aggregate estimate: unmeetable even with every class
+    // draining, so admission sheds.
+    let err = server
+        .infer_with_deadline(
+            "edge_cnn",
+            vec![cnn_input(&mut rng)],
+            Some(Duration::from_secs_f64(aggregate / 2.0)),
+        )
+        .expect_err("half the aggregate drain estimate must shed");
+    assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
+
+    // Between the aggregate estimate and the placed class's window:
+    // the placed class ALONE could never meet it, but the roster's
+    // summed drain rate can — pricing only the placed class (the old
+    // model) would wrongly shed this.
+    let rx = server
+        .infer_with_deadline(
+            "edge_cnn",
+            vec![cnn_input(&mut rng)],
+            Some(Duration::from_secs_f64((aggregate + placed) / 2.0)),
+        )
+        .expect("a budget the aggregate drain rate covers must be admitted");
+    let _ = rx.recv_timeout(TIMEOUT).expect("terminal reply");
+    let snap = server.metrics();
+    assert_eq!(snap.jobs_shed, 1, "only the sub-aggregate budget shed");
+    assert_eq!(
+        snap.completed + snap.jobs_expired,
+        1,
+        "the admitted request ran (or expired at dequeue on a slow host) — never shed"
+    );
+    server.shutdown();
+}
+
+/// Write a synthetic two-family manifest (shared input shape) once per
+/// process: `tiny` (12 → 6) escalates to `big` (12 → 20).
+fn escalation_manifest_dir() -> &'static str {
+    static DIR: OnceLock<String> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mensa_chaos_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("create manifest dir");
+        let mut m = String::from("# Generated by chaos.rs — escalation pair.\n");
+        for (fam, d_out) in [("tiny", 6usize), ("big", 20usize)] {
+            for b in [1usize, 4] {
+                let _ = write!(
+                    m,
+                    "\n[[artifact]]\nname = \"{fam}_b{b}\"\nfile = \"{fam}_b{b}.hlo.txt\"\n\
+                     num_inputs = 1\ninput0_shape = \"{b}x12\"\ninput0_batch_axis = 0\n\
+                     output_shape = \"{b}x{d_out}\"\noutput_batch_axis = 0\n\
+                     sha256 = \"referencebackend\"\n"
+                );
+            }
+        }
+        std::fs::write(dir.join("manifest.toml"), m).expect("write manifest");
+        dir.to_str().expect("utf8 temp dir").to_string()
+    })
+}
+
+#[test]
+fn shutdown_during_drain_survives_deaths_and_escalation() {
+    let dir = escalation_manifest_dir();
+    let inputs: Vec<Vec<f32>> = (0..8)
+        .map(|r| (0..12).map(|i| (((i * 29 + r * 11 + 5) % 97) as f32 / 97.0) - 0.5).collect())
+        .collect();
+    // Both possible terminal outputs per request: the escalated big
+    // result (escalator still armed) or the small fallback (disarm won
+    // the race during shutdown). Either is a valid drain — a dropped
+    // reply or a hung join is the bug this test pins.
+    let solo_server = Server::start(dir, ServerConfig::default()).expect("solo");
+    let solo_tiny: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| solo_server.infer_blocking("tiny", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    let solo_big: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| solo_server.infer_blocking("big", vec![x.clone()], TIMEOUT).unwrap().output)
+        .collect();
+    solo_server.shutdown();
+
+    // Every tiny request escalates (threshold 1.0), every early
+    // family take dies (rate 1.0, budget 2) — and shutdown() races
+    // the whole drain from another thread. A worker dying during the
+    // drain must not strand its re-queued lease; the respawned worker
+    // drains it and exits when the pool closes.
+    let cfg = ServerConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_timeout_us: 1_000,
+        families: vec![FamilyPolicy {
+            name: "tiny".into(),
+            priority: 0,
+            escalate_to: Some("big".into()),
+        }],
+        escalation_threshold: 1.0,
+        fault: Some(FaultPlan { seed: 0x5D0D, death_rate: 1.0, max_deaths: 2, ..FaultPlan::default() }),
+        ..Default::default()
+    };
+    let server = Server::start(dir, cfg).expect("start");
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| server.infer("tiny", vec![x.clone()]).expect("submit"))
+        .collect();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        let _ = done_tx.send(());
+    });
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(TIMEOUT)
+            .expect("every admitted request gets a terminal reply through the racing shutdown")
+            .expect("drain serves, never errors");
+        assert!(
+            resp.output == solo_big[i] || resp.output == solo_tiny[i],
+            "request {i}: must be the escalated big result or the small fallback"
+        );
+    }
+    done_rx
+        .recv_timeout(TIMEOUT)
+        .expect("shutdown() must join every thread — respawned workers included");
+}
+
+#[test]
+fn faulted_serving_conserves_requests_and_stays_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(0xC0DE);
+    let reqs: Vec<(&str, Vec<f32>)> = (0..12)
+        .map(|i| {
+            if i % 2 == 0 {
+                ("edge_cnn", cnn_input(&mut rng))
+            } else {
+                ("edge_lstm", lstm_input(&mut rng))
+            }
+        })
+        .collect();
+    let solo = solo_outputs(&dir, &reqs);
+    let (roster, _) = calibrated_roster(Duration::from_millis(2));
+
+    // (max_batch, roster?, reorder_depth): the batch axis the issue
+    // names, on both pool shapes, with the reorder buffer exercised
+    // where it composes (flat legs).
+    let legs: [(usize, bool, usize); 6] =
+        [(1, false, 2), (4, false, 2), (8, false, 0), (1, true, 0), (4, true, 0), (8, true, 0)];
+    for (leg, &(max_batch, use_roster, reorder_depth)) in legs.iter().enumerate() {
+        let cfg = ServerConfig {
+            workers: 2,
+            max_batch,
+            batch_timeout_us: 2_000,
+            reorder_depth,
+            devices: if use_roster { roster.clone() } else { Vec::new() },
+            overload: OverloadPolicy::Shed,
+            retry_max: 12,
+            fault: Some(FaultPlan {
+                seed: 0xC0DE + leg as u64,
+                exec_error_rate: 0.25,
+                panic_rate: 0.1,
+                stall_rate: 0.1,
+                stall_us: 200,
+                ..FaultPlan::default()
+            }),
+            ..Default::default()
+        };
+        let server = Server::start(&dir, cfg).expect("start");
+        let rxs: Vec<_> = reqs
+            .iter()
+            .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+            .collect();
+        let mut delivered = 0u64;
+        let mut shed = 0u64;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv_timeout(TIMEOUT).expect("terminal reply") {
+                Ok(resp) => {
+                    delivered += 1;
+                    assert_eq!(
+                        resp.output, solo[i],
+                        "leg {leg} (batch {max_batch}, roster {use_roster}): request {i} \
+                         must be bit-exact vs the fault-free run"
+                    );
+                }
+                Err(e) => {
+                    shed += 1;
+                    assert!(
+                        format!("{e:#}").contains("shed"),
+                        "leg {leg}: only overload shedding may refuse a request, got {e:#}"
+                    );
+                }
+            }
+        }
+        let snap = server.metrics();
+        assert_eq!(snap.completed, delivered, "leg {leg}");
+        assert_eq!(snap.jobs_shed, shed, "leg {leg}");
+        assert_eq!(
+            snap.completed + snap.jobs_shed + snap.jobs_expired + snap.failed,
+            12,
+            "leg {leg}: conservation — every offered request lands in exactly one bucket"
+        );
+        assert_eq!(snap.failed, 0, "leg {leg}: transient faults within budget never fail");
+        assert_eq!(snap.fifo_violations, 0, "leg {leg}: retries preserve per-family order");
+        server.shutdown();
+    }
+}
