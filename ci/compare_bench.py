@@ -65,6 +65,10 @@ TRACKED = {
     # failover arm's absolute goodput. Arrival-paced, so all three are
     # stable across runner generations.
     "degraded_failover": ("retention", "retention_gain", "failover_rps"),
+    # Layer-graph segmentation: a single hot multi-stage stream under
+    # the family lease, segmented + pipelined vs monolithic. Built on
+    # emulated device windows, so stable across runner generations.
+    "layer_pipeline": ("speedup", "segmented_rps"),
     "gemm_dense": ("speedup",),
     "kernel_dense": ("speedup",),
     # Panel-prepacked weight layout vs row-major (scalar kernels both
@@ -119,6 +123,12 @@ ABS_FLOORS = {
     # parity means armed recovery serves no better than none at all.
     ("degraded_failover", "retention"): 0.5,
     ("degraded_failover", "retention_gain"): 1.5,
+    # A segmented pipeline at (or below) parity with the monolithic
+    # lease means segmentation buys no pipelining at all — the PR 9
+    # tentpole's broken-feature signal. With balanced 4-segment cuts
+    # the steady state approaches 4x; 1.15 leaves room for ragged cuts
+    # and fill/drain ramps while still catching a dead pipeline.
+    ("layer_pipeline", "speedup"): 1.15,
 }
 
 
@@ -268,6 +278,22 @@ def self_test():
     _, failures = check(
         {"degraded_failover": {"retention": 0.8, "retention_gain": 15.0}}, fo_base)
     assert not failures, f"healthy failover metrics must pass, got {failures}"
+
+    # Layer-pipeline floor: a dead pipeline (segmented at parity with
+    # the monolithic lease) must fail even though the relative band
+    # would allow it (2.5 * (1 - 0.35) = 1.625 > 1.15, but parity 1.0
+    # is under the absolute floor).
+    pipe_base = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {"layer_pipeline": {"speedup": 2.5, "segmented_rps": 800.0}},
+    }
+    _, failures = check(
+        {"layer_pipeline": {"speedup": 1.0, "segmented_rps": 900.0}}, pipe_base)
+    assert any("layer_pipeline.speedup" in f for f in failures), (
+        f"pipeline parity must trip the absolute floor, got {failures}")
+    _, failures = check(
+        {"layer_pipeline": {"speedup": 1.8, "segmented_rps": 400.0}}, pipe_base)
+    assert not failures, f"in-band pipeline metrics must pass, got {failures}"
 
     # write_baseline round-trips through check.
     regen = write_baseline(healthy, "self-test")

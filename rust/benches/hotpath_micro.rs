@@ -82,6 +82,21 @@
 //!   every placed request, so `retention_gain` (failover retention
 //!   over bare retention, saturated at ~25x) shows what the recovery
 //!   ladder buys.
+//! * `layer_pipeline` — PR 9's tentpole A/B: a single hot multi-stage
+//!   family (`edge_rcnn`, four dense stages, proxied by the zoo's
+//!   mixed CNN-front/LSTM-back RCNN1) under the family-lease
+//!   discipline (`reorder_depth = 0`), monolithic vs segmented
+//!   (`segment_level`, `max_segments = 4`). The lease pins the
+//!   monolithic stream's chunks to one worker at a time; segmentation
+//!   cuts each chunk into profiled per-layer segments whose
+//!   continuation lanes (`edge_rcnn@s`) each hold their own lease, so
+//!   the SAME strictly-FIFO stream pipelines across workers —
+//!   `fifo_violations` stays 0 and every response is bit-exact vs the
+//!   monolithic arm. A third leg serves the segmented stream on a
+//!   calibrated Pascal + Pavlov roster: segments land on their
+//!   modeled-argmin classes (≥ 2 classes execute) and every class
+//!   boundary charges an activation-transfer window
+//!   (`cross_device_transfers > 0`), still bit-exact.
 //!
 //! Kernel microbenchmarks ride along: naive scan vs blocked/transposed
 //! (real `edge_cnn_b8`), per-sample vs batched GEMM (synthetic
@@ -143,6 +158,14 @@ const ESC_LARGE_OUT: usize = 1024;
 const FAILOVER_REQUESTS: usize = 240;
 const FAILOVER_BURST: usize = 12;
 const FAILOVER_DEVICE_US: u64 = 700;
+/// Layer-pipeline A/B: the `edge_rcnn` family carries `PIPE_STAGES`
+/// dense input blocks, so its reference variants expose that many
+/// runtime stages for `segment_level` to cut (`max_segments` is set
+/// to the same value). 640 open-loop requests coalesce into ~80
+/// eight-row chunks — enough for the pipeline's steady state to
+/// dominate its fill/drain ramps.
+const PIPE_REQUESTS: usize = 640;
+const PIPE_STAGES: usize = 4;
 
 fn main() {
     timer::header("hotpath_micro");
@@ -550,6 +573,26 @@ fn write_bench_artifacts(families: &[String]) -> String {
             );
         }
     }
+    // Layer-pipeline family: `edge_rcnn` proxies to the zoo's mixed
+    // CNN-front/LSTM-back RCNN1 for profiling, and its PIPE_STAGES
+    // dense input blocks give the reference backend that many runtime
+    // stages for `segment_level` to cut.
+    for b in [1usize, 4, 8] {
+        let _ = write!(
+            manifest,
+            "\n[[artifact]]\nname = \"edge_rcnn_b{b}\"\nfile = \"edge_rcnn_b{b}.hlo.txt\"\n\
+             num_inputs = {PIPE_STAGES}\n"
+        );
+        for i in 0..PIPE_STAGES {
+            let _ =
+                write!(manifest, "input{i}_shape = \"{b}x{BENCH_IN}\"\ninput{i}_batch_axis = 0\n");
+        }
+        let _ = write!(
+            manifest,
+            "output_shape = \"{b}x{BENCH_OUT}\"\noutput_batch_axis = 0\n\
+             sha256 = \"referencebackend\"\n"
+        );
+    }
     std::fs::write(dir.join("manifest.toml"), manifest).expect("write bench manifest");
     dir.to_str().expect("utf8 temp dir").to_string()
 }
@@ -612,7 +655,7 @@ fn submit_with_retry(
 ) -> std::sync::mpsc::Receiver<anyhow::Result<mensa::coordinator::InferenceResponse>> {
     let deadline = Instant::now() + Duration::from_secs(120);
     loop {
-        match server.infer(family, vec![input.to_vec()]) {
+        match server.infer_request(family, vec![input.to_vec()]).send() {
             Ok(rx) => return rx,
             Err(e) => {
                 assert!(
@@ -662,6 +705,8 @@ fn run_case_with(
         reorder_depth: opts.reorder_depth,
         reorder_depth_max: opts.reorder_depth_max,
         chunk_level: opts.chunk_level,
+        segment_level: false,
+        max_segments: PIPE_STAGES,
         panic_on_poison: false,
         devices,
         transfer_us: 50,
@@ -800,6 +845,8 @@ fn run_overload_arm(dir: &str, family: &str, shed: bool) -> OverloadArm {
         reorder_depth: BENCH_WORKERS,
         reorder_depth_max: 0,
         chunk_level: true,
+        segment_level: false,
+        max_segments: PIPE_STAGES,
         panic_on_poison: false,
         devices: Vec::new(),
         transfer_us: 50,
@@ -824,7 +871,7 @@ fn run_overload_arm(dir: &str, family: &str, shed: bool) -> OverloadArm {
             // Admission control rejects some submissions outright in
             // the shed arm; those count against SLO attainment, not as
             // bench failures.
-            match server.infer(family, vec![input.clone()]) {
+            match server.infer_request(family, vec![input.clone()]).send() {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => rejected += 1,
             }
@@ -915,6 +962,8 @@ fn run_failover_arm(
         reorder_depth: 0,
         reorder_depth_max: 0,
         chunk_level: true,
+        segment_level: false,
+        max_segments: PIPE_STAGES,
         panic_on_poison: false,
         devices,
         transfer_us: 50,
@@ -1053,6 +1102,8 @@ fn escalation_config(threshold: f64, hierarchical: bool) -> ServerConfig {
         reorder_depth: BENCH_WORKERS,
         reorder_depth_max: 0,
         chunk_level: true,
+        segment_level: false,
+        max_segments: PIPE_STAGES,
         panic_on_poison: false,
         devices: Vec::new(),
         transfer_us: 50,
@@ -1113,6 +1164,152 @@ fn run_escalation_arm(
     }
     server.shutdown();
     (inputs.len() as f64 / wall, snap.mean_batch, snap.escalations as f64 / inputs.len() as f64)
+}
+
+/// Deterministic per-request input sets for the `layer_pipeline`
+/// arms: every arm serves the identical load, so responses compare
+/// bit-for-bit across monolithic, segmented, and cross-class runs.
+fn pipeline_inputs() -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Rng::new(0x9199_11E5);
+    (0..PIPE_REQUESTS)
+        .map(|_| {
+            (0..PIPE_STAGES)
+                .map(|_| (0..BENCH_IN).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// Calibrated two-class roster for the pipeline's heterogeneous leg:
+/// the shared `latency_scale` pins the slowest class's batch-1 window
+/// for `edge_rcnn` at `BENCH_DEVICE_US` (the [`failover_roster`]
+/// recipe), and the 2 + 2 worker split keeps the pool at
+/// `BENCH_WORKERS` so the legs stay comparable.
+fn pipeline_roster() -> Vec<DeviceClassSpec> {
+    let probe = vec![
+        DeviceClassSpec { class: DeviceClass::Pascal, workers: 2, latency_scale: 1.0 },
+        DeviceClassSpec { class: DeviceClass::Pavlov, workers: 2, latency_scale: 1.0 },
+    ];
+    let fams = vec!["edge_rcnn".to_string()];
+    let profiles = device::build_profiles(&probe, &fams, Duration::ZERO);
+    let slowest =
+        profiles.iter().map(|p| p.base_latency_s("edge_rcnn")).fold(0.0f64, f64::max);
+    let scale = (BENCH_DEVICE_US as f64 * 1e-6) / slowest.max(1e-12);
+    probe.into_iter().map(|s| DeviceClassSpec { latency_scale: scale, ..s }).collect()
+}
+
+/// Run one `layer_pipeline` arm: `PIPE_REQUESTS` open-loop requests on
+/// the multi-stage `edge_rcnn` family under the family-lease
+/// discipline (`reorder_depth = 0`). The lease is the point of the
+/// A/B: the monolithic arm's chunks serialize on one worker at a
+/// time, while the segmented arm's continuation lanes (`edge_rcnn@s`)
+/// each hold their own lease, so the same strictly-FIFO stream fills
+/// one worker per pipeline stage. Returns the run's stats, every
+/// response output in submission order (the bit-exactness witness),
+/// and the charged cross-class transfer count.
+fn run_pipeline_arm(
+    dir: &str,
+    segmented: bool,
+    devices: Vec<DeviceClassSpec>,
+    inputs: &[Vec<Vec<f32>>],
+) -> (RunStats, Vec<Vec<f32>>, u64) {
+    let multi_class = devices.len() > 1;
+    let cfg = ServerConfig {
+        workers: BENCH_WORKERS,
+        max_batch: 8,
+        batch_timeout_us: 300,
+        queue_depth: 2 * PIPE_REQUESTS,
+        work_stealing: true,
+        batcher_shards: 1,
+        naive_kernels: false,
+        kernel: KernelKind::Auto,
+        packed_weights: true,
+        // Roster legs take their windows from the calibrated class
+        // profiles, flat legs from the legacy knob (as mensa_placement
+        // does).
+        device_latency_us: if multi_class { 0 } else { BENCH_DEVICE_US },
+        batched_gemm: true,
+        reorder_depth: 0,
+        reorder_depth_max: 0,
+        chunk_level: true,
+        segment_level: segmented,
+        max_segments: PIPE_STAGES,
+        panic_on_poison: false,
+        devices,
+        transfer_us: 50,
+        spill_after_us: 20_000,
+        deadline_us: 0,
+        overload: OverloadPolicy::Block,
+        families: Vec::new(),
+        escalation_threshold: 0.35,
+        retry_max: 0,
+        breaker_threshold: 0,
+        breaker_cooldown_us: 250_000,
+        fault: None,
+    };
+    let server = Server::start(dir, cfg).expect("bench server start");
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(inputs.len());
+    for req in inputs {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            match server.infer_request("edge_rcnn", req.clone()).send() {
+                Ok(rx) => break rxs.push(rx),
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "pipeline submission stalled: {e:#}");
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+    let mut outputs = Vec::with_capacity(inputs.len());
+    for rx in rxs {
+        let resp =
+            rx.recv_timeout(Duration::from_secs(120)).expect("bench recv").expect("bench ok");
+        outputs.push(resp.output);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics();
+    assert_eq!(snap.fifo_violations, 0, "bench load must stay FIFO (reorder contract)");
+    assert_eq!(snap.failed, 0, "pipeline arms must not fail requests");
+    if segmented {
+        assert!(
+            snap.segments_executed >= 2 * snap.jobs,
+            "segmented arm must cut every chunk ({} segments over {} jobs)",
+            snap.segments_executed,
+            snap.jobs
+        );
+        assert_eq!(
+            snap.segment_hops,
+            snap.segments_executed - snap.jobs,
+            "every non-final segment hands off exactly once"
+        );
+        let workers = snap
+            .workers_by_family
+            .iter()
+            .find(|(f, _)| f == "edge_rcnn")
+            .map(|(_, ws)| ws.len())
+            .unwrap_or(0);
+        assert!(workers >= 2, "single hot stream must pipeline across >= 2 workers");
+    } else {
+        assert_eq!(snap.segments_executed, 0, "monolithic arm must not segment");
+    }
+    if multi_class {
+        assert!(
+            snap.jobs_by_device.len() >= 2,
+            "roster leg must execute on >= 2 device classes, got {:?}",
+            snap.jobs_by_device
+        );
+        if segmented {
+            assert!(
+                snap.cross_device_transfers > 0,
+                "cross-class pipeline must charge activation transfers"
+            );
+        }
+    }
+    server.shutdown();
+    let stats = RunStats { rps: inputs.len() as f64 / wall, mean_batch: snap.mean_batch };
+    (stats, outputs, snap.cross_device_transfers)
 }
 
 fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
@@ -1282,6 +1479,38 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         },
     );
 
+    // Layer-pipeline comparison (PR 9 tentpole): a single hot
+    // multi-stage stream under the family lease, monolithic vs
+    // profiled per-layer segments pipelined across the pool. Both
+    // arms serve the identical pinned load; responses must match
+    // bit-for-bit (same kernels, same per-sample walk — the pipeline
+    // only moves WHERE each stage range runs).
+    let pipe_inputs = pipeline_inputs();
+    let (mono, mono_out, _) = run_pipeline_arm(dir, false, Vec::new(), &pipe_inputs);
+    let (seg, seg_out, _) = run_pipeline_arm(dir, true, Vec::new(), &pipe_inputs);
+    assert_eq!(mono_out, seg_out, "segmented pipeline must stay bit-exact vs monolithic");
+    push_case(
+        &mut cases,
+        CaseResult {
+            name: "layer_pipeline",
+            labels: ("monolithic_rps", "segmented_rps"),
+            baseline_rps: mono.rps,
+            treatment_rps: seg.rps,
+            treatment_mean_batch: seg.mean_batch,
+        },
+    );
+    // Heterogeneous leg: the same segmented stream on a calibrated
+    // Pascal + Pavlov roster. The run itself asserts that >= 2
+    // classes execute and that class boundaries charge transfer
+    // windows; here we pin the cross-roster numerics.
+    let (hetero, hetero_out, transfers) =
+        run_pipeline_arm(dir, true, pipeline_roster(), &pipe_inputs);
+    assert_eq!(hetero_out, mono_out, "cross-class pipeline must stay bit-exact");
+    println!(
+        "{:<24} segmented_rps {:>9.0} req/s | >= 2 classes | {transfers} transfers charged",
+        "layer_pipeline_hetero", hetero.rps,
+    );
+
     // Overload-protection comparison (PR 7 tentpole): one family at
     // ~4x its emulated service capacity, every request on a 6 ms
     // budget — `overload = "block"` vs `"shed"`. Blocking answers
@@ -1440,6 +1669,18 @@ fn bench_serving(dir: &str, families: &[String]) -> ServingResult {
         println!(
             "WARN: Mensa placement speedup {:.2}x <= 1x over the homogeneous roster",
             placement.speedup()
+        );
+    }
+    let pipe = cases.iter().find(|c| c.name == "layer_pipeline").expect("pipeline case");
+    if pipe.speedup() > 1.0 {
+        println!(
+            "PASS: layer pipeline {:.2}x over the monolithic lease on a single hot stream",
+            pipe.speedup()
+        );
+    } else {
+        println!(
+            "WARN: layer pipeline speedup {:.2}x <= 1x on the single-stream case",
+            pipe.speedup()
         );
     }
     if overload.slo_gain > 1.0 && overload.shed_slo > overload.block_slo {

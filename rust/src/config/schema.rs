@@ -456,6 +456,21 @@ pub struct ServerConfig {
     /// execution time, front-to-back on one worker) for the
     /// `oversized_job_chunks` benchmark A/B.
     pub chunk_level: bool,
+    /// Pipelined layer-graph segmentation: cut each family's layer
+    /// graph into profiled segments (`scheduler::segment`) and run a
+    /// chunk's segments as a pipeline across pool workers, so one hot
+    /// stream of a deep model fills several workers (and, on a
+    /// `[[device]]` roster, each segment lands on its own modeled
+    /// argmin class). Client-observed FIFO still holds: the reorder
+    /// buffer sequences final deliveries per `(seq, chunk)` exactly as
+    /// before. Requires `chunk_level = true`; off by default (the
+    /// monolithic baseline the `layer_pipeline` bench A/Bs against).
+    pub segment_level: bool,
+    /// Upper bound on segments per family when `segment_level` is on
+    /// (clamped to at least 1; 1 degenerates to the monolithic path).
+    /// The planner may choose fewer segments when cut transfer costs
+    /// outweigh the pipeline win.
+    pub max_segments: usize,
     /// Test hook (never set in production configs, not parsed from
     /// TOML): make the reference kernels panic when an input contains
     /// the `runtime::POISON_INPUT` sentinel, so the panic-isolation
@@ -551,6 +566,8 @@ impl Default for ServerConfig {
             reorder_depth: 0,
             reorder_depth_max: 0,
             chunk_level: true,
+            segment_level: false,
+            max_segments: 4,
             panic_on_poison: false,
             devices: Vec::new(),
             transfer_us: 100,
@@ -591,6 +608,8 @@ impl ServerConfig {
                     "reorder_depth",
                     "reorder_depth_max",
                     "chunk_level",
+                    "segment_level",
+                    "max_segments",
                     "transfer_us",
                     "spill_after_us",
                     "deadline_us",
@@ -643,6 +662,12 @@ impl ServerConfig {
             }
             if let Some(v) = t.get("chunk_level").and_then(Value::as_bool) {
                 cfg.chunk_level = v;
+            }
+            if let Some(v) = t.get("segment_level").and_then(Value::as_bool) {
+                cfg.segment_level = v;
+            }
+            if let Some(v) = t.get("max_segments").and_then(Value::as_int) {
+                cfg.max_segments = v.max(1) as usize;
             }
             if let Some(v) = t.get("transfer_us").and_then(Value::as_int) {
                 cfg.transfer_us = v.max(0) as u64;
@@ -830,6 +855,28 @@ memory = "hbm_internal"
         assert_eq!(cfg.batcher_shards, 1);
         assert_eq!(cfg.reorder_depth, 0, "negative reorder depth clamps to lease mode");
         assert_eq!(cfg.reorder_depth_max, 0, "negative adaptive cap clamps to disabled");
+    }
+
+    #[test]
+    fn segmentation_knobs_parse_with_defaults() {
+        let d = ServerConfig::default();
+        assert!(!d.segment_level, "segmentation is opt-in");
+        assert_eq!(d.max_segments, 4);
+        let cfg = ServerConfig::from_toml(
+            "[server]\nsegment_level = true\nmax_segments = 6\n",
+        )
+        .unwrap();
+        assert!(cfg.segment_level);
+        assert_eq!(cfg.max_segments, 6);
+        // Clamping: 0 / negative budgets degrade to monolithic, not
+        // to an error (the planner treats 1 as "don't cut").
+        let cfg = ServerConfig::from_toml("[server]\nmax_segments = 0\n").unwrap();
+        assert_eq!(cfg.max_segments, 1);
+        let cfg = ServerConfig::from_toml("[server]\nmax_segments = -2\n").unwrap();
+        assert_eq!(cfg.max_segments, 1);
+        // Typos in the new keys are rejected like every other knob.
+        let err = ServerConfig::from_toml("[server]\nsegment_lvl = true\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key `segment_lvl`"), "{err:#}");
     }
 
     #[test]

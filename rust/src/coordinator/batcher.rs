@@ -38,6 +38,7 @@
 use super::pool::ExecutorPool;
 use super::Request;
 use crate::config::ServerConfig;
+use crate::runtime::SegmentState;
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -70,9 +71,57 @@ pub struct BatchJob {
     /// The batcher always emits `0`; the executor's retry path
     /// re-enqueues a bumped copy until `retry_max` is exhausted.
     pub attempts: u32,
+    /// Pipeline segment this work item executes (0-based). The batcher
+    /// always emits segment 0; the executor's continuation path
+    /// re-enqueues the chunk at `segment + 1` until the final segment
+    /// delivers.
+    pub segment: u32,
+    /// Total pipeline segments for this chunk's family. `1` is the
+    /// monolithic (unsegmented) path — the batcher emits `1` for every
+    /// family without a segment plan.
+    pub segments: u32,
+    /// The carried intermediate state produced by the previous
+    /// segment (`None` for segment 0 and for unsegmented chunks).
+    pub carry: Option<SegmentState>,
+    /// Device class that executed the previous segment — the
+    /// cross-class activation-transfer charge fires when the current
+    /// worker's class differs. `None` for segment 0.
+    pub from_class: Option<String>,
+    /// Pool routing key override (`"family@segment"`): segmented
+    /// chunks queue, place, and lease per segment so a pipeline's
+    /// stages occupy different workers concurrently. `None` (the
+    /// monolithic path) keys by `family`.
+    pub route: Option<String>,
+}
+
+impl Default for BatchJob {
+    /// An empty single-segment chunk — the base most construction
+    /// sites extend with `..Default::default()` so the segment-
+    /// pipeline fields stay out of the monolithic paths' way.
+    fn default() -> Self {
+        Self {
+            family: String::new(),
+            seq: 0,
+            chunk: 0,
+            last: true,
+            requests: Vec::new(),
+            attempts: 0,
+            segment: 0,
+            segments: 1,
+            carry: None,
+            from_class: None,
+            route: None,
+        }
+    }
 }
 
 impl BatchJob {
+    /// The pool queue this chunk keys into: its segment route when
+    /// pipelined, its family otherwise.
+    pub fn queue_key(&self) -> &str {
+        self.route.as_deref().unwrap_or(&self.family)
+    }
+
     /// True when **every** deadline-carrying member request has blown
     /// its budget at `now` — the executor's dequeue-expiry test.
     /// Requests without deadlines never expire, so a mixed chunk (or a
@@ -127,6 +176,12 @@ pub struct Batcher {
     /// its reorder slot, so client-observed FIFO survives the shed.
     /// `None` (the default) keeps the blocking `push` discipline.
     shed_sink: Option<Arc<dyn Fn(BatchJob) + Send + Sync>>,
+    /// Pipeline segment counts per family (`segment_level` wiring,
+    /// from the server's startup segment plans): families present with
+    /// a count > 1 emit segment-0 chunks routed `"family@0"`, which
+    /// the executor then walks through the remaining segments. Absent
+    /// families emit plain monolithic chunks.
+    segment_of: Arc<HashMap<String, u32>>,
 }
 
 impl Batcher {
@@ -147,7 +202,16 @@ impl Batcher {
             chunk_caps,
             chunk_level: cfg.chunk_level,
             shed_sink: None,
+            segment_of: Arc::new(HashMap::new()),
         }
+    }
+
+    /// Attach the per-family pipeline segment counts (`segment_level`
+    /// wiring). Chunks of a family with a count > 1 are emitted at
+    /// segment 0 with the `"family@0"` pool route.
+    pub fn with_segments(mut self, segment_of: Arc<HashMap<String, u32>>) -> Self {
+        self.segment_of = segment_of;
+        self
     }
 
     /// Switch this shard to the `overload = "shed"` discipline:
@@ -262,6 +326,13 @@ impl Batcher {
         } else {
             usize::MAX
         };
+        // Segmented families enter the pipeline at segment 0 under
+        // their per-segment pool route; everyone else stays on the
+        // monolithic path (segments == 1, no route).
+        let (segments, route) = match self.segment_of.get(&family) {
+            Some(&n) if n > 1 => (n, Some(format!("{family}@0"))),
+            _ => (1, None),
+        };
         // Blocking mode: pushes may park on the family's inflight cap
         // — that is the backpressure path. Shed mode never parks: the
         // pool bounces the chunk and the sink fails it fast.
@@ -275,7 +346,9 @@ impl Batcher {
                     chunk,
                     last: true,
                     requests: rest,
-                    attempts: 0,
+                    segments,
+                    route,
+                    ..Default::default()
                 });
                 return;
             }
@@ -286,7 +359,9 @@ impl Batcher {
                 chunk,
                 last: false,
                 requests: rest,
-                attempts: 0,
+                segments,
+                route: route.clone(),
+                ..Default::default()
             });
             rest = tail;
             chunk += 1;
@@ -312,7 +387,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::pool::DepthPolicy;
+    use crate::coordinator::pool::{DepthPolicy, PoolTopology};
     use std::sync::mpsc;
     use std::thread;
 
@@ -338,7 +413,12 @@ mod tests {
         caps: Arc<HashMap<String, usize>>,
     ) -> (mpsc::Sender<Request>, mpsc::Receiver<BatchJob>) {
         let (req_tx, req_rx) = mpsc::channel();
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg, caps);
         thread::spawn(move || b.run());
         let (job_tx, job_rx) = mpsc::channel();
@@ -457,6 +537,61 @@ mod tests {
     }
 
     #[test]
+    fn segmented_families_emit_routed_segment_zero_chunks() {
+        // A family with a 3-segment plan enters the pipeline at
+        // segment 0 under its "family@0" pool route — on every chunk
+        // of an oversized flush — while unplanned families stay
+        // monolithic.
+        let (req_tx, req_rx) = mpsc::channel();
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
+        let mut caps = HashMap::new();
+        caps.insert("edge_lstm".to_string(), 2usize);
+        let cfg = ServerConfig { max_batch: 3, batch_timeout_us: 1_000_000, ..Default::default() };
+        let segment_of: Arc<HashMap<String, u32>> =
+            Arc::new([("edge_lstm".to_string(), 3u32)].into_iter().collect());
+        let b = Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::new(caps))
+            .with_segments(segment_of);
+        thread::spawn(move || b.run());
+        let (job_tx, job_rx) = mpsc::channel();
+        thread::spawn(move || {
+            while let Some(key) = pool.take_family(0) {
+                while let Some(job) = pool.next_job(&key, 0) {
+                    if job_tx.send(job).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+        let mut keep = Vec::new();
+        for _ in 0..3 {
+            let (r, rx) = req("edge_lstm");
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        for expect in [(0, false), (1, true)] {
+            let j = job_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!((j.chunk, j.last), expect);
+            assert_eq!(j.segment, 0, "the batcher always enters at segment 0");
+            assert_eq!(j.segments, 3);
+            assert_eq!(j.route.as_deref(), Some("edge_lstm@0"));
+            assert_eq!(j.queue_key(), "edge_lstm@0");
+            assert!(j.carry.is_none() && j.from_class.is_none());
+        }
+        // A family without a plan stays on the monolithic path.
+        let (r, _keep2) = req("edge_cnn");
+        req_tx.send(r).unwrap();
+        let j = job_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(j.family, "edge_cnn");
+        assert_eq!((j.segments, j.route.clone()), (1, None));
+        assert_eq!(j.queue_key(), "edge_cnn");
+    }
+
+    #[test]
     fn job_granular_mode_emits_oversized_flushes_whole() {
         let mut caps = HashMap::new();
         caps.insert("edge_lstm".to_string(), 2usize);
@@ -486,7 +621,12 @@ mod tests {
         // instead of parking the shard (a blocking batcher would hang
         // here forever).
         let (req_tx, req_rx) = mpsc::channel();
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         let cfg = ServerConfig { max_batch: 1, batch_timeout_us: 1_000, ..Default::default() };
         let shed: Arc<Mutex<Vec<BatchJob>>> = Arc::new(Mutex::new(Vec::new()));
         let store = Arc::clone(&shed);

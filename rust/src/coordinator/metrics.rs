@@ -145,6 +145,8 @@ struct Inner {
     jobs_retried: u64,
     breaker_trips: u64,
     failovers: u64,
+    segments_executed: u64,
+    segment_hops: u64,
 }
 
 /// Thread-safe metrics registry shared by the server components.
@@ -249,6 +251,16 @@ pub struct Snapshot {
     /// (reverted placements don't count — this tracks degraded-mode
     /// entries, not exits).
     pub failovers: u64,
+    /// Pipeline segments executed (`segment_level` mode): each stage
+    /// of a segmented chunk counts once, so a 3-segment chunk adds 3
+    /// here and 1 to `jobs`. Zero on the monolithic path.
+    pub segments_executed: u64,
+    /// Intermediate activation handoffs between pipeline segments
+    /// (`segments_executed` minus one per fully-executed chunk, in
+    /// the absence of expiries). Cross-*class* hops additionally
+    /// charge a transfer window and count in
+    /// `cross_device_transfers`.
+    pub segment_hops: u64,
 }
 
 impl Metrics {
@@ -374,6 +386,28 @@ impl Metrics {
         self.inner.lock().expect("metrics lock").failovers += 1;
     }
 
+    /// Record one executed pipeline segment of a segmented chunk:
+    /// per-segment worker and device-class attribution (the pipelining
+    /// and placement witnesses see every stage, not just the final
+    /// one), plus the chunk's single `jobs` increment on its last
+    /// segment — so a 3-segment chunk adds 3 to `segments_executed`,
+    /// 3 device attributions, and 1 to `jobs`.
+    pub fn record_segment(&self, family: &str, worker: usize, device: &str, last_segment: bool) {
+        let mut m = self.inner.lock().expect("metrics lock");
+        m.segments_executed += 1;
+        m.workers_by_family.entry(family.to_string()).or_default().insert(worker);
+        *m.jobs_by_device.entry(device.to_string()).or_insert(0) += 1;
+        if last_segment {
+            m.jobs += 1;
+        }
+    }
+
+    /// Record one intermediate handoff from a finished segment to its
+    /// successor's lane.
+    pub fn record_segment_hop(&self) {
+        self.inner.lock().expect("metrics lock").segment_hops += 1;
+    }
+
     /// Snapshot current values.
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().expect("metrics lock");
@@ -417,6 +451,8 @@ impl Metrics {
             jobs_retried: m.jobs_retried,
             breaker_trips: m.breaker_trips,
             failovers: m.failovers,
+            segments_executed: m.segments_executed,
+            segment_hops: m.segment_hops,
         }
     }
 }
@@ -563,6 +599,8 @@ mod tests {
         assert_eq!(s.jobs_retried, 0);
         assert_eq!(s.breaker_trips, 0);
         assert_eq!(s.failovers, 0);
+        assert_eq!(s.segments_executed, 0);
+        assert_eq!(s.segment_hops, 0);
     }
 
     #[test]
@@ -604,6 +642,30 @@ mod tests {
         // Recovery counters never masquerade as failures.
         assert_eq!(s.failed, 0);
         assert_eq!(s.jobs_panicked, 0);
+    }
+
+    #[test]
+    fn segment_counters_accumulate() {
+        let m = Metrics::default();
+        // One 3-segment chunk: three stage executions (the last two on
+        // a second worker/class), two handoffs.
+        m.record_segment("edge_lstm", 0, "pascal", false);
+        m.record_segment_hop();
+        m.record_segment("edge_lstm", 1, "pavlov", false);
+        m.record_segment_hop();
+        m.record_segment("edge_lstm", 1, "pavlov", true);
+        let s = m.snapshot();
+        assert_eq!(s.segments_executed, 3);
+        assert_eq!(s.segment_hops, 2);
+        // Every stage attributes its worker and device class…
+        assert_eq!(s.workers_by_family, vec![("edge_lstm".to_string(), vec![0, 1])]);
+        assert_eq!(
+            s.jobs_by_device,
+            vec![("pascal".to_string(), 1), ("pavlov".to_string(), 2)]
+        );
+        // …but the chunk counts as one job, on its final segment only.
+        assert_eq!(s.jobs, 1);
+        assert_eq!(s.failed, 0);
     }
 
     #[test]

@@ -76,7 +76,21 @@
 //! and exists as the measured baseline for `benches/hotpath_micro.rs`
 //! and as a debugging fallback.
 //!
-//! **Heterogeneous mode** ([`ExecutorPool::new_hetero`], driven by the
+//! **Segment routes**: a pipelined chunk (`BatchJob::route` =
+//! `"family@segment"`, the `segment_level` feature) queues, places,
+//! and leases under its route key instead of its family, so each
+//! pipeline segment is an independent lane — one hot stream of a deep
+//! model occupies as many workers as it has segments even under the
+//! single-holder lease, and on a roster each lane lands on its own
+//! placed class. Priorities, failover overrides, and the admission
+//! probe [`ExecutorPool::queued_for`] all resolve a route to its base
+//! family, so per-family policy follows the stream through every
+//! lane. Workers hand finished segments back through
+//! [`ExecutorPool::push_continuation`] — a push that never blocks and
+//! stays legal on a closed pool, because the producing worker is
+//! itself mid-drain and re-enters `take_family` afterwards.
+//!
+//! **Heterogeneous mode** (a non-flat [`PoolTopology`], driven by the
 //! `[[device]]` roster in `ServerConfig`) binds every worker to a
 //! device class and splits the shared ready queue per class
 //! ([`PoolTopology`]): a ready family is offered to its *preferred*
@@ -126,6 +140,17 @@ const EWMA_ALPHA: f64 = 0.25;
 /// family (queue empty, last holder released) skips the hysteresis and
 /// returns to the lease depth outright.
 pub const NARROW_HYSTERESIS: u32 = 2;
+
+/// The family behind a pool queue key: strips the `"@segment"` route
+/// suffix, so per-family policy (priorities, placement fallbacks,
+/// failover overrides, the admission probe) follows a pipelined
+/// stream through every segment lane. Plain family keys pass through.
+fn base_of(key: &str) -> &str {
+    match key.split_once('@') {
+        Some((family, _)) => family,
+        None => key,
+    }
+}
 
 /// How many workers may drain one family concurrently.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -194,9 +219,30 @@ impl PoolTopology {
         Self { worker_class, class_of_family, classes, spill_after }
     }
 
-    /// Preferred class for `family` (absent → class 0).
-    fn class_of(&self, family: &str) -> usize {
-        self.class_of_family.get(family).copied().unwrap_or(0)
+    /// The flat topology: `workers` interchangeable workers on one
+    /// anonymous class with no placements. This is the degenerate
+    /// roster [`ExecutorPool::new`] turns into the homogeneous pool
+    /// (shared ready queue or static family-hash fan-out — never the
+    /// class-aware spill paths).
+    pub fn homogeneous(workers: usize) -> Self {
+        Self::new(vec![0; workers.max(1)], HashMap::new(), Duration::ZERO)
+    }
+
+    /// Whether this topology carries no routing information (a single
+    /// class and no placements) — the homogeneous degenerate case.
+    pub fn is_flat(&self) -> bool {
+        self.classes == 1 && self.class_of_family.is_empty()
+    }
+
+    /// Preferred class for a queue key: exact entry first (segment
+    /// routes are placed per lane), then the base family's entry,
+    /// then class 0.
+    fn class_of(&self, key: &str) -> usize {
+        self.class_of_family
+            .get(key)
+            .or_else(|| self.class_of_family.get(base_of(key)))
+            .copied()
+            .unwrap_or(0)
     }
 }
 
@@ -280,29 +326,40 @@ pub struct ExecutorPool {
 }
 
 impl ExecutorPool {
-    /// Create a pool for `workers` executor threads fed by `producers`
-    /// batcher shards. `stealing` selects work-stealing (default) vs
-    /// the static family-hash baseline. `depth` sets how many workers
-    /// may drain one family concurrently — any policy allowing more
-    /// than one requires the caller to reorder completions before
-    /// replying (see [`ReorderBuffer`]); without stealing the policy
-    /// is forced to the single-holder lease.
-    pub fn new(workers: usize, stealing: bool, producers: usize, depth: DepthPolicy) -> Self {
-        assert!(workers > 0, "executor pool needs at least one worker");
-        let ready_queues = if stealing { 1 } else { workers };
-        let depth = if stealing { depth } else { DepthPolicy::Static(1) };
-        Self::build(workers, stealing, producers, depth, ready_queues, None)
-    }
-
-    /// Create a heterogeneous pool: one worker per `topology.worker_class`
-    /// entry, one ready queue per device class, class-aware dispatch
-    /// with stale-spill stealing (see the module docs). Heterogeneous
-    /// dispatch *is* a stealing discipline — the static family-hash
-    /// baseline has no class concept — so `is_stealing()` reports true.
-    pub fn new_hetero(topology: PoolTopology, producers: usize, depth: DepthPolicy) -> Self {
+    /// Create a pool from its device-class topology, fed by
+    /// `producers` batcher shards. The single constructor covers both
+    /// rosters:
+    ///
+    /// * a **flat** topology ([`PoolTopology::homogeneous`] — one
+    ///   class, no placements) builds the homogeneous pool, where
+    ///   `work_stealing` selects the shared ready queue (default) vs
+    ///   the PR 1 static family-hash fan-out (which also forces the
+    ///   single-holder lease);
+    /// * any topology with real placement information builds the
+    ///   heterogeneous pool — one ready queue per class, class-aware
+    ///   dispatch with stale-spill stealing (see the module docs).
+    ///   Heterogeneous dispatch *is* a stealing discipline (the
+    ///   static baseline has no class concept), so `work_stealing` is
+    ///   ignored and `is_stealing()` reports true.
+    ///
+    /// `depth` sets how many workers may drain one queue concurrently
+    /// — any policy allowing more than one requires the caller to
+    /// reorder completions before replying (see [`ReorderBuffer`]).
+    pub fn new(
+        topology: PoolTopology,
+        work_stealing: bool,
+        producers: usize,
+        depth: DepthPolicy,
+    ) -> Self {
         let workers = topology.worker_class.len();
-        let ready_queues = topology.classes;
-        Self::build(workers, true, producers, depth, ready_queues, Some(topology))
+        if topology.is_flat() {
+            let ready_queues = if work_stealing { 1 } else { workers };
+            let depth = if work_stealing { depth } else { DepthPolicy::Static(1) };
+            Self::build(workers, work_stealing, producers, depth, ready_queues, None)
+        } else {
+            let ready_queues = topology.classes;
+            Self::build(workers, true, producers, depth, ready_queues, Some(topology))
+        }
     }
 
     fn build(
@@ -347,9 +404,11 @@ impl ExecutorPool {
         self
     }
 
-    /// The family's configured priority tier (absent → 0).
+    /// The configured priority tier behind a queue key (absent → 0).
+    /// Segment routes map to their base family's tier, so every lane
+    /// of a pipelined stream claims and sheds at the same priority.
     pub fn priority_of(&self, family: &str) -> u8 {
-        self.priorities.get(family).copied().unwrap_or(0)
+        self.priorities.get(base_of(family)).copied().unwrap_or(0)
     }
 
     /// Whether this pool steals (true) or pins families (false).
@@ -473,11 +532,15 @@ impl ExecutorPool {
         }
     }
 
-    /// The device class `family` is currently dispatched to: the
-    /// failover override while its breaker is open, the topology
-    /// placement otherwise.
+    /// The device class a queue key is currently dispatched to: the
+    /// failover override while its breaker is open (installed under
+    /// either the exact key or the base family — segment lanes follow
+    /// their family's breaker), the topology placement otherwise.
     fn effective_class(st: &PoolState, t: &PoolTopology, family: &str) -> usize {
-        st.overrides.get(family).copied().unwrap_or_else(|| t.class_of(family))
+        match st.overrides.get(family).or_else(|| st.overrides.get(base_of(family))) {
+            Some(&cls) => cls,
+            None => t.class_of(family),
+        }
     }
 
     /// Whether worker `w` must not drain `family` right now: a failover
@@ -488,7 +551,8 @@ impl ExecutorPool {
         if st.closed {
             return false;
         }
-        match (&self.topology, st.overrides.get(family)) {
+        let over = st.overrides.get(family).or_else(|| st.overrides.get(base_of(family)));
+        match (&self.topology, over) {
             (Some(t), Some(&cls)) => t.worker_class[w] != cls,
             _ => false,
         }
@@ -548,7 +612,7 @@ impl ExecutorPool {
         let cap = self.inflight_cap();
         let mut guard = self.state.lock().expect("pool lock");
         loop {
-            let queued = guard.queues.get(&job.family).map_or(0, |q| q.jobs.len());
+            let queued = guard.queues.get(job.queue_key()).map_or(0, |q| q.jobs.len());
             if queued < cap {
                 break;
             }
@@ -570,7 +634,7 @@ impl ExecutorPool {
             .inflight_cap()
             .saturating_mul(self.priority_of(&job.family) as usize + 1);
         let mut guard = self.state.lock().expect("pool lock");
-        let queued = guard.queues.get(&job.family).map_or(0, |q| q.jobs.len());
+        let queued = guard.queues.get(job.queue_key()).map_or(0, |q| q.jobs.len());
         if queued >= cap {
             return Some(job);
         }
@@ -578,22 +642,37 @@ impl ExecutorPool {
         None
     }
 
-    /// Chunks currently queued (not yet claimed) for `family`. The
-    /// admission controller's backlog probe: one lock, no allocation.
+    /// Chunks currently queued (not yet claimed) for `family`, summed
+    /// across its segment lanes. The admission controller's backlog
+    /// probe: one lock, no allocation beyond the key scan.
     pub fn queued_for(&self, family: &str) -> usize {
         let guard = self.state.lock().expect("pool lock");
-        guard.queues.get(family).map_or(0, |q| q.jobs.len())
+        guard
+            .queues
+            .iter()
+            .filter(|(key, _)| base_of(key) == family)
+            .map(|(_, q)| q.jobs.len())
+            .sum()
     }
 
-    /// Shared enqueue body (caller holds the lock and has settled the
-    /// block/shed capacity question): fold the backlog sample, queue
-    /// the chunk, and dispatch the family to an idle worker or a ready
-    /// queue.
+    /// Shared enqueue body for the batcher-facing paths (caller holds
+    /// the lock and has settled the block/shed capacity question).
+    /// Producers must not push after signing off.
     fn admit(&self, guard: &mut PoolState, job: BatchJob) {
         debug_assert!(!guard.closed, "push after close");
+        self.admit_any(guard, job);
+    }
+
+    /// Enqueue a chunk under its queue key (the segment route when the
+    /// chunk is pipelined, the family otherwise): fold the backlog
+    /// sample, queue the chunk, and dispatch the key to an idle worker
+    /// or a ready queue. Legal on a closed pool — segment
+    /// continuations arrive from workers mid-drain (see
+    /// [`ExecutorPool::push_continuation`]).
+    fn admit_any(&self, guard: &mut PoolState, job: BatchJob) {
         let st = guard;
         // Adaptive policy only: fold the queue length this push brings
-        // the family to into its backlog EWMA (sampled at dispatch)
+        // the key to into its backlog EWMA (sampled at dispatch)
         // and record the granted depth (gauge, high watermark). Static
         // policies skip the bookkeeping entirely — their depth is
         // constant, and this runs under the contended pool lock.
@@ -601,23 +680,24 @@ impl ExecutorPool {
             DepthPolicy::Static(d) => d.max(1),
             DepthPolicy::Adaptive { max } => {
                 let sample =
-                    st.queues.get(&job.family).map_or(0, |q| q.jobs.len()) as f64 + 1.0;
-                self.fold_backlog_sample(st, &job.family, sample, max)
+                    st.queues.get(job.queue_key()).map_or(0, |q| q.jobs.len()) as f64 + 1.0;
+                let key = job.queue_key().to_string();
+                self.fold_backlog_sample(st, &key, sample, max)
             }
         };
-        // Enqueue, cloning the family name only when a dispatch is
-        // actually needed: in the steady state (family at its granted
-        // depth or already queued ready) a push is clone-free — the
-        // holders drain the backlog.
-        let family = match st.queues.get_mut(&job.family) {
+        // Enqueue, cloning the key only when a dispatch is actually
+        // needed: in the steady state (key at its granted depth or
+        // already queued ready) a push is clone-free — the holders
+        // drain the backlog.
+        let family = match st.queues.get_mut(job.queue_key()) {
             Some(q) => {
                 let dispatch = q.holders.len() < allowed && !q.ready_queued;
-                let family = dispatch.then(|| job.family.clone());
+                let family = dispatch.then(|| job.queue_key().to_string());
                 q.jobs.push_back(job);
                 family
             }
             None => {
-                let family = job.family.clone();
+                let family = job.queue_key().to_string();
                 let mut jobs = VecDeque::new();
                 jobs.push_back(job);
                 st.queues.insert(
@@ -676,15 +756,15 @@ impl ExecutorPool {
     pub fn requeue_front(&self, job: BatchJob) {
         let mut guard = self.state.lock().expect("pool lock");
         let st = &mut *guard;
-        let family = match st.queues.get_mut(&job.family) {
+        let family = match st.queues.get_mut(job.queue_key()) {
             Some(q) => {
                 let dispatch = q.holders.is_empty() && !q.ready_queued;
-                let family = dispatch.then(|| job.family.clone());
+                let family = dispatch.then(|| job.queue_key().to_string());
                 q.jobs.push_front(job);
                 family
             }
             None => {
-                let family = job.family.clone();
+                let family = job.queue_key().to_string();
                 let mut jobs = VecDeque::new();
                 jobs.push_back(job);
                 st.queues.insert(
@@ -705,6 +785,22 @@ impl ExecutorPool {
             st.ready[rq].push_back((family, Instant::now()));
         }
         self.work.notify_all();
+    }
+
+    /// Enqueue a pipeline continuation: a chunk whose previous segment
+    /// just finished on some worker, routed to its next segment's lane
+    /// (`job.route`). Unlike [`ExecutorPool::push`] this never blocks
+    /// on the inflight cap — the chunk's stream already holds exactly
+    /// one in-flight position per lane, so continuations cannot pile
+    /// up beyond what admission let in — and it is legal on a closed
+    /// pool: the producing worker is itself mid-drain and re-enters
+    /// `take_family` after releasing its current hold, so a ready
+    /// entry pushed here is always observed before the last worker
+    /// exits.
+    pub fn push_continuation(&self, job: BatchJob) {
+        debug_assert!(job.segment > 0, "continuations start at segment 1");
+        let mut guard = self.state.lock().expect("pool lock");
+        self.admit_any(&mut guard, job);
     }
 
     /// Drop every hold and handoff worker `w` owns — the supervisor's
@@ -1104,14 +1200,7 @@ mod tests {
     use std::time::{Duration, Instant};
 
     fn job(family: &str, seq: u64) -> BatchJob {
-        BatchJob {
-            family: family.into(),
-            seq,
-            chunk: 0,
-            last: true,
-            requests: Vec::new(),
-            attempts: 0,
-        }
+        BatchJob { family: family.into(), seq, ..Default::default() }
     }
 
     /// Spawn a worker loop that forwards (worker, job) pairs to a
@@ -1137,7 +1226,12 @@ mod tests {
 
     #[test]
     fn same_family_jobs_arrive_in_push_order() {
-        let pool = Arc::new(ExecutorPool::new(3, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(3),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..3).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -1158,7 +1252,12 @@ mod tests {
 
     #[test]
     fn spaced_jobs_rotate_across_idle_workers() {
-        let pool = Arc::new(ExecutorPool::new(4, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(4),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..4).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -1183,7 +1282,12 @@ mod tests {
 
     #[test]
     fn static_mode_pins_families_to_their_hash_worker() {
-        let pool = Arc::new(ExecutorPool::new(2, false, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(2),
+            false,
+            1,
+            DepthPolicy::Static(1),
+        ));
         let (tx, rx) = mpsc::channel();
         let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
         drop(tx);
@@ -1208,7 +1312,12 @@ mod tests {
 
     #[test]
     fn close_drains_pending_queues() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         pool.push(job("a", 0));
         pool.push(job("b", 0));
         assert_eq!(pool.queued_jobs(), 2);
@@ -1226,7 +1335,12 @@ mod tests {
 
     #[test]
     fn push_blocks_at_family_cap_until_a_worker_drains() {
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         for seq in 0..FAMILY_INFLIGHT_CAP as u64 {
             pool.push(job("fam", seq));
         }
@@ -1257,7 +1371,12 @@ mod tests {
     fn lease_discipline_blocks_second_worker_on_same_family() {
         // Static(1): while worker 0 holds the family, worker 1 must
         // not receive its queued backlog.
-        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(2),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
         pool.push(job("hot", 0));
         pool.push(job("hot", 1));
         let p0 = Arc::clone(&pool);
@@ -1295,7 +1414,12 @@ mod tests {
 
     #[test]
     fn reorder_mode_lets_two_workers_drain_one_family() {
-        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Static(2)));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(2),
+            true,
+            1,
+            DepthPolicy::Static(2),
+        ));
         assert_eq!(pool.family_concurrency(), 2);
         pool.push(job("hot", 0));
         pool.push(job("hot", 1));
@@ -1339,7 +1463,12 @@ mod tests {
 
     #[test]
     fn adaptive_depth_widens_with_backlog_and_keeps_cold_families_leased() {
-        let pool = Arc::new(ExecutorPool::new(2, true, 1, DepthPolicy::Adaptive { max: 3 }));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(2),
+            true,
+            1,
+            DepthPolicy::Adaptive { max: 3 },
+        ));
         assert_eq!(pool.family_concurrency(), 3, "adaptive cap is the max concurrency");
         // No workers yet: the hot family's backlog builds (samples 1,
         // 2, 3, 4, 5), the EWMA climbs, and the granted depth widens
@@ -1375,7 +1504,12 @@ mod tests {
         // this thread: each pop folds the shrinking queue into the
         // EWMA and the final release resets the fully drained family
         // to the lease depth — no new pushes involved.
-        let pool = Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Adaptive { max: 4 }));
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Adaptive { max: 4 },
+        ));
         for seq in 0..8 {
             pool.push(job("hot", seq));
         }
@@ -1408,7 +1542,12 @@ mod tests {
     fn narrowing_waits_out_the_hysteresis_streak() {
         // Direct sample-level check of the hysteresis: a single
         // below-grant sample must not narrow; a streak must.
-        let pool = ExecutorPool::new(1, true, 1, DepthPolicy::Adaptive { max: 4 });
+        let pool = ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Adaptive { max: 4 },
+        );
         let mut st = pool.state.lock().expect("pool lock");
         // Build the grant up to the clamp (EWMA settles at 4.0).
         for _ in 0..3 {
@@ -1495,7 +1634,7 @@ mod tests {
     fn hetero_pool_routes_families_to_their_class_workers() {
         // Workers 0 (class 0) and 1 (class 1); spill effectively off.
         let t = topology(vec![0, 1], &[("a", 0), ("b", 1)], Duration::from_secs(3600));
-        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(t, true, 1, DepthPolicy::Static(1)));
         assert!(pool.is_stealing());
         assert_eq!(pool.topology().unwrap().classes, 2);
         let (tx, rx) = mpsc::channel();
@@ -1525,7 +1664,7 @@ mod tests {
         // Family "b" prefers class 1, but class 1's worker never runs:
         // after spill_after the class-0 worker must take it anyway.
         let t = topology(vec![0, 1], &[("b", 1)], Duration::from_millis(50));
-        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(t, true, 1, DepthPolicy::Static(1)));
         let (tx, rx) = mpsc::channel();
         let worker = spawn_worker(&pool, 0, tx);
         let t0 = Instant::now();
@@ -1548,7 +1687,7 @@ mod tests {
         // waiting out spill_after, or shutdown strands queued work
         // when a class's workers already exited.
         let t = topology(vec![0, 1], &[("b", 1)], Duration::from_secs(3600));
-        let pool = Arc::new(ExecutorPool::new_hetero(t, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(t, true, 1, DepthPolicy::Static(1)));
         pool.push(job("b", 0));
         pool.producer_done();
         let (tx, rx) = mpsc::channel();
@@ -1564,7 +1703,7 @@ mod tests {
         // No workers: the family's queue fills to the inflight cap,
         // after which try_push must hand the chunk straight back where
         // push would have parked the producer.
-        let pool = ExecutorPool::new(1, true, 1, DepthPolicy::Static(1));
+        let pool = ExecutorPool::new(PoolTopology::homogeneous(1), true, 1, DepthPolicy::Static(1));
         let cap = FAMILY_INFLIGHT_CAP;
         for seq in 0..cap as u64 {
             assert!(pool.try_push(job("fam", seq)).is_none(), "below cap must admit");
@@ -1582,7 +1721,8 @@ mod tests {
         let prios: HashMap<String, u8> =
             [("lo".to_string(), 0u8), ("hi".to_string(), 3u8)].into_iter().collect();
         let pool =
-            ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)).with_priorities(prios);
+            ExecutorPool::new(PoolTopology::homogeneous(1), true, 1, DepthPolicy::Static(1))
+                .with_priorities(prios);
         let cap = FAMILY_INFLIGHT_CAP;
         for seq in 0..cap as u64 {
             assert!(pool.try_push(job("lo", seq)).is_none());
@@ -1608,7 +1748,8 @@ mod tests {
         .into_iter()
         .collect();
         let pool =
-            ExecutorPool::new(1, true, 1, DepthPolicy::Static(1)).with_priorities(prios);
+            ExecutorPool::new(PoolTopology::homogeneous(1), true, 1, DepthPolicy::Static(1))
+                .with_priorities(prios);
         pool.push(job("lo_a", 0));
         pool.push(job("lo_b", 0));
         pool.push(job("hi", 0));
@@ -1638,14 +1779,134 @@ mod tests {
             escalated: false,
             reply,
         };
-        let j = BatchJob {
-            family: "edge_cnn".into(),
-            seq: 0,
-            chunk: 0,
-            last: true,
-            requests: vec![req],
-            attempts: 0,
-        };
+        let j = BatchJob { family: "edge_cnn".into(), requests: vec![req], ..Default::default() };
         assert_eq!(j.requests.len(), 1);
+    }
+
+    #[test]
+    fn homogeneous_topology_is_flat_and_builds_the_flat_pool() {
+        assert!(PoolTopology::homogeneous(3).is_flat());
+        let roster = topology(vec![0, 1], &[("a", 1)], Duration::from_millis(5));
+        assert!(!roster.is_flat(), "real placements are not the flat degenerate case");
+        // Even one class stops being flat once a placement exists.
+        let placed = topology(vec![0], &[("a", 0)], Duration::ZERO);
+        assert!(!placed.is_flat());
+        // The flat build must take the homogeneous paths: no topology,
+        // and static mode really is non-stealing.
+        let flat =
+            ExecutorPool::new(PoolTopology::homogeneous(2), false, 1, DepthPolicy::Static(3));
+        assert!(flat.topology().is_none());
+        assert!(!flat.is_stealing());
+        assert_eq!(flat.family_concurrency(), 1, "non-stealing forces the lease");
+    }
+
+    #[test]
+    fn segment_routes_lease_independently_and_keep_their_family() {
+        // Two chunks of ONE family, routed to different segment lanes:
+        // under the single-holder lease two workers must still drain
+        // them concurrently, because the lease is per queue key.
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(2),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
+        let mut j0 = job("fam", 0);
+        j0.segments = 2;
+        j0.route = Some("fam@0".into());
+        let mut j1 = job("fam", 0);
+        j1.segment = 1;
+        j1.segments = 2;
+        j1.route = Some("fam@1".into());
+        pool.push(j0);
+        pool.push(j1);
+        let k0 = pool.take_family(0).expect("lane for worker 0");
+        let k1 = pool.take_family(1).expect("lane for worker 1");
+        assert_ne!(k0, k1, "segment lanes are independent leases");
+        for (key, w) in [(k0, 0), (k1, 1)] {
+            let j = pool.next_job(&key, w).expect("queued chunk");
+            assert_eq!(j.family, "fam", "the true family rides along under a route key");
+            assert_eq!(j.queue_key(), key);
+            assert!(pool.next_job(&key, w).is_none());
+        }
+        pool.producer_done();
+        assert_eq!(pool.queued_jobs(), 0);
+    }
+
+    #[test]
+    fn push_continuation_is_legal_on_a_closed_pool() {
+        let pool = Arc::new(ExecutorPool::new(
+            PoolTopology::homogeneous(1),
+            true,
+            1,
+            DepthPolicy::Static(1),
+        ));
+        pool.producer_done();
+        let mut cont = job("fam", 0);
+        cont.segment = 1;
+        cont.segments = 2;
+        cont.route = Some("fam@1".into());
+        pool.push_continuation(cont);
+        let key = pool.take_family(0).expect("continuation is drainable after close");
+        assert_eq!(key, "fam@1");
+        let j = pool.next_job(&key, 0).expect("continuation chunk");
+        assert_eq!((j.family.as_str(), j.segment), ("fam", 1));
+        assert!(pool.next_job(&key, 0).is_none());
+        assert!(pool.take_family(0).is_none(), "pool still drains to exit");
+    }
+
+    #[test]
+    fn queued_for_sums_segment_lanes_and_priority_follows_the_base_family() {
+        let prios: HashMap<String, u8> = [("fam".to_string(), 3u8)].into_iter().collect();
+        let pool = ExecutorPool::new(PoolTopology::homogeneous(1), true, 1, DepthPolicy::Static(1))
+            .with_priorities(prios);
+        assert_eq!(pool.priority_of("fam@3"), 3, "route keys inherit the family tier");
+        assert_eq!(pool.priority_of("other@1"), 0);
+        let mut j0 = job("fam", 0);
+        j0.segments = 2;
+        j0.route = Some("fam@0".into());
+        let mut j1 = job("fam", 0);
+        j1.segment = 1;
+        j1.segments = 2;
+        j1.route = Some("fam@1".into());
+        pool.push(j0);
+        pool.push(j1);
+        pool.push(job("other", 0));
+        assert_eq!(pool.queued_for("fam"), 2, "admission probe sums the stream's lanes");
+        assert_eq!(pool.queued_for("other"), 1);
+        pool.producer_done();
+    }
+
+    #[test]
+    fn routed_chunks_follow_per_lane_placement_on_a_roster() {
+        // Lane fam@0 placed on class 0, lane fam@1 on class 1: each
+        // worker receives exactly its class's segment even though both
+        // chunks belong to one family.
+        let t = topology(vec![0, 1], &[("fam@0", 0), ("fam@1", 1)], Duration::from_secs(3600));
+        let pool = Arc::new(ExecutorPool::new(t, true, 1, DepthPolicy::Static(1)));
+        let (tx, rx) = mpsc::channel();
+        let workers: Vec<_> = (0..2).map(|w| spawn_worker(&pool, w, tx.clone())).collect();
+        drop(tx);
+        let mut j0 = job("fam", 0);
+        j0.segments = 2;
+        j0.route = Some("fam@0".into());
+        let mut j1 = job("fam", 0);
+        j1.segment = 1;
+        j1.segments = 2;
+        j1.route = Some("fam@1".into());
+        pool.push(j0);
+        pool.push(j1);
+        for _ in 0..2 {
+            let (w, j) = rx.recv_timeout(RECV).expect("routed chunk");
+            assert_eq!(
+                w as u32, j.segment,
+                "segment {} must land on its placed class's worker",
+                j.segment
+            );
+        }
+        pool.producer_done();
+        for t in workers {
+            t.join().unwrap();
+        }
     }
 }

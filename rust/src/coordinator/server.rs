@@ -104,6 +104,31 @@
 //! the FIFO invariant (`Snapshot::fifo_violations == 0`) holds under
 //! heterogeneous dispatch, which `tests/hetero_pool.rs` pins.
 //!
+//! # Pipeline segmentation (`segment_level`)
+//!
+//! With `segment_level = true` each multi-stage family's proxy model
+//! is cut into a [`SegmentPlan`](crate::scheduler::segment::
+//! SegmentPlan) at startup (bounded by `max_segments`, minimizing
+//! max-segment cost plus activation-transfer cost at the cuts), the
+//! plan's per-layer cost shares are mapped onto the runtime's stage
+//! axis, and chunks execute as a **pipeline**: the batcher emits each
+//! chunk at segment 0 under the pool route `"family@0"`, a worker
+//! executes that segment's stage range through
+//! [`Backend::execute_stage_range`], and the carried
+//! [`SegmentState`] hands off through a per-route ordering lane
+//! ([`SegRouter`]) into `"family@1"`, and so on. Each route is its
+//! own pool queue with its own lease, so `k` segments of one hot
+//! family stream across `k` workers even at `reorder_depth = 1` —
+//! the layer-as-scheduling-unit thesis at serving granularity. Under
+//! a `[[device]]` roster every route is placed independently on its
+//! segment's modeled-latency argmin class, and a chunk whose previous
+//! segment ran elsewhere is charged the transfer window
+//! (`Snapshot::cross_device_transfers`). Final segments submit to the
+//! per-family reorder buffer exactly like monolithic chunks, so
+//! client-observed FIFO (`Snapshot::fifo_violations == 0`) and
+//! bit-exactness against the monolithic path both hold — the
+//! `layer_pipeline` bench A/Bs the two modes.
+//!
 //! # Overload protection
 //!
 //! Past saturation the default (`overload = "block"`) discipline
@@ -131,8 +156,8 @@
 //!    deadline counts `deadline_misses`.
 //!
 //! Deadlines come from `deadline_us` (every request) or per call via
-//! [`ServerHandle::infer_with_deadline`]; requests without one never
-//! shed or expire.
+//! [`InferRequest::deadline`]; requests without one never shed or
+//! expire.
 //!
 //! # Hierarchical inference
 //!
@@ -152,11 +177,13 @@ use super::metrics::{Metrics, Snapshot};
 use super::pool::{DepthPolicy, ExecutorPool, PoolTopology, ReorderBuffer};
 use super::{worker_for_family, Request};
 use crate::accel::configs;
-use crate::config::{OverloadPolicy, ServerConfig};
+use crate::config::{OverloadPolicy, ServerConfig, MAX_PRIORITY};
 use crate::model::zoo;
 use crate::runtime::fault::is_retryable;
-use crate::runtime::{Backend, DeathInjector, ExecScratch, FaultBackend, FaultPlan, Runtime,
-    RuntimeOptions};
+use crate::runtime::{
+    ArtifactSpec, Backend, DeathInjector, ExecScratch, FaultBackend, FaultPlan, Runtime,
+    RuntimeOptions, SegmentState, StageOutcome,
+};
 use crate::scheduler::ScheduleCache;
 use crate::util::tensor;
 use anyhow::{anyhow, bail, Result};
@@ -281,6 +308,17 @@ impl Server {
             );
         }
 
+        // Pipeline segments are chunk-granular dispatch units: one
+        // pool entry per (chunk, segment). A job-granular entry splits
+        // inside the executor after routing already happened, so its
+        // sub-chunks could not be pipelined individually.
+        if cfg.segment_level && !cfg.chunk_level {
+            bail!(
+                "segment_level = true requires chunk_level = true: \
+                 pipeline segments are chunk-granular dispatch units"
+            );
+        }
+
         // Fault-injection shim: the `[fault]` config table merged with
         // the MENSA_FAULT env spec (env wins per key). An inert plan —
         // e.g. CI's pinned `seed=` with no configured faults — resolves
@@ -347,6 +385,19 @@ impl Server {
         let priorities: HashMap<String, u8> =
             cfg.families.iter().map(|f| (f.name.clone(), f.priority)).collect();
 
+        // Layer-graph segmentation (`segment_level`): cut each
+        // multi-stage family's proxy model into a pipelined plan and
+        // map its cost shares onto the runtime's stage axis. Built
+        // before the pool so per-segment routes can be placed.
+        let mut family_names: Vec<String> = families.iter().cloned().collect();
+        family_names.sort();
+        let pipelines: Arc<HashMap<String, FamilyPipeline>> = Arc::new(if cfg.segment_level {
+            build_pipelines(&family_names, &runtime, &cfg)
+        } else {
+            HashMap::new()
+        });
+        let segmented = !pipelines.is_empty();
+
         // Resolve the executor pool and the per-worker execution
         // backends behind the `Backend` seam. Every backend wraps the
         // one shared runtime — numerics are bit-identical across
@@ -354,8 +405,6 @@ impl Server {
         // carries the `[[family]]` priority tiers (claim order and
         // shed thresholds); `service_est` is the admission
         // controller's modeled per-chunk service time.
-        let mut family_names: Vec<String> = families.iter().cloned().collect();
-        family_names.sort();
         let mut service_est: HashMap<String, Duration> = HashMap::new();
         let (pool, worker_backends, transfers, failover): (
             Arc<ExecutorPool>,
@@ -364,8 +413,13 @@ impl Server {
             Option<Arc<FailoverController>>,
         ) = if cfg.devices.is_empty() {
             let pool = Arc::new(
-                ExecutorPool::new(workers, cfg.work_stealing, shards, depth)
-                    .with_priorities(priorities),
+                ExecutorPool::new(
+                    PoolTopology::homogeneous(workers),
+                    cfg.work_stealing,
+                    shards,
+                    depth,
+                )
+                .with_priorities(priorities),
             );
             let backend: Arc<dyn Backend> = if cfg.device_latency_us == 0 {
                 // No emulated device at all: the bare runtime
@@ -401,8 +455,20 @@ impl Server {
             // `device` and `scheduler::cache` docs).
             let transfer = Duration::from_micros(cfg.transfer_us);
             let profiles = device::build_profiles(&cfg.devices, &family_names, transfer);
-            let placement = device::placement(&profiles, &family_names);
+            let mut placement = device::placement(&profiles, &family_names);
             let rankings = device::placement_ranking(&profiles, &family_names);
+            // Per-segment lane placement: each `"family@s"` route is
+            // its own placement entry, landing on the class that
+            // minimizes that segment's modeled cost — the per-layer
+            // half of the Mensa argument (a model whose front and back
+            // halves prefer different accelerators runs each on its
+            // own argmin class, paying the activation transfer the
+            // plan priced into its cuts).
+            for (family, pipe) in pipelines.iter() {
+                for (s, &c) in pipe.classes.iter().enumerate() {
+                    placement.insert(format!("{family}@{s}"), c);
+                }
+            }
             // Admission cost model: the roster's *aggregate* drain
             // rate for the family, not just the placed class's batch-1
             // window. Spill (and failover) let any class drain a
@@ -446,8 +512,7 @@ impl Server {
                 Duration::from_micros(cfg.spill_after_us),
             );
             let pool = Arc::new(
-                ExecutorPool::new_hetero(topology, shards, depth)
-                    .with_priorities(priorities),
+                ExecutorPool::new(topology, true, shards, depth).with_priorities(priorities),
             );
             // Circuit breaker + cross-class failover: compares each
             // class's *healthy* modeled windows (the un-faulted
@@ -519,9 +584,34 @@ impl Server {
 
         // Intra-family parallelism: when the pool may let several
         // workers drain one family, a shared reorder buffer restores
-        // client-observed FIFO at delivery.
-        let reorder = (pool.family_concurrency() > 1)
+        // client-observed FIFO at delivery. Segmentation forces it on:
+        // a pipelined family is *always* drained by several workers
+        // (one per segment route), whatever the depth policy says.
+        let reorder = (pool.family_concurrency() > 1 || segmented)
             .then(|| Arc::new(ReorderBuffer::<ChunkDone>::new()));
+
+        // Segment handoff router: one ordering lane per continuation
+        // route (`"family@s"`, s >= 1) plus the final per-family
+        // reorder buffer. Built after the escalator so final
+        // deliveries keep the hierarchical-inference hook.
+        let seg_router = segmented.then(|| {
+            let lanes = pipelines
+                .iter()
+                .flat_map(|(f, p)| {
+                    (1..p.shares.len() as u32)
+                        .map(move |s| (format!("{f}@{s}"), ReorderBuffer::new()))
+                })
+                .collect();
+            Arc::new(SegRouter {
+                metrics: Arc::clone(&metrics),
+                pool: Arc::clone(&pool),
+                finals: Arc::clone(
+                    reorder.as_ref().expect("segmented serving forces the reorder buffer"),
+                ),
+                escalator: escalator.clone(),
+                lanes,
+            })
+        });
 
         // The shed discipline drops chunks at dequeue once every
         // member deadline has expired (never before execution cost is
@@ -544,6 +634,8 @@ impl Server {
             death,
             inflight: (0..workers).map(|_| Mutex::new(None)).collect(),
             worker_class: pool.topology().map(|t| t.worker_class.clone()),
+            pipelines: Arc::clone(&pipelines),
+            seg_router: seg_router.clone(),
         });
 
         // Supervised workers: executors run under a supervisor thread
@@ -597,14 +689,15 @@ impl Server {
                         // lease — hand its queues back to the pool —
                         // and may owe the reorder buffer a chunk slot.
                         let owed = ctx.inflight[w].lock().expect("inflight lock").take();
-                        if let (Some(buf), Some((family, seq, chunk, last))) =
-                            (ctx.reorder.as_ref(), owed)
-                        {
+                        if let Some((family, seq, chunk, last, segment)) = owed {
                             // Tombstone: an empty errored chunk fills
                             // the lost `(seq, chunk)` slot so the
                             // delivery cursor can advance past it. No
                             // requests ride in it, so no counters move
-                            // at delivery.
+                            // at delivery. A segmented chunk's
+                            // tombstone routes through the remaining
+                            // lanes so every downstream cursor
+                            // advances too.
                             let done = ChunkDone {
                                 seq,
                                 chunk,
@@ -619,14 +712,30 @@ impl Server {
                                     kind: DropKind::Error,
                                 }),
                             };
-                            buf.submit(&family, seq, chunk, last, done, |d| {
-                                deliver_chunk(
-                                    &ctx.metrics,
-                                    &family,
-                                    d,
-                                    ctx.escalator.as_deref(),
-                                )
-                            });
+                            match &ctx.seg_router {
+                                Some(router) if ctx.pipelines.contains_key(&family) => {
+                                    router.route(
+                                        &family,
+                                        segment,
+                                        seq,
+                                        chunk,
+                                        last,
+                                        SegHandoff::Deliver(done),
+                                    );
+                                }
+                                _ => {
+                                    if let Some(buf) = ctx.reorder.as_ref() {
+                                        buf.submit(&family, seq, chunk, last, done, |d| {
+                                            deliver_chunk(
+                                                &ctx.metrics,
+                                                &family,
+                                                d,
+                                                ctx.escalator.as_deref(),
+                                            )
+                                        });
+                                    }
+                                }
+                            }
                         }
                         // Count the respawn BEFORE the release makes
                         // the re-offered queues servable: any request
@@ -656,9 +765,12 @@ impl Server {
                 let metrics = Arc::clone(&metrics);
                 let reorder = reorder.clone();
                 let escalator = escalator.clone();
+                let seg_router = seg_router.clone();
+                let pipelines = Arc::clone(&pipelines);
                 let sink: Arc<dyn Fn(BatchJob) + Send + Sync> =
                     Arc::new(move |job: BatchJob| {
-                        let BatchJob { family, seq, chunk, last, requests, attempts } = job;
+                        let BatchJob { family, seq, chunk, last, requests, attempts, segment, .. } =
+                            job;
                         let done = ChunkDone {
                             seq,
                             chunk,
@@ -673,11 +785,25 @@ impl Server {
                                 kind: DropKind::Shed,
                             }),
                         };
-                        match &reorder {
-                            Some(buf) => buf.submit(&family, seq, chunk, last, done, |d| {
+                        // A shed segmented chunk (always segment 0 —
+                        // continuations never re-enter the batcher)
+                        // must still advance every lane cursor, not
+                        // just the final buffer's.
+                        match (&seg_router, &reorder) {
+                            (Some(router), _) if pipelines.contains_key(&family) => {
+                                router.route(
+                                    &family,
+                                    segment,
+                                    seq,
+                                    chunk,
+                                    last,
+                                    SegHandoff::Deliver(done),
+                                )
+                            }
+                            (_, Some(buf)) => buf.submit(&family, seq, chunk, last, done, |d| {
                                 deliver_chunk(&metrics, &family, d, escalator.as_deref())
                             }),
-                            None => {
+                            _ => {
                                 deliver_chunk(&metrics, &family, done, escalator.as_deref())
                             }
                         }
@@ -686,10 +812,15 @@ impl Server {
             });
 
         // Batcher shards: each drains its own router queue and feeds
-        // the shared pool.
+        // the shared pool. Segmented families' chunks are emitted at
+        // segment 0 under their `"family@0"` route.
+        let segment_of: Arc<HashMap<String, u32>> = Arc::new(
+            pipelines.iter().map(|(f, p)| (f.clone(), p.shares.len() as u32)).collect(),
+        );
         for (s, req_rx) in req_rxs.into_iter().enumerate() {
             let mut batcher =
-                Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::clone(&chunk_caps));
+                Batcher::new(req_rx, Arc::clone(&pool), &cfg, Arc::clone(&chunk_caps))
+                    .with_segments(Arc::clone(&segment_of));
             if let Some(sink) = &shed_sink {
                 batcher = batcher.with_shed_sink(Arc::clone(sink));
             }
@@ -717,21 +848,60 @@ impl Server {
 }
 
 impl ServerHandle {
-    /// Submit a request; returns the response channel. Backpressure:
-    /// fails immediately when the family's shard queue is full. The
-    /// request carries the config's default deadline (`deadline_us`;
-    /// none when 0) — see [`ServerHandle::infer_with_deadline`] for a
-    /// per-request budget.
+    /// Begin a request against `family`: the **one** submission
+    /// surface. The returned builder starts from the config's default
+    /// deadline (`deadline_us`; none when 0) and normal priority;
+    /// [`InferRequest::send`] submits and returns the response
+    /// channel. Backpressure: `send` fails immediately when the
+    /// family's shard queue is full.
+    ///
+    /// ```ignore
+    /// let rx = handle
+    ///     .infer_request("edge_lstm", inputs)
+    ///     .deadline(Duration::from_millis(50))
+    ///     .priority(MAX_PRIORITY)
+    ///     .send()?;
+    /// ```
+    pub fn infer_request(&self, family: &str, inputs: Vec<Vec<f32>>) -> InferRequest<'_> {
+        InferRequest {
+            handle: self,
+            family: family.to_string(),
+            inputs,
+            deadline: self.default_deadline,
+            priority: 0,
+        }
+    }
+
+    /// Submit a request with the config's default deadline.
+    #[deprecated(note = "use `infer_request(family, inputs).send()`")]
     pub fn infer(
         &self,
         family: &str,
         inputs: Vec<Vec<f32>>,
     ) -> Result<Receiver<Result<InferenceResponse>>> {
-        self.infer_with_deadline(family, inputs, self.default_deadline)
+        self.infer_request(family, inputs).send()
     }
 
     /// Submit a request with an explicit latency budget (`None`
     /// disables the deadline for this request regardless of config).
+    #[deprecated(
+        note = "use `infer_request(family, inputs).deadline(..)` / `.no_deadline()` + `.send()`"
+    )]
+    pub fn infer_with_deadline(
+        &self,
+        family: &str,
+        inputs: Vec<Vec<f32>>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<InferenceResponse>>> {
+        let req = self.infer_request(family, inputs);
+        match deadline {
+            Some(d) => req.deadline(d),
+            None => req.no_deadline(),
+        }
+        .send()
+    }
+
+    /// The submission path behind [`InferRequest::send`].
     ///
     /// Under `overload = "shed"` a deadline-carrying request passes
     /// **admission control** first: with the family's modeled
@@ -743,12 +913,16 @@ impl ServerHandle {
     /// chunks already queued, a budget below `s × (q + 1)` is already
     /// unmeetable, so the request is shed *now* — before it occupies
     /// a queue slot, and long before it could burn device time
-    /// (`Snapshot::jobs_shed`).
-    pub fn infer_with_deadline(
+    /// (`Snapshot::jobs_shed`). A top-tier priority hint
+    /// (`MAX_PRIORITY`) skips the model: the caller asserted the
+    /// request must be attempted even when the modeled wait says it
+    /// will miss.
+    fn submit(
         &self,
         family: &str,
         inputs: Vec<Vec<f32>>,
         deadline: Option<Duration>,
+        priority: u8,
     ) -> Result<Receiver<Result<InferenceResponse>>> {
         // Reject unknown families before they enter the pipeline: a
         // request that can never execute must not create per-family
@@ -757,7 +931,7 @@ impl ServerHandle {
             self.metrics.record_failure();
             bail!("no variant of `{family}` is loaded");
         }
-        if self.overload == OverloadPolicy::Shed {
+        if self.overload == OverloadPolicy::Shed && priority < MAX_PRIORITY {
             if let Some(budget) = deadline {
                 let per_chunk =
                     self.service_est.get(family).copied().unwrap_or(Duration::ZERO);
@@ -801,7 +975,7 @@ impl ServerHandle {
         inputs: Vec<Vec<f32>>,
         timeout: Duration,
     ) -> Result<InferenceResponse> {
-        let rx = self.infer(family, inputs)?;
+        let rx = self.infer_request(family, inputs).send()?;
         rx.recv_timeout(timeout).map_err(|e| anyhow!("inference timed out: {e}"))?
     }
 
@@ -830,6 +1004,51 @@ impl ServerHandle {
         for t in self.threads {
             let _ = t.join();
         }
+    }
+}
+
+/// A pending inference submission: family and input plus the optional
+/// knobs (`deadline`, `priority`) the old `infer`/`infer_with_deadline`
+/// pair spread across two signatures. Built by
+/// [`ServerHandle::infer_request`], consumed by [`InferRequest::send`].
+#[must_use = "an InferRequest does nothing until `.send()`"]
+pub struct InferRequest<'a> {
+    handle: &'a ServerHandle,
+    family: String,
+    inputs: Vec<Vec<f32>>,
+    deadline: Option<Duration>,
+    priority: u8,
+}
+
+impl InferRequest<'_> {
+    /// Set an explicit latency budget, overriding the config's
+    /// `deadline_us` default.
+    pub fn deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// Disable the deadline for this request regardless of config:
+    /// it can never shed, expire, or count a deadline miss.
+    pub fn no_deadline(mut self) -> Self {
+        self.deadline = None;
+        self
+    }
+
+    /// Priority hint, clamped into `0..=MAX_PRIORITY` (higher = more
+    /// important, matching the `[[family]]` tiers). The top tier
+    /// bypasses modeled-wait admission shedding — the request is
+    /// always attempted, though it can still be shed at enqueue or
+    /// expire at dequeue like any other.
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority.min(MAX_PRIORITY);
+        self
+    }
+
+    /// Submit; returns the response channel. Backpressure: fails
+    /// immediately when the family's shard queue is full.
+    pub fn send(self) -> Result<Receiver<Result<InferenceResponse>>> {
+        self.handle.submit(&self.family, self.inputs, self.deadline, self.priority)
     }
 }
 
@@ -863,6 +1082,154 @@ fn family_sim_costs() -> HashMap<String, SimCost> {
         );
     }
     map
+}
+
+/// One family's resolved pipeline: the runtime stage-axis boundaries
+/// (`bounds[s]..bounds[s + 1]` is segment `s`'s stage range), each
+/// segment's share of the family's emulated device window (its
+/// fraction of the stage axis), and — under a roster — each segment's
+/// device-class index (empty for a flat pool, where every segment
+/// runs on the one class and only the window shares matter).
+struct FamilyPipeline {
+    bounds: Vec<usize>,
+    shares: Vec<f64>,
+    classes: Vec<usize>,
+}
+
+/// Cut every multi-stage family for `segment_level` serving. The
+/// profiled [`SegmentPlan`](crate::scheduler::segment::SegmentPlan)
+/// lives in proxy-model *layer* space; the runtime executes in
+/// *stage* space (timesteps for recurrent variants, input-weight
+/// blocks for dense ones), so the plan's per-segment cost shares are
+/// mapped onto the stage axis by [`stage_bounds`]. Families whose
+/// runtime variant is monolithic (`stage_count` 1 — e.g. under naive
+/// kernels) or whose plan keeps a single segment are left out: they
+/// serve exactly as before.
+fn build_pipelines(
+    family_names: &[String],
+    runtime: &Runtime,
+    cfg: &ServerConfig,
+) -> HashMap<String, FamilyPipeline> {
+    let mut map = HashMap::new();
+    for family in family_names {
+        let Some((variant, _)) = runtime.variant_for_batch(family, 1) else { continue };
+        let stages = Runtime::stage_count(runtime, variant);
+        if stages < 2 {
+            continue;
+        }
+        // The plan cannot cut finer than the runtime can execute.
+        let budget = cfg.max_segments.min(stages);
+        let (plan, classes) = if cfg.devices.is_empty() {
+            (device::segment_plan_flat(family, budget), Vec::new())
+        } else {
+            device::segment_pipeline(&cfg.devices, family, budget)
+        };
+        if plan.num_segments() < 2 {
+            continue;
+        }
+        let bounds = stage_bounds(plan.costs(), stages);
+        let n = bounds.len() - 1;
+        let shares =
+            (0..n).map(|s| (bounds[s + 1] - bounds[s]) as f64 / stages as f64).collect();
+        map.insert(family.clone(), FamilyPipeline { bounds, shares, classes });
+    }
+    map
+}
+
+/// Map profiled per-segment cost shares onto `stages` runtime stages:
+/// cumulative-share boundaries, rounded to integers, forced strictly
+/// increasing with room left for the remaining segments (requires
+/// `costs.len() <= stages`). The result starts at 0, ends at
+/// `stages`, and gives every segment at least one stage.
+fn stage_bounds(costs: &[f64], stages: usize) -> Vec<usize> {
+    let n = costs.len();
+    debug_assert!(n >= 1 && n <= stages, "{n} segments need at least {n} stages");
+    let total: f64 = costs.iter().sum();
+    let mut bounds = Vec::with_capacity(n + 1);
+    bounds.push(0usize);
+    let mut cum = 0.0;
+    for s in 0..n {
+        cum += costs[s];
+        let raw = if s == n - 1 {
+            // The last boundary is the stage count by definition —
+            // never trust `cum / total` rounding with it.
+            stages
+        } else if total > 0.0 {
+            (cum / total * stages as f64).round() as usize
+        } else {
+            // Degenerate all-zero profile: split evenly.
+            (s + 1) * stages / n
+        };
+        let lo = bounds[s] + 1;
+        let hi = stages - (n - 1 - s);
+        bounds.push(raw.clamp(lo, hi));
+    }
+    bounds
+}
+
+/// The segment handoff router: moves a chunk leaving segment `s` into
+/// segment `s + 1`'s pool queue — in `(seq, chunk)` order, even when
+/// segment `s` ran on several workers — or, past the last segment,
+/// into the final per-family reorder buffer for delivery.
+///
+/// One [`ReorderBuffer`] lane guards each continuation route
+/// (`"family@s"`, `s >= 1`): a chunk may enter a segment's queue only
+/// after every earlier chunk has, so per-lane FIFO composes into
+/// end-to-end FIFO. A chunk that *dies* mid-pipeline (error, expiry,
+/// shed, dead worker) routes as [`SegHandoff::Deliver`] through the
+/// same lanes: every downstream cursor advances past its key — a hole
+/// in any lane would stall all later chunks — and the terminal
+/// outcome reaches the final buffer. Locks nest strictly lane `s` →
+/// lane `s + 1` → finals, so the cascade cannot deadlock.
+struct SegRouter {
+    metrics: Arc<Metrics>,
+    pool: Arc<ExecutorPool>,
+    finals: Arc<ReorderBuffer<ChunkDone>>,
+    escalator: Option<Arc<Escalator>>,
+    lanes: HashMap<String, ReorderBuffer<SegHandoff>>,
+}
+
+/// What a finished segment hands the router.
+enum SegHandoff {
+    /// The chunk advanced: push this continuation job (already
+    /// stamped with the next segment's route and carried state).
+    Continue(BatchJob),
+    /// The chunk's pipeline is over — final-segment success or a
+    /// mid-pipeline drop: cascade to the final delivery buffer.
+    Deliver(ChunkDone),
+}
+
+impl SegRouter {
+    /// Hand `msg`, produced at `segment` of `family`, to the next
+    /// hop: lane `"family@{segment + 1}"` when one exists, the final
+    /// delivery buffer otherwise.
+    fn route(&self, family: &str, segment: u32, seq: u64, chunk: u32, last: bool, msg: SegHandoff) {
+        let next = format!("{family}@{}", segment + 1);
+        match self.lanes.get(&next) {
+            Some(lane) => lane.submit(&next, seq, chunk, last, msg, |m| match m {
+                SegHandoff::Continue(job) => self.pool.push_continuation(job),
+                // Recurse with the *item's* key, not the submitting
+                // call's: releasing the cursor can flush chunks parked
+                // by earlier submits.
+                SegHandoff::Deliver(done) => {
+                    let (seq, chunk, last) = (done.seq, done.chunk, done.last);
+                    self.route(family, segment + 1, seq, chunk, last, SegHandoff::Deliver(done));
+                }
+            }),
+            None => {
+                let done = match msg {
+                    SegHandoff::Deliver(done) => done,
+                    SegHandoff::Continue(_) => {
+                        unreachable!("continuation routed past the last segment")
+                    }
+                };
+                let (seq, chunk, last) = (done.seq, done.chunk, done.last);
+                self.finals.submit(family, seq, chunk, last, done, |d| {
+                    deliver_chunk(&self.metrics, family, d, self.escalator.as_deref())
+                });
+            }
+        }
+    }
 }
 
 /// Pack per-request (batch-1) buffers into one variant-batch buffer.
@@ -1074,13 +1441,20 @@ struct WorkerCtx {
     retry_max: u32,
     failover: Option<Arc<FailoverController>>,
     death: Option<Arc<DeathInjector>>,
-    /// `inflight[w]`: the `(family, seq, chunk, last-of-flush)` reorder
-    /// slot worker `w` owes next — what the supervisor tombstones when
-    /// that thread dies before submitting it.
-    inflight: Vec<Mutex<Option<(String, u64, u32, bool)>>>,
+    /// `inflight[w]`: the `(family, seq, chunk, last-of-flush,
+    /// segment)` slot worker `w` owes next — what the supervisor
+    /// tombstones (through the segment router for pipelined families)
+    /// when that thread dies before submitting it.
+    inflight: Vec<Mutex<Option<(String, u64, u32, bool, u32)>>>,
     /// Worker → device-class binding (roster mode only), for breaker
     /// health attribution.
     worker_class: Option<Vec<usize>>,
+    /// Per-family pipeline plans (`segment_level`); empty =
+    /// everything runs monolithic.
+    pipelines: Arc<HashMap<String, FamilyPipeline>>,
+    /// Segment handoff router; present exactly when `pipelines` is
+    /// non-empty.
+    seg_router: Option<Arc<SegRouter>>,
 }
 
 /// Drop guard inside each executor thread: reports `(worker, panicked)`
@@ -1125,8 +1499,17 @@ fn executor_loop(worker: usize, backend: Arc<dyn Backend>, ctx: &WorkerCtx) {
         }
         while let Some(job) = ctx.pool.next_job(&family, worker) {
             let job_last = job.last;
+            // The owed slot carries the *true* family (`family` here
+            // is the pool queue key — a `"fam@s"` route for segmented
+            // work) and the segment, so the tombstone path can route
+            // through the remaining lanes.
             *ctx.inflight[worker].lock().expect("inflight lock") =
-                Some((family.clone(), job.seq, job.chunk, job.last));
+                Some((job.family.clone(), job.seq, job.chunk, job.last, job.segment));
+            if job.segments > 1 {
+                exec_segment_job(&*backend, job, worker, ctx, &mut scratch);
+                *ctx.inflight[worker].lock().expect("inflight lock") = None;
+                continue;
+            }
             exec_job(
                 &*backend,
                 job,
@@ -1143,7 +1526,7 @@ fn executor_loop(worker: usize, backend: Arc<dyn Backend>, ctx: &WorkerCtx) {
                     // entry is spent).
                     *ctx.inflight[worker].lock().expect("inflight lock") =
                         (!ctx.chunk_level && !chunk.last).then(|| {
-                            (family.clone(), chunk.seq, chunk.chunk + 1, job_last)
+                            (family.clone(), chunk.seq, chunk.chunk + 1, job_last, 0)
                         });
                     if let Some(failover) = &ctx.failover {
                         // Health signal: executed chunks only — a shed
@@ -1227,6 +1610,10 @@ fn try_requeue(ctx: &WorkerCtx, family: &str, done: ChunkDone) -> Option<ChunkDo
         Err(e) => e,
         Ok(_) => unreachable!("retryable implies an errored outcome"),
     };
+    // `..Default::default()` keeps the retry monolithic (segment 0,
+    // no route): segmented chunks never reach this path — their
+    // retries happen in place inside `exec_segment_job`, where the
+    // carried state lives.
     let job = BatchJob {
         family: family.to_string(),
         seq,
@@ -1234,6 +1621,7 @@ fn try_requeue(ctx: &WorkerCtx, family: &str, done: ChunkDone) -> Option<ChunkDo
         last,
         requests: err.requests,
         attempts: attempts + 1,
+        ..Default::default()
     };
     if ctx.expire_at_dequeue && job.all_expired_at(Instant::now()) {
         // Same accounting as dequeue expiry: overload protection
@@ -1466,7 +1854,7 @@ fn exec_job(
     // executes normally; its late members surface as deadline misses
     // at delivery instead.
     if expire_at_dequeue && job.all_expired_at(Instant::now()) {
-        let BatchJob { family, seq, chunk, last, requests, attempts } = job;
+        let BatchJob { family, seq, chunk, last, requests, attempts, .. } = job;
         sink(ChunkDone {
             seq,
             chunk,
@@ -1741,8 +2129,27 @@ fn execute_batch(
         .variant_for_batch(family, n)
         .ok_or_else(|| anyhow!("no variant of `{family}` fits batch {n}"))?;
     let spec = backend.spec(variant)?;
+    pack_requests(spec, requests, &mut scratch.packed)?;
+    let raw = backend.execute_batch(variant, &scratch.packed, n, &mut scratch.exec)?;
+    let expected: usize = spec.output_shape.iter().product::<i64>() as usize;
+    if raw.len() != expected {
+        bail!("{variant}: output has {} elements, expected {expected}", raw.len());
+    }
+    let outputs = unpack_batch(&raw, &spec.output_shape, spec.output_batch_axis, n);
+    Ok((outputs, batch))
+}
+
+/// Validate and pack per-request buffers into `packed` (one buffer
+/// per variant input), shared by the monolithic and segmented execute
+/// paths — a segmented chunk re-packs per segment against the *same*
+/// spec, so every stage range sees identical input buffers.
+fn pack_requests(
+    spec: &ArtifactSpec,
+    requests: &[Request],
+    packed: &mut Vec<Vec<f32>>,
+) -> Result<()> {
     let n_inputs = spec.input_shapes.len();
-    scratch.packed.resize_with(n_inputs, Vec::new);
+    packed.resize_with(n_inputs, Vec::new);
     for idx in 0..n_inputs {
         let shape = &spec.input_shapes[idx];
         let axis = spec.input_batch_axes[idx];
@@ -1768,15 +2175,196 @@ fn execute_batch(
                 );
             }
         }
-        pack_batch_into(&mut scratch.packed[idx], shape, axis, &per_req);
+        pack_batch_into(&mut packed[idx], shape, axis, &per_req);
     }
-    let raw = backend.execute_batch(variant, &scratch.packed, n, &mut scratch.exec)?;
-    let expected: usize = spec.output_shape.iter().product::<i64>() as usize;
-    if raw.len() != expected {
-        bail!("{variant}: output has {} elements, expected {expected}", raw.len());
+    Ok(())
+}
+
+/// Outcome of one segment execution, outputs already unpacked on
+/// completion.
+enum SegResult {
+    /// More segments follow: the carried state for the next one.
+    Partial(SegmentState),
+    /// Final segment: per-request outputs plus the executed variant's
+    /// capacity (metrics batch column).
+    Done(Vec<Vec<f32>>, usize),
+}
+
+/// Run stages `lo..hi` of the variant fitting this chunk: select and
+/// pack exactly like [`execute_batch`], execute the stage range
+/// through the [`Backend`] seam, unpack on the final segment. The
+/// full pipeline is bit-exact with the monolithic path — same
+/// variant, same packed buffers, same kernels (pinned by
+/// `tests/segmentation.rs`).
+fn execute_segment(
+    backend: &dyn Backend,
+    family: &str,
+    requests: &[Request],
+    state: Option<SegmentState>,
+    lo: usize,
+    hi: usize,
+    scratch: &mut WorkerScratch,
+) -> Result<SegResult> {
+    let n = requests.len();
+    let (variant, batch) = backend
+        .variant_for_batch(family, n)
+        .ok_or_else(|| anyhow!("no variant of `{family}` fits batch {n}"))?;
+    let spec = backend.spec(variant)?;
+    pack_requests(spec, requests, &mut scratch.packed)?;
+    let outcome = backend
+        .execute_stage_range(variant, &scratch.packed, n, lo, hi, state, &mut scratch.exec)?;
+    match outcome {
+        StageOutcome::Partial(state) => Ok(SegResult::Partial(state)),
+        StageOutcome::Done(raw) => {
+            let expected: usize = spec.output_shape.iter().product::<i64>() as usize;
+            if raw.len() != expected {
+                bail!("{variant}: output has {} elements, expected {expected}", raw.len());
+            }
+            let outputs = unpack_batch(&raw, &spec.output_shape, spec.output_batch_axis, n);
+            Ok(SegResult::Done(outputs, batch))
+        }
     }
-    let outputs = unpack_batch(&raw, &spec.output_shape, spec.output_batch_axis, n);
-    Ok((outputs, batch))
+}
+
+/// Execute one segment of a pipelined chunk and hand the result to
+/// the segment router: a non-final segment forwards its carried
+/// [`SegmentState`] as a continuation job on the next route; the
+/// final segment unpacks outputs and submits the finished chunk for
+/// delivery. The handoff happens **before** this worker sleeps the
+/// segment's share of the emulated device window, so the next
+/// segment's worker overlaps with this one's device time — the
+/// pipelining that lets k segment routes stream one hot family across
+/// k workers.
+///
+/// Transient-failure retries happen *in place* (same worker, cloned
+/// carry), not via [`try_requeue`]: the carried state lives on this
+/// worker's stack, and a re-queued segment job would re-enter its
+/// ordering lane with a key the lane's cursor already passed.
+fn exec_segment_job(
+    backend: &dyn Backend,
+    job: BatchJob,
+    worker: usize,
+    ctx: &WorkerCtx,
+    scratch: &mut WorkerScratch,
+) {
+    let router = ctx.seg_router.as_deref().expect("segmented job without a router");
+    let pipe = ctx.pipelines.get(&job.family).expect("segmented job without a plan");
+    let s = job.segment as usize;
+    let (seq, chunk, last) = (job.seq, job.chunk, job.last);
+    let family = job.family.clone();
+    let exec_start = Instant::now();
+    // Dequeue expiry: the monolithic discipline, applied per segment —
+    // stale work is refused before burning this segment's window.
+    if ctx.expire_at_dequeue && job.all_expired_at(Instant::now()) {
+        let done = ChunkDone {
+            seq,
+            chunk,
+            last,
+            attempts: job.attempts,
+            exec_start,
+            outcome: Err(ChunkErr {
+                requests: job.requests,
+                error: format!("deadline expired before `{family}` segment {s} executed"),
+                kind: DropKind::Expired,
+            }),
+        };
+        router.route(&family, job.segment, seq, chunk, last, SegHandoff::Deliver(done));
+        return;
+    }
+    // Cross-class activation transfer: the previous segment stamped
+    // the class it ran on; landing elsewhere charges the transfer
+    // window on top of this segment's share
+    // (`Snapshot::cross_device_transfers`).
+    let mut transfer = Duration::ZERO;
+    if let Some(from) = &job.from_class {
+        if from != backend.device_class() {
+            ctx.metrics.record_transfer();
+            transfer = backend.transfer_window(&family);
+        }
+    }
+    let (lo, hi) = (pipe.bounds[s], pipe.bounds[s + 1]);
+    let n = job.requests.len();
+    let mut attempts = job.attempts;
+    let outcome = loop {
+        let (result, panicked) = guard_panic_flagged(|| {
+            execute_segment(backend, &family, &job.requests, job.carry.clone(), lo, hi, scratch)
+        });
+        if panicked {
+            ctx.metrics.record_panic();
+        }
+        match result {
+            Ok(out) => break Ok(out),
+            Err(e) => {
+                let error = format!("{e:#}");
+                let retry = ctx.retry_max > 0
+                    && attempts < ctx.retry_max
+                    && is_retryable(&error)
+                    && !(ctx.expire_at_dequeue && job.all_expired_at(Instant::now()));
+                if retry {
+                    attempts += 1;
+                    ctx.metrics.record_retry();
+                    continue;
+                }
+                break Err(error);
+            }
+        }
+    };
+    match outcome {
+        Ok(SegResult::Partial(state)) => {
+            ctx.metrics.record_segment(&family, worker, backend.device_class(), false);
+            ctx.metrics.record_segment_hop();
+            let next_route = format!("{family}@{}", job.segment + 1);
+            let cont = BatchJob {
+                family: job.family,
+                seq,
+                chunk,
+                last,
+                requests: job.requests,
+                // Each segment re-arms the transient-retry budget:
+                // the chunk's earlier segments already succeeded.
+                attempts: 0,
+                segment: job.segment + 1,
+                segments: job.segments,
+                carry: Some(state),
+                from_class: Some(backend.device_class().to_string()),
+                route: Some(next_route),
+            };
+            router.route(&family, job.segment, seq, chunk, last, SegHandoff::Continue(cont));
+        }
+        Ok(SegResult::Done(outputs, batch)) => {
+            ctx.metrics.record_segment(&family, worker, backend.device_class(), true);
+            let sim = ctx.sim_costs.get(&family).map(|c| c.amortized(n)).unwrap_or_default();
+            let done = ChunkDone {
+                seq,
+                chunk,
+                last,
+                attempts,
+                exec_start,
+                outcome: Ok(ChunkOk {
+                    batch,
+                    sim,
+                    pairs: job.requests.into_iter().zip(outputs).collect(),
+                }),
+            };
+            router.route(&family, job.segment, seq, chunk, last, SegHandoff::Deliver(done));
+        }
+        Err(error) => {
+            let done = ChunkDone {
+                seq,
+                chunk,
+                last,
+                attempts,
+                exec_start,
+                outcome: Err(ChunkErr { requests: job.requests, error, kind: DropKind::Error }),
+            };
+            router.route(&family, job.segment, seq, chunk, last, SegHandoff::Deliver(done));
+        }
+    }
+    // This segment's share of the family's emulated device window,
+    // plus any transfer charge — slept *after* the handoff, so the
+    // downstream segment executes while this worker models the
+    // device's busy time.
+    emulate_device(backend.device_window(&family, n).mul_f64(pipe.shares[s]) + transfer);
 }
 
 #[cfg(test)]
@@ -1904,7 +2492,12 @@ mod tests {
 
     fn test_ctx(retry_max: u32) -> WorkerCtx {
         WorkerCtx {
-            pool: Arc::new(ExecutorPool::new(1, true, 1, DepthPolicy::Static(1))),
+            pool: Arc::new(ExecutorPool::new(
+                PoolTopology::homogeneous(1),
+                true,
+                1,
+                DepthPolicy::Static(1),
+            )),
             metrics: Arc::new(Metrics::default()),
             sim_costs: Arc::new(HashMap::new()),
             transfers: None,
@@ -1917,6 +2510,8 @@ mod tests {
             death: None,
             inflight: vec![Mutex::new(None)],
             worker_class: None,
+            pipelines: Arc::new(HashMap::new()),
+            seg_router: None,
         }
     }
 
@@ -1991,13 +2586,135 @@ mod tests {
     }
 
     #[test]
+    fn stage_bounds_track_cost_shares() {
+        // Proportional profiles: boundaries land on the cumulative
+        // cost shares.
+        assert_eq!(stage_bounds(&[1.0, 1.0], 8), vec![0, 4, 8]);
+        assert_eq!(stage_bounds(&[3.0, 1.0], 8), vec![0, 6, 8]);
+        assert_eq!(stage_bounds(&[1.0, 1.0, 2.0], 8), vec![0, 2, 4, 8]);
+        // Degenerate all-zero profile: even split.
+        assert_eq!(stage_bounds(&[0.0, 0.0], 8), vec![0, 4, 8]);
+        // A single segment spans the whole stage axis.
+        assert_eq!(stage_bounds(&[5.0], 3), vec![0, 3]);
+    }
+
+    #[test]
+    fn stage_bounds_give_every_segment_a_stage() {
+        // Skewed profiles cannot starve the cheap segments: bounds stay
+        // strictly increasing from 0 to `stages` even when rounding
+        // wants several boundaries at the same place.
+        for costs in [
+            vec![1000.0, 0.001, 0.001, 0.001],
+            vec![0.001, 0.001, 0.001, 1000.0],
+            vec![0.001, 1000.0, 0.001, 1000.0],
+        ] {
+            for stages in [4usize, 5, 9, 32] {
+                let b = stage_bounds(&costs, stages);
+                assert_eq!((b[0], *b.last().unwrap()), (0, stages), "{costs:?}/{stages}");
+                assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?} not strictly increasing");
+            }
+        }
+    }
+
+    fn seg_router(lanes: &[&str]) -> SegRouter {
+        SegRouter {
+            metrics: Arc::new(Metrics::default()),
+            pool: Arc::new(ExecutorPool::new(
+                PoolTopology::homogeneous(1),
+                true,
+                1,
+                DepthPolicy::Static(1),
+            )),
+            finals: Arc::new(ReorderBuffer::new()),
+            escalator: None,
+            lanes: lanes.iter().map(|l| (l.to_string(), ReorderBuffer::new())).collect(),
+        }
+    }
+
+    #[test]
+    fn seg_router_lane_holds_out_of_order_continuations() {
+        let r = seg_router(&["fam@1"]);
+        let cont = |seq: u64, chunk: u32, last: bool| BatchJob {
+            family: "fam".into(),
+            seq,
+            chunk,
+            last,
+            segment: 1,
+            segments: 2,
+            route: Some("fam@1".into()),
+            ..Default::default()
+        };
+        // Chunk (0, 1) finishes segment 0 first: parked — the lane
+        // owes (0, 0) to segment 1's queue before anything else may
+        // enter it.
+        r.route("fam", 0, 0, 1, true, SegHandoff::Continue(cont(0, 1, true)));
+        assert_eq!(r.pool.queued_for("fam"), 0, "out-of-order continuation must park");
+        // (0, 0) arrives: both flush, in order, onto the `fam@1` route.
+        r.route("fam", 0, 0, 0, false, SegHandoff::Continue(cont(0, 0, false)));
+        assert_eq!(r.pool.queued_for("fam"), 2);
+        let key = r.pool.take_family(0).expect("lane released the continuations");
+        assert_eq!(key, "fam@1");
+        let first = r.pool.next_job(&key, 0).expect("released in order");
+        assert_eq!((first.chunk, first.segment), (0, 1));
+    }
+
+    #[test]
+    fn seg_router_cascades_deliveries_through_lanes_to_finals() {
+        let r = seg_router(&["fam@1", "fam@2"]);
+        let (reply, rx) = mpsc::channel();
+        let req = Request {
+            family: "fam".into(),
+            inputs: Vec::new(),
+            enqueued: Instant::now(),
+            deadline: None,
+            escalated: false,
+            reply,
+        };
+        let done = ChunkDone {
+            seq: 0,
+            chunk: 0,
+            last: true,
+            attempts: 0,
+            exec_start: Instant::now(),
+            outcome: Ok(ChunkOk {
+                batch: 1,
+                sim: SimCost::default(),
+                pairs: vec![(req, vec![1.0, 2.0])],
+            }),
+        };
+        // A chunk finishing (or dying) at segment 0 cascades through
+        // every downstream lane — each cursor advances past its key,
+        // leaving no hole to stall later chunks — and reaches the
+        // final delivery buffer synchronously.
+        r.route("fam", 0, 0, 0, true, SegHandoff::Deliver(done));
+        let resp = rx.try_recv().expect("delivered").expect("success outcome");
+        assert_eq!(resp.output, vec![1.0, 2.0]);
+        // A mid-pipeline drop takes the same path.
+        let dead = ChunkDone {
+            seq: 1,
+            chunk: 0,
+            last: true,
+            attempts: 0,
+            exec_start: Instant::now(),
+            outcome: Err(ChunkErr {
+                requests: Vec::new(),
+                error: "boom".into(),
+                kind: DropKind::Error,
+            }),
+        };
+        r.route("fam", 0, 1, 0, true, SegHandoff::Deliver(dead));
+        let s = r.metrics.snapshot();
+        assert_eq!((s.completed, s.fifo_violations), (1, 0));
+    }
+
+    #[test]
     fn breaker_trips_fails_over_and_reverts() {
         let topology = PoolTopology::new(
             vec![0, 1],
             HashMap::from([("edge_cnn".to_string(), 0)]),
             Duration::from_micros(50),
         );
-        let pool = Arc::new(ExecutorPool::new_hetero(topology, 1, DepthPolicy::Static(1)));
+        let pool = Arc::new(ExecutorPool::new(topology, true, 1, DepthPolicy::Static(1)));
         let metrics = Arc::new(Metrics::default());
         let profiles = vec![
             DeviceProfile::flat("fast", Duration::from_micros(100)),

@@ -207,7 +207,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for i in 0..n {
         let input: Vec<f32> =
             (0..32 * 32 * 3).map(|j| ((i * 7 + j) % 19) as f32 / 19.0).collect();
-        match server.infer("edge_cnn", vec![input]) {
+        match server.infer_request("edge_cnn", vec![input]).send() {
             Ok(rx) => pending.push(rx),
             Err(e) => println!("request {i} rejected: {e}"),
         }

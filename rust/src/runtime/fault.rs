@@ -27,7 +27,7 @@
 //! (plus caught panics), so genuine input/shape errors never burn
 //! retry budget.
 
-use crate::runtime::{ArtifactSpec, Backend, ExecScratch};
+use crate::runtime::{ArtifactSpec, Backend, ExecScratch, SegmentState, StageOutcome};
 use crate::util::fnv1a_64;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, bail, Result};
@@ -327,6 +327,40 @@ impl Backend for FaultBackend {
             }
         }
         self.inner.execute_batch(name, inputs, active, scratch)
+    }
+
+    fn stage_count(&self, name: &str) -> usize {
+        self.inner.stage_count(name)
+    }
+
+    fn execute_stage_range(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> Result<StageOutcome> {
+        // Segments draw from the same fault stream as whole chunks, so
+        // every stage of a pipelined job is independently at risk —
+        // exactly what the mid-pipeline abort/retry paths need.
+        match self.draw_exec_fault() {
+            ExecFault::None => {}
+            ExecFault::Stall(d) => std::thread::sleep(d),
+            ExecFault::Error => {
+                let class = self.inner.device_class();
+                if self.class_matches(&self.plan.blackout_class) {
+                    bail!("{TRANSIENT_MARKER}: class `{class}` blacked out");
+                }
+                bail!("{TRANSIENT_MARKER}: injected execute error on `{class}`");
+            }
+            ExecFault::Panic => {
+                panic!("{TRANSIENT_MARKER}: injected kernel panic");
+            }
+        }
+        self.inner.execute_stage_range(name, inputs, active, lo, hi, state, scratch)
     }
 
     fn device_window(&self, family: &str, batch: usize) -> Duration {

@@ -64,7 +64,7 @@ mod pjrt;
 
 pub use artifacts::{default_batch_axis, manifest_load_count, ArtifactSpec, Manifest};
 pub use fault::{DeathInjector, FaultBackend, FaultPlan, FAULT_ENV};
-pub use reference::{ExecScratch, POISON_INPUT};
+pub use reference::{ExecScratch, SegmentState, StageOutcome, POISON_INPUT};
 
 use artifacts::batch_suffix;
 
@@ -147,6 +147,40 @@ pub trait Backend: Send + Sync {
         scratch: &mut ExecScratch,
     ) -> Result<Vec<f32>>;
 
+    /// How many pipeline stages variant `name` can be cut into for
+    /// segmented execution (1 = monolithic only, the default for
+    /// backends without a staged path). The segment planner clamps
+    /// its cut count to this, so a backend that cannot stage quietly
+    /// degenerates to whole-model dispatch. Wrappers must forward
+    /// (a default-1 wrapper would silently disable segmentation for
+    /// its inner backend).
+    fn stage_count(&self, _name: &str) -> usize {
+        1
+    }
+
+    /// Execute stages `lo..hi` of variant `name` (see
+    /// [`Runtime::execute_stage_range`]). The full range must be
+    /// bit-identical to [`Backend::execute_batch`]; `state` is `Some`
+    /// exactly when `lo > 0`. The default (for single-stage backends)
+    /// accepts only the full `0..1` range and routes it through
+    /// [`Backend::execute_batch`].
+    #[allow(clippy::too_many_arguments)]
+    fn execute_stage_range(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> Result<StageOutcome> {
+        if lo != 0 || hi != 1 || state.is_some() {
+            bail!("{name}: backend has no staged path; only the full 0..1 range is valid");
+        }
+        self.execute_batch(name, inputs, active, scratch).map(StageOutcome::Done)
+    }
+
     /// Emulated device service time for one chunk of `family` with
     /// `batch` live rows — charged (slept) by the executor after the
     /// chunk's kernels run. Zero for the bare CPU runtime.
@@ -187,6 +221,23 @@ impl Backend for Runtime {
         scratch: &mut ExecScratch,
     ) -> Result<Vec<f32>> {
         Runtime::execute_batch(self, name, inputs, active, scratch)
+    }
+
+    fn stage_count(&self, name: &str) -> usize {
+        Runtime::stage_count(self, name)
+    }
+
+    fn execute_stage_range(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> Result<StageOutcome> {
+        Runtime::execute_stage_range(self, name, inputs, active, lo, hi, state, scratch)
     }
 
     fn device_window(&self, _family: &str, _batch: usize) -> std::time::Duration {
@@ -389,6 +440,70 @@ impl LoadedModel {
         }
     }
 
+    /// How many pipeline stages this variant can be cut into (see
+    /// `RefModel::stage_count`; PJRT models are monolithic until the
+    /// client grows a partial-execution surface).
+    pub fn stage_count(&self) -> usize {
+        match &self.backend {
+            ModelBackend::Reference(model) => model.stage_count(),
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(_) => 1,
+        }
+    }
+
+    /// Execute stages `lo..hi` with carried segment state and
+    /// caller-owned scratch. Input validation matches
+    /// [`LoadedModel::execute_with`]; the full range is bit-identical
+    /// to it. `state` must be `Some` exactly when `lo > 0`; backends
+    /// reporting [`LoadedModel::stage_count`] of 1 accept only the
+    /// full `0..1` range (which routes through the monolithic path).
+    pub fn execute_stage_with(
+        &self,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> Result<StageOutcome> {
+        if inputs.len() != self.spec.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (buf, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
+            let want: usize = shape.iter().product::<i64>() as usize;
+            if buf.len() != want {
+                bail!(
+                    "{}: input {i} has {} elements, shape {:?} needs {want}",
+                    self.spec.name,
+                    buf.len(),
+                    shape
+                );
+            }
+        }
+        let stages = self.stage_count();
+        if lo >= hi || hi > stages {
+            bail!("{}: stage range {lo}..{hi} out of 0..{stages}", self.spec.name);
+        }
+        if state.is_some() != (lo > 0) {
+            bail!("{}: segment state must accompany exactly the non-first stages", self.spec.name);
+        }
+        match &self.backend {
+            ModelBackend::Reference(model) => {
+                Ok(model.execute_stage(&self.spec, inputs, active, lo, hi, state, scratch))
+            }
+            #[cfg(feature = "pjrt")]
+            ModelBackend::Pjrt(model) => {
+                // stage_count == 1 above guarantees lo..hi == 0..1.
+                model.execute(&self.spec, inputs).map(StageOutcome::Done)
+            }
+        }
+    }
+
     /// Elements in the output tensor.
     pub fn output_len(&self) -> usize {
         self.spec.output_shape.iter().product::<i64>() as usize
@@ -524,6 +639,29 @@ impl Runtime {
         scratch: &mut ExecScratch,
     ) -> Result<Vec<f32>> {
         self.model(name)?.execute_with(inputs, active, scratch)
+    }
+
+    /// How many pipeline stages variant `name` supports (1 for
+    /// unknown names — the caller falls back to monolithic dispatch
+    /// and surfaces the name error on execution).
+    pub fn stage_count(&self, name: &str) -> usize {
+        self.models.get(name).map_or(1, LoadedModel::stage_count)
+    }
+
+    /// Staged execution entry point: run stages `lo..hi` of variant
+    /// `name` (see [`LoadedModel::execute_stage_with`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_stage_range(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> Result<StageOutcome> {
+        self.model(name)?.execute_stage_with(inputs, active, lo, hi, state, scratch)
     }
 
     /// The execution platform (diagnostics): `cpu` for both the

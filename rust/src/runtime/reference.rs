@@ -148,6 +148,33 @@ pub struct ExecScratch {
     batch_result: Vec<f32>,
 }
 
+/// Intermediate state carried between pipeline stages of one chunk
+/// (the layer-graph segmentation of `scheduler::segment`). Owned
+/// buffers, so a handoff can cross worker threads; cloned into each
+/// execution attempt, so a retried segment re-runs from the same
+/// state.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentState {
+    /// Dense nets: the pre-activation accumulator
+    /// (`active × out_per_sample`; `tanh` applies at the final
+    /// stage). Recurrent nets: the hidden state (`active × h`).
+    carry: Vec<f32>,
+    /// Recurrent nets: the partially filled per-sample output block
+    /// (`active × t·h`; each stage fills its own timestep slices).
+    /// Empty for dense nets.
+    partial: Vec<f32>,
+}
+
+/// Result of executing one stage range of a segmented model.
+#[derive(Debug)]
+pub enum StageOutcome {
+    /// More stages remain — hand this state to the next segment.
+    Partial(SegmentState),
+    /// The final stage ran: the complete output tensor, bit-identical
+    /// to a monolithic [`RefModel::execute`] of the same inputs.
+    Done(Vec<f32>),
+}
+
 /// How one weight matrix is materialized (derived from
 /// [`RuntimeOptions`] and the net kind at build time).
 #[derive(Debug, Clone, Copy)]
@@ -1087,6 +1114,150 @@ impl RefModel {
         }
     }
 
+    /// How many pipeline stages this model can be cut into. Dense
+    /// nets stage per input-weight matrix; recurrent nets stage per
+    /// timestep. The naive and per-sample paths report 1 (their inner
+    /// loops interleave samples and stages, so a cut would change the
+    /// accumulation order) — segmentation quietly degenerates to the
+    /// monolithic path there.
+    pub(crate) fn stage_count(&self) -> usize {
+        if self.naive || !self.batched {
+            return 1;
+        }
+        match &self.net {
+            RefNet::Dense { weights } => weights.len(),
+            RefNet::Recurrent { t, .. } => *t,
+        }
+    }
+
+    /// Execute stages `lo..hi` of the batch. `state` must be `None`
+    /// exactly when `lo == 0`; the final stage (`hi == stage_count`)
+    /// returns [`StageOutcome::Done`] with the full output tensor.
+    ///
+    /// Bit-exactness contract: chaining stage ranges over `0..
+    /// stage_count` produces the same bits as one monolithic
+    /// [`RefModel::execute`], because each stage replays exactly the
+    /// monolithic loop body for its range — dense nets accumulate
+    /// weight matrices in input order into a carried pre-activation
+    /// buffer (per-cell accumulation order unchanged, `tanh` applied
+    /// once at the end), recurrent nets carry the hidden state across
+    /// the inherently sequential timestep chain.
+    pub(crate) fn execute_stage(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Vec<f32>],
+        active: usize,
+        lo: usize,
+        hi: usize,
+        state: Option<SegmentState>,
+        scratch: &mut ExecScratch,
+    ) -> StageOutcome {
+        let stages = self.stage_count();
+        assert!(lo < hi && hi <= stages, "stage range {lo}..{hi} out of 0..{stages}");
+        assert_eq!(state.is_some(), lo > 0, "state accompanies exactly the non-first stages");
+        if lo == 0 && hi == stages {
+            return StageOutcome::Done(self.execute(spec, inputs, active, scratch));
+        }
+        // Partial ranges only exist when stage_count > 1, which
+        // `stage_count` guarantees is the batched non-naive path.
+        if self.poison {
+            for buf in inputs {
+                if buf.iter().any(|&v| v == POISON_INPUT) {
+                    panic!("poison input sentinel executed (panic_on_poison test hook)");
+                }
+            }
+        }
+        let batch = spec.output_shape[spec.output_batch_axis] as usize;
+        let active = active.min(batch);
+        let ExecScratch { batch_samples, pre, .. } = scratch;
+        batch_samples.resize_with(inputs.len(), Vec::new);
+        for (i, buf) in inputs.iter().enumerate() {
+            let shape = &spec.input_shapes[i];
+            let axis = spec.input_batch_axes[i];
+            let per = per_sample_elems(shape, axis);
+            let xs = &mut batch_samples[i];
+            xs.resize(active * per, 0.0);
+            for b in 0..active {
+                tensor::extract_sample_into(buf, shape, axis, b, &mut xs[b * per..(b + 1) * per]);
+            }
+        }
+        let n_out = self.out_per_sample;
+        let mut state = state.unwrap_or_default();
+        match &self.net {
+            RefNet::Dense { weights } => {
+                let acc = &mut state.carry;
+                acc.resize(active * n_out, 0.0);
+                for (w, xs) in weights.iter().zip(batch_samples.iter()).skip(lo).take(hi - lo) {
+                    w.gemm_acc(xs, active, acc, self.simd);
+                }
+                if hi < stages {
+                    return StageOutcome::Partial(state);
+                }
+                for v in acc.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            RefNet::Recurrent { wx, wh, t, d, h } => {
+                let (t, d, h) = (*t, *d, *h);
+                let xs = &batch_samples[0];
+                let hidden = &mut state.carry;
+                hidden.resize(active * h, 0.0);
+                let block = &mut state.partial;
+                block.resize(active * t * h, 0.0);
+                pre.resize(active * h, 0.0);
+                for step in lo..hi {
+                    if self.simd {
+                        for c in 0..active {
+                            let xt = &xs[c * (t * d) + step * d..][..d];
+                            recurrent_step_into(
+                                wx,
+                                wh,
+                                xt,
+                                &hidden[c * h..(c + 1) * h],
+                                &mut pre[c * h..(c + 1) * h],
+                                true,
+                            );
+                        }
+                    } else {
+                        for j in 0..h {
+                            let rx = wx.row(j);
+                            let rh = wh.row(j);
+                            for c in 0..active {
+                                let xt =
+                                    &xs[c * (t * d) + step * d..c * (t * d) + (step + 1) * d];
+                                pre[c * h + j] =
+                                    dot(rx, xt) + dot(rh, &hidden[c * h..(c + 1) * h]);
+                            }
+                        }
+                    }
+                    for (hv, &p) in hidden.iter_mut().zip(pre.iter()) {
+                        *hv = p.tanh();
+                    }
+                    for c in 0..active {
+                        block[c * (t * h) + step * h..c * (t * h) + (step + 1) * h]
+                            .copy_from_slice(&hidden[c * h..(c + 1) * h]);
+                    }
+                }
+                if hi < stages {
+                    return StageOutcome::Partial(state);
+                }
+                state.carry = std::mem::take(&mut state.partial);
+            }
+        }
+        let out_total: usize = spec.output_shape.iter().product::<i64>() as usize;
+        let mut out = vec![0.0f32; out_total];
+        for b in 0..active {
+            tensor::insert_sample_from(
+                &mut out,
+                &spec.output_shape,
+                spec.output_batch_axis,
+                b,
+                &state.carry[b * n_out..(b + 1) * n_out],
+            );
+        }
+        StageOutcome::Done(out)
+    }
+
     /// One sample through the net, writing `out_per_sample` elements
     /// into `result`.
     fn forward_into(
@@ -1555,5 +1726,123 @@ mod tests {
     fn inconsistent_batch_is_rejected() {
         let s = spec("joint_b2", vec![(vec![2, 4], 0), (vec![1, 4], 0)], (vec![2, 5], 0));
         assert!(RefModel::build(&s).is_err());
+    }
+
+    /// Run a staged chain over `bounds`, a fresh scratch per stage
+    /// (each segment lands on a different worker in the pool).
+    fn run_staged(
+        m: &RefModel,
+        s: &ArtifactSpec,
+        inputs: &[Vec<f32>],
+        active: usize,
+        bounds: &[usize],
+    ) -> Vec<f32> {
+        let mut state = None;
+        for w in bounds.windows(2) {
+            let outcome = m.execute_stage(
+                s,
+                inputs,
+                active,
+                w[0],
+                w[1],
+                state.take(),
+                &mut ExecScratch::default(),
+            );
+            match outcome {
+                StageOutcome::Partial(st) => state = Some(st),
+                StageOutcome::Done(out) => return out,
+            }
+        }
+        panic!("stage chain over {bounds:?} never finished");
+    }
+
+    #[test]
+    fn staged_recurrent_is_bit_exact_vs_monolithic() {
+        // Time-major [T=4, B=3, D=3], h=2, one padding row.
+        let s = spec("edge_lstm_b3", vec![(vec![4, 3, 3], 1)], (vec![4, 3, 2], 1));
+        let x: Vec<f32> = (0..4 * 3 * 3).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
+        for simd in [false, simd_kernel_available()] {
+            let m = RefModel::build_with(
+                &s,
+                RuntimeOptions::default(),
+                simd,
+                &mut WeightCache::default(),
+            )
+            .unwrap();
+            assert_eq!(m.stage_count(), 4, "recurrent stages per timestep");
+            for active in [2usize, 3] {
+                let mono = m.execute(&s, &[x.clone()], active, &mut ExecScratch::default());
+                for bounds in
+                    [vec![0, 4], vec![0, 2, 4], vec![0, 1, 2, 3, 4], vec![0, 3, 4]]
+                {
+                    let staged = run_staged(&m, &s, &[x.clone()], active, &bounds);
+                    assert_eq!(mono, staged, "bounds {bounds:?} active {active} simd {simd}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn staged_dense_is_bit_exact_vs_monolithic() {
+        // Two inputs -> two stages, one per weight matrix.
+        let s = spec(
+            "joint_b2",
+            vec![(vec![2, 4], 0), (vec![2, 3], 0)],
+            (vec![2, 5], 0),
+        );
+        let inputs =
+            vec![vec![0.4, -0.2, 0.7, 0.1, 0.3, 0.0, -0.5, 0.6], vec![0.2, 0.9, -0.1, 0.5, 0.8, -0.3]];
+        for simd in [false, simd_kernel_available()] {
+            let m = RefModel::build_with(
+                &s,
+                RuntimeOptions::default(),
+                simd,
+                &mut WeightCache::default(),
+            )
+            .unwrap();
+            assert_eq!(m.stage_count(), 2, "dense stages per input matrix");
+            for active in [1usize, 2] {
+                let mono = m.execute(&s, &inputs, active, &mut ExecScratch::default());
+                let staged = run_staged(&m, &s, &inputs, active, &[0, 1, 2]);
+                assert_eq!(mono, staged, "active {active} simd {simd}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_and_per_sample_paths_report_one_stage() {
+        let s = dense_spec(2);
+        let naive = build_scalar(
+            &s,
+            RuntimeOptions { naive_kernels: true, packed_weights: false, ..Default::default() },
+        );
+        assert_eq!(naive.stage_count(), 1);
+        let per_sample =
+            build_scalar(&s, RuntimeOptions { batched_gemm: false, ..Default::default() });
+        assert_eq!(per_sample.stage_count(), 1);
+        // The full range still executes through the monolithic path.
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        let mono = per_sample.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
+        let staged = run_staged(&per_sample, &s, &[x], 2, &[0, 1]);
+        assert_eq!(mono, staged);
+    }
+
+    #[test]
+    fn poison_panics_in_any_stage() {
+        let s = spec("edge_lstm_b1", vec![(vec![4, 1, 3], 1)], (vec![4, 1, 2], 1));
+        let m = build_scalar(&s, RuntimeOptions { panic_on_poison: true, ..Default::default() });
+        let mut x: Vec<f32> = (0..12).map(|i| i as f32 / 12.0).collect();
+        x[5] = POISON_INPUT;
+        // Both the first and an interior stage re-check the sentinel:
+        // the guard travels with the chunk, not just its first segment.
+        for (lo, hi, state) in
+            [(0usize, 2usize, None), (2, 4, Some(SegmentState::default()))]
+        {
+            let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                m.execute_stage(&s, &[x.clone()], 1, lo, hi, state, &mut ExecScratch::default())
+            }))
+            .is_err();
+            assert!(panicked, "stage {lo}..{hi} must panic on poison");
+        }
     }
 }

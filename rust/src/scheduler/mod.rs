@@ -37,8 +37,10 @@
 //! invalidation rules.
 
 pub mod cache;
+pub mod segment;
 
 pub use cache::{CostTable, ScheduleCache, ScheduledCost};
+pub use segment::SegmentPlan;
 
 use crate::accel::configs::MensaSystem;
 use crate::characterize::{classify, Family, LayerMetrics};

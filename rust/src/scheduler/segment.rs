@@ -1,0 +1,395 @@
+//! Profiled layer-graph segmentation (ROADMAP item 2).
+//!
+//! Cuts a model's (topologically ordered) layer graph into at most
+//! `max_segments` contiguous segments so the segments can run as a
+//! pipeline across pool workers: a single hot stream of a deep model
+//! then fills several workers instead of occupying one for its full
+//! depth. Cut points are chosen from the per-layer [`CostTable`]
+//! profile, the same approach as "Improving inference time in
+//! multi-TPU systems with profiled model segmentation"
+//! (arXiv:2503.01025).
+//!
+//! The objective is the pipeline's steady-state bottleneck plus what
+//! the cuts themselves cost:
+//!
+//! ```text
+//! minimize  max_s(segment_cost(s)) + Σ_cuts transfer_cost(cut)
+//! ```
+//!
+//! where `segment_cost` is the sum of the member layers' best-case
+//! (min-across-accelerators) modeled latency and `transfer_cost` is
+//! the activation handoff at a cut boundary, priced like the DP
+//! oracle's transfer score (write + read of the producer's output
+//! activations at 70% of the slower side's DRAM bandwidth).
+//!
+//! The solver is exact: every achievable max-segment value is some
+//! contiguous range sum, so it enumerates those candidates in
+//! ascending order and, for each bound `M`, runs an `O(L·span·K)`
+//! DP for the cheapest cut set whose segments all fit under `M`.
+//! Candidates stop as soon as `M` alone exceeds the best objective
+//! found (cut costs are non-negative), which keeps the scan near the
+//! optimum in practice. This runs once per family at server start,
+//! never on the request path.
+
+use crate::accel::configs::MensaSystem;
+use crate::model::ModelGraph;
+use crate::scheduler::cache::CostTable;
+use std::ops::Range;
+
+/// A segmentation of a layer graph: `num_segments() + 1` boundary
+/// indices plus the profiled compute cost of each segment. Segment
+/// `s` covers layers `bounds[s] .. bounds[s + 1]`; the boundaries are
+/// strictly increasing, starting at 0 and ending at the layer count,
+/// so the segments partition the graph in topological order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentPlan {
+    bounds: Vec<usize>,
+    costs: Vec<f64>,
+    cut_cost: f64,
+}
+
+impl SegmentPlan {
+    /// A single segment spanning all `layers` (the monolithic plan).
+    pub fn monolithic(layers: usize, cost: f64) -> Self {
+        Self { bounds: vec![0, layers], costs: vec![cost], cut_cost: 0.0 }
+    }
+
+    /// Number of segments.
+    pub fn num_segments(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Boundary indices (`num_segments() + 1` entries, first 0, last
+    /// = layer count).
+    pub fn bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// The layer range of segment `s`.
+    pub fn segment(&self, s: usize) -> Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Per-segment profiled compute cost.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Total transfer cost across the chosen cut boundaries.
+    pub fn cut_cost(&self) -> f64 {
+        self.cut_cost
+    }
+
+    /// The solver objective this plan achieves: bottleneck segment
+    /// cost plus total cut transfer cost.
+    pub fn objective(&self) -> f64 {
+        self.costs.iter().fold(0.0_f64, |a, &c| a.max(c)) + self.cut_cost
+    }
+
+    /// Each segment's share of the total compute cost (sums to 1).
+    /// Used to scale a family's modeled device window down to one
+    /// segment's slice of the pipeline.
+    pub fn shares(&self) -> Vec<f64> {
+        let total: f64 = self.costs.iter().sum();
+        if total <= 0.0 {
+            let even = 1.0 / self.costs.len().max(1) as f64;
+            return vec![even; self.costs.len()];
+        }
+        self.costs.iter().map(|c| c / total).collect()
+    }
+}
+
+/// Cut a linear layer profile into at most `max_segments` contiguous
+/// segments minimizing `max(segment cost) + Σ cut costs`. `cut_costs`
+/// holds the transfer cost of cutting after each non-final layer, so
+/// `cut_costs.len() == layer_costs.len() - 1`.
+///
+/// Exact for the stated objective (see module docs for the candidate
+/// enumeration + DP argument); ties resolve toward the smallest
+/// feasible max-segment bound.
+///
+/// # Panics
+/// Panics if `layer_costs` is empty, the lengths disagree, or
+/// `max_segments` is 0.
+pub fn cut(layer_costs: &[f64], cut_costs: &[f64], max_segments: usize) -> SegmentPlan {
+    let l = layer_costs.len();
+    assert!(l > 0, "cannot segment an empty layer profile");
+    assert_eq!(cut_costs.len(), l - 1, "need one cut cost per interior boundary");
+    assert!(max_segments > 0, "max_segments must be at least 1");
+    let total: f64 = layer_costs.iter().sum();
+    let k = max_segments.min(l);
+    if k == 1 {
+        return SegmentPlan::monolithic(l, total);
+    }
+
+    // Prefix sums: range_cost(i, j) = cost of layers i..j.
+    let mut prefix = vec![0.0_f64; l + 1];
+    for (i, &c) in layer_costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    let range_cost = |i: usize, j: usize| prefix[j] - prefix[i];
+
+    // Every achievable bottleneck is a contiguous range sum; the
+    // widest single layer is a hard floor for feasibility.
+    let floor = layer_costs.iter().fold(0.0_f64, |a, &c| a.max(c));
+    let mut candidates: Vec<f64> = (0..l)
+        .flat_map(|i| (i + 1..=l).map(move |j| range_cost(i, j)))
+        .filter(|&m| m >= floor)
+        .collect();
+    candidates.sort_by(|a, b| a.total_cmp(b));
+    candidates.dedup();
+
+    let mut best: Option<SegmentPlan> = None;
+    for &m in &candidates {
+        if let Some(plan) = &best {
+            if m >= plan.objective() {
+                break; // cut costs are >= 0, so M alone already loses
+            }
+        }
+        if let Some(plan) = cheapest_cuts_under(layer_costs, cut_costs, &prefix, k, m) {
+            match &best {
+                Some(b) if plan.objective() >= b.objective() => {}
+                _ => best = Some(plan),
+            }
+        }
+    }
+    // The full range sum is always a candidate and always feasible
+    // (one segment), so a plan exists.
+    best.expect("at least the monolithic plan is feasible")
+}
+
+/// For a fixed bottleneck bound `m`: the min-total-cut-cost partition
+/// into at most `k` segments each costing <= `m`, or `None` if no
+/// such partition exists.
+fn cheapest_cuts_under(
+    layer_costs: &[f64],
+    cut_costs: &[f64],
+    prefix: &[f64],
+    k: usize,
+    m: f64,
+) -> Option<SegmentPlan> {
+    let l = layer_costs.len();
+    const INF: f64 = f64::INFINITY;
+    // dp[s][i]: min cut cost covering layers 0..i with exactly s
+    // segments; parent[s][i] reconstructs the last boundary.
+    let mut dp = vec![vec![INF; l + 1]; k + 1];
+    let mut parent = vec![vec![usize::MAX; l + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for s in 1..=k {
+        for i in 1..=l {
+            // Walk the last segment j..i backward until it outgrows m.
+            let mut j = i;
+            while j > 0 && prefix[i] - prefix[j - 1] <= m {
+                j -= 1;
+                let boundary = if j > 0 { cut_costs[j - 1] } else { 0.0 };
+                let cand = dp[s - 1][j] + boundary;
+                if cand < dp[s][i] {
+                    dp[s][i] = cand;
+                    parent[s][i] = j;
+                }
+            }
+        }
+    }
+    let (segs, &cost) = dp
+        .iter()
+        .enumerate()
+        .skip(1)
+        .filter_map(|(s, row)| row[l].is_finite().then_some((s, &row[l])))
+        .min_by(|a, b| a.1.total_cmp(b.1))?;
+
+    let mut bounds = vec![l];
+    let (mut s, mut i) = (segs, l);
+    while i > 0 {
+        let j = parent[s][i];
+        bounds.push(j);
+        s -= 1;
+        i = j;
+    }
+    bounds.reverse();
+    let costs =
+        bounds.windows(2).map(|w| prefix[w[1]] - prefix[w[0]]).collect();
+    Some(SegmentPlan { bounds, costs, cut_cost: cost })
+}
+
+/// Transfer seconds for handing `bytes` of activations across a cut:
+/// one write plus one read at 70% of the bottleneck DRAM bandwidth —
+/// the DP oracle's transfer-score idiom.
+pub fn transfer_secs(bytes: u64, bw_gbps: f64) -> f64 {
+    2.0 * bytes as f64 / (bw_gbps * 1e9 * 0.7)
+}
+
+/// Segment `model` for pipelined execution on `system`: per-layer
+/// cost is the best case across the system's accelerators (each
+/// segment independently lands on its argmin class downstream), and
+/// each interior boundary is priced at the producer layer's output
+/// activation transfer over the system's slowest DRAM interface.
+pub fn plan_for_model(
+    system: &MensaSystem,
+    model: &ModelGraph,
+    table: &CostTable,
+    max_segments: usize,
+) -> SegmentPlan {
+    assert_eq!(table.num_layers(), model.len(), "cost table must match the model");
+    assert!(!system.is_empty(), "cannot plan against an empty system");
+    let accels = table.num_accels();
+    let layer_costs: Vec<f64> = (0..model.len())
+        .map(|i| (0..accels).map(|a| table.cost(i, a).latency_s).fold(f64::INFINITY, f64::min))
+        .collect();
+    let min_bw = system.accels.iter().map(|a| a.dram_bw_gbps).fold(f64::INFINITY, f64::min);
+    let cut_costs: Vec<f64> = model.layers()[..model.len() - 1]
+        .iter()
+        .map(|layer| transfer_secs(layer.output_act_bytes(), min_bw))
+        .collect();
+    cut(&layer_costs, &cut_costs, max_segments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::configs::mensa_g;
+    use crate::model::zoo;
+    use crate::util::rng::Rng;
+
+    /// Brute force over every cut subset (<= 8 layers): the reference
+    /// optimum for the composite objective.
+    fn brute_force(layer_costs: &[f64], cut_costs: &[f64], max_segments: usize) -> f64 {
+        let l = layer_costs.len();
+        assert!(l <= 8, "brute force is exponential in layer count");
+        let mut best = f64::INFINITY;
+        for mask in 0u32..(1 << (l - 1)) {
+            if (mask.count_ones() as usize) + 1 > max_segments {
+                continue;
+            }
+            let mut max_seg = 0.0_f64;
+            let mut seg = 0.0;
+            let mut cuts = 0.0;
+            for (i, &c) in layer_costs.iter().enumerate() {
+                seg += c;
+                if i + 1 < l && mask & (1 << i) != 0 {
+                    max_seg = max_seg.max(seg);
+                    seg = 0.0;
+                    cuts += cut_costs[i];
+                }
+            }
+            best = best.min(max_seg.max(seg) + cuts);
+        }
+        best
+    }
+
+    fn assert_partitions(plan: &SegmentPlan, layers: usize, max_segments: usize) {
+        let b = plan.bounds();
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&layers));
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "bounds must strictly increase: {b:?}");
+        assert_eq!(b.len(), plan.num_segments() + 1);
+        assert!(plan.num_segments() <= max_segments);
+        let shares = plan.shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    fn random_profile(rng: &mut Rng, layers: usize) -> (Vec<f64>, Vec<f64>) {
+        let costs: Vec<f64> = (0..layers).map(|_| rng.log_uniform(1e-6, 1e-3)).collect();
+        // Cut costs span "free" to "comparable to a layer", so some
+        // draws make cutting genuinely unattractive.
+        let cuts: Vec<f64> = (0..layers - 1).map(|_| rng.log_uniform(1e-8, 1e-4)).collect();
+        (costs, cuts)
+    }
+
+    #[test]
+    fn single_segment_when_capped_at_one() {
+        let plan = cut(&[1.0, 2.0, 3.0], &[0.1, 0.1], 1);
+        assert_eq!(plan.bounds(), &[0, 3]);
+        assert_eq!(plan.costs(), &[6.0]);
+        assert_eq!(plan.cut_cost(), 0.0);
+    }
+
+    #[test]
+    fn even_split_when_cuts_are_free() {
+        let plan = cut(&[1.0; 4], &[0.0; 3], 2);
+        assert_eq!(plan.bounds(), &[0, 2, 4]);
+        assert_eq!(plan.costs(), &[2.0, 2.0]);
+        assert!((plan.objective() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expensive_boundary_is_avoided() {
+        // Cutting at the balanced midpoint costs 10; the off-center
+        // boundary is free and still beats not cutting at all.
+        let plan = cut(&[1.0, 1.0, 1.0, 1.0], &[0.0, 10.0, 0.0], 2);
+        assert_ne!(plan.bounds(), &[0, 2, 4], "must dodge the expensive cut");
+        assert!((plan.objective() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prohibitive_cut_costs_keep_the_model_whole() {
+        let plan = cut(&[1.0, 1.0, 1.0, 1.0], &[100.0; 3], 4);
+        assert_eq!(plan.num_segments(), 1, "cuts cost more than they save");
+        assert_eq!(plan.bounds(), &[0, 4]);
+    }
+
+    #[test]
+    fn matches_brute_force_on_small_random_graphs() {
+        let mut rng = Rng::new(0x5e91);
+        for trial in 0..200 {
+            let layers = rng.range_usize(1, 8);
+            let (costs, cuts) = random_profile(&mut rng, layers);
+            let k = rng.range_usize(1, 4);
+            let plan = cut(&costs, &cuts, k);
+            assert_partitions(&plan, layers, k);
+            let reference = brute_force(&costs, &cuts, k);
+            assert!(
+                (plan.objective() - reference).abs() <= 1e-9 * reference.max(1.0),
+                "trial {trial}: solver {} vs brute force {reference} \
+                 (layers {layers}, k {k})",
+                plan.objective(),
+            );
+        }
+    }
+
+    #[test]
+    fn segments_partition_and_costs_are_range_sums() {
+        let mut rng = Rng::new(0xcafe);
+        for _ in 0..100 {
+            let layers = rng.range_usize(1, 40);
+            let (costs, cuts) = random_profile(&mut rng, layers);
+            let k = rng.range_usize(1, 6);
+            let plan = cut(&costs, &cuts, k);
+            assert_partitions(&plan, layers, k);
+            for (s, seg_cost) in plan.costs().iter().enumerate() {
+                let expect: f64 = costs[plan.segment(s)].iter().sum();
+                assert!((seg_cost - expect).abs() <= 1e-9 * expect.max(1.0));
+            }
+            let expect_cuts: f64 =
+                plan.bounds()[1..plan.bounds().len() - 1].iter().map(|&b| cuts[b - 1]).sum();
+            assert!((plan.cut_cost() - expect_cuts).abs() <= 1e-9 * expect_cuts.max(1.0));
+        }
+    }
+
+    #[test]
+    fn widening_the_budget_never_hurts() {
+        let mut rng = Rng::new(0xbeef);
+        for _ in 0..50 {
+            let layers = rng.range_usize(2, 24);
+            let (costs, cuts) = random_profile(&mut rng, layers);
+            let mut prev = f64::INFINITY;
+            for k in 1..=6 {
+                let obj = cut(&costs, &cuts, k).objective();
+                assert!(obj <= prev + 1e-12, "k={k} worsened {prev} -> {obj}");
+                prev = obj;
+            }
+        }
+    }
+
+    #[test]
+    fn plan_for_model_segments_a_zoo_model() {
+        let system = mensa_g();
+        let model = zoo::lstm(2);
+        let table = CostTable::build(&system, &model);
+        let plan = plan_for_model(&system, &model, &table, 4);
+        assert_partitions(&plan, model.len(), 4);
+        assert!(plan.num_segments() >= 2, "a deep LSTM should split: {:?}", plan.bounds());
+        // Splitting must beat the monolithic bottleneck.
+        let total: f64 = plan.costs().iter().sum();
+        assert!(plan.objective() < total);
+    }
+}

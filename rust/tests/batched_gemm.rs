@@ -181,7 +181,7 @@ fn reorder_mode_spreads_a_hot_family_and_keeps_client_fifo() {
         .map(|x| {
             // Retry backpressure (queue depth is finite under a flood).
             loop {
-                match server.infer("edge_cnn", vec![x.clone()]) {
+                match server.infer_request("edge_cnn", vec![x.clone()]).send() {
                     Ok(rx) => return rx,
                     Err(_) => std::thread::sleep(Duration::from_micros(200)),
                 }
@@ -243,7 +243,7 @@ fn reorder_mode_chunks_oversized_jobs_in_order() {
         .collect();
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
@@ -276,11 +276,11 @@ fn server_responses_identical_with_gemm_on_and_off() {
         // Flood so the batched path actually executes multi-row jobs.
         let crx: Vec<_> = cnn
             .iter()
-            .map(|x| server.infer("edge_cnn", vec![x.clone()]).expect("submit"))
+            .map(|x| server.infer_request("edge_cnn", vec![x.clone()]).send().expect("submit"))
             .collect();
         let lrx: Vec<_> = lstm
             .iter()
-            .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+            .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit"))
             .collect();
         let c = crx
             .into_iter()

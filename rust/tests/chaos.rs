@@ -147,7 +147,7 @@ fn transient_faults_retry_to_bit_exact_completion() {
     let server = Server::start(&dir, cfg).expect("start");
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .map(|(family, x)| server.infer_request(family, vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("retries must absorb faults");
@@ -183,7 +183,7 @@ fn worker_deaths_respawn_without_losing_requests() {
     let server = Server::start(&dir, cfg).expect("start");
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .map(|(family, x)| server.infer_request(family, vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("deaths must not lose requests");
@@ -234,7 +234,7 @@ fn blackout_fails_over_and_completes_bit_exact() {
     let server = Server::start(&dir, cfg).expect("start");
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .map(|(family, x)| server.infer_request(family, vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("failover must serve it");
@@ -296,7 +296,7 @@ fn brownout_trips_the_breaker_on_latency_alone() {
     let server = Server::start(&dir, cfg).expect("start");
     let rxs: Vec<_> = reqs
         .iter()
-        .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+        .map(|(family, x)| server.infer_request(family, vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("brownout never fails");
@@ -358,11 +358,9 @@ fn admission_prices_spill_eligible_classes_not_just_the_placed_one() {
     // Below the aggregate estimate: unmeetable even with every class
     // draining, so admission sheds.
     let err = server
-        .infer_with_deadline(
-            "edge_cnn",
-            vec![cnn_input(&mut rng)],
-            Some(Duration::from_secs_f64(aggregate / 2.0)),
-        )
+        .infer_request("edge_cnn", vec![cnn_input(&mut rng)])
+        .deadline(Duration::from_secs_f64(aggregate / 2.0))
+        .send()
         .expect_err("half the aggregate drain estimate must shed");
     assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
 
@@ -371,11 +369,9 @@ fn admission_prices_spill_eligible_classes_not_just_the_placed_one() {
     // summed drain rate can — pricing only the placed class (the old
     // model) would wrongly shed this.
     let rx = server
-        .infer_with_deadline(
-            "edge_cnn",
-            vec![cnn_input(&mut rng)],
-            Some(Duration::from_secs_f64((aggregate + placed) / 2.0)),
-        )
+        .infer_request("edge_cnn", vec![cnn_input(&mut rng)])
+        .deadline(Duration::from_secs_f64((aggregate + placed) / 2.0))
+        .send()
         .expect("a budget the aggregate drain rate covers must be admitted");
     let _ = rx.recv_timeout(TIMEOUT).expect("terminal reply");
     let snap = server.metrics();
@@ -454,7 +450,7 @@ fn shutdown_during_drain_survives_deaths_and_escalation() {
     let server = Server::start(dir, cfg).expect("start");
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("tiny", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("tiny", vec![x.clone()]).send().expect("submit"))
         .collect();
     let (done_tx, done_rx) = mpsc::channel();
     std::thread::spawn(move || {
@@ -519,7 +515,9 @@ fn faulted_serving_conserves_requests_and_stays_bit_exact() {
         let server = Server::start(&dir, cfg).expect("start");
         let rxs: Vec<_> = reqs
             .iter()
-            .map(|(family, x)| server.infer(family, vec![x.clone()]).expect("submit"))
+            .map(|(family, x)| {
+                server.infer_request(family, vec![x.clone()]).send().expect("submit")
+            })
             .collect();
         let mut delivered = 0u64;
         let mut shed = 0u64;

@@ -96,7 +96,7 @@ fn oversized_single_job_spreads_chunks_across_workers() {
     let t0 = Instant::now();
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
@@ -153,7 +153,7 @@ fn poisoned_chunk_errors_only_its_own_requests() {
     let server = Server::start(&dir, cfg).expect("start");
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let result = rx.recv_timeout(TIMEOUT).expect("every request gets a reply");
@@ -212,7 +212,7 @@ fn hot_family_flood_keeps_fifo_metric_clean_through_server_api() {
         .map(|x| {
             // Retry backpressure (queue depth is finite under a flood).
             loop {
-                match server.infer("edge_cnn", vec![x.clone()]) {
+                match server.infer_request("edge_cnn", vec![x.clone()]).send() {
                     Ok(rx) => return rx,
                     Err(_) => std::thread::sleep(Duration::from_micros(200)),
                 }
@@ -271,7 +271,7 @@ fn adaptive_depth_widens_hot_family_and_keeps_cold_family_leased() {
         .iter()
         .map(|x| {
             loop {
-                match server.infer("edge_cnn", vec![x.clone()]) {
+                match server.infer_request("edge_cnn", vec![x.clone()]).send() {
                     Ok(rx) => return rx,
                     Err(_) => std::thread::sleep(Duration::from_micros(200)),
                 }
@@ -333,7 +333,7 @@ fn adaptive_depth_narrows_after_backlog_drains_without_new_pushes() {
         .iter()
         .map(|x| {
             loop {
-                match server.infer("edge_cnn", vec![x.clone()]) {
+                match server.infer_request("edge_cnn", vec![x.clone()]).send() {
                     Ok(rx) => return rx,
                     Err(_) => std::thread::sleep(Duration::from_micros(200)),
                 }

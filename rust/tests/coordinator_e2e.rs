@@ -45,7 +45,7 @@ fn batches_concurrent_requests() {
     let server = Server::start(&dir, cfg).expect("start");
     // Fire 4 requests without waiting: the batcher should coalesce.
     let rxs: Vec<_> = (0..4)
-        .map(|i| server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit"))
+        .map(|i| server.infer_request("edge_cnn", vec![cnn_input(i)]).send().expect("submit"))
         .collect();
     let mut batched = 0;
     for rx in rxs {
@@ -73,7 +73,10 @@ fn batched_results_match_solo_results() {
         .output;
     // Batched run of the same input among others.
     let rxs: Vec<_> = (0..3)
-        .map(|i| server.infer("edge_cnn", vec![cnn_input(if i == 1 { 7 } else { i })]).unwrap())
+        .map(|i| {
+            let x = cnn_input(if i == 1 { 7 } else { i });
+            server.infer_request("edge_cnn", vec![x]).send().unwrap()
+        })
         .collect();
     let outputs: Vec<Vec<f32>> = rxs
         .into_iter()
@@ -142,7 +145,7 @@ fn backpressure_rejects_when_queue_full() {
     let mut rejections = 0;
     let mut accepted = Vec::new();
     for i in 0..64 {
-        match server.infer("edge_cnn", vec![cnn_input(i)]) {
+        match server.infer_request("edge_cnn", vec![cnn_input(i)]).send() {
             Ok(rx) => accepted.push(rx),
             Err(_) => rejections += 1,
         }
@@ -168,7 +171,7 @@ fn oversized_lstm_batch_splits_across_variants() {
         (0..8 * 128).map(|i| ((i + s) % 9) as f32 / 9.0).collect()
     };
     let rxs: Vec<_> = (0..8)
-        .map(|i| server.infer("edge_lstm", vec![lstm_in(i)]).expect("submit"))
+        .map(|i| server.infer_request("edge_lstm", vec![lstm_in(i)]).send().expect("submit"))
         .collect();
     for rx in rxs {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
@@ -218,11 +221,15 @@ fn mixed_families_round_trip_on_worker_pool() {
     // Interleaved flood across both families.
     let mut rxs = Vec::new();
     for i in 0..8 {
-        rxs.push(("edge_cnn", i, server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit")));
+        rxs.push((
+            "edge_cnn",
+            i,
+            server.infer_request("edge_cnn", vec![cnn_input(i)]).send().expect("submit"),
+        ));
         rxs.push((
             "edge_lstm",
             i,
-            server.infer("edge_lstm", vec![lstm_seq(i)]).expect("submit"),
+            server.infer_request("edge_lstm", vec![lstm_seq(i)]).send().expect("submit"),
         ));
     }
     let mut batched = 0;
@@ -266,7 +273,7 @@ fn batched_sim_cost_is_amortized_across_the_batch() {
     assert!(solo.sim.energy_j > 0.0);
 
     let rxs: Vec<_> = (0..4)
-        .map(|i| server.infer("edge_cnn", vec![cnn_input(i)]).expect("submit"))
+        .map(|i| server.infer_request("edge_cnn", vec![cnn_input(i)]).send().expect("submit"))
         .collect();
     let resps: Vec<_> = rxs
         .into_iter()

@@ -153,7 +153,7 @@ fn skewed_mix_lands_hot_families_on_their_preferred_classes() {
     };
     let server = Server::start(&dir, cfg).expect("start");
     let submit = |family: &str, x: &Vec<f32>| loop {
-        match server.infer(family, vec![x.clone()]) {
+        match server.infer_request(family, vec![x.clone()]).send() {
             Ok(rx) => return rx,
             Err(_) => std::thread::sleep(Duration::from_micros(200)),
         }
@@ -240,7 +240,7 @@ fn zero_staleness_spill_crosses_classes_and_keeps_fifo() {
     let rxs: Vec<_> = inputs
         .iter()
         .map(|x| loop {
-            match server.infer("edge_lstm", vec![x.clone()]) {
+            match server.infer_request("edge_lstm", vec![x.clone()]).send() {
                 Ok(rx) => return rx,
                 Err(_) => std::thread::sleep(Duration::from_micros(200)),
             }

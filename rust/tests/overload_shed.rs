@@ -77,12 +77,16 @@ fn admission_sheds_unmeetable_deadlines_before_queueing() {
     let cfg = ServerConfig { overload: OverloadPolicy::Shed, ..base.clone() };
     let server = Server::start(&dir, cfg).expect("start shed server");
     let err = server
-        .infer_with_deadline("edge_cnn", vec![x.clone()], Some(Duration::from_millis(10)))
+        .infer_request("edge_cnn", vec![x.clone()])
+        .deadline(Duration::from_millis(10))
+        .send()
         .expect_err("10 ms budget against a 50 ms modeled chunk must shed");
     assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
     // A roomy budget and a deadline-free request both pass admission.
     let ok = server
-        .infer_with_deadline("edge_cnn", vec![x.clone()], Some(Duration::from_secs(5)))
+        .infer_request("edge_cnn", vec![x.clone()])
+        .deadline(Duration::from_secs(5))
+        .send()
         .expect("roomy budget admits");
     ok.recv_timeout(TIMEOUT).expect("recv").expect("roomy budget completes");
     server.infer_blocking("edge_cnn", vec![x.clone()], TIMEOUT).expect("no deadline, no shed");
@@ -97,7 +101,9 @@ fn admission_sheds_unmeetable_deadlines_before_queueing() {
     // executes — and its lateness is visible as a deadline miss.
     let server = Server::start(&dir, base).expect("start block server");
     let rx = server
-        .infer_with_deadline("edge_cnn", vec![x], Some(Duration::from_millis(10)))
+        .infer_request("edge_cnn", vec![x])
+        .deadline(Duration::from_millis(10))
+        .send()
         .expect("block mode admits everything");
     rx.recv_timeout(TIMEOUT).expect("recv").expect("block mode still serves it");
     let snap = server.metrics();
@@ -140,7 +146,7 @@ fn enqueue_shedding_keeps_delivered_responses_exact_and_in_order() {
         .map(|x| loop {
             // Retry router backpressure; pool-level shedding answers
             // through the reply channel, not here.
-            match server.infer("edge_cnn", vec![x.clone()]) {
+            match server.infer_request("edge_cnn", vec![x.clone()]).send() {
                 Ok(rx) => break rx,
                 Err(_) => std::thread::sleep(Duration::from_micros(200)),
             }
@@ -202,11 +208,11 @@ fn priority_tiers_shed_the_low_tier_first() {
     let server = Server::start(&dir, cfg).expect("start");
     let hi_rxs: Vec<_> = hi_inputs
         .iter()
-        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit hi"))
+        .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit hi"))
         .collect();
     let lo_rxs: Vec<_> = lo_inputs
         .iter()
-        .map(|x| server.infer("edge_cnn", vec![x.clone()]).expect("submit lo"))
+        .map(|x| server.infer_request("edge_cnn", vec![x.clone()]).send().expect("submit lo"))
         .collect();
     let mut hi_shed = 0u64;
     for rx in hi_rxs {
@@ -254,17 +260,18 @@ fn expired_chunks_drop_at_dequeue_and_mixed_chunks_execute() {
     let blockers: Vec<_> = (0..6)
         .map(|_| {
             let x = cnn_input(&mut rng);
-            server.infer("edge_cnn", vec![x]).expect("blocker")
+            server.infer_request("edge_cnn", vec![x]).send().expect("blocker")
         })
         .collect();
     std::thread::sleep(Duration::from_millis(10));
-    let free = server.infer("edge_lstm", vec![lstm_input(&mut rng)]).expect("free member");
+    let free = server
+        .infer_request("edge_lstm", vec![lstm_input(&mut rng)])
+        .send()
+        .expect("free member");
     let dead = server
-        .infer_with_deadline(
-            "edge_lstm",
-            vec![lstm_input(&mut rng)],
-            Some(Duration::from_millis(60)),
-        )
+        .infer_request("edge_lstm", vec![lstm_input(&mut rng)])
+        .deadline(Duration::from_millis(60))
+        .send()
         .expect("60 ms budget passes admission on an empty lstm queue");
     for rx in blockers {
         rx.recv_timeout(TIMEOUT).expect("recv").expect("blocker completes");
@@ -284,18 +291,16 @@ fn expired_chunks_drop_at_dequeue_and_mixed_chunks_execute() {
     let blockers: Vec<_> = (0..4)
         .map(|_| {
             let x = cnn_input(&mut rng);
-            server.infer("edge_cnn", vec![x]).expect("blocker")
+            server.infer_request("edge_cnn", vec![x]).send().expect("blocker")
         })
         .collect();
     std::thread::sleep(Duration::from_millis(10));
     let doomed: Vec<_> = (0..2)
         .map(|_| {
             server
-                .infer_with_deadline(
-                    "edge_lstm",
-                    vec![lstm_input(&mut rng)],
-                    Some(Duration::from_millis(60)),
-                )
+                .infer_request("edge_lstm", vec![lstm_input(&mut rng)])
+                .deadline(Duration::from_millis(60))
+                .send()
                 .expect("passes admission: the lstm queue itself is empty")
         })
         .collect();
@@ -375,7 +380,7 @@ fn escalation_reserves_low_confidence_requests_on_the_large_family() {
     let server = Server::start(dir, cfg).expect("start");
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("tiny", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("tiny", vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("ok");
@@ -392,7 +397,9 @@ fn escalation_reserves_low_confidence_requests_on_the_large_family() {
     // guaranteed late loses to the small result now. (Block mode, so
     // the hopeless deadline is neither admission-shed nor expired.)
     let rx = server
-        .infer_with_deadline("tiny", vec![inputs[0].clone()], Some(Duration::from_nanos(1)))
+        .infer_request("tiny", vec![inputs[0].clone()])
+        .deadline(Duration::from_nanos(1))
+        .send()
         .expect("submit");
     let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("small fallback delivers");
     assert_eq!(resp.output, solo_tiny[0], "budget-exhausted request keeps the small result");
@@ -472,7 +479,9 @@ fn shed_ladder_composes_with_a_device_roster() {
     // modeled window — microseconds of budget cannot buy one.
     let mut rng = Rng::new(0x0575);
     let err = server
-        .infer_with_deadline("edge_cnn", vec![cnn_input(&mut rng)], Some(Duration::from_micros(1)))
+        .infer_request("edge_cnn", vec![cnn_input(&mut rng)])
+        .deadline(Duration::from_micros(1))
+        .send()
         .expect_err("1 µs budget must shed at admission under a roster");
     assert!(format!("{err:#}").contains("admission shed"), "{err:#}");
     // A deadline-free burst sheds at enqueue past the bounded queue —
@@ -480,7 +489,7 @@ fn shed_ladder_composes_with_a_device_roster() {
     let rxs: Vec<_> = (0..16)
         .map(|_| {
             let x = cnn_input(&mut rng);
-            server.infer("edge_cnn", vec![x]).expect("submit")
+            server.infer_request("edge_cnn", vec![x]).send().expect("submit")
         })
         .collect();
     let mut served = 0u64;

@@ -78,13 +78,17 @@ fn skewed_concurrent_load_stays_bit_exact_and_fifo() {
         // every 4th hot one.
         let mut rxs = Vec::new();
         for (i, x) in hot.iter().enumerate() {
-            rxs.push(("edge_cnn", i, server.infer("edge_cnn", vec![x.clone()]).unwrap()));
+            rxs.push((
+                "edge_cnn",
+                i,
+                server.infer_request("edge_cnn", vec![x.clone()]).send().unwrap(),
+            ));
             if i % 4 == 3 {
                 let c = i / 4;
                 rxs.push((
                     "edge_lstm",
                     c,
-                    server.infer("edge_lstm", vec![cold[c].clone()]).unwrap(),
+                    server.infer_request("edge_lstm", vec![cold[c].clone()]).send().unwrap(),
                 ));
             }
         }
@@ -196,7 +200,7 @@ fn oversized_jobs_chunk_in_order_under_stealing() {
         .collect();
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| server.infer("edge_lstm", vec![x.clone()]).expect("submit"))
+        .map(|x| server.infer_request("edge_lstm", vec![x.clone()]).send().expect("submit"))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv_timeout(TIMEOUT).expect("recv").expect("chunked execution");
