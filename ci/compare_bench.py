@@ -78,6 +78,12 @@ TRACKED = {
     # runners do); a non-AVX2 runner would report ~1.0 and fail loudly.
     "packed_panels": ("speedup",),
     "simd_kernel": ("speedup",),
+    # i8-quantized serving precision vs f32, packed panels + auto
+    # kernel both sides. Dense leg is the gated headline (the 4x
+    # weight-byte shrink on a streaming-bound GEMM); the recurrent leg
+    # is tracked for visibility but not floored (its square gate
+    # matrices are smaller, so caches soften the effect).
+    "quantized_gemm": ("speedup", "recurrent_speedup"),
 }
 
 DEFAULT_TOLERANCE = {"speedup_rel": 0.30, "rps_rel": 0.5}
@@ -123,6 +129,10 @@ ABS_FLOORS = {
     # parity means armed recovery serves no better than none at all.
     ("degraded_failover", "retention"): 0.5,
     ("degraded_failover", "retention_gain"): 1.5,
+    # i8 serving at (or below) f32 parity on the streaming-bound dense
+    # leg means the quantized pack is not buying back memory bandwidth
+    # — the precision knob's broken-feature signal. Strictly > 1.0.
+    ("quantized_gemm", "speedup"): 1.0,
     # A segmented pipeline at (or below) parity with the monolithic
     # lease means segmentation buys no pipelining at all — the PR 9
     # tentpole's broken-feature signal. With balanced 4-segment cuts
@@ -294,6 +304,22 @@ def self_test():
     _, failures = check(
         {"layer_pipeline": {"speedup": 1.8, "segmented_rps": 400.0}}, pipe_base)
     assert not failures, f"in-band pipeline metrics must pass, got {failures}"
+
+    # Quantized-precision floor: i8 sliding under f32 parity on the
+    # dense leg must fail even though the relative band would allow it
+    # (1.4 * (1 - 0.35) = 0.91 < 1.0); the recurrent leg rides the
+    # band alone.
+    quant_base = {
+        "tolerance": {"speedup_rel": 0.35, "rps_rel": 0.6},
+        "cases": {"quantized_gemm": {"speedup": 1.4, "recurrent_speedup": 1.1}},
+    }
+    _, failures = check(
+        {"quantized_gemm": {"speedup": 0.95, "recurrent_speedup": 1.0}}, quant_base)
+    assert any("quantized_gemm.speedup" in f for f in failures), (
+        f"sub-parity i8 must trip the absolute floor, got {failures}")
+    _, failures = check(
+        {"quantized_gemm": {"speedup": 1.2, "recurrent_speedup": 0.9}}, quant_base)
+    assert not failures, f"in-band quantized metrics must pass, got {failures}"
 
     # write_baseline round-trips through check.
     regen = write_baseline(healthy, "self-test")

@@ -120,7 +120,7 @@ use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, 
 use mensa::coordinator::{device, worker_for_family, Server};
 use mensa::model::zoo;
 use mensa::runtime::{
-    simd_kernel_available, ExecScratch, FaultPlan, KernelKind, Runtime, RuntimeOptions,
+    simd_kernel_available, ExecScratch, FaultPlan, KernelKind, Precision, Runtime, RuntimeOptions,
 };
 use mensa::scheduler::{Mapping, MensaScheduler, ScheduleCache};
 use mensa::sim::Simulator;
@@ -166,6 +166,13 @@ const FAILOVER_DEVICE_US: u64 = 700;
 /// dominate its fill/drain ramps.
 const PIPE_REQUESTS: usize = 640;
 const PIPE_STAGES: usize = 4;
+/// Quantized A/B: the recurrent leg's `edge_lstm` bench entry —
+/// `QLSTM_T` timesteps over a `QLSTM_D`-wide state, so each step
+/// streams two `QLSTM_D`²-element gate matrices (f32: ~512 KB total;
+/// i8: ~128 KB) through the same packed-panel kernels as the dense
+/// leg.
+const QLSTM_T: usize = 8;
+const QLSTM_D: usize = 256;
 
 fn main() {
     timer::header("hotpath_micro");
@@ -251,12 +258,13 @@ fn main() {
     let gemm = bench_gemm_kernel(&bench_dir);
     let packed = bench_packed_panels(&bench_dir);
     let simd = bench_simd_kernel(&bench_dir);
+    let quant = bench_quantized_gemm(&bench_dir);
 
     // 6. Serving throughput: routing, kernel, and ordering-discipline
     // comparisons under skewed / uniform / hot-family loads.
     let serving = bench_serving(&bench_dir, &families);
 
-    write_bench_json(&kernel, &gemm, &packed, &simd, &serving);
+    write_bench_json(&kernel, &gemm, &packed, &simd, &quant, &serving);
 
     // 7. Macro: the full 24-model x 4-system evaluation grid.
     let m = timer::bench("grid/24x4_evaluation", 3, 2, || {
@@ -356,22 +364,24 @@ fn bench_kernel_ab(
 ) -> (f64, f64) {
     let baseline = Runtime::load_with(dir, baseline_opts).expect("bench runtime");
     let treatment = Runtime::load_with(dir, treatment_opts).expect("bench runtime");
-    let name = "fam000_b8";
-    let mb = baseline.model(name).expect("bench b8 variant");
-    let mt = treatment.model(name).expect("bench b8 variant");
+    (
+        bench_model_ns_per_sample(&baseline, "fam000_b8", 8 * BENCH_IN, label.0),
+        bench_model_ns_per_sample(&treatment, "fam000_b8", 8 * BENCH_IN, label.1),
+    )
+}
+
+/// Time one b8 variant on an already-loaded runtime, ns per sample.
+fn bench_model_ns_per_sample(rt: &Runtime, name: &str, in_elems: usize, label: &str) -> f64 {
+    let model = rt.model(name).expect("bench b8 variant");
     let input: Vec<f32> =
-        (0..8 * BENCH_IN).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
+        (0..in_elems).map(|i| ((i % 23) as f32 - 11.0) / 23.0).collect();
     let inputs = vec![input];
     let mut scratch = ExecScratch::default();
-    let b = timer::bench(label.0, 10, 100, || {
-        black_box(mb.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
+    let m = timer::bench(label, 10, 100, || {
+        black_box(model.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
     });
-    println!("{}", b.render());
-    let t = timer::bench(label.1, 10, 100, || {
-        black_box(mt.execute_with(black_box(&inputs), 8, &mut scratch).unwrap());
-    });
-    println!("{}", t.render());
-    (b.mean_ns / 8.0, t.mean_ns / 8.0)
+    println!("{}", m.render());
+    m.mean_ns / 8.0
 }
 
 /// Row-major vs panel-major weight layout, scalar kernels both sides
@@ -435,6 +445,79 @@ fn bench_simd_kernel(dir: &str) -> SimdResult {
         );
     }
     SimdResult { scalar_ns_per_sample: scalar_ns, simd_ns_per_sample: simd_ns }
+}
+
+/// f32 vs i8 serving precision, packed panels + auto kernel both
+/// sides, over the dense heavy-weight b8 variant and the recurrent
+/// `edge_lstm` entry. Both legs are parameter-streaming bound, so the
+/// 4x weight-byte shrink (tracked as bytes per MAC) is what the
+/// speedup measures.
+struct QuantizedResult {
+    dense_f32_ns_per_sample: f64,
+    dense_i8_ns_per_sample: f64,
+    recurrent_f32_ns_per_sample: f64,
+    recurrent_i8_ns_per_sample: f64,
+    /// Weight bytes streamed per dense MAC at batch 8, per precision.
+    f32_bytes_per_mac: f64,
+    i8_bytes_per_mac: f64,
+}
+
+impl QuantizedResult {
+    fn speedup(&self) -> f64 {
+        self.dense_f32_ns_per_sample / self.dense_i8_ns_per_sample.max(1e-9)
+    }
+    fn recurrent_speedup(&self) -> f64 {
+        self.recurrent_f32_ns_per_sample / self.recurrent_i8_ns_per_sample.max(1e-9)
+    }
+}
+
+fn bench_quantized_gemm(dir: &str) -> QuantizedResult {
+    let f32_rt = Runtime::load(dir).expect("bench runtime");
+    let i8_rt = Runtime::load_with(
+        dir,
+        RuntimeOptions { precision: Precision::I8, ..Default::default() },
+    )
+    .expect("bench runtime");
+    let dense_in = 8 * BENCH_IN;
+    let lstm_in = QLSTM_T * 8 * QLSTM_D;
+    let dense_f32 =
+        bench_model_ns_per_sample(&f32_rt, "fam000_b8", dense_in, "ref_kernel/quant_dense_f32_b8");
+    let dense_i8 =
+        bench_model_ns_per_sample(&i8_rt, "fam000_b8", dense_in, "ref_kernel/quant_dense_i8_b8");
+    let rec_f32 = bench_model_ns_per_sample(
+        &f32_rt,
+        "edge_lstm_b8",
+        lstm_in,
+        "ref_kernel/quant_lstm_f32_b8",
+    );
+    let rec_i8 =
+        bench_model_ns_per_sample(&i8_rt, "edge_lstm_b8", lstm_in, "ref_kernel/quant_lstm_i8_b8");
+    // Bytes per MAC: one full weight-streaming pass amortized over a
+    // batch-8 chunk's dense MACs (the paper's arithmetic-intensity
+    // axis, shifted by the i8 pack).
+    let dense_macs = (8 * BENCH_IN * BENCH_OUT) as f64;
+    let result = QuantizedResult {
+        dense_f32_ns_per_sample: dense_f32,
+        dense_i8_ns_per_sample: dense_i8,
+        recurrent_f32_ns_per_sample: rec_f32,
+        recurrent_i8_ns_per_sample: rec_i8,
+        f32_bytes_per_mac: f32_rt.weight_bytes("fam000") as f64 / dense_macs,
+        i8_bytes_per_mac: i8_rt.weight_bytes("fam000") as f64 / dense_macs,
+    };
+    println!(
+        "quantized i8 speedup (b8, per sample): dense {:.2}x, recurrent {:.2}x \
+         ({:.3} -> {:.3} weight bytes/MAC)",
+        result.speedup(),
+        result.recurrent_speedup(),
+        result.f32_bytes_per_mac,
+        result.i8_bytes_per_mac
+    );
+    if result.speedup() >= 1.0 {
+        println!("PASS: i8 serving beats f32 on the dense leg (>= 1.0x)");
+    } else {
+        println!("WARN: i8 dense speedup {:.2}x < 1.0x", result.speedup());
+    }
+    result
 }
 
 /// One A/B serving comparison.
@@ -573,6 +656,16 @@ fn write_bench_artifacts(families: &[String]) -> String {
             );
         }
     }
+    // Quantized-A/B recurrent leg: a time-major `edge_lstm` entry
+    // (the reference backend's recurrent path keys on the family
+    // name) with square QLSTM_D-wide gate matrices.
+    let _ = write!(
+        manifest,
+        "\n[[artifact]]\nname = \"edge_lstm_b8\"\nfile = \"edge_lstm_b8.hlo.txt\"\n\
+         num_inputs = 1\ninput0_shape = \"{QLSTM_T}x8x{QLSTM_D}\"\ninput0_batch_axis = 1\n\
+         output_shape = \"{QLSTM_T}x8x{QLSTM_D}\"\noutput_batch_axis = 1\n\
+         sha256 = \"referencebackend\"\n"
+    );
     // Layer-pipeline family: `edge_rcnn` proxies to the zoo's mixed
     // CNN-front/LSTM-back RCNN1 for profiling, and its PIPE_STAGES
     // dense input blocks give the reference backend that many runtime
@@ -1115,6 +1208,7 @@ fn escalation_config(threshold: f64, hierarchical: bool) -> ServerConfig {
                 name: "esc_small".to_string(),
                 priority: 0,
                 escalate_to: Some("esc_large".to_string()),
+                precision: Precision::F32,
             }]
         } else {
             Vec::new()
@@ -1745,6 +1839,7 @@ fn write_bench_json(
     gemm: &GemmResult,
     packed: &PackedResult,
     simd: &SimdResult,
+    quant: &QuantizedResult,
     serving: &ServingResult,
 ) {
     let mut json = String::from("{\n  \"bench\": \"serving_throughput\",\n");
@@ -1823,6 +1918,21 @@ fn write_bench_json(
         simd.scalar_ns_per_sample,
         simd.simd_ns_per_sample,
         simd.scalar_ns_per_sample / simd.simd_ns_per_sample.max(1e-9)
+    );
+    let _ = write!(
+        json,
+        "  \"quantized_gemm\": {{\"f32_ns_per_sample\": {:.1}, \"i8_ns_per_sample\": {:.1}, \
+         \"speedup\": {:.3}, \"recurrent_f32_ns_per_sample\": {:.1}, \
+         \"recurrent_i8_ns_per_sample\": {:.1}, \"recurrent_speedup\": {:.3}, \
+         \"f32_bytes_per_mac\": {:.4}, \"i8_bytes_per_mac\": {:.4}}},\n",
+        quant.dense_f32_ns_per_sample,
+        quant.dense_i8_ns_per_sample,
+        quant.speedup(),
+        quant.recurrent_f32_ns_per_sample,
+        quant.recurrent_i8_ns_per_sample,
+        quant.recurrent_speedup(),
+        quant.f32_bytes_per_mac,
+        quant.i8_bytes_per_mac
     );
     let _ = write!(
         json,

@@ -291,10 +291,15 @@ pub struct FamilyPolicy {
     /// first, and only low-confidence outputs escalate to this
     /// (large) family, inheriting the remaining deadline budget.
     pub escalate_to: Option<String>,
+    /// Serving precision for the family's weights: `f32` (default)
+    /// keeps the full-precision panel pack, `i8` quantizes each
+    /// output row symmetrically at prepack time (scale = max-abs/127)
+    /// and serves through the integer kernels. Activations stay f32.
+    pub precision: crate::runtime::Precision,
 }
 
 fn parse_family(t: &Table) -> Result<FamilyPolicy> {
-    reject_unknown_keys(t, &["name", "priority", "escalate_to"], "[[family]]")?;
+    reject_unknown_keys(t, &["name", "priority", "escalate_to", "precision"], "[[family]]")?;
     let name = get_str(t, "name")?.to_string();
     if name.is_empty() {
         bail!("[[family]]: name must be non-empty");
@@ -316,7 +321,17 @@ fn parse_family(t: &Table) -> Result<FamilyPolicy> {
         }
         None => None,
     };
-    Ok(FamilyPolicy { name, priority, escalate_to })
+    let precision = match t.get("precision") {
+        Some(v) => {
+            let raw = v
+                .as_str()
+                .ok_or_else(|| anyhow!("family `{name}`: non-string precision"))?;
+            crate::runtime::Precision::parse(raw)
+                .map_err(|e| anyhow!("family `{name}`: {e}"))?
+        }
+        None => crate::runtime::Precision::F32,
+    };
+    Ok(FamilyPolicy { name, priority, escalate_to, precision })
 }
 
 fn parse_fault(t: &Table) -> Result<FaultPlan> {
@@ -971,6 +986,30 @@ memory = "hbm_internal"
         assert_eq!(cfg.priority_of("joint"), 0, "unlisted families are tier 0");
         assert_eq!(cfg.families[1].escalate_to.as_deref(), Some("joint"));
         assert_eq!(cfg.families[0].escalate_to, None);
+    }
+
+    #[test]
+    fn family_precision_parses_with_f32_default() {
+        let cfg = ServerConfig::from_toml(
+            "[[family]]\nname = \"edge_lstm\"\nprecision = \"i8\"\n\
+             \n[[family]]\nname = \"edge_cnn\"\nprecision = \"f32\"\n\
+             \n[[family]]\nname = \"joint\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.families[0].precision, crate::runtime::Precision::I8);
+        assert_eq!(cfg.families[1].precision, crate::runtime::Precision::F32);
+        assert_eq!(
+            cfg.families[2].precision,
+            crate::runtime::Precision::F32,
+            "precision defaults to f32 when omitted"
+        );
+        // Closed enum: anything else is a config error, not a silent f32.
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\nprecision = \"fp16\"\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown precision"), "{err:#}");
+        let err = ServerConfig::from_toml("[[family]]\nname = \"a\"\nprecision = 8\n")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("non-string precision"), "{err:#}");
     }
 
     #[test]

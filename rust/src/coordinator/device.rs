@@ -170,7 +170,24 @@ impl DeviceProfile {
     pub fn transfer(&self) -> Duration {
         self.transfer
     }
+
+    /// Byte-accurate transfer window: the flat `transfer_us` knob is
+    /// read as the cost of moving [`TRANSFER_CALIB_BYTES`] of
+    /// intermediate state, and an actual handoff of `bytes` scales
+    /// linearly. A handoff of exactly the calibration size charges
+    /// exactly the flat window, so rosters tuned before byte
+    /// accounting keep their calibration; zero-byte handoffs (dense
+    /// carry not yet materialized) cost nothing.
+    pub fn transfer_for_bytes(&self, bytes: usize) -> Duration {
+        self.transfer.mul_f64(bytes as f64 / TRANSFER_CALIB_BYTES as f64)
+    }
 }
+
+/// Intermediate-state size (bytes) at which a class boundary charges
+/// exactly the roster's flat `transfer_us`: one 1024-element f32
+/// activation vector, the ballpark of the `[h;c]` hidden states the
+/// segment lane actually carries.
+pub const TRANSFER_CALIB_BYTES: usize = 4096;
 
 /// Build one [`DeviceProfile`] per roster entry (roster order — the
 /// same order `Server::start` expands workers in, so profile index ==
@@ -362,6 +379,14 @@ impl Backend for DeviceBackend {
     fn transfer_window(&self, _family: &str) -> Duration {
         self.profile.transfer()
     }
+
+    fn transfer_window_bytes(&self, _family: &str, bytes: usize) -> Duration {
+        self.profile.transfer_for_bytes(bytes)
+    }
+
+    fn weight_bytes(&self, family: &str) -> u64 {
+        self.runtime.weight_bytes(family)
+    }
 }
 
 /// Tracks, per family, which device class executed its last job, so
@@ -444,6 +469,24 @@ mod tests {
         }
         assert_eq!(profiles[0].class(), "pascal");
         assert_eq!(profiles[1].class(), "pavlov");
+    }
+
+    #[test]
+    fn transfer_for_bytes_is_linear_and_calibrated() {
+        let families = serving_families();
+        let p = DeviceProfile::modeled(
+            &spec(DeviceClass::Pascal, 1.0),
+            &families,
+            Duration::from_micros(200),
+        );
+        // The calibration size charges exactly the flat window, so
+        // pre-byte-accounting rosters keep their tuning.
+        assert_eq!(p.transfer_for_bytes(TRANSFER_CALIB_BYTES), p.transfer());
+        assert_eq!(p.transfer_for_bytes(0), Duration::ZERO);
+        let half = p.transfer_for_bytes(TRANSFER_CALIB_BYTES / 2);
+        let double = p.transfer_for_bytes(TRANSFER_CALIB_BYTES * 2);
+        assert_eq!(half.as_nanos() * 4, double.as_nanos(), "linear in bytes");
+        assert!(half < p.transfer() && double > p.transfer());
     }
 
     #[test]

@@ -147,6 +147,7 @@ struct Inner {
     failovers: u64,
     segments_executed: u64,
     segment_hops: u64,
+    weight_bytes_streamed: BTreeMap<String, u64>,
 }
 
 /// Thread-safe metrics registry shared by the server components.
@@ -261,6 +262,14 @@ pub struct Snapshot {
     /// charge a transfer window and count in
     /// `cross_device_transfers`.
     pub segment_hops: u64,
+    /// Weight bytes streamed per family, sorted by family: each
+    /// executed chunk adds one full pass over its family's resident
+    /// compute-layout weights (`Backend::weight_bytes` — i8 packs
+    /// count 1 byte/element + dequant scales, f32 packs 4). The
+    /// paper's parameter-byte bottleneck as a ledger: an i8 family
+    /// accumulates ~4x fewer bytes than the same family served f32.
+    /// Zero entries are omitted (backends with unknown layouts).
+    pub weight_bytes_streamed: Vec<(String, u64)>,
 }
 
 impl Metrics {
@@ -408,6 +417,20 @@ impl Metrics {
         self.inner.lock().expect("metrics lock").segment_hops += 1;
     }
 
+    /// Record one chunk's weight-streaming traffic: `bytes` is the
+    /// family's full compute-layout pass (`Backend::weight_bytes`),
+    /// counted once per executed chunk at dispatch. Zero-byte backends
+    /// skip the call entirely, so the hot path pays nothing when the
+    /// layout is unknown and the counter allocates only on a family's
+    /// first chunk.
+    pub fn record_weight_bytes(&self, family: &str, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut m = self.inner.lock().expect("metrics lock");
+        *m.weight_bytes_streamed.entry(family.to_string()).or_insert(0) += bytes;
+    }
+
     /// Snapshot current values.
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().expect("metrics lock");
@@ -453,6 +476,11 @@ impl Metrics {
             failovers: m.failovers,
             segments_executed: m.segments_executed,
             segment_hops: m.segment_hops,
+            weight_bytes_streamed: m
+                .weight_bytes_streamed
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
         }
     }
 }
@@ -536,6 +564,21 @@ mod tests {
             vec![("pascal".to_string(), 2), ("pavlov".to_string(), 1)]
         );
         assert_eq!(s.cross_device_transfers, 1);
+    }
+
+    #[test]
+    fn weight_bytes_accumulate_per_family_and_skip_zero() {
+        let m = Metrics::default();
+        m.record_weight_bytes("edge_cnn", 1024);
+        m.record_weight_bytes("edge_cnn", 1024);
+        m.record_weight_bytes("edge_lstm", 256);
+        // Unknown-layout backends report 0; no entry materializes.
+        m.record_weight_bytes("joint", 0);
+        let s = m.snapshot();
+        assert_eq!(
+            s.weight_bytes_streamed,
+            vec![("edge_cnn".to_string(), 2048), ("edge_lstm".to_string(), 256)]
+        );
     }
 
     #[test]

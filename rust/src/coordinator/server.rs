@@ -335,8 +335,12 @@ impl Server {
         let sim_costs = Arc::new(family_sim_costs());
 
         // One runtime for the whole pool: manifest parsed once,
-        // weights materialized once, shared immutably.
-        let runtime = Arc::new(Runtime::load_with(
+        // weights materialized once, shared immutably. `[[family]]`
+        // precision overrides quantize at prepack, so a mixed i8/f32
+        // roster still shares the single cache.
+        let precisions: HashMap<String, crate::runtime::Precision> =
+            cfg.families.iter().map(|f| (f.name.clone(), f.precision)).collect();
+        let runtime = Arc::new(Runtime::load_with_precisions(
             artifacts_dir,
             RuntimeOptions {
                 naive_kernels: cfg.naive_kernels,
@@ -344,7 +348,9 @@ impl Server {
                 kernel: cfg.kernel,
                 packed_weights: cfg.packed_weights,
                 panic_on_poison: cfg.panic_on_poison,
+                ..Default::default()
             },
+            &precisions,
         )?);
 
         let families: std::collections::HashSet<String> =
@@ -1954,6 +1960,10 @@ fn exec_chunk(
             // and device-class attribution is right even when another
             // thread delivers.
             metrics.record_job(family, worker, backend.device_class());
+            // Weight-streaming ledger: each executed chunk streams the
+            // family's full (precision-dependent) weight footprint once
+            // — the byte ledger the i8-vs-f32 A/B reads.
+            metrics.record_weight_bytes(family, backend.weight_bytes(family));
             // One modeled full-model cost, amortized across the batch
             // (built once, moved into the last response at delivery).
             let sim = sim_costs.get(family).map(|c| c.amortized(n)).unwrap_or_default();
@@ -2274,12 +2284,20 @@ fn exec_segment_job(
     // Cross-class activation transfer: the previous segment stamped
     // the class it ran on; landing elsewhere charges the transfer
     // window on top of this segment's share
-    // (`Snapshot::cross_device_transfers`).
+    // (`Snapshot::cross_device_transfers`). The charge is
+    // byte-accurate: scaled by the carried intermediate state's actual
+    // size, with the flat `transfer_us` window as the per-
+    // `TRANSFER_CALIB_BYTES` calibration point. A carry-less hop (the
+    // first segment) keeps the flat charge — there is no measured
+    // payload to scale by.
     let mut transfer = Duration::ZERO;
     if let Some(from) = &job.from_class {
         if from != backend.device_class() {
             ctx.metrics.record_transfer();
-            transfer = backend.transfer_window(&family);
+            transfer = match &job.carry {
+                Some(state) => backend.transfer_window_bytes(&family, state.transfer_bytes()),
+                None => backend.transfer_window(&family),
+            };
         }
     }
     let (lo, hi) = (pipe.bounds[s], pipe.bounds[s + 1]);
@@ -2333,6 +2351,10 @@ fn exec_segment_job(
         }
         Ok(SegResult::Done(outputs, batch)) => {
             ctx.metrics.record_segment(&family, worker, backend.device_class(), true);
+            // The chunk's segments collectively streamed the family's
+            // full weight footprint exactly once — recorded on the
+            // final segment so the ledger matches the monolithic path.
+            ctx.metrics.record_weight_bytes(&family, backend.weight_bytes(&family));
             let sim = ctx.sim_costs.get(&family).map(|c| c.amortized(n)).unwrap_or_default();
             let done = ChunkDone {
                 seq,

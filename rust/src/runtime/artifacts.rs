@@ -70,7 +70,7 @@ fn family_of(name: &str) -> &str {
 }
 
 /// One artifact entry: a compiled model variant.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
     /// Variant name, e.g. `edge_cnn_b4`.
     pub name: String,
@@ -87,6 +87,13 @@ pub struct ArtifactSpec {
     pub output_batch_axis: usize,
     /// Truncated sha256 of the HLO text (staleness detection).
     pub sha256: String,
+    /// Per-matrix symmetric per-output-row i8 quantization scales
+    /// (`weight<i>_row_scales` keys, one comma-joined `f32` list per
+    /// 2-D matmul weight, scale = max-abs/127 of the row). Written by
+    /// `aot.py` so an offline consumer can reconstruct the quantized
+    /// weights; the reference backend recomputes identical scales at
+    /// prepack and does not read these. Empty for old manifests.
+    pub weight_row_scales: Vec<Vec<f32>>,
 }
 
 impl ArtifactSpec {
@@ -164,6 +171,29 @@ impl Manifest {
             // axes explicitly; the defaults only serve old manifests).
             let output_batch_axis = parse_batch_axis(t, "output_batch_axis", 0, &output_shape)
                 .with_context(|| format!("artifact `{name}`"))?;
+            // Optional quantization metadata: `weight<i>_row_scales`
+            // keys are contiguous from 0 (aot.py writes one per 2-D
+            // matmul weight); absence means an old manifest.
+            let mut weight_row_scales = Vec::new();
+            for i in 0.. {
+                let key = format!("weight{i}_row_scales");
+                let Some(v) = t.get(&key) else { break };
+                let raw = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact `{name}`: non-string `{key}`"))?;
+                let scales: Vec<f32> = raw
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<f32>()
+                            .map_err(|_| anyhow!("artifact `{name}`: bad scale in `{key}`"))
+                    })
+                    .collect::<Result<_>>()?;
+                if scales.iter().any(|s| !s.is_finite() || *s < 0.0) {
+                    bail!("artifact `{name}`: `{key}` scales must be finite and non-negative");
+                }
+                weight_row_scales.push(scales);
+            }
             artifacts.push(ArtifactSpec {
                 name,
                 file: get("file")?.to_string(),
@@ -172,6 +202,7 @@ impl Manifest {
                 input_batch_axes,
                 output_batch_axis,
                 sha256: get("sha256")?.to_string(),
+                weight_row_scales,
             });
         }
         Ok(Self { artifacts })
@@ -264,6 +295,42 @@ sha256 = "0000000000000000"
         let b2 = m.find("edge_lstm_b2").unwrap();
         assert_eq!(b2.input_batch_axes, vec![1]);
         assert_eq!(b2.output_batch_axis, 1);
+    }
+
+    #[test]
+    fn weight_row_scales_round_trip() {
+        // aot.py writes one comma-joined f32 list per 2-D matmul
+        // weight; the parse must reproduce the values exactly (they
+        // are emitted with full repr precision).
+        let manifest = r#"
+[[artifact]]
+name = "edge_cnn_b2"
+file = "edge_cnn_b2.hlo.txt"
+num_inputs = 1
+input0_shape = "2x8"
+output_shape = "2x4"
+sha256 = "abcd1234abcd1234"
+weight0_row_scales = "0.0039370078,0.007874016, 0.0, 1.5e-3"
+weight1_row_scales = "0.25,0.125"
+"#;
+        let m = Manifest::parse(manifest).unwrap();
+        let spec = m.find("edge_cnn_b2").unwrap();
+        assert_eq!(spec.weight_row_scales.len(), 2);
+        assert_eq!(
+            spec.weight_row_scales[0],
+            vec![0.0039370078f32, 0.007874016, 0.0, 1.5e-3]
+        );
+        assert_eq!(spec.weight_row_scales[1], vec![0.25f32, 0.125]);
+        // Absent keys mean an old manifest, not an error.
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find("edge_cnn_b4").unwrap().weight_row_scales.is_empty());
+        // Malformed values are config errors, not silent zeros.
+        let bad = manifest.replace("0.25,0.125", "0.25,oops");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("bad scale"), "{err:#}");
+        let bad = manifest.replace("0.25,0.125", "0.25,-0.5");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("non-negative"), "{err:#}");
     }
 
     #[test]

@@ -375,6 +375,14 @@ impl Backend for FaultBackend {
     fn transfer_window(&self, family: &str) -> Duration {
         self.inner.transfer_window(family)
     }
+
+    fn transfer_window_bytes(&self, family: &str, bytes: usize) -> Duration {
+        self.inner.transfer_window_bytes(family, bytes)
+    }
+
+    fn weight_bytes(&self, family: &str) -> u64 {
+        self.inner.weight_bytes(family)
+    }
 }
 
 #[cfg(test)]

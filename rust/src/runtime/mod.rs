@@ -190,6 +190,27 @@ pub trait Backend: Send + Sync {
     /// jobs of `family` cross device classes. Zero for the bare CPU
     /// runtime (a single class never crosses).
     fn transfer_window(&self, family: &str) -> std::time::Duration;
+
+    /// Byte-accurate variant of [`Backend::transfer_window`]: the cost
+    /// of moving `bytes` of intermediate state (a segment's carried
+    /// `[h;c]` / partial-accumulator vector) across a class boundary.
+    /// The default falls back to the flat per-family window, so
+    /// backends that model only a flat `transfer_us` keep working; the
+    /// device roster overrides it with a per-byte rate calibrated
+    /// against that same knob.
+    fn transfer_window_bytes(&self, family: &str, _bytes: usize) -> std::time::Duration {
+        self.transfer_window(family)
+    }
+
+    /// Resident compute-layout weight bytes streamed by one full pass
+    /// over `family`'s weights (f32 panels = 4 bytes/element, i8
+    /// panels = 1 byte/element + 4 bytes per output row of dequant
+    /// scale). Zero when unknown (e.g. a native backend that does not
+    /// expose its parameter layout). Feeds the per-family
+    /// `weight_bytes_streamed` metrics counter.
+    fn weight_bytes(&self, _family: &str) -> u64 {
+        0
+    }
 }
 
 impl Backend for Runtime {
@@ -246,6 +267,47 @@ impl Backend for Runtime {
 
     fn transfer_window(&self, _family: &str) -> std::time::Duration {
         std::time::Duration::ZERO
+    }
+
+    fn weight_bytes(&self, family: &str) -> u64 {
+        Runtime::weight_bytes(self, family)
+    }
+}
+
+/// Numeric storage precision for a family's weights (the `[[family]]
+/// precision` knob). Orthogonal to [`KernelKind`]: each precision has
+/// a scalar and a SIMD kernel under the same dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-precision `f32` weights (the default) — the bit-exactness
+    /// reference every other precision is bounded against.
+    #[default]
+    F32,
+    /// Symmetric per-output-row int8 quantized weights (scale =
+    /// max-abs/127, folded into the panel prepack). Activations stay
+    /// `f32` end to end: they are quantized per call at the kernel
+    /// boundary and the i8×i8→i32 accumulator dequantizes once per
+    /// output row at writeback. Requires the panel layout
+    /// (`packed_weights = true`, `naive_kernels = false`).
+    I8,
+}
+
+impl Precision {
+    /// Parse a config value (`f32` | `i8`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Self::F32,
+            "i8" => Self::I8,
+            other => bail!("unknown precision `{other}` (expected f32|i8)"),
+        })
+    }
+
+    /// The config-file spelling (diagnostics and error text).
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::I8 => "i8",
+        }
     }
 }
 
@@ -366,6 +428,11 @@ pub struct RuntimeOptions {
     /// chunk) through the public API with a real, deterministic
     /// mid-job kernel panic. Never enabled in production loads.
     pub panic_on_poison: bool,
+    /// Default weight storage precision for every loaded family.
+    /// Per-family `[[family]] precision` entries override it via
+    /// [`Runtime::load_with_precisions`]; [`Precision::I8`] requires
+    /// the panel layout (`packed_weights` on, `naive_kernels` off).
+    pub precision: Precision,
 }
 
 impl Default for RuntimeOptions {
@@ -376,6 +443,7 @@ impl Default for RuntimeOptions {
             kernel: KernelKind::Auto,
             packed_weights: true,
             panic_on_poison: false,
+            precision: Precision::F32,
         }
     }
 }
@@ -523,6 +591,10 @@ pub struct Runtime {
     /// reference backend, `native` for PJRT) — diagnostics and the
     /// dispatch tests' observability.
     kernel: &'static str,
+    /// Per-family compute-layout weight bytes (one full streaming
+    /// pass; see [`Runtime::weight_bytes`]). Empty for backends that
+    /// do not expose their parameter layout (PJRT).
+    weight_bytes: HashMap<String, u64>,
 }
 
 // The reference backend is plain owned data (weights behind `Arc`s),
@@ -547,16 +619,29 @@ impl Runtime {
 
     /// Create a runtime with explicit [`RuntimeOptions`].
     pub fn load_with(artifacts_dir: impl AsRef<Path>, opts: RuntimeOptions) -> Result<Self> {
+        Self::load_with_precisions(artifacts_dir, opts, &HashMap::new())
+    }
+
+    /// Create a runtime with explicit [`RuntimeOptions`] plus
+    /// per-family [`Precision`] overrides (the `[[family]] precision`
+    /// knob). Families absent from the map use `opts.precision`;
+    /// entries naming unknown families are ignored here (the server
+    /// validates `[[family]]` names against the loaded set).
+    pub fn load_with_precisions(
+        artifacts_dir: impl AsRef<Path>,
+        opts: RuntimeOptions,
+        precisions: &HashMap<String, Precision>,
+    ) -> Result<Self> {
         let dir = artifacts_dir.as_ref();
         let manifest = Manifest::load(dir.join("manifest.toml"))?;
         #[cfg(feature = "pjrt")]
         {
-            let _ = opts;
+            let _ = (opts, precisions);
             pjrt::load(dir, manifest)
         }
         #[cfg(not(feature = "pjrt"))]
         {
-            Self::load_reference(manifest, opts)
+            Self::load_reference(manifest, opts, precisions)
         }
     }
 
@@ -564,23 +649,41 @@ impl Runtime {
     /// kernel dispatch (`opts.kernel`, overridable via [`KERNEL_ENV`])
     /// resolves **once here** — every model of the load shares the
     /// decision, so batched and per-sample paths can never mix kernel
-    /// paths within one server.
+    /// paths within one server. Precision is resolved per family
+    /// (override map, else `opts.precision`) before each build, so all
+    /// batch variants of a family share one quantized (or f32) pack.
     #[cfg_attr(feature = "pjrt", allow(dead_code))]
-    fn load_reference(manifest: Manifest, opts: RuntimeOptions) -> Result<Self> {
+    fn load_reference(
+        manifest: Manifest,
+        opts: RuntimeOptions,
+        precisions: &HashMap<String, Precision>,
+    ) -> Result<Self> {
         let env_override = std::env::var(KERNEL_ENV).ok().filter(|s| !s.is_empty());
         let packed = opts.packed_weights && !opts.naive_kernels;
         let simd = resolve_kernel(opts.kernel, env_override.as_deref(), packed)?;
         let mut cache = reference::WeightCache::default();
         let mut models = HashMap::new();
         for spec in manifest.artifacts {
-            let model = reference::RefModel::build_with(&spec, opts, simd, &mut cache)
+            let mut fam_opts = opts;
+            fam_opts.precision =
+                precisions.get(spec.family()).copied().unwrap_or(opts.precision);
+            if fam_opts.precision == Precision::I8 && !packed {
+                bail!(
+                    "family `{}`: precision = \"i8\" requires the panel layout \
+                     (packed_weights = true and naive_kernels = false)",
+                    spec.family()
+                );
+            }
+            let model = reference::RefModel::build_with(&spec, fam_opts, simd, &mut cache)
                 .with_context(|| format!("building reference model `{}`", spec.name))?;
             models.insert(
                 spec.name.clone(),
                 LoadedModel { spec, backend: ModelBackend::Reference(model) },
             );
         }
-        Ok(Self::assemble(models, "cpu".into(), if simd { "simd" } else { "scalar" }))
+        let mut rt = Self::assemble(models, "cpu".into(), if simd { "simd" } else { "scalar" });
+        rt.weight_bytes = cache.family_bytes();
+        Ok(rt)
     }
 
     /// Finish construction: build the sorted per-family variant index
@@ -602,7 +705,7 @@ impl Runtime {
         for list in variants.values_mut() {
             list.sort_unstable();
         }
-        Self { models, variants, platform, kernel }
+        Self { models, variants, platform, kernel, weight_bytes: HashMap::new() }
     }
 
     /// Names of all loaded model variants.
@@ -716,6 +819,18 @@ impl Runtime {
     pub fn chunk_cap(&self, family: &str) -> usize {
         self.max_batch(family).unwrap_or(usize::MAX).max(1)
     }
+
+    /// Compute-layout weight bytes one full streaming pass over
+    /// `family`'s weights touches (all matrices, deduplicated across
+    /// batch variants): 4 bytes per element for f32 packs, 1 byte per
+    /// element plus 4 bytes per output row of dequant scale for i8
+    /// packs. Zero for unknown families and for backends that do not
+    /// expose their layout (PJRT). This is the per-chunk charge behind
+    /// the `weight_bytes_streamed` metrics counter — the paper's
+    /// parameter-byte bottleneck, made directly observable.
+    pub fn weight_bytes(&self, family: &str) -> u64 {
+        self.weight_bytes.get(family).copied().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -756,6 +871,17 @@ mod tests {
         assert!(!resolve_kernel(KernelKind::Auto, Some("scalar"), true).unwrap());
         assert!(!resolve_kernel(KernelKind::Simd, Some("scalar"), true).unwrap());
         assert!(resolve_kernel(KernelKind::Auto, Some("avx512"), true).is_err());
+    }
+
+    #[test]
+    fn precision_parses_and_rejects() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("i8").unwrap(), Precision::I8);
+        assert_eq!(Precision::F32.label(), "f32");
+        assert_eq!(Precision::I8.label(), "i8");
+        let err = Precision::parse("fp16").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown precision"), "{err:#}");
+        assert_eq!(Precision::default(), Precision::F32);
     }
 
     #[test]
@@ -805,7 +931,8 @@ sha256 = "0000000000000000"
 "#,
         )
         .unwrap();
-        let rt = Runtime::load_reference(manifest, RuntimeOptions::default()).unwrap();
+        let rt =
+            Runtime::load_reference(manifest, RuntimeOptions::default(), &HashMap::new()).unwrap();
         assert_eq!(rt.variant_for_batch("edge_cnn", 1), Some(("edge_cnn_b1", 1)));
         assert_eq!(rt.variant_for_batch("edge_cnn", 2), Some(("edge_cnn_b4", 4)));
         assert_eq!(rt.variant_for_batch("edge_cnn", 5), Some(("edge_cnn_b8", 8)));

@@ -67,6 +67,27 @@
 //!   across layouts and to the pre-panel kernels** — the measured
 //!   benchmark baseline.
 //!
+//! # Precision (§Perf)
+//!
+//! A per-family `precision = "f32" | "i8"` knob selects the storage
+//! and microkernel precision. Under `i8`, each weight matrix is
+//! quantized symmetrically per output row (`scale_r = max|w_r|/127`)
+//! *inside the panel prepack* — the panel layout is
+//! element-size-agnostic, so the i8 pack shares [`pack_panels`] with
+//! 1-byte storage plus a per-row f32 scale vector, owned by the cache
+//! and dedup'd across batch variants exactly like the f32 pack.
+//! Activations stay f32 end to end: each kernel call quantizes its
+//! activation block on the fly (thread-local scratch), accumulates
+//! i8×i8 products exactly in i32, and dequantizes once per output row
+//! at writeback (`acc · scale_r · scale_x`). Because integer
+//! accumulation has no rounding, **i8 scalar and i8 SIMD are
+//! bit-identical** (not merely ulp-close), and i8 vs the f32 reference
+//! is bounded by the analytic per-row error
+//! `0.5·sx·Σ|w| + 0.5·sw·Σ|x| + 0.25·n·sw·sx` — both property-tested.
+//! The payoff is the paper's bottleneck currency: 4x fewer weight
+//! bytes streamed per MAC (see `Weights::stream_bytes` and the
+//! `quantized_gemm` bench A/B).
+//!
 //! # Batched execution
 //!
 //! The default execution path is a **true batched GEMM**
@@ -102,10 +123,11 @@
 //! `pjrt` feature once the `xla` crate is vendored.
 
 use super::artifacts::ArtifactSpec;
-use super::RuntimeOptions;
+use super::{Precision, RuntimeOptions};
 use crate::util::rng::Rng;
 use crate::util::{fnv1a_64, tensor};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -165,6 +187,17 @@ pub struct SegmentState {
     partial: Vec<f32>,
 }
 
+impl SegmentState {
+    /// Bytes a cross-class handoff of this state actually moves: the
+    /// carried pre-activation / hidden vector plus any partially
+    /// filled output block, 4 bytes per f32 element. Drives the
+    /// byte-accurate segment transfer charge
+    /// (`Backend::transfer_window_bytes`).
+    pub fn transfer_bytes(&self) -> usize {
+        (self.carry.len() + self.partial.len()) * std::mem::size_of::<f32>()
+    }
+}
+
 /// Result of executing one stage range of a segmented model.
 #[derive(Debug)]
 pub enum StageOutcome {
@@ -188,6 +221,11 @@ struct WeightMode {
     /// recurrent scalar cell streams whole rows; dense nets drop it
     /// when packed).
     keep_rows: bool,
+    /// Symmetric per-output-row INT8 quantization folded into the
+    /// panel pack (`precision = "i8"`). Requires `packed`; the f32
+    /// copies are dropped entirely — `qpanels` + `scales` are the
+    /// compute layout.
+    quantized: bool,
 }
 
 /// One deterministic weight matrix in its compute layout(s). Owned by
@@ -203,8 +241,18 @@ pub(crate) struct Weights {
     /// Naive mode: the canonical `[n_in × n_out]` scan layout.
     rows: Vec<f32>,
     /// Panel-major pack of the transposed matrix (see [`pack_panels`];
-    /// empty when packing is disabled or in naive mode).
+    /// empty when packing is disabled, in naive mode, or when the
+    /// matrix is quantized).
     panels: Vec<f32>,
+    /// INT8 panel-major pack (`precision = "i8"` only): the same
+    /// panel/tail geometry as `panels` — [`pack_panels`] is
+    /// element-size-agnostic — holding the symmetric per-output-row
+    /// quantized values `q = round(w / scale)` clamped to ±127.
+    qpanels: Vec<i8>,
+    /// Per-output-row dequantization scales (`n_out` entries,
+    /// `scale_r = max|w_r| / 127`; `0.0` for an all-zero row). Owned
+    /// here so every batch variant shares one copy via the cache Arc.
+    scales: Vec<f32>,
 }
 
 impl Weights {
@@ -212,25 +260,56 @@ impl Weights {
     fn build(family: &str, index: u64, fan_in: usize, fan_out: usize, mode: WeightMode) -> Self {
         let canonical = gen_weights(family, index, fan_in, fan_out);
         if mode.naive {
-            return Self { n_in: fan_in, n_out: fan_out, rows: canonical, panels: Vec::new() };
+            return Self {
+                n_in: fan_in,
+                n_out: fan_out,
+                rows: canonical,
+                panels: Vec::new(),
+                qpanels: Vec::new(),
+                scales: Vec::new(),
+            };
         }
         let transposed = transpose(&canonical, fan_in, fan_out);
+        if mode.quantized {
+            debug_assert!(mode.packed, "i8 quantization requires the panel layout");
+            let mut scales = vec![0.0f32; fan_out];
+            let mut qt = vec![0i8; transposed.len()];
+            for (j, s) in scales.iter_mut().enumerate() {
+                let row = &transposed[j * fan_in..][..fan_in];
+                *s = quant_scale(row);
+                quantize_into(row, *s, &mut qt[j * fan_in..][..fan_in]);
+            }
+            let qpanels = pack_panels(&qt, fan_out, fan_in);
+            return Self {
+                n_in: fan_in,
+                n_out: fan_out,
+                rows: Vec::new(),
+                panels: Vec::new(),
+                qpanels,
+                scales,
+            };
+        }
         let panels = if mode.packed {
             pack_panels(&transposed, fan_out, fan_in)
         } else {
             Vec::new()
         };
         let rows = if mode.packed && !mode.keep_rows { Vec::new() } else { transposed };
-        Self { n_in: fan_in, n_out: fan_out, rows, panels }
+        Self { n_in: fan_in, n_out: fan_out, rows, panels, qpanels: Vec::new(), scales: Vec::new() }
     }
 
     /// Full [`PANEL_ROWS`]-row panels in the pack (0 when unpacked).
     fn full_panels(&self) -> usize {
-        if self.panels.is_empty() {
+        if self.panels.is_empty() && self.qpanels.is_empty() {
             0
         } else {
             self.n_out / PANEL_ROWS
         }
+    }
+
+    /// Whether this matrix carries the INT8 compute layout.
+    fn is_quantized(&self) -> bool {
+        !self.scales.is_empty()
     }
 
     /// First output row not covered by a full panel.
@@ -248,6 +327,30 @@ impl Weights {
         &self.panels[self.tail_start() * self.n_in..]
     }
 
+    /// One INT8 packed panel (`PANEL_ROWS × n_in` bytes, k-interleaved
+    /// exactly like [`Weights::panel`]).
+    fn qpanel(&self, p: usize) -> &[i8] {
+        &self.qpanels[p * PANEL_ROWS * self.n_in..][..PANEL_ROWS * self.n_in]
+    }
+
+    /// The row-major INT8 tail rows after the last full panel.
+    fn qtail(&self) -> &[i8] {
+        &self.qpanels[self.tail_start() * self.n_in..]
+    }
+
+    /// Bytes one full streaming pass over this matrix's compute layout
+    /// touches — the paper's bottleneck currency. i8: 1 byte/element
+    /// plus the per-row f32 scales; f32 layouts: 4 bytes/element.
+    fn stream_bytes(&self) -> u64 {
+        if self.is_quantized() {
+            (self.qpanels.len() + self.scales.len() * 4) as u64
+        } else if !self.panels.is_empty() {
+            (self.panels.len() * 4) as u64
+        } else {
+            (self.rows.len() * 4) as u64
+        }
+    }
+
     /// Transposed row `j` (`n_in` elements). Only valid in layouts
     /// that keep the row-major copy (unpacked, or recurrent packed).
     fn row(&self, j: usize) -> &[f32] {
@@ -262,8 +365,12 @@ impl Weights {
 
     /// `out += Wᵀ·x`, routed by layout and kernel path. Every scalar
     /// route is bit-identical (same per-element accumulation order);
-    /// the SIMD route is ulp-close.
+    /// the SIMD route is ulp-close. Quantized matrices route to the
+    /// i8 kernels (checked first: their f32 layouts are empty).
     fn matvec_acc(&self, x: &[f32], out: &mut [f32], simd: bool) {
+        if self.is_quantized() {
+            return self.qmatvec_acc(x, out, simd);
+        }
         if self.panels.is_empty() {
             return matvec_transposed_acc(&self.rows, x, out);
         }
@@ -282,6 +389,9 @@ impl Weights {
     /// Batched `out[c] += Wᵀ·x[c]` over `cols` packed samples, routed
     /// by layout and kernel path (see [`Weights::matvec_acc`]).
     fn gemm_acc(&self, xs: &[f32], cols: usize, out: &mut [f32], simd: bool) {
+        if self.is_quantized() {
+            return self.qgemm_acc(xs, cols, out, simd);
+        }
         if self.panels.is_empty() {
             return gemm_transposed_acc(&self.rows, xs, self.n_in, self.n_out, cols, out);
         }
@@ -294,6 +404,68 @@ impl Weights {
         let _ = simd;
         gemm_panels_acc(self, xs, cols, out);
     }
+
+    /// INT8 `out += dequant(Q·quant(x))`: the activation is quantized
+    /// symmetrically per call (thread-local scratch, steady-state zero
+    /// allocation), the i8×i8 products accumulate exactly in i32, and
+    /// each output row dequantizes once at writeback as
+    /// `acc · scale_r · scale_x` — identical expression order in both
+    /// kernel paths, so **i8 scalar and i8 SIMD agree bit for bit**
+    /// (integer accumulation has no rounding to reorder).
+    fn qmatvec_acc(&self, x: &[f32], out: &mut [f32], simd: bool) {
+        QUANT_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (qx, _) = &mut *scratch;
+            qx.resize(self.n_in, 0);
+            let sx = quant_scale(x);
+            quantize_into(x, sx, qx);
+            #[cfg(target_arch = "x86_64")]
+            if simd {
+                // SAFETY: as in `matvec_acc` — AVX2+FMA checked at
+                // load (`runtime::resolve_kernel`).
+                return unsafe { simd::qmatvec_panels(self, qx, sx, out) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            let _ = simd;
+            qmatvec_panels_acc(self, qx, sx, out);
+        });
+    }
+
+    /// Batched INT8 `out[c] += dequant(Q·quant(x[c]))`; see
+    /// [`Weights::qmatvec_acc`] for the numerics contract.
+    fn qgemm_acc(&self, xs: &[f32], cols: usize, out: &mut [f32], simd: bool) {
+        let n_in = self.n_in;
+        debug_assert_eq!(xs.len(), cols * n_in);
+        QUANT_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (qxs, sxs) = &mut *scratch;
+            qxs.resize(cols * n_in, 0);
+            sxs.resize(cols, 0.0);
+            for c in 0..cols {
+                let x = &xs[c * n_in..][..n_in];
+                sxs[c] = quant_scale(x);
+                quantize_into(x, sxs[c], &mut qxs[c * n_in..][..n_in]);
+            }
+            #[cfg(target_arch = "x86_64")]
+            if simd {
+                // SAFETY: as in `matvec_acc` — AVX2+FMA checked at
+                // load (`runtime::resolve_kernel`).
+                return unsafe { simd::qgemm_panels(self, qxs, sxs, cols, out) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            let _ = simd;
+            qgemm_panels_acc(self, qxs, sxs, cols, out);
+        });
+    }
+}
+
+thread_local! {
+    /// Per-thread activation-quantization scratch (quantized samples +
+    /// per-column scales): the i8 kernels quantize activations on the
+    /// fly without changing the `matvec_acc`/`gemm_acc` signatures,
+    /// and each executor-pool worker reuses its buffers across batches
+    /// — steady-state zero allocation, like `ExecScratch`.
+    static QUANT_SCRATCH: RefCell<(Vec<i8>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
 /// Family-keyed weight store: every batch variant of a family resolves
@@ -334,6 +506,20 @@ impl WeightCache {
         per_dim.insert(dims, Arc::clone(&w));
         self.families.insert(Arc::<str>::from(family), per_dim);
         w
+    }
+
+    /// Per-family compute-layout footprint: the bytes one full
+    /// streaming pass over all of a family's weight matrices touches
+    /// (i8 packs count 1 byte/element + scales, f32 packs 4). Snapshot
+    /// taken once at `Runtime::load` — the byte ledger behind the
+    /// `weight_bytes_streamed` metric.
+    pub(crate) fn family_bytes(&self) -> HashMap<String, u64> {
+        self.families
+            .iter()
+            .map(|(fam, per_dim)| {
+                (fam.to_string(), per_dim.values().map(|w| w.stream_bytes()).sum())
+            })
+            .collect()
     }
 
     /// Total cached matrices across all families (tests only).
@@ -413,10 +599,12 @@ fn transpose(v: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 /// `n_out % 8` tail rows row-major, byte-for-byte as in the source.
 /// One contiguous buffer of the same length, so the pack costs one
 /// pass and no extra resident memory beyond the (dropped or kept)
-/// row-major original.
-fn pack_panels(transposed: &[f32], n_out: usize, n_in: usize) -> Vec<f32> {
+/// row-major original. Generic over the element — the layout is
+/// element-size-agnostic, so the f32 and i8 packs share this one
+/// routine.
+fn pack_panels<T: Copy + Default>(transposed: &[T], n_out: usize, n_in: usize) -> Vec<T> {
     debug_assert_eq!(transposed.len(), n_out * n_in);
-    let mut out = vec![0.0f32; transposed.len()];
+    let mut out = vec![T::default(); transposed.len()];
     let nfull = n_out / PANEL_ROWS;
     for p in 0..nfull {
         let base = p * PANEL_ROWS * n_in;
@@ -672,6 +860,134 @@ fn gemm_panels_acc(w: &Weights, xs: &[f32], cols: usize, out: &mut [f32]) {
     }
 }
 
+/// Symmetric quantization scale for a slice: `max|v| / 127` (`0.0`
+/// for an all-zero slice, which quantizes to all zeros).
+fn quant_scale(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs())) / 127.0
+}
+
+/// Quantize `v` into `out` with the given symmetric scale:
+/// `q = round(v / scale)` clamped to ±127. Round-to-nearest keeps the
+/// per-element error within `scale / 2`, the term the
+/// `quantized_error_within_analytic_bound` property test is built
+/// from.
+fn quantize_into(v: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(v.len(), out.len());
+    if scale == 0.0 {
+        out.fill(0);
+        return;
+    }
+    let inv = 1.0 / scale;
+    for (q, &x) in out.iter_mut().zip(v) {
+        *q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Dequantizing writeback for the `n_out % 8` INT8 tail rows: one i32
+/// chain per row over the row-major tail, shared verbatim by the
+/// scalar and SIMD i8 kernels (so the tail cannot diverge between
+/// paths). `out` is the full per-sample output row (`n_out` elements).
+fn qtail_acc(w: &Weights, qx: &[i8], sx: f32, out: &mut [f32]) {
+    let (ts, n_in) = (w.tail_start(), w.n_in);
+    let tail = w.qtail();
+    for (j, dst) in out[ts..].iter_mut().enumerate() {
+        let row = &tail[j * n_in..][..n_in];
+        let mut acc = 0i32;
+        for (&wv, &xv) in row.iter().zip(qx) {
+            acc += wv as i32 * xv as i32;
+        }
+        *dst += acc as f32 * w.scales[ts + j] * sx;
+    }
+}
+
+/// Scalar INT8 `out += dequant(Q·qx)` over the panel layout: per full
+/// panel, 8 independent **i32** accumulator chains walk one sequential
+/// 1-byte weight stream; each output row dequantizes once at writeback
+/// (`acc · scale_r · sx`). i32 accumulation is exact — `127·127·n_in`
+/// stays far below `i32::MAX` for every supported width — so this is
+/// the bit-reference the SIMD i8 kernel must match exactly.
+fn qmatvec_panels_acc(w: &Weights, qx: &[i8], sx: f32, out: &mut [f32]) {
+    debug_assert_eq!(qx.len(), w.n_in);
+    debug_assert_eq!(out.len(), w.n_out);
+    for p in 0..w.full_panels() {
+        let panel = w.qpanel(p);
+        let mut acc = [0i32; PANEL_ROWS];
+        for (k, &xv) in qx.iter().enumerate() {
+            let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+            let xv = xv as i32;
+            for (a, &wv) in acc.iter_mut().zip(wk) {
+                *a += wv as i32 * xv;
+            }
+        }
+        let o = p * PANEL_ROWS;
+        for (r, &a) in acc.iter().enumerate() {
+            out[o + r] += a as f32 * w.scales[o + r] * sx;
+        }
+    }
+    qtail_acc(w, qx, sx, out);
+}
+
+/// Scalar batched INT8 `out[c] += dequant(Q·qxs[c])`: 8 output rows ×
+/// 4 batch columns per register tile — the same weight-stream
+/// amortization as [`gemm_panels_acc`], on a 1-byte stream. Per-cell
+/// i32 accumulation is exact, so column blocking cannot change the
+/// result: batched i8 == per-sample i8 bitwise by construction.
+fn qgemm_panels_acc(w: &Weights, qxs: &[i8], sxs: &[f32], cols: usize, out: &mut [f32]) {
+    let (n_in, n_out) = (w.n_in, w.n_out);
+    debug_assert_eq!(qxs.len(), cols * n_in);
+    debug_assert_eq!(out.len(), cols * n_out);
+    for p in 0..w.full_panels() {
+        let panel = w.qpanel(p);
+        let o = p * PANEL_ROWS;
+        let mut c = 0;
+        while c + 4 <= cols {
+            let x0 = &qxs[c * n_in..][..n_in];
+            let x1 = &qxs[(c + 1) * n_in..][..n_in];
+            let x2 = &qxs[(c + 2) * n_in..][..n_in];
+            let x3 = &qxs[(c + 3) * n_in..][..n_in];
+            let mut acc = [[0i32; PANEL_ROWS]; 4];
+            for k in 0..n_in {
+                let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+                let xk = [x0[k] as i32, x1[k] as i32, x2[k] as i32, x3[k] as i32];
+                for (aj, &xv) in acc.iter_mut().zip(&xk) {
+                    for (a, &wv) in aj.iter_mut().zip(wk) {
+                        *a += wv as i32 * xv;
+                    }
+                }
+            }
+            for (j, aj) in acc.iter().enumerate() {
+                let base = (c + j) * n_out + o;
+                for (r, &a) in aj.iter().enumerate() {
+                    out[base + r] += a as f32 * w.scales[o + r] * sxs[c + j];
+                }
+            }
+            c += 4;
+        }
+        // Column remainder: the single-sample panel block.
+        while c < cols {
+            let x = &qxs[c * n_in..][..n_in];
+            let mut acc = [0i32; PANEL_ROWS];
+            for (k, &xv) in x.iter().enumerate() {
+                let wk = &panel[k * PANEL_ROWS..][..PANEL_ROWS];
+                let xv = xv as i32;
+                for (a, &wv) in acc.iter_mut().zip(wk) {
+                    *a += wv as i32 * xv;
+                }
+            }
+            let base = c * n_out + o;
+            for (r, &a) in acc.iter().enumerate() {
+                out[base + r] += a as f32 * w.scales[o + r] * sxs[c];
+            }
+            c += 1;
+        }
+    }
+    if w.tail_start() < n_out {
+        for c in 0..cols {
+            qtail_acc(w, &qxs[c * n_in..][..n_in], sxs[c], &mut out[c * n_out..][..n_out]);
+        }
+    }
+}
+
 /// Recurrent pre-activation `pre = Wx·xₜ + Wh·hₜ₋₁` for one sample,
 /// routed by kernel path. The scalar route is the historical cell
 /// ([`dot`] + [`dot`] per output row, reading the row-major copy);
@@ -688,6 +1004,18 @@ fn recurrent_step_into(
     pre: &mut [f32],
     simd: bool,
 ) {
+    if wx.is_quantized() {
+        // INT8 cell: zero the accumulator, then two dequantizing
+        // accumulate passes (Wx over the step input, Wh over the
+        // hidden state), each quantizing its activation per call —
+        // the hidden state changes every step, so there is nothing
+        // to pre-quantize. Both kernel paths route through
+        // `qmatvec_acc`, whose scalar/SIMD bit-identity carries over.
+        pre.fill(0.0);
+        wx.qmatvec_acc(xt, pre, simd);
+        wh.qmatvec_acc(hidden, pre, simd);
+        return;
+    }
     #[cfg(target_arch = "x86_64")]
     if simd {
         // SAFETY: `simd` is only ever true after the load-time
@@ -720,7 +1048,7 @@ fn recurrent_step_into(
 /// precondition.
 #[cfg(target_arch = "x86_64")]
 mod simd {
-    use super::{dot, matvec_transposed_acc, Weights, PANEL_ROWS};
+    use super::{dot, matvec_transposed_acc, qtail_acc, Weights, PANEL_ROWS};
     use core::arch::x86_64::*;
 
     /// `out += Wᵀ·x` (panel layout): one 8-lane FMA chain per panel
@@ -854,6 +1182,133 @@ mod simd {
             *dst = dot(&wx.tail()[t * d..][..d], xt) + dot(&wh.tail()[t * h..][..h], hidden);
         }
     }
+
+    /// One INT8 panel k-group (8 consecutive i8, a single 8-byte load)
+    /// sign-extended to 8 i32 lanes, multiplied by the broadcast
+    /// quantized activation and accumulated with `_mm256_add_epi32`.
+    /// Integer adds are exact and order-insensitive, so the vector
+    /// accumulators hold **bit-for-bit** the scalar kernel's i32
+    /// values, and the dequantizing writeback is the shared scalar
+    /// expression — i8 SIMD == i8 scalar exactly, not just ulp-close.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (runtime-checked at dispatch). The 8-byte
+    /// `_mm_loadl_epi64` at k-group `k` reads `qpanel` bytes
+    /// `k·8 .. k·8+8`, within the checked panel slice.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn qmatvec_panels(w: &Weights, qx: &[i8], sx: f32, out: &mut [f32]) {
+        debug_assert_eq!(qx.len(), w.n_in);
+        debug_assert_eq!(out.len(), w.n_out);
+        for p in 0..w.full_panels() {
+            let panel = w.qpanel(p);
+            let mut acc = _mm256_setzero_si256();
+            for (k, &xv) in qx.iter().enumerate() {
+                let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                    panel.as_ptr().add(k * PANEL_ROWS) as *const __m128i
+                ));
+                acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(wv, _mm256_set1_epi32(xv as i32)));
+            }
+            let mut lanes = [0i32; PANEL_ROWS];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let o = p * PANEL_ROWS;
+            for (r, &a) in lanes.iter().enumerate() {
+                out[o + r] += a as f32 * w.scales[o + r] * sx;
+            }
+        }
+        qtail_acc(w, qx, sx, out);
+    }
+
+    /// Batched INT8 `out[c] += dequant(Q·qxs[c])`: 8 output rows × 4
+    /// batch columns per register tile — each 8-byte weight load feeds
+    /// four samples' integer MACs. Exactness as in [`qmatvec_panels`]:
+    /// the i32 accumulators equal the scalar kernel's bit for bit.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (runtime-checked at dispatch); memory
+    /// access as in [`qmatvec_panels`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn qgemm_panels(
+        w: &Weights,
+        qxs: &[i8],
+        sxs: &[f32],
+        cols: usize,
+        out: &mut [f32],
+    ) {
+        let (n_in, n_out) = (w.n_in, w.n_out);
+        debug_assert_eq!(qxs.len(), cols * n_in);
+        debug_assert_eq!(out.len(), cols * n_out);
+        for p in 0..w.full_panels() {
+            let panel = w.qpanel(p);
+            let o = p * PANEL_ROWS;
+            let mut c = 0;
+            while c + 4 <= cols {
+                let x0 = qxs.as_ptr().add(c * n_in);
+                let x1 = qxs.as_ptr().add((c + 1) * n_in);
+                let x2 = qxs.as_ptr().add((c + 2) * n_in);
+                let x3 = qxs.as_ptr().add((c + 3) * n_in);
+                let mut a0 = _mm256_setzero_si256();
+                let mut a1 = _mm256_setzero_si256();
+                let mut a2 = _mm256_setzero_si256();
+                let mut a3 = _mm256_setzero_si256();
+                for k in 0..n_in {
+                    let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                        panel.as_ptr().add(k * PANEL_ROWS) as *const __m128i
+                    ));
+                    a0 = _mm256_add_epi32(
+                        a0,
+                        _mm256_mullo_epi32(wv, _mm256_set1_epi32(*x0.add(k) as i32)),
+                    );
+                    a1 = _mm256_add_epi32(
+                        a1,
+                        _mm256_mullo_epi32(wv, _mm256_set1_epi32(*x1.add(k) as i32)),
+                    );
+                    a2 = _mm256_add_epi32(
+                        a2,
+                        _mm256_mullo_epi32(wv, _mm256_set1_epi32(*x2.add(k) as i32)),
+                    );
+                    a3 = _mm256_add_epi32(
+                        a3,
+                        _mm256_mullo_epi32(wv, _mm256_set1_epi32(*x3.add(k) as i32)),
+                    );
+                }
+                for (j, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+                    let mut lanes = [0i32; PANEL_ROWS];
+                    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, a);
+                    let base = (c + j) * n_out + o;
+                    for (r, &v) in lanes.iter().enumerate() {
+                        out[base + r] += v as f32 * w.scales[o + r] * sxs[c + j];
+                    }
+                }
+                c += 4;
+            }
+            // Column remainder: the single-sample chain.
+            while c < cols {
+                let x = qxs.as_ptr().add(c * n_in);
+                let mut acc = _mm256_setzero_si256();
+                for k in 0..n_in {
+                    let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                        panel.as_ptr().add(k * PANEL_ROWS) as *const __m128i
+                    ));
+                    acc = _mm256_add_epi32(
+                        acc,
+                        _mm256_mullo_epi32(wv, _mm256_set1_epi32(*x.add(k) as i32)),
+                    );
+                }
+                let mut lanes = [0i32; PANEL_ROWS];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+                let base = c * n_out + o;
+                for (r, &v) in lanes.iter().enumerate() {
+                    out[base + r] += v as f32 * w.scales[o + r] * sxs[c];
+                }
+                c += 1;
+            }
+        }
+        if w.tail_start() < n_out {
+            for c in 0..cols {
+                qtail_acc(w, &qxs[c * n_in..][..n_in], sxs[c], &mut out[c * n_out..][..n_out]);
+            }
+        }
+    }
 }
 
 impl RefModel {
@@ -907,10 +1362,18 @@ impl RefModel {
         // Weight matrices are cached per (family, index, dims): batch
         // variants have identical per-sample geometry, so b1/b4/b8 all
         // receive the same Arc. Layouts never mix within one cache
-        // (one Runtime load = one mode). Recurrent nets keep the
-        // row-major copy next to the panels (the scalar cell streams
-        // whole rows); packed dense nets need only the panels.
-        let mode = |keep_rows: bool| WeightMode { naive, packed, keep_rows };
+        // (one Runtime load = one mode; precision is per-family, and
+        // the cache keys by family). Recurrent nets keep the row-major
+        // copy next to the panels (the scalar cell streams whole
+        // rows); packed dense nets need only the panels; i8 matrices
+        // keep only the quantized pack + scales.
+        let quantized = packed && opts.precision == Precision::I8;
+        let mode = |keep_rows: bool| WeightMode {
+            naive,
+            packed,
+            keep_rows: keep_rows && !quantized,
+            quantized,
+        };
         let net = if family == "edge_lstm" {
             let shape = &spec.input_shapes[0];
             if shape.len() != 3 || spec.input_batch_axes[0] != 1 {
@@ -1061,11 +1524,13 @@ impl RefModel {
                 hidden.fill(0.0);
                 pre.resize(active * h, 0.0);
                 for step in 0..t {
-                    if self.simd {
-                        // SIMD: per sample, one panel pass over both
-                        // weight streams (panels are L1-resident
+                    if self.simd || wx.is_quantized() {
+                        // SIMD and i8: per sample, one panel pass over
+                        // both weight streams (panels are L1-resident
                         // across samples, so weights still stream once
-                        // per batch).
+                        // per batch). The i8 cell has no row-major
+                        // copy to stream row-outer, and the per-sample
+                        // route keeps batched == per-sample bitwise.
                         for c in 0..active {
                             let xt = &xs[c * (t * d) + step * d..][..d];
                             recurrent_step_into(
@@ -1074,7 +1539,7 @@ impl RefModel {
                                 xt,
                                 &hidden[c * h..(c + 1) * h],
                                 &mut pre[c * h..(c + 1) * h],
-                                true,
+                                self.simd,
                             );
                         }
                     } else {
@@ -1206,7 +1671,7 @@ impl RefModel {
                 block.resize(active * t * h, 0.0);
                 pre.resize(active * h, 0.0);
                 for step in lo..hi {
-                    if self.simd {
+                    if self.simd || wx.is_quantized() {
                         for c in 0..active {
                             let xt = &xs[c * (t * d) + step * d..][..d];
                             recurrent_step_into(
@@ -1215,7 +1680,7 @@ impl RefModel {
                                 xt,
                                 &hidden[c * h..(c + 1) * h],
                                 &mut pre[c * h..(c + 1) * h],
-                                true,
+                                self.simd,
                             );
                         }
                     } else {
@@ -1377,6 +1842,7 @@ mod tests {
             output_shape: output.0,
             output_batch_axis: output.1,
             sha256: "0".repeat(16),
+            weight_row_scales: Vec::new(),
         }
     }
 
@@ -1450,14 +1916,14 @@ mod tests {
             0,
             n_in,
             n_out,
-            WeightMode { naive: false, packed: true, keep_rows: false },
+            WeightMode { naive: false, packed: true, keep_rows: false, quantized: false },
         );
         let w_rows = Weights::build(
             "bitfam",
             0,
             n_in,
             n_out,
-            WeightMode { naive: false, packed: false, keep_rows: true },
+            WeightMode { naive: false, packed: false, keep_rows: true, quantized: false },
         );
         for cols in [1usize, 3, 4, 7] {
             let xs: Vec<f32> =
@@ -1487,7 +1953,7 @@ mod tests {
             0,
             n_in,
             n_out,
-            WeightMode { naive: false, packed: true, keep_rows: false },
+            WeightMode { naive: false, packed: true, keep_rows: false, quantized: false },
         );
         for cols in [1usize, 4, 6] {
             let xs: Vec<f32> =
@@ -1548,7 +2014,7 @@ mod tests {
     #[test]
     fn cache_hits_do_not_grow_the_family_map() {
         let mut cache = WeightCache::default();
-        let mode = WeightMode { naive: false, packed: true, keep_rows: false };
+        let mode = WeightMode { naive: false, packed: true, keep_rows: false, quantized: false };
         let a = cache.get_or_build("fam", 0, 4, 6, mode);
         let b = cache.get_or_build("fam", 0, 4, 6, mode);
         assert!(Arc::ptr_eq(&a, &b), "hit returns the same Arc");
@@ -1824,6 +2290,155 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
         let mono = per_sample.execute(&s, &[x.clone()], 2, &mut ExecScratch::default());
         let staged = run_staged(&per_sample, &s, &[x], 2, &[0, 1]);
+        assert_eq!(mono, staged);
+    }
+
+    /// The i8 options every quantized-path test builds from.
+    fn i8_opts() -> RuntimeOptions {
+        RuntimeOptions { precision: Precision::I8, ..Default::default() }
+    }
+
+    #[test]
+    fn quantized_pack_keeps_panel_layout_and_per_row_scales() {
+        // 13 rows × 11 inputs: one full panel + 5 tail rows.
+        let (n_in, n_out) = (11usize, 13usize);
+        let w = Weights::build(
+            "qfam",
+            0,
+            n_in,
+            n_out,
+            WeightMode { naive: false, packed: true, keep_rows: false, quantized: true },
+        );
+        assert!(w.is_quantized());
+        assert!(w.panels.is_empty() && w.rows.is_empty(), "f32 copies dropped");
+        assert_eq!(w.scales.len(), n_out);
+        assert_eq!(w.qpanels.len(), n_out * n_in);
+        let transposed = transpose(&gen_weights("qfam", 0, n_in, n_out), n_in, n_out);
+        for j in 0..n_out {
+            let row = &transposed[j * n_in..][..n_in];
+            let max = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert_eq!(w.scales[j], max / 127.0, "row {j} scale");
+        }
+        // Panel interleave and row-major tail mirror the f32 pack, and
+        // every element round-trips: q = round(w · (1/scale)), the
+        // exact expression `quantize_into` evaluates.
+        for j in 0..n_out {
+            let inv = 1.0 / w.scales[j];
+            for k in 0..n_in {
+                let q = if j < PANEL_ROWS {
+                    w.qpanel(0)[k * PANEL_ROWS + j]
+                } else {
+                    w.qtail()[(j - PANEL_ROWS) * n_in + k]
+                };
+                let expect = (transposed[j * n_in + k] * inv).round().clamp(-127.0, 127.0) as i32;
+                assert_eq!(q as i32, expect, "element ({j},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_scalar_and_simd_agree_bitwise() {
+        if !simd_kernel_available() {
+            eprintln!("SKIP: no AVX2+FMA on this host");
+            return;
+        }
+        let forced = crate::runtime::KernelKind::Simd;
+        // Dense: one full panel + tail rows; batches cover full and
+        // remainder column blocks of the 8x4 tile.
+        for batch in [1i64, 3, 4, 7] {
+            let s = spec(
+                &format!("qbit_b{batch}"),
+                vec![(vec![batch, 11], 0)],
+                (vec![batch, 13], 0),
+            );
+            let scalar = build_scalar(&s, i8_opts());
+            let simd = build_opts(&s, RuntimeOptions { kernel: forced, ..i8_opts() });
+            let x: Vec<f32> =
+                (0..batch as usize * 11).map(|i| ((i * 13 + 5) % 31) as f32 / 31.0 - 0.4).collect();
+            assert_eq!(run(&scalar, &s, &[x.clone()]), run(&simd, &s, &[x]), "batch {batch}");
+        }
+        // Recurrent: h=9 gives a full panel + 1 tail row per step.
+        let s = spec("edge_lstm_b3", vec![(vec![4, 3, 5], 1)], (vec![4, 3, 9], 1));
+        let scalar = build_scalar(&s, i8_opts());
+        let simd = build_opts(&s, RuntimeOptions { kernel: forced, ..i8_opts() });
+        let x: Vec<f32> = (0..4 * 3 * 5).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
+        assert_eq!(run(&scalar, &s, &[x.clone()]), run(&simd, &s, &[x]), "recurrent");
+    }
+
+    #[test]
+    fn quantized_batched_matches_per_sample_bitwise() {
+        for batch in [1i64, 2, 4, 7] {
+            let s = spec(
+                &format!("qpath_b{batch}"),
+                vec![(vec![batch, 9], 0)],
+                (vec![batch, 13], 0),
+            );
+            let g = build_opts(&s, i8_opts());
+            let p = build_opts(&s, RuntimeOptions { batched_gemm: false, ..i8_opts() });
+            let x: Vec<f32> =
+                (0..batch as usize * 9).map(|i| ((i * 11 + 2) % 23) as f32 / 23.0 - 0.45).collect();
+            assert_eq!(run(&g, &s, &[x.clone()]), run(&p, &s, &[x]), "batch {batch}");
+        }
+    }
+
+    /// i8 vs f32 within the analytic per-row bound. With per-element
+    /// quantization error `|ε| <= scale/2` (round-to-nearest), the
+    /// pre-activation error for output row r is bounded by
+    /// `0.5·sx·Σ|w_rk| + 0.5·sw_r·Σ|x_k| + 0.25·n·sw_r·sx`, and tanh
+    /// is 1-Lipschitz so the bound carries through the activation. A
+    /// small relative slack absorbs the f32 dequant arithmetic.
+    #[test]
+    fn quantized_error_within_analytic_bound() {
+        let (n_in, n_out) = (11usize, 13usize);
+        let s = spec("qerr_b1", vec![(vec![1, n_in as i64], 0)], (vec![1, n_out as i64], 0));
+        let f32_model = build_opts(&s, RuntimeOptions::default());
+        let i8_model = build_opts(&s, i8_opts());
+        let x: Vec<f32> = (0..n_in).map(|i| ((i * 5 + 1) % 17) as f32 / 17.0 - 0.45).collect();
+        let exact = run(&f32_model, &s, &[x.clone()]);
+        let quant = run(&i8_model, &s, &[x.clone()]);
+        let transposed = transpose(&gen_weights("qerr", 0, n_in, n_out), n_in, n_out);
+        let sx = quant_scale(&x);
+        let sum_abs_x: f32 = x.iter().map(|v| v.abs()).sum();
+        for j in 0..n_out {
+            let row = &transposed[j * n_in..][..n_in];
+            let sw = quant_scale(row);
+            let sum_abs_w: f32 = row.iter().map(|v| v.abs()).sum();
+            let bound = 0.5 * sx * sum_abs_w
+                + 0.5 * sw * sum_abs_x
+                + 0.25 * n_in as f32 * sw * sx;
+            let err = (exact[j] - quant[j]).abs();
+            assert!(
+                err <= bound * 1.001 + 1e-6,
+                "row {j}: error {err} exceeds analytic bound {bound}"
+            );
+        }
+        // The bound is not vacuous: quantization really perturbs.
+        assert_ne!(exact, quant, "i8 must differ from f32 (else the A/B is fake)");
+    }
+
+    #[test]
+    fn quantized_cache_shrinks_streamed_bytes_4x() {
+        let mut f32_cache = WeightCache::default();
+        let mut i8_cache = WeightCache::default();
+        let s = spec("qbytes_b8", vec![(vec![8, 64], 0)], (vec![8, 32], 0));
+        RefModel::build_with(&s, RuntimeOptions::default(), false, &mut f32_cache).unwrap();
+        RefModel::build_with(&s, i8_opts(), false, &mut i8_cache).unwrap();
+        let f32_bytes = f32_cache.family_bytes()["qbytes"];
+        let i8_bytes = i8_cache.family_bytes()["qbytes"];
+        assert_eq!(f32_bytes, 64 * 32 * 4, "f32 pack: 4 bytes/element");
+        assert_eq!(i8_bytes, 64 * 32 + 32 * 4, "i8 pack: 1 byte/element + f32 scales");
+        assert!(i8_bytes * 3 < f32_bytes, "the 4x byte thesis");
+    }
+
+    #[test]
+    fn quantized_staged_is_bit_exact_vs_monolithic() {
+        // The segment seam must be precision-agnostic: staged i8 ==
+        // monolithic i8, dense and recurrent.
+        let s = spec("edge_lstm_b3", vec![(vec![4, 3, 5], 1)], (vec![4, 3, 9], 1));
+        let m = build_opts(&s, i8_opts());
+        let x: Vec<f32> = (0..4 * 3 * 5).map(|i| ((i * 7) % 19) as f32 / 19.0 - 0.5).collect();
+        let mono = m.execute(&s, &[x.clone()], 3, &mut ExecScratch::default());
+        let staged = run_staged(&m, &s, &[x], 3, &[0, 2, 4]);
         assert_eq!(mono, staged);
     }
 

@@ -33,7 +33,7 @@
 
 use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
 use mensa::coordinator::{device, DeviceProfile, Server};
-use mensa::runtime::FaultPlan;
+use mensa::runtime::{FaultPlan, Precision};
 use mensa::util::rng::Rng;
 use std::fmt::Write as _;
 use std::sync::{mpsc, OnceLock};
@@ -442,6 +442,7 @@ fn shutdown_during_drain_survives_deaths_and_escalation() {
             name: "tiny".into(),
             priority: 0,
             escalate_to: Some("big".into()),
+            precision: Precision::F32,
         }],
         escalation_threshold: 1.0,
         fault: Some(FaultPlan { seed: 0x5D0D, death_rate: 1.0, max_deaths: 2, ..FaultPlan::default() }),

@@ -26,6 +26,7 @@
 
 use mensa::config::{DeviceClass, DeviceClassSpec, FamilyPolicy, OverloadPolicy, ServerConfig};
 use mensa::coordinator::{device, Server};
+use mensa::runtime::Precision;
 use mensa::util::rng::Rng;
 use std::fmt::Write as _;
 use std::sync::OnceLock;
@@ -56,6 +57,7 @@ fn policy(name: &str, priority: u8, escalate_to: Option<&str>) -> FamilyPolicy {
         name: name.to_string(),
         priority,
         escalate_to: escalate_to.map(str::to_string),
+        precision: Precision::F32,
     }
 }
 
